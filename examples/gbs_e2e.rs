@@ -1,0 +1,130 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): the full three-layer stack on a
+//! real small workload.
+//!
+//! Pipeline proven here:
+//!   1. `make artifacts` lowered the Pallas/JAX per-site step to HLO text;
+//!   2. a Borealis-M288-analog GBS MPS (M=72, χ≤96, ASP 10.69) is generated
+//!      and stored in FP16;
+//!   3. the rust data-parallel coordinator samples 16k samples through the
+//!      PJRT CPU client executing those artifacts (python is NOT running);
+//!   4. results are validated against exact transfer-matrix marginals —
+//!      the paper's Fig. 9 correlation-slope test — and compared against
+//!      the native engine and the model-parallel baseline [19].
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example gbs_e2e
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use fastmps::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use fastmps::coordinator::{data_parallel, model_parallel};
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::metrics::keys;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    // Borealis-M288 analog, scaled to the CPU testbed (DESIGN.md
+    // §Substitutions): M 288→72, χ 10⁴→96, same ASP.
+    let mut spec = Preset::BorealisM288.scaled_spec(2025);
+    spec.displacement_sigma = 0.0; // validation needs the undisplaced state
+    let dir = std::env::temp_dir().join("fastmps-e2e");
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("generating {} (M={}, χcap={}, ASP={})...", spec.name, spec.m, spec.chi_cap, spec.asp);
+    let store = Arc::new(GammaStore::create(
+        &dir,
+        &spec,
+        StorePrecision::F16,
+        StoreCodec::Raw,
+    )?);
+    let plan = store.spec.chi_plan();
+    println!(
+        "  store {} | equi-χ {:.0} | comp ratio {:.1}%",
+        fastmps::util::human_bytes(store.total_bytes()),
+        plan.equivalent_chi(),
+        plan.comp_ratio() * 100.0
+    );
+
+    let mut cfg = RunConfig::new(store.spec.clone());
+    cfg.n_samples = 16_384;
+    cfg.n1_macro = 2048;
+    cfg.n2_micro = 256; // the artifact micro-batch bucket
+    cfg.p1 = 2;
+    cfg.engine = EngineKind::Xla;
+    cfg.artifacts_dir = artifacts.to_path_buf();
+    cfg.compute = ComputePrecision::F32;
+    cfg.scaling = ScalingMode::PerSample;
+    cfg.store_precision = StorePrecision::F16;
+
+    // --- The FastMPS hot path: XLA artifacts through PJRT. -------------
+    println!("\n[1/3] FastMPS data-parallel × XLA artifacts (the production path)");
+    let t0 = std::time::Instant::now();
+    let xla_report = data_parallel::run(&cfg, &store, &[])?;
+    let xla_wall = t0.elapsed().as_secs_f64();
+    println!("  {}", xla_report.metrics.summary());
+    println!(
+        "  wall {} | throughput {:.0} site-samples/s",
+        fastmps::util::human_secs(xla_wall),
+        (cfg.n_samples * spec.m as u64) as f64 / xla_wall
+    );
+
+    // --- Native engine on the same work (oracle + speed reference). ----
+    println!("\n[2/3] native engine (same seeds)");
+    let mut native_cfg = cfg.clone();
+    native_cfg.engine = EngineKind::Native;
+    let t1 = std::time::Instant::now();
+    let native_report = data_parallel::run(&native_cfg, &store, &[])?;
+    let native_wall = t1.elapsed().as_secs_f64();
+    println!(
+        "  wall {} | engines agree on ⟨n⟩: {:.4} vs {:.4}",
+        fastmps::util::human_secs(native_wall),
+        xla_report.sink.mean_photons().iter().sum::<f64>(),
+        native_report.sink.mean_photons().iter().sum::<f64>(),
+    );
+
+    // --- The model-parallel baseline [19] at reduced sample count. -----
+    println!("\n[3/3] model-parallel baseline [19] (FP64 + global autoscale)");
+    let mut mp_cfg = native_cfg.clone();
+    mp_cfg.n_samples = 2048;
+    mp_cfg.compute = ComputePrecision::F64;
+    mp_cfg.scaling = ScalingMode::Global;
+    let t2 = std::time::Instant::now();
+    let mp_report = model_parallel::run(&mp_cfg, &store)?;
+    let mp_wall = t2.elapsed().as_secs_f64();
+    let mp_rate = (mp_cfg.n_samples * spec.m as u64) as f64 / mp_wall;
+    let dp_rate = (cfg.n_samples * spec.m as u64) as f64 / native_wall;
+    println!(
+        "  wall {} for {} samples | FastMPS/native is {:.1}× the baseline's rate",
+        fastmps::util::human_secs(mp_wall),
+        mp_cfg.n_samples,
+        dp_rate / mp_rate
+    );
+    println!(
+        "  baseline comm: {} over {} collective/p2p ops",
+        fastmps::util::human_bytes(mp_report.metrics.get(keys::COMM_BYTES)),
+        spec.m
+    );
+
+    // --- Validation: Fig. 9 correlation slopes. ------------------------
+    println!("\nvalidation (Fig. 9): sampled vs exact transfer-matrix marginals");
+    let mps = store.load_all()?;
+    let v = fastmps::validate::validate(&mps, &xla_report.sink)?;
+    println!(
+        "  1st-order slope {:.4} (paper 0.97, ideal 1) | 2nd-order slope {:.4} (paper 0.96) | pairs {}",
+        v.first_order_slope, v.second_order_slope, v.pairs
+    );
+    let ok = (v.first_order_slope - 1.0).abs() < 0.08 && (v.second_order_slope - 1.0).abs() < 0.15;
+    println!("  verdict: {}", if ok { "PASS" } else { "FAIL" });
+
+    std::fs::remove_dir_all(&dir)?;
+    if !ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}

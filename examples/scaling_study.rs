@@ -1,0 +1,112 @@
+//! Scaling study (Figs. 12/13 shapes): data-parallel weak/strong scaling on
+//! the simulated fabric + measured threads, and the tensor-parallel
+//! single- vs double-site comparison on NVLink3/PCIe presets.
+//!
+//! ```bash
+//! cargo run --release --example scaling_study
+//! ```
+
+use std::sync::Arc;
+
+use fastmps::comm::NetPreset;
+use fastmps::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use fastmps::coordinator::{data_parallel, tensor_parallel};
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut spec = Preset::M8176.scaled_spec(31);
+    spec.m = 48;
+    spec.chi_cap = 48;
+    spec.displacement_sigma = 0.0;
+    spec.decay_k = 0.02;
+    let dir = std::env::temp_dir().join("fastmps-scaling");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(GammaStore::create(
+        &dir,
+        &spec,
+        StorePrecision::F16,
+        StoreCodec::Raw,
+    )?);
+
+    let base = |p1: usize, n: u64| {
+        let mut cfg = RunConfig::new(store.spec.clone());
+        cfg.n_samples = n;
+        cfg.n1_macro = 256;
+        cfg.n2_micro = 128;
+        cfg.p1 = p1;
+        cfg.engine = EngineKind::Native;
+        cfg.compute = ComputePrecision::F32;
+        cfg.scaling = ScalingMode::PerSample;
+        cfg.net = NetPreset::Tianhe3;
+        cfg.disk_bw = Some(5e9);
+        cfg.vdevice_flops = Some(50e9); // modelled device per rank
+        cfg
+    };
+
+    println!("== data-parallel strong scaling (fixed 8192 samples; Fig. 12b/d shape)");
+    let t1 = data_parallel::run(&base(1, 8192), &store, &[])?.wall;
+    for p in [1usize, 2, 4, 8] {
+        let rep = data_parallel::run(&base(p, 8192), &store, &[])?;
+        let eff = t1 / (rep.wall * p as f64) * 100.0;
+        println!(
+            "  p={p:<2} wall={:<10} vtime={:<10} efficiency={:.1}% (paper ≥95%)",
+            fastmps::util::human_secs(rep.wall),
+            fastmps::util::human_secs(rep.vtime),
+            eff
+        );
+    }
+
+    println!("\n== data-parallel weak scaling (2048 samples/worker; Fig. 12a/c shape)");
+    let tw1 = data_parallel::run(&base(1, 2048), &store, &[])?.wall;
+    for p in [1usize, 2, 4, 8] {
+        let rep = data_parallel::run(&base(p, 2048 * p as u64), &store, &[])?;
+        let eff = tw1 / rep.wall * 100.0;
+        println!(
+            "  p={p:<2} wall={:<10} efficiency={:.1}%",
+            fastmps::util::human_secs(rep.wall),
+            eff
+        );
+    }
+
+    println!("\n== tensor-parallel strong scaling (Fig. 13 shape, virtual network time)");
+    for net in [NetPreset::NvLink3, NetPreset::Pcie4] {
+        for double in [true, false] {
+            let mut t_base = 0.0;
+            for p2 in [1usize, 2, 4] {
+                let mut cfg = base(1, 1024);
+                cfg.p2 = p2;
+                cfg.compute = ComputePrecision::F64;
+                cfg.net = net;
+                cfg.double_site = double;
+                cfg.vdevice_flops = Some(1e12); // keeps the paper's comm/compute balance
+                let rep = tensor_parallel::run(&cfg, &store)?;
+                if p2 == 1 {
+                    t_base = rep.vtime;
+                }
+                let eff = t_base / (rep.vtime * p2 as f64) * 100.0;
+                println!(
+                    "  {}/{}-site p2={p2}: vtime={:<10} eff={:.1}%  (paper: 4-GPU decay 9.8% double / 39% single on NVLink3)",
+                    net.name(),
+                    if double { "double" } else { "single" },
+                    fastmps::util::human_secs(rep.vtime),
+                    eff
+                );
+            }
+        }
+    }
+
+    println!("\n== §4.3 decision probe");
+    for net in [NetPreset::NvLink3, NetPreset::Pcie4, NetPreset::InfinibandHdr] {
+        let (ar, rs, d) = tensor_parallel::comm_bench(net, 64 << 20, 4);
+        println!(
+            "  {}: AllReduce {:.2} ms vs ReduceScatter {:.2} ms → {}",
+            net.name(),
+            ar * 1e3,
+            rs * 1e3,
+            if d { "double-site" } else { "single-site" }
+        );
+    }
+
+    std::fs::remove_dir_all(&dir)?;
+    Ok(())
+}

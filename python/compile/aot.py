@@ -1,0 +1,171 @@
+"""AOT lowering: JAX step functions → HLO text artifacts for the rust
+runtime.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+A JSON manifest lists the shape variants to build. Output:
+
+  artifacts/<name>.hlo.txt    one per variant
+  artifacts/manifest.json     index the rust ArtifactRegistry loads
+
+Variant names encode the shape: step_n{N}_x{χl}_y{χr}_d{D}[_tf32][_disp],
+partial_n{N}_x{χl}_y{χr}_d{D}, finalize_n{N}_y{χr}_d{D}.
+
+Usage: python -m compile.aot --out ../artifacts [--manifest path.json]
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref as kref
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def default_manifest():
+    """The variant set the scaled experiments need: χ buckets × the default
+    micro batch, plain + displaced + tf32, and the TP kernels."""
+    buckets = [32, 64, 96]
+    n = 256
+    d = 3
+    variants = []
+    for x in buckets:
+        for y in buckets:
+            variants.append({"kind": "step", "n": n, "x": x, "y": y, "d": d})
+    variants += [
+        {"kind": "step", "n": n, "x": 96, "y": 96, "d": d, "tf32": True},
+        {"kind": "step", "n": n, "x": 96, "y": 96, "d": 4},
+        {"kind": "step_disp", "n": n, "x": 96, "y": 96, "d": d},
+        {"kind": "step_disp", "n": n, "x": 64, "y": 64, "d": d},
+        {"kind": "partial", "n": n, "x": 48, "y": 96, "d": d},
+        {"kind": "finalize", "n": n, "y": 96, "d": d},
+        # Boundary site: χ_l = 1.
+        {"kind": "step", "n": n, "x": 1, "y": 32, "d": d},
+        {"kind": "step_disp", "n": n, "x": 1, "y": 32, "d": d},
+    ]
+    return {"variants": variants}
+
+
+def variant_name(v):
+    kind = v["kind"]
+    n, d = v["n"], v["d"]
+    tf = "_tf32" if v.get("tf32") else ""
+    if kind == "step":
+        return f"step_n{n}_x{v['x']}_y{v['y']}_d{d}{tf}"
+    if kind == "step_disp":
+        return f"step_n{n}_x{v['x']}_y{v['y']}_d{d}{tf}_disp"
+    if kind == "partial":
+        return f"partial_n{n}_x{v['x']}_y{v['y']}_d{d}{tf}"
+    if kind == "finalize":
+        return f"finalize_n{n}_y{v['y']}_d{d}"
+    raise ValueError(f"unknown variant kind {kind!r}")
+
+
+def lower_variant(v):
+    """Returns (hlo_text, input_specs, output_specs)."""
+    kind = v["kind"]
+    n, d = v["n"], v["d"]
+    tf32 = bool(v.get("tf32"))
+
+    def spec(*shape):
+        return jax.ShapeDtypeStruct(shape, F32)
+
+    if kind == "step":
+        x, y = v["x"], v["y"]
+        fn = model.build_step(tf32=tf32)
+        args = [spec(n, x), spec(n, x), spec(x, y, d), spec(x, y, d), spec(y), spec(n)]
+    elif kind == "step_disp":
+        x, y = v["x"], v["y"]
+        raw = model.build_step_displaced(tf32=tf32)
+        # Bake the (d, d) coefficient table in as a constant: the rust side
+        # should not need to know the factorial table.
+        coef = kref.displace_coef(d)
+
+        def fn(env_re, env_im, g_re, g_im, lam, unif, mu_re, mu_im, _coef=coef):
+            return raw(env_re, env_im, g_re, g_im, lam, unif, mu_re, mu_im, _coef)
+
+        args = [
+            spec(n, x),
+            spec(n, x),
+            spec(x, y, d),
+            spec(x, y, d),
+            spec(y),
+            spec(n),
+            spec(n),
+            spec(n),
+        ]
+    elif kind == "partial":
+        x, y = v["x"], v["y"]
+        fn = model.build_contract_partial(tf32=tf32)
+        args = [spec(n, x), spec(n, x), spec(x, y, d), spec(x, y, d)]
+    elif kind == "finalize":
+        y = v["y"]
+        raw = model.build_measure_update()
+        fn = functools.partial(raw, d=d)
+        args = [spec(n, y * d), spec(n, y * d), spec(y), spec(n)]
+    else:
+        raise ValueError(f"unknown variant kind {kind!r}")
+
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    in_specs = [list(a.shape) for a in args]
+    out = jax.eval_shape(fn, *args)
+    out_specs = [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in out]
+    return text, in_specs, out_specs
+
+
+def build(manifest, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    index = []
+    for v in manifest["variants"]:
+        name = variant_name(v)
+        text, in_specs, out_specs = lower_variant(v)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(v)
+        entry["name"] = name
+        entry["file"] = f"{name}.hlo.txt"
+        entry["inputs"] = in_specs
+        entry["outputs"] = out_specs
+        index.append(entry)
+        print(f"  {name}: {len(text)} chars", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"format": "fastmps-artifacts-v1", "variants": index}, f, indent=2, sort_keys=True)
+    print(f"wrote {len(index)} artifacts to {out_dir}", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--manifest", default=None, help="variant manifest JSON")
+    args = ap.parse_args()
+    if args.manifest:
+        with open(args.manifest) as f:
+            manifest = json.load(f)
+    else:
+        manifest = default_manifest()
+    build(manifest, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: the bond contraction `left_env × Γ` — the paper's hot
+spot (complexity N·χ²·d per site).
+
+TPU-shaped design (DESIGN.md §Hardware-Adaptation): the complex contraction
+is decomposed into four real matmuls (what an MXU/tensor-core actually
+executes), the operands stream HBM→VMEM in (bn × bk) / (bk × bj) tiles
+declared by `BlockSpec`s, and a fori-style k-grid accumulates into the
+output block — the Pallas equivalent of the paper's macro/micro-batch GEMM
+tiling on A100s. Run with `interpret=True` everywhere on this CPU image
+(real TPU lowering emits Mosaic calls the CPU PJRT plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n, target):
+    """Largest divisor of n that is ≤ target (shapes are static)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _contract_kernel(er_ref, ei_ref, gr_ref, gi_ref, or_ref, oi_ref, *, nk):
+    """One (bn × bj) output tile; grid axis 2 walks the k (χ_l) dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        or_ref[...] = jnp.zeros_like(or_ref)
+        oi_ref[...] = jnp.zeros_like(oi_ref)
+
+    er = er_ref[...]
+    ei = ei_ref[...]
+    gr = gr_ref[...]
+    gi = gi_ref[...]
+    # Complex MAC via four real matmuls (MXU-friendly f32 dot).
+    or_ref[...] += jnp.dot(er, gr, preferred_element_type=jnp.float32) - jnp.dot(
+        ei, gi, preferred_element_type=jnp.float32
+    )
+    oi_ref[...] += jnp.dot(er, gi, preferred_element_type=jnp.float32) + jnp.dot(
+        ei, gr, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bj", "bk"))
+def contract(env_re, env_im, gmat_re, gmat_im, bn=128, bj=192, bk=128):
+    """(N, K) × (K, J) complex-as-planes matmul via Pallas.
+
+    `gmat_*` is Γ unfolded to (χ_l, χ_r·d); the caller reshapes the output
+    to (N, χ_r, d). Block sizes are clamped to divisors of the problem.
+    """
+    n, k = env_re.shape
+    k2, j = gmat_re.shape
+    assert k == k2, f"contract: K mismatch {k} vs {k2}"
+    bn = _pick_block(n, bn)
+    bj = _pick_block(j, bj)
+    bk = _pick_block(k, bk)
+    grid = (n // bn, j // bj, k // bk)
+
+    env_spec = pl.BlockSpec((bn, bk), lambda i, jj, kk: (i, kk))
+    g_spec = pl.BlockSpec((bk, bj), lambda i, jj, kk: (kk, jj))
+    out_spec = pl.BlockSpec((bn, bj), lambda i, jj, kk: (i, jj))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((n, j), jnp.float32),
+        jax.ShapeDtypeStruct((n, j), jnp.float32),
+    ]
+    kernel = functools.partial(_contract_kernel, nk=grid[2])
+    o_re, o_im = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[env_spec, env_spec, g_spec, g_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(env_re, env_im, gmat_re, gmat_im)
+    return o_re, o_im
+
+
+def contract_env(env_re, env_im, g_re, g_im):
+    """Convenience wrapper with the paper's tensor shapes:
+    (N, χ_l) × (χ_l, χ_r, d) → (N, χ_r, d) split planes."""
+    chi_l, chi_r, d = g_re.shape
+    gm_re = g_re.reshape(chi_l, chi_r * d)
+    gm_im = g_im.reshape(chi_l, chi_r * d)
+    o_re, o_im = contract(env_re, env_im, gm_re, gm_im)
+    n = env_re.shape[0]
+    return o_re.reshape(n, chi_r, d), o_im.reshape(n, chi_r, d)
+
+
+def vmem_bytes(bn, bj, bk):
+    """Estimated VMEM footprint of one grid step (f32 planes ×2 for re/im):
+    env tile + Γ tile + out tile. Used by the §Perf L1 analysis."""
+    return 4 * 2 * (bn * bk + bk * bj + bn * bj)

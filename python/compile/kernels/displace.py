@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: batched displacement operator (§3.4.1).
+
+Builds `D(mu_n) = e^{-|mu|^2/2}·e^{mu a†}·e^{-mu* a}` for every sample from
+the analytic triangular factors (no expm, no LU — the paper's >10×
+displacement speedup) and applies it to the unmeasured temp tensor in the
+same kernel. The batch axis is the leading block axis, so the per-(j,k)
+element loop runs contiguously over samples — the Pallas analog of the
+paper's bank-conflict-avoiding batch-last transpose on GPUs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _displace_kernel(t_re_ref, t_im_ref, mu_re_ref, mu_im_ref, coef_ref, or_ref, oi_ref):
+    t_re = t_re_ref[...]  # (bn, Y, d)
+    t_im = t_im_ref[...]
+    mu_re = mu_re_ref[...]  # (bn,)
+    mu_im = mu_im_ref[...]
+    coef = coef_ref[...]  # (d, d) lower-tri sqrt(j!/m!)/(j-m)!
+
+    d = t_re.shape[2]
+    # Powers of mu and (-mu*): p = 0..d-1, shapes (bn, d).
+    pr = [jnp.ones_like(mu_re)]
+    pi = [jnp.zeros_like(mu_im)]
+    nr = [jnp.ones_like(mu_re)]
+    ni = [jnp.zeros_like(mu_im)]
+    for _ in range(d - 1):
+        pr.append(pr[-1] * mu_re - pi[-1] * mu_im)
+        pi.append(pr[-2] * mu_im + pi[-1] * mu_re)
+        # (-mu*) = (-mu_re, mu_im)
+        nr.append(nr[-1] * (-mu_re) - ni[-1] * mu_im)
+        ni.append(nr[-2] * mu_im + ni[-1] * (-mu_re))
+    pows_re = jnp.stack(pr, axis=1)  # (bn, d)
+    pows_im = jnp.stack(pi, axis=1)
+    npows_re = jnp.stack(nr, axis=1)
+    npows_im = jnp.stack(ni, axis=1)
+
+    # L[n,j,m] = mu^{j-m}·coef[j,m];  U[n,m,k] = (-mu*)^{k-m}·coef[k,m].
+    jm = jnp.arange(d)[:, None] - jnp.arange(d)[None, :]
+    lvalid = (jm >= 0).astype(jnp.float32) * coef
+    idx = jnp.clip(jm, 0, d - 1)
+    L_re = pows_re[:, idx] * lvalid[None]
+    L_im = pows_im[:, idx] * lvalid[None]
+    km = jnp.arange(d)[None, :] - jnp.arange(d)[:, None]
+    uvalid = (km >= 0).astype(jnp.float32) * coef.T
+    idxu = jnp.clip(km, 0, d - 1)
+    U_re = npows_re[:, idxu] * uvalid[None]
+    U_im = npows_im[:, idxu] * uvalid[None]
+
+    # D = pref · L@U (complex, batched, d×d so this is tiny VPU work).
+    D_re = jnp.einsum("njm,nmk->njk", L_re, U_re) - jnp.einsum(
+        "njm,nmk->njk", L_im, U_im
+    )
+    D_im = jnp.einsum("njm,nmk->njk", L_re, U_im) + jnp.einsum(
+        "njm,nmk->njk", L_im, U_re
+    )
+    pref = jnp.exp(-0.5 * (mu_re * mu_re + mu_im * mu_im))[:, None, None]
+    D_re = D_re * pref
+    D_im = D_im * pref
+
+    # Apply: temp'[n,y,k] = Σ_j temp[n,y,j]·D[n,j,k].
+    or_ref[...] = jnp.einsum("nyj,njk->nyk", t_re, D_re) - jnp.einsum(
+        "nyj,njk->nyk", t_im, D_im
+    )
+    oi_ref[...] = jnp.einsum("nyj,njk->nyk", t_re, D_im) + jnp.einsum(
+        "nyj,njk->nyk", t_im, D_re
+    )
+
+
+def _pick_block(n, target):
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def displace_apply(t_re, t_im, mu_re, mu_im, coef, bn=256):
+    """Apply per-sample displacements to (N, Y, d) temp planes.
+
+    `coef` is the (d, d) lower-triangular factorial table
+    (`ref.displace_coef(d)`), passed as an input so the kernel stays
+    shape-generic.
+    """
+    n, y, d = t_re.shape
+    bn = _pick_block(n, bn)
+    grid = (n // bn,)
+
+    t_spec = pl.BlockSpec((bn, y, d), lambda i: (i, 0, 0))
+    mu_spec = pl.BlockSpec((bn,), lambda i: (i,))
+    coef_spec = pl.BlockSpec((d, d), lambda i: (0, 0))
+
+    o_re, o_im = pl.pallas_call(
+        _displace_kernel,
+        grid=grid,
+        in_specs=[t_spec, t_spec, mu_spec, mu_spec, coef_spec],
+        out_specs=[t_spec, t_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, y, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, y, d), jnp.float32),
+        ],
+        interpret=True,
+    )(t_re, t_im, mu_re, mu_im, coef)
+    return o_re, o_im

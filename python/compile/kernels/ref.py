@@ -1,0 +1,163 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Everything here is the *semantic contract*: the Pallas kernels
+(`contract.py`, `measure.py`, `displace.py`) and, transitively, the rust
+native engine must agree with these functions. Complex values travel as
+split (re, im) float32 planes — the representation used across the PJRT
+boundary (the `xla` crate has no complex Literal constructors).
+
+Shapes follow the paper (Fig. 1 / Alg. 1):
+  left_env   (N, chi_l)          per-sample left environment
+  gamma      (chi_l, chi_r, d)   MPS site tensor
+  temp       (N, chi_r, d)       unmeasured left environment
+  lam        (chi_r,)            coefficient vector Λ (all-ones for
+                                 right-canonical states)
+  unif       (N,)                measurement thresholds in [0, 1)
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def contract_ref(env_re, env_im, g_re, g_im):
+    """Bond contraction: (N,x) × (x,y,d) → (N,y,d), complex via 4 real GEMMs."""
+    tr = jnp.einsum("nx,xyd->nyd", env_re, g_re) - jnp.einsum(
+        "nx,xyd->nyd", env_im, g_im
+    )
+    ti = jnp.einsum("nx,xyd->nyd", env_re, g_im) + jnp.einsum(
+        "nx,xyd->nyd", env_im, g_re
+    )
+    return tr, ti
+
+
+def displace_coef(d):
+    """Coefficient table c[j, m] = sqrt(j!/m!)/(j-m)! for j >= m else 0."""
+    coef = [[0.0] * d for _ in range(d)]
+    for j in range(d):
+        for m in range(j + 1):
+            coef[j][m] = math.sqrt(
+                math.factorial(j) / math.factorial(m)
+            ) / math.factorial(j - m)
+    return jnp.asarray(coef, dtype=jnp.float32)
+
+
+def displace_matrices_ref(mu_re, mu_im, d):
+    """Batched fast displacement D(mu) (paper Eq. 6), (N, d, d) split planes.
+
+    D = e^{-|mu|^2/2} · L(mu) · U(-mu*), with analytic triangular factors
+      L[j,m] = mu^{j-m}   · sqrt(j!/m!)/(j-m)!      (j >= m)
+      U[m,k] = (-mu*)^{k-m} · sqrt(k!/m!)/(k-m)!    (k >= m)
+    """
+    mu = (mu_re + 1j * mu_im).astype(jnp.complex64)
+    coef = displace_coef(d)
+
+    # Powers mu^p and (-mu*)^p for p in 0..d-1: (N, d).
+    pows = jnp.stack([mu**p for p in range(d)], axis=1)
+    npows = jnp.stack([(-jnp.conj(mu)) ** p for p in range(d)], axis=1)
+
+    # L[n, j, m] = pows[n, j-m] * coef[j, m].
+    jm = jnp.arange(d)[:, None] - jnp.arange(d)[None, :]  # (d, d) j-m
+    valid = (jm >= 0).astype(jnp.float32)
+    idx = jnp.clip(jm, 0, d - 1)
+    L = pows[:, idx] * (coef * valid)[None, :, :]  # (N, d, d)
+    # U[n, m, k] = npows[n, k-m] * coef[k, m].
+    km = jnp.arange(d)[None, :] - jnp.arange(d)[:, None]  # at [m, k]: k-m
+    validu = (km >= 0).astype(jnp.float32)
+    idxu = jnp.clip(km, 0, d - 1)
+    U = npows[:, idxu] * (coef.T * validu)[None, :, :]  # (N, d, d), [m, k]
+
+    pref = jnp.exp(-0.5 * (mu_re**2 + mu_im**2)).astype(jnp.complex64)
+    D = pref[:, None, None] * jnp.einsum("njm,nmk->njk", L, U)
+    return jnp.real(D).astype(jnp.float32), jnp.imag(D).astype(jnp.float32)
+
+
+def apply_displacement_ref(t_re, t_im, d_re, d_im):
+    """temp'[n,y,k] = sum_j temp[n,y,j] · D[n,j,k] (complex)."""
+    tr = jnp.einsum("nyj,njk->nyk", t_re, d_re) - jnp.einsum(
+        "nyj,njk->nyk", t_im, d_im
+    )
+    ti = jnp.einsum("nyj,njk->nyk", t_re, d_im) + jnp.einsum(
+        "nyj,njk->nyk", t_im, d_re
+    )
+    return tr, ti
+
+
+def measure_ref(t_re, t_im, lam, unif):
+    """Alg. 1: measure the physical index and collapse the left environment.
+
+    Returns (env_re, env_im, samples_i32); the environment is NOT yet
+    rescaled (see `rescale_ref`).
+    """
+    w = t_re * t_re + t_im * t_im  # (N, y, d) Born weights
+    probs = jnp.einsum("nyd,y->nd", w, lam)  # (N, d)
+    tot = jnp.sum(probs, axis=1, keepdims=True)
+    # Degenerate rows (all-zero: underflow collapse) sample outcome 0.
+    safe = jnp.where(tot > 0, tot, 1.0)
+    cum = jnp.cumsum(probs / safe, axis=1)
+    samples = jnp.sum((unif[:, None] > cum).astype(jnp.int32), axis=1)
+    samples = jnp.clip(samples, 0, probs.shape[1] - 1)
+    onehot = (samples[:, None] == jnp.arange(probs.shape[1])[None, :]).astype(
+        jnp.float32
+    )
+    env_re = jnp.einsum("nyd,nd->ny", t_re, onehot)
+    env_im = jnp.einsum("nyd,nd->ny", t_im, onehot)
+    return env_re, env_im, samples
+
+
+def rescale_ref(env_re, env_im):
+    """Per-sample adaptive rescale (§3.3.1): divide each row by its max |z|.
+
+    Zero rows are left untouched (scale 1) — they stay diagnosable.
+    """
+    mag2 = env_re**2 + env_im**2
+    m = jnp.sqrt(jnp.max(mag2, axis=1, keepdims=True))
+    scale = jnp.where(m > 0, 1.0 / m, 1.0)
+    return env_re * scale, env_im * scale
+
+
+def global_rescale_ref(env_re, env_im):
+    """The baseline auto-scaling of [19]: one scale for the whole batch."""
+    mag2 = env_re**2 + env_im**2
+    m = jnp.sqrt(jnp.max(mag2))
+    scale = jnp.where(m > 0, 1.0 / m, 1.0)
+    return env_re * scale, env_im * scale
+
+
+def round_tf32(x):
+    """Emulate TF32 tensor-core input rounding: f32 with a 10-bit mantissa
+    (round-to-nearest-even)."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    rem = bits & jnp.uint32(0x1FFF)
+    out = bits >> jnp.uint32(13)
+    round_up = (rem > 0x1000) | ((rem == 0x1000) & ((out & 1) == 1))
+    out = out + round_up.astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(out << jnp.uint32(13), jnp.float32)
+
+
+def step_ref(env_re, env_im, g_re, g_im, lam, unif, tf32=False):
+    """One full per-site step: contract → measure → per-sample rescale."""
+    if tf32:
+        env_re, env_im = round_tf32(env_re), round_tf32(env_im)
+        g_re, g_im = round_tf32(g_re), round_tf32(g_im)
+    t_re, t_im = contract_ref(env_re, env_im, g_re, g_im)
+    e_re, e_im, samples = measure_ref(t_re, t_im, lam, unif)
+    e_re, e_im = rescale_ref(e_re, e_im)
+    return e_re, e_im, samples
+
+
+def step_displaced_ref(
+    env_re, env_im, g_re, g_im, lam, unif, mu_re, mu_im, tf32=False
+):
+    """Per-site step with the batched displacement applied before measurement."""
+    if tf32:
+        env_re, env_im = round_tf32(env_re), round_tf32(env_im)
+        g_re, g_im = round_tf32(g_re), round_tf32(g_im)
+    t_re, t_im = contract_ref(env_re, env_im, g_re, g_im)
+    d = t_re.shape[2]
+    d_re, d_im = displace_matrices_ref(mu_re, mu_im, d)
+    t_re, t_im = apply_displacement_ref(t_re, t_im, d_re, d_im)
+    e_re, e_im, samples = measure_ref(t_re, t_im, lam, unif)
+    e_re, e_im = rescale_ref(e_re, e_im)
+    return e_re, e_im, samples

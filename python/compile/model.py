@@ -1,0 +1,94 @@
+"""L2: the per-site sampling step, composing the L1 Pallas kernels.
+
+Each builder returns a plain jax function over split-plane f32 arrays (the
+PJRT boundary types) that `aot.py` lowers to one fused HLO module per shape
+variant. Python never runs at sampling time: the rust coordinator feeds Γ,
+Λ, thresholds and (optionally) displacement draws, and gets back the next
+left environment plus the collapsed outcomes.
+
+Variants
+  step               contract → measure → per-sample rescale
+  step_displaced     contract → displace → measure → rescale
+  contract_partial   tensor-parallel shard: (N, χ_l/p₂) × (χ_l/p₂, χ_r, d)
+                     partial split-K product (reduced by the L3 fabric)
+  measure_update     measurement-only finalize after the reduction
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import contract as kcontract
+from compile.kernels import displace as kdisplace
+from compile.kernels import measure as kmeasure
+from compile.kernels import ref as kref
+
+
+def _maybe_tf32(tf32, *arrays):
+    if not tf32:
+        return arrays
+    return tuple(kref.round_tf32(a) for a in arrays)
+
+
+def build_step(tf32=False, rescale=True):
+    """Plain per-site step.
+
+    Inputs : env_re/env_im (N, χ_l), g_re/g_im (χ_l, χ_r, d), lam (χ_r,),
+             unif (N,)
+    Outputs: (env_re', env_im' (N, χ_r), samples i32 (N,))
+    """
+
+    def step(env_re, env_im, g_re, g_im, lam, unif):
+        env_re, env_im, g_re, g_im = _maybe_tf32(tf32, env_re, env_im, g_re, g_im)
+        t_re, t_im = kcontract.contract_env(env_re, env_im, g_re, g_im)
+        return kmeasure.measure_rescale(t_re, t_im, lam, unif, rescale=rescale)
+
+    return step
+
+
+def build_step_displaced(tf32=False, rescale=True):
+    """Per-site step with per-sample displacement (GBS path).
+
+    Extra inputs: mu_re/mu_im (N,), coef (d, d) factorial table.
+    """
+
+    def step(env_re, env_im, g_re, g_im, lam, unif, mu_re, mu_im, coef):
+        env_re, env_im, g_re, g_im = _maybe_tf32(tf32, env_re, env_im, g_re, g_im)
+        t_re, t_im = kcontract.contract_env(env_re, env_im, g_re, g_im)
+        t_re, t_im = kdisplace.displace_apply(t_re, t_im, mu_re, mu_im, coef)
+        return kmeasure.measure_rescale(t_re, t_im, lam, unif, rescale=rescale)
+
+    return step
+
+
+def build_contract_partial(tf32=False):
+    """Tensor-parallel split-K shard: returns the *partial* temp planes
+    (N, χ_r·d) flattened for the fabric reduction."""
+
+    def partial(env_re, env_im, g_re, g_im):
+        env_re, env_im, g_re, g_im = _maybe_tf32(tf32, env_re, env_im, g_re, g_im)
+        t_re, t_im = kcontract.contract_env(env_re, env_im, g_re, g_im)
+        n = t_re.shape[0]
+        return t_re.reshape(n, -1), t_im.reshape(n, -1)
+
+    return partial
+
+
+def build_measure_update(rescale=True):
+    """Finalize after the reduction: (N, χ_r·d) planes → env + samples."""
+
+    def finalize(t_re_flat, t_im_flat, lam, unif, d):
+        n = t_re_flat.shape[0]
+        y = t_re_flat.shape[1] // d
+        t_re = t_re_flat.reshape(n, y, d)
+        t_im = t_im_flat.reshape(n, y, d)
+        return kmeasure.measure_rescale(t_re, t_im, lam, unif, rescale=rescale)
+
+    return finalize
+
+
+def reference_step(tf32=False):
+    """The pure-jnp oracle with the same signature as `build_step()`."""
+
+    def step(env_re, env_im, g_re, g_im, lam, unif):
+        return kref.step_ref(env_re, env_im, g_re, g_im, lam, unif, tf32=tf32)
+
+    return step

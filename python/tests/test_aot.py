@@ -1,0 +1,79 @@
+"""AOT path: manifest-driven lowering produces loadable HLO text."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = {
+        "variants": [
+            {"kind": "step", "n": 8, "x": 4, "y": 4, "d": 3},
+            {"kind": "step_disp", "n": 8, "x": 4, "y": 4, "d": 3},
+            {"kind": "partial", "n": 8, "x": 2, "y": 4, "d": 3},
+            {"kind": "finalize", "n": 8, "y": 4, "d": 3},
+        ]
+    }
+    aot.build(manifest, str(out))
+    return out
+
+
+def test_artifacts_written(tiny_artifacts):
+    files = sorted(os.listdir(tiny_artifacts))
+    assert "manifest.json" in files
+    hlos = [f for f in files if f.endswith(".hlo.txt")]
+    assert len(hlos) == 4
+
+
+def test_hlo_text_is_hlo(tiny_artifacts):
+    path = tiny_artifacts / "step_n8_x4_y4_d3.hlo.txt"
+    text = path.read_text()
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # Fused module: contraction (dot) and the threshold compare all present.
+    assert "dot(" in text or "dot." in text
+    assert "compare" in text
+
+
+def test_manifest_index_round_trips(tiny_artifacts):
+    idx = json.loads((tiny_artifacts / "manifest.json").read_text())
+    assert idx["format"] == "fastmps-artifacts-v1"
+    by_name = {v["name"]: v for v in idx["variants"]}
+    step = by_name["step_n8_x4_y4_d3"]
+    assert step["inputs"] == [[8, 4], [8, 4], [4, 4, 3], [4, 4, 3], [4], [8]]
+    assert [o["shape"] for o in step["outputs"]] == [[8, 4], [8, 4], [8]]
+    assert by_name["step_n8_x4_y4_d3_disp"]["inputs"][-1] == [8]
+
+
+def test_lowering_is_deterministic(tiny_artifacts, tmp_path):
+    v = {"kind": "step", "n": 8, "x": 4, "y": 4, "d": 3}
+    t1, _, _ = aot.lower_variant(v)
+    t2, _, _ = aot.lower_variant(v)
+    assert t1 == t2
+
+
+def test_variant_names():
+    assert aot.variant_name({"kind": "step", "n": 256, "x": 96, "y": 96, "d": 3}) == (
+        "step_n256_x96_y96_d3"
+    )
+    assert (
+        aot.variant_name(
+            {"kind": "step", "n": 256, "x": 96, "y": 96, "d": 3, "tf32": True}
+        )
+        == "step_n256_x96_y96_d3_tf32"
+    )
+    with pytest.raises(ValueError):
+        aot.variant_name({"kind": "bogus", "n": 1, "d": 1})
+
+
+def test_default_manifest_covers_buckets():
+    m = aot.default_manifest()
+    kinds = {v["kind"] for v in m["variants"]}
+    assert {"step", "step_disp", "partial", "finalize"} <= kinds
+    # χ_l = 1 boundary variant must exist for site 0.
+    assert any(v.get("x") == 1 for v in m["variants"])

@@ -1,0 +1,186 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal of the build path — the HLO the rust
+runtime executes is lowered from exactly these kernels. Hypothesis sweeps
+shapes and value scales; fixed seeds keep the suite deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import contract as kcontract
+from compile.kernels import displace as kdisplace
+from compile.kernels import measure as kmeasure
+from compile.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_planes(rng, *shape, scale=1.0):
+    return (
+        jnp.asarray(rng.normal(size=shape) * scale, dtype=jnp.float32),
+        jnp.asarray(rng.normal(size=shape) * scale, dtype=jnp.float32),
+    )
+
+
+@pytest.mark.parametrize(
+    "n,x,y,d",
+    [
+        (4, 3, 5, 2),
+        (16, 8, 8, 3),
+        (32, 1, 16, 3),  # boundary site χ_l = 1
+        (64, 96, 32, 4),
+        (128, 64, 96, 3),
+    ],
+)
+def test_contract_matches_ref(n, x, y, d):
+    rng = np.random.default_rng(42)
+    er, ei = rand_planes(rng, n, x)
+    gr, gi = rand_planes(rng, x, y, d)
+    want_r, want_i = kref.contract_ref(er, ei, gr, gi)
+    got_r, got_i = kcontract.contract_env(er, ei, gr, gi)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 48),
+    x=st.integers(1, 40),
+    y=st.integers(1, 40),
+    d=st.integers(2, 5),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_contract_hypothesis(n, x, y, d, scale):
+    rng = np.random.default_rng(n * 1000 + x * 100 + y * 10 + d)
+    er, ei = rand_planes(rng, n, x, scale=scale)
+    gr, gi = rand_planes(rng, x, y, d)
+    want_r, want_i = kref.contract_ref(er, ei, gr, gi)
+    got_r, got_i = kcontract.contract_env(er, ei, gr, gi)
+    tol = max(1e-5 * scale * np.sqrt(x), 1e-6)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-4, atol=tol)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-4, atol=tol)
+
+
+@pytest.mark.parametrize("n,y,d", [(8, 4, 2), (32, 16, 3), (128, 96, 4)])
+def test_measure_matches_ref(n, y, d):
+    rng = np.random.default_rng(7)
+    tr, ti = rand_planes(rng, n, y, d)
+    lam = jnp.asarray(np.abs(rng.normal(size=y)) + 0.1, dtype=jnp.float32)
+    unif = jnp.asarray(rng.uniform(size=n), dtype=jnp.float32)
+
+    wr, wi, ws = kref.measure_ref(tr, ti, lam, unif)
+    wr, wi = kref.rescale_ref(wr, wi)
+    gr, gi, gs = kmeasure.measure_rescale(tr, ti, lam, unif)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_allclose(gr, wr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gi, wi, rtol=1e-5, atol=1e-6)
+
+
+def test_measure_samples_in_range_and_env_is_gather():
+    rng = np.random.default_rng(11)
+    n, y, d = 64, 12, 3
+    tr, ti = rand_planes(rng, n, y, d)
+    lam = jnp.ones((y,), dtype=jnp.float32)
+    unif = jnp.asarray(rng.uniform(size=n), dtype=jnp.float32)
+    er, ei, s = kmeasure.measure_rescale(tr, ti, lam, unif, rescale=False)
+    s = np.asarray(s)
+    assert s.min() >= 0 and s.max() < d
+    # env row = temp[n, :, s_n].
+    for i in [0, 5, 63]:
+        np.testing.assert_allclose(np.asarray(er)[i], np.asarray(tr)[i, :, s[i]], rtol=1e-6)
+
+
+def test_measure_statistics_follow_born_rule():
+    # Single dominant weight: outcome distribution must match probs.
+    rng = np.random.default_rng(13)
+    n, y, d = 4096, 2, 3
+    # Construct temp so that |temp|²·Λ gives probs ∝ [0.2, 0.3, 0.5].
+    probs = np.array([0.2, 0.3, 0.5])
+    tr = np.zeros((n, y, d), dtype=np.float32)
+    tr[:, 0, :] = np.sqrt(probs)[None, :]
+    ti = np.zeros_like(tr)
+    lam = jnp.ones((y,), dtype=jnp.float32)
+    unif = jnp.asarray(rng.uniform(size=n), dtype=jnp.float32)
+    _, _, s = kmeasure.measure_rescale(
+        jnp.asarray(tr), jnp.asarray(ti), lam, unif, rescale=False
+    )
+    counts = np.bincount(np.asarray(s), minlength=d) / n
+    np.testing.assert_allclose(counts, probs, atol=0.03)
+
+
+def test_rescale_rows_have_unit_max():
+    rng = np.random.default_rng(17)
+    n, y = 32, 20
+    er, ei = rand_planes(rng, n, y, scale=1e-6)
+    rr, ri = kref.rescale_ref(er, ei)
+    mag = np.sqrt(np.asarray(rr) ** 2 + np.asarray(ri) ** 2)
+    np.testing.assert_allclose(mag.max(axis=1), 1.0, rtol=1e-5)
+    # Zero rows untouched.
+    z_r, z_i = kref.rescale_ref(jnp.zeros((2, 3)), jnp.zeros((2, 3)))
+    assert np.all(np.asarray(z_r) == 0)
+
+
+@pytest.mark.parametrize("d", [2, 3, 4, 6])
+def test_displace_kernel_matches_ref(d):
+    rng = np.random.default_rng(19)
+    n, y = 32, 8
+    tr, ti = rand_planes(rng, n, y, d)
+    mu_re = jnp.asarray(rng.normal(size=n) * 0.4, dtype=jnp.float32)
+    mu_im = jnp.asarray(rng.normal(size=n) * 0.4, dtype=jnp.float32)
+    dr, di = kref.displace_matrices_ref(mu_re, mu_im, d)
+    want_r, want_i = kref.apply_displacement_ref(tr, ti, dr, di)
+    coef = kref.displace_coef(d)
+    got_r, got_i = kdisplace.displace_apply(tr, ti, mu_re, mu_im, coef)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got_i, want_i, rtol=1e-4, atol=1e-5)
+
+
+def test_displacement_is_unitary_on_low_photons():
+    # D(mu)·D(mu)† ≈ I away from the truncation corner.
+    d = 8
+    mu_re = jnp.asarray([0.3], dtype=jnp.float32)
+    mu_im = jnp.asarray([-0.2], dtype=jnp.float32)
+    dr, di = kref.displace_matrices_ref(mu_re, mu_im, d)
+    D = np.asarray(dr)[0] + 1j * np.asarray(di)[0]
+    P = D @ D.conj().T
+    np.testing.assert_allclose(P[:4, :4], np.eye(4), atol=1e-3)
+
+
+def test_displacement_zero_mu_is_identity():
+    d = 4
+    z = jnp.zeros((3,), dtype=jnp.float32)
+    dr, di = kref.displace_matrices_ref(z, z, d)
+    for i in range(3):
+        np.testing.assert_allclose(np.asarray(dr)[i], np.eye(d), atol=1e-7)
+        np.testing.assert_allclose(np.asarray(di)[i], 0.0, atol=1e-7)
+
+
+def test_tf32_rounding_keeps_10_bits():
+    x = jnp.asarray([1.0 + 1.0 / 1024.0, 1.0 + 1.0 / 4096.0], dtype=jnp.float32)
+    r = np.asarray(kref.round_tf32(x))
+    assert r[0] == np.float32(1.0 + 1.0 / 1024.0)
+    assert r[1] != np.float32(1.0 + 1.0 / 4096.0)
+    assert abs(r[1] - (1.0 + 1.0 / 4096.0)) <= 1.0 / 2048.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 32),
+    y=st.integers(1, 24),
+    d=st.integers(2, 4),
+)
+def test_measure_hypothesis_matches_ref(n, y, d):
+    rng = np.random.default_rng(n * 71 + y * 7 + d)
+    tr, ti = rand_planes(rng, n, y, d)
+    lam = jnp.asarray(np.abs(rng.normal(size=y)) + 0.05, dtype=jnp.float32)
+    unif = jnp.asarray(rng.uniform(size=n), dtype=jnp.float32)
+    wr, wi, ws = kref.measure_ref(tr, ti, lam, unif)
+    wr, wi = kref.rescale_ref(wr, wi)
+    gr, gi, gs = kmeasure.measure_rescale(tr, ti, lam, unif)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_allclose(gr, wr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gi, wi, rtol=1e-5, atol=1e-6)

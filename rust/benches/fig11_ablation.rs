@@ -1,0 +1,111 @@
+//! Fig. 11: ablation — speedup of the fully-optimized FastMPS over versions
+//! with one optimization removed: dynamic bond dimensions (§3.4.2), the
+//! fast expm displacement (§3.4.1), and mixed precision (§3.3).
+//!
+//! Dynamic-χ and precision arms are measured end-to-end; the expm arm is
+//! measured on the displacement kernel itself (general Padé `expm` vs the
+//! analytic triangular factorization), exactly the component the paper
+//! swaps. Mixed precision on this CPU testbed shows the f32-vs-f64 SIMD
+//! factor (~2×); the paper's 16× comes from the A100 TF32:FP64 peak ratio,
+//! which `table2_gpu_model` reports analytically.
+
+use std::sync::Arc;
+
+use fastmps::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use fastmps::coordinator::data_parallel;
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::linalg::{displacement_exact, displacement_fast_batch};
+use fastmps::rng::Xoshiro256;
+use fastmps::tensor::C64;
+use fastmps::util::bench;
+
+fn main() {
+    bench::header("Fig. 11", "ablation: speedup of full FastMPS over -1 variants (bm288 analog)");
+    let spec_dyn = Preset::BorealisM288.scaled_spec(17);
+    let mut spec_fixed = spec_dyn.clone();
+    spec_fixed.dynamic_chi = false;
+
+    let mk = |spec: &fastmps::mps::gbs::GbsSpec, tag: &str| {
+        let dir =
+            std::env::temp_dir().join(format!("fastmps-b11-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        (
+            Arc::new(
+                GammaStore::create(&dir, spec, StorePrecision::F16, StoreCodec::Raw).unwrap(),
+            ),
+            dir,
+        )
+    };
+    let (store_dyn, d1) = mk(&spec_dyn, "dyn");
+    let (store_fixed, d2) = mk(&spec_fixed, "fixed");
+
+    let run = |store: &Arc<GammaStore>, compute: ComputePrecision| {
+        let mut cfg = RunConfig::new(store.spec.clone());
+        cfg.n_samples = 2048;
+        cfg.n1_macro = 1024;
+        cfg.n2_micro = 256;
+        cfg.p1 = 2;
+        cfg.engine = EngineKind::Native;
+        cfg.compute = compute;
+        cfg.scaling = ScalingMode::PerSample;
+        cfg.gemm_threads = 1;
+        let (t, _) = bench::time(1, 3, || {
+            data_parallel::run(&cfg, store, &[]).unwrap();
+        });
+        t
+    };
+
+    // Full pipeline (dynamic χ + f32 "mixed precision").
+    let t_full = run(&store_dyn, ComputePrecision::F32);
+    // − dynamic χ.
+    let t_fixed = run(&store_fixed, ComputePrecision::F32);
+    // − mixed precision (FP64 everywhere, as the baseline must).
+    let t_fp64 = run(&store_dyn, ComputePrecision::F64);
+
+    // − fast expm: component benchmark at production d and batch.
+    let d = 4usize;
+    let nb = 4096usize;
+    let mut rng = Xoshiro256::seed_from(23);
+    let mus: Vec<C64> = (0..nb)
+        .map(|_| {
+            let (re, im) = rng.complex_normal();
+            C64::new(re * 0.3, im * 0.3)
+        })
+        .collect();
+    let (t_fast, _) = bench::time(1, 3, || {
+        std::hint::black_box(displacement_fast_batch(&mus, d).unwrap());
+    });
+    let (t_pade, _) = bench::time(1, 3, || {
+        for &mu in mus.iter().take(256) {
+            std::hint::black_box(displacement_exact(mu, d).unwrap());
+        }
+    });
+    let t_pade_full = t_pade * (nb as f64 / 256.0);
+
+    bench::row(&[
+        ("full_pipeline_secs", format!("{t_full:.3}")),
+        (
+            "speedup_vs_no_dynamic_chi",
+            format!("{:.2}x", t_fixed / t_full),
+        ),
+        (
+            "speedup_vs_fp64",
+            format!("{:.2}x (CPU SIMD; A100 TF32/FP64 peak = 16.4x)", t_fp64 / t_full),
+        ),
+        (
+            "expm_speedup",
+            format!("{:.1}x (batched analytic vs Padé)", t_pade_full / t_fast),
+        ),
+    ]);
+    let comp = spec_dyn.chi_plan().comp_ratio();
+    bench::row(&[(
+        "dynamic_chi_comp_ratio",
+        format!("{:.1}% of fixed-χ FLOPs (Table 1 predicts the arm above)", comp * 100.0),
+    )]);
+    bench::paper(
+        "mixed precision dominates on GPU (~10x); expm opt gives a stable 2x \
+         end-to-end (>10x on the component); dynamic χ tracks Table 1 (Fig. 11)",
+    );
+    std::fs::remove_dir_all(&d1).unwrap();
+    std::fs::remove_dir_all(&d2).unwrap();
+}

@@ -1,0 +1,89 @@
+//! Fig. 12: weak and strong scaling of data parallelism, on the simulated
+//! Tianhe-3 and Sunway fabrics (virtual time; the paper reports ≥95 %
+//! efficiency on both machines) plus measured wall time on local threads.
+
+use std::sync::Arc;
+
+use fastmps::comm::NetPreset;
+use fastmps::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use fastmps::coordinator::data_parallel;
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::util::bench;
+
+fn main() {
+    let mut spec = Preset::M8176.scaled_spec(29);
+    spec.m = 32;
+    spec.chi_cap = 32;
+    spec.decay_k = 0.02;
+    spec.displacement_sigma = 0.0;
+    let dir = std::env::temp_dir().join(format!("fastmps-b12-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        GammaStore::create(&dir, &spec, StorePrecision::F16, StoreCodec::Raw).unwrap(),
+    );
+
+    let run = |p1: usize, n: u64, net: NetPreset| {
+        let mut cfg = RunConfig::new(store.spec.clone());
+        cfg.n_samples = n;
+        cfg.n1_macro = 256;
+        cfg.n2_micro = 128;
+        cfg.p1 = p1;
+        cfg.engine = EngineKind::Native;
+        cfg.compute = ComputePrecision::F32;
+        cfg.scaling = ScalingMode::PerSample;
+        cfg.net = net;
+        cfg.disk_bw = Some(5e9);
+        // One modelled 50-GFLOP/s device per rank: the virtual clock is
+        // then independent of testbed thread oversubscription.
+        cfg.vdevice_flops = Some(50e9);
+        data_parallel::run(&cfg, &store, &[]).unwrap()
+    };
+
+    for net in [NetPreset::Tianhe3, NetPreset::Sunway] {
+        bench::header(
+            &format!("Fig. 12 ({})", net.name()),
+            "DP weak scaling: 1024 samples/worker (virtual time)",
+        );
+        let base = run(1, 1024, net).vtime;
+        for p in [1usize, 2, 4, 8, 16] {
+            let rep = run(p, 1024 * p as u64, net);
+            bench::row(&[
+                ("p", format!("{p}")),
+                ("vtime", format!("{:.4}s", rep.vtime)),
+                ("efficiency", format!("{:.1}%", base / rep.vtime * 100.0)),
+            ]);
+        }
+        bench::header(
+            &format!("Fig. 12 ({})", net.name()),
+            "DP strong scaling: 8192 samples total (virtual time)",
+        );
+        let t1 = run(1, 8192, net).vtime;
+        for p in [1usize, 2, 4, 8, 16] {
+            let rep = run(p, 8192, net);
+            bench::row(&[
+                ("p", format!("{p}")),
+                ("vtime", format!("{:.4}s", rep.vtime)),
+                (
+                    "efficiency",
+                    format!("{:.1}%", t1 / (rep.vtime * p as f64) * 100.0),
+                ),
+            ]);
+        }
+    }
+
+    bench::header("Fig. 12 (measured)", "strong scaling on local threads (wall time)");
+    let w1 = run(1, 8192, NetPreset::Ideal).wall;
+    for p in [1usize, 2, 4] {
+        let rep = run(p, 8192, NetPreset::Ideal);
+        bench::row(&[
+            ("p", format!("{p}")),
+            ("wall", format!("{:.3}s", rep.wall)),
+            (
+                "efficiency",
+                format!("{:.1}%", w1 / (rep.wall * p as f64) * 100.0),
+            ),
+        ]);
+    }
+    bench::paper(">95% efficiency for weak AND strong scaling on Tianhe-3 (375 cores) and Sunway (32,500 cores) — Fig. 12 a–d");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

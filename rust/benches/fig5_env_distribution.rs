@@ -1,0 +1,71 @@
+//! Fig. 5: distribution of left-environment magnitudes across samples at
+//! increasing sites — the evidence for per-*sample* (not global) scaling.
+//!
+//! Prints, per probed site, the scatter summary (mean/max of per-sample
+//! max |env|, and the max/min spread): the paper's panels a)–d) show the
+//! spread exploding with the site index while each sample's internal range
+//! stays ≤ 1e6.
+
+use std::sync::Arc;
+
+use fastmps::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use fastmps::coordinator::data_parallel;
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::util::bench;
+
+fn main() {
+    bench::header("Fig. 5", "left-env per-sample magnitude distribution vs site");
+    // M8176 analog: probe sites at the same fractions as the paper's
+    // {450, 2000, 5000, 7150}/8176.
+    let mut spec = Preset::M8176.scaled_spec(5);
+    spec.m = 128;
+    spec.chi_cap = 48;
+    spec.decay_k = 0.05;
+    spec.branch_skew = 0.0;
+    spec.displacement_sigma = 1.6; // the Fig. 5 spread source
+
+    let dir = std::env::temp_dir().join(format!("fastmps-b5-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap(),
+    );
+    let probes: Vec<usize> = [450usize, 2000, 5000, 7150]
+        .iter()
+        .map(|&s| s * spec.m / 8176)
+        .collect();
+
+    let mut cfg = RunConfig::new(store.spec.clone());
+    cfg.n_samples = 1024;
+    cfg.n1_macro = 1024;
+    cfg.n2_micro = 256;
+    cfg.engine = EngineKind::Native;
+    cfg.compute = ComputePrecision::F64; // exact range tracking
+    cfg.scaling = ScalingMode::Global; // the pre-fix view the paper plots
+    let rep = data_parallel::run(&cfg, &store, &probes).unwrap();
+
+    for (site, pts) in &rep.env_probes {
+        let maxs: Vec<f64> = pts.iter().map(|(m, _)| *m).collect();
+        let lo = maxs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = maxs.iter().cloned().fold(0.0f64, f64::max);
+        let intra = pts
+            .iter()
+            .map(|(_, r)| *r)
+            .filter(|r| r.is_finite())
+            .fold(0.0f64, f64::max);
+        bench::row(&[
+            ("site", format!("{site}")),
+            ("frac", format!("{:.2}", *site as f64 / spec.m as f64)),
+            ("sample_max_range", format!("{:.2e}..{:.2e}", lo, hi)),
+            (
+                "inter_sample_decades",
+                format!("{:.1}", (hi / lo.max(1e-300)).log10()),
+            ),
+            ("worst_intra_ratio", format!("{intra:.2e}")),
+        ]);
+    }
+    bench::paper(
+        "inter-sample maxima differ by hundreds of decades at late sites; \
+         intra-sample range stays ~1e6 (Fig. 5 a–d)",
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,68 @@
+//! Fig. 6: sampling failure by underflow — average photon number per site
+//! collapses to zero mid-chain with the baseline's global auto-scaling in
+//! f32, and survives with FastMPS per-sample scaling.
+
+use std::sync::Arc;
+
+use fastmps::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use fastmps::coordinator::data_parallel;
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::util::bench;
+
+fn main() {
+    bench::header(
+        "Fig. 6",
+        "underflow collapse: avg photons vs site (global vs per-sample scaling, f32)",
+    );
+    let mut spec = Preset::M8176.scaled_spec(13);
+    spec.m = 96;
+    spec.chi_cap = 32;
+    spec.decay_k = 0.02;
+    spec.branch_skew = 0.0;
+    // Displacement noise spreads per-sample magnitudes ~sqrt(site) decades.
+    spec.displacement_sigma = 1.6;
+    let dir = std::env::temp_dir().join(format!("fastmps-b6-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap(),
+    );
+
+    let run = |scaling: ScalingMode| {
+        let mut cfg = RunConfig::new(store.spec.clone());
+        cfg.n_samples = 512;
+        cfg.n1_macro = 512;
+        cfg.n2_micro = 128;
+        cfg.engine = EngineKind::Native;
+        cfg.compute = ComputePrecision::F32;
+        cfg.scaling = scaling;
+        cfg.env_f16 = true; // S3.3.2 storage; compresses f32's range into 96 sites
+        data_parallel::run(&cfg, &store, &[]).unwrap()
+    };
+
+    let global = run(ScalingMode::Global);
+    let per_sample = run(ScalingMode::PerSample);
+    let mg = global.sink.mean_photons();
+    let mp = per_sample.sink.mean_photons();
+    for site in (0..spec.m).step_by(6) {
+        bench::row(&[
+            ("site", format!("{site}")),
+            ("global_f32", format!("{:.4}", mg[site])),
+            ("per_sample_f32", format!("{:.4}", mp[site])),
+        ]);
+    }
+    let collapse = mg.iter().position(|&m| m == 0.0);
+    bench::row(&[
+        ("global_dead_rows", format!("{}", global.dead_rows)),
+        ("collapse_site", format!("{collapse:?}")),
+        ("per_sample_dead_rows", format!("{}", per_sample.dead_rows)),
+    ]);
+    bench::paper(
+        "auto-scaled run becomes a 0-tensor at site ~3000 of 8176; \
+         FastMPS per-sample scaling holds TF32/f32 to the end (Fig. 6)",
+    );
+    assert!(
+        global.dead_rows > 0 && per_sample.dead_rows == 0,
+        "expected the paper's collapse/survival split"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,56 @@
+//! Fig. 9: validation — first/second-order correlation slopes vs the exact
+//! marginals (panels a/c) and truncation error vs χ (panel b).
+
+use std::sync::Arc;
+
+use fastmps::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use fastmps::coordinator::data_parallel;
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::util::bench;
+
+fn main() {
+    bench::header("Fig. 9a/c", "correlation slopes, sampled vs exact");
+    let mut spec = Preset::M8176.scaled_spec(9);
+    spec.m = 48;
+    spec.chi_cap = 32;
+    spec.decay_k = 0.05;
+    spec.displacement_sigma = 0.0;
+    let dir = std::env::temp_dir().join(format!("fastmps-b9-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap(),
+    );
+
+    let mut cfg = RunConfig::new(store.spec.clone());
+    cfg.n_samples = 40_000;
+    cfg.n1_macro = 5_000;
+    cfg.n2_micro = 500;
+    cfg.p1 = 4;
+    cfg.engine = EngineKind::Native;
+    cfg.compute = ComputePrecision::F32;
+    cfg.scaling = ScalingMode::PerSample;
+    let rep = data_parallel::run(&cfg, &store, &[]).unwrap();
+    let mps = store.load_all().unwrap();
+    let v = fastmps::validate::validate(&mps, &rep.sink).unwrap();
+    bench::row(&[
+        ("samples", format!("{}", cfg.n_samples)),
+        ("first_order_slope", format!("{:.4}", v.first_order_slope)),
+        ("second_order_slope", format!("{:.4}", v.second_order_slope)),
+        ("max_site_err", format!("{:.4}", v.first_order_max_err)),
+        ("pairs", format!("{}", v.pairs)),
+    ]);
+    bench::paper("slope 0.97 (1st order), 0.96 (2nd order), ideal 1 — Fig. 9 a/c");
+
+    bench::header("Fig. 9b", "max truncation error vs bond dimension χ");
+    let plan = Preset::M8176.full_spec(9).chi_plan();
+    let mid = 8176 / 2;
+    for chi in [2_000usize, 5_000, 10_000, 15_000, 20_000] {
+        let err = plan.truncation_error(mid, chi);
+        bench::row(&[
+            ("chi", format!("{chi}")),
+            ("max_truncation_error", format!("{err:.3e}")),
+        ]);
+    }
+    bench::paper("decaying error with χ; ~0.675 even at χ=20000 mid-chain (Fig. 9b)");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,97 @@
+//! Table 3: measured CPU head-to-head at equal resources — FastMPS
+//! data-parallel vs the [19] model-parallel baseline, single-threaded
+//! compute, scaled-down shapes (the paper: χ=5000, 50K samples, one Xeon
+//! core, 10.06×/8.09× speedups).
+//!
+//! The baseline arm runs exactly the baseline's configuration: FP64
+//! compute, complex-double streaming, global auto-scaling, per-site
+//! process pipeline. The FastMPS arm runs f32 + per-sample scaling + FP16
+//! storage + dynamic χ through the data-parallel coordinator.
+
+use std::sync::Arc;
+
+use fastmps::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use fastmps::coordinator::{data_parallel, model_parallel};
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::util::bench;
+
+fn main() {
+    bench::header(
+        "Table 3",
+        "measured CPU comparison (scaled shapes, single-threaded GEMM)",
+    );
+    let paper: &[(&str, f64)] = &[("jiuzhang2", 10.06), ("bm288", 8.09)];
+    for (name, paper_speedup) in paper {
+        let preset = Preset::parse(name).unwrap();
+        let mut spec = preset.scaled_spec(41);
+        spec.m = spec.m.min(48);
+        spec.displacement_sigma = 0.0;
+        spec.decay_k = 0.05;
+
+        // FastMPS store: FP16 blobs + dynamic χ.
+        let dir_fast =
+            std::env::temp_dir().join(format!("fastmps-b3f-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir_fast);
+        let store_fast = Arc::new(
+            GammaStore::create(&dir_fast, &spec, StorePrecision::F16, StoreCodec::Raw).unwrap(),
+        );
+        // Baseline store: FP64 blobs + fixed χ (what [19] streams).
+        let mut spec_base = spec.clone();
+        spec_base.dynamic_chi = false;
+        let dir_base =
+            std::env::temp_dir().join(format!("fastmps-b3b-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir_base);
+        let store_base = Arc::new(
+            GammaStore::create(&dir_base, &spec_base, StorePrecision::F64, StoreCodec::Raw)
+                .unwrap(),
+        );
+
+        let samples = 2048u64;
+        let mut fast_cfg = RunConfig::new(store_fast.spec.clone());
+        fast_cfg.n_samples = samples;
+        fast_cfg.n1_macro = 512;
+        fast_cfg.n2_micro = 256;
+        fast_cfg.engine = EngineKind::Native;
+        fast_cfg.compute = ComputePrecision::F32;
+        fast_cfg.scaling = ScalingMode::PerSample;
+        fast_cfg.store_precision = StorePrecision::F16;
+        // Equal single-core resources: compare summed per-rank CPU time
+        // (the MP baseline runs M pipeline ranks on this multicore box,
+        // which a 1-core budget would serialize).
+        let rep_fast = data_parallel::run(&fast_cfg, &store_fast, &[]).unwrap();
+        let t_fast = rep_fast.metrics.phase("compute")
+            + rep_fast.metrics.phase("measure")
+            + rep_fast.metrics.phase("displace");
+
+        let mut base_cfg = RunConfig::new(store_base.spec.clone());
+        base_cfg.n_samples = samples;
+        base_cfg.n1_macro = 512;
+        base_cfg.n2_micro = 256;
+        base_cfg.engine = EngineKind::Native;
+        base_cfg.compute = ComputePrecision::F64;
+        base_cfg.scaling = ScalingMode::Global;
+        base_cfg.store_precision = StorePrecision::F64;
+        let rep_base = model_parallel::run(&base_cfg, &store_base).unwrap();
+        // CPU time only: pipe_recv is blocked *wait*, not work — a single
+        // core executing the pipeline sequentially never waits.
+        let t_base = rep_base.metrics.phase("compute") + rep_base.metrics.phase("measure");
+
+        bench::row(&[
+            ("dataset", (*name).into()),
+            ("baseline_mp_fp64", format!("{t_base:.3}s")),
+            ("fastmps_dp", format!("{t_fast:.3}s")),
+            (
+                "speedup",
+                format!("{:.2}x (paper {paper_speedup:.2}x)", t_base / t_fast),
+            ),
+        ]);
+        std::fs::remove_dir_all(&dir_fast).unwrap();
+        std::fs::remove_dir_all(&dir_base).unwrap();
+    }
+    bench::paper(
+        "Jiuzhang2-P65-1: 17.72h → 1.76h (10.06x); B-M288: 36.44h → 4.504h \
+         (8.09x) on one Xeon core (Table 3). CPU speedup here composes \
+         f32 SIMD, dynamic χ, pipeline-vs-DP structure and FP16 I/O; the \
+         paper's exact factor also includes their vectorized kernels.",
+    );
+}

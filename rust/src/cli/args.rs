@@ -1,0 +1,154 @@
+//! Flag parsing: `--key value` and `--flag` forms, with typed getters.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut it = argv.iter().peekable();
+        let command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| Error::config("missing subcommand (try 'fastmps help')"))?;
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(Error::config(format!("unexpected positional '{a}'")));
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    values.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => flags.push(key.to_string()),
+            }
+        }
+        Ok(Args {
+            command,
+            values,
+            flags,
+            consumed: Default::default(),
+        })
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.str_opt(key)
+            .ok_or_else(|| Error::config(format!("missing required --{key}")))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        match self.str_opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::config(format!("--{key}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on unknown keys (catches typos) — call after all getters.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.values.keys() {
+            if !consumed.contains(k) {
+                return Err(Error::config(format!("unknown option --{k}")));
+            }
+        }
+        for k in &self.flags {
+            if !consumed.contains(k) {
+                return Err(Error::config(format!("unknown flag --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::parse(&argv("sample --data d --samples 100 --verbose")).unwrap();
+        assert_eq!(a.command, "sample");
+        assert_eq!(a.req("data").unwrap(), "d");
+        assert_eq!(a.u64_or("samples", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = Args::parse(&argv("sample")).unwrap();
+        assert!(a.req("data").is_err());
+    }
+
+    #[test]
+    fn unknown_option_caught() {
+        let a = Args::parse(&argv("sample --bogus 3")).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = Args::parse(&argv("x --n abc")).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn no_subcommand_is_error() {
+        assert!(Args::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = Args::parse(&argv("x --k 2")).unwrap();
+        assert_eq!(a.usize_or("k", 0).unwrap(), 2);
+    }
+}

@@ -1,0 +1,389 @@
+//! Subcommand implementations.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use super::args::Args;
+use crate::comm::NetPreset;
+use crate::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use crate::coordinator::{data_parallel, model_parallel, tensor_parallel};
+use crate::io::{GammaStore, StoreCodec, StorePrecision};
+use crate::mps::gbs::GbsSpec;
+use crate::perfmodel;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+const HELP: &str = "fastmps — multi-level parallel MPS sampling (FastMPS reproduction)
+
+USAGE: fastmps <command> [--options]
+
+COMMANDS:
+  gen-data    Generate a synthetic GBS MPS store
+              --preset <jiuzhang2|jiuzhang3h|bm216h|bm288|m8176> | --m/--chi/--d/--asp
+              --out DIR [--precision f64|f32|f16] [--codec raw|zstd]
+              [--seed N] [--full-scale] [--fixed-chi] [--decay K] [--sigma S]
+  sample      Run the sampler on a store
+              --data DIR --samples N [--scheme dp|mp|tp] [--engine xla|native]
+              [--p1 N] [--p2 N] [--single-site] [--n1 N] [--n2 N]
+              [--compute f64|f32|tf32] [--scaling per-sample|global|none]
+              [--net nvlink3|pcie4|ib|tianhe3|sunway|ideal] [--disk-bw BPS]
+              [--artifacts DIR] [--json]
+  validate    Sample + compare against exact marginals (Fig. 9)
+              --data DIR [--samples N] [--engine ...] [--json]
+  perf-model  Paper-scale analytic predictions (Tables 2/3 shape)
+              [--preset P] [--gpus N] [--n1 N]
+  bench-comm  AllReduce vs ReduceScatter decision probe (§4.3)
+              [--net P] [--bytes B] [--p2 N]
+  info        Describe a store
+              --data DIR
+  help        This text
+";
+
+pub fn run_cli(argv: &[String]) -> Result<()> {
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        println!("{HELP}");
+        return Ok(());
+    }
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "gen-data" => cmd_gen_data(&args),
+        "sample" => cmd_sample(&args),
+        "validate" => cmd_validate(&args),
+        "perf-model" => cmd_perf_model(&args),
+        "bench-comm" => cmd_bench_comm(&args),
+        "info" => cmd_info(&args),
+        other => Err(Error::config(format!(
+            "unknown command '{other}' (try 'fastmps help')"
+        ))),
+    }
+}
+
+fn spec_from_args(args: &Args) -> Result<GbsSpec> {
+    let seed = args.u64_or("seed", 1234)?;
+    let mut spec = match args.str_opt("preset") {
+        Some(p) => {
+            let preset = Preset::parse(p)?;
+            if args.flag("full-scale") {
+                preset.full_spec(seed)
+            } else {
+                preset.scaled_spec(seed)
+            }
+        }
+        None => {
+            let m = args.usize_or("m", 64)?;
+            let chi = args.usize_or("chi", 64)?;
+            let d = args.usize_or("d", 3)?;
+            GbsSpec {
+                name: "custom".into(),
+                m,
+                d,
+                chi_cap: chi,
+                asp: 4.0,
+                decay_k: 0.1,
+                displacement_sigma: 0.3,
+            branch_skew: 0.0,
+                seed,
+                dynamic_chi: true,
+                step_ratio_override: None,
+            }
+        }
+    };
+    if let Some(asp) = args.f64_opt("asp")? {
+        spec.asp = asp;
+        spec.step_ratio_override = None;
+    }
+    if let Some(k) = args.f64_opt("decay")? {
+        spec.decay_k = k;
+    }
+    if let Some(s) = args.f64_opt("sigma")? {
+        spec.displacement_sigma = s;
+    }
+    if args.flag("fixed-chi") {
+        spec.dynamic_chi = false;
+    }
+    Ok(spec)
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let spec = spec_from_args(args)?;
+    let out = PathBuf::from(args.req("out")?);
+    let precision = StorePrecision::parse(&args.str_or("precision", "f16"))?;
+    let codec = StoreCodec::parse(&args.str_or("codec", "raw"))?;
+    args.finish()?;
+    let t0 = std::time::Instant::now();
+    let store = GammaStore::create(&out, &spec, precision, codec)?;
+    println!(
+        "wrote {} sites (χ cap {}, d {}, {}) to {} in {} — {}",
+        spec.m,
+        spec.chi_cap,
+        spec.d,
+        precision.as_str(),
+        out.display(),
+        crate::util::human_secs(t0.elapsed().as_secs_f64()),
+        crate::util::human_bytes(store.total_bytes()),
+    );
+    let plan = spec.chi_plan();
+    println!(
+        "dynamic χ: equi {} | step ratio {:.2}% | comp ratio {:.2}%",
+        plan.equivalent_chi().round(),
+        plan.step_ratio() * 100.0,
+        plan.comp_ratio() * 100.0
+    );
+    Ok(())
+}
+
+fn config_from_args(args: &Args, store: &GammaStore) -> Result<RunConfig> {
+    let mut cfg = RunConfig::new(store.spec.clone());
+    cfg.n_samples = args.u64_or("samples", 4096)?;
+    cfg.n1_macro = args.usize_or("n1", 1024)?;
+    cfg.n2_micro = args.usize_or("n2", 256)?;
+    cfg.p1 = args.usize_or("p1", 1)?;
+    cfg.p2 = args.usize_or("p2", 1)?;
+    cfg.gemm_threads = args.usize_or("threads", 1)?;
+    cfg.compute = ComputePrecision::parse(&args.str_or("compute", "f32"))?;
+    cfg.scaling = ScalingMode::parse(&args.str_or("scaling", "per-sample"))?;
+    cfg.engine = EngineKind::parse(&args.str_or("engine", "native"))?;
+    cfg.net = NetPreset::parse(&args.str_or("net", "ideal"))
+        .ok_or_else(|| Error::config("bad --net"))?;
+    cfg.double_site = !args.flag("single-site");
+    cfg.artifacts_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    cfg.disk_bw = args.f64_opt("disk-bw")?;
+    cfg.store_precision = store.precision;
+    Ok(cfg)
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let data = PathBuf::from(args.req("data")?);
+    let store = Arc::new(GammaStore::open(&data)?);
+    let cfg = config_from_args(args, &store)?;
+    let scheme = args.str_or("scheme", "dp");
+    let as_json = args.flag("json");
+    args.finish()?;
+
+    let report = match scheme.as_str() {
+        "dp" => data_parallel::run(&cfg, &store, &[])?,
+        "mp" => model_parallel::run(&cfg, &store)?,
+        "tp" => tensor_parallel::run(&cfg, &store)?,
+        s => return Err(Error::config(format!("unknown scheme '{s}' (dp|mp|tp)"))),
+    };
+
+    let mean = report.sink.mean_photons();
+    let total_mean: f64 = mean.iter().sum();
+    if as_json {
+        let j = Json::obj(vec![
+            ("scheme", Json::Str(scheme)),
+            ("config", cfg.to_json()),
+            ("wall_secs", Json::Num(report.wall)),
+            ("virtual_secs", Json::Num(report.vtime)),
+            ("dead_rows", Json::Num(report.dead_rows as f64)),
+            ("total_mean_photons", Json::Num(total_mean)),
+            ("metrics", report.metrics.to_json()),
+        ]);
+        println!("{}", j.pretty());
+    } else {
+        println!("scheme={scheme} {}", report.metrics.summary());
+        println!(
+            "wall={} virtual={} total⟨n⟩={:.4} dead_rows={}",
+            crate::util::human_secs(report.wall),
+            crate::util::human_secs(report.vtime),
+            total_mean,
+            report.dead_rows
+        );
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let data = PathBuf::from(args.req("data")?);
+    let store = Arc::new(GammaStore::open(&data)?);
+    let mut cfg = config_from_args(args, &store)?;
+    if args.str_opt("samples").is_none() {
+        cfg.n_samples = 20_000;
+    }
+    let as_json = args.flag("json");
+    args.finish()?;
+
+    let report = data_parallel::run(&cfg, &store, &[])?;
+    let mps = store.load_all()?;
+    let v = crate::validate::validate(&mps, &report.sink)?;
+    if as_json {
+        let j = Json::obj(vec![
+            ("first_order_slope", Json::Num(v.first_order_slope)),
+            ("second_order_slope", Json::Num(v.second_order_slope)),
+            ("first_order_max_err", Json::Num(v.first_order_max_err)),
+            ("sites", Json::Num(v.sites as f64)),
+            ("pairs", Json::Num(v.pairs as f64)),
+            ("samples", Json::Num(cfg.n_samples as f64)),
+        ]);
+        println!("{}", j.pretty());
+    } else {
+        println!(
+            "validation over {} samples: 1st-order slope {:.4} (ideal 1; paper 0.97), \
+             2nd-order slope {:.4} (paper 0.96), max ⟨n⟩ err {:.4}",
+            cfg.n_samples, v.first_order_slope, v.second_order_slope, v.first_order_max_err
+        );
+    }
+    Ok(())
+}
+
+fn cmd_perf_model(args: &Args) -> Result<()> {
+    let preset = Preset::parse(&args.str_or("preset", "bm288"))?;
+    let gpus = args.usize_or("gpus", 8)?;
+    let n1 = args.usize_or("n1", 100_000)?;
+    args.finish()?;
+    let spec = preset.full_spec(1);
+    let w_fast = perfmodel::Workload {
+        m: spec.m,
+        chi: spec.chi_cap as u64,
+        d: 4,
+        n_total: 10_000_000,
+        n1: n1 as u64,
+        scalar_bytes: 2,
+    };
+    let w_base = perfmodel::Workload {
+        scalar_bytes: 8,
+        ..w_fast
+    };
+    let net = NetPreset::InfinibandHdr.model();
+    let t_mp = perfmodel::time_model_parallel(&w_base, &perfmodel::A100_FP64, &net);
+    let t_dp = perfmodel::time_data_parallel(&w_fast, &perfmodel::A100_TF32, &net, gpus);
+    let t_dp1 = perfmodel::time_data_parallel(&w_fast, &perfmodel::A100_TF32, &net, 1);
+    println!("preset {} (M={}, χ=10⁴, d=4, N=10⁷, A100 constants)", preset.name(), spec.m);
+    println!(
+        "  baseline [19] model-parallel, {} GPUs (FP64):  {:8.1} min",
+        spec.m,
+        t_mp / 60.0
+    );
+    println!("  FastMPS data-parallel, 1 GPU (TF32+FP16 Γ): {:8.1} min", t_dp1 / 60.0);
+    println!("  FastMPS data-parallel, {gpus} GPUs:              {:8.1} min", t_dp / 60.0);
+    println!(
+        "  memory/worker (Eq.3, complex64): {}",
+        crate::util::human_bytes(perfmodel::memory_demand(
+            w_fast.n1, w_fast.chi, w_fast.d, 4
+        ))
+    );
+    println!(
+        "  overlap N₁ threshold (§3.1): {}",
+        perfmodel::min_macro_batch_for_overlap(&perfmodel::A100_TF32, 2)
+    );
+    Ok(())
+}
+
+fn cmd_bench_comm(args: &Args) -> Result<()> {
+    let net = NetPreset::parse(&args.str_or("net", "nvlink3"))
+        .ok_or_else(|| Error::config("bad --net"))?;
+    let bytes = args.u64_or("bytes", 64 << 20)?;
+    let p2 = args.usize_or("p2", 4)?;
+    args.finish()?;
+    let (t_ar, t_rs, prefer_double) = tensor_parallel::comm_bench(net, bytes, p2);
+    println!(
+        "{} @ {} over {p2} ranks: AllReduce {:.3} ms, ReduceScatter {:.3} ms → {} scheme",
+        net.name(),
+        crate::util::human_bytes(bytes),
+        t_ar * 1e3,
+        t_rs * 1e3,
+        if prefer_double { "double-site" } else { "single-site" }
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let data = PathBuf::from(args.req("data")?);
+    args.finish()?;
+    let store = GammaStore::open(&data)?;
+    let plan = store.spec.chi_plan();
+    println!(
+        "{}: M={} d={} χcap={} asp={} precision={} codec={} bytes={}",
+        store.spec.name,
+        store.spec.m,
+        store.spec.d,
+        store.spec.chi_cap,
+        store.spec.asp,
+        store.precision.as_str(),
+        store.codec.as_str(),
+        crate::util::human_bytes(store.total_bytes())
+    );
+    println!(
+        "χ plan: equi {:.0} | step {:.2}% | comp {:.2}% | params {}",
+        plan.equivalent_chi(),
+        plan.step_ratio() * 100.0,
+        plan.comp_ratio() * 100.0,
+        store
+            .bonds
+            .iter()
+            .map(|&(l, r)| (l * r * store.spec.d) as u64)
+            .sum::<u64>()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn help_runs() {
+        run_cli(&argv("help")).unwrap();
+        run_cli(&[]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_cli(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn gen_sample_validate_info_flow() {
+        let dir = std::env::temp_dir().join(format!("fastmps-cli-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap();
+        run_cli(&argv(&format!(
+            "gen-data --m 6 --chi 8 --d 3 --out {d} --decay 0 --sigma 0"
+        )))
+        .unwrap();
+        run_cli(&argv(&format!(
+            "info --data {d}"
+        )))
+        .unwrap();
+        run_cli(&argv(&format!(
+            "sample --data {d} --samples 64 --n1 32 --n2 16 --p1 2 --compute f64 --json"
+        )))
+        .unwrap();
+        run_cli(&argv(&format!(
+            "sample --data {d} --samples 32 --n1 32 --n2 32 --scheme mp --compute f64"
+        )))
+        .unwrap();
+        run_cli(&argv(&format!(
+            "sample --data {d} --samples 32 --n1 32 --n2 32 --scheme tp --p2 2 --compute f64"
+        )))
+        .unwrap();
+        run_cli(&argv(&format!(
+            "validate --data {d} --samples 2000 --n1 500 --n2 250 --compute f64"
+        )))
+        .unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn perf_model_and_bench_comm_run() {
+        run_cli(&argv("perf-model --preset jiuzhang2 --gpus 8")).unwrap();
+        run_cli(&argv("bench-comm --net nvlink3 --p2 4")).unwrap();
+    }
+
+    #[test]
+    fn bad_scheme_rejected() {
+        let dir = std::env::temp_dir().join(format!("fastmps-cli2-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap();
+        run_cli(&argv(&format!("gen-data --m 4 --chi 4 --out {d}"))).unwrap();
+        assert!(run_cli(&argv(&format!(
+            "sample --data {d} --scheme bogus"
+        )))
+        .is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,16 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! ```text
+//! fastmps gen-data  --preset bm288 --out data/bm288 [--precision f16]
+//! fastmps sample    --data data/bm288 --samples 10000 [--engine xla] ...
+//! fastmps validate  --data data/bm288 --samples 20000
+//! fastmps perf-model --preset bm288 [--gpus 8]
+//! fastmps bench-comm --net nvlink3 --bytes 67108864 --p2 4
+//! fastmps info      --data data/bm288
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::Args;
+pub use commands::run_cli;

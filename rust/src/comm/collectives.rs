@@ -1,0 +1,461 @@
+//! Thread-rank fabric with real data movement and virtual-clock costing.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::netmodel::{NetModel, NetPreset};
+use crate::util::error::{Error, Result};
+
+/// Collective rendezvous state (one "round" at a time; SPMD ordering).
+struct Round {
+    generation: u64,
+    arrived: usize,
+    /// Per-rank contribution for the current round.
+    slots: Vec<Option<Vec<f32>>>,
+    /// Reduced/broadcast result shared by all ranks.
+    result: Option<Arc<Vec<f32>>>,
+    /// Max virtual time among arrivals (collectives synchronize clocks).
+    vtime_max: f64,
+    /// Op tag to catch SPMD ordering bugs.
+    op: &'static str,
+}
+
+struct Shared {
+    p: usize,
+    model: NetModel,
+    round: Mutex<Round>,
+    cv: Condvar,
+}
+
+/// A p2p message with the sender's virtual timestamp.
+struct P2pMsg {
+    data: Vec<f32>,
+    sent_vtime: f64,
+    tag: u64,
+}
+
+/// The fabric: create once, take one [`Endpoint`] per rank thread.
+pub struct Fabric {
+    shared: Arc<Shared>,
+    /// `mesh[src][dst]` sender sides.
+    receivers: Vec<Vec<Receiver<P2pMsg>>>,
+    senders: Vec<Vec<Sender<P2pMsg>>>,
+}
+
+impl Fabric {
+    pub fn new(p: usize, preset: NetPreset) -> Fabric {
+        assert!(p >= 1);
+        let mut senders: Vec<Vec<Sender<P2pMsg>>> = (0..p).map(|_| Vec::new()).collect();
+        let mut receivers: Vec<Vec<Receiver<P2pMsg>>> = (0..p).map(|_| Vec::new()).collect();
+        // receivers[dst][src], senders[src][dst]
+        let mut rx_grid: Vec<Vec<Option<Receiver<P2pMsg>>>> =
+            (0..p).map(|_| (0..p).map(|_| None).collect()).collect();
+        for src in 0..p {
+            for dst in 0..p {
+                let (tx, rx) = channel();
+                senders[src].push(tx);
+                rx_grid[dst][src] = Some(rx);
+            }
+        }
+        for dst in 0..p {
+            for src in 0..p {
+                receivers[dst].push(rx_grid[dst][src].take().unwrap());
+            }
+        }
+        Fabric {
+            shared: Arc::new(Shared {
+                p,
+                model: preset.model(),
+                round: Mutex::new(Round {
+                    generation: 0,
+                    arrived: 0,
+                    slots: (0..p).map(|_| None).collect(),
+                    result: None,
+                    vtime_max: 0.0,
+                    op: "",
+                }),
+                cv: Condvar::new(),
+            }),
+            receivers,
+            senders,
+        }
+    }
+
+    /// Split into per-rank endpoints (consumes the fabric).
+    pub fn endpoints(mut self) -> Vec<Endpoint> {
+        let p = self.shared.p;
+        let mut out = Vec::with_capacity(p);
+        for rank in (0..p).rev() {
+            let rx = self.receivers.pop().unwrap();
+            out.push(Endpoint {
+                rank,
+                shared: self.shared.clone(),
+                tx: self.senders.iter().map(|row| row[rank].clone()).collect(),
+                rx_from: rx,
+                pending: HashMap::new(),
+                vtime: 0.0,
+                comm_bytes: 0,
+                collectives: 0,
+            });
+            let _ = rank;
+        }
+        out.reverse();
+        // Fix tx wiring: endpoint r must hold senders[r][*] (to every dst).
+        for (r, ep) in out.iter_mut().enumerate() {
+            ep.tx = self.senders[r].clone();
+        }
+        out
+    }
+}
+
+/// One rank's handle: collectives, p2p, virtual clock, traffic counters.
+pub struct Endpoint {
+    pub rank: usize,
+    shared: Arc<Shared>,
+    /// tx[dst] sends to rank dst.
+    tx: Vec<Sender<P2pMsg>>,
+    /// rx_from[src] receives from rank src.
+    rx_from: Vec<Receiver<P2pMsg>>,
+    /// Out-of-order tag buffer per src.
+    pending: HashMap<(usize, u64), P2pMsg>,
+    /// Virtual clock (seconds on the modelled network).
+    pub vtime: f64,
+    /// Bytes this rank moved through the fabric.
+    pub comm_bytes: u64,
+    /// Number of collective operations.
+    pub collectives: u64,
+}
+
+impl Endpoint {
+    pub fn num_ranks(&self) -> usize {
+        self.shared.p
+    }
+
+    /// Advance this rank's virtual clock by local work `secs` (compute, IO).
+    pub fn advance(&mut self, secs: f64) {
+        self.vtime += secs;
+    }
+
+    /// Generic rendezvous. `contribute` slots this rank's data; `finish`
+    /// (run by the last arrival, under the lock) folds slots into a result.
+    fn rendezvous<F>(&mut self, op: &'static str, data: Vec<f32>, finish: F) -> Arc<Vec<f32>>
+    where
+        F: FnOnce(&mut Vec<Option<Vec<f32>>>) -> Vec<f32>,
+    {
+        let sh = &self.shared;
+        let mut r = sh.round.lock().unwrap();
+        let my_gen = r.generation;
+        debug_assert!(
+            r.arrived == 0 || r.op == op,
+            "SPMD violation: rank {} called {op} while round is {}",
+            self.rank,
+            r.op
+        );
+        r.op = op;
+        r.slots[self.rank] = Some(data);
+        r.vtime_max = r.vtime_max.max(self.vtime);
+        r.arrived += 1;
+        if r.arrived == sh.p {
+            let result = finish(&mut r.slots);
+            r.result = Some(Arc::new(result));
+            r.generation += 1;
+            r.arrived = 0;
+            sh.cv.notify_all();
+        } else {
+            while r.generation == my_gen {
+                r = sh.cv.wait(r).unwrap();
+            }
+        }
+        let out = r.result.clone().expect("rendezvous result");
+        // Collectives synchronize virtual clocks: everyone resumes at the
+        // max arrival time (cost added by the caller).
+        self.vtime = r.vtime_max;
+        out
+    }
+
+    /// Barrier (no data, no cost beyond clock sync).
+    pub fn barrier(&mut self) {
+        let _ = self.rendezvous("barrier", Vec::new(), |_slots| Vec::new());
+    }
+
+    /// Broadcast `buf` from `root`; non-root buffers are overwritten.
+    /// Returns modelled seconds (also applied to the clock).
+    pub fn bcast(&mut self, buf: &mut Vec<f32>, root: usize) -> f64 {
+        let p = self.shared.p;
+        let my = if self.rank == root {
+            std::mem::take(buf)
+        } else {
+            Vec::new()
+        };
+        let result = self.rendezvous("bcast", my, move |slots| {
+            slots[root].take().unwrap_or_default()
+        });
+        *buf = (*result).clone();
+        let total = (buf.len() * 4) as u64;
+        let cost = self.shared.model.cost_bcast(total, p);
+        self.vtime += cost;
+        self.comm_bytes += total;
+        self.collectives += 1;
+        cost
+    }
+
+    /// In-place sum AllReduce. Returns modelled seconds.
+    pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> f64 {
+        let p = self.shared.p;
+        let n = buf.len();
+        let result = self.rendezvous("allreduce", buf.to_vec(), move |slots| {
+            let mut acc = vec![0.0f32; n];
+            for s in slots.iter_mut() {
+                if let Some(v) = s.take() {
+                    for (a, b) in acc.iter_mut().zip(&v) {
+                        *a += *b;
+                    }
+                }
+            }
+            acc
+        });
+        buf.copy_from_slice(&result);
+        let bytes = (n * 4) as u64;
+        let cost = self.shared.model.cost_allreduce(bytes, p);
+        self.vtime += cost;
+        // Ring traffic per rank ≈ 2(p−1)/p · bytes.
+        self.comm_bytes += (2 * (p as u64 - 1) * bytes) / p as u64;
+        self.collectives += 1;
+        cost
+    }
+
+    /// In-place max AllReduce (tiny vectors: per-sample scale factors).
+    pub fn allreduce_max(&mut self, buf: &mut [f32]) -> f64 {
+        let p = self.shared.p;
+        let n = buf.len();
+        let result = self.rendezvous("allreduce_max", buf.to_vec(), move |slots| {
+            let mut acc = vec![f32::NEG_INFINITY; n];
+            for s in slots.iter_mut() {
+                if let Some(v) = s.take() {
+                    for (a, b) in acc.iter_mut().zip(&v) {
+                        *a = a.max(*b);
+                    }
+                }
+            }
+            acc
+        });
+        buf.copy_from_slice(&result);
+        let bytes = (n * 4) as u64;
+        let cost = self.shared.model.cost_allreduce(bytes, p);
+        self.vtime += cost;
+        self.comm_bytes += (2 * (p as u64 - 1) * bytes) / p as u64;
+        self.collectives += 1;
+        cost
+    }
+
+    /// Sum ReduceScatter: `input` has `p` equal chunks; this rank gets the
+    /// reduced chunk `rank` in `out` (`out.len() == input.len()/p`).
+    pub fn reduce_scatter_sum(&mut self, input: &[f32], out: &mut [f32]) -> Result<f64> {
+        let p = self.shared.p;
+        let n = input.len();
+        if n % p != 0 || out.len() != n / p {
+            return Err(Error::Fabric(format!(
+                "reduce_scatter: input {n} not divisible into {p} chunks of {}",
+                out.len()
+            )));
+        }
+        let result = self.rendezvous("reduce_scatter", input.to_vec(), move |slots| {
+            let mut acc = vec![0.0f32; n];
+            for s in slots.iter_mut() {
+                if let Some(v) = s.take() {
+                    for (a, b) in acc.iter_mut().zip(&v) {
+                        *a += *b;
+                    }
+                }
+            }
+            acc
+        });
+        let chunk = n / p;
+        out.copy_from_slice(&result[self.rank * chunk..(self.rank + 1) * chunk]);
+        let bytes = (n * 4) as u64;
+        let cost = self.shared.model.cost_reduce_scatter(bytes, p);
+        self.vtime += cost;
+        self.comm_bytes += ((p as u64 - 1) * bytes) / p as u64;
+        self.collectives += 1;
+        Ok(cost)
+    }
+
+    /// Non-blocking-ish send (buffered channel, like the paper's Isend).
+    pub fn send(&mut self, dst: usize, tag: u64, data: Vec<f32>) -> Result<()> {
+        let bytes = (data.len() * 4) as u64;
+        let cost = self.shared.model.cost_p2p(bytes);
+        let msg = P2pMsg {
+            data,
+            sent_vtime: self.vtime + cost,
+            tag,
+        };
+        self.comm_bytes += bytes;
+        self.tx[dst]
+            .send(msg)
+            .map_err(|_| Error::Fabric(format!("send to dead rank {dst}")))
+    }
+
+    /// Blocking receive of `tag` from `src`; out-of-order tags are buffered.
+    /// The receiver's clock advances to at least the message arrival time.
+    pub fn recv(&mut self, src: usize, tag: u64) -> Result<Vec<f32>> {
+        if let Some(msg) = self.pending.remove(&(src, tag)) {
+            self.vtime = self.vtime.max(msg.sent_vtime);
+            return Ok(msg.data);
+        }
+        loop {
+            let msg = self.rx_from[src]
+                .recv()
+                .map_err(|_| Error::Fabric(format!("recv from dead rank {src}")))?;
+            if msg.tag == tag {
+                self.vtime = self.vtime.max(msg.sent_vtime);
+                return Ok(msg.data);
+            }
+            self.pending.insert((src, msg.tag), msg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_ranks<F>(p: usize, preset: NetPreset, f: F) -> Vec<Endpoint>
+    where
+        F: Fn(&mut Endpoint) + Send + Sync + Copy,
+    {
+        let eps = Fabric::new(p, preset).endpoints();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|mut ep| {
+                    s.spawn(move || {
+                        f(&mut ep);
+                        ep
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn allreduce_sums_across_ranks() {
+        let eps = run_ranks(4, NetPreset::Ideal, |ep| {
+            let mut buf = vec![ep.rank as f32 + 1.0; 8];
+            ep.allreduce_sum(&mut buf);
+            assert!(buf.iter().all(|&x| x == 10.0)); // 1+2+3+4
+        });
+        assert!(eps.iter().all(|e| e.collectives == 1));
+    }
+
+    #[test]
+    fn bcast_delivers_root_data() {
+        run_ranks(3, NetPreset::Ideal, |ep| {
+            let mut buf = if ep.rank == 1 {
+                vec![3.5f32, -1.0, 2.0]
+            } else {
+                vec![0.0; 3]
+            };
+            ep.bcast(&mut buf, 1);
+            assert_eq!(buf, vec![3.5, -1.0, 2.0]);
+        });
+    }
+
+    #[test]
+    fn reduce_scatter_gives_own_chunk() {
+        run_ranks(4, NetPreset::Ideal, |ep| {
+            // input chunk c of rank r = r+c (so reduced chunk c = Σ_r r+c·p...).
+            let input: Vec<f32> = (0..8).map(|i| (ep.rank * 8 + i) as f32).collect();
+            let mut out = vec![0.0f32; 2];
+            ep.reduce_scatter_sum(&input, &mut out).unwrap();
+            // Reduced full vector: Σ_r (8r + i) = 48 + 4i.
+            let want: Vec<f32> = (0..2)
+                .map(|k| 48.0 + 4.0 * (ep.rank * 2 + k) as f32)
+                .collect();
+            assert_eq!(out, want, "rank {}", ep.rank);
+        });
+    }
+
+    #[test]
+    fn reduce_scatter_shape_checked() {
+        run_ranks(2, NetPreset::Ideal, |ep| {
+            let input = vec![0.0f32; 3]; // not divisible by 2
+            let mut out = vec![0.0f32; 1];
+            if ep.rank == 0 {
+                // Only check on one rank to keep SPMD round counts equal:
+                // shape errors are caught before the rendezvous.
+                assert!(ep.reduce_scatter_sum(&input, &mut out).is_err());
+            } else {
+                assert!(ep
+                    .reduce_scatter_sum(&vec![0.0f32; 3], &mut vec![0.0f32; 1])
+                    .is_err());
+            }
+        });
+    }
+
+    #[test]
+    fn p2p_roundtrip_with_tags() {
+        run_ranks(2, NetPreset::Ideal, |ep| {
+            if ep.rank == 0 {
+                ep.send(1, 7, vec![1.0, 2.0]).unwrap();
+                ep.send(1, 8, vec![3.0]).unwrap();
+            } else {
+                // Receive out of order: tag 8 first.
+                let b = ep.recv(0, 8).unwrap();
+                assert_eq!(b, vec![3.0]);
+                let a = ep.recv(0, 7).unwrap();
+                assert_eq!(a, vec![1.0, 2.0]);
+            }
+        });
+    }
+
+    #[test]
+    fn vtime_advances_with_costs() {
+        let eps = run_ranks(4, NetPreset::Pcie4, |ep| {
+            ep.advance(1.0);
+            let mut buf = vec![0.0f32; 1 << 20];
+            ep.allreduce_sum(&mut buf);
+        });
+        let m = NetPreset::Pcie4.model();
+        let want = 1.0 + m.cost_allreduce(4 << 20, 4);
+        for e in &eps {
+            assert!((e.vtime - want).abs() < 1e-9, "vtime {}", e.vtime);
+        }
+    }
+
+    #[test]
+    fn collective_synchronizes_straggler_clock() {
+        let eps = run_ranks(2, NetPreset::Ideal, |ep| {
+            if ep.rank == 0 {
+                ep.advance(5.0);
+            }
+            ep.barrier();
+        });
+        for e in &eps {
+            assert!(e.vtime >= 5.0, "clock must sync to the straggler");
+        }
+    }
+
+    #[test]
+    fn many_rounds_in_sequence() {
+        run_ranks(3, NetPreset::Ideal, |ep| {
+            for round in 0..50 {
+                let mut buf = vec![ep.rank as f32 + round as f32; 4];
+                ep.allreduce_sum(&mut buf);
+                let want = 3.0 * round as f32 + 3.0;
+                assert!(buf.iter().all(|&x| (x - want).abs() < 1e-6));
+            }
+        });
+    }
+
+    #[test]
+    fn single_rank_fabric_works() {
+        run_ranks(1, NetPreset::NvLink3, |ep| {
+            let mut buf = vec![2.0f32; 4];
+            ep.allreduce_sum(&mut buf);
+            assert_eq!(buf, vec![2.0; 4]);
+            ep.barrier();
+        });
+    }
+}

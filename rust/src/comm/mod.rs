@@ -1,0 +1,20 @@
+//! Simulated communication fabric.
+//!
+//! The paper's scaling studies run on MPI over NVLink/Infiniband/Sunway
+//! networks; this testbed has neither MPI nor multiple nodes, so ranks are
+//! **threads** exchanging real data through shared memory while a **cost
+//! model** advances a per-rank *virtual clock* by what each operation would
+//! cost on the modelled network (ring-algorithm α–β costs, with the paper's
+//! measured AllReduce/ReduceScatter bandwidths as presets). Correctness is
+//! real (actual bytes move); performance curves (Figs. 12/13) are read off
+//! the virtual clocks; wall-clock numbers remain available for the
+//! CPU-scaled head-to-head tables.
+//!
+//! SPMD contract: all ranks of a fabric call the same collectives in the
+//! same order (checked with an op-tag assertion in debug builds).
+
+mod collectives;
+mod netmodel;
+
+pub use collectives::{Endpoint, Fabric};
+pub use netmodel::{NetModel, NetPreset};

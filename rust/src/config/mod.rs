@@ -1,0 +1,402 @@
+//! Run configuration and dataset presets.
+//!
+//! Presets mirror the paper's evaluation datasets (Table 1/2/3) in two
+//! flavours: `full` (the paper's actual shapes — used by the analytic
+//! performance models and the fabric simulator) and `scaled` (CPU-testbed
+//! shapes that measure end-to-end on this machine; DESIGN.md
+//! §Substitutions).
+
+use std::path::PathBuf;
+
+use crate::comm::NetPreset;
+use crate::io::{StoreCodec, StorePrecision};
+use crate::mps::gbs::GbsSpec;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Compute precision of the hot loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputePrecision {
+    /// Native f64 (oracle; the "FP64" arm of the ablation).
+    F64,
+    /// f32 (XLA CPU default).
+    F32,
+    /// f32 with TF32-emulated inputs (mantissa truncated to 10 bits before
+    /// every contraction — what tensor cores do).
+    Tf32,
+    /// Experimental FP16 emulation (§3.3.1: "developed only for datasets
+    /// with M < 500"): inputs *and* the collapsed environment are rounded
+    /// through binary16, modelling a ComplexHalf pipeline. The ~10³ valid
+    /// range of f16 significands makes this sensitive to the intra-sample
+    /// spread the paper bounds at ~10⁶ — expect extra rounding error.
+    F16,
+}
+
+impl ComputePrecision {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ComputePrecision::F64 => "f64",
+            ComputePrecision::F32 => "f32",
+            ComputePrecision::Tf32 => "tf32",
+            ComputePrecision::F16 => "f16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f64" => Ok(Self::F64),
+            "f32" => Ok(Self::F32),
+            "tf32" => Ok(Self::Tf32),
+            "f16" => Ok(Self::F16),
+            _ => Err(Error::config(format!("unknown compute precision '{s}'"))),
+        }
+    }
+
+    /// §3.3.1's guard: the experimental FP16 arm is only admissible for
+    /// short chains.
+    pub fn admissible_for(self, m: usize) -> bool {
+        !matches!(self, ComputePrecision::F16) || m < 500
+    }
+}
+
+/// Left-environment rescaling strategy (§3.3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingMode {
+    /// No rescaling (fails early — Fig. 6's collapse).
+    None,
+    /// Global auto-scaling by the batch max (the baseline [19] method).
+    Global,
+    /// FastMPS per-sample adaptive scaling.
+    PerSample,
+}
+
+impl ScalingMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ScalingMode::None => "none",
+            ScalingMode::Global => "global",
+            ScalingMode::PerSample => "per-sample",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(Self::None),
+            "global" => Ok(Self::Global),
+            "per-sample" | "persample" => Ok(Self::PerSample),
+            _ => Err(Error::config(format!("unknown scaling mode '{s}'"))),
+        }
+    }
+}
+
+/// Which engine executes the per-site step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT-compiled XLA artifacts through PJRT (the production hot path).
+    Xla,
+    /// Native rust engine (oracle / precision studies).
+    Native,
+}
+
+impl EngineKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineKind::Xla => "xla",
+            EngineKind::Native => "native",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "xla" => Ok(Self::Xla),
+            "native" => Ok(Self::Native),
+            _ => Err(Error::config(format!("unknown engine '{s}'"))),
+        }
+    }
+}
+
+/// Full run configuration for the coordinators.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub spec: GbsSpec,
+    /// Total samples N.
+    pub n_samples: u64,
+    /// Macro batch size N₁ (per worker per round).
+    pub n1_macro: usize,
+    /// Micro batch size N₂.
+    pub n2_micro: usize,
+    /// Data-parallel groups p₁.
+    pub p1: usize,
+    /// Tensor-parallel ranks per group p₂.
+    pub p2: usize,
+    /// Threads for the native engine's GEMM.
+    pub gemm_threads: usize,
+    pub compute: ComputePrecision,
+    pub store_precision: StorePrecision,
+    pub store_codec: StoreCodec,
+    pub scaling: ScalingMode,
+    pub engine: EngineKind,
+    pub net: NetPreset,
+    /// Double-site (true) vs single-site (false) tensor parallelism.
+    pub double_site: bool,
+    pub data_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    /// Simulated disk bandwidth (B/s); None = real disk speed.
+    pub disk_bw: Option<f64>,
+    /// Store the left environment in FP16 between sites (§3.3.2: halves the
+    /// env memory, doubling N₁). Exposes the Fig. 6 underflow at testbed
+    /// scale: f16's ~7.7 decades of range stand in for f32's 38 over the
+    /// paper's 8176 sites.
+    pub env_f16: bool,
+    /// Virtual compute rate (FLOP/s) used to advance the fabric's virtual
+    /// clock. `None` charges measured wall time (right for head-to-head
+    /// wall benchmarks); `Some(rate)` charges `flops/rate` so scaling
+    /// studies are not polluted by thread oversubscription on the testbed
+    /// (the Figs. 12/13 runs model one device per rank).
+    pub vdevice_flops: Option<f64>,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    /// A small, fast default configuration around `spec`.
+    pub fn new(spec: GbsSpec) -> RunConfig {
+        RunConfig {
+            n_samples: 4096,
+            n1_macro: 1024,
+            n2_micro: 256,
+            p1: 1,
+            p2: 1,
+            gemm_threads: 1,
+            compute: ComputePrecision::F32,
+            store_precision: StorePrecision::F16,
+            store_codec: StoreCodec::Raw,
+            scaling: ScalingMode::PerSample,
+            engine: EngineKind::Native,
+            net: NetPreset::Ideal,
+            double_site: true,
+            data_dir: PathBuf::from("data"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            disk_bw: None,
+            env_f16: false,
+            vdevice_flops: None,
+            seed: spec.seed,
+            spec,
+        }
+    }
+
+    pub fn total_ranks(&self) -> usize {
+        self.p1 * self.p2
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_samples == 0 {
+            return Err(Error::config("n_samples must be > 0"));
+        }
+        if self.n1_macro == 0 || self.n2_micro == 0 {
+            return Err(Error::config("batch sizes must be > 0"));
+        }
+        if self.n2_micro > self.n1_macro {
+            return Err(Error::config(format!(
+                "micro batch N₂={} exceeds macro batch N₁={}",
+                self.n2_micro, self.n1_macro
+            )));
+        }
+        if self.p1 == 0 || self.p2 == 0 {
+            return Err(Error::config("p1/p2 must be ≥ 1"));
+        }
+        if self.spec.m == 0 || self.spec.d < 2 {
+            return Err(Error::config("need M ≥ 1 sites and d ≥ 2"));
+        }
+        if !self.compute.admissible_for(self.spec.m) {
+            return Err(Error::config(format!(
+                "experimental f16 compute requires M < 500 (got M = {}; §3.3.1)",
+                self.spec.m
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.spec.name.clone())),
+            ("m", Json::Num(self.spec.m as f64)),
+            ("d", Json::Num(self.spec.d as f64)),
+            ("chi_cap", Json::Num(self.spec.chi_cap as f64)),
+            ("n_samples", Json::Num(self.n_samples as f64)),
+            ("n1_macro", Json::Num(self.n1_macro as f64)),
+            ("n2_micro", Json::Num(self.n2_micro as f64)),
+            ("p1", Json::Num(self.p1 as f64)),
+            ("p2", Json::Num(self.p2 as f64)),
+            ("compute", Json::Str(self.compute.as_str().into())),
+            (
+                "store_precision",
+                Json::Str(self.store_precision.as_str().into()),
+            ),
+            ("scaling", Json::Str(self.scaling.as_str().into())),
+            ("engine", Json::Str(self.engine.as_str().into())),
+            ("net", Json::Str(self.net.name().into())),
+            ("double_site", Json::Bool(self.double_site)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+/// Paper datasets (Table 1). `scale` shrinks (M, χ) to CPU-testbed size
+/// while keeping ASP (and hence the dynamic-χ profile shape) intact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    Jiuzhang2,
+    Jiuzhang3H,
+    BorealisM216H,
+    BorealisM288,
+    M8176,
+}
+
+pub const ALL_PRESETS: [Preset; 5] = [
+    Preset::Jiuzhang2,
+    Preset::Jiuzhang3H,
+    Preset::BorealisM216H,
+    Preset::BorealisM288,
+    Preset::M8176,
+];
+
+impl Preset {
+    pub fn parse(s: &str) -> Result<Preset> {
+        match s {
+            "jiuzhang2" => Ok(Preset::Jiuzhang2),
+            "jiuzhang3h" => Ok(Preset::Jiuzhang3H),
+            "bm216h" => Ok(Preset::BorealisM216H),
+            "bm288" => Ok(Preset::BorealisM288),
+            "m8176" => Ok(Preset::M8176),
+            _ => Err(Error::config(format!(
+                "unknown preset '{s}' (jiuzhang2|jiuzhang3h|bm216h|bm288|m8176)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Preset::Jiuzhang2 => "jiuzhang2",
+            Preset::Jiuzhang3H => "jiuzhang3h",
+            Preset::BorealisM216H => "bm216h",
+            Preset::BorealisM288 => "bm288",
+            Preset::M8176 => "m8176",
+        }
+    }
+
+    /// `(M, ASP, Table-1 measured step ratio)` at paper scale.
+    fn paper_params(self) -> (usize, f64, f64) {
+        match self {
+            Preset::Jiuzhang2 => (144, 1.62, 0.0),
+            Preset::Jiuzhang3H => (144, 3.56, 0.4792),
+            Preset::BorealisM216H => (216, 6.54, 0.5879),
+            Preset::BorealisM288 => (288, 10.69, 0.7951),
+            Preset::M8176 => (8176, 8.82, 0.7429),
+        }
+    }
+
+    /// The paper-scale spec (χ = 10⁴, d = 4) — for analytic models only.
+    pub fn full_spec(self, seed: u64) -> GbsSpec {
+        let (m, asp, step) = self.paper_params();
+        GbsSpec {
+            name: format!("{}-full", self.name()),
+            m,
+            d: 4,
+            chi_cap: 10_000,
+            asp,
+            // Eq. 5 decay tuned so f32 underflows near site ~3000 of the
+            // M8176 run (Fig. 6): 10^-38 ≈ 10^{-k·3000} ⇒ k ≈ 0.0127.
+            decay_k: 38.0 / 3000.0,
+            displacement_sigma: 0.3,
+            branch_skew: 0.0,
+            seed,
+            dynamic_chi: true,
+            step_ratio_override: Some(step),
+        }
+    }
+
+    /// CPU-testbed spec: same ASP/profile, shrunk M and χ.
+    pub fn scaled_spec(self, seed: u64) -> GbsSpec {
+        let (m_full, asp, step) = self.paper_params();
+        let m = (m_full / 4).clamp(24, 512);
+        GbsSpec {
+            name: format!("{}-scaled", self.name()),
+            m,
+            d: 3,
+            chi_cap: 96,
+            asp,
+            // Keep the same *total* decay across the chain as the full run
+            // so the precision experiments see the same dynamic range.
+            decay_k: (38.0 / 3000.0) * (m_full as f64 / m as f64).min(8.0),
+            displacement_sigma: 0.3,
+            branch_skew: 0.0,
+            seed,
+            dynamic_chi: true,
+            step_ratio_override: Some(step),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_roundtrip() {
+        for p in ALL_PRESETS {
+            assert_eq!(Preset::parse(p.name()).unwrap(), p);
+        }
+        assert!(Preset::parse("nope").is_err());
+    }
+
+    #[test]
+    fn full_specs_match_paper_shapes() {
+        let s = Preset::BorealisM288.full_spec(1);
+        assert_eq!(s.m, 288);
+        assert_eq!(s.chi_cap, 10_000);
+        assert!((s.asp - 10.69).abs() < 1e-9);
+        let m = Preset::M8176.full_spec(1);
+        assert_eq!(m.m, 8176);
+    }
+
+    #[test]
+    fn scaled_specs_are_testbed_sized() {
+        for p in ALL_PRESETS {
+            let s = p.scaled_spec(3);
+            assert!(s.m <= 512 && s.m >= 24, "{}: M={}", s.name, s.m);
+            assert!(s.chi_cap <= 128);
+            // Generating the scaled chain must be feasible.
+            assert!(s.m * s.chi_cap * s.chi_cap * s.d < 50_000_000);
+        }
+    }
+
+    #[test]
+    fn run_config_validation() {
+        let spec = Preset::Jiuzhang2.scaled_spec(1);
+        let mut cfg = RunConfig::new(spec);
+        cfg.validate().unwrap();
+        cfg.n2_micro = cfg.n1_macro + 1;
+        assert!(cfg.validate().is_err());
+        cfg.n2_micro = 64;
+        cfg.p1 = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn enums_parse() {
+        assert_eq!(ComputePrecision::parse("tf32").unwrap(), ComputePrecision::Tf32);
+        assert_eq!(ScalingMode::parse("per-sample").unwrap(), ScalingMode::PerSample);
+        assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::Xla);
+        assert!(ComputePrecision::parse("q8").is_err());
+        assert!(ScalingMode::parse("?").is_err());
+        assert!(EngineKind::parse("?").is_err());
+    }
+
+    #[test]
+    fn config_json_has_key_fields() {
+        let cfg = RunConfig::new(Preset::M8176.scaled_spec(1));
+        let j = cfg.to_json();
+        assert!(j.get("n_samples").is_some());
+        assert_eq!(j.get("engine").unwrap().as_str(), Some("native"));
+    }
+}

@@ -1,0 +1,379 @@
+//! The revived data-parallel sampler (Fig. 3, Eq. 2) — FastMPS's main
+//! scheme.
+//!
+//! `p₁` worker ranks each own independent macro batches. Per round, every
+//! rank walks its macro batch through all `M` sites; rank 0 streams `Γ_i`
+//! from the store through the double-buffered [`Prefetcher`] and broadcasts
+//! it (FP16-packed when the store precision is f16 — §3.3.2 halves the
+//! broadcast bytes). There is no pipeline fill and no per-site point-to-
+//! point traffic — the two structural costs of the model-parallel baseline
+//! that Eq. 2 deletes.
+
+use std::sync::Arc;
+
+use crate::comm::Fabric;
+use crate::config::RunConfig;
+use crate::coordinator::scheduler::BatchPlan;
+use crate::coordinator::{env_probe, env_rows, env_store_rows, EngineBox, RunReport};
+use crate::io::{DiskModel, GammaStore, Prefetcher, StorePrecision};
+use crate::metrics::{keys, Metrics};
+use crate::mps::Site;
+use crate::sampler::sink::SampleSink;
+use crate::sampler::{boundary_env, StepEngine};
+use crate::tensor::{SplitBuf, Tensor3};
+use crate::util::error::{Error, Result};
+use crate::util::f16;
+
+/// Serialize a site for broadcast: header [χ_l, χ_r, d, prec] + payload.
+/// FP16 stores pack two scalars per f32 word — the broadcast really moves
+/// half the bytes.
+fn pack_site(site: &Site, precision: StorePrecision) -> Vec<f32> {
+    let g = &site.gamma;
+    let n = g.len();
+    let mut out = Vec::with_capacity(4 + n);
+    out.push(g.d0 as f32);
+    out.push(g.d1 as f32);
+    out.push(g.d2 as f32);
+    match precision {
+        StorePrecision::F16 => {
+            out.push(16.0);
+            let mut halves: Vec<u8> = Vec::with_capacity(n * 4);
+            for z in &g.data {
+                halves.extend_from_slice(&f16::f32_to_f16_bits(z.re as f32).to_le_bytes());
+                halves.extend_from_slice(&f16::f32_to_f16_bits(z.im as f32).to_le_bytes());
+            }
+            while halves.len() % 4 != 0 {
+                halves.push(0);
+            }
+            for w in halves.chunks_exact(4) {
+                out.push(f32::from_bits(u32::from_le_bytes([w[0], w[1], w[2], w[3]])));
+            }
+        }
+        _ => {
+            out.push(32.0);
+            for z in &g.data {
+                out.push(z.re as f32);
+                out.push(z.im as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_site`]; Λ is reconstructed as all-ones.
+fn unpack_site(buf: &[f32]) -> Result<Site> {
+    if buf.len() < 4 {
+        return Err(Error::format("packed site too short"));
+    }
+    let (x, y, d) = (buf[0] as usize, buf[1] as usize, buf[2] as usize);
+    let prec = buf[3] as usize;
+    let n = x * y * d;
+    let mut gamma = Tensor3::zeros(x, y, d);
+    match prec {
+        16 => {
+            let words = &buf[4..];
+            let mut scalars: Vec<f32> = Vec::with_capacity(n * 2);
+            for w in words {
+                let b = w.to_bits().to_le_bytes();
+                scalars.push(f16::f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])));
+                scalars.push(f16::f16_bits_to_f32(u16::from_le_bytes([b[2], b[3]])));
+            }
+            if scalars.len() < n * 2 {
+                return Err(Error::format("packed f16 site truncated"));
+            }
+            for (i, z) in gamma.data.iter_mut().enumerate() {
+                *z = crate::tensor::C64::new(scalars[2 * i] as f64, scalars[2 * i + 1] as f64);
+            }
+        }
+        32 => {
+            let words = &buf[4..];
+            if words.len() < n * 2 {
+                return Err(Error::format("packed f32 site truncated"));
+            }
+            for (i, z) in gamma.data.iter_mut().enumerate() {
+                *z = crate::tensor::C64::new(words[2 * i] as f64, words[2 * i + 1] as f64);
+            }
+        }
+        p => return Err(Error::format(format!("bad packed precision {p}"))),
+    }
+    Ok(Site {
+        lambda: vec![1.0; y],
+        gamma,
+    })
+}
+
+/// Run the data-parallel sampler. `probe_sites` collects Fig. 5 env
+/// statistics (from rank 0's first macro batch).
+pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>, probe_sites: &[usize]) -> Result<RunReport> {
+    cfg.validate()?;
+    let p1 = cfg.p1;
+    let plan = BatchPlan::build(cfg.n_samples, p1, cfg.n1_macro, cfg.n2_micro)?;
+    let m = store.spec.m;
+    let spec = store.spec.clone();
+    let displaced = spec.displacement_sigma != 0.0;
+    let disk = match cfg.disk_bw {
+        Some(bw) => DiskModel::throttled(bw, false),
+        None => DiskModel::unlimited(),
+    };
+
+    let endpoints = Fabric::new(p1, cfg.net).endpoints();
+    let wall0 = std::time::Instant::now();
+
+    let results: Vec<Result<(Metrics, SampleSink, f64, u64, Vec<(usize, Vec<(f64, f64)>)>)>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    let plan = plan.clone();
+                    let store = store.clone();
+                    let spec = spec.clone();
+                    let disk = disk.clone();
+                    let probe_sites = probe_sites.to_vec();
+                    scope.spawn(move || {
+                        let rank = ep.rank;
+                        let mut engine = EngineBox::build(cfg)?;
+                        let mut metrics = Metrics::new();
+                        let mut sink = SampleSink::new(m, spec.d, 4);
+                        let mut probes: Vec<(usize, Vec<(f64, f64)>)> = Vec::new();
+
+                        // Rank 0 owns the store stream: one walk per round.
+                        let mut prefetcher = if rank == 0 {
+                            let order: Vec<usize> =
+                                (0..plan.rounds).flat_map(|_| 0..m).collect();
+                            Some(Prefetcher::new(store.clone(), disk.clone(), order, 2))
+                        } else {
+                            None
+                        };
+
+                        for round in 0..plan.rounds {
+                            let batch = plan.at(rank, round);
+                            let mut env = batch.map(|b| boundary_env(b.len));
+                            if let Some(b) = &batch {
+                                metrics.add(keys::MACRO_BATCHES, 1);
+                                sink.reset_walk();
+                                let _ = b;
+                            }
+                            for site_idx in 0..m {
+                                // ---- Γ distribution (rank 0 reads, all bcast).
+                                let mut packed: Vec<f32> = if let Some(pf) = &mut prefetcher {
+                                    let (i, site) = pf
+                                        .next_site()
+                                        .ok_or_else(|| Error::other("prefetch ended early"))??;
+                                    debug_assert_eq!(i, site_idx);
+                                    metrics.add(keys::IO_OPS, 1);
+                                    metrics.add(keys::IO_BYTES, store.site_bytes(i));
+                                    ep.advance(0.0);
+                                    pack_site(&site, cfg.store_precision)
+                                } else {
+                                    Vec::new()
+                                };
+                                let t_bcast = std::time::Instant::now();
+                                ep.bcast(&mut packed, 0);
+                                metrics.add_phase("bcast", t_bcast.elapsed().as_secs_f64());
+                                let site = unpack_site(&packed)?;
+
+                                // ---- local macro batch step (micro-batched).
+                                if let (Some(b), Some(env_buf)) = (&batch, &mut env) {
+                                    let chi_r = site.gamma.d1;
+                                    let mut next =
+                                        SplitBuf::zeros(&[b.len, chi_r]);
+                                    let mut site_samples: Vec<i32> =
+                                        Vec::with_capacity(b.len);
+                                    for (a, z) in plan.micro_ranges(b.len) {
+                                        let mut chunk = env_rows(env_buf, a, z);
+                                        let th = spec.thresholds(
+                                            site_idx,
+                                            b.sample0 + a as u64,
+                                            z - a,
+                                        );
+                                        let mus = displaced.then(|| {
+                                            spec.displacement_draws(
+                                                site_idx,
+                                                b.sample0 + a as u64,
+                                                z - a,
+                                            )
+                                        });
+                                        let mut s = Vec::new();
+                                        let t0 = std::time::Instant::now();
+                                        engine.step(
+                                            &mut chunk,
+                                            &site,
+                                            &th,
+                                            mus.as_deref(),
+                                            &mut s,
+                                        )?;
+                                        let dt = t0.elapsed().as_secs_f64();
+                                        metrics.add_phase("compute", dt);
+                                        let flops = crate::perfmodel::site_flops(
+                                            (z - a) as u64,
+                                            site.gamma.d0 as u64,
+                                            site.gamma.d1 as u64,
+                                            site.gamma.d2 as u64,
+                                        );
+                                        ep.advance(match cfg.vdevice_flops {
+                                            Some(r) => flops as f64 / r,
+                                            None => dt,
+                                        });
+                                        metrics.add(keys::MICRO_BATCHES, 1);
+                                        if cfg.env_f16 {
+                                            // §3.3.2: FP16 left-env storage.
+                                            chunk.round_f16_in_place();
+                                        }
+                                        env_store_rows(&mut next, a, &chunk);
+                                        site_samples.extend_from_slice(&s);
+                                    }
+                                    sink.record(site_idx, &site_samples);
+                                    if rank == 0
+                                        && round == 0
+                                        && probe_sites.contains(&site_idx)
+                                    {
+                                        probes.push((site_idx, env_probe(&next)));
+                                    }
+                                    *env_buf = next;
+                                }
+                            }
+                            if let Some(b) = &batch {
+                                metrics.add(keys::SAMPLES, b.len as u64);
+                            }
+                        }
+                        if let Some(pf) = prefetcher.take() {
+                            metrics.add_phase("io_virtual", pf.io_secs);
+                            metrics.add_phase("io_stall", pf.stall_secs);
+                            pf.finish()?;
+                        }
+                        metrics.add(keys::SITES, m as u64);
+                        metrics.add(keys::COMM_BYTES, ep.comm_bytes);
+                        metrics.add(keys::COLLECTIVES, ep.collectives);
+                        metrics.merge(engine.metrics());
+                        Ok((metrics, sink, ep.vtime, engine.dead_rows(), probes))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+    let wall = wall0.elapsed().as_secs_f64();
+    let mut metrics = Metrics::new();
+    let mut sink = SampleSink::new(m, spec.d, 4);
+    let mut vtime: f64 = 0.0;
+    let mut dead_rows = 0u64;
+    let mut env_probes = Vec::new();
+    for r in results {
+        let (wm, ws, wv, wd, wp) = r?;
+        metrics.merge(&wm);
+        sink.merge(&ws);
+        vtime = vtime.max(wv);
+        dead_rows += wd;
+        env_probes.extend(wp);
+    }
+    Ok(RunReport {
+        metrics,
+        sink,
+        vtime,
+        wall,
+        dead_rows,
+        env_probes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+    use crate::io::StoreCodec;
+
+    fn test_store(tag: &str, m: usize, decay: f64) -> (Arc<GammaStore>, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("fastmps-dp-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = Preset::Jiuzhang2.scaled_spec(11);
+        spec.m = m;
+        spec.chi_cap = 12;
+        spec.decay_k = decay;
+        spec.displacement_sigma = 0.0;
+        let store = Arc::new(
+            GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap(),
+        );
+        (store, dir)
+    }
+
+    fn cfg_for(store: &GammaStore, p1: usize, n: u64) -> RunConfig {
+        let mut cfg = RunConfig::new(store.spec.clone());
+        cfg.n_samples = n;
+        cfg.n1_macro = 64;
+        cfg.n2_micro = 32;
+        cfg.p1 = p1;
+        cfg.engine = EngineKind::Native;
+        cfg.compute = ComputePrecision::F64;
+        cfg.scaling = ScalingMode::PerSample;
+        cfg
+    }
+
+    #[test]
+    fn single_worker_samples_everything() {
+        let (store, dir) = test_store("single", 8, 0.0);
+        let cfg = cfg_for(&store, 1, 200);
+        let rep = run(&cfg, &store, &[]).unwrap();
+        assert_eq!(rep.sink.total_samples(), 200);
+        assert_eq!(rep.sink.counts, vec![200; 8]);
+        assert_eq!(rep.dead_rows, 0);
+        assert!(rep.metrics.get(keys::FLOPS) > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn worker_count_does_not_change_statistics() {
+        // Partition-invariant RNG streams ⇒ identical histograms for any p1.
+        let (store, dir) = test_store("invariant", 6, 0.0);
+        let r1 = run(&cfg_for(&store, 1, 256), &store, &[]).unwrap();
+        let r3 = run(&cfg_for(&store, 3, 256), &store, &[]).unwrap();
+        assert_eq!(r1.sink.hist, r3.sink.hist);
+        assert_eq!(r1.sink.pair_sums, r3.sink.pair_sums);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn uneven_tail_batch_handled() {
+        let (store, dir) = test_store("tail", 5, 0.0);
+        let cfg = cfg_for(&store, 2, 150); // 3 batches of 64/64/22 over 2 workers
+        let rep = run(&cfg, &store, &[]).unwrap();
+        assert_eq!(rep.sink.total_samples(), 150);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn f16_broadcast_path_works() {
+        let (store, dir) = test_store("f16", 5, 0.0);
+        let mut cfg = cfg_for(&store, 2, 128);
+        cfg.store_precision = StorePrecision::F16;
+        let rep = run(&cfg, &store, &[]).unwrap();
+        assert_eq!(rep.sink.total_samples(), 128);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn probes_collected_at_requested_sites() {
+        let (store, dir) = test_store("probe", 8, 0.3);
+        let cfg = cfg_for(&store, 1, 64);
+        let rep = run(&cfg, &store, &[2, 5]).unwrap();
+        let sites: Vec<usize> = rep.env_probes.iter().map(|(s, _)| *s).collect();
+        assert_eq!(sites, vec![2, 5]);
+        assert_eq!(rep.env_probes[0].1.len(), 64);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut spec = Preset::Jiuzhang2.scaled_spec(3);
+        spec.m = 4;
+        spec.chi_cap = 6;
+        let mps = spec.generate().unwrap();
+        for prec in [StorePrecision::F32, StorePrecision::F16] {
+            let buf = pack_site(&mps.sites[1], prec);
+            let back = unpack_site(&buf).unwrap();
+            assert_eq!(back.gamma.d0, mps.sites[1].gamma.d0);
+            for (a, b) in back.gamma.data.iter().zip(&mps.sites[1].gamma.data) {
+                assert!((a.re - b.re).abs() < 2e-3, "{} vs {}", a.re, b.re);
+            }
+        }
+    }
+}

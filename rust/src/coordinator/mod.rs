@@ -1,0 +1,177 @@
+//! The FastMPS coordinators — the paper's system contribution (L3).
+//!
+//! - [`data_parallel`]: Fig. 3 — the revived data-parallel scheme: p₁
+//!   workers each walk their own macro batches through all M sites while
+//!   rank 0 streams + broadcasts Γ with double-buffered overlap (Eq. 2).
+//! - [`model_parallel`]: Fig. 2 — the baseline of [19]: one rank per site,
+//!   macro-batch pipeline with non-blocking sends (Eq. 1). Implemented as
+//!   the comparator for Tables 2/3.
+//! - [`tensor_parallel`]: Fig. 4 — χ-axis tensor parallelism inside a
+//!   group: split-K GEMM with AllReduce (double-site) or ReduceScatter
+//!   (single-site) collectives (Eqs. 4/7).
+//! - [`scheduler`]: macro/micro batch planning under the Eq. 3 memory
+//!   model.
+
+pub mod data_parallel;
+pub mod model_parallel;
+pub mod scheduler;
+pub mod tensor_parallel;
+
+use crate::config::{EngineKind, RunConfig};
+use crate::metrics::Metrics;
+use crate::mps::Site;
+use crate::sampler::native::NativeEngine;
+use crate::sampler::sink::SampleSink;
+use crate::sampler::StepEngine;
+use crate::tensor::SplitBuf;
+use crate::util::error::Result;
+
+/// Engine dispatch (constructed per worker thread; the XLA client is not
+/// Send).
+pub enum EngineBox {
+    Native(NativeEngine),
+    Xla(Box<crate::runtime::XlaEngine>),
+}
+
+impl EngineBox {
+    pub fn build(cfg: &RunConfig) -> Result<EngineBox> {
+        match cfg.engine {
+            EngineKind::Native => Ok(EngineBox::Native(NativeEngine::new(
+                cfg.compute,
+                cfg.scaling,
+                cfg.gemm_threads,
+            ))),
+            EngineKind::Xla => {
+                let mut e = crate::runtime::XlaEngine::new(&cfg.artifacts_dir)?;
+                e.prefer_tf32 = cfg.compute == crate::config::ComputePrecision::Tf32;
+                Ok(EngineBox::Xla(Box::new(e)))
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        match self {
+            EngineBox::Native(e) => &e.metrics,
+            EngineBox::Xla(e) => &e.metrics,
+        }
+    }
+
+    pub fn dead_rows(&self) -> u64 {
+        match self {
+            EngineBox::Native(e) => e.dead_rows,
+            EngineBox::Xla(_) => 0,
+        }
+    }
+}
+
+impl StepEngine for EngineBox {
+    fn step(
+        &mut self,
+        env: &mut SplitBuf,
+        site: &Site,
+        thresholds: &[f32],
+        displacements: Option<&[(f64, f64)]>,
+        samples: &mut Vec<i32>,
+    ) -> Result<()> {
+        match self {
+            EngineBox::Native(e) => e.step(env, site, thresholds, displacements, samples),
+            EngineBox::Xla(e) => e.step(env, site, thresholds, displacements, samples),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            EngineBox::Native(_) => "native",
+            EngineBox::Xla(_) => "xla",
+        }
+    }
+}
+
+/// Result of a coordinated sampling run.
+pub struct RunReport {
+    pub metrics: Metrics,
+    pub sink: SampleSink,
+    /// Max virtual (modelled-network) seconds across ranks.
+    pub vtime: f64,
+    /// Wall seconds of the whole run.
+    pub wall: f64,
+    /// Underflow-collapsed rows observed (native engines only).
+    pub dead_rows: u64,
+    /// (site, per-sample (max, max/min)) probes for Fig. 5.
+    pub env_probes: Vec<(usize, Vec<(f64, f64)>)>,
+}
+
+/// Extract a row range [a, b) of a (n, c) SplitBuf.
+pub(crate) fn env_rows(env: &SplitBuf, a: usize, b: usize) -> SplitBuf {
+    let c = env.shape[1];
+    SplitBuf {
+        shape: vec![b - a, c],
+        re: env.re[a * c..b * c].to_vec(),
+        im: env.im[a * c..b * c].to_vec(),
+    }
+}
+
+/// Write back a row range (possibly with a new column count).
+pub(crate) fn env_store_rows(dst: &mut SplitBuf, a: usize, rows: &SplitBuf) {
+    let c = rows.shape[1];
+    debug_assert_eq!(dst.shape[1], c);
+    let n = rows.shape[0];
+    dst.re[a * c..(a + n) * c].copy_from_slice(&rows.re);
+    dst.im[a * c..(a + n) * c].copy_from_slice(&rows.im);
+}
+
+/// Per-sample (max, max/min) magnitudes of a SplitBuf env — Fig. 5 probes.
+pub(crate) fn env_probe(env: &SplitBuf) -> Vec<(f64, f64)> {
+    let (n, c) = (env.shape[0], env.shape[1]);
+    let mut out = Vec::with_capacity(n);
+    for r in 0..n {
+        let mut maxv = 0.0f64;
+        let mut minv = f64::INFINITY;
+        for i in r * c..(r + 1) * c {
+            let a = ((env.re[i] as f64).powi(2) + (env.im[i] as f64).powi(2)).sqrt();
+            if a > maxv {
+                maxv = a;
+            }
+            if a > 0.0 && a < minv {
+                minv = a;
+            }
+        }
+        let ratio = if minv.is_finite() && minv > 0.0 {
+            maxv / minv
+        } else {
+            f64::INFINITY
+        };
+        out.push((maxv, ratio));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_row_roundtrip() {
+        let mut e = SplitBuf::zeros(&[4, 3]);
+        for (i, v) in e.re.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let rows = env_rows(&e, 1, 3);
+        assert_eq!(rows.shape, vec![2, 3]);
+        assert_eq!(rows.re[0], 3.0);
+        let mut dst = SplitBuf::zeros(&[4, 3]);
+        env_store_rows(&mut dst, 1, &rows);
+        assert_eq!(dst.re[3], 3.0);
+        assert_eq!(dst.re[0], 0.0);
+    }
+
+    #[test]
+    fn probe_reports_ranges() {
+        let mut e = SplitBuf::zeros(&[1, 2]);
+        e.re[0] = 2.0;
+        e.im[1] = 0.5;
+        let p = env_probe(&e);
+        assert!((p[0].0 - 2.0).abs() < 1e-9);
+        assert!((p[0].1 - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,244 @@
+//! The model-parallel baseline of Oh et al. [19] (Fig. 2, Eq. 1) —
+//! implemented as the comparator for Tables 2/3 and the §2.2 critique.
+//!
+//! One rank per site, each holding exactly one Γ (loaded once at startup —
+//! which is where the disk-contention spike lives: all M ranks read
+//! concurrently). Macro batches flow down the chain: rank `i` receives the
+//! left environment of batch `b` from rank `i−1`, contracts + measures its
+//! site, and forwards (non-blocking) while starting the next batch. The
+//! pipeline-fill cost — the last rank idles for `M−1` steps — and the
+//! `O(N·M·χ)` point-to-point traffic are both structural; this
+//! implementation reproduces them faithfully (including the baseline's
+//! FP64 compute and *global* auto-scaling).
+
+use std::sync::Arc;
+
+use crate::comm::Fabric;
+use crate::config::RunConfig;
+use crate::coordinator::scheduler::BatchPlan;
+use crate::coordinator::{EngineBox, RunReport};
+use crate::io::{DiskModel, GammaStore};
+use crate::metrics::{keys, Metrics};
+use crate::sampler::sink::SampleSink;
+use crate::sampler::{boundary_env, StepEngine};
+use crate::tensor::SplitBuf;
+use crate::util::error::{Error, Result};
+
+/// Serialize an env for the pipeline: [rows, cols, re.., im..].
+fn pack_env(env: &SplitBuf) -> Vec<f32> {
+    let mut out = Vec::with_capacity(2 + env.re.len() * 2);
+    out.push(env.shape[0] as f32);
+    out.push(env.shape[1] as f32);
+    out.extend_from_slice(&env.re);
+    out.extend_from_slice(&env.im);
+    out
+}
+
+fn unpack_env(buf: &[f32]) -> Result<SplitBuf> {
+    if buf.len() < 2 {
+        return Err(Error::format("packed env too short"));
+    }
+    let (n, c) = (buf[0] as usize, buf[1] as usize);
+    if buf.len() != 2 + 2 * n * c {
+        return Err(Error::format("packed env size mismatch"));
+    }
+    Ok(SplitBuf {
+        shape: vec![n, c],
+        re: buf[2..2 + n * c].to_vec(),
+        im: buf[2 + n * c..].to_vec(),
+    })
+}
+
+/// Run the baseline: `p = M` ranks, macro-batch pipeline.
+pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>) -> Result<RunReport> {
+    cfg.validate()?;
+    let m = store.spec.m;
+    let spec = store.spec.clone();
+    let displaced = spec.displacement_sigma != 0.0;
+    let plan = BatchPlan::build(cfg.n_samples, 1, cfg.n1_macro, cfg.n2_micro)?;
+    let batches = plan.for_worker(0);
+    let disk = match cfg.disk_bw {
+        Some(bw) => DiskModel::throttled(bw, false),
+        None => DiskModel::unlimited(),
+    };
+
+    let endpoints = Fabric::new(m, cfg.net).endpoints();
+    let wall0 = std::time::Instant::now();
+
+    let results: Vec<Result<(Metrics, SampleSink, f64, u64)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|mut ep| {
+                let store = store.clone();
+                let spec = spec.clone();
+                let disk = disk.clone();
+                let batches = batches.clone();
+                scope.spawn(move || {
+                    let rank = ep.rank; // rank == site index
+                    let mut engine = EngineBox::build(cfg)?;
+                    let mut metrics = Metrics::new();
+                    let mut sink = SampleSink::new(m, spec.d, 0);
+
+                    // Startup: every rank reads its own Γ concurrently —
+                    // the Fig. 2 "disk contention may occur" moment.
+                    let t0 = std::time::Instant::now();
+                    let io_secs = disk.charge(store.site_bytes(rank));
+                    let site = store.load_site(rank)?;
+                    metrics.add_phase("startup_io", t0.elapsed().as_secs_f64() + io_secs);
+                    metrics.add(keys::IO_BYTES, store.site_bytes(rank));
+                    metrics.add(keys::IO_OPS, 1);
+                    ep.advance(io_secs);
+
+                    for (b_idx, b) in batches.iter().enumerate() {
+                        // Receive env of batch b from the predecessor.
+                        let mut env = if rank == 0 {
+                            boundary_env(b.len)
+                        } else {
+                            let t = std::time::Instant::now();
+                            let buf = ep.recv(rank - 1, b_idx as u64)?;
+                            metrics.add_phase("pipe_recv", t.elapsed().as_secs_f64());
+                            unpack_env(&buf)?
+                        };
+
+                        let th = spec.thresholds(rank, b.sample0, b.len);
+                        let mus = displaced
+                            .then(|| spec.displacement_draws(rank, b.sample0, b.len));
+                        let mut samples = Vec::new();
+                        let t0 = std::time::Instant::now();
+                        engine.step(&mut env, &site, &th, mus.as_deref(), &mut samples)?;
+                        let dt = t0.elapsed().as_secs_f64();
+                        metrics.add_phase("compute", dt);
+                        let flops = crate::perfmodel::site_flops(
+                            b.len as u64,
+                            site.gamma.d0 as u64,
+                            site.gamma.d1 as u64,
+                            site.gamma.d2 as u64,
+                        );
+                        ep.advance(match cfg.vdevice_flops {
+                            Some(r) => flops as f64 / r,
+                            None => dt,
+                        });
+                        sink.record(rank, &samples);
+                        metrics.add(keys::MACRO_BATCHES, 1);
+
+                        if rank + 1 < m {
+                            ep.send(rank + 1, b_idx as u64, pack_env(&env))?;
+                        } else {
+                            metrics.add(keys::SAMPLES, b.len as u64);
+                        }
+                    }
+                    metrics.add(keys::COMM_BYTES, ep.comm_bytes);
+                    metrics.merge(engine.metrics());
+                    Ok((metrics, sink, ep.vtime, engine.dead_rows()))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let wall = wall0.elapsed().as_secs_f64();
+    let mut metrics = Metrics::new();
+    let mut sink = SampleSink::new(m, spec.d, 0);
+    let mut vtime: f64 = 0.0;
+    let mut dead_rows = 0;
+    for r in results {
+        let (wm, ws, wv, wd) = r?;
+        metrics.merge(&wm);
+        sink.merge(&ws);
+        vtime = vtime.max(wv);
+        dead_rows += wd;
+    }
+    // Every site recorded every sample once.
+    Ok(RunReport {
+        metrics,
+        sink,
+        vtime,
+        wall,
+        dead_rows,
+        env_probes: Vec::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+    use crate::io::{StoreCodec, StorePrecision};
+
+    fn test_store(tag: &str, m: usize) -> (Arc<GammaStore>, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("fastmps-mp-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = Preset::Jiuzhang2.scaled_spec(11);
+        spec.m = m;
+        spec.chi_cap = 10;
+        spec.decay_k = 0.0;
+        spec.displacement_sigma = 0.0;
+        let store = Arc::new(
+            GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap(),
+        );
+        (store, dir)
+    }
+
+    fn baseline_cfg(store: &GammaStore, n: u64) -> RunConfig {
+        let mut cfg = RunConfig::new(store.spec.clone());
+        cfg.n_samples = n;
+        cfg.n1_macro = 32;
+        cfg.n2_micro = 32;
+        cfg.engine = EngineKind::Native;
+        cfg.compute = ComputePrecision::F64; // the baseline runs FP64
+        cfg.scaling = ScalingMode::Global; // ... with global auto-scaling
+        cfg
+    }
+
+    #[test]
+    fn pipeline_produces_all_samples() {
+        let (store, dir) = test_store("pipe", 6);
+        let rep = run(&baseline_cfg(&store, 96), &store).unwrap();
+        assert_eq!(rep.sink.counts, vec![96; 6]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn matches_data_parallel_statistics() {
+        // Same seeds ⇒ the baseline and FastMPS sample identical outcomes
+        // (the paper's "strictly consistent sampling results").
+        let (store, dir) = test_store("vs-dp", 5);
+        let mp = run(&baseline_cfg(&store, 64), &store).unwrap();
+        let mut dp_cfg = baseline_cfg(&store, 64);
+        dp_cfg.p1 = 2;
+        dp_cfg.scaling = ScalingMode::PerSample;
+        let dp = crate::coordinator::data_parallel::run(&dp_cfg, &store, &[]).unwrap();
+        assert_eq!(mp.sink.hist, dp.sink.hist);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn vtime_includes_pipeline_fill() {
+        // With a single macro batch the pipeline is pure fill: the last
+        // rank's virtual time contains M-1 hops.
+        let (store, dir) = test_store("fill", 8);
+        let mut cfg = baseline_cfg(&store, 32);
+        cfg.net = crate::comm::NetPreset::Pcie4;
+        let rep = run(&cfg, &store).unwrap();
+        let m = crate::comm::NetPreset::Pcie4.model();
+        let per_hop = m.cost_p2p((2 + 2 * 32 * 10) as u64 * 4);
+        assert!(
+            rep.vtime >= per_hop * 7.0,
+            "vtime {} < fill {}",
+            rep.vtime,
+            per_hop * 7.0
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn env_pack_roundtrip() {
+        let mut e = SplitBuf::zeros(&[3, 4]);
+        e.re[5] = 1.25;
+        e.im[11] = -2.5;
+        let b = pack_env(&e);
+        let back = unpack_env(&b).unwrap();
+        assert_eq!(back, e);
+        assert!(unpack_env(&b[..5]).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Macro/micro batch planning (§3.1, Eq. 3).
+//!
+//! The scheduler turns `(N, p₁, N₁, N₂)` into per-worker macro-batch
+//! assignments, validates them against a memory budget via the Eq. 3 model,
+//! and can suggest `N₁` from the device's overlap threshold.
+
+use crate::perfmodel;
+use crate::util::error::{Error, Result};
+
+/// One macro batch owned by one worker in one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacroBatch {
+    pub worker: usize,
+    pub round: usize,
+    /// First global sample index.
+    pub sample0: u64,
+    pub len: usize,
+}
+
+/// The complete plan.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    pub batches: Vec<MacroBatch>,
+    pub rounds: usize,
+    pub p1: usize,
+    pub n1: usize,
+    pub n2: usize,
+}
+
+impl BatchPlan {
+    /// Partition `n_samples` into macro batches of `n1` dealt round-robin
+    /// to `p1` workers; each macro batch is stepped in `n2`-sized micro
+    /// batches.
+    pub fn build(n_samples: u64, p1: usize, n1: usize, n2: usize) -> Result<BatchPlan> {
+        if p1 == 0 || n1 == 0 || n2 == 0 {
+            return Err(Error::config("scheduler: p1, N1, N2 must be ≥ 1"));
+        }
+        if n2 > n1 {
+            return Err(Error::config("scheduler: N2 > N1"));
+        }
+        let n_batches = n_samples.div_ceil(n1 as u64);
+        let rounds = n_batches.div_ceil(p1 as u64) as usize;
+        let mut batches = Vec::with_capacity(n_batches as usize);
+        for b in 0..n_batches {
+            let sample0 = b * n1 as u64;
+            let len = ((n_samples - sample0) as usize).min(n1);
+            batches.push(MacroBatch {
+                worker: (b % p1 as u64) as usize,
+                round: (b / p1 as u64) as usize,
+                sample0,
+                len,
+            });
+        }
+        Ok(BatchPlan {
+            batches,
+            rounds,
+            p1,
+            n1,
+            n2,
+        })
+    }
+
+    /// Batches of one worker, in round order.
+    pub fn for_worker(&self, worker: usize) -> Vec<MacroBatch> {
+        self.batches
+            .iter()
+            .filter(|b| b.worker == worker)
+            .copied()
+            .collect()
+    }
+
+    /// The batch a worker runs in `round`, if any (idle workers still join
+    /// the Γ broadcast — SPMD).
+    pub fn at(&self, worker: usize, round: usize) -> Option<MacroBatch> {
+        self.batches
+            .iter()
+            .find(|b| b.worker == worker && b.round == round)
+            .copied()
+    }
+
+    /// Split a macro batch into micro ranges `[a, b)` relative to batch
+    /// start.
+    pub fn micro_ranges(&self, len: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut a = 0;
+        while a < len {
+            let b = (a + self.n2).min(len);
+            out.push((a, b));
+            a = b;
+        }
+        out
+    }
+
+    /// Eq. 3 memory estimate per worker (bytes).
+    pub fn memory_per_worker(&self, chi: usize, d: usize, scalar_bytes: usize) -> u64 {
+        perfmodel::memory_demand(self.n1 as u64, chi as u64, d as u64, scalar_bytes as u64)
+    }
+
+    /// Check the plan fits a memory budget.
+    pub fn check_memory(&self, chi: usize, d: usize, scalar_bytes: usize, budget: u64) -> Result<()> {
+        let need = self.memory_per_worker(chi, d, scalar_bytes);
+        if need > budget {
+            return Err(Error::config(format!(
+                "macro batch N1={} needs {} per worker (budget {}); shrink N1 or raise p2",
+                self.n1,
+                crate::util::human_bytes(need),
+                crate::util::human_bytes(budget)
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Suggest `N₁` for a device so that compute hides I/O (§3.1), capped by
+/// the memory budget through Eq. 3.
+pub fn suggest_n1(
+    dev: &perfmodel::DeviceSpec,
+    chi: usize,
+    d: usize,
+    scalar_bytes: usize,
+    mem_budget: u64,
+) -> usize {
+    let overlap = perfmodel::min_macro_batch_for_overlap(dev, scalar_bytes as u64) as usize;
+    // Invert Eq. 3 for the largest N1 within budget.
+    let gamma = (chi as u64 * chi as u64 * d as u64) * 2 * scalar_bytes as u64;
+    let per_sample = (chi as u64 * d as u64) * 2 * scalar_bytes as u64;
+    let max_fit = if mem_budget > gamma {
+        ((mem_budget - gamma) / per_sample.max(1)) as usize
+    } else {
+        1
+    };
+    overlap.clamp(1, max_fit.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_covers_all_samples_exactly_once() {
+        let p = BatchPlan::build(10_000, 3, 1024, 256).unwrap();
+        let total: u64 = p.batches.iter().map(|b| b.len as u64).sum();
+        assert_eq!(total, 10_000);
+        // Ranges are disjoint and ordered.
+        for w in p.batches.windows(2) {
+            assert_eq!(w[1].sample0, w[0].sample0 + w[0].len as u64);
+        }
+        // Last batch is the remainder.
+        assert_eq!(p.batches.last().unwrap().len, 10_000 % 1024);
+    }
+
+    #[test]
+    fn round_robin_assignment() {
+        let p = BatchPlan::build(5000, 2, 1000, 100).unwrap();
+        assert_eq!(p.rounds, 3);
+        assert_eq!(p.for_worker(0).len(), 3);
+        assert_eq!(p.for_worker(1).len(), 2);
+        assert!(p.at(1, 2).is_none()); // idle in last round
+        assert_eq!(p.at(0, 2).unwrap().sample0, 4000);
+    }
+
+    #[test]
+    fn micro_ranges_cover() {
+        let p = BatchPlan::build(100, 1, 100, 32).unwrap();
+        let r = p.micro_ranges(100);
+        assert_eq!(r, vec![(0, 32), (32, 64), (64, 96), (96, 100)]);
+    }
+
+    #[test]
+    fn memory_model_and_budget() {
+        let p = BatchPlan::build(10_000, 1, 1000, 100).unwrap();
+        let m = p.memory_per_worker(100, 3, 8);
+        assert_eq!(m, (1000 * 100 * 3 + 100 * 100 * 3) * 16);
+        assert!(p.check_memory(100, 3, 8, m).is_ok());
+        assert!(p.check_memory(100, 3, 8, m - 1).is_err());
+    }
+
+    #[test]
+    fn n1_suggestion_respects_budget() {
+        let n1 = suggest_n1(&crate::perfmodel::A100_TF32, 10_000, 3, 2, 40 << 30);
+        assert!(n1 >= 1000);
+        let tight = suggest_n1(&crate::perfmodel::A100_TF32, 10_000, 3, 2, 2 << 30);
+        assert!(tight < n1);
+    }
+
+    #[test]
+    fn property_plan_partition() {
+        crate::util::prop::quickcheck("plan partitions samples", |g| {
+            let n = g.u64() % 100_000 + 1;
+            let p1 = g.usize_in(1, 9);
+            let n1 = g.usize_in(1, 5000);
+            let n2 = g.usize_in(1, n1 + 1);
+            let plan = BatchPlan::build(n, p1, n1, n2).map_err(|e| e.to_string())?;
+            let total: u64 = plan.batches.iter().map(|b| b.len as u64).sum();
+            if total != n {
+                return Err(format!("covered {total} of {n}"));
+            }
+            for b in &plan.batches {
+                if b.len == 0 || b.len > n1 || b.worker >= p1 {
+                    return Err(format!("bad batch {b:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

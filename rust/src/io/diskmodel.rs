@@ -1,0 +1,99 @@
+//! Disk bandwidth model.
+//!
+//! The paper's overlap analysis (§3.1) lives in the regime "NVMe at
+//! ~5 GB/s vs A100 at 156 TFLOPS". On this testbed the page cache makes
+//! small reads essentially free, so the I/O-overlap and disk-contention
+//! experiments (Fig. 3 pipeline, the baseline's startup contention in
+//! Fig. 2) use a throttle: every read is charged `bytes / bandwidth`,
+//! multiplied by the number of concurrently reading streams (a simple
+//! fair-share contention model). The charge is returned as *virtual
+//! seconds* and optionally slept to shape real time.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared disk model; clone the `Arc` into every reader.
+#[derive(Debug)]
+pub struct DiskModel {
+    /// Bytes/second the device sustains; `None` = unthrottled (real disk).
+    pub bandwidth: Option<f64>,
+    /// Whether to actually sleep (shape wall time) or just account.
+    pub sleep: bool,
+    readers: AtomicUsize,
+}
+
+impl DiskModel {
+    /// Unthrottled (pass-through) model.
+    pub fn unlimited() -> Arc<DiskModel> {
+        Arc::new(DiskModel {
+            bandwidth: None,
+            sleep: false,
+            readers: AtomicUsize::new(0),
+        })
+    }
+
+    /// Throttled model; `sleep=true` makes reads really take the modelled
+    /// time (used by the overlap experiments).
+    pub fn throttled(bandwidth_bps: f64, sleep: bool) -> Arc<DiskModel> {
+        Arc::new(DiskModel {
+            bandwidth: Some(bandwidth_bps),
+            sleep,
+            readers: AtomicUsize::new(0),
+        })
+    }
+
+    /// Charge a read of `bytes`; returns the modelled seconds.
+    pub fn charge(&self, bytes: u64) -> f64 {
+        let Some(bw) = self.bandwidth else {
+            return 0.0;
+        };
+        let active = self.readers.fetch_add(1, Ordering::SeqCst) + 1;
+        let secs = bytes as f64 / bw * active as f64;
+        if self.sleep {
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        }
+        self.readers.fetch_sub(1, Ordering::SeqCst);
+        secs
+    }
+
+    /// Current number of in-flight readers (contention probe).
+    pub fn active_readers(&self) -> usize {
+        self.readers.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_charges_nothing() {
+        let m = DiskModel::unlimited();
+        assert_eq!(m.charge(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn throttled_charges_linear() {
+        let m = DiskModel::throttled(1e9, false);
+        let t = m.charge(500_000_000);
+        assert!((t - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_multiplies_cost() {
+        let m = DiskModel::throttled(1e9, false);
+        // Simulate a second in-flight reader.
+        m.readers.store(1, Ordering::SeqCst);
+        let t = m.charge(1_000_000_000);
+        assert!((t - 2.0).abs() < 1e-9, "got {t}");
+        m.readers.store(0, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn sleeping_throttle_shapes_walltime() {
+        let m = DiskModel::throttled(10e9, true);
+        let t0 = std::time::Instant::now();
+        m.charge(100_000_000); // 10 ms at 10 GB/s
+        assert!(t0.elapsed().as_secs_f64() >= 0.009);
+    }
+}

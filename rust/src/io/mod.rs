@@ -1,0 +1,24 @@
+//! Γ tensor storage and streaming — the I/O half of the paper's
+//! data-parallel revival.
+//!
+//! Large-scale MPS (χ ~ 10⁴, GB-size tensors per site) cannot live in
+//! memory; the sampling loop streams `Γ_i` from disk, and the paper's §3.3.2
+//! low-precision storage (FP16 Γ, halving I/O and broadcast bytes) plus
+//! compression and double-buffered prefetch are what keep the loop
+//! compute-bound (computation-I/O ratio `N₁`, §3.1).
+//!
+//! - [`GammaStore`]: an on-disk MPS ("FMPS1" format): a JSON manifest plus
+//!   one blob per site in f64/f32/f16 × raw/zstd.
+//! - [`Prefetcher`]: background double-buffered loader (I/O↔compute
+//!   overlap of Fig. 3).
+//! - [`DiskModel`]: optional bandwidth throttle + contention accounting so
+//!   the overlap/scaling studies can reproduce the paper's 5 GB/s NVMe
+//!   regime on a machine whose page cache would otherwise hide I/O.
+
+mod diskmodel;
+mod loader;
+mod store;
+
+pub use diskmodel::DiskModel;
+pub use loader::Prefetcher;
+pub use store::{GammaStore, StoreCodec, StorePrecision};

@@ -1,0 +1,550 @@
+//! On-disk MPS store ("FMPS1").
+//!
+//! Layout:
+//! ```text
+//! <dir>/manifest.json      — format/version, spec echo, per-site shapes,
+//!                            precision, codec, blob sizes
+//! <dir>/site_<i>.bin       — Γ_i as interleaved (re, im) pairs, row-major
+//!                            (χ_l, χ_r, d), in the manifest precision,
+//!                            optionally zstd-compressed
+//! ```
+//!
+//! FP16 blobs implement §3.3.2: stored/moved at half width, converted back
+//! to f32/f64 before contraction (precision is *not* recovered — that loss
+//! is part of the design and is what the precision tests measure).
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::mps::gbs::GbsSpec;
+use crate::mps::{Mps, Site};
+use crate::tensor::{Complex, Tensor3, C64};
+use crate::util::error::{Error, Result};
+use crate::util::f16;
+use crate::util::json::Json;
+
+/// Element precision of the stored blobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorePrecision {
+    F64,
+    F32,
+    F16,
+}
+
+impl StorePrecision {
+    pub fn bytes_per_scalar(self) -> usize {
+        match self {
+            StorePrecision::F64 => 8,
+            StorePrecision::F32 => 4,
+            StorePrecision::F16 => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StorePrecision::F64 => "f64",
+            StorePrecision::F32 => "f32",
+            StorePrecision::F16 => "f16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f64" => Ok(StorePrecision::F64),
+            "f32" => Ok(StorePrecision::F32),
+            "f16" => Ok(StorePrecision::F16),
+            _ => Err(Error::config(format!("unknown precision '{s}'"))),
+        }
+    }
+}
+
+/// Blob compression.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreCodec {
+    Raw,
+    Zstd,
+}
+
+impl StoreCodec {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StoreCodec::Raw => "raw",
+            StoreCodec::Zstd => "zstd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "raw" => Ok(StoreCodec::Raw),
+            "zstd" => Ok(StoreCodec::Zstd),
+            _ => Err(Error::config(format!("unknown codec '{s}'"))),
+        }
+    }
+}
+
+/// An opened on-disk MPS.
+#[derive(Debug, Clone)]
+pub struct GammaStore {
+    pub dir: PathBuf,
+    pub spec: GbsSpec,
+    pub precision: StorePrecision,
+    pub codec: StoreCodec,
+    /// (χ_l, χ_r) per site.
+    pub bonds: Vec<(usize, usize)>,
+    /// Compressed blob size per site (bytes actually read from disk).
+    pub blob_bytes: Vec<u64>,
+}
+
+impl GammaStore {
+    /// Generate the MPS from `spec` and write it site-by-site (streaming:
+    /// only one site is in memory at a time).
+    pub fn create(
+        dir: &Path,
+        spec: &GbsSpec,
+        precision: StorePrecision,
+        codec: StoreCodec,
+    ) -> Result<GammaStore> {
+        fs::create_dir_all(dir).map_err(|e| Error::io(dir.display(), e))?;
+        let plan = spec.chi_plan();
+        let mut bonds = Vec::with_capacity(spec.m);
+        let mut blob_bytes = Vec::with_capacity(spec.m);
+        let mut chi_l = 1usize;
+        for i in 0..spec.m {
+            let site = spec.generate_site(i, chi_l, &plan)?;
+            let blob = encode_site(&site.gamma, precision, codec)?;
+            let path = site_path(dir, i);
+            fs::write(&path, &blob).map_err(|e| Error::io(path.display(), e))?;
+            bonds.push((chi_l, site.chi_r()));
+            blob_bytes.push(blob.len() as u64);
+            chi_l = site.chi_r();
+        }
+        let store = GammaStore {
+            dir: dir.to_path_buf(),
+            spec: spec.clone(),
+            precision,
+            codec,
+            bonds,
+            blob_bytes,
+        };
+        store.write_manifest()?;
+        Ok(store)
+    }
+
+    /// Write an already-materialized MPS (tests / conversions).
+    pub fn create_from_mps(
+        dir: &Path,
+        spec: &GbsSpec,
+        mps: &Mps,
+        precision: StorePrecision,
+        codec: StoreCodec,
+    ) -> Result<GammaStore> {
+        fs::create_dir_all(dir).map_err(|e| Error::io(dir.display(), e))?;
+        let mut bonds = Vec::new();
+        let mut blob_bytes = Vec::new();
+        for (i, site) in mps.sites.iter().enumerate() {
+            let blob = encode_site(&site.gamma, precision, codec)?;
+            let path = site_path(dir, i);
+            fs::write(&path, &blob).map_err(|e| Error::io(path.display(), e))?;
+            bonds.push((site.chi_l(), site.chi_r()));
+            blob_bytes.push(blob.len() as u64);
+        }
+        let store = GammaStore {
+            dir: dir.to_path_buf(),
+            spec: spec.clone(),
+            precision,
+            codec,
+            bonds,
+            blob_bytes,
+        };
+        store.write_manifest()?;
+        Ok(store)
+    }
+
+    pub fn open(dir: &Path) -> Result<GammaStore> {
+        let mpath = dir.join("manifest.json");
+        let text = fs::read_to_string(&mpath).map_err(|e| Error::io(mpath.display(), e))?;
+        let j = Json::parse(&text)?;
+        if j.req("magic")?.as_str() != Some("FMPS1") {
+            return Err(Error::format("bad magic (want FMPS1)"));
+        }
+        let spec = spec_from_json(j.req("spec")?)?;
+        let precision = StorePrecision::parse(
+            j.req("precision")?
+                .as_str()
+                .ok_or_else(|| Error::format("precision not a string"))?,
+        )?;
+        let codec = StoreCodec::parse(
+            j.req("codec")?
+                .as_str()
+                .ok_or_else(|| Error::format("codec not a string"))?,
+        )?;
+        let bonds: Vec<(usize, usize)> = j
+            .req("bonds")?
+            .as_arr()
+            .ok_or_else(|| Error::format("bonds not an array"))?
+            .iter()
+            .map(|b| {
+                let pair = b.as_arr().ok_or_else(|| Error::format("bond not a pair"))?;
+                Ok((
+                    pair[0].as_usize().ok_or_else(|| Error::format("bond[0]"))?,
+                    pair[1].as_usize().ok_or_else(|| Error::format("bond[1]"))?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        let blob_bytes: Vec<u64> = j
+            .req("blob_bytes")?
+            .as_arr()
+            .ok_or_else(|| Error::format("blob_bytes not an array"))?
+            .iter()
+            .map(|b| {
+                b.as_f64()
+                    .map(|v| v as u64)
+                    .ok_or_else(|| Error::format("blob size"))
+            })
+            .collect::<Result<_>>()?;
+        if bonds.len() != spec.m || blob_bytes.len() != spec.m {
+            return Err(Error::format("manifest site count mismatch"));
+        }
+        Ok(GammaStore {
+            dir: dir.to_path_buf(),
+            spec,
+            precision,
+            codec,
+            bonds,
+            blob_bytes,
+        })
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let j = Json::obj(vec![
+            ("magic", Json::Str("FMPS1".into())),
+            ("version", Json::Num(1.0)),
+            ("precision", Json::Str(self.precision.as_str().into())),
+            ("codec", Json::Str(self.codec.as_str().into())),
+            ("spec", spec_to_json(&self.spec)),
+            (
+                "bonds",
+                Json::Arr(
+                    self.bonds
+                        .iter()
+                        .map(|&(l, r)| {
+                            Json::Arr(vec![Json::Num(l as f64), Json::Num(r as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "blob_bytes",
+                Json::Arr(
+                    self.blob_bytes
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+        ]);
+        let path = self.dir.join("manifest.json");
+        fs::write(&path, j.pretty()).map_err(|e| Error::io(path.display(), e))
+    }
+
+    pub fn num_sites(&self) -> usize {
+        self.spec.m
+    }
+
+    /// Bytes on disk for site `i` (what the disk model charges).
+    pub fn site_bytes(&self, i: usize) -> u64 {
+        self.blob_bytes[i]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.blob_bytes.iter().sum()
+    }
+
+    /// Load one site. The Λ vector is reconstructed as all-ones (the store
+    /// keeps right-canonical states; a future version can persist Λ).
+    pub fn load_site(&self, i: usize) -> Result<Site> {
+        if i >= self.spec.m {
+            return Err(Error::shape(format!("site {i} ≥ M={}", self.spec.m)));
+        }
+        let path = site_path(&self.dir, i);
+        let blob = fs::read(&path).map_err(|e| Error::io(path.display(), e))?;
+        let (chi_l, chi_r) = self.bonds[i];
+        let gamma = decode_site(&blob, chi_l, chi_r, self.spec.d, self.precision, self.codec)?;
+        Ok(Site {
+            lambda: vec![1.0; chi_r],
+            gamma,
+        })
+    }
+
+    /// Load the full chain (small scales only).
+    pub fn load_all(&self) -> Result<Mps> {
+        let sites = (0..self.spec.m)
+            .map(|i| self.load_site(i))
+            .collect::<Result<Vec<_>>>()?;
+        let mps = Mps {
+            sites,
+            d: self.spec.d,
+        };
+        mps.check()?;
+        Ok(mps)
+    }
+}
+
+fn site_path(dir: &Path, i: usize) -> PathBuf {
+    dir.join(format!("site_{i:05}.bin"))
+}
+
+fn encode_site(g: &Tensor3<f64>, precision: StorePrecision, codec: StoreCodec) -> Result<Vec<u8>> {
+    let mut raw: Vec<u8> = Vec::with_capacity(g.len() * 2 * precision.bytes_per_scalar());
+    match precision {
+        StorePrecision::F64 => {
+            for z in &g.data {
+                raw.extend_from_slice(&z.re.to_le_bytes());
+                raw.extend_from_slice(&z.im.to_le_bytes());
+            }
+        }
+        StorePrecision::F32 => {
+            for z in &g.data {
+                raw.extend_from_slice(&(z.re as f32).to_le_bytes());
+                raw.extend_from_slice(&(z.im as f32).to_le_bytes());
+            }
+        }
+        StorePrecision::F16 => {
+            for z in &g.data {
+                raw.extend_from_slice(&f16::f32_to_f16_bits(z.re as f32).to_le_bytes());
+                raw.extend_from_slice(&f16::f32_to_f16_bits(z.im as f32).to_le_bytes());
+            }
+        }
+    }
+    match codec {
+        StoreCodec::Raw => Ok(raw),
+        StoreCodec::Zstd => {
+            let mut enc = zstd::Encoder::new(Vec::new(), 3).map_err(Error::from)?;
+            enc.write_all(&raw).map_err(Error::from)?;
+            enc.finish().map_err(Error::from)
+        }
+    }
+}
+
+fn decode_site(
+    blob: &[u8],
+    chi_l: usize,
+    chi_r: usize,
+    d: usize,
+    precision: StorePrecision,
+    codec: StoreCodec,
+) -> Result<Tensor3<f64>> {
+    let raw: Vec<u8> = match codec {
+        StoreCodec::Raw => blob.to_vec(),
+        StoreCodec::Zstd => {
+            let mut dec = zstd::Decoder::new(blob).map_err(Error::from)?;
+            let mut out = Vec::new();
+            dec.read_to_end(&mut out).map_err(Error::from)?;
+            out
+        }
+    };
+    let n = chi_l * chi_r * d;
+    let want = n * 2 * precision.bytes_per_scalar();
+    if raw.len() != want {
+        return Err(Error::format(format!(
+            "site blob: {} bytes, expected {want} for ({chi_l},{chi_r},{d}) {}",
+            raw.len(),
+            precision.as_str()
+        )));
+    }
+    let mut data = Vec::with_capacity(n);
+    match precision {
+        StorePrecision::F64 => {
+            for c in raw.chunks_exact(16) {
+                let re = f64::from_le_bytes(c[0..8].try_into().unwrap());
+                let im = f64::from_le_bytes(c[8..16].try_into().unwrap());
+                data.push(C64::new(re, im));
+            }
+        }
+        StorePrecision::F32 => {
+            for c in raw.chunks_exact(8) {
+                let re = f32::from_le_bytes(c[0..4].try_into().unwrap());
+                let im = f32::from_le_bytes(c[4..8].try_into().unwrap());
+                data.push(C64::new(re as f64, im as f64));
+            }
+        }
+        StorePrecision::F16 => {
+            for c in raw.chunks_exact(4) {
+                let re = f16::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+                let im = f16::f16_bits_to_f32(u16::from_le_bytes([c[2], c[3]]));
+                data.push(Complex::new(re as f64, im as f64));
+            }
+        }
+    }
+    Tensor3::from_vec(chi_l, chi_r, d, data)
+}
+
+fn spec_to_json(s: &GbsSpec) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(s.name.clone())),
+        ("m", Json::Num(s.m as f64)),
+        ("d", Json::Num(s.d as f64)),
+        ("chi_cap", Json::Num(s.chi_cap as f64)),
+        ("asp", Json::Num(s.asp)),
+        ("decay_k", Json::Num(s.decay_k)),
+        ("displacement_sigma", Json::Num(s.displacement_sigma)),
+        ("branch_skew", Json::Num(s.branch_skew)),
+        ("seed", Json::Num(s.seed as f64)),
+        ("dynamic_chi", Json::Bool(s.dynamic_chi)),
+        (
+            "step_ratio_override",
+            s.step_ratio_override.map(Json::Num).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn spec_from_json(j: &Json) -> Result<GbsSpec> {
+    Ok(GbsSpec {
+        name: j
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| Error::format("spec.name"))?
+            .to_string(),
+        m: j.req("m")?.as_usize().ok_or_else(|| Error::format("spec.m"))?,
+        d: j.req("d")?.as_usize().ok_or_else(|| Error::format("spec.d"))?,
+        chi_cap: j
+            .req("chi_cap")?
+            .as_usize()
+            .ok_or_else(|| Error::format("spec.chi_cap"))?,
+        asp: j.req("asp")?.as_f64().ok_or_else(|| Error::format("spec.asp"))?,
+        decay_k: j
+            .req("decay_k")?
+            .as_f64()
+            .ok_or_else(|| Error::format("spec.decay_k"))?,
+        displacement_sigma: j
+            .req("displacement_sigma")?
+            .as_f64()
+            .ok_or_else(|| Error::format("spec.displacement_sigma"))?,
+        // Older stores predate the field; default to no skew.
+        branch_skew: j.get("branch_skew").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        seed: j
+            .req("seed")?
+            .as_f64()
+            .ok_or_else(|| Error::format("spec.seed"))? as u64,
+        dynamic_chi: j
+            .req("dynamic_chi")?
+            .as_bool()
+            .ok_or_else(|| Error::format("spec.dynamic_chi"))?,
+        step_ratio_override: j.get("step_ratio_override").and_then(|v| v.as_f64()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GbsSpec {
+        GbsSpec {
+            name: "store-test".into(),
+            m: 6,
+            d: 3,
+            chi_cap: 8,
+            asp: 3.0,
+            decay_k: 0.0,
+            displacement_sigma: 0.2,
+            branch_skew: 0.0,
+            seed: 99,
+            dynamic_chi: true,
+            step_ratio_override: None,
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fastmps-store-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_f64_raw() {
+        let dir = tmpdir("f64raw");
+        let s = spec();
+        let store = GammaStore::create(&dir, &s, StorePrecision::F64, StoreCodec::Raw).unwrap();
+        let mem = s.generate().unwrap();
+        let loaded = store.load_all().unwrap();
+        for (a, b) in mem.sites.iter().zip(&loaded.sites) {
+            assert_eq!(a.gamma.data, b.gamma.data); // f64 raw is lossless
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_f16_zstd_bounded_error() {
+        let dir = tmpdir("f16zstd");
+        let s = spec();
+        let store = GammaStore::create(&dir, &s, StorePrecision::F16, StoreCodec::Zstd).unwrap();
+        let mem = s.generate().unwrap();
+        let loaded = store.load_all().unwrap();
+        for (a, b) in mem.sites.iter().zip(&loaded.sites) {
+            for (x, y) in a.gamma.data.iter().zip(&b.gamma.data) {
+                // f16 relative error ≤ 2^-11 for normal values.
+                let err = (*x - *y).abs();
+                assert!(err <= x.abs() / 1024.0 + 1e-6, "{x} vs {y}");
+            }
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_reads_manifest() {
+        let dir = tmpdir("reopen");
+        let s = spec();
+        let created =
+            GammaStore::create(&dir, &s, StorePrecision::F32, StoreCodec::Zstd).unwrap();
+        let opened = GammaStore::open(&dir).unwrap();
+        assert_eq!(opened.precision, StorePrecision::F32);
+        assert_eq!(opened.codec, StoreCodec::Zstd);
+        assert_eq!(opened.bonds, created.bonds);
+        assert_eq!(opened.spec.m, s.m);
+        assert_eq!(opened.spec.seed, s.seed);
+        let site = opened.load_site(2).unwrap();
+        assert_eq!(site.chi_l(), created.bonds[2].0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn f16_storage_halves_f32_bytes() {
+        let dir16 = tmpdir("half16");
+        let dir32 = tmpdir("half32");
+        let s = spec();
+        let s16 = GammaStore::create(&dir16, &s, StorePrecision::F16, StoreCodec::Raw).unwrap();
+        let s32 = GammaStore::create(&dir32, &s, StorePrecision::F32, StoreCodec::Raw).unwrap();
+        assert_eq!(s16.total_bytes() * 2, s32.total_bytes());
+        fs::remove_dir_all(&dir16).unwrap();
+        fs::remove_dir_all(&dir32).unwrap();
+    }
+
+    #[test]
+    fn open_missing_fails_cleanly() {
+        let err = GammaStore::open(Path::new("/nonexistent/fastmps")).unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+
+    #[test]
+    fn out_of_range_site_rejected() {
+        let dir = tmpdir("range");
+        let store =
+            GammaStore::create(&dir, &spec(), StorePrecision::F32, StoreCodec::Raw).unwrap();
+        assert!(store.load_site(6).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_blob_detected() {
+        let dir = tmpdir("corrupt");
+        let store =
+            GammaStore::create(&dir, &spec(), StorePrecision::F32, StoreCodec::Raw).unwrap();
+        let p = dir.join("site_00001.bin");
+        let mut blob = fs::read(&p).unwrap();
+        blob.truncate(blob.len() - 4);
+        fs::write(&p, &blob).unwrap();
+        assert!(store.load_site(1).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,34 @@
+//! # FastMPS
+//!
+//! A multi-level parallel framework for large-scale Matrix Product State
+//! (MPS) sampling, reproducing *"FastMPS: Revisit Data Parallel in
+//! Large-scale Matrix Product State Sampling"* (CS.DC 2025) as a
+//! three-layer rust + JAX + Pallas stack.
+//!
+//! Layers:
+//! - **L1/L2 (build time)**: Pallas kernels + a JAX per-site step model are
+//!   AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
+//! - **L3 (this crate)**: the coordinator — data parallelism across samples,
+//!   tensor parallelism along the bond dimension, mixed-precision storage,
+//!   dynamic bond dimensions, and the simulated communication fabric used
+//!   for the paper's scaling studies. The hot path executes the AOT
+//!   artifacts through the PJRT CPU client (`runtime`), with a native
+//!   engine (`sampler::native`) as the correctness oracle.
+
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod io;
+pub mod linalg;
+pub mod metrics;
+pub mod mps;
+pub mod perfmodel;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod tensor;
+pub mod util;
+pub mod validate;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,235 @@
+//! General complex matrix exponential — scaling-and-squaring with Padé-13
+//! (Higham 2005, the algorithm behind SciPy's `expm`).
+//!
+//! This is the *baseline* for the paper's displacement-operator ablation
+//! (§3.4.1 / Fig. 11): FastMPS replaces it with the analytic Zassenhaus
+//! factorization for the specific tridiagonal generator `μa† − μ*a`, which
+//! the paper reports as >10× faster. We keep the general routine both as
+//! the ablation comparator and as the correctness oracle for the fast path.
+
+use num_traits::Float;
+
+use crate::linalg::{gemm, lu_decompose, lu_solve_in_place};
+use crate::tensor::{Complex, Mat};
+use crate::util::error::Result;
+
+/// Padé-13 coefficients (Higham, Table 10.4).
+const B13: [f64; 14] = [
+    64764752532480000.0,
+    32382376266240000.0,
+    7771770303897600.0,
+    1187353796428800.0,
+    129060195264000.0,
+    10559470521600.0,
+    670442572800.0,
+    33522128640.0,
+    1323241920.0,
+    40840800.0,
+    960960.0,
+    16380.0,
+    182.0,
+    1.0,
+];
+
+/// θ₁₃ from Higham: ‖A‖₁ below this needs no scaling.
+const THETA13: f64 = 5.371920351148152;
+
+fn one_norm<T: Float + std::ops::AddAssign>(a: &Mat<T>) -> T {
+    let mut best = T::zero();
+    for c in 0..a.cols {
+        let mut s = T::zero();
+        for r in 0..a.rows {
+            s += a[(r, c)].abs();
+        }
+        if s > best {
+            best = s;
+        }
+    }
+    best
+}
+
+fn add_scaled<T: Float + std::ops::AddAssign>(acc: &mut Mat<T>, m: &Mat<T>, s: T) {
+    for (a, b) in acc.data.iter_mut().zip(&m.data) {
+        *a += b.scale(s);
+    }
+}
+
+/// Matrix exponential of a square complex matrix.
+pub fn expm<T: Float + std::ops::AddAssign + std::ops::SubAssign + Send + Sync>(
+    a: &Mat<T>,
+) -> Result<Mat<T>> {
+    let n = a.rows;
+    let norm = one_norm(a).to_f64().unwrap_or(f64::INFINITY);
+
+    // Scaling: A/2^s with ‖A/2^s‖₁ ≤ θ₁₃.
+    let s = if norm > THETA13 {
+        (norm / THETA13).log2().ceil() as i32
+    } else {
+        0
+    };
+    let mut a_s = a.clone();
+    if s > 0 {
+        let f = T::from(2f64.powi(-s)).unwrap();
+        a_s.scale_in_place(f);
+    }
+
+    // Powers A², A⁴, A⁶.
+    let a2 = gemm(&a_s, &a_s, 1)?;
+    let a4 = gemm(&a2, &a2, 1)?;
+    let a6 = gemm(&a2, &a4, 1)?;
+
+    let b = |i: usize| T::from(B13[i]).unwrap();
+
+    // U = A·[A⁶·(b13·A⁶ + b11·A⁴ + b9·A²) + b7·A⁶ + b5·A⁴ + b3·A² + b1·I]
+    let mut w1 = Mat::zeros(n, n);
+    add_scaled(&mut w1, &a6, b(13));
+    add_scaled(&mut w1, &a4, b(11));
+    add_scaled(&mut w1, &a2, b(9));
+    let mut u_inner = gemm(&a6, &w1, 1)?;
+    add_scaled(&mut u_inner, &a6, b(7));
+    add_scaled(&mut u_inner, &a4, b(5));
+    add_scaled(&mut u_inner, &a2, b(3));
+    for i in 0..n {
+        u_inner[(i, i)] += Complex::from_re(b(1));
+    }
+    let u = gemm(&a_s, &u_inner, 1)?;
+
+    // V = A⁶·(b12·A⁶ + b10·A⁴ + b8·A²) + b6·A⁶ + b4·A⁴ + b2·A² + b0·I
+    let mut w2 = Mat::zeros(n, n);
+    add_scaled(&mut w2, &a6, b(12));
+    add_scaled(&mut w2, &a4, b(10));
+    add_scaled(&mut w2, &a2, b(8));
+    let mut v = gemm(&a6, &w2, 1)?;
+    add_scaled(&mut v, &a6, b(6));
+    add_scaled(&mut v, &a4, b(4));
+    add_scaled(&mut v, &a2, b(2));
+    for i in 0..n {
+        v[(i, i)] += Complex::from_re(b(0));
+    }
+
+    // R = (V − U)⁻¹ (V + U)
+    let mut vmu = v.clone();
+    for (x, u_) in vmu.data.iter_mut().zip(&u.data) {
+        *x -= *u_;
+    }
+    let mut vpu = v;
+    for (x, u_) in vpu.data.iter_mut().zip(&u.data) {
+        *x += *u_;
+    }
+    let f = lu_decompose(&vmu)?;
+    lu_solve_in_place(&f, &mut vpu)?;
+    let mut r = vpu;
+
+    // Undo scaling: square s times.
+    for _ in 0..s {
+        r = gemm(&r, &r, 1)?;
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::tensor::C64;
+
+    #[test]
+    fn expm_zero_is_identity() {
+        let a: Mat<f64> = Mat::zeros(4, 4);
+        let e = expm(&a).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((e[(i, j)].re - want).abs() < 1e-14);
+                assert!(e[(i, j)].im.abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let mut a: Mat<f64> = Mat::zeros(3, 3);
+        a[(0, 0)] = C64::new(1.0, 0.0);
+        a[(1, 1)] = C64::new(-2.0, 0.5);
+        a[(2, 2)] = C64::new(0.0, std::f64::consts::PI);
+        let e = expm(&a).unwrap();
+        for i in 0..3 {
+            let want = a[(i, i)].exp();
+            assert!((e[(i, i)] - want).abs() < 1e-12, "i={i}");
+        }
+        assert!(e[(0, 1)].abs() < 1e-13);
+    }
+
+    #[test]
+    fn expm_nilpotent_exact() {
+        // N = [[0,1],[0,0]] → e^N = I + N exactly.
+        let mut a: Mat<f64> = Mat::zeros(2, 2);
+        a[(0, 1)] = C64::one();
+        let e = expm(&a).unwrap();
+        assert!((e[(0, 0)].re - 1.0).abs() < 1e-14);
+        assert!((e[(0, 1)].re - 1.0).abs() < 1e-14);
+        assert!(e[(1, 0)].abs() < 1e-14);
+        assert!((e[(1, 1)].re - 1.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn expm_inverse_property() {
+        // e^A · e^{-A} = I.
+        let mut rng = Xoshiro256::seed_from(31);
+        for n in [2, 5, 9] {
+            let a = Mat::from_vec(
+                n,
+                n,
+                (0..n * n)
+                    .map(|_| C64::new(rng.normal() * 0.8, rng.normal() * 0.8))
+                    .collect(),
+            )
+            .unwrap();
+            let mut neg = a.clone();
+            neg.scale_in_place(-1.0);
+            let p = gemm(&expm(&a).unwrap(), &expm(&neg).unwrap(), 1).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (p[(i, j)].re - want).abs() < 1e-9 && p[(i, j)].im.abs() < 1e-9,
+                        "n={n} i={i} j={j} got {}",
+                        p[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expm_large_norm_uses_scaling() {
+        // ‖A‖ ≫ θ₁₃ exercises the squaring phase.
+        let mut a: Mat<f64> = Mat::zeros(2, 2);
+        a[(0, 0)] = C64::new(10.0, 0.0);
+        a[(1, 1)] = C64::new(-30.0, 2.0);
+        let e = expm(&a).unwrap();
+        assert!((e[(0, 0)].re - 10f64.exp()).abs() / 10f64.exp() < 1e-10);
+        let want = C64::new(-30.0, 2.0).exp();
+        assert!((e[(1, 1)] - want).abs() < want.abs() * 1e-9 + 1e-14);
+    }
+
+    #[test]
+    fn expm_commuting_sum() {
+        // For commuting A,B: e^{A+B} = e^A e^B. Use two diagonals.
+        let mut a: Mat<f64> = Mat::zeros(3, 3);
+        let mut b: Mat<f64> = Mat::zeros(3, 3);
+        for i in 0..3 {
+            a[(i, i)] = C64::new(0.3 * i as f64, -0.2);
+            b[(i, i)] = C64::new(-0.1, 0.4 * i as f64);
+        }
+        let mut ab = a.clone();
+        for (x, y) in ab.data.iter_mut().zip(&b.data) {
+            *x += *y;
+        }
+        let lhs = expm(&ab).unwrap();
+        let rhs = gemm(&expm(&a).unwrap(), &expm(&b).unwrap(), 1).unwrap();
+        for (l, r) in lhs.data.iter().zip(&rhs.data) {
+            assert!((*l - *r).abs() < 1e-11);
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Blocked, multi-threaded complex GEMM and the MPS bond contraction.
+//!
+//! The native engine must be fast enough to make the CPU-scaled paper
+//! experiments (Table 3, Figs. 10/12) meaningful, so the kernel is cache
+//! blocked (MC×KC panels), accumulates in registers across an unrolled k
+//! loop, and splits the row dimension across scoped threads. FLOP counts
+//! follow the convention of the paper: one complex MAC = 8 real FLOPs.
+
+use num_traits::Float;
+
+use crate::tensor::{Complex, Mat, Tensor3};
+use crate::util::error::{Error, Result};
+
+/// Real FLOPs of an (m,k)×(k,n) complex GEMM (8 per complex MAC).
+pub fn matmul_flops(m: usize, k: usize, n: usize) -> u64 {
+    8 * m as u64 * k as u64 * n as u64
+}
+
+const MC: usize = 64; // row block
+const KC: usize = 256; // depth block
+
+/// C ← A·B (complex). Single allocation; panics only on shape mismatch.
+pub fn gemm<T: Float + std::ops::AddAssign + Send + Sync>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    threads: usize,
+) -> Result<Mat<T>> {
+    if a.cols != b.rows {
+        return Err(Error::shape(format!(
+            "gemm: ({},{})×({},{})",
+            a.rows, a.cols, b.rows, b.cols
+        )));
+    }
+    let mut c = Mat::zeros(a.rows, b.cols);
+    gemm_acc(a, b, &mut c, threads)?;
+    Ok(c)
+}
+
+/// C += A·B (complex), blocked and threaded over row panels.
+pub fn gemm_acc<T: Float + std::ops::AddAssign + Send + Sync>(
+    a: &Mat<T>,
+    b: &Mat<T>,
+    c: &mut Mat<T>,
+    threads: usize,
+) -> Result<()> {
+    if a.cols != b.rows || c.rows != a.rows || c.cols != b.cols {
+        return Err(Error::shape(format!(
+            "gemm_acc: ({},{})×({},{})→({},{})",
+            a.rows, a.cols, b.rows, b.cols, c.rows, c.cols
+        )));
+    }
+    let n = b.cols;
+    let k = a.cols;
+    let threads = threads.max(1).min(a.rows.max(1));
+
+    // Partition C's rows across threads; each thread owns a disjoint slice.
+    let rows_per = a.rows.div_ceil(threads);
+    let c_rows: Vec<&mut [Complex<T>]> = c.data.chunks_mut(rows_per * n).collect();
+
+    std::thread::scope(|scope| {
+        for (t, c_chunk) in c_rows.into_iter().enumerate() {
+            let row0 = t * rows_per;
+            scope.spawn(move || {
+                let my_rows = c_chunk.len() / n;
+                for ib in (0..my_rows).step_by(MC) {
+                    let ie = (ib + MC).min(my_rows);
+                    for kb in (0..k).step_by(KC) {
+                        let ke = (kb + KC).min(k);
+                        for i in ib..ie {
+                            let arow = a.row(row0 + i);
+                            let crow = &mut c_chunk[i * n..(i + 1) * n];
+                            for kk in kb..ke {
+                                let av = arow[kk];
+                                if av.re == T::zero() && av.im == T::zero() {
+                                    continue;
+                                }
+                                let brow = b.row(kk);
+                                // Inner axpy: crow += av * brow, unrolled by 4.
+                                let mut j = 0;
+                                while j + 4 <= n {
+                                    crow[j] = crow[j].mul_add(av, brow[j]);
+                                    crow[j + 1] = crow[j + 1].mul_add(av, brow[j + 1]);
+                                    crow[j + 2] = crow[j + 2].mul_add(av, brow[j + 2]);
+                                    crow[j + 3] = crow[j + 3].mul_add(av, brow[j + 3]);
+                                    j += 4;
+                                }
+                                while j < n {
+                                    crow[j] = crow[j].mul_add(av, brow[j]);
+                                    j += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    Ok(())
+}
+
+/// y ← A·x (complex matrix–vector).
+pub fn gemv<T: Float + std::ops::AddAssign>(
+    a: &Mat<T>,
+    x: &[Complex<T>],
+) -> Result<Vec<Complex<T>>> {
+    if a.cols != x.len() {
+        return Err(Error::shape(format!(
+            "gemv: ({},{})×({})",
+            a.rows,
+            a.cols,
+            x.len()
+        )));
+    }
+    let mut y = vec![Complex::zero(); a.rows];
+    for (r, yv) in y.iter_mut().enumerate() {
+        let row = a.row(r);
+        let mut acc = Complex::zero();
+        for (av, xv) in row.iter().zip(x) {
+            acc = acc.mul_add(*av, *xv);
+        }
+        *yv = acc;
+    }
+    Ok(y)
+}
+
+/// The paper's per-site bond contraction:
+/// `left_env (N, χ_l) × Γ (χ_l, χ_r, d) → temp (N, χ_r, d)`.
+///
+/// Γ is viewed as a `(χ_l, χ_r·d)` matrix — the physical index is innermost,
+/// so this is a single GEMM with no repacking (the reason `Tensor3` uses
+/// that layout).
+pub fn contract_env<T: Float + std::ops::AddAssign + Send + Sync>(
+    env: &Mat<T>,
+    gamma: &Tensor3<T>,
+    threads: usize,
+) -> Result<Tensor3<T>> {
+    if env.cols != gamma.d0 {
+        return Err(Error::shape(format!(
+            "contract_env: env (N,{}) vs Γ ({},{},{})",
+            env.cols, gamma.d0, gamma.d1, gamma.d2
+        )));
+    }
+    let gm = Mat {
+        rows: gamma.d0,
+        cols: gamma.d1 * gamma.d2,
+        data: gamma.data.clone(),
+    };
+    let c = gemm(env, &gm, threads)?;
+    Tensor3::from_vec(env.rows, gamma.d1, gamma.d2, c.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::tensor::C64;
+
+    fn random_mat(rng: &mut Xoshiro256, r: usize, c: usize) -> Mat<f64> {
+        let data = (0..r * c)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        Mat::from_vec(r, c, data).unwrap()
+    }
+
+    fn naive_gemm(a: &Mat<f64>, b: &Mat<f64>) -> Mat<f64> {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = C64::zero();
+                for k in 0..a.cols {
+                    acc += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = Xoshiro256::seed_from(5);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 128, 40)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let want = naive_gemm(&a, &b);
+            for threads in [1, 3] {
+                let got = gemm(&a, &b, threads).unwrap();
+                for (g, w) in got.data.iter().zip(&want.data) {
+                    assert!((*g - *w).abs() < 1e-10, "m={m} k={k} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_shape_errors() {
+        let a: Mat<f64> = Mat::zeros(2, 3);
+        let b: Mat<f64> = Mat::zeros(4, 2);
+        assert!(gemm(&a, &b, 1).is_err());
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let mut rng = Xoshiro256::seed_from(6);
+        let a = random_mat(&mut rng, 7, 7);
+        let i7: Mat<f64> = Mat::eye(7);
+        let c = gemm(&a, &i7, 2).unwrap();
+        for (g, w) in c.data.iter().zip(&a.data) {
+            assert!((*g - *w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_gemm() {
+        let mut rng = Xoshiro256::seed_from(7);
+        let a = random_mat(&mut rng, 5, 9);
+        let x: Vec<C64> = (0..9).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let xm = Mat::from_vec(9, 1, x.clone()).unwrap();
+        let want = gemm(&a, &xm, 1).unwrap();
+        let got = gemv(&a, &x).unwrap();
+        for (g, w) in got.iter().zip(&want.data) {
+            assert!((*g - *w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn contract_env_matches_loops() {
+        let mut rng = Xoshiro256::seed_from(8);
+        let (n, chi_l, chi_r, d) = (4, 6, 5, 3);
+        let env = random_mat(&mut rng, n, chi_l);
+        let g = Tensor3::from_vec(
+            chi_l,
+            chi_r,
+            d,
+            (0..chi_l * chi_r * d)
+                .map(|_| C64::new(rng.normal(), rng.normal()))
+                .collect(),
+        )
+        .unwrap();
+        let t = contract_env(&env, &g, 2).unwrap();
+        for s in 0..n {
+            for y in 0..chi_r {
+                for p in 0..d {
+                    let mut acc = C64::zero();
+                    for x in 0..chi_l {
+                        acc += env[(s, x)] * g.at(x, y, p);
+                    }
+                    assert!((t.at(s, y, p) - acc).abs() < 1e-10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flops_convention() {
+        assert_eq!(matmul_flops(2, 3, 4), 8 * 24);
+    }
+
+    #[test]
+    fn gemm_property_associativity() {
+        crate::util::prop::quickcheck("(AB)C == A(BC)", |g| {
+            let m = g.len(1, 9);
+            let k = g.len(1, 9);
+            let n = g.len(1, 9);
+            let p = g.len(1, 9);
+            let mut rng = Xoshiro256::seed_from(g.u64());
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let c = random_mat(&mut rng, n, p);
+            let l = gemm(&gemm(&a, &b, 1).unwrap(), &c, 1).unwrap();
+            let r = gemm(&a, &gemm(&b, &c, 1).unwrap(), 1).unwrap();
+            for (x, y) in l.data.iter().zip(&r.data) {
+                crate::util::prop::close(x.re, y.re, 1e-8, "re")?;
+                crate::util::prop::close(x.im, y.im, 1e-8, "im")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,192 @@
+//! Complex LU decomposition with partial pivoting — the solve behind the
+//! Padé matrix exponential (the paper's "general implementation in Eigen and
+//! SciPy" baseline for the ablation).
+
+use num_traits::Float;
+
+use crate::tensor::Mat;
+use crate::util::error::{Error, Result};
+
+/// Packed LU factors: `lu` holds L (unit diagonal, below) and U (on/above),
+/// `piv[i]` is the row swapped into position i.
+#[derive(Debug, Clone)]
+pub struct Lu<T> {
+    pub lu: Mat<T>,
+    pub piv: Vec<usize>,
+}
+
+/// Factor a square complex matrix (Doolittle with partial pivoting).
+pub fn lu_decompose<T: Float + std::ops::AddAssign + std::ops::SubAssign>(
+    a: &Mat<T>,
+) -> Result<Lu<T>> {
+    if a.rows != a.cols {
+        return Err(Error::shape(format!("lu: {}×{} not square", a.rows, a.cols)));
+    }
+    let n = a.rows;
+    let mut lu = a.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+
+    for k in 0..n {
+        // Pivot: largest |entry| in column k at/below the diagonal.
+        let mut p = k;
+        let mut pmax = lu[(k, k)].norm_sq();
+        for r in k + 1..n {
+            let v = lu[(r, k)].norm_sq();
+            if v > pmax {
+                pmax = v;
+                p = r;
+            }
+        }
+        if pmax == T::zero() {
+            return Err(Error::numeric(format!("lu: singular at column {k}")));
+        }
+        if p != k {
+            piv.swap(k, p);
+            for c in 0..n {
+                let tmp = lu[(k, c)];
+                lu[(k, c)] = lu[(p, c)];
+                lu[(p, c)] = tmp;
+            }
+        }
+        let inv_kk = lu[(k, k)].inv();
+        for r in k + 1..n {
+            let m = lu[(r, k)] * inv_kk;
+            lu[(r, k)] = m;
+            for c in k + 1..n {
+                let s = m * lu[(k, c)];
+                lu[(r, c)] -= s;
+            }
+        }
+    }
+    Ok(Lu { lu, piv })
+}
+
+/// Solve `A·X = B` in place: `b` enters as B (row-major, same row count as
+/// A) and leaves as X.
+pub fn lu_solve_in_place<T: Float + std::ops::AddAssign + std::ops::SubAssign>(
+    f: &Lu<T>,
+    b: &mut Mat<T>,
+) -> Result<()> {
+    let n = f.lu.rows;
+    if b.rows != n {
+        return Err(Error::shape(format!(
+            "lu_solve: rhs has {} rows, expected {n}",
+            b.rows
+        )));
+    }
+    let ncols = b.cols;
+
+    // Apply the pivot permutation.
+    let mut x = Mat::zeros(n, ncols);
+    for i in 0..n {
+        let src = f.piv[i];
+        x.row_mut(i).copy_from_slice(b.row(src));
+    }
+
+    // Forward substitution (L has unit diagonal).
+    for i in 0..n {
+        for k in 0..i {
+            let l = f.lu[(i, k)];
+            if l.re == T::zero() && l.im == T::zero() {
+                continue;
+            }
+            let (head, tail) = x.data.split_at_mut(i * ncols);
+            let xk = &head[k * ncols..(k + 1) * ncols];
+            let xi = &mut tail[..ncols];
+            for c in 0..ncols {
+                let s = l * xk[c];
+                xi[c] -= s;
+            }
+        }
+    }
+
+    // Back substitution.
+    for i in (0..n).rev() {
+        for k in i + 1..n {
+            let u = f.lu[(i, k)];
+            if u.re == T::zero() && u.im == T::zero() {
+                continue;
+            }
+            let (head, tail) = x.data.split_at_mut(k * ncols);
+            let xi = &mut head[i * ncols..(i + 1) * ncols];
+            let xk = &tail[..ncols];
+            for c in 0..ncols {
+                let s = u * xk[c];
+                xi[c] -= s;
+            }
+        }
+        let inv = f.lu[(i, i)].inv();
+        for c in 0..ncols {
+            x[(i, c)] = x[(i, c)] * inv;
+        }
+    }
+
+    *b = x;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::rng::Xoshiro256;
+    use crate::tensor::C64;
+
+    fn random_mat(rng: &mut Xoshiro256, n: usize) -> Mat<f64> {
+        Mat::from_vec(
+            n,
+            n,
+            (0..n * n)
+                .map(|_| C64::new(rng.normal(), rng.normal()))
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn solve_recovers_rhs() {
+        let mut rng = Xoshiro256::seed_from(21);
+        for n in [1, 2, 5, 12] {
+            let a = random_mat(&mut rng, n);
+            let x_true = random_mat(&mut rng, n);
+            let b = gemm(&a, &x_true, 1).unwrap();
+            let f = lu_decompose(&a).unwrap();
+            let mut x = b.clone();
+            lu_solve_in_place(&f, &mut x).unwrap();
+            for (g, w) in x.data.iter().zip(&x_true.data) {
+                assert!((*g - *w).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a: Mat<f64> = Mat::zeros(3, 3);
+        assert!(lu_decompose(&a).is_err());
+        let mut b: Mat<f64> = Mat::eye(3);
+        b[(2, 2)] = C64::zero();
+        assert!(lu_decompose(&b).is_err());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        // [[0,1],[1,0]] is perfectly conditioned but needs the pivot.
+        let a = Mat::from_vec(
+            2,
+            2,
+            vec![C64::zero(), C64::one(), C64::one(), C64::zero()],
+        )
+        .unwrap();
+        let f = lu_decompose(&a).unwrap();
+        let mut b = Mat::from_vec(2, 1, vec![C64::new(2.0, 0.0), C64::new(3.0, 0.0)]).unwrap();
+        lu_solve_in_place(&f, &mut b).unwrap();
+        assert!((b[(0, 0)] - C64::new(3.0, 0.0)).abs() < 1e-12);
+        assert!((b[(1, 0)] - C64::new(2.0, 0.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        let a: Mat<f64> = Mat::zeros(2, 3);
+        assert!(lu_decompose(&a).is_err());
+    }
+}

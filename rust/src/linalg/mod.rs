@@ -1,0 +1,28 @@
+//! Native complex linear algebra.
+//!
+//! This is the substrate behind the native sampling engine (the correctness
+//! oracle for the XLA hot path and the precision studies), the model-parallel
+//! baseline, and the GBS displacement optimization (§3.4.1):
+//!
+//! - [`gemm`]: blocked, multi-threaded complex matrix multiply;
+//! - [`contract_env`]: the paper's bond contraction `(N,χ)×(χ,χ,d)→(N,χ,d)`
+//!   expressed as a GEMM over the flattened `(χ, χ·d)` site tensor;
+//! - [`lu`]: LU decomposition with partial pivoting (complex solve, used by
+//!   the Padé matrix exponential);
+//! - [`expm`]: general scaling-and-squaring Padé-13 `expm` — the *baseline*
+//!   the paper says Eigen/SciPy provide;
+//! - [`displacement`]: the paper's fast analytic construction
+//!   `e^{μa†−μ*a} ≈ e^{−|μ|²/2}·e^{μa†}·e^{−μ*a}` (Zassenhaus split into a
+//!   lower- and an upper-triangular factor, >10× cheaper).
+
+mod displacement;
+mod expm;
+mod gemm;
+mod lu;
+
+pub use displacement::{
+    displacement_exact, displacement_fast, displacement_fast_batch, ladder_matrix,
+};
+pub use expm::expm;
+pub use gemm::{contract_env, gemm, gemm_acc, gemv, matmul_flops};
+pub use lu::{lu_decompose, lu_solve_in_place, Lu};

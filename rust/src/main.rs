@@ -1,0 +1,9 @@
+//! FastMPS CLI entrypoint (L3 leader).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = fastmps::cli::run_cli(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,225 @@
+//! Counters, timers and FLOP/byte accounting.
+//!
+//! Every coordinator records a [`Metrics`] snapshot: wall time per phase,
+//! FLOPs executed, bytes moved by I/O / host copies / fabric traffic, and
+//! derived quantities (achieved FLOP/s, computation-to-communication ratio —
+//! the paper's CCR analysis in §2.2) for EXPERIMENTS.md and the bench
+//! harnesses.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Accumulating phase timer + counters. Not thread-safe by design — each
+/// worker owns one and they are merged at the end (`merge`).
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// Seconds per named phase (wall).
+    pub phases: BTreeMap<String, f64>,
+    /// Monotonic counters (flops, io_bytes, comm_bytes, samples, ...).
+    pub counters: BTreeMap<String, u64>,
+}
+
+/// Standard counter names.
+pub mod keys {
+    pub const FLOPS: &str = "flops";
+    pub const IO_BYTES: &str = "io_bytes";
+    pub const COMM_BYTES: &str = "comm_bytes";
+    pub const HOST_COPY_BYTES: &str = "host_copy_bytes";
+    pub const SAMPLES: &str = "samples";
+    pub const SITES: &str = "sites";
+    pub const MICRO_BATCHES: &str = "micro_batches";
+    pub const MACRO_BATCHES: &str = "macro_batches";
+    pub const IO_OPS: &str = "io_ops";
+    pub const COLLECTIVES: &str = "collectives";
+    pub const STEPS_SKIPPED: &str = "steps_skipped"; // dynamic-χ fast path
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, counter: &str, v: u64) {
+        *self.counters.entry(counter.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, counter: &str) -> u64 {
+        self.counters.get(counter).copied().unwrap_or(0)
+    }
+
+    pub fn add_phase(&mut self, phase: &str, secs: f64) {
+        *self.phases.entry(phase.to_string()).or_insert(0.0) += secs;
+    }
+
+    pub fn phase(&self, phase: &str) -> f64 {
+        self.phases.get(phase).copied().unwrap_or(0.0)
+    }
+
+    /// Time a closure into `phase`.
+    pub fn time<R>(&mut self, phase: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add_phase(phase, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    /// Merge another worker's metrics into this one (phases add — divide by
+    /// worker count for averages if needed by the caller).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.phases {
+            self.add_phase(k, *v);
+        }
+        for (k, v) in &other.counters {
+            self.add(k, *v);
+        }
+    }
+
+    /// Total wall seconds across phases.
+    pub fn total_time(&self) -> f64 {
+        self.phases.values().sum()
+    }
+
+    /// Achieved FLOP/s over the compute phase (or all phases if absent).
+    pub fn achieved_flops(&self) -> f64 {
+        let t = if self.phases.contains_key("compute") {
+            self.phase("compute")
+        } else {
+            self.total_time()
+        };
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.get(keys::FLOPS) as f64 / t
+    }
+
+    /// Computation-to-communication ratio in FLOPs/byte (paper §2.2).
+    pub fn ccr(&self) -> f64 {
+        let b = self.get(keys::COMM_BYTES);
+        if b == 0 {
+            return f64::INFINITY;
+        }
+        self.get(keys::FLOPS) as f64 / b as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let phases = Json::Obj(
+            self.phases
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("phases", phases),
+            ("counters", counters),
+            ("achieved_flops", Json::Num(self.achieved_flops())),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "samples={} sites={} time={} flops={:.3e} ({:.2} GFLOP/s) io={} comm={}",
+            self.get(keys::SAMPLES),
+            self.get(keys::SITES),
+            crate::util::human_secs(self.total_time()),
+            self.get(keys::FLOPS) as f64,
+            self.achieved_flops() / 1e9,
+            crate::util::human_bytes(self.get(keys::IO_BYTES)),
+            crate::util::human_bytes(self.get(keys::COMM_BYTES)),
+        )
+    }
+}
+
+/// RAII phase timer.
+pub struct PhaseTimer<'a> {
+    metrics: &'a mut Metrics,
+    phase: &'static str,
+    start: Instant,
+}
+
+impl<'a> PhaseTimer<'a> {
+    pub fn new(metrics: &'a mut Metrics, phase: &'static str) -> Self {
+        PhaseTimer {
+            metrics,
+            phase,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for PhaseTimer<'_> {
+    fn drop(&mut self) {
+        self.metrics
+            .add_phase(self.phase, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.add(keys::FLOPS, 100);
+        m.add(keys::FLOPS, 50);
+        assert_eq!(m.get(keys::FLOPS), 150);
+        assert_eq!(m.get("nonexistent"), 0);
+    }
+
+    #[test]
+    fn phases_accumulate_and_time() {
+        let mut m = Metrics::new();
+        m.add_phase("compute", 1.5);
+        m.add_phase("compute", 0.5);
+        assert_eq!(m.phase("compute"), 2.0);
+        let r = m.time("io", || 42);
+        assert_eq!(r, 42);
+        assert!(m.phase("io") >= 0.0);
+    }
+
+    #[test]
+    fn merge_sums_everything() {
+        let mut a = Metrics::new();
+        a.add(keys::SAMPLES, 10);
+        a.add_phase("compute", 1.0);
+        let mut b = Metrics::new();
+        b.add(keys::SAMPLES, 5);
+        b.add_phase("compute", 2.0);
+        b.add_phase("comm", 0.5);
+        a.merge(&b);
+        assert_eq!(a.get(keys::SAMPLES), 15);
+        assert_eq!(a.phase("compute"), 3.0);
+        assert_eq!(a.phase("comm"), 0.5);
+    }
+
+    #[test]
+    fn ccr_and_flops() {
+        let mut m = Metrics::new();
+        m.add(keys::FLOPS, 8000);
+        m.add(keys::COMM_BYTES, 16);
+        m.add_phase("compute", 2.0);
+        assert_eq!(m.ccr(), 500.0);
+        assert_eq!(m.achieved_flops(), 4000.0);
+        let m2 = Metrics::new();
+        assert!(m2.ccr().is_infinite());
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let mut m = Metrics::new();
+        m.add(keys::FLOPS, 1);
+        m.add_phase("x", 0.25);
+        let j = m.to_json().dump();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("phases").unwrap().get("x").unwrap().as_f64(), Some(0.25));
+    }
+}

@@ -1,0 +1,266 @@
+//! Exact marginals via transfer-matrix contraction — the "ideal" axis of the
+//! paper's Fig. 9 validation.
+//!
+//! For a right-canonical MPS the unconditional distribution at site `i` is
+//! `P(s) = tr(Γ_i[s]† ρ_i Γ_i[s])` where the left density matrix follows the
+//! recursion `ρ_{i+1} = Σ_s Γ_i[s]† ρ_i Γ_i[s]`, `ρ_0 = (1)`. Per-site
+//! renormalization by the trace makes the recursion exact for the scaled
+//! (Eq. 5) tensors as well. Pair moments `E[n_i n_j]` insert the photon
+//! number at site `i` and transfer the weighted matrix to `j`. Cost is
+//! `O(M d χ³)` — fine at validation scales.
+
+
+
+use crate::mps::Mps;
+use crate::tensor::{Mat, Tensor3, C64};
+use crate::util::error::{Error, Result};
+
+/// Extract the χ_l×χ_r matrix Γ[s] at a fixed physical index.
+fn phys_slice(g: &Tensor3<f64>, s: usize) -> Mat<f64> {
+    let mut m = Mat::zeros(g.d0, g.d1);
+    for i in 0..g.d0 {
+        for j in 0..g.d1 {
+            m[(i, j)] = g.at(i, j, s);
+        }
+    }
+    m
+}
+
+/// ρ ← Σ_s w_s · Γ[s]† ρ Γ[s]; returns per-s traces tr(Γ[s]† ρ Γ[s]).
+fn transfer(rho: &Mat<f64>, g: &Tensor3<f64>, weights: Option<&[f64]>) -> (Mat<f64>, Vec<f64>) {
+    let d = g.d2;
+    let mut out = Mat::zeros(g.d1, g.d1);
+    let mut traces = vec![0.0; d];
+    for s in 0..d {
+        let a = phys_slice(g, s); // χ_l×χ_r
+        // t = ρ·A  (χ_l×χ_r), then contribution A†·t (χ_r×χ_r).
+        let t = crate::linalg::gemm(rho, &a, 1).expect("shape");
+        let contrib = crate::linalg::gemm(&a.dagger(), &t, 1).expect("shape");
+        let mut tr = 0.0;
+        for k in 0..g.d1 {
+            tr += contrib[(k, k)].re;
+        }
+        traces[s] = tr;
+        let w = weights.map(|w| w[s]).unwrap_or(1.0);
+        for (o, c) in out.data.iter_mut().zip(&contrib.data) {
+            *o += c.scale(w);
+        }
+    }
+    (out, traces)
+}
+
+fn trace(m: &Mat<f64>) -> f64 {
+    (0..m.rows).map(|i| m[(i, i)].re).sum()
+}
+
+/// Exact per-site outcome distributions `P_i(s)` — `M × d` row-major.
+pub fn exact_site_distributions(mps: &Mps) -> Result<Vec<Vec<f64>>> {
+    mps.check()?;
+    let mut rho = Mat::from_vec(1, 1, vec![C64::one()])?;
+    let mut out = Vec::with_capacity(mps.num_sites());
+    for site in &mps.sites {
+        let (next, traces) = transfer(&rho, &site.gamma, None);
+        let z: f64 = traces.iter().sum();
+        if z <= 0.0 || !z.is_finite() {
+            return Err(Error::numeric(format!("transfer trace {z}")));
+        }
+        out.push(traces.iter().map(|t| t / z).collect());
+        rho = next;
+        let tz = trace(&rho);
+        rho.scale_in_place(1.0 / tz);
+    }
+    Ok(out)
+}
+
+/// Exact mean photon number ⟨n_i⟩ per site.
+pub fn exact_mean_photons(mps: &Mps) -> Result<Vec<f64>> {
+    Ok(exact_site_distributions(mps)?
+        .iter()
+        .map(|p| p.iter().enumerate().map(|(s, q)| s as f64 * q).sum())
+        .collect())
+}
+
+/// Exact pair moments `E[n_i n_j]` for all pairs with `j − i ∈ [1, max_gap]`.
+/// Returns `(i, j, value)` triples.
+pub fn exact_pair_moments(mps: &Mps, max_gap: usize) -> Result<Vec<(usize, usize, f64)>> {
+    mps.check()?;
+    let m = mps.num_sites();
+    // Precompute normalized left densities ρ_i.
+    let mut rhos = Vec::with_capacity(m);
+    let mut rho = Mat::from_vec(1, 1, vec![C64::one()])?;
+    for site in &mps.sites {
+        rhos.push(rho.clone());
+        let (next, _) = transfer(&rho, &site.gamma, None);
+        rho = next;
+        let tz = trace(&rho);
+        if tz <= 0.0 || !tz.is_finite() {
+            return Err(Error::numeric(format!("transfer trace {tz}")));
+        }
+        rho.scale_in_place(1.0 / tz);
+    }
+
+    let mut out = Vec::new();
+    let number_weights: Vec<f64> = (0..mps.d).map(|s| s as f64).collect();
+    for i in 0..m {
+        // Numerator chain carries the n̂ insertion at site i; denominator
+        // chain is the plain transfer. Any per-site scale factors (Eq. 5)
+        // multiply both identically, so the ratio is exact.
+        let (mut num, _) = transfer(&rhos[i], &mps.sites[i].gamma, Some(&number_weights));
+        let (mut den, _) = transfer(&rhos[i], &mps.sites[i].gamma, None);
+        for j in i + 1..m.min(i + max_gap + 1) {
+            let (num_next, num_traces) = transfer(&num, &mps.sites[j].gamma, None);
+            let (den_next, den_traces) = transfer(&den, &mps.sites[j].gamma, None);
+            let nval: f64 = num_traces
+                .iter()
+                .enumerate()
+                .map(|(t, q)| t as f64 * q)
+                .sum();
+            let dval: f64 = den_traces.iter().sum();
+            if dval <= 0.0 || !dval.is_finite() {
+                return Err(Error::numeric(format!("pair moment norm {dval}")));
+            }
+            out.push((i, j, nval / dval));
+            num = num_next;
+            den = den_next;
+            // Rescale both chains together to avoid drift over long gaps.
+            let tz = trace(&den);
+            if tz > 0.0 && tz.is_finite() {
+                num.scale_in_place(1.0 / tz);
+                den.scale_in_place(1.0 / tz);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Estimate the first/second-order correlation slope (paper Fig. 9 a/c):
+/// least-squares through the origin of (ideal, simulated) pairs.
+pub fn correlation_slope(ideal: &[f64], simulated: &[f64]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&x, &y) in ideal.iter().zip(simulated) {
+        num += x * y;
+        den += x * x;
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mps::gbs::GbsSpec;
+
+    fn spec(m: usize, chi: usize, seed: u64) -> GbsSpec {
+        GbsSpec {
+            name: "t".into(),
+            m,
+            d: 3,
+            chi_cap: chi,
+            asp: 4.0,
+            decay_k: 0.0,
+            displacement_sigma: 0.0,
+            branch_skew: 0.0,
+            seed,
+            dynamic_chi: false,
+            step_ratio_override: None,
+        }
+    }
+
+    #[test]
+    fn distributions_are_normalized() {
+        let mps = spec(10, 8, 3).generate().unwrap();
+        let ps = exact_site_distributions(&mps).unwrap();
+        assert_eq!(ps.len(), 10);
+        for (i, p) in ps.iter().enumerate() {
+            let z: f64 = p.iter().sum();
+            assert!((z - 1.0).abs() < 1e-10, "site {i}: Σp = {z}");
+            assert!(p.iter().all(|&q| q >= -1e-14));
+        }
+    }
+
+    #[test]
+    fn decay_scaling_does_not_change_distributions() {
+        let base = spec(8, 6, 11).generate().unwrap();
+        let mut decayed_spec = spec(8, 6, 11);
+        decayed_spec.decay_k = 0.8;
+        let decayed = decayed_spec.generate().unwrap();
+        let p0 = exact_site_distributions(&base).unwrap();
+        let p1 = exact_site_distributions(&decayed).unwrap();
+        for (a, b) in p0.iter().zip(&p1) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_site_matches_brute_force() {
+        // M=2, tiny χ: enumerate all outcomes from the raw amplitudes.
+        let mps = spec(2, 3, 5).generate().unwrap();
+        let d = mps.d;
+        // amplitude(s0, s1) = Γ0[0, :, s0] · Γ1[:, 0, s1]
+        let mut joint = vec![vec![0.0f64; d]; d];
+        let mut z = 0.0;
+        for s0 in 0..d {
+            for s1 in 0..d {
+                let mut amp = C64::zero();
+                for x in 0..mps.sites[0].gamma.d1 {
+                    amp += mps.sites[0].gamma.at(0, x, s0) * mps.sites[1].gamma.at(x, 0, s1);
+                }
+                let p = amp.norm_sq();
+                joint[s0][s1] = p;
+                z += p;
+            }
+        }
+        let ps = exact_site_distributions(&mps).unwrap();
+        for s0 in 0..d {
+            let want: f64 = joint[s0].iter().sum::<f64>() / z;
+            assert!((ps[0][s0] - want).abs() < 1e-10, "site0 s={s0}");
+        }
+        for s1 in 0..d {
+            let want: f64 = (0..d).map(|s0| joint[s0][s1]).sum::<f64>() / z;
+            assert!((ps[1][s1] - want).abs() < 1e-10, "site1 s={s1}");
+        }
+        // Pair moment from the joint too.
+        let pm = exact_pair_moments(&mps, 1).unwrap();
+        let want: f64 = (0..d)
+            .flat_map(|a| (0..d).map(move |b| (a, b)))
+            .map(|(a, b)| (a * b) as f64 * joint[a][b] / z)
+            .sum();
+        let got = pm.iter().find(|&&(i, j, _)| i == 0 && j == 1).unwrap().2;
+        assert!((got - want).abs() < 1e-10, "pair moment {got} vs {want}");
+    }
+
+    #[test]
+    fn mean_photons_in_range() {
+        let mps = spec(12, 10, 9).generate().unwrap();
+        let means = exact_mean_photons(&mps).unwrap();
+        for m in means {
+            assert!((0.0..=(mps.d - 1) as f64).contains(&m));
+        }
+    }
+
+    #[test]
+    fn slope_of_identical_data_is_one() {
+        let x = [0.2, 0.5, 0.9, 1.4];
+        assert!((correlation_slope(&x, &x) - 1.0).abs() < 1e-12);
+        let y: Vec<f64> = x.iter().map(|v| v * 0.96).collect();
+        assert!((correlation_slope(&x, &y) - 0.96).abs() < 1e-12);
+        assert_eq!(correlation_slope(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn pair_moments_bounded() {
+        let mps = spec(8, 8, 13).generate().unwrap();
+        let pm = exact_pair_moments(&mps, 3).unwrap();
+        let dmax = (mps.d - 1) as f64;
+        for (i, j, v) in pm {
+            assert!(j > i && j - i <= 3);
+            assert!((0.0..=dmax * dmax + 1e-9).contains(&v), "({i},{j}): {v}");
+        }
+    }
+}

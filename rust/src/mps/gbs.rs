@@ -1,0 +1,280 @@
+//! Synthetic GBS-state generator — the data substitute for the paper's
+//! experimental Jiuzhang/Borealis MPS inputs (see DESIGN.md §Substitutions).
+//!
+//! The generator produces a right-canonical MPS whose *systems behaviour*
+//! matches what FastMPS exploits:
+//!
+//! - the bond-dimension profile follows the area-law ramp/plateau of
+//!   [`super::entanglement`], parameterized by the actual squeezed photon
+//!   number (ASP) exactly as Table 1 correlates;
+//! - every site tensor is scaled by `10^{−k}` so the left environment decays
+//!   as `μ_i ~ μ_0·10^{−ik}` (Eq. 5) — the numerical-range collapse that
+//!   motivates per-sample adaptive scaling (Figs. 5/6). The scale factor is
+//!   jittered per site so different samples spread over decades, like
+//!   Fig. 5's scatter;
+//! - per-sample displacement draws `μ ~ CN(0, σ²)` are derived from the
+//!   run seed (purpose-keyed streams), matching §3.4.1's batched usage.
+//!
+//! Probabilities are invariant to the per-site scaling (Alg. 1 normalizes),
+//! so the exact-marginal oracle in [`super::exact`] stays valid.
+
+use crate::mps::canonical::random_right_canonical;
+use crate::mps::entanglement::{plan_dynamic_chi, step_ratio_from_asp, ChiPlan};
+use crate::mps::{Mps, Site};
+use crate::rng::{purpose, Xoshiro256};
+use crate::util::error::Result;
+
+/// Specification of a synthetic GBS dataset.
+#[derive(Debug, Clone)]
+pub struct GbsSpec {
+    /// Dataset name (preset id or "custom").
+    pub name: String,
+    /// Number of sites (modes).
+    pub m: usize,
+    /// Physical (Fock truncation) dimension, paper uses 3–4.
+    pub d: usize,
+    /// Bond dimension cap χ.
+    pub chi_cap: usize,
+    /// Actual squeezed photon number — drives the entanglement profile.
+    pub asp: f64,
+    /// Per-site magnitude decay exponent `k` of Eq. 5 (decade per site).
+    pub decay_k: f64,
+    /// Std-dev of the complex-normal displacement draws (0 disables
+    /// displacement).
+    pub displacement_sigma: f64,
+    /// Physical-branch amplitude skew (0 disables): slice `s` of every Γ is
+    /// scaled by `skew^s`, giving the vacuum-dominant structure of lossy
+    /// GBS. Samples that measure a photon drop in magnitude by ~`skew`, so
+    /// the *inter-sample* magnitude spread grows with the site index — the
+    /// Fig. 5 range expansion that global auto-scaling cannot absorb.
+    /// Breaks exact right-canonicality; keep 0 for validation runs.
+    pub branch_skew: f64,
+    /// Dataset seed.
+    pub seed: u64,
+    /// Use the dynamic-χ plan (§3.4.2); otherwise fixed χ.
+    pub dynamic_chi: bool,
+    /// Measured step-ratio override (paper Table 1 values); `None` uses the
+    /// fitted ASP model.
+    pub step_ratio_override: Option<f64>,
+}
+
+impl GbsSpec {
+    /// The χ plan this spec induces.
+    pub fn chi_plan(&self) -> ChiPlan {
+        if self.dynamic_chi {
+            let s = self
+                .step_ratio_override
+                .unwrap_or_else(|| step_ratio_from_asp(self.asp));
+            plan_dynamic_chi(self.m, self.d, self.chi_cap, s, 8)
+        } else {
+            ChiPlan::fixed(self.m, self.d, self.chi_cap)
+        }
+    }
+
+    /// Generate the full in-memory MPS (small/medium scales; the CLI's
+    /// `gen-data` streams sites straight to the Γ store for large M).
+    pub fn generate(&self) -> Result<Mps> {
+        let plan = self.chi_plan();
+        let mut sites = Vec::with_capacity(self.m);
+        let mut chi_l = 1usize;
+        for i in 0..self.m {
+            let site = self.generate_site(i, chi_l, &plan)?;
+            chi_l = site.chi_r();
+            sites.push(site);
+        }
+        let mps = Mps {
+            sites,
+            d: self.d,
+        };
+        mps.check()?;
+        Ok(mps)
+    }
+
+    /// Generate site `i` alone (deterministic in `(seed, i)` — the property
+    /// the streaming generator and the model-parallel baseline rely on:
+    /// every rank can materialize its own site without communication).
+    pub fn generate_site(&self, i: usize, chi_l: usize, plan: &ChiPlan) -> Result<Site> {
+        let chi_r = if i + 1 == self.m { 1 } else { plan.chi[i] };
+        let mut rng = Xoshiro256::stream(self.seed, purpose::DATAGEN, i as u64);
+        let mut gamma = random_right_canonical(&mut rng, chi_l, chi_r, self.d)?;
+        // Eq. 5 magnitude decay with ±25% per-site jitter (spreads samples
+        // across decades over many sites, as in Fig. 5).
+        let jitter = 1.0 + 0.5 * (rng.unit_f64() - 0.5);
+        let scale = 10f64.powf(-self.decay_k * jitter);
+        for z in &mut gamma.data {
+            *z = z.scale(scale);
+        }
+        if self.branch_skew > 0.0 {
+            for i in 0..gamma.d0 {
+                for j in 0..gamma.d1 {
+                    for s in 1..self.d {
+                        let f = self.branch_skew.powi(s as i32);
+                        let z = gamma.at(i, j, s);
+                        *gamma.at_mut(i, j, s) = z.scale(f);
+                    }
+                }
+            }
+        }
+        Ok(Site {
+            lambda: vec![1.0; chi_r],
+            gamma,
+        })
+    }
+
+    /// Displacement draws for samples `[sample0, sample0+n)` at site `i`,
+    /// reproducible regardless of batch partitioning.
+    pub fn displacement_draws(&self, site: usize, sample0: u64, n: usize) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(n);
+        if self.displacement_sigma == 0.0 {
+            out.resize(n, (0.0, 0.0));
+            return out;
+        }
+        for s in 0..n as u64 {
+            let mut rng = Xoshiro256::stream(
+                self.seed ^ (site as u64).rotate_left(17),
+                purpose::DISPLACE,
+                sample0 + s,
+            );
+            let (re, im) = rng.complex_normal();
+            out.push((re * self.displacement_sigma, im * self.displacement_sigma));
+        }
+        out
+    }
+
+    /// Measurement thresholds (Alg. 1's `rand(N₂)`) for samples
+    /// `[sample0, sample0+n)` at site `site` — also partition-invariant.
+    pub fn thresholds(&self, site: usize, sample0: u64, n: usize) -> Vec<f32> {
+        (0..n as u64)
+            .map(|s| {
+                let mut rng = Xoshiro256::stream(
+                    self.seed ^ (site as u64).rotate_left(33),
+                    purpose::THRESHOLD,
+                    sample0 + s,
+                );
+                rng.unit_f32()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mps::canonical::right_canonical_residual;
+
+    fn small_spec() -> GbsSpec {
+        GbsSpec {
+            name: "test".into(),
+            m: 12,
+            d: 3,
+            chi_cap: 16,
+            asp: 4.0,
+            decay_k: 0.0,
+            displacement_sigma: 0.3,
+            branch_skew: 0.0,
+            seed: 7,
+            dynamic_chi: true,
+            step_ratio_override: None,
+        }
+    }
+
+    #[test]
+    fn generates_valid_canonical_chain() {
+        let mps = small_spec().generate().unwrap();
+        assert_eq!(mps.num_sites(), 12);
+        mps.check().unwrap();
+        for (i, s) in mps.sites.iter().enumerate() {
+            let r = right_canonical_residual(&s.gamma);
+            assert!(r < 1e-10, "site {i}: residual {r}");
+        }
+    }
+
+    #[test]
+    fn decay_scales_tensors() {
+        let mut spec = small_spec();
+        spec.decay_k = 1.0; // one decade per site (±25%)
+        let mps = spec.generate().unwrap();
+        for s in &mps.sites {
+            let r = right_canonical_residual(&s.gamma);
+            // Scaled tensor: Σ ΓΓ† = c²·I with c ∈ [10^-1.25, 10^-0.75].
+            assert!(r > 0.9, "decayed site should not be unit-canonical");
+            let c2 = 1.0 - r; // residual at diagonal = |c²−1|
+            assert!(c2 < 0.1, "c² should be ≤ 10^-1.5, got residual {r}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = small_spec().generate().unwrap();
+        let b = small_spec().generate().unwrap();
+        for (x, y) in a.sites.iter().zip(&b.sites) {
+            assert_eq!(x.gamma.data, y.gamma.data);
+        }
+    }
+
+    #[test]
+    fn site_generation_is_independent() {
+        // generate_site(i) must equal the site from the full chain.
+        let spec = small_spec();
+        let plan = spec.chi_plan();
+        let full = spec.generate().unwrap();
+        let mut chi_l = 1;
+        for i in 0..spec.m {
+            let s = spec.generate_site(i, chi_l, &plan).unwrap();
+            assert_eq!(s.gamma.data, full.sites[i].gamma.data, "site {i}");
+            chi_l = s.chi_r();
+        }
+    }
+
+    #[test]
+    fn draws_partition_invariant() {
+        let spec = small_spec();
+        let all = spec.displacement_draws(3, 0, 10);
+        let tail = spec.displacement_draws(3, 6, 4);
+        assert_eq!(&all[6..], &tail[..]);
+        let th_all = spec.thresholds(3, 0, 10);
+        let th_tail = spec.thresholds(3, 6, 4);
+        assert_eq!(&th_all[6..], &th_tail[..]);
+    }
+
+    #[test]
+    fn zero_sigma_disables_displacement() {
+        let mut spec = small_spec();
+        spec.displacement_sigma = 0.0;
+        let d = spec.displacement_draws(0, 0, 5);
+        assert!(d.iter().all(|&(r, i)| r == 0.0 && i == 0.0));
+    }
+
+    #[test]
+    fn branch_skew_suppresses_photon_branches() {
+        let mut spec = small_spec();
+        spec.branch_skew = 0.1;
+        let mps = spec.generate().unwrap();
+        for site in &mps.sites {
+            let g = &site.gamma;
+            let mut norms = vec![0.0f64; spec.d];
+            for i in 0..g.d0 {
+                for j in 0..g.d1 {
+                    for s in 0..spec.d {
+                        norms[s] += g.at(i, j, s).norm_sq();
+                    }
+                }
+            }
+            // Branch s is suppressed by skew^(2s) relative to branch 0.
+            assert!(norms[1] < norms[0] * 0.05);
+            assert!(norms[2] < norms[1] * 0.05);
+        }
+    }
+
+    #[test]
+    fn dynamic_plan_smaller_than_fixed() {
+        let spec = small_spec();
+        let dynamic = spec.chi_plan();
+        let mut fixed_spec = spec.clone();
+        fixed_spec.dynamic_chi = false;
+        let fixed = fixed_spec.chi_plan();
+        let sum_d: usize = dynamic.chi.iter().sum();
+        let sum_f: usize = fixed.chi.iter().sum();
+        assert!(sum_d <= sum_f);
+    }
+}

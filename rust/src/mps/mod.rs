@@ -1,0 +1,175 @@
+//! Matrix Product State representation and the synthetic GBS state
+//! generator.
+//!
+//! An MPS over `M` sites with physical dimension `d` is a chain of site
+//! tensors `Γ_i (χ_i, χ_{i+1}, d)` with `χ_0 = χ_M = 1`, plus a per-bond
+//! coefficient vector `Λ_i` (the paper's Alg. 1 input). We generate states
+//! in **right-canonical form** (`Σ_s Γ_i[s]·Γ_i[s]† = I`), for which the
+//! sequential measurement of Alg. 1 with unit Λ is exactly the Born rule —
+//! that is what makes the validation experiments (Fig. 9) well-defined:
+//! exact single-site and pair marginals are computable by a transfer-matrix
+//! recursion ([`exact`]) and must match the sampler.
+//!
+//! The paper's datasets are experimental GBS states; we substitute
+//! [`gbs::GbsSpec`]-driven synthetic states that preserve what the paper's
+//! optimizations feed on (see DESIGN.md §Substitutions): the area-law
+//! entanglement/χ profile ([`entanglement`]), the per-site magnitude decay
+//! `μ_i ~ μ_0·10^{−ik}` (Eq. 5) that motivates adaptive scaling, and the
+//! per-sample displacement draws of §3.4.1.
+
+pub mod canonical;
+pub mod entanglement;
+pub mod exact;
+pub mod gbs;
+
+use crate::tensor::Tensor3;
+
+/// One site of an MPS: the Γ tensor plus the bond coefficient vector Λ for
+/// its *right* bond (length `gamma.d1`). Λ enters Alg. 1's probability
+/// contraction; right-canonical generation sets it to all-ones.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub gamma: Tensor3<f64>,
+    pub lambda: Vec<f64>,
+}
+
+impl Site {
+    pub fn chi_l(&self) -> usize {
+        self.gamma.d0
+    }
+
+    pub fn chi_r(&self) -> usize {
+        self.gamma.d1
+    }
+
+    pub fn phys_d(&self) -> usize {
+        self.gamma.d2
+    }
+}
+
+/// An in-memory MPS (small scales / tests; large scales stream through
+/// [`crate::io::GammaStore`] instead).
+#[derive(Debug, Clone)]
+pub struct Mps {
+    pub sites: Vec<Site>,
+    pub d: usize,
+}
+
+impl Mps {
+    pub fn num_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// Bond dimension profile `χ_1..χ_{M-1}` (interior bonds).
+    pub fn chi_profile(&self) -> Vec<usize> {
+        self.sites[..self.sites.len() - 1]
+            .iter()
+            .map(|s| s.chi_r())
+            .collect()
+    }
+
+    /// Validate chain consistency: boundary bonds are 1, adjacent bonds
+    /// match, Λ lengths match, uniform physical dimension.
+    pub fn check(&self) -> crate::Result<()> {
+        use crate::util::error::Error;
+        if self.sites.is_empty() {
+            return Err(Error::shape("empty MPS"));
+        }
+        if self.sites[0].chi_l() != 1 {
+            return Err(Error::shape("left boundary bond != 1"));
+        }
+        if self.sites.last().unwrap().chi_r() != 1 {
+            return Err(Error::shape("right boundary bond != 1"));
+        }
+        for (i, w) in self.sites.windows(2).enumerate() {
+            if w[0].chi_r() != w[1].chi_l() {
+                return Err(Error::shape(format!(
+                    "bond mismatch between sites {i} and {}: {} vs {}",
+                    i + 1,
+                    w[0].chi_r(),
+                    w[1].chi_l()
+                )));
+            }
+        }
+        for (i, s) in self.sites.iter().enumerate() {
+            if s.lambda.len() != s.chi_r() {
+                return Err(Error::shape(format!(
+                    "site {i}: Λ length {} != χ_r {}",
+                    s.lambda.len(),
+                    s.chi_r()
+                )));
+            }
+            if s.phys_d() != self.d {
+                return Err(Error::shape(format!(
+                    "site {i}: physical dim {} != {}",
+                    s.phys_d(),
+                    self.d
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total parameter count (the paper's "2452B parameters" aside).
+    pub fn num_params(&self) -> u64 {
+        self.sites.iter().map(|s| s.gamma.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor3;
+
+    fn site(chi_l: usize, chi_r: usize, d: usize) -> Site {
+        Site {
+            gamma: Tensor3::zeros(chi_l, chi_r, d),
+            lambda: vec![1.0; chi_r],
+        }
+    }
+
+    #[test]
+    fn check_accepts_valid_chain() {
+        let mps = Mps {
+            sites: vec![site(1, 3, 2), site(3, 4, 2), site(4, 1, 2)],
+            d: 2,
+        };
+        mps.check().unwrap();
+        assert_eq!(mps.chi_profile(), vec![3, 4]);
+        assert_eq!(mps.num_params(), (6 + 24 + 8) as u64);
+    }
+
+    #[test]
+    fn check_rejects_bond_mismatch() {
+        let mps = Mps {
+            sites: vec![site(1, 3, 2), site(4, 1, 2)],
+            d: 2,
+        };
+        assert!(mps.check().is_err());
+    }
+
+    #[test]
+    fn check_rejects_bad_boundaries() {
+        let mps = Mps {
+            sites: vec![site(2, 1, 2)],
+            d: 2,
+        };
+        assert!(mps.check().is_err());
+        let mps2 = Mps {
+            sites: vec![site(1, 2, 2)],
+            d: 2,
+        };
+        assert!(mps2.check().is_err());
+    }
+
+    #[test]
+    fn check_rejects_lambda_mismatch() {
+        let mut s = site(1, 3, 2);
+        s.lambda.pop();
+        let mps = Mps {
+            sites: vec![s, site(3, 1, 2)],
+            d: 2,
+        };
+        assert!(mps.check().is_err());
+    }
+}

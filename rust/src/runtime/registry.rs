@@ -1,0 +1,244 @@
+//! Artifact manifest index and shape-bucket selection.
+
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VariantKind {
+    Step,
+    StepDisp,
+    Partial,
+    Finalize,
+}
+
+impl VariantKind {
+    fn parse(s: &str) -> Result<VariantKind> {
+        match s {
+            "step" => Ok(VariantKind::Step),
+            "step_disp" => Ok(VariantKind::StepDisp),
+            "partial" => Ok(VariantKind::Partial),
+            "finalize" => Ok(VariantKind::Finalize),
+            _ => Err(Error::artifact(format!("unknown variant kind '{s}'"))),
+        }
+    }
+}
+
+/// One AOT-compiled shape variant.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub kind: VariantKind,
+    pub name: String,
+    pub file: String,
+    /// Micro batch N₂ the module was lowered for.
+    pub n: usize,
+    /// χ_l bucket (0 for finalize).
+    pub x: usize,
+    /// χ_r bucket.
+    pub y: usize,
+    pub d: usize,
+    pub tf32: bool,
+}
+
+/// The loaded artifact index.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    pub variants: Vec<Variant>,
+}
+
+impl ArtifactRegistry {
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| Error::io(path.display(), e))?;
+        let j = Json::parse(&text)?;
+        if j.req("format")?.as_str() != Some("fastmps-artifacts-v1") {
+            return Err(Error::artifact("unknown artifact manifest format"));
+        }
+        let mut variants = Vec::new();
+        for v in j
+            .req("variants")?
+            .as_arr()
+            .ok_or_else(|| Error::artifact("variants not an array"))?
+        {
+            let kind = VariantKind::parse(
+                v.req("kind")?
+                    .as_str()
+                    .ok_or_else(|| Error::artifact("kind"))?,
+            )?;
+            variants.push(Variant {
+                kind,
+                name: v
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| Error::artifact("name"))?
+                    .to_string(),
+                file: v
+                    .req("file")?
+                    .as_str()
+                    .ok_or_else(|| Error::artifact("file"))?
+                    .to_string(),
+                n: v.req("n")?.as_usize().ok_or_else(|| Error::artifact("n"))?,
+                x: v.get("x").and_then(|x| x.as_usize()).unwrap_or(0),
+                y: v.req("y")?.as_usize().ok_or_else(|| Error::artifact("y"))?,
+                d: v.req("d")?.as_usize().ok_or_else(|| Error::artifact("d"))?,
+                tf32: v.get("tf32").and_then(|b| b.as_bool()).unwrap_or(false),
+            });
+        }
+        if variants.is_empty() {
+            return Err(Error::artifact("empty artifact manifest"));
+        }
+        Ok(ArtifactRegistry { variants })
+    }
+
+    /// Pick the cheapest step variant covering `(n, x, y, d)`:
+    /// exact `n`/`d`/`displaced`/`tf32` match, smallest `x`/`y` buckets
+    /// ≥ the requested bonds (zero-padding is exact).
+    pub fn select_step(
+        &self,
+        n: usize,
+        x: usize,
+        y: usize,
+        d: usize,
+        displaced: bool,
+        tf32: bool,
+    ) -> Result<Variant> {
+        let kind = if displaced {
+            VariantKind::StepDisp
+        } else {
+            VariantKind::Step
+        };
+        let mut best: Option<&Variant> = None;
+        for v in &self.variants {
+            if v.kind != kind || v.d != d || v.n < n || v.x < x || v.y < y {
+                continue;
+            }
+            if v.tf32 != tf32 {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => (v.x * v.y, v.n) < (b.x * b.y, b.n),
+            };
+            if better {
+                best = Some(v);
+            }
+        }
+        // tf32 falls back to plain f32 artifacts rather than failing.
+        if best.is_none() && tf32 {
+            return self.select_step(n, x, y, d, displaced, false);
+        }
+        best.cloned().ok_or_else(|| {
+            Error::artifact(format!(
+                "no {} artifact covers n={n} x={x} y={y} d={d} (have: {})",
+                if displaced { "step_disp" } else { "step" },
+                self.variants
+                    .iter()
+                    .map(|v| v.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })
+    }
+
+    /// Largest micro batch any step artifact supports for `(d, displaced)`.
+    pub fn max_micro_batch(&self, d: usize, displaced: bool) -> Option<usize> {
+        let kind = if displaced {
+            VariantKind::StepDisp
+        } else {
+            VariantKind::Step
+        };
+        self.variants
+            .iter()
+            .filter(|v| v.kind == kind && v.d == d)
+            .map(|v| v.n)
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> ArtifactRegistry {
+        let mk = |kind, n, x, y, d, tf32| Variant {
+            kind,
+            name: format!("v{n}_{x}_{y}_{d}_{tf32}"),
+            file: "f".into(),
+            n,
+            x,
+            y,
+            d,
+            tf32,
+        };
+        ArtifactRegistry {
+            variants: vec![
+                mk(VariantKind::Step, 256, 32, 32, 3, false),
+                mk(VariantKind::Step, 256, 64, 64, 3, false),
+                mk(VariantKind::Step, 256, 96, 96, 3, false),
+                mk(VariantKind::Step, 256, 96, 96, 3, true),
+                mk(VariantKind::StepDisp, 256, 96, 96, 3, false),
+                mk(VariantKind::Step, 256, 1, 32, 3, false),
+            ],
+        }
+    }
+
+    #[test]
+    fn selects_smallest_cover() {
+        let r = registry();
+        let v = r.select_step(100, 20, 30, 3, false, false).unwrap();
+        assert_eq!((v.x, v.y), (32, 32));
+        let v = r.select_step(256, 33, 10, 3, false, false).unwrap();
+        assert_eq!((v.x, v.y), (64, 64));
+        let v = r.select_step(256, 1, 20, 3, false, false).unwrap();
+        assert_eq!((v.x, v.y), (1, 32));
+    }
+
+    #[test]
+    fn tf32_preference_and_fallback() {
+        let r = registry();
+        let v = r.select_step(256, 96, 96, 3, false, true).unwrap();
+        assert!(v.tf32);
+        // tf32 preference is strict: the (larger) tf32 bucket wins over a
+        // tighter f32 one.
+        let v = r.select_step(256, 20, 20, 3, false, true).unwrap();
+        assert!(v.tf32);
+        assert_eq!((v.x, v.y), (96, 96));
+        // With no tf32 candidate at all (d=4 here), fall back to f32.
+        let mut reg = registry();
+        reg.variants.push(Variant {
+            kind: VariantKind::Step,
+            name: "f32only_d4".into(),
+            file: "f".into(),
+            n: 256,
+            x: 64,
+            y: 64,
+            d: 4,
+            tf32: false,
+        });
+        let v = reg.select_step(256, 20, 20, 4, false, true).unwrap();
+        assert!(!v.tf32);
+    }
+
+    #[test]
+    fn displaced_selection() {
+        let r = registry();
+        let v = r.select_step(256, 50, 50, 3, true, false).unwrap();
+        assert_eq!(v.kind, VariantKind::StepDisp);
+    }
+
+    #[test]
+    fn errors_when_nothing_covers() {
+        let r = registry();
+        assert!(r.select_step(256, 200, 96, 3, false, false).is_err());
+        assert!(r.select_step(512, 32, 32, 3, false, false).is_err());
+        assert!(r.select_step(256, 32, 32, 5, false, false).is_err());
+    }
+
+    #[test]
+    fn max_micro_batch_reported() {
+        let r = registry();
+        assert_eq!(r.max_micro_batch(3, false), Some(256));
+        assert_eq!(r.max_micro_batch(7, false), None);
+    }
+}

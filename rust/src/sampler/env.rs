@@ -1,0 +1,85 @@
+//! Environment precision adapters between the boundary representation
+//! ([`SplitBuf`], f32 planes) and the native engines' `Mat<T>`.
+
+use crate::config::ComputePrecision;
+use crate::tensor::{Mat, SplitBuf};
+use crate::util::error::Result;
+use crate::util::f16;
+
+/// Lift a SplitBuf environment to f64 for the native-f64 oracle.
+pub fn to_f64(env: &SplitBuf) -> Result<Mat<f64>> {
+    env.to_mat_c64()
+}
+
+/// Lift to f32 with optional TF32/FP16 input rounding (what tensor cores
+/// resp. a ComplexHalf pipeline do to their operands).
+pub fn to_f32(env: &SplitBuf, precision: ComputePrecision) -> Result<Mat<f32>> {
+    let mut m = env.to_mat_c32()?;
+    match precision {
+        ComputePrecision::Tf32 => {
+            for z in &mut m.data {
+                z.re = f16::round_tf32(z.re);
+                z.im = f16::round_tf32(z.im);
+            }
+        }
+        ComputePrecision::F16 => {
+            for z in &mut m.data {
+                z.re = f16::round_f16(z.re);
+                z.im = f16::round_f16(z.im);
+            }
+        }
+        _ => {}
+    }
+    Ok(m)
+}
+
+/// Store back into the boundary representation.
+pub fn from_f64(m: &Mat<f64>) -> SplitBuf {
+    SplitBuf::from_mat_c64(m)
+}
+
+pub fn from_f32(m: &Mat<f32>) -> SplitBuf {
+    SplitBuf::from_mat_c32(m)
+}
+
+/// §3.3.2: round the boundary buffer through FP16 (the stored/streamed left
+/// environment) — used when the coordinator spills environments between
+/// macro-batch rounds.
+pub fn f16_storage_pass(env: &mut SplitBuf) {
+    env.round_f16_in_place();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::C64;
+
+    #[test]
+    fn roundtrip_f64() {
+        let mut m: Mat<f64> = Mat::zeros(2, 2);
+        m[(0, 1)] = C64::new(0.5, -0.25);
+        let sb = from_f64(&m);
+        let back = to_f64(&sb).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn tf32_rounding_changes_values() {
+        let mut sb = SplitBuf::zeros(&[1, 1]);
+        sb.re[0] = 1.0 + 1.0 / 4096.0;
+        let plain = to_f32(&sb, ComputePrecision::F32).unwrap();
+        let tf = to_f32(&sb, ComputePrecision::Tf32).unwrap();
+        assert_ne!(plain[(0, 0)].re, tf[(0, 0)].re);
+        assert_eq!(tf[(0, 0)].re, 1.0);
+    }
+
+    #[test]
+    fn f16_pass_underflows_small() {
+        let mut sb = SplitBuf::zeros(&[1, 2]);
+        sb.re[0] = 1e-10;
+        sb.re[1] = 0.5;
+        f16_storage_pass(&mut sb);
+        assert_eq!(sb.re[0], 0.0);
+        assert_eq!(sb.re[1], 0.5);
+    }
+}

@@ -1,0 +1,255 @@
+//! Native Alg. 1: measurement of the physical index + environment collapse,
+//! with the three scaling strategies of §3.3.1.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly (same threshold
+//! semantics, same degenerate-row handling) so the native and XLA engines
+//! sample identical outcomes from identical inputs.
+
+use num_traits::Float;
+
+use crate::config::ScalingMode;
+use crate::tensor::{Mat, Tensor3};
+use crate::util::error::{Error, Result};
+
+/// Measurement output.
+pub struct Measured<T> {
+    /// Collapsed (N, χ_r) left environment (scaled per `mode`).
+    pub env: Mat<T>,
+    /// Outcome per sample, in `[0, d)`.
+    pub samples: Vec<i32>,
+    /// Number of samples whose probability row was all-zero (underflow
+    /// collapse — the Fig. 6 failure signal).
+    pub dead_rows: usize,
+}
+
+/// Alg. 1 over the unmeasured temp tensor `(N, χ_r, d)`.
+pub fn measure<T: Float + std::ops::AddAssign>(
+    temp: &Tensor3<T>,
+    lambda: &[T],
+    thresholds: &[f32],
+    mode: ScalingMode,
+) -> Result<Measured<T>> {
+    let (n, y, d) = (temp.d0, temp.d1, temp.d2);
+    if lambda.len() != y {
+        return Err(Error::shape(format!(
+            "measure: Λ has {} entries for χ_r={y}",
+            lambda.len()
+        )));
+    }
+    if thresholds.len() != n {
+        return Err(Error::shape(format!(
+            "measure: {} thresholds for N={n}",
+            thresholds.len()
+        )));
+    }
+
+    let mut env = Mat::zeros(n, y);
+    let mut samples = vec![0i32; n];
+    let mut dead_rows = 0usize;
+    let mut probs = vec![T::zero(); d];
+
+    for s in 0..n {
+        // probs_j = Σ_y |temp[s,y,j]|²·Λ_y
+        for p in probs.iter_mut() {
+            *p = T::zero();
+        }
+        let panel = temp.panel(s); // (y, d) contiguous
+        for yy in 0..y {
+            let lam = lambda[yy];
+            let row = &panel[yy * d..(yy + 1) * d];
+            for (j, z) in row.iter().enumerate() {
+                probs[j] += z.norm_sq() * lam;
+            }
+        }
+        let tot: T = probs.iter().fold(T::zero(), |a, &b| a + b);
+        let outcome = if tot > T::zero() {
+            // cumulative > threshold count (matches ref.py).
+            let u = T::from(thresholds[s]).unwrap();
+            let mut cum = T::zero();
+            let mut k = 0i32;
+            for &p in probs.iter() {
+                cum = cum + p / tot;
+                if u > cum {
+                    k += 1;
+                }
+            }
+            k.min(d as i32 - 1)
+        } else {
+            dead_rows += 1;
+            0
+        };
+        samples[s] = outcome;
+
+        // Collapse: env[s, :] = temp[s, :, outcome].
+        let o = outcome as usize;
+        let erow = env.row_mut(s);
+        for yy in 0..y {
+            erow[yy] = panel[yy * d + o];
+        }
+    }
+
+    apply_scaling(&mut env, mode);
+    Ok(Measured {
+        env,
+        samples,
+        dead_rows,
+    })
+}
+
+/// Apply the configured rescaling to a collapsed environment.
+pub fn apply_scaling<T: Float + std::ops::AddAssign>(env: &mut Mat<T>, mode: ScalingMode) {
+    match mode {
+        ScalingMode::None => {}
+        ScalingMode::Global => {
+            // Baseline [19]: one factor for the whole batch (shifts toward
+            // 1 but cannot narrow the inter-sample spread — Fig. 5/6).
+            let m = env.max_abs();
+            if m > T::zero() {
+                let inv = T::one() / m;
+                env.scale_in_place(inv);
+            }
+        }
+        ScalingMode::PerSample => {
+            let cols = env.cols;
+            for r in 0..env.rows {
+                let row = env.row_mut(r);
+                let mut m2 = T::zero();
+                for z in row.iter() {
+                    let a = z.norm_sq();
+                    if a > m2 {
+                        m2 = a;
+                    }
+                }
+                if m2 > T::zero() {
+                    let inv = T::one() / m2.sqrt();
+                    for z in row.iter_mut() {
+                        *z = z.scale(inv);
+                    }
+                }
+            }
+            let _ = cols;
+        }
+    }
+}
+
+/// Per-sample max |env| and max/min ratio — the Fig. 5 scatter data.
+pub fn env_sample_stats<T: Float + std::ops::AddAssign>(env: &Mat<T>) -> Vec<(f64, f64)> {
+    let mut out = Vec::with_capacity(env.rows);
+    for r in 0..env.rows {
+        let mut maxv = 0.0f64;
+        let mut minv = f64::INFINITY;
+        for z in env.row(r) {
+            let a = z.abs().to_f64().unwrap_or(0.0);
+            if a > maxv {
+                maxv = a;
+            }
+            if a > 0.0 && a < minv {
+                minv = a;
+            }
+        }
+        let ratio = if minv.is_finite() && minv > 0.0 {
+            maxv / minv
+        } else {
+            f64::INFINITY
+        };
+        out.push((maxv, ratio));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::C64;
+
+    fn temp_with_probs(probs: &[f64]) -> Tensor3<f64> {
+        // One sample, y=1, amplitudes √p.
+        let d = probs.len();
+        let mut t = Tensor3::zeros(1, 1, d);
+        for (j, &p) in probs.iter().enumerate() {
+            *t.at_mut(0, 0, j) = C64::new(p.sqrt(), 0.0);
+        }
+        t
+    }
+
+    #[test]
+    fn outcome_follows_threshold() {
+        let t = temp_with_probs(&[0.2, 0.3, 0.5]);
+        let lam = vec![1.0f64];
+        for (u, want) in [(0.1f32, 0), (0.25, 1), (0.6, 2), (0.99, 2)] {
+            let m = measure(&t, &lam, &[u], ScalingMode::None).unwrap();
+            assert_eq!(m.samples[0], want, "u={u}");
+        }
+    }
+
+    #[test]
+    fn env_is_collapsed_column() {
+        let mut t = Tensor3::zeros(1, 3, 2);
+        for y in 0..3 {
+            *t.at_mut(0, y, 0) = C64::new(y as f64 + 1.0, 0.0);
+            *t.at_mut(0, y, 1) = C64::new(-(y as f64) - 10.0, 0.5);
+        }
+        let m = measure(&t, &[1.0, 1.0, 1.0], &[0.999], ScalingMode::None).unwrap();
+        assert_eq!(m.samples[0], 1);
+        assert_eq!(m.env[(0, 2)], C64::new(-12.0, 0.5));
+    }
+
+    #[test]
+    fn dead_rows_counted() {
+        let t: Tensor3<f64> = Tensor3::zeros(2, 2, 2);
+        let m = measure(&t, &[1.0, 1.0], &[0.5, 0.5], ScalingMode::PerSample).unwrap();
+        assert_eq!(m.dead_rows, 2);
+        assert_eq!(m.samples, vec![0, 0]);
+    }
+
+    #[test]
+    fn per_sample_scaling_unit_rows() {
+        let mut env: Mat<f64> = Mat::zeros(2, 2);
+        env[(0, 0)] = C64::new(1e-20, 0.0);
+        env[(0, 1)] = C64::new(0.0, 2e-20);
+        env[(1, 0)] = C64::new(3.0, 4.0);
+        apply_scaling(&mut env, ScalingMode::PerSample);
+        assert!((env[(0, 1)].abs() - 1.0).abs() < 1e-12);
+        assert!((env[(1, 0)].abs() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn global_scaling_single_factor() {
+        let mut env: Mat<f64> = Mat::zeros(2, 1);
+        env[(0, 0)] = C64::new(4.0, 0.0);
+        env[(1, 0)] = C64::new(1.0, 0.0);
+        apply_scaling(&mut env, ScalingMode::Global);
+        assert!((env[(0, 0)].re - 1.0).abs() < 1e-12);
+        assert!((env[(1, 0)].re - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_weights_probabilities() {
+        // Two bond channels with different Λ: outcome prefers the weighted one.
+        let mut t = Tensor3::zeros(1, 2, 2);
+        *t.at_mut(0, 0, 0) = C64::new(1.0, 0.0); // channel 0 → outcome 0
+        *t.at_mut(0, 1, 1) = C64::new(1.0, 0.0); // channel 1 → outcome 1
+        // Λ = [0, 1]: outcome 1 is certain.
+        let m = measure(&t, &[0.0, 1.0], &[0.9999], ScalingMode::None).unwrap();
+        assert_eq!(m.samples[0], 1);
+        let m2 = measure(&t, &[1.0, 0.0], &[0.0001], ScalingMode::None).unwrap();
+        assert_eq!(m2.samples[0], 0);
+    }
+
+    #[test]
+    fn stats_report_spread() {
+        let mut env: Mat<f64> = Mat::zeros(1, 3);
+        env[(0, 0)] = C64::new(1.0, 0.0);
+        env[(0, 1)] = C64::new(0.01, 0.0);
+        let st = env_sample_stats(&env);
+        assert!((st[0].0 - 1.0).abs() < 1e-12);
+        assert!((st[0].1 - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let t: Tensor3<f64> = Tensor3::zeros(2, 3, 2);
+        assert!(measure(&t, &[1.0; 2], &[0.5; 2], ScalingMode::None).is_err());
+        assert!(measure(&t, &[1.0; 3], &[0.5; 1], ScalingMode::None).is_err());
+    }
+}

@@ -1,0 +1,61 @@
+//! The sampling engines: the per-site step (Fig. 1 / Alg. 1) over a batch
+//! of samples.
+//!
+//! Two engines implement [`StepEngine`]:
+//! - [`native::NativeEngine`] — rust compute at f64/f32/TF32-emulated
+//!   precision with selectable scaling strategy. The correctness oracle and
+//!   the precision-study workhorse (Figs. 5/6).
+//! - [`crate::runtime::XlaEngine`] — the production hot path: executes the
+//!   AOT-lowered Pallas/JAX step artifacts through PJRT.
+//!
+//! Both consume the same inputs (Γ site, Λ, thresholds, displacement draws)
+//! and produce the next left environment plus collapsed outcomes, so they
+//! are interchangeable under the coordinators.
+
+pub mod env;
+pub mod measurement;
+pub mod native;
+pub mod sink;
+
+use crate::mps::Site;
+use crate::tensor::SplitBuf;
+use crate::util::error::Result;
+
+/// A batch step executor. `env` is the (N, χ_l) split-plane left
+/// environment; on success it becomes the (N, χ_r) environment after the
+/// site, and `samples` receives the N collapsed outcomes.
+pub trait StepEngine {
+    fn step(
+        &mut self,
+        env: &mut SplitBuf,
+        site: &Site,
+        thresholds: &[f32],
+        displacements: Option<&[(f64, f64)]>,
+        samples: &mut Vec<i32>,
+    ) -> Result<()>;
+
+    /// Human-readable engine id for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Initial left environment: ones at the single boundary bond.
+pub fn boundary_env(n: usize) -> SplitBuf {
+    let mut e = SplitBuf::zeros(&[n, 1]);
+    for v in &mut e.re {
+        *v = 1.0;
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_env_is_ones() {
+        let e = boundary_env(4);
+        assert_eq!(e.shape, vec![4, 1]);
+        assert!(e.re.iter().all(|&x| x == 1.0));
+        assert!(e.im.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,359 @@
+//! Native rust step engine — the correctness oracle and precision-study
+//! workhorse.
+//!
+//! Executes the same per-site pipeline as the AOT XLA artifacts (contract →
+//! optional displacement → measure → rescale) with full control over the
+//! floating-point path: f64, f32, or TF32-emulated inputs, and any of the
+//! three scaling strategies. The Fig. 5/6 experiments need exactly this
+//! control; the XLA engine wins on throughput.
+
+use num_traits::Float;
+
+use crate::config::{ComputePrecision, ScalingMode};
+use crate::linalg::{contract_env, displacement_fast_batch, matmul_flops};
+use crate::metrics::{keys, Metrics};
+use crate::mps::Site;
+use crate::sampler::{env as envmod, measurement, StepEngine};
+use crate::tensor::{Complex, Mat, SplitBuf, Tensor3};
+use crate::util::error::{Error, Result};
+
+/// Native engine configuration + counters.
+pub struct NativeEngine {
+    pub precision: ComputePrecision,
+    pub scaling: ScalingMode,
+    /// Threads for the bond-contraction GEMM.
+    pub threads: usize,
+    /// Round Γ through f16 before compute (models fp16-stored tensors that
+    /// were only converted, §3.3.2).
+    pub gamma_f16: bool,
+    pub metrics: Metrics,
+    /// Dead (underflowed) sample rows seen so far — Fig. 6's failure signal.
+    pub dead_rows: u64,
+}
+
+impl NativeEngine {
+    pub fn new(precision: ComputePrecision, scaling: ScalingMode, threads: usize) -> Self {
+        NativeEngine {
+            precision,
+            scaling,
+            threads: threads.max(1),
+            gamma_f16: false,
+            metrics: Metrics::new(),
+            dead_rows: 0,
+        }
+    }
+
+    fn step_typed<T>(
+        &mut self,
+        env: Mat<T>,
+        gamma: &Tensor3<T>,
+        lambda: &[T],
+        thresholds: &[f32],
+        displacements: Option<&[(f64, f64)]>,
+        samples: &mut Vec<i32>,
+    ) -> Result<Mat<T>>
+    where
+        T: Float + std::ops::AddAssign + Send + Sync,
+    {
+        let n = env.rows;
+        let mut temp = self.metrics.time("compute", || {
+            contract_env(&env, gamma, self.threads)
+        })?;
+        self.metrics.add(
+            keys::FLOPS,
+            matmul_flops(n, gamma.d0, gamma.d1 * gamma.d2),
+        );
+
+        if let Some(mus) = displacements {
+            if mus.len() != n {
+                return Err(Error::shape(format!(
+                    "displacements: {} for N={n}",
+                    mus.len()
+                )));
+            }
+            self.metrics.time("displace", || {
+                apply_displacement(&mut temp, mus);
+            });
+            self.metrics
+                .add(keys::FLOPS, 8 * (n * gamma.d1 * gamma.d2 * gamma.d2) as u64);
+        }
+
+        let measured = self.metrics.time("measure", || {
+            measurement::measure(&temp, lambda, thresholds, self.scaling)
+        })?;
+        self.metrics
+            .add(keys::FLOPS, 8 * (n * gamma.d1 * gamma.d2) as u64);
+        self.dead_rows += measured.dead_rows as u64;
+        *samples = measured.samples;
+        Ok(measured.env)
+    }
+}
+
+/// Apply per-sample fast displacement matrices to the temp tensor in place:
+/// `temp[s, y, :] ← temp[s, y, :] · D(μ_s)`.
+fn apply_displacement<T: Float + std::ops::AddAssign>(temp: &mut Tensor3<T>, mus: &[(f64, f64)]) {
+    let (n, y, d) = (temp.d0, temp.d1, temp.d2);
+    let mu_c: Vec<Complex<T>> = mus
+        .iter()
+        .map(|&(re, im)| Complex::new(T::from(re).unwrap(), T::from(im).unwrap()))
+        .collect();
+    // Batched analytic D, batch-last layout (§3.4.1).
+    let dmats = displacement_fast_batch(&mu_c, d).expect("d >= 1");
+    let mut row = vec![Complex::<T>::zero(); d];
+    for s in 0..n {
+        for yy in 0..y {
+            let base = (s * y + yy) * d;
+            row.copy_from_slice(&temp.data[base..base + d]);
+            for k in 0..d {
+                let mut acc = Complex::zero();
+                for (j, &r) in row.iter().enumerate() {
+                    acc = acc.mul_add(r, dmats[(j * d + k) * n + s]);
+                }
+                temp.data[base + k] = acc;
+            }
+        }
+    }
+}
+
+impl StepEngine for NativeEngine {
+    fn step(
+        &mut self,
+        env: &mut SplitBuf,
+        site: &Site,
+        thresholds: &[f32],
+        displacements: Option<&[(f64, f64)]>,
+        samples: &mut Vec<i32>,
+    ) -> Result<()> {
+        let mut gamma = site.gamma.clone();
+        if self.gamma_f16 {
+            for z in &mut gamma.data {
+                z.re = crate::util::f16::round_f16(z.re as f32) as f64;
+                z.im = crate::util::f16::round_f16(z.im as f32) as f64;
+            }
+        }
+        match self.precision {
+            ComputePrecision::F64 => {
+                let e = envmod::to_f64(env)?;
+                let lambda: Vec<f64> = site.lambda.clone();
+                let out =
+                    self.step_typed(e, &gamma, &lambda, thresholds, displacements, samples)?;
+                *env = envmod::from_f64(&out);
+            }
+            ComputePrecision::F32 | ComputePrecision::Tf32 | ComputePrecision::F16 => {
+                let e = envmod::to_f32(env, self.precision)?;
+                let mut g32 = Tensor3::zeros(gamma.d0, gamma.d1, gamma.d2);
+                for (dst, src) in g32.data.iter_mut().zip(&gamma.data) {
+                    *dst = src.to_c32();
+                }
+                match self.precision {
+                    ComputePrecision::Tf32 => {
+                        for z in &mut g32.data {
+                            z.re = crate::util::f16::round_tf32(z.re);
+                            z.im = crate::util::f16::round_tf32(z.im);
+                        }
+                    }
+                    ComputePrecision::F16 => {
+                        for z in &mut g32.data {
+                            z.re = crate::util::f16::round_f16(z.re);
+                            z.im = crate::util::f16::round_f16(z.im);
+                        }
+                    }
+                    _ => {}
+                }
+                let lambda: Vec<f32> = site.lambda.iter().map(|&l| l as f32).collect();
+                let mut out =
+                    self.step_typed(e, &g32, &lambda, thresholds, displacements, samples)?;
+                if self.precision == ComputePrecision::F16 {
+                    // ComplexHalf result storage: round the collapsed env.
+                    for z in &mut out.data {
+                        z.re = crate::util::f16::round_f16(z.re);
+                        z.im = crate::util::f16::round_f16(z.im);
+                    }
+                }
+                *env = envmod::from_f32(&out);
+            }
+        }
+        self.metrics.add(keys::SAMPLES, thresholds.len() as u64);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mps::gbs::GbsSpec;
+    use crate::sampler::boundary_env;
+
+    fn spec(decay: f64) -> GbsSpec {
+        GbsSpec {
+            name: "ne".into(),
+            m: 10,
+            d: 3,
+            chi_cap: 12,
+            asp: 4.0,
+            decay_k: decay,
+            displacement_sigma: 0.0,
+            branch_skew: 0.0,
+            seed: 77,
+            dynamic_chi: false,
+            step_ratio_override: None,
+        }
+    }
+
+    fn walk(
+        engine: &mut NativeEngine,
+        spec: &GbsSpec,
+        n: usize,
+        displaced: bool,
+    ) -> Vec<Vec<i32>> {
+        let mps = spec.generate().unwrap();
+        let mut env = boundary_env(n);
+        let mut all = Vec::new();
+        for (i, site) in mps.sites.iter().enumerate() {
+            let th = spec.thresholds(i, 0, n);
+            let mus = displaced.then(|| spec.displacement_draws(i, 0, n));
+            let mut s = Vec::new();
+            engine
+                .step(&mut env, site, &th, mus.as_deref(), &mut s)
+                .unwrap();
+            all.push(s);
+        }
+        all
+    }
+
+    #[test]
+    fn f64_and_f32_agree_without_decay() {
+        let sp = spec(0.0);
+        let mut e64 = NativeEngine::new(ComputePrecision::F64, ScalingMode::PerSample, 1);
+        let mut e32 = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 1);
+        let a = walk(&mut e64, &sp, 64, false);
+        let b = walk(&mut e32, &sp, 64, false);
+        // Threshold knife-edges can flip a rare sample; demand 99% equality.
+        let total: usize = a.iter().map(|v| v.len()).sum();
+        let diff: usize = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| x.iter().zip(y).filter(|(p, q)| p != q).count())
+            .sum();
+        assert!(diff * 100 <= total, "{diff}/{total} outcomes differ");
+    }
+
+    #[test]
+    fn outcomes_match_exact_marginals() {
+        // Statistical Born-rule check against the transfer-matrix oracle.
+        let sp = spec(0.0);
+        let mps = sp.generate().unwrap();
+        let ideal = crate::mps::exact::exact_mean_photons(&mps).unwrap();
+        let n = 4096;
+        let mut eng = NativeEngine::new(ComputePrecision::F64, ScalingMode::PerSample, 2);
+        let all = walk(&mut eng, &sp, n, false);
+        for (i, site_samples) in all.iter().enumerate() {
+            let mean: f64 =
+                site_samples.iter().map(|&s| s as f64).sum::<f64>() / n as f64;
+            // Binomial-ish error bars at N=4096.
+            assert!(
+                (mean - ideal[i]).abs() < 0.08,
+                "site {i}: sampled {mean} vs exact {}",
+                ideal[i]
+            );
+        }
+    }
+
+    #[test]
+    fn decay_with_per_sample_scaling_survives_f32() {
+        // Strong decay: f32 without rescaling collapses, per-sample survives.
+        let sp = spec(3.0); // 3 decades per site, 10 sites = 10^-30
+        let mut good = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 1);
+        walk(&mut good, &sp, 32, false);
+        assert_eq!(good.dead_rows, 0, "per-sample scaling must survive");
+
+        let mut bad = NativeEngine::new(ComputePrecision::F32, ScalingMode::None, 1);
+        walk(&mut bad, &sp, 32, false);
+        assert!(bad.dead_rows > 0, "unscaled f32 must underflow");
+    }
+
+    #[test]
+    fn scaling_does_not_change_outcomes_in_f64() {
+        let sp = spec(0.5);
+        let mut a = NativeEngine::new(ComputePrecision::F64, ScalingMode::PerSample, 1);
+        let mut b = NativeEngine::new(ComputePrecision::F64, ScalingMode::Global, 1);
+        let sa = walk(&mut a, &sp, 48, false);
+        let sb = walk(&mut b, &sp, 48, false);
+        assert_eq!(sa, sb, "scaling is probability-invariant in f64");
+    }
+
+    #[test]
+    fn displaced_walk_runs_and_changes_outcomes() {
+        let mut sp = spec(0.0);
+        sp.displacement_sigma = 0.4;
+        let mut eng = NativeEngine::new(ComputePrecision::F64, ScalingMode::PerSample, 1);
+        let with = walk(&mut eng, &sp, 64, true);
+        let mut eng2 = NativeEngine::new(ComputePrecision::F64, ScalingMode::PerSample, 1);
+        let without = walk(&mut eng2, &sp, 64, false);
+        assert_ne!(with, without, "displacement must change the distribution");
+        // Outcomes remain valid occupations.
+        assert!(with.iter().flatten().all(|&s| (0..3).contains(&s)));
+    }
+
+    #[test]
+    fn tf32_close_to_f32() {
+        let sp = spec(0.2);
+        let mut a = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 1);
+        let mut b = NativeEngine::new(ComputePrecision::Tf32, ScalingMode::PerSample, 1);
+        let sa = walk(&mut a, &sp, 128, false);
+        let sb = walk(&mut b, &sp, 128, false);
+        let total: usize = sa.iter().map(|v| v.len()).sum();
+        let diff: usize = sa
+            .iter()
+            .zip(&sb)
+            .map(|(x, y)| x.iter().zip(y).filter(|(p, q)| p != q).count())
+            .sum();
+        assert!(diff * 20 <= total, "{diff}/{total} tf32 outcome flips");
+    }
+
+    #[test]
+    fn f16_experimental_mode_tracks_f32_on_short_chains() {
+        // S3.3.1's experimental ComplexHalf arm: valid for M < 500; with
+        // per-sample scaling the outcomes stay statistically close to f32.
+        let sp = spec(0.1);
+        let mut a = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 1);
+        let mut b = NativeEngine::new(ComputePrecision::F16, ScalingMode::PerSample, 1);
+        let sa = walk(&mut a, &sp, 256, false);
+        let sb = walk(&mut b, &sp, 256, false);
+        assert_eq!(b.dead_rows, 0, "f16 + per-sample scaling must not die");
+        let total: usize = sa.iter().map(|v| v.len()).sum();
+        let diff: usize = sa
+            .iter()
+            .zip(&sb)
+            .map(|(x, y)| x.iter().zip(y).filter(|(p, q)| p != q).count())
+            .sum();
+        // More rounding flips than tf32 but still a small fraction.
+        assert!(diff * 10 <= total, "{diff}/{total} f16 outcome flips");
+    }
+
+    #[test]
+    fn f16_mode_rejected_for_long_chains() {
+        use crate::config::Preset;
+        let mut spec = Preset::M8176.full_spec(1); // M = 8176
+        spec.chi_cap = 8;
+        let mut cfg = crate::config::RunConfig::new(spec);
+        cfg.compute = ComputePrecision::F16;
+        assert!(cfg.validate().is_err());
+        cfg.compute = ComputePrecision::F32;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let sp = spec(0.0);
+        let mut eng = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 1);
+        walk(&mut eng, &sp, 16, false);
+        assert!(eng.metrics.get(keys::FLOPS) > 0);
+        assert_eq!(eng.metrics.get(keys::SAMPLES), 160); // 16 × 10 sites
+        assert!(eng.metrics.phase("compute") >= 0.0);
+    }
+}

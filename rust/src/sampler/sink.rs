@@ -1,0 +1,206 @@
+//! Sample statistics accumulator.
+//!
+//! Streams per-site outcomes from the coordinators and keeps what the
+//! validation and benchmark layers need without storing raw samples:
+//! per-site outcome histograms (→ mean photon numbers, Fig. 6/9a) and
+//! near-diagonal pair sums (→ second-order correlations, Fig. 9c). A ring
+//! buffer of the last `max_gap` outcome vectors provides the pair products.
+//! Sinks merge across workers (data parallelism) by simple addition.
+
+#[derive(Debug, Clone)]
+pub struct SampleSink {
+    pub m: usize,
+    pub d: usize,
+    pub max_gap: usize,
+    /// hist[site][outcome] counts.
+    pub hist: Vec<Vec<u64>>,
+    /// pair_sums[(site_j - 1) * max_gap + (gap-1)] = Σ n_{j-gap}·n_j.
+    pub pair_sums: Vec<f64>,
+    /// Samples accounted per site (all sites equal unless a run aborts).
+    pub counts: Vec<u64>,
+    /// Ring of recent outcome vectors for pair products.
+    ring: Vec<Vec<i32>>,
+    ring_site: usize,
+}
+
+impl SampleSink {
+    pub fn new(m: usize, d: usize, max_gap: usize) -> SampleSink {
+        SampleSink {
+            m,
+            d,
+            max_gap,
+            hist: vec![vec![0; d]; m],
+            pair_sums: vec![0.0; m.saturating_sub(1) * max_gap.max(1)],
+            counts: vec![0; m],
+            ring: Vec::new(),
+            ring_site: 0,
+        }
+    }
+
+    /// Record the outcomes of one micro/macro batch at `site`. Sites must
+    /// arrive in order 0..M per batch walk (the sampling order); `reset_walk`
+    /// starts a new batch.
+    pub fn reset_walk(&mut self) {
+        self.ring.clear();
+        self.ring_site = 0;
+    }
+
+    pub fn record(&mut self, site: usize, samples: &[i32]) {
+        debug_assert!(site < self.m);
+        for &s in samples {
+            let s = (s.max(0) as usize).min(self.d - 1);
+            self.hist[site][s] += 1;
+        }
+        self.counts[site] += samples.len() as u64;
+
+        // Pair products with the previous `max_gap` sites of this walk.
+        if self.max_gap > 0 && site > 0 {
+            let lo_gap = 1usize;
+            let hi_gap = self.max_gap.min(site).min(self.ring.len());
+            for gap in lo_gap..=hi_gap {
+                let prev = &self.ring[self.ring.len() - gap];
+                if prev.len() != samples.len() {
+                    continue; // defensive: mismatched batch (shouldn't happen)
+                }
+                let sum: f64 = prev
+                    .iter()
+                    .zip(samples)
+                    .map(|(&a, &b)| (a as f64) * (b as f64))
+                    .sum();
+                self.pair_sums[(site - 1) * self.max_gap + (gap - 1)] += sum;
+            }
+        }
+        if self.max_gap > 0 {
+            self.ring.push(samples.to_vec());
+            if self.ring.len() > self.max_gap {
+                self.ring.remove(0);
+            }
+        }
+        self.ring_site = site;
+    }
+
+    /// Mean photon number per site.
+    pub fn mean_photons(&self) -> Vec<f64> {
+        self.hist
+            .iter()
+            .zip(&self.counts)
+            .map(|(h, &c)| {
+                if c == 0 {
+                    0.0
+                } else {
+                    h.iter().enumerate().map(|(s, &n)| s as f64 * n as f64).sum::<f64>()
+                        / c as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Sampled E[n_i n_j] for `(i, j = i+gap)` pairs.
+    pub fn pair_moments(&self) -> Vec<(usize, usize, f64)> {
+        let mut out = Vec::new();
+        for j in 1..self.m {
+            for gap in 1..=self.max_gap.min(j) {
+                let c = self.counts[j];
+                if c == 0 {
+                    continue;
+                }
+                out.push((
+                    j - gap,
+                    j,
+                    self.pair_sums[(j - 1) * self.max_gap + (gap - 1)] / c as f64,
+                ));
+            }
+        }
+        out
+    }
+
+    /// Merge a worker's sink (data-parallel reduction).
+    pub fn merge(&mut self, other: &SampleSink) {
+        assert_eq!(self.m, other.m);
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.max_gap, other.max_gap);
+        for (a, b) in self.hist.iter_mut().zip(&other.hist) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+        for (a, b) in self.pair_sums.iter_mut().zip(&other.pair_sums) {
+            *a += *b;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+    }
+
+    pub fn total_samples(&self) -> u64 {
+        self.counts.first().copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_and_mean() {
+        let mut s = SampleSink::new(2, 3, 1);
+        s.reset_walk();
+        s.record(0, &[0, 1, 2, 2]);
+        s.record(1, &[1, 1, 1, 1]);
+        assert_eq!(s.hist[0], vec![1, 1, 2]);
+        let m = s.mean_photons();
+        assert!((m[0] - 1.25).abs() < 1e-12);
+        assert!((m[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pair_moments_adjacent() {
+        let mut s = SampleSink::new(3, 3, 2);
+        s.reset_walk();
+        s.record(0, &[1, 2]);
+        s.record(1, &[2, 0]);
+        s.record(2, &[1, 1]);
+        let pm = s.pair_moments();
+        // E[n0 n1] = (1·2 + 2·0)/2 = 1; E[n1 n2] = (2+0)/2 = 1; E[n0 n2] = (1+2)/2 = 1.5.
+        let get = |i: usize, j: usize| pm.iter().find(|&&(a, b, _)| a == i && b == j).unwrap().2;
+        assert!((get(0, 1) - 1.0).abs() < 1e-12);
+        assert!((get(1, 2) - 1.0).abs() < 1e-12);
+        assert!((get(0, 2) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiple_walks_accumulate() {
+        let mut s = SampleSink::new(2, 2, 1);
+        for _ in 0..3 {
+            s.reset_walk();
+            s.record(0, &[1]);
+            s.record(1, &[1]);
+        }
+        assert_eq!(s.counts, vec![3, 3]);
+        let pm = s.pair_moments();
+        assert!((pm[0].2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = SampleSink::new(2, 2, 1);
+        a.reset_walk();
+        a.record(0, &[0, 1]);
+        a.record(1, &[1, 1]);
+        let mut b = a.clone();
+        b.reset_walk();
+        b.record(0, &[1, 1]);
+        b.record(1, &[0, 0]);
+        a.merge(&b);
+        // b started as a clone of a (2 samples) and recorded 2 more.
+        assert_eq!(a.counts[0], 6);
+        assert_eq!(a.hist[0], vec![2, 4]);
+    }
+
+    #[test]
+    fn out_of_range_outcomes_clamped() {
+        let mut s = SampleSink::new(1, 2, 0);
+        s.record(0, &[-3, 9]);
+        assert_eq!(s.hist[0], vec![1, 1]);
+    }
+}

@@ -1,0 +1,287 @@
+//! Minimal complex scalar (num-complex is unavailable offline).
+
+use num_traits::Float;
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Complex number over an arbitrary float.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(C)]
+pub struct Complex<T> {
+    pub re: T,
+    pub im: T,
+}
+
+pub type C32 = Complex<f32>;
+pub type C64 = Complex<f64>;
+
+impl<T: Float> Complex<T> {
+    #[inline]
+    pub fn new(re: T, im: T) -> Self {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn zero() -> Self {
+        Complex {
+            re: T::zero(),
+            im: T::zero(),
+        }
+    }
+
+    #[inline]
+    pub fn one() -> Self {
+        Complex {
+            re: T::one(),
+            im: T::zero(),
+        }
+    }
+
+    #[inline]
+    pub fn from_re(re: T) -> Self {
+        Complex { re, im: T::zero() }
+    }
+
+    #[inline]
+    pub fn i() -> Self {
+        Complex {
+            re: T::zero(),
+            im: T::one(),
+        }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Complex {
+            re: self.re,
+            im: -self.im,
+        }
+    }
+
+    /// Squared modulus |z|².
+    #[inline]
+    pub fn norm_sq(self) -> T {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Modulus |z|.
+    #[inline]
+    pub fn abs(self) -> T {
+        self.norm_sq().sqrt()
+    }
+
+    /// Scale by a real factor.
+    #[inline]
+    pub fn scale(self, s: T) -> Self {
+        Complex {
+            re: self.re * s,
+            im: self.im * s,
+        }
+    }
+
+    /// Complex exponential e^z.
+    pub fn exp(self) -> Self {
+        let r = self.re.exp();
+        Complex {
+            re: r * self.im.cos(),
+            im: r * self.im.sin(),
+        }
+    }
+
+    /// Multiplicative inverse.
+    pub fn inv(self) -> Self {
+        let d = self.norm_sq();
+        Complex {
+            re: self.re / d,
+            im: -self.im / d,
+        }
+    }
+
+    /// Fused multiply-add: self + a*b (kept explicit for the gemm kernels).
+    #[inline]
+    pub fn mul_add(self, a: Self, b: Self) -> Self {
+        Complex {
+            re: self.re + a.re * b.re - a.im * b.im,
+            im: self.im + a.re * b.im + a.im * b.re,
+        }
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+}
+
+impl C64 {
+    pub fn to_c32(self) -> C32 {
+        Complex {
+            re: self.re as f32,
+            im: self.im as f32,
+        }
+    }
+}
+
+impl C32 {
+    pub fn to_c64(self) -> C64 {
+        Complex {
+            re: self.re as f64,
+            im: self.im as f64,
+        }
+    }
+}
+
+impl<T: Float> Add for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        Complex {
+            re: self.re + o.re,
+            im: self.im + o.im,
+        }
+    }
+}
+
+impl<T: Float> Sub for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        Complex {
+            re: self.re - o.re,
+            im: self.im - o.im,
+        }
+    }
+}
+
+impl<T: Float> Mul for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        Complex {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl<T: Float> Div for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn div(self, o: Self) -> Self {
+        self * o.inv()
+    }
+}
+
+impl<T: Float> Neg for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Complex {
+            re: -self.re,
+            im: -self.im,
+        }
+    }
+}
+
+impl<T: Float + AddAssign> AddAssign for Complex<T> {
+    #[inline]
+    fn add_assign(&mut self, o: Self) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl<T: Float + SubAssign> SubAssign for Complex<T> {
+    #[inline]
+    fn sub_assign(&mut self, o: Self) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl<T: Float> MulAssign for Complex<T> {
+    #[inline]
+    fn mul_assign(&mut self, o: Self) {
+        *self = *self * o;
+    }
+}
+
+impl<T: Float + AddAssign> Sum for Complex<T> {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        let mut acc = Complex::zero();
+        for x in iter {
+            acc += x;
+        }
+        acc
+    }
+}
+
+impl<T: Float + fmt::Display> fmt::Display for Complex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.im < T::zero() {
+            write!(f, "{}-{}i", self.re, -self.im)
+        } else {
+            write!(f, "{}+{}i", self.re, self.im)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(re: f64, im: f64) -> C64 {
+        Complex::new(re, im)
+    }
+
+    #[test]
+    fn field_axioms_spotcheck() {
+        let a = c(1.0, 2.0);
+        let b = c(-0.5, 3.0);
+        let z = c(0.0, 0.0);
+        assert_eq!(a + b, b + a);
+        assert_eq!(a * b, b * a);
+        assert_eq!(a + z, a);
+        assert_eq!(a * Complex::one(), a);
+        let d = (a * b) * a.inv() - b;
+        assert!(d.abs() < 1e-12);
+    }
+
+    #[test]
+    fn conj_and_norm() {
+        let a = c(3.0, -4.0);
+        assert_eq!(a.abs(), 5.0);
+        assert_eq!(a.norm_sq(), 25.0);
+        assert_eq!(a.conj(), c(3.0, 4.0));
+        let p = a * a.conj();
+        assert!((p.re - 25.0).abs() < 1e-12 && p.im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_euler() {
+        let z = Complex::new(0.0, std::f64::consts::PI);
+        let e = z.exp();
+        assert!((e.re + 1.0).abs() < 1e-12 && e.im.abs() < 1e-12);
+        // e^(a+b) = e^a e^b
+        let a = c(0.3, -0.7);
+        let b = c(-1.1, 0.4);
+        let lhs = (a + b).exp();
+        let rhs = a.exp() * b.exp();
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mul_add_matches_expanded() {
+        let acc = c(0.5, -0.25);
+        let a = c(1.5, 2.0);
+        let b = c(-3.0, 0.125);
+        let got = acc.mul_add(a, b);
+        let want = acc + a * b;
+        assert!((got - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(c(1.0, 2.0).to_string(), "1+2i");
+        assert_eq!(c(1.0, -2.0).to_string(), "1-2i");
+    }
+}

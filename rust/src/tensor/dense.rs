@@ -1,0 +1,308 @@
+//! Dense row-major complex matrices and rank-3 tensors.
+
+use num_traits::Float;
+
+use super::complex::Complex;
+use crate::util::error::{Error, Result};
+
+/// Row-major complex matrix `(rows, cols)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<Complex<T>>,
+}
+
+impl<T: Float + std::ops::AddAssign> Mat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![Complex::zero(); rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<Complex<T>>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "Mat::from_vec: {}×{} != {} elements",
+                rows,
+                cols,
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = Complex::one();
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[Complex<T>] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [Complex<T>] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> T {
+        let mut acc = T::zero();
+        for z in &self.data {
+            acc += z.norm_sq();
+        }
+        acc.sqrt()
+    }
+
+    /// Max |z| over all entries.
+    pub fn max_abs(&self) -> T {
+        let mut m = T::zero();
+        for z in &self.data {
+            let a = z.norm_sq();
+            if a > m {
+                m = a;
+            }
+        }
+        m.sqrt()
+    }
+
+    /// Conjugate transpose.
+    pub fn dagger(&self) -> Mat<T> {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)].conj();
+            }
+        }
+        out
+    }
+
+    /// Scale every entry by a real factor.
+    pub fn scale_in_place(&mut self, s: T) {
+        for z in &mut self.data {
+            *z = z.scale(s);
+        }
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|z| z.is_finite())
+    }
+}
+
+impl<T> std::ops::Index<(usize, usize)> for Mat<T> {
+    type Output = Complex<T>;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &Complex<T> {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl<T> std::ops::IndexMut<(usize, usize)> for Mat<T> {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut Complex<T> {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Dense rank-3 tensor `(d0, d1, d2)`, row-major (last index fastest).
+///
+/// For an MPS site tensor `Γ` the layout is `(χ_l, χ_r, d)`: the physical
+/// index is innermost so the bond contraction sees contiguous `χ_r × d`
+/// panels — the same layout the L1 Pallas kernel and the Γ store use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor3<T> {
+    pub d0: usize,
+    pub d1: usize,
+    pub d2: usize,
+    pub data: Vec<Complex<T>>,
+}
+
+impl<T: Float + std::ops::AddAssign> Tensor3<T> {
+    pub fn zeros(d0: usize, d1: usize, d2: usize) -> Self {
+        Tensor3 {
+            d0,
+            d1,
+            d2,
+            data: vec![Complex::zero(); d0 * d1 * d2],
+        }
+    }
+
+    pub fn from_vec(d0: usize, d1: usize, d2: usize, data: Vec<Complex<T>>) -> Result<Self> {
+        if data.len() != d0 * d1 * d2 {
+            return Err(Error::shape(format!(
+                "Tensor3::from_vec: {}×{}×{} != {} elements",
+                d0,
+                d1,
+                d2,
+                data.len()
+            )));
+        }
+        Ok(Tensor3 { d0, d1, d2, data })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize, k: usize) -> Complex<T> {
+        debug_assert!(i < self.d0 && j < self.d1 && k < self.d2);
+        self.data[(i * self.d1 + j) * self.d2 + k]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize, k: usize) -> &mut Complex<T> {
+        debug_assert!(i < self.d0 && j < self.d1 && k < self.d2);
+        &mut self.data[(i * self.d1 + j) * self.d2 + k]
+    }
+
+    /// Contiguous `(d1 × d2)` panel at first index `i` — a Γ row over the
+    /// left bond.
+    #[inline]
+    pub fn panel(&self, i: usize) -> &[Complex<T>] {
+        let s = self.d1 * self.d2;
+        &self.data[i * s..(i + 1) * s]
+    }
+
+    /// View the tensor as a `(d0, d1*d2)` matrix without copying shapes
+    /// (used to feed the split-K GEMM).
+    pub fn as_matrix(&self) -> Mat<T>
+    where
+        Complex<T>: Clone,
+    {
+        Mat {
+            rows: self.d0,
+            cols: self.d1 * self.d2,
+            data: self.data.clone(),
+        }
+    }
+
+    /// Slice `rows ∈ [lo, hi)` of the first axis (a χ_l shard for tensor
+    /// parallelism). Copies.
+    pub fn slice_d0(&self, lo: usize, hi: usize) -> Result<Tensor3<T>> {
+        if lo > hi || hi > self.d0 {
+            return Err(Error::shape(format!(
+                "slice_d0 [{lo},{hi}) out of range for d0={}",
+                self.d0
+            )));
+        }
+        let s = self.d1 * self.d2;
+        Ok(Tensor3 {
+            d0: hi - lo,
+            d1: self.d1,
+            d2: self.d2,
+            data: self.data[lo * s..hi * s].to_vec(),
+        })
+    }
+
+    /// Slice `cols ∈ [lo, hi)` of the *second* axis (χ_r shard — the
+    /// double-site scheme's even-site split). Copies.
+    pub fn slice_d1(&self, lo: usize, hi: usize) -> Result<Tensor3<T>> {
+        if lo > hi || hi > self.d1 {
+            return Err(Error::shape(format!(
+                "slice_d1 [{lo},{hi}) out of range for d1={}",
+                self.d1
+            )));
+        }
+        let mut out = Tensor3::zeros(self.d0, hi - lo, self.d2);
+        for i in 0..self.d0 {
+            for (jj, j) in (lo..hi).enumerate() {
+                for k in 0..self.d2 {
+                    *out.at_mut(i, jj, k) = self.at(i, j, k);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn max_abs(&self) -> T {
+        let mut m = T::zero();
+        for z in &self.data {
+            let a = z.norm_sq();
+            if a > m {
+                m = a;
+            }
+        }
+        m.sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|z| z.is_finite())
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::C64;
+
+    #[test]
+    fn mat_indexing_row_major() {
+        let mut m: Mat<f64> = Mat::zeros(2, 3);
+        m[(1, 2)] = C64::new(5.0, 0.0);
+        assert_eq!(m.data[5], C64::new(5.0, 0.0));
+        assert_eq!(m.row(1)[2], C64::new(5.0, 0.0));
+    }
+
+    #[test]
+    fn from_vec_shape_checked() {
+        assert!(Mat::<f64>::from_vec(2, 2, vec![C64::zero(); 3]).is_err());
+        assert!(Tensor3::<f64>::from_vec(2, 2, 2, vec![C64::zero(); 8]).is_ok());
+    }
+
+    #[test]
+    fn dagger_involution() {
+        let mut m: Mat<f64> = Mat::zeros(2, 3);
+        m[(0, 1)] = C64::new(1.0, 2.0);
+        m[(1, 2)] = C64::new(-3.0, 0.5);
+        let dd = m.dagger().dagger();
+        assert_eq!(m, dd);
+        assert_eq!(m.dagger()[(1, 0)], C64::new(1.0, -2.0));
+    }
+
+    #[test]
+    fn tensor3_panels_and_slices() {
+        let mut t: Tensor3<f64> = Tensor3::zeros(3, 2, 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    *t.at_mut(i, j, k) = C64::new((100 * i + 10 * j + k) as f64, 0.0);
+                }
+            }
+        }
+        assert_eq!(t.panel(1)[0], C64::new(100.0, 0.0));
+        let s = t.slice_d0(1, 3).unwrap();
+        assert_eq!(s.d0, 2);
+        assert_eq!(s.at(0, 1, 1), C64::new(111.0, 0.0));
+        let s1 = t.slice_d1(1, 2).unwrap();
+        assert_eq!(s1.d1, 1);
+        assert_eq!(s1.at(2, 0, 0), C64::new(210.0, 0.0));
+        assert!(t.slice_d0(2, 4).is_err());
+        assert!(t.slice_d1(3, 2).is_err());
+    }
+
+    #[test]
+    fn norms() {
+        let m = Mat::from_vec(
+            1,
+            2,
+            vec![C64::new(3.0, 0.0), C64::new(0.0, 4.0)],
+        )
+        .unwrap();
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert!((m.max_abs() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense complex tensors used by the native engines and at the PJRT
+//! boundary.
+//!
+//! Shapes follow the paper's notation:
+//! - left environment `E`: `(N, χ)` — one row per sample;
+//! - MPS site tensor `Γ`: `(χ_l, χ_r, d)` — bond-in × bond-out × physical;
+//! - unmeasured temporary: `(N, χ_r, d)`.
+//!
+//! Native compute stores interleaved `Complex<T>`; the XLA boundary uses
+//! split re/im `f32` planes ([`SplitBuf`]) because the `xla` crate has no
+//! complex `Literal` constructors.
+
+mod complex;
+mod dense;
+mod split;
+
+pub use complex::{Complex, C32, C64};
+pub use dense::{Mat, Tensor3};
+pub use split::SplitBuf;

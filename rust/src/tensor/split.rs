@@ -1,0 +1,283 @@
+//! Split re/im f32 buffers — the representation crossing the PJRT boundary.
+//!
+//! The `xla` crate (0.1.6) exposes no complex `Literal` constructors, so the
+//! L2 jax step functions take/return separate real and imaginary `f32`
+//! planes and re-pack with `lax.complex` internally. `SplitBuf` is that
+//! boundary type plus conversions to the interleaved native representation.
+
+use crate::tensor::{Complex, Mat, Tensor3, C32, C64};
+use crate::util::error::{Error, Result};
+use crate::util::f16;
+
+/// A logical complex array stored as two f32 planes plus a shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitBuf {
+    pub shape: Vec<usize>,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl SplitBuf {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        SplitBuf {
+            shape: shape.to_vec(),
+            re: vec![0.0; n],
+            im: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    pub fn check(&self) -> Result<()> {
+        let n: usize = self.shape.iter().product();
+        if self.re.len() != n || self.im.len() != n {
+            return Err(Error::shape(format!(
+                "SplitBuf: shape {:?} ({n}) vs re {} im {}",
+                self.shape,
+                self.re.len(),
+                self.im.len()
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn from_mat_c32(m: &Mat<f32>) -> Self {
+        let mut re = Vec::with_capacity(m.data.len());
+        let mut im = Vec::with_capacity(m.data.len());
+        for z in &m.data {
+            re.push(z.re);
+            im.push(z.im);
+        }
+        SplitBuf {
+            shape: vec![m.rows, m.cols],
+            re,
+            im,
+        }
+    }
+
+    pub fn from_mat_c64(m: &Mat<f64>) -> Self {
+        let mut re = Vec::with_capacity(m.data.len());
+        let mut im = Vec::with_capacity(m.data.len());
+        for z in &m.data {
+            re.push(z.re as f32);
+            im.push(z.im as f32);
+        }
+        SplitBuf {
+            shape: vec![m.rows, m.cols],
+            re,
+            im,
+        }
+    }
+
+    pub fn from_tensor3_c64(t: &Tensor3<f64>) -> Self {
+        let mut re = Vec::with_capacity(t.data.len());
+        let mut im = Vec::with_capacity(t.data.len());
+        for z in &t.data {
+            re.push(z.re as f32);
+            im.push(z.im as f32);
+        }
+        SplitBuf {
+            shape: vec![t.d0, t.d1, t.d2],
+            re,
+            im,
+        }
+    }
+
+    pub fn to_mat_c32(&self) -> Result<Mat<f32>> {
+        if self.shape.len() != 2 {
+            return Err(Error::shape(format!(
+                "to_mat_c32: shape {:?} is not rank-2",
+                self.shape
+            )));
+        }
+        let data: Vec<C32> = self
+            .re
+            .iter()
+            .zip(&self.im)
+            .map(|(&r, &i)| Complex::new(r, i))
+            .collect();
+        Mat::from_vec(self.shape[0], self.shape[1], data)
+    }
+
+    pub fn to_mat_c64(&self) -> Result<Mat<f64>> {
+        if self.shape.len() != 2 {
+            return Err(Error::shape(format!(
+                "to_mat_c64: shape {:?} is not rank-2",
+                self.shape
+            )));
+        }
+        let data: Vec<C64> = self
+            .re
+            .iter()
+            .zip(&self.im)
+            .map(|(&r, &i)| Complex::new(r as f64, i as f64))
+            .collect();
+        Mat::from_vec(self.shape[0], self.shape[1], data)
+    }
+
+    pub fn to_tensor3_c64(&self) -> Result<Tensor3<f64>> {
+        if self.shape.len() != 3 {
+            return Err(Error::shape(format!(
+                "to_tensor3_c64: shape {:?} is not rank-3",
+                self.shape
+            )));
+        }
+        let data: Vec<C64> = self
+            .re
+            .iter()
+            .zip(&self.im)
+            .map(|(&r, &i)| Complex::new(r as f64, i as f64))
+            .collect();
+        Tensor3::from_vec(self.shape[0], self.shape[1], self.shape[2], data)
+    }
+
+    /// Round both planes through binary16 — the paper's FP16 storage of the
+    /// left environment ("doubling N₁ with the same memory cost").
+    pub fn round_f16_in_place(&mut self) {
+        for v in self.re.iter_mut().chain(self.im.iter_mut()) {
+            *v = f16::round_f16(*v);
+        }
+    }
+
+    /// Round both planes to TF32 input precision.
+    pub fn round_tf32_in_place(&mut self) {
+        for v in self.re.iter_mut().chain(self.im.iter_mut()) {
+            *v = f16::round_tf32(*v);
+        }
+    }
+
+    /// Zero-pad the *last* axis up to `new_last` (χ-bucket padding for the
+    /// fixed-shape XLA artifacts). Padding with zeros is exact for both the
+    /// contraction and the measurement (padded Λ entries are zero too).
+    pub fn pad_last_axis(&self, new_last: usize) -> Result<SplitBuf> {
+        let &last = self
+            .shape
+            .last()
+            .ok_or_else(|| Error::shape("pad_last_axis on rank-0"))?;
+        if new_last < last {
+            return Err(Error::shape(format!(
+                "pad_last_axis: {new_last} < current {last}"
+            )));
+        }
+        let outer: usize = self.shape[..self.shape.len() - 1].iter().product();
+        let mut out_shape = self.shape.clone();
+        *out_shape.last_mut().unwrap() = new_last;
+        let mut out = SplitBuf::zeros(&out_shape);
+        for o in 0..outer {
+            let src = o * last;
+            let dst = o * new_last;
+            out.re[dst..dst + last].copy_from_slice(&self.re[src..src + last]);
+            out.im[dst..dst + last].copy_from_slice(&self.im[src..src + last]);
+        }
+        Ok(out)
+    }
+
+    /// Inverse of [`Self::pad_last_axis`]: keep only the first `new_last`
+    /// entries of the last axis.
+    pub fn crop_last_axis(&self, new_last: usize) -> Result<SplitBuf> {
+        let &last = self
+            .shape
+            .last()
+            .ok_or_else(|| Error::shape("crop_last_axis on rank-0"))?;
+        if new_last > last {
+            return Err(Error::shape(format!(
+                "crop_last_axis: {new_last} > current {last}"
+            )));
+        }
+        let outer: usize = self.shape[..self.shape.len() - 1].iter().product();
+        let mut out_shape = self.shape.clone();
+        *out_shape.last_mut().unwrap() = new_last;
+        let mut out = SplitBuf::zeros(&out_shape);
+        for o in 0..outer {
+            let src = o * last;
+            let dst = o * new_last;
+            out.re[dst..dst + new_last].copy_from_slice(&self.re[src..src + new_last]);
+            out.im[dst..dst + new_last].copy_from_slice(&self.im[src..src + new_last]);
+        }
+        Ok(out)
+    }
+
+    /// Max |z| (used by the global auto-scaling baseline).
+    pub fn max_abs(&self) -> f32 {
+        let mut m = 0.0f32;
+        for (&r, &i) in self.re.iter().zip(&self.im) {
+            let a = r * r + i * i;
+            if a > m {
+                m = a;
+            }
+        }
+        m.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_roundtrip() {
+        let mut m: Mat<f64> = Mat::zeros(2, 3);
+        m[(0, 1)] = C64::new(1.5, -2.5);
+        m[(1, 2)] = C64::new(-0.25, 4.0);
+        let sb = SplitBuf::from_mat_c64(&m);
+        assert_eq!(sb.shape, vec![2, 3]);
+        let back = sb.to_mat_c64().unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn tensor3_roundtrip() {
+        let mut t: Tensor3<f64> = Tensor3::zeros(2, 2, 3);
+        *t.at_mut(1, 0, 2) = C64::new(7.0, -1.0);
+        let sb = SplitBuf::from_tensor3_c64(&t);
+        let back = sb.to_tensor3_c64().unwrap();
+        assert_eq!(back, t);
+        assert!(sb.to_mat_c64().is_err());
+    }
+
+    #[test]
+    fn pad_crop_inverse() {
+        let mut m: Mat<f64> = Mat::zeros(3, 4);
+        for r in 0..3 {
+            for c in 0..4 {
+                m[(r, c)] = C64::new((r * 4 + c) as f64, -(r as f64));
+            }
+        }
+        let sb = SplitBuf::from_mat_c64(&m);
+        let padded = sb.pad_last_axis(7).unwrap();
+        assert_eq!(padded.shape, vec![3, 7]);
+        // Padding is zeros.
+        assert_eq!(padded.re[4 + 3 - 3..7].iter().sum::<f32>(), 0.0);
+        let back = padded.crop_last_axis(4).unwrap();
+        assert_eq!(back, sb);
+        assert!(sb.pad_last_axis(2).is_err());
+        assert!(sb.crop_last_axis(9).is_err());
+    }
+
+    #[test]
+    fn f16_rounding_applied() {
+        let mut sb = SplitBuf::zeros(&[1, 2]);
+        sb.re[0] = 1.0 + 1.0 / 4096.0; // not representable in f16
+        sb.round_f16_in_place();
+        assert_eq!(sb.re[0], 1.0);
+        let mut sb2 = SplitBuf::zeros(&[1, 1]);
+        sb2.im[0] = 1e-10;
+        sb2.round_f16_in_place();
+        assert_eq!(sb2.im[0], 0.0); // f16 underflow
+    }
+
+    #[test]
+    fn check_validates_shape() {
+        let mut sb = SplitBuf::zeros(&[2, 2]);
+        assert!(sb.check().is_ok());
+        sb.re.pop();
+        assert!(sb.check().is_err());
+    }
+}

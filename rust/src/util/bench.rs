@@ -1,0 +1,54 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` binary (`harness = false`) regenerates one
+//! table/figure of the paper: it prints a header, aligned data rows, and a
+//! `paper:` reference line so EXPERIMENTS.md diffs are one `cargo bench`
+//! away. Timing helper: warmup + `reps` timed runs → (mean, stddev).
+
+use std::time::Instant;
+
+/// Run `f` `reps` times after `warmup` runs; returns (mean_secs, std_secs).
+pub fn time<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut xs = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        xs.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Print a bench header (figure/table id + context).
+pub fn header(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+}
+
+/// Print one aligned row of `key=value` cells.
+pub fn row(cells: &[(&str, String)]) {
+    let line: Vec<String> = cells.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    println!("  {}", line.join("  "));
+}
+
+/// Print the paper's reference values for comparison.
+pub fn paper(note: &str) {
+    println!("  paper: {note}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_positive_mean() {
+        let (mean, std) = time(1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(mean > 0.0);
+        assert!(std >= 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Result alias used across the crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// FastMPS error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape/dimension mismatch in a tensor operation.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Invalid configuration or CLI input.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// File-format violation in the Γ store or manifest.
+    #[error("format error: {0}")]
+    Format(String),
+
+    /// A required AOT artifact is missing or incompatible.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Error raised inside the simulated communication fabric.
+    #[error("fabric error: {0}")]
+    Fabric(String),
+
+    /// Numerical failure (NaN/Inf/underflow collapse) detected at runtime.
+    #[error("numeric error: {0}")]
+    Numeric(String),
+
+    /// I/O error with context.
+    #[error("io error ({ctx}): {source}")]
+    Io {
+        ctx: String,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// JSON parse error.
+    #[error("json error at byte {pos}: {msg}")]
+    Json { pos: usize, msg: String },
+
+    /// Error bubbled up from the XLA/PJRT runtime.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Anything else.
+    #[error("{0}")]
+    Other(String),
+}
+
+impl Error {
+    /// Attach a path/context string to an `std::io::Error`.
+    pub fn io(ctx: impl fmt::Display, source: std::io::Error) -> Self {
+        Error::Io {
+            ctx: ctx.to_string(),
+            source,
+        }
+    }
+
+    pub fn shape(msg: impl fmt::Display) -> Self {
+        Error::Shape(msg.to_string())
+    }
+
+    pub fn config(msg: impl fmt::Display) -> Self {
+        Error::Config(msg.to_string())
+    }
+
+    pub fn format(msg: impl fmt::Display) -> Self {
+        Error::Format(msg.to_string())
+    }
+
+    pub fn artifact(msg: impl fmt::Display) -> Self {
+        Error::Artifact(msg.to_string())
+    }
+
+    pub fn numeric(msg: impl fmt::Display) -> Self {
+        Error::Numeric(msg.to_string())
+    }
+
+    pub fn other(msg: impl fmt::Display) -> Self {
+        Error::Other(msg.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io {
+            ctx: "<unknown>".into(),
+            source: e,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        assert!(Error::shape("bad").to_string().contains("shape"));
+        assert!(Error::config("bad").to_string().contains("config"));
+        let io = Error::io("/tmp/x", std::io::Error::other("boom"));
+        assert!(io.to_string().contains("/tmp/x"));
+    }
+}

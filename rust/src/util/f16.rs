@@ -1,0 +1,203 @@
+//! IEEE 754 binary16 (half precision) conversion and TF32 emulation.
+//!
+//! The paper stores MPS tensors `Γ` and the streamed left environment in
+//! FP16 (halving I/O, memcpy and broadcast volume) and computes in TF32 on
+//! tensor cores. The offline build has no `half` crate, so conversions are
+//! implemented directly on the bit patterns; `round_tf32` emulates the
+//! 10-bit-mantissa truncation the A100 applies to tensor-core inputs.
+
+/// Convert an `f32` to the nearest binary16 bit pattern (round-to-nearest-even,
+/// with overflow → ±inf and subnormal handling).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        return if man == 0 {
+            sign | 0x7c00
+        } else {
+            sign | 0x7e00 // quiet NaN
+        };
+    }
+
+    // Re-bias exponent: f32 bias 127, f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if unbiased >= -14 {
+        // Normal f16.
+        let e16 = (unbiased + 15) as u32;
+        // 23 → 10 bits mantissa; round to nearest even on the dropped 13 bits.
+        let mut m16 = man >> 13;
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (m16 & 1) == 1) {
+            m16 += 1;
+        }
+        // Mantissa carry can roll into the exponent (still fine: 0x3ff+1
+        // propagates, possibly to inf).
+        let out = (e16 << 10) + m16;
+        return sign | out as u16;
+    }
+    if unbiased >= -24 {
+        // Subnormal f16: implicit leading 1 becomes explicit.
+        let full = man | 0x80_0000;
+        let shift = (-14 - unbiased) + 13;
+        let mut m16 = full >> shift;
+        let rem_mask = (1u32 << shift) - 1;
+        let rem = full & rem_mask;
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (m16 & 1) == 1) {
+            m16 += 1;
+        }
+        return sign | m16 as u16;
+    }
+    sign // underflow → signed zero
+}
+
+/// Convert a binary16 bit pattern to `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: value = man × 2⁻²⁴. Normalize: if the MSB of the
+            // 10-bit field is at position p (from LSB), the f32 exponent is
+            // 127 + p − 24 and the mantissa is man shifted so the MSB lands
+            // on the implicit bit.
+            let lead = man.leading_zeros() - 21; // zeros within the 10-bit field + 1
+            let m = (man << lead) & 0x3ff;
+            let e = 113 - lead;
+            sign | (e << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip an `f32` through binary16 (the paper's FP16 storage path).
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Emulate NVIDIA TF32: keep the f32 exponent (8 bits) but truncate the
+/// mantissa to 10 bits with round-to-nearest-even. This is the precision a
+/// tensor core sees on its inputs.
+pub fn round_tf32(x: f32) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let rem = bits & 0x1fff;
+    let mut out = bits >> 13;
+    if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+        out += 1;
+    }
+    f32::from_bits(out << 13)
+}
+
+/// Encode an f32 slice as packed little-endian f16 bytes.
+pub fn encode_f16(src: &[f32], dst: &mut Vec<u8>) {
+    dst.reserve(src.len() * 2);
+    for &x in src {
+        dst.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+}
+
+/// Decode packed little-endian f16 bytes into f32s. `bytes.len()` must be even.
+pub fn decode_f16(bytes: &[u8], dst: &mut Vec<f32>) {
+    debug_assert_eq!(bytes.len() % 2, 0);
+    dst.reserve(bytes.len() / 2);
+    for c in bytes.chunks_exact(2) {
+        dst.push(f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
+    }
+}
+
+/// Smallest positive normal f16.
+pub const F16_MIN_POSITIVE: f32 = 6.103515625e-5;
+/// Largest finite f16.
+pub const F16_MAX: f32 = 65504.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values_roundtrip() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1024.0, 0.125, 65504.0] {
+            assert_eq!(round_f16(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert!(round_f16(1e6).is_infinite());
+        assert!(round_f16(-1e6).is_infinite());
+        assert!(round_f16(-1e6) < 0.0);
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        assert_eq!(round_f16(1e-10), 0.0);
+        assert_eq!(round_f16(-1e-10), 0.0);
+        assert!(round_f16(-1e-10).is_sign_negative());
+    }
+
+    #[test]
+    fn subnormals_preserved() {
+        // 2^-24 is the smallest positive subnormal f16.
+        let tiny = 2f32.powi(-24);
+        assert_eq!(round_f16(tiny), tiny);
+        assert_eq!(round_f16(tiny * 0.4), 0.0);
+        assert_eq!(round_f16(tiny * 3.0), tiny * 3.0);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(round_f16(f32::NAN).is_nan());
+        assert!(round_f16(f32::INFINITY).is_infinite());
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // f16 has 11 significand bits → rel err ≤ 2^-11 for normals.
+        let mut x = 1.0e-4f32;
+        while x < 6.0e4 {
+            let r = round_f16(x);
+            assert!(((r - x) / x).abs() <= 1.0 / 2048.0, "x={x} r={r}");
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn tf32_mantissa_10_bits() {
+        let x = 1.0 + 1.0 / 1024.0; // representable in 10 bits
+        assert_eq!(round_tf32(x), x);
+        let y = 1.0 + 1.0 / 4096.0; // not representable
+        assert_ne!(round_tf32(y), y);
+        assert!((round_tf32(y) - y).abs() <= 1.0 / 2048.0);
+        // Exponent range is f32's: no overflow at 1e30.
+        assert!(round_tf32(1e30).is_finite());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let src: Vec<f32> = (0..257).map(|i| (i as f32 - 100.0) * 0.25).collect();
+        let mut bytes = Vec::new();
+        encode_f16(&src, &mut bytes);
+        assert_eq!(bytes.len(), src.len() * 2);
+        let mut back = Vec::new();
+        decode_f16(&bytes, &mut back);
+        assert_eq!(src, back); // all values exactly representable
+    }
+}

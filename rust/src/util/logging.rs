@@ -1,0 +1,106 @@
+//! Tiny leveled logger (env_logger is unavailable offline).
+//!
+//! Level is taken from `FASTMPS_LOG` (error|warn|info|debug|trace), default
+//! `info`. Output goes to stderr so stdout stays machine-parseable for the
+//! bench harnesses.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn start_instant() -> Instant {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Current log level (initialized from `FASTMPS_LOG` on first use).
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != 255 {
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let lv = match std::env::var("FASTMPS_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+    let _ = start_instant();
+    lv
+}
+
+/// Override the level programmatically (used by `--verbose`/`--quiet`).
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+/// Core log call — prefer the `log_*!` macros.
+pub fn log(lv: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if lv > level() {
+        return;
+    }
+    let t = start_instant().elapsed().as_secs_f64();
+    let tag = match lv {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{t:9.3}s {tag} {module}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_info {
+    ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_trace {
+    ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($a)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_and_log() {
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        log_debug!("debug message {}", 42); // visible
+        set_level(Level::Error);
+        log_info!("should be suppressed");
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,207 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! A `Gen` wraps a seeded PRNG and produces random structured inputs; a
+//! property is a closure returning `Result<(), String>`. On failure the
+//! framework re-runs the case with a bisected "size" parameter to report the
+//! smallest failing size it can find (a lightweight stand-in for shrinking),
+//! and always prints the seed so the case can be replayed.
+
+use crate::rng::Xoshiro256;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Soft upper bound on generated structure sizes; lowered during shrink.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen {
+            rng: Xoshiro256::seed_from(seed),
+            size,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform in `[lo, hi)` (hi > lo).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + (self.rng.next_u64() as usize) % (hi - lo)
+    }
+
+    /// A "sized" length: uniform in `[lo, max(lo+1, min(hi, lo+size)))`.
+    pub fn len(&mut self, lo: usize, hi: usize) -> usize {
+        let cap = (lo + self.size.max(1)).min(hi).max(lo + 1);
+        self.usize_in(lo, cap)
+    }
+
+    /// Uniform f64 in [0,1).
+    pub fn unit_f64(&mut self) -> f64 {
+        self.rng.unit_f64()
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.unit_f64() * (hi - lo)
+    }
+
+    /// Standard normal (Box–Muller).
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick an element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len())]
+    }
+
+    /// Vec of f32 in [-scale, scale], sized length in [1, max_len].
+    pub fn f32_vec(&mut self, max_len: usize, scale: f32) -> Vec<f32> {
+        let n = self.len(1, max_len + 1);
+        (0..n)
+            .map(|_| (self.f64_in(-scale as f64, scale as f64)) as f32)
+            .collect()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Honour FASTMPS_PROP_CASES so CI can crank coverage up.
+        let cases = std::env::var("FASTMPS_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config {
+            cases,
+            seed: 0x5eed_fa57_3535_0001,
+            max_size: 32,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases; panic with seed + smallest
+/// failing size on the first failure.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        // Grow sizes over the run: early cases are tiny.
+        let size = 1 + (cfg.max_size * (case + 1)) / cfg.cases;
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // "Shrink": retry the same seed at smaller sizes and report the
+            // smallest size that still fails.
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g2 = Gen::new(seed, s);
+                match prop(&mut g2) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Shorthand for `check` with the default configuration.
+pub fn quickcheck<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check(name, Config::default(), prop)
+}
+
+/// Property helper: assert approximate equality of two f64s.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quickcheck("add commutes", |g| {
+            let a = g.f64_in(-1e6, 1e6);
+            let b = g.f64_in(-1e6, 1e6);
+            close(a + b, b + a, 1e-12, "a+b")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        quickcheck("always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_in_range() {
+        quickcheck("ranges", |g| {
+            let n = g.usize_in(3, 9);
+            if !(3..9).contains(&n) {
+                return Err(format!("usize_in out of range: {n}"));
+            }
+            let x = g.f64_in(-2.0, 2.0);
+            if !(-2.0..2.0).contains(&x) {
+                return Err(format!("f64_in out of range: {x}"));
+            }
+            let v = g.f32_vec(10, 1.0);
+            if v.is_empty() || v.len() > 10 {
+                return Err(format!("bad vec len {}", v.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sizes_grow_over_cases() {
+        let mut max_seen = 0usize;
+        check(
+            "size growth",
+            Config {
+                cases: 16,
+                seed: 7,
+                max_size: 16,
+            },
+            |g| {
+                max_seen = max_seen.max(g.size);
+                Ok(())
+            },
+        );
+        assert!(max_seen >= 8);
+    }
+}

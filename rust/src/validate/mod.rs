@@ -1,0 +1,107 @@
+//! Validation: sampled statistics vs exact marginals (paper Fig. 9).
+//!
+//! First-order correlation: per-site sampled ⟨n_i⟩ against the exact
+//! transfer-matrix marginals; the paper reports the least-squares slope
+//! (0.97 ≈ ideal 1). Second-order: E[n_i n_j] over near-diagonal pairs
+//! (slope 0.96). Truncation error vs χ comes from the dynamic-χ plan's
+//! spectrum model (Fig. 9b).
+
+use crate::mps::exact::{correlation_slope, exact_mean_photons, exact_pair_moments};
+use crate::mps::Mps;
+use crate::sampler::sink::SampleSink;
+use crate::util::error::Result;
+
+/// Fig. 9 summary for one run.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    /// Least-squares slope of sampled vs exact ⟨n_i⟩.
+    pub first_order_slope: f64,
+    /// Slope of sampled vs exact E[n_i n_j].
+    pub second_order_slope: f64,
+    /// Max |sampled − exact| over sites (first order).
+    pub first_order_max_err: f64,
+    /// Number of sites / pairs compared.
+    pub sites: usize,
+    pub pairs: usize,
+}
+
+/// Compare a sink against the exact marginals of `mps`.
+pub fn validate(mps: &Mps, sink: &SampleSink) -> Result<ValidationReport> {
+    let ideal = exact_mean_photons(mps)?;
+    let sampled = sink.mean_photons();
+    let first_order_slope = correlation_slope(&ideal, &sampled);
+    let first_order_max_err = ideal
+        .iter()
+        .zip(&sampled)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+
+    let ideal_pairs = exact_pair_moments(mps, sink.max_gap)?;
+    let sampled_pairs = sink.pair_moments();
+    // Align by (i, j).
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (i, j, v) in &ideal_pairs {
+        if let Some((_, _, s)) = sampled_pairs
+            .iter()
+            .find(|(a, b, _)| a == i && b == j)
+        {
+            xs.push(*v);
+            ys.push(*s);
+        }
+    }
+    let second_order_slope = correlation_slope(&xs, &ys);
+
+    Ok(ValidationReport {
+        first_order_slope,
+        second_order_slope,
+        first_order_max_err,
+        sites: ideal.len(),
+        pairs: xs.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+    use crate::io::{GammaStore, StoreCodec, StorePrecision};
+    use std::sync::Arc;
+
+    #[test]
+    fn sampled_slopes_near_one() {
+        let dir = std::env::temp_dir().join(format!("fastmps-val-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = Preset::Jiuzhang2.scaled_spec(23);
+        spec.m = 10;
+        spec.chi_cap = 10;
+        spec.decay_k = 0.0;
+        spec.displacement_sigma = 0.0;
+        let store = Arc::new(
+            GammaStore::create(&dir, &spec, StorePrecision::F64, StoreCodec::Raw).unwrap(),
+        );
+        let mut cfg = RunConfig::new(spec.clone());
+        cfg.n_samples = 6000;
+        cfg.n1_macro = 1500;
+        cfg.n2_micro = 500;
+        cfg.p1 = 2;
+        cfg.engine = EngineKind::Native;
+        cfg.compute = ComputePrecision::F64;
+        cfg.scaling = ScalingMode::PerSample;
+        let rep = crate::coordinator::data_parallel::run(&cfg, &store, &[]).unwrap();
+        let mps = store.load_all().unwrap();
+        let v = validate(&mps, &rep.sink).unwrap();
+        assert!(
+            (v.first_order_slope - 1.0).abs() < 0.05,
+            "first-order slope {}",
+            v.first_order_slope
+        );
+        assert!(
+            (v.second_order_slope - 1.0).abs() < 0.12,
+            "second-order slope {}",
+            v.second_order_slope
+        );
+        assert!(v.pairs > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,187 @@
+//! Cross-layer integration tests: AOT artifacts × PJRT runtime ×
+//! coordinators × validation.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent so
+//! `cargo test` works before the first build).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use fastmps::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use fastmps::coordinator::{data_parallel, model_parallel, tensor_parallel};
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::mps::gbs::GbsSpec;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn make_store(tag: &str, spec: &GbsSpec) -> (Arc<GammaStore>, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("fastmps-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store =
+        Arc::new(GammaStore::create(&dir, spec, StorePrecision::F32, StoreCodec::Raw).unwrap());
+    (store, dir)
+}
+
+fn small_spec(m: usize, chi: usize, sigma: f64) -> GbsSpec {
+    let mut spec = Preset::Jiuzhang2.scaled_spec(42);
+    spec.m = m;
+    spec.chi_cap = chi;
+    spec.decay_k = 0.02;
+    spec.displacement_sigma = sigma;
+    spec
+}
+
+fn base_cfg(store: &GammaStore, samples: u64) -> RunConfig {
+    let mut cfg = RunConfig::new(store.spec.clone());
+    cfg.n_samples = samples;
+    cfg.n1_macro = 256;
+    cfg.n2_micro = 256;
+    cfg.engine = EngineKind::Native;
+    cfg.compute = ComputePrecision::F32;
+    cfg.scaling = ScalingMode::PerSample;
+    cfg.store_precision = store.precision;
+    cfg
+}
+
+#[test]
+fn xla_engine_matches_native_outcomes() {
+    let Some(art) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (store, dir) = make_store("xla-match", &small_spec(16, 64, 0.0));
+    let mut native = base_cfg(&store, 512);
+    let report_native = data_parallel::run(&native, &store, &[]).unwrap();
+    native.engine = EngineKind::Xla;
+    native.artifacts_dir = art;
+    let report_xla = data_parallel::run(&native, &store, &[]).unwrap();
+    // Identical seeds, identical f32 pipeline ⇒ identical histograms (a
+    // handful of knife-edge flips tolerated).
+    let total: u64 = report_native.sink.counts.iter().sum();
+    let mut diff = 0u64;
+    for (a, b) in report_native.sink.hist.iter().zip(&report_xla.sink.hist) {
+        for (x, y) in a.iter().zip(b) {
+            diff += x.abs_diff(*y);
+        }
+    }
+    assert!(
+        diff * 200 <= total,
+        "{diff} outcome-count moves out of {total}"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn xla_engine_runs_displaced_path() {
+    let Some(art) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (store, dir) = make_store("xla-disp", &small_spec(12, 64, 0.3));
+    let mut cfg = base_cfg(&store, 256);
+    cfg.engine = EngineKind::Xla;
+    cfg.artifacts_dir = art;
+    let rep = data_parallel::run(&cfg, &store, &[]).unwrap();
+    assert_eq!(rep.sink.total_samples(), 256);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn all_three_schemes_agree_on_statistics() {
+    let (store, dir) = make_store("schemes", &small_spec(10, 24, 0.0));
+    let mut cfg = base_cfg(&store, 256);
+    cfg.compute = ComputePrecision::F64;
+    let dp = data_parallel::run(&cfg, &store, &[]).unwrap();
+    let mp = model_parallel::run(&cfg, &store).unwrap();
+    let mut tp_cfg = cfg.clone();
+    tp_cfg.p2 = 2;
+    let tp = tensor_parallel::run(&tp_cfg, &store).unwrap();
+    assert_eq!(dp.sink.hist, mp.sink.hist, "DP vs MP");
+    assert_eq!(dp.sink.hist, tp.sink.hist, "DP vs TP");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn validation_slopes_near_one_through_full_stack() {
+    let (store, dir) = make_store("validate", &small_spec(12, 16, 0.0));
+    let mut cfg = base_cfg(&store, 8192);
+    cfg.n1_macro = 2048;
+    cfg.p1 = 2;
+    cfg.compute = ComputePrecision::F64;
+    let rep = data_parallel::run(&cfg, &store, &[]).unwrap();
+    let mps = store.load_all().unwrap();
+    let v = fastmps::validate::validate(&mps, &rep.sink).unwrap();
+    assert!(
+        (v.first_order_slope - 1.0).abs() < 0.06,
+        "slope {}",
+        v.first_order_slope
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn f16_store_zstd_full_pipeline() {
+    let dir = std::env::temp_dir().join(format!("fastmps-it-f16z-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = small_spec(10, 32, 0.0);
+    let store = Arc::new(
+        GammaStore::create(&dir, &spec, StorePrecision::F16, StoreCodec::Zstd).unwrap(),
+    );
+    let cfg = base_cfg(&store, 256);
+    let rep = data_parallel::run(&cfg, &store, &[]).unwrap();
+    assert_eq!(rep.sink.total_samples(), 256);
+    assert_eq!(rep.dead_rows, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn throttled_disk_accounts_io_time() {
+    let (store, dir) = make_store("disk", &small_spec(8, 32, 0.0));
+    let mut cfg = base_cfg(&store, 256);
+    cfg.disk_bw = Some(50e6); // 50 MB/s
+    let rep = data_parallel::run(&cfg, &store, &[]).unwrap();
+    let expect = store.total_bytes() as f64 / 50e6;
+    let io = rep.metrics.phase("io_virtual");
+    assert!(
+        io >= expect * 0.9,
+        "io_virtual {io} < expected {expect}"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn underflow_injection_is_detected_not_silent() {
+    // Failure injection: brutal decay with no rescaling in f32 must be
+    // *visible* via dead_rows, while the run itself completes.
+    let mut spec = small_spec(12, 16, 0.0);
+    spec.decay_k = 4.0;
+    let (store, dir) = make_store("underflow", &spec);
+    let mut cfg = base_cfg(&store, 128);
+    cfg.scaling = ScalingMode::None;
+    let rep = data_parallel::run(&cfg, &store, &[]).unwrap();
+    assert!(rep.dead_rows > 0, "collapse must be reported");
+    // FastMPS per-sample scaling on the same data survives.
+    cfg.scaling = ScalingMode::PerSample;
+    let ok = data_parallel::run(&cfg, &store, &[]).unwrap();
+    assert_eq!(ok.dead_rows, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn scaling_efficiency_of_dp_threads() {
+    // Weak check of Fig. 12's shape on real threads: 2 workers should not
+    // be slower than 1 worker on the same total work (generous margin for
+    // CI noise).
+    let (store, dir) = make_store("scaleff", &small_spec(12, 48, 0.0));
+    let mut cfg = base_cfg(&store, 2048);
+    cfg.n1_macro = 512;
+    cfg.p1 = 1;
+    let t1 = data_parallel::run(&cfg, &store, &[]).unwrap().wall;
+    cfg.p1 = 2;
+    let t2 = data_parallel::run(&cfg, &store, &[]).unwrap().wall;
+    assert!(t2 < t1 * 1.2, "p1=2 took {t2}s vs p1=1 {t1}s");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
