@@ -1,0 +1,51 @@
+//! Service-path smoke benchmark: throughput, batch occupancy, and cache
+//! hit rate of the resident batched sampling service, written to
+//! `BENCH_service.json` (machine-readable) next to the human-readable rows.
+//!
+//! Run with `cargo bench --bench bench_service` from `rust/`.
+
+use fastmps::service;
+use fastmps::util::bench;
+
+fn main() {
+    bench::header("service", "resident batched sampling service smoke");
+    let scratch = std::env::temp_dir().join(format!("fastmps-bench-service-{}", std::process::id()));
+    std::fs::create_dir_all(&scratch).unwrap();
+    let j = service::smoke_benchmark(&scratch, 4, 2000).unwrap();
+    let _ = std::fs::remove_dir_all(&scratch);
+
+    let f = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let svc = j.get("service").unwrap();
+    bench::row(&[
+        ("jobs", format!("{}", f("jobs"))),
+        ("samples_per_job", format!("{}", f("samples_per_job"))),
+        ("jobs_done", format!("{}", f("jobs_done"))),
+        ("wall_secs", format!("{:.3}", f("wall_secs"))),
+        (
+            "throughput_samples_per_sec",
+            format!("{:.0}", f("throughput_samples_per_sec")),
+        ),
+        (
+            "batch_occupancy",
+            format!(
+                "{:.3}",
+                svc.get("batch_occupancy").and_then(|v| v.as_f64()).unwrap_or(0.0)
+            ),
+        ),
+        (
+            "cache_hit_rate",
+            format!(
+                "{:.3}",
+                svc.get("cache_hit_rate").and_then(|v| v.as_f64()).unwrap_or(0.0)
+            ),
+        ),
+    ]);
+    bench::paper("no paper counterpart — service KPIs for the ROADMAP north star");
+
+    std::fs::write("../BENCH_service.json", j.pretty()).or_else(|_| {
+        // Fall back to CWD when not run from `rust/`.
+        std::fs::write("BENCH_service.json", j.pretty())
+    })
+    .unwrap();
+    println!("  wrote BENCH_service.json");
+}

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use super::args::Args;
 use crate::comm::NetPreset;
-use crate::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode};
+use crate::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode, ServiceConfig};
 use crate::coordinator::{data_parallel, model_parallel, tensor_parallel};
 use crate::io::{GammaStore, StoreCodec, StorePrecision};
 use crate::mps::gbs::GbsSpec;
@@ -20,7 +20,7 @@ USAGE: fastmps <command> [--options]
 COMMANDS:
   gen-data    Generate a synthetic GBS MPS store
               --preset <jiuzhang2|jiuzhang3h|bm216h|bm288|m8176> | --m/--chi/--d/--asp
-              --out DIR [--precision f64|f32|f16] [--codec raw|zstd]
+              --out DIR [--precision f64|f32|f16] [--codec raw|lz]
               [--seed N] [--full-scale] [--fixed-chi] [--decay K] [--sigma S]
   sample      Run the sampler on a store
               --data DIR --samples N [--scheme dp|mp|tp] [--engine xla|native]
@@ -36,6 +36,19 @@ COMMANDS:
               [--net P] [--bytes B] [--p2 N]
   info        Describe a store
               --data DIR
+  serve       Run the resident batched sampling service on a job directory
+              --jobs DIR [--workers N] [--max-queue N] [--max-samples N]
+              [--cache N] [--linger-ms N] [--poll-ms N] [--n2 N]
+              [--target-batch N] [--compute C] [--scaling S] [--engine E]
+              [--threads N] [--disk-bw BPS] [--artifacts DIR]
+              [--drain] [--max-seconds S] [--json]
+  submit      Submit a sampling job to a running serve instance
+              --jobs DIR --data STORE --samples N [--sample-base B]
+              [--compute C] [--tag T] [--wait] [--timeout-s S] [--json]
+  jobs        List job statuses under a job directory
+              --jobs DIR [--json]
+  bench-service  Smoke-benchmark the service path, emit KPI JSON
+              [--n-jobs N] [--samples N] [--out FILE]
   help        This text
 ";
 
@@ -52,6 +65,10 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "perf-model" => cmd_perf_model(&args),
         "bench-comm" => cmd_bench_comm(&args),
         "info" => cmd_info(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "jobs" => cmd_jobs(&args),
+        "bench-service" => cmd_bench_service(&args),
         other => Err(Error::config(format!(
             "unknown command '{other}' (try 'fastmps help')"
         ))),
@@ -317,6 +334,166 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn service_config_from_args(args: &Args) -> Result<ServiceConfig> {
+    let d = ServiceConfig::default();
+    let target_batch = match args.str_opt("target-batch") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            Error::config(format!("--target-batch: '{v}' is not an integer"))
+        })?),
+    };
+    Ok(ServiceConfig {
+        workers: args.usize_or("workers", d.workers)?,
+        max_queue: args.usize_or("max-queue", d.max_queue)?,
+        max_samples_per_job: args.u64_or("max-samples", d.max_samples_per_job)?,
+        cache_entries: args.usize_or("cache", d.cache_entries)?,
+        linger_ms: args.u64_or("linger-ms", d.linger_ms)?,
+        poll_ms: args.u64_or("poll-ms", d.poll_ms)?,
+        n2_micro: args.usize_or("n2", d.n2_micro)?,
+        target_batch,
+        compute: ComputePrecision::parse(&args.str_or("compute", "f32"))?,
+        scaling: ScalingMode::parse(&args.str_or("scaling", "per-sample"))?,
+        engine: EngineKind::parse(&args.str_or("engine", "native"))?,
+        gemm_threads: args.usize_or("threads", d.gemm_threads)?,
+        disk_bw: args.f64_opt("disk-bw")?,
+        artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
+        ..d
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs_dir = PathBuf::from(args.req("jobs")?);
+    let cfg = service_config_from_args(args)?;
+    let mut opts = crate::service::api::ServeOptions::new(&jobs_dir);
+    opts.poll_ms = cfg.poll_ms;
+    opts.drain = args.flag("drain");
+    opts.max_secs = args.f64_opt("max-seconds")?;
+    let as_json = args.flag("json");
+    args.finish()?;
+    println!(
+        "serving {} with {} workers (stop: touch {}/stop)",
+        jobs_dir.display(),
+        cfg.workers,
+        jobs_dir.display()
+    );
+    let metrics = crate::service::api::serve(cfg, &opts)?;
+    if as_json {
+        println!("{}", metrics.pretty());
+    } else {
+        let rate = metrics
+            .get("cache_hit_rate")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        let occ = metrics
+            .get("batch_occupancy")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        println!(
+            "served; cache hit rate {:.1}% | batch occupancy {:.1}% | metrics in {}/service_metrics.json",
+            rate * 100.0,
+            occ * 100.0,
+            jobs_dir.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let jobs_dir = PathBuf::from(args.req("jobs")?);
+    let samples: u64 = {
+        let v = args.req("samples")?;
+        v.parse()
+            .map_err(|_| Error::config(format!("--samples: '{v}' is not an integer")))?
+    };
+    let mut spec =
+        crate::service::JobSpec::new(PathBuf::from(args.req("data")?), samples);
+    spec.sample_base = args.u64_or("sample-base", 0)?;
+    spec.compute = match args.str_opt("compute") {
+        None => None,
+        Some(c) => Some(ComputePrecision::parse(c)?),
+    };
+    spec.tag = args.str_or("tag", "");
+    let wait = args.flag("wait");
+    let timeout = args.f64_opt("timeout-s")?.unwrap_or(300.0);
+    let as_json = args.flag("json");
+    args.finish()?;
+    let stem = crate::service::api::submit_file(&jobs_dir, &spec)?;
+    if !wait {
+        println!("submitted {stem} ({} samples)", spec.n_samples);
+        return Ok(());
+    }
+    let result = crate::service::api::wait_result(
+        &jobs_dir,
+        &stem,
+        std::time::Duration::from_secs_f64(timeout),
+    )?;
+    if as_json {
+        println!("{}", result.pretty());
+    } else {
+        let status = result
+            .get("status")
+            .and_then(|v| v.as_str())
+            .unwrap_or("?");
+        let mean = result
+            .get("total_mean_photons")
+            .and_then(|v| v.as_f64());
+        match (status, mean) {
+            ("done", Some(m)) => println!("{stem}: done, total⟨n⟩={m:.4}"),
+            _ => println!(
+                "{stem}: {status}{}",
+                result
+                    .get("error")
+                    .and_then(|v| v.as_str())
+                    .map(|e| format!(" ({e})"))
+                    .unwrap_or_default()
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_jobs(args: &Args) -> Result<()> {
+    let jobs_dir = PathBuf::from(args.req("jobs")?);
+    let as_json = args.flag("json");
+    args.finish()?;
+    let jobs = crate::service::api::list_jobs(&jobs_dir)?;
+    if as_json {
+        let j = Json::Arr(jobs.iter().map(|(_, v)| v.clone()).collect());
+        println!("{}", j.pretty());
+        return Ok(());
+    }
+    if jobs.is_empty() {
+        println!("no jobs under {}", jobs_dir.display());
+        return Ok(());
+    }
+    for (stem, j) in jobs {
+        println!(
+            "{stem}  {}  {}/{}",
+            j.get("status").and_then(|v| v.as_str()).unwrap_or("?"),
+            j.get("done").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            j.get("samples").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_service(args: &Args) -> Result<()> {
+    let n_jobs = args.usize_or("n-jobs", 4)?;
+    let samples = args.u64_or("samples", 2000)?;
+    let out = args.str_opt("out").map(PathBuf::from);
+    args.finish()?;
+    let scratch = std::env::temp_dir().join(format!("fastmps-bench-svc-{}", std::process::id()));
+    std::fs::create_dir_all(&scratch).map_err(|e| Error::io(scratch.display(), e))?;
+    let j = crate::service::smoke_benchmark(&scratch, n_jobs, samples)?;
+    let _ = std::fs::remove_dir_all(&scratch);
+    println!("{}", j.pretty());
+    if let Some(path) = out {
+        std::fs::write(&path, j.pretty()).map_err(|e| Error::io(path.display(), e))?;
+        eprintln!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -366,6 +543,53 @@ mod tests {
         )))
         .unwrap();
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn serve_submit_jobs_cli_round_trip() {
+        let root = std::env::temp_dir().join(format!("fastmps-cli-svc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let store = root.join("store");
+        let jobs = root.join("jobs");
+        run_cli(&argv(&format!(
+            "gen-data --m 5 --chi 8 --d 3 --out {} --decay 0 --sigma 0",
+            store.display()
+        )))
+        .unwrap();
+        let serve_args = argv(&format!(
+            "serve --jobs {} --workers 2 --n2 32 --target-batch 128 --compute f64 \
+             --poll-ms 5 --linger-ms 2 --drain --max-seconds 60",
+            jobs.display()
+        ));
+        let server = std::thread::spawn(move || run_cli(&serve_args));
+        run_cli(&argv(&format!(
+            "submit --jobs {} --data {} --samples 64 --wait --timeout-s 60 --json",
+            jobs.display(),
+            store.display()
+        )))
+        .unwrap();
+        server.join().unwrap().unwrap();
+        run_cli(&argv(&format!("jobs --jobs {}", jobs.display()))).unwrap();
+        assert!(jobs.join("service_metrics.json").exists());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn bench_service_emits_kpi_json() {
+        let out = std::env::temp_dir().join(format!(
+            "fastmps-cli-benchsvc-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&out);
+        run_cli(&argv(&format!(
+            "bench-service --n-jobs 2 --samples 100 --out {}",
+            out.display()
+        )))
+        .unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.get("jobs").unwrap().as_f64(), Some(2.0));
+        std::fs::remove_file(&out).unwrap();
     }
 
     #[test]

@@ -241,6 +241,113 @@ impl RunConfig {
     }
 }
 
+/// Configuration of the resident sampling service (`fastmps serve`). One
+/// section per concern: admission control guards the queue, the batcher
+/// sizing realises §3.1's overlap condition, and the execution knobs are
+/// shared by every job the service runs (jobs may override `compute`).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads driving macro batches (each owns a resident engine).
+    pub workers: usize,
+    /// Admission control: max jobs queued or in flight.
+    pub max_queue: usize,
+    /// Admission control: max samples a single job may request.
+    pub max_samples_per_job: u64,
+    /// LRU capacity of the `GammaStore` cache, in stores.
+    pub cache_entries: usize,
+    /// How long the batcher lingers for more compatible jobs before
+    /// dispatching a partially filled macro batch.
+    pub linger_ms: u64,
+    /// Poll interval of the file-transport serve loop.
+    pub poll_ms: u64,
+    /// Micro batch size N₂ within service macro batches.
+    pub n2_micro: usize,
+    /// Macro-batch row target; `None` derives it per store from the §3.1
+    /// overlap condition capped by the Eq. 3 budget (`mem_budget`).
+    pub target_batch: Option<usize>,
+    /// Eq. 3 memory budget per worker (bytes) for the derived target.
+    pub mem_budget: u64,
+    pub engine: EngineKind,
+    pub compute: ComputePrecision,
+    pub scaling: ScalingMode,
+    pub gemm_threads: usize,
+    /// Simulated disk bandwidth shared by all cached stores' prefetchers.
+    pub disk_bw: Option<f64>,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            workers: 2,
+            max_queue: 256,
+            max_samples_per_job: 10_000_000,
+            cache_entries: 4,
+            linger_ms: 5,
+            poll_ms: 20,
+            n2_micro: 256,
+            target_batch: None,
+            mem_budget: 1 << 30,
+            engine: EngineKind::Native,
+            compute: ComputePrecision::F32,
+            scaling: ScalingMode::PerSample,
+            gemm_threads: 1,
+            disk_bw: None,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::config("service: workers must be ≥ 1"));
+        }
+        if self.max_queue == 0 || self.max_samples_per_job == 0 {
+            return Err(Error::config("service: admission limits must be ≥ 1"));
+        }
+        if self.cache_entries == 0 {
+            return Err(Error::config("service: cache_entries must be ≥ 1"));
+        }
+        if self.n2_micro == 0 {
+            return Err(Error::config("service: n2_micro must be ≥ 1"));
+        }
+        if let Some(t) = self.target_batch {
+            if t < self.n2_micro {
+                return Err(Error::config(format!(
+                    "service: target_batch {t} below micro batch N₂={}",
+                    self.n2_micro
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::Num(self.workers as f64)),
+            ("max_queue", Json::Num(self.max_queue as f64)),
+            (
+                "max_samples_per_job",
+                Json::Num(self.max_samples_per_job as f64),
+            ),
+            ("cache_entries", Json::Num(self.cache_entries as f64)),
+            ("linger_ms", Json::Num(self.linger_ms as f64)),
+            ("n2_micro", Json::Num(self.n2_micro as f64)),
+            (
+                "target_batch",
+                self.target_batch
+                    .map(|t| Json::Num(t as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("mem_budget", Json::Num(self.mem_budget as f64)),
+            ("engine", Json::Str(self.engine.as_str().into())),
+            ("compute", Json::Str(self.compute.as_str().into())),
+            ("scaling", Json::Str(self.scaling.as_str().into())),
+        ])
+    }
+}
+
 /// Paper datasets (Table 1). `scale` shrinks (M, χ) to CPU-testbed size
 /// while keeping ASP (and hence the dynamic-χ profile shape) intact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -390,6 +497,19 @@ mod tests {
         assert!(ComputePrecision::parse("q8").is_err());
         assert!(ScalingMode::parse("?").is_err());
         assert!(EngineKind::parse("?").is_err());
+    }
+
+    #[test]
+    fn service_config_validation() {
+        let mut s = ServiceConfig::default();
+        s.validate().unwrap();
+        s.target_batch = Some(8); // below the default N₂ = 256
+        assert!(s.validate().is_err());
+        s.target_batch = None;
+        s.workers = 0;
+        assert!(s.validate().is_err());
+        let j = ServiceConfig::default().to_json();
+        assert_eq!(j.get("engine").unwrap().as_str(), Some("native"));
     }
 
     #[test]

@@ -62,6 +62,22 @@ impl EngineBox {
             EngineBox::Xla(_) => 0,
         }
     }
+
+    /// Drain accumulated (metrics, dead-row count) and reset the engine's
+    /// accounting to zero, so a resident engine can be reused across
+    /// service jobs without double counting. The engine's compiled-kernel /
+    /// executable caches survive — that reuse is the point of keeping the
+    /// engine alive between runs.
+    pub fn drain(&mut self) -> (Metrics, u64) {
+        match self {
+            EngineBox::Native(e) => {
+                let m = std::mem::take(&mut e.metrics);
+                let d = std::mem::replace(&mut e.dead_rows, 0);
+                (m, d)
+            }
+            EngineBox::Xla(e) => (std::mem::take(&mut e.metrics), 0),
+        }
+    }
 }
 
 impl StepEngine for EngineBox {
@@ -163,6 +179,21 @@ mod tests {
         env_store_rows(&mut dst, 1, &rows);
         assert_eq!(dst.re[3], 3.0);
         assert_eq!(dst.re[0], 0.0);
+    }
+
+    #[test]
+    fn engine_drain_resets_accounting() {
+        let cfg = RunConfig::new(crate::config::Preset::Jiuzhang2.scaled_spec(1));
+        let mut e = EngineBox::build(&cfg).unwrap();
+        if let EngineBox::Native(n) = &mut e {
+            n.metrics.add(crate::metrics::keys::FLOPS, 7);
+            n.dead_rows = 3;
+        }
+        let (m, d) = e.drain();
+        assert_eq!(m.get(crate::metrics::keys::FLOPS), 7);
+        assert_eq!(d, 3);
+        assert_eq!(e.metrics().get(crate::metrics::keys::FLOPS), 0);
+        assert_eq!(e.dead_rows(), 0);
     }
 
     #[test]

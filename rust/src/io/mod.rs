@@ -8,7 +8,7 @@
 //! compute-bound (computation-I/O ratio `N₁`, §3.1).
 //!
 //! - [`GammaStore`]: an on-disk MPS ("FMPS1" format): a JSON manifest plus
-//!   one blob per site in f64/f32/f16 × raw/zstd.
+//!   one blob per site in f64/f32/f16 × raw/lz.
 //! - [`Prefetcher`]: background double-buffered loader (I/O↔compute
 //!   overlap of Fig. 3).
 //! - [`DiskModel`]: optional bandwidth throttle + contention accounting so
@@ -20,5 +20,5 @@ mod loader;
 mod store;
 
 pub use diskmodel::DiskModel;
-pub use loader::Prefetcher;
-pub use store::{GammaStore, StoreCodec, StorePrecision};
+pub use loader::{PrefetchStats, Prefetcher};
+pub use store::{manifest_hash_at, GammaStore, StoreCodec, StorePrecision};

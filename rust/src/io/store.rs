@@ -6,7 +6,7 @@
 //!                            precision, codec, blob sizes
 //! <dir>/site_<i>.bin       — Γ_i as interleaved (re, im) pairs, row-major
 //!                            (χ_l, χ_r, d), in the manifest precision,
-//!                            optionally zstd-compressed
+//!                            optionally LZ-compressed (`util::compress`)
 //! ```
 //!
 //! FP16 blobs implement §3.3.2: stored/moved at half width, converted back
@@ -14,12 +14,12 @@
 //! is part of the design and is what the precision tests measure).
 
 use std::fs;
-use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 use crate::mps::gbs::GbsSpec;
 use crate::mps::{Mps, Site};
 use crate::tensor::{Complex, Tensor3, C64};
+use crate::util::compress;
 use crate::util::error::{Error, Result};
 use crate::util::f16;
 use crate::util::json::Json;
@@ -59,25 +59,27 @@ impl StorePrecision {
     }
 }
 
-/// Blob compression.
+/// Blob compression. `Lz` is the built-in LZ77 codec ([`compress`]); the
+/// string "zstd" is accepted as a legacy alias for it (the offline build
+/// has no zstd crate, and no stores were ever written with real zstd).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StoreCodec {
     Raw,
-    Zstd,
+    Lz,
 }
 
 impl StoreCodec {
     pub fn as_str(self) -> &'static str {
         match self {
             StoreCodec::Raw => "raw",
-            StoreCodec::Zstd => "zstd",
+            StoreCodec::Lz => "lz",
         }
     }
 
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "raw" => Ok(StoreCodec::Raw),
-            "zstd" => Ok(StoreCodec::Zstd),
+            "lz" | "zstd" => Ok(StoreCodec::Lz),
             _ => Err(Error::config(format!("unknown codec '{s}'"))),
         }
     }
@@ -252,6 +254,14 @@ impl GammaStore {
         self.spec.m
     }
 
+    /// FNV-1a hash of the manifest bytes — the identity key the service's
+    /// `StoreCache` uses, so the same store reached through two paths (or
+    /// symlinks) shares one cached entry, while a regenerated store gets a
+    /// fresh one.
+    pub fn manifest_hash(&self) -> Result<u64> {
+        manifest_hash_at(&self.dir)
+    }
+
     /// Bytes on disk for site `i` (what the disk model charges).
     pub fn site_bytes(&self, i: usize) -> u64 {
         self.blob_bytes[i]
@@ -295,6 +305,19 @@ fn site_path(dir: &Path, i: usize) -> PathBuf {
     dir.join(format!("site_{i:05}.bin"))
 }
 
+/// FNV-1a over the manifest file of the store at `dir` (see
+/// [`GammaStore::manifest_hash`]).
+pub fn manifest_hash_at(dir: &Path) -> Result<u64> {
+    let path = dir.join("manifest.json");
+    let bytes = fs::read(&path).map_err(|e| Error::io(path.display(), e))?;
+    let mut h = 0xcbf29ce484222325u64;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    Ok(h)
+}
+
 fn encode_site(g: &Tensor3<f64>, precision: StorePrecision, codec: StoreCodec) -> Result<Vec<u8>> {
     let mut raw: Vec<u8> = Vec::with_capacity(g.len() * 2 * precision.bytes_per_scalar());
     match precision {
@@ -319,11 +342,7 @@ fn encode_site(g: &Tensor3<f64>, precision: StorePrecision, codec: StoreCodec) -
     }
     match codec {
         StoreCodec::Raw => Ok(raw),
-        StoreCodec::Zstd => {
-            let mut enc = zstd::Encoder::new(Vec::new(), 3).map_err(Error::from)?;
-            enc.write_all(&raw).map_err(Error::from)?;
-            enc.finish().map_err(Error::from)
-        }
+        StoreCodec::Lz => Ok(compress::compress(&raw)),
     }
 }
 
@@ -337,12 +356,7 @@ fn decode_site(
 ) -> Result<Tensor3<f64>> {
     let raw: Vec<u8> = match codec {
         StoreCodec::Raw => blob.to_vec(),
-        StoreCodec::Zstd => {
-            let mut dec = zstd::Decoder::new(blob).map_err(Error::from)?;
-            let mut out = Vec::new();
-            dec.read_to_end(&mut out).map_err(Error::from)?;
-            out
-        }
+        StoreCodec::Lz => compress::decompress(blob).map_err(Error::format)?,
     };
     let n = chi_l * chi_r * d;
     let want = n * 2 * precision.bytes_per_scalar();
@@ -475,10 +489,10 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_f16_zstd_bounded_error() {
-        let dir = tmpdir("f16zstd");
+    fn roundtrip_f16_lz_bounded_error() {
+        let dir = tmpdir("f16lz");
         let s = spec();
-        let store = GammaStore::create(&dir, &s, StorePrecision::F16, StoreCodec::Zstd).unwrap();
+        let store = GammaStore::create(&dir, &s, StorePrecision::F16, StoreCodec::Lz).unwrap();
         let mem = s.generate().unwrap();
         let loaded = store.load_all().unwrap();
         for (a, b) in mem.sites.iter().zip(&loaded.sites) {
@@ -496,10 +510,10 @@ mod tests {
         let dir = tmpdir("reopen");
         let s = spec();
         let created =
-            GammaStore::create(&dir, &s, StorePrecision::F32, StoreCodec::Zstd).unwrap();
+            GammaStore::create(&dir, &s, StorePrecision::F32, StoreCodec::Lz).unwrap();
         let opened = GammaStore::open(&dir).unwrap();
         assert_eq!(opened.precision, StorePrecision::F32);
-        assert_eq!(opened.codec, StoreCodec::Zstd);
+        assert_eq!(opened.codec, StoreCodec::Lz);
         assert_eq!(opened.bonds, created.bonds);
         assert_eq!(opened.spec.m, s.m);
         assert_eq!(opened.spec.seed, s.seed);

@@ -14,6 +14,10 @@
 //!   for the paper's scaling studies. The hot path executes the AOT
 //!   artifacts through the PJRT CPU client (`runtime`), with a native
 //!   engine (`sampler::native`) as the correctness oracle.
+//! - **Service (`service`)**: a resident batched sampling service — job
+//!   queue + store cache + §3.1-sized batcher + worker pool — behind
+//!   `fastmps serve`/`submit`/`jobs`, amortizing store opens, Γ streaming
+//!   and engine construction across requests.
 
 pub mod cli;
 pub mod comm;
@@ -27,6 +31,7 @@ pub mod perfmodel;
 pub mod rng;
 pub mod runtime;
 pub mod sampler;
+pub mod service;
 pub mod tensor;
 pub mod util;
 pub mod validate;

@@ -24,7 +24,7 @@
 //! (here: it keeps the per-(j,k) loop over samples contiguous and
 //! vectorizable).
 
-use num_traits::Float;
+use crate::util::num::Float;
 
 use crate::tensor::{Complex, Mat};
 use crate::util::error::{Error, Result};

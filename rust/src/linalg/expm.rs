@@ -7,7 +7,7 @@
 //! the paper reports as >10× faster. We keep the general routine both as
 //! the ablation comparator and as the correctness oracle for the fast path.
 
-use num_traits::Float;
+use crate::util::num::Float;
 
 use crate::linalg::{gemm, lu_decompose, lu_solve_in_place};
 use crate::tensor::{Complex, Mat};

@@ -6,7 +6,7 @@
 //! loop, and splits the row dimension across scoped threads. FLOP counts
 //! follow the convention of the paper: one complex MAC = 8 real FLOPs.
 
-use num_traits::Float;
+use crate::util::num::Float;
 
 use crate::tensor::{Complex, Mat, Tensor3};
 use crate::util::error::{Error, Result};

@@ -2,7 +2,7 @@
 //! Padé matrix exponential (the paper's "general implementation in Eigen and
 //! SciPy" baseline for the ablation).
 
-use num_traits::Float;
+use crate::util::num::Float;
 
 use crate::tensor::Mat;
 use crate::util::error::{Error, Result};

@@ -34,6 +34,21 @@ pub mod keys {
     pub const IO_OPS: &str = "io_ops";
     pub const COLLECTIVES: &str = "collectives";
     pub const STEPS_SKIPPED: &str = "steps_skipped"; // dynamic-χ fast path
+
+    // Service-layer counters (`service::*`).
+    pub const JOBS_SUBMITTED: &str = "jobs_submitted";
+    pub const JOBS_REJECTED: &str = "jobs_rejected";
+    pub const JOBS_COMPLETED: &str = "jobs_completed";
+    pub const JOBS_FAILED: &str = "jobs_failed";
+    pub const CACHE_HITS: &str = "cache_hits";
+    pub const CACHE_MISSES: &str = "cache_misses";
+    pub const SERVICE_BATCHES: &str = "service_batches";
+    pub const BATCH_ROWS: &str = "batch_rows";
+    /// Σ over dispatched batches of their row targets — occupancy is
+    /// `batch_rows / batch_target_rows`.
+    pub const BATCH_TARGET_ROWS: &str = "batch_target_rows";
+    /// High-water mark of the job queue (gauge via [`Metrics::set_max`]).
+    pub const QUEUE_PEAK: &str = "queue_peak";
 }
 
 impl Metrics {
@@ -47,6 +62,15 @@ impl Metrics {
 
     pub fn get(&self, counter: &str) -> u64 {
         self.counters.get(counter).copied().unwrap_or(0)
+    }
+
+    /// Raise a gauge-style counter to `v` if it is below it (high-water
+    /// marks like queue depth). Merging two snapshots still *adds* — peak
+    /// gauges should be merged by the caller with `set_max` when that
+    /// matters.
+    pub fn set_max(&mut self, counter: &str, v: u64) {
+        let e = self.counters.entry(counter.to_string()).or_insert(0);
+        *e = (*e).max(v);
     }
 
     pub fn add_phase(&mut self, phase: &str, secs: f64) {
@@ -162,9 +186,133 @@ impl Drop for PhaseTimer<'_> {
     }
 }
 
+/// Streaming latency recorder for the service layer: keeps up to `cap`
+/// samples (ring overwrite once full, so long-running services track the
+/// *recent* distribution) and reports order statistics. p50/p99 of job
+/// turnaround is the service's user-facing SLO number.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+    /// Next ring slot once `samples.len() == cap`.
+    cursor: usize,
+    cap: usize,
+    /// Total observations ever recorded (≥ `samples.len()`).
+    pub count: u64,
+}
+
+impl LatencyStats {
+    pub fn new(cap: usize) -> LatencyStats {
+        LatencyStats {
+            samples: Vec::new(),
+            cursor: 0,
+            cap: cap.max(1),
+            count: 0,
+        }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.count += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(secs);
+        } else {
+            self.samples[self.cursor] = secs;
+            self.cursor = (self.cursor + 1) % self.cap;
+        }
+    }
+
+    /// Nearest-rank quantile over the retained window; `q` in [0, 1].
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let idx = ((q.clamp(0.0, 1.0) * xs.len() as f64).ceil() as usize)
+            .saturating_sub(1)
+            .min(xs.len() - 1);
+        Some(xs[idx])
+    }
+
+    pub fn p50(&self) -> Option<f64> {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&self) -> Option<f64> {
+        self.quantile(0.99)
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        // record() below re-counts the retained samples; pre-add only the
+        // observations other's ring has already evicted.
+        self.count += other.count - other.samples.len() as u64;
+        for &s in &other.samples {
+            self.record(s);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num_or_null = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("p50_secs", num_or_null(self.p50())),
+            ("p99_secs", num_or_null(self.p99())),
+            ("max_secs", num_or_null(self.quantile(1.0))),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn latency_quantiles_nearest_rank() {
+        let mut l = LatencyStats::new(100);
+        for i in 1..=100 {
+            l.record(i as f64);
+        }
+        assert_eq!(l.p50(), Some(50.0));
+        assert_eq!(l.p99(), Some(99.0));
+        assert_eq!(l.quantile(1.0), Some(100.0));
+        assert_eq!(l.quantile(0.0), Some(1.0));
+        assert_eq!(l.count, 100);
+        assert_eq!(LatencyStats::new(8).p50(), None);
+    }
+
+    #[test]
+    fn latency_ring_keeps_recent_window() {
+        let mut l = LatencyStats::new(4);
+        for i in 0..8 {
+            l.record(i as f64);
+        }
+        assert_eq!(l.count, 8);
+        // Window holds {4,5,6,7}.
+        assert_eq!(l.quantile(0.0), Some(4.0));
+        assert_eq!(l.quantile(1.0), Some(7.0));
+    }
+
+    #[test]
+    fn latency_merge_combines_counts_and_samples() {
+        let mut a = LatencyStats::new(16);
+        a.record(1.0);
+        a.record(2.0);
+        let mut b = LatencyStats::new(16);
+        b.record(10.0);
+        a.merge(&b);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.quantile(1.0), Some(10.0));
+        let j = a.to_json().dump();
+        assert!(j.contains("p99_secs"));
+    }
+
+    #[test]
+    fn set_max_is_a_gauge() {
+        let mut m = Metrics::new();
+        m.set_max(keys::QUEUE_PEAK, 3);
+        m.set_max(keys::QUEUE_PEAK, 9);
+        m.set_max(keys::QUEUE_PEAK, 5);
+        assert_eq!(m.get(keys::QUEUE_PEAK), 9);
+    }
 
     #[test]
     fn counters_accumulate() {

@@ -1,0 +1,48 @@
+//! Stub [`XlaEngine`] compiled when the `xla` feature is off.
+//!
+//! Mirrors the public surface of the real engine so the coordinators and
+//! CLI compile unchanged; every construction attempt returns a clear error
+//! pointing at the feature flag instead of a confusing link failure.
+
+use std::path::Path;
+
+use crate::metrics::Metrics;
+use crate::mps::Site;
+use crate::sampler::StepEngine;
+use crate::tensor::SplitBuf;
+use crate::util::error::{Error, Result};
+
+/// Placeholder for the PJRT engine; see the module docs.
+pub struct XlaEngine {
+    pub metrics: Metrics,
+    /// Use the TF32-emulating artifacts when available.
+    pub prefer_tf32: bool,
+}
+
+impl XlaEngine {
+    pub fn new(_artifacts_dir: &Path) -> Result<XlaEngine> {
+        Err(Error::Xla(
+            "this build has no PJRT support (compiled without the `xla` \
+             feature); rebuild with `--features xla` after adding the `xla` \
+             dependency in Cargo.toml, or run with `--engine native`"
+                .into(),
+        ))
+    }
+}
+
+impl StepEngine for XlaEngine {
+    fn step(
+        &mut self,
+        _env: &mut SplitBuf,
+        _site: &Site,
+        _thresholds: &[f32],
+        _displacements: Option<&[(f64, f64)]>,
+        _samples: &mut Vec<i32>,
+    ) -> Result<()> {
+        Err(Error::Xla("stub engine cannot step".into()))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-stub"
+    }
+}

@@ -1,0 +1,233 @@
+//! The real PJRT-backed step engine (feature `xla`; see `runtime`).
+
+use super::registry::{ArtifactRegistry, Variant, VariantKind};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::metrics::{keys, Metrics};
+use crate::mps::Site;
+use crate::sampler::StepEngine;
+use crate::tensor::SplitBuf;
+use crate::util::error::{Error, Result};
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// Per-thread XLA step engine.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub metrics: Metrics,
+    /// Use the TF32-emulating artifacts when available.
+    pub prefer_tf32: bool,
+}
+
+impl XlaEngine {
+    pub fn new(artifacts_dir: &Path) -> Result<XlaEngine> {
+        let registry = ArtifactRegistry::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(XlaEngine {
+            client,
+            registry,
+            dir: artifacts_dir.to_path_buf(),
+            cache: HashMap::new(),
+            metrics: Metrics::new(),
+            prefer_tf32: false,
+        })
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    fn executable(&mut self, v: &Variant) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&v.name) {
+            let path = self.dir.join(&v.file);
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::artifact("non-utf8 artifact path"))?,
+            )
+            .map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(xerr)?;
+            self.metrics
+                .add_phase("compile", t0.elapsed().as_secs_f64());
+            crate::log_debug!("compiled {} in {:?}", v.name, t0.elapsed());
+            self.cache.insert(v.name.clone(), exe);
+        }
+        Ok(self.cache.get(&v.name).unwrap())
+    }
+
+    fn literal_2d(buf: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(buf.len(), rows * cols);
+        xla::Literal::vec1(buf)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(xerr)
+    }
+
+    fn literal_3d(buf: &[f32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(buf.len(), a * b * c);
+        xla::Literal::vec1(buf)
+            .reshape(&[a as i64, b as i64, c as i64])
+            .map_err(xerr)
+    }
+
+    /// Pad a (n, x) plane pair to (np, xp).
+    fn pad_env(env: &SplitBuf, np: usize, xp: usize) -> (Vec<f32>, Vec<f32>) {
+        let (n, x) = (env.shape[0], env.shape[1]);
+        let mut re = vec![0.0f32; np * xp];
+        let mut im = vec![0.0f32; np * xp];
+        for r in 0..n {
+            re[r * xp..r * xp + x].copy_from_slice(&env.re[r * x..(r + 1) * x]);
+            im[r * xp..r * xp + x].copy_from_slice(&env.im[r * x..(r + 1) * x]);
+        }
+        (re, im)
+    }
+
+    /// Pad Γ (x, y, d) planes to (xp, yp, d).
+    fn pad_gamma(site: &Site, xp: usize, yp: usize) -> (Vec<f32>, Vec<f32>) {
+        let g = &site.gamma;
+        let (x, y, d) = (g.d0, g.d1, g.d2);
+        let mut re = vec![0.0f32; xp * yp * d];
+        let mut im = vec![0.0f32; xp * yp * d];
+        for i in 0..x {
+            for j in 0..y {
+                for k in 0..d {
+                    let z = g.at(i, j, k);
+                    let dst = (i * yp + j) * d + k;
+                    re[dst] = z.re as f32;
+                    im[dst] = z.im as f32;
+                }
+            }
+        }
+        (re, im)
+    }
+
+    /// Run one padded step through the artifact and crop back.
+    fn run_step(
+        &mut self,
+        v: Variant,
+        env: &mut SplitBuf,
+        site: &Site,
+        thresholds: &[f32],
+        displacements: Option<&[(f64, f64)]>,
+        samples: &mut Vec<i32>,
+    ) -> Result<()> {
+        let n = env.shape[0];
+        let (np, xp, yp, d) = (v.n, v.x, v.y, v.d);
+        let y = site.gamma.d1;
+
+        let t0 = std::time::Instant::now();
+        let (ere, eim) = Self::pad_env(env, np, xp);
+        let (gre, gim) = Self::pad_gamma(site, xp, yp);
+        let mut lam = vec![0.0f32; yp];
+        for (dst, &l) in lam.iter_mut().zip(&site.lambda) {
+            *dst = l as f32;
+        }
+        let mut unif = vec![0.5f32; np];
+        unif[..n].copy_from_slice(thresholds);
+        self.metrics
+            .add_phase("host_pack", t0.elapsed().as_secs_f64());
+        self.metrics.add(
+            keys::HOST_COPY_BYTES,
+            ((ere.len() + eim.len() + gre.len() + gim.len()) * 4) as u64,
+        );
+
+        let mut inputs = vec![
+            Self::literal_2d(&ere, np, xp)?,
+            Self::literal_2d(&eim, np, xp)?,
+            Self::literal_3d(&gre, xp, yp, d)?,
+            Self::literal_3d(&gim, xp, yp, d)?,
+            xla::Literal::vec1(&lam),
+            xla::Literal::vec1(&unif),
+        ];
+        if v.kind == VariantKind::StepDisp {
+            let mus = displacements.ok_or_else(|| {
+                Error::artifact("displaced artifact chosen but no displacement draws")
+            })?;
+            let mut mre = vec![0.0f32; np];
+            let mut mim = vec![0.0f32; np];
+            for (i, &(r, im_)) in mus.iter().enumerate() {
+                mre[i] = r as f32;
+                mim[i] = im_ as f32;
+            }
+            inputs.push(xla::Literal::vec1(&mre));
+            inputs.push(xla::Literal::vec1(&mim));
+        }
+
+        let exe = self.executable(&v)?;
+        let t1 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&inputs).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        self.metrics.add_phase("compute", t1.elapsed().as_secs_f64());
+        self.metrics.add(
+            keys::FLOPS,
+            crate::perfmodel::site_flops(n as u64, site.gamma.d0 as u64, y as u64, d as u64),
+        );
+
+        let t2 = std::time::Instant::now();
+        let parts = result.to_tuple().map_err(xerr)?;
+        if parts.len() != 3 {
+            return Err(Error::artifact(format!(
+                "step artifact returned {} outputs, expected 3",
+                parts.len()
+            )));
+        }
+        let out_re = parts[0].to_vec::<f32>().map_err(xerr)?;
+        let out_im = parts[1].to_vec::<f32>().map_err(xerr)?;
+        let out_s = parts[2].to_vec::<i32>().map_err(xerr)?;
+
+        // Crop (np, yp) → (n, y).
+        let mut cropped = SplitBuf::zeros(&[n, y]);
+        for r in 0..n {
+            cropped.re[r * y..(r + 1) * y].copy_from_slice(&out_re[r * yp..r * yp + y]);
+            cropped.im[r * y..(r + 1) * y].copy_from_slice(&out_im[r * yp..r * yp + y]);
+        }
+        *env = cropped;
+        samples.clear();
+        samples.extend_from_slice(&out_s[..n]);
+        self.metrics
+            .add_phase("host_unpack", t2.elapsed().as_secs_f64());
+        self.metrics.add(keys::SAMPLES, n as u64);
+        Ok(())
+    }
+}
+
+impl StepEngine for XlaEngine {
+    fn step(
+        &mut self,
+        env: &mut SplitBuf,
+        site: &Site,
+        thresholds: &[f32],
+        displacements: Option<&[(f64, f64)]>,
+        samples: &mut Vec<i32>,
+    ) -> Result<()> {
+        let n = env.shape[0];
+        if thresholds.len() != n {
+            return Err(Error::shape(format!(
+                "xla step: {} thresholds for N={n}",
+                thresholds.len()
+            )));
+        }
+        let displaced = displacements.is_some();
+        let v = self.registry.select_step(
+            n,
+            site.gamma.d0,
+            site.gamma.d1,
+            site.gamma.d2,
+            displaced,
+            self.prefer_tf32,
+        )?;
+        self.run_step(v, env, site, thresholds, displacements, samples)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -5,7 +5,7 @@
 //! semantics, same degenerate-row handling) so the native and XLA engines
 //! sample identical outcomes from identical inputs.
 
-use num_traits::Float;
+use crate::util::num::Float;
 
 use crate::config::ScalingMode;
 use crate::tensor::{Mat, Tensor3};

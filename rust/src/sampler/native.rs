@@ -7,7 +7,7 @@
 //! three scaling strategies. The Fig. 5/6 experiments need exactly this
 //! control; the XLA engine wins on throughput.
 
-use num_traits::Float;
+use crate::util::num::Float;
 
 use crate::config::{ComputePrecision, ScalingMode};
 use crate::linalg::{contract_env, displacement_fast_batch, matmul_flops};

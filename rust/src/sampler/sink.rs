@@ -203,4 +203,71 @@ mod tests {
         s.record(0, &[-3, 9]);
         assert_eq!(s.hist[0], vec![1, 1]);
     }
+
+    #[test]
+    fn property_merge_is_associative_and_commutative() {
+        // Data-parallel reductions merge worker sinks in whatever order the
+        // threads finish; the result must not depend on that order. All
+        // accumulated quantities are integer-valued (counts and products of
+        // small ints summed in f64), so even the f64 pair sums are exact
+        // and the laws hold exactly.
+        use crate::util::prop::{quickcheck, Gen};
+
+        fn random_sink(g: &mut Gen, m: usize, d: usize, gap: usize) -> SampleSink {
+            let mut s = SampleSink::new(m, d, gap);
+            for _ in 0..g.usize_in(1, 4) {
+                s.reset_walk();
+                let n = g.usize_in(1, 6);
+                for site in 0..m {
+                    let outcomes: Vec<i32> =
+                        (0..n).map(|_| g.usize_in(0, d) as i32).collect();
+                    s.record(site, &outcomes);
+                }
+            }
+            s
+        }
+
+        fn key(s: &SampleSink) -> (Vec<Vec<u64>>, Vec<f64>, Vec<u64>) {
+            (s.hist.clone(), s.pair_sums.clone(), s.counts.clone())
+        }
+
+        quickcheck("sink merge laws", |g| {
+            let m = g.usize_in(2, 6);
+            let d = g.usize_in(2, 4);
+            let gap = g.usize_in(0, 4);
+            let a = random_sink(g, m, d, gap);
+            let b = random_sink(g, m, d, gap);
+            let c = random_sink(g, m, d, gap);
+
+            // (a ⊕ b) ⊕ c
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            // a ⊕ (b ⊕ c)
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            if key(&left) != key(&right) {
+                return Err(format!("associativity broke at m={m} d={d} gap={gap}"));
+            }
+
+            // a ⊕ b == b ⊕ a
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            if key(&ab) != key(&ba) {
+                return Err(format!("commutativity broke at m={m} d={d} gap={gap}"));
+            }
+
+            // Identity: merging a fresh sink changes nothing.
+            let mut id = a.clone();
+            id.merge(&SampleSink::new(m, d, gap));
+            if key(&id) != key(&a) {
+                return Err("identity broke".into());
+            }
+            Ok(())
+        });
+    }
 }

@@ -1,0 +1,377 @@
+//! File-based job-directory transport (no sockets, no new dependencies).
+//!
+//! Layout under the jobs directory:
+//! ```text
+//! <jobs>/inbox/<stem>.json     — client-submitted JobSpec (atomic rename)
+//! <jobs>/archive/<stem>.json   — ingested submissions (audit trail)
+//! <jobs>/status/<stem>.json    — live status, rewritten on change
+//! <jobs>/results/<stem>.json   — final result once terminal
+//! <jobs>/service_metrics.json  — service KPIs, written at serve exit
+//! <jobs>/stop                  — touch to stop the serve loop
+//! ```
+//!
+//! The `<stem>` is chosen by the client (unique per submission); clients
+//! never need to learn the service-side job id to find their results.
+//! Writes into `inbox/` go through a temp file + rename so the server
+//! never reads a half-written spec.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use super::job::{JobId, JobSpec};
+use super::Service;
+use crate::config::ServiceConfig;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Transport/loop options for [`serve`].
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub jobs_dir: PathBuf,
+    /// Inbox scan interval.
+    pub poll_ms: u64,
+    /// Exit once ≥ 1 job was ingested and everything is idle (CI/tests).
+    pub drain: bool,
+    /// Hard wall-clock cap; `None` = run until `stop` (or drain).
+    pub max_secs: Option<f64>,
+}
+
+impl ServeOptions {
+    pub fn new(jobs_dir: impl Into<PathBuf>) -> ServeOptions {
+        ServeOptions {
+            jobs_dir: jobs_dir.into(),
+            poll_ms: 20,
+            drain: false,
+            max_secs: None,
+        }
+    }
+}
+
+fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, contents).map_err(|e| Error::io(tmp.display(), e))?;
+    fs::rename(&tmp, path).map_err(|e| Error::io(path.display(), e))
+}
+
+/// A unique submission stem for this process.
+pub fn unique_stem() -> String {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    format!(
+        "job-{:08x}-{}-{}",
+        nanos & 0xffff_ffff,
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+/// Client side: drop a spec into the inbox. Returns the submission stem.
+pub fn submit_file(jobs_dir: &Path, spec: &JobSpec) -> Result<String> {
+    let inbox = jobs_dir.join("inbox");
+    fs::create_dir_all(&inbox).map_err(|e| Error::io(inbox.display(), e))?;
+    let stem = unique_stem();
+    let path = inbox.join(format!("{stem}.json"));
+    write_atomic(&path, &spec.to_json().pretty())?;
+    Ok(stem)
+}
+
+/// Client side: poll for the result of a submission. Errors on timeout.
+pub fn wait_result(jobs_dir: &Path, stem: &str, timeout: Duration) -> Result<Json> {
+    let path = jobs_dir.join("results").join(format!("{stem}.json"));
+    let deadline = Instant::now() + timeout;
+    loop {
+        if path.exists() {
+            let text =
+                fs::read_to_string(&path).map_err(|e| Error::io(path.display(), e))?;
+            return Json::parse(&text);
+        }
+        if Instant::now() >= deadline {
+            return Err(Error::other(format!(
+                "timed out waiting for result {}",
+                path.display()
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Client side: all status files, stem order (what `fastmps jobs` prints).
+pub fn list_jobs(jobs_dir: &Path) -> Result<Vec<(String, Json)>> {
+    let status = jobs_dir.join("status");
+    let mut out = Vec::new();
+    let rd = match fs::read_dir(&status) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(out), // no server ran here yet
+    };
+    let mut names: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    names.sort();
+    for p in names {
+        let stem = p
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("?")
+            .to_string();
+        let text = fs::read_to_string(&p).map_err(|e| Error::io(p.display(), e))?;
+        out.push((stem, Json::parse(&text)?));
+    }
+    Ok(out)
+}
+
+/// Server side: run a [`Service`] against a job directory until stopped.
+/// Returns the final service metrics (also written to
+/// `service_metrics.json`).
+pub fn serve(cfg: ServiceConfig, opts: &ServeOptions) -> Result<Json> {
+    let dir = &opts.jobs_dir;
+    for sub in ["inbox", "archive", "status", "results"] {
+        let p = dir.join(sub);
+        fs::create_dir_all(&p).map_err(|e| Error::io(p.display(), e))?;
+    }
+    // A stop file is a one-shot signal; a stale one from a previous run
+    // must not brick the restarted server.
+    let _ = fs::remove_file(dir.join("stop"));
+    let mut svc = Service::start(cfg)?;
+    let t0 = Instant::now();
+    let mut served_any = false;
+    let mut stem_of: BTreeMap<JobId, String> = BTreeMap::new();
+    let mut last_status: BTreeMap<JobId, String> = BTreeMap::new();
+
+    loop {
+        ingest_inbox(dir, &svc, &mut stem_of, &mut served_any)?;
+        sync_status(dir, &svc, &mut stem_of, &mut last_status)?;
+
+        if dir.join("stop").exists() {
+            break;
+        }
+        if opts.drain && served_any && svc.idle() && inbox_empty(dir) {
+            break;
+        }
+        if let Some(max) = opts.max_secs {
+            if t0.elapsed().as_secs_f64() >= max {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(opts.poll_ms));
+    }
+    // Drain first — the shutdown finishes all in-flight jobs — and only
+    // then write the final sync, so results completed during the drain
+    // still land on disk for waiting clients.
+    svc.stop();
+    sync_status(dir, &svc, &mut stem_of, &mut last_status)?;
+    let metrics = svc.metrics_json();
+    write_atomic(&dir.join("service_metrics.json"), &metrics.pretty())?;
+    Ok(metrics)
+}
+
+fn inbox_empty(dir: &Path) -> bool {
+    fs::read_dir(dir.join("inbox"))
+        .map(|rd| {
+            !rd.filter_map(|e| e.ok())
+                .any(|e| e.path().extension().is_some_and(|x| x == "json"))
+        })
+        .unwrap_or(true)
+}
+
+fn ingest_inbox(
+    dir: &Path,
+    svc: &Service,
+    stem_of: &mut BTreeMap<JobId, String>,
+    served_any: &mut bool,
+) -> Result<()> {
+    let inbox = dir.join("inbox");
+    let mut files: Vec<PathBuf> = fs::read_dir(&inbox)
+        .map_err(|e| Error::io(inbox.display(), e))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    files.sort();
+    for f in files {
+        // The inbox is a durable queue: under a momentary full queue (or
+        // shutdown) leave submissions in place as backpressure rather
+        // than converting them into hard rejections.
+        if svc.queue().is_full() || svc.queue().is_shutdown() {
+            break;
+        }
+        let stem = f
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("submission")
+            .to_string();
+        let outcome = fs::read_to_string(&f)
+            .map_err(|e| Error::io(f.display(), e).to_string())
+            .and_then(|text| Json::parse(&text).map_err(|e| e.to_string()))
+            .and_then(|j| JobSpec::from_json(&j).map_err(|e| e.to_string()))
+            .and_then(|spec| svc.submit(spec).map_err(|e| e.to_string()));
+        match outcome {
+            Ok(id) => {
+                *served_any = true;
+                stem_of.insert(id, stem);
+            }
+            // Races with the capacity guard above are transient too.
+            Err(msg) if msg.contains("queue full") || msg.contains("shutting down") => {
+                continue; // keep the file; retry next poll
+            }
+            Err(msg) => {
+                // Malformed or over-limit: terminally rejected as a result.
+                let rj = Json::obj(vec![
+                    ("status", Json::Str("rejected".into())),
+                    ("error", Json::Str(msg)),
+                ]);
+                write_atomic(
+                    &dir.join("results").join(format!("{stem}.json")),
+                    &rj.pretty(),
+                )?;
+            }
+        }
+        let archived = dir.join("archive").join(format!("{stem}.json"));
+        if fs::rename(&f, &archived).is_err() {
+            let _ = fs::remove_file(&f); // cross-device fallback: drop it
+        }
+    }
+    Ok(())
+}
+
+fn sync_status(
+    dir: &Path,
+    svc: &Service,
+    stem_of: &mut BTreeMap<JobId, String>,
+    last_status: &mut BTreeMap<JobId, String>,
+) -> Result<()> {
+    let mut finished: Vec<JobId> = Vec::new();
+    for view in svc.queue().snapshot() {
+        let Some(stem) = stem_of.get(&view.id) else {
+            continue; // submitted in-process, not through the inbox
+        };
+        let status_json = view.to_json().pretty();
+        if last_status.get(&view.id) != Some(&status_json) {
+            write_atomic(
+                &dir.join("status").join(format!("{stem}.json")),
+                &status_json,
+            )?;
+            last_status.insert(view.id, status_json);
+        }
+        if view.status.is_terminal() {
+            if let Some(result) = svc.queue().result_json(view.id) {
+                write_atomic(
+                    &dir.join("results").join(format!("{stem}.json")),
+                    &result.pretty(),
+                )?;
+                finished.push(view.id);
+            }
+        }
+    }
+    // Results are on disk; release the queue's retained state and the
+    // loop's bookkeeping so a long-running server stays bounded.
+    for id in finished {
+        svc.queue().forget(id);
+        stem_of.remove(&id);
+        last_status.remove(&id);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ComputePrecision, Preset};
+    use crate::io::{GammaStore, StoreCodec, StorePrecision};
+
+    fn scratch(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "fastmps-api-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn make_store(root: &Path) -> PathBuf {
+        let dir = root.join("store");
+        let mut spec = Preset::Jiuzhang2.scaled_spec(5);
+        spec.m = 5;
+        spec.chi_cap = 8;
+        spec.decay_k = 0.0;
+        spec.displacement_sigma = 0.0;
+        GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap();
+        dir
+    }
+
+    fn serve_cfg() -> ServiceConfig {
+        ServiceConfig {
+            workers: 2,
+            n2_micro: 32,
+            target_batch: Some(128),
+            compute: ComputePrecision::F64,
+            linger_ms: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn malformed_submission_rejected_via_results_file() {
+        let root = scratch("reject");
+        let jobs = root.join("jobs");
+        fs::create_dir_all(jobs.join("inbox")).unwrap();
+        fs::write(jobs.join("inbox/bad.json"), "{not json").unwrap();
+        let opts = ServeOptions {
+            drain: false,
+            max_secs: Some(1.0),
+            poll_ms: 5,
+            jobs_dir: jobs.clone(),
+        };
+        serve(serve_cfg(), &opts).unwrap();
+        let r = fs::read_to_string(jobs.join("results/bad.json")).unwrap();
+        let j = Json::parse(&r).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("rejected"));
+        assert!(!jobs.join("inbox/bad.json").exists(), "inbox consumed");
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn stop_file_halts_the_loop_without_bricking_restart() {
+        let root = scratch("stop");
+        let jobs = root.join("jobs");
+        fs::create_dir_all(&jobs).unwrap();
+        let opts = ServeOptions {
+            drain: false,
+            max_secs: Some(30.0),
+            poll_ms: 5,
+            jobs_dir: jobs.clone(),
+        };
+        let t0 = Instant::now();
+        let server = {
+            let o = opts.clone();
+            std::thread::spawn(move || serve(serve_cfg(), &o))
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        fs::write(jobs.join("stop"), "").unwrap();
+        server.join().unwrap().unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 10.0);
+        assert!(jobs.join("service_metrics.json").exists());
+        // The stale stop file must not stop the next server at boot: a
+        // restart consumes it and serves until its own cap.
+        let opts2 = ServeOptions {
+            max_secs: Some(0.2),
+            ..opts
+        };
+        serve(serve_cfg(), &opts2).unwrap();
+        assert!(!jobs.join("stop").exists());
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn list_jobs_empty_when_no_server_ran() {
+        let root = scratch("list");
+        assert!(list_jobs(&root.join("nowhere")).unwrap().is_empty());
+        fs::remove_dir_all(&root).unwrap();
+    }
+}

@@ -1,0 +1,146 @@
+//! Macro-batch formation: compatibility keys and §3.1-driven sizing.
+//!
+//! The batcher turns queued jobs into [`Batch`]es of rows that walk the
+//! chain together: one Γ stream (one prefetcher pass, one disk charge)
+//! serves every job in the batch. Compatibility = same store (by manifest
+//! hash, i.e. the same cached `Arc<GammaStore>`) and the same compute
+//! precision, since rows of one batch run through one engine.
+//!
+//! Sizing realises the paper's overlap condition: compute at a site must
+//! hide that site's I/O, which holds once the batch carries at least
+//! `min_macro_batch_for_overlap` rows (§3.1); Eq. 3 caps the row count by
+//! the per-worker memory budget. Both are taken from `perfmodel` through
+//! `scheduler::suggest_n1`, so the service and the one-shot CLI agree on
+//! what a well-sized macro batch is.
+
+use std::sync::Arc;
+
+use super::queue::Assignment;
+use crate::config::{ComputePrecision, ServiceConfig};
+use crate::coordinator::scheduler;
+use crate::io::GammaStore;
+use crate::perfmodel;
+
+/// Jobs sharing a key may share a macro batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchKey {
+    pub store_hash: u64,
+    pub compute: ComputePrecision,
+}
+
+/// One dispatched macro batch: slices of one or more jobs against a single
+/// cached store.
+pub struct Batch {
+    pub key: BatchKey,
+    pub store: Arc<GammaStore>,
+    pub assignments: Vec<Assignment>,
+    /// Row target the batch was sized against (for occupancy accounting).
+    pub target: usize,
+}
+
+impl Batch {
+    pub fn rows(&self) -> usize {
+        self.assignments.iter().map(|a| a.len).sum()
+    }
+
+    /// Fill fraction vs the §3.1 target; > 1 never happens by construction.
+    pub fn occupancy(&self) -> f64 {
+        self.rows() as f64 / self.target.max(1) as f64
+    }
+}
+
+/// Row target for batches against `store`: the configured override, or the
+/// overlap/memory-derived suggestion for the CPU testbed device.
+pub fn target_rows(cfg: &ServiceConfig, store: &GammaStore) -> usize {
+    if let Some(t) = cfg.target_batch {
+        return t.max(cfg.n2_micro);
+    }
+    let scalar = store.precision.bytes_per_scalar();
+    let n1 = scheduler::suggest_n1(
+        &perfmodel::XEON_CORE,
+        store.spec.chi_cap,
+        store.spec.d,
+        scalar,
+        cfg.mem_budget,
+    );
+    // Keep at least one micro batch and bound the env allocation.
+    n1.clamp(cfg.n2_micro, 1 << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Preset;
+    use crate::io::{StoreCodec, StorePrecision};
+
+    fn store_on_disk(tag: &str, precision: StorePrecision) -> (Arc<GammaStore>, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "fastmps-batcher-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = Preset::Jiuzhang2.scaled_spec(3);
+        spec.m = 4;
+        spec.chi_cap = 8;
+        let s = Arc::new(GammaStore::create(&dir, &spec, precision, StoreCodec::Raw).unwrap());
+        (s, dir)
+    }
+
+    #[test]
+    fn explicit_target_wins_and_respects_micro_batch() {
+        let (store, dir) = store_on_disk("explicit", StorePrecision::F32);
+        let cfg = ServiceConfig {
+            target_batch: Some(4096),
+            ..Default::default()
+        };
+        assert_eq!(target_rows(&cfg, &store), 4096);
+        let cfg = ServiceConfig {
+            target_batch: Some(1),
+            n2_micro: 64,
+            ..Default::default()
+        };
+        assert_eq!(target_rows(&cfg, &store), 64);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn derived_target_scales_with_store_precision() {
+        // §3.1: wider scalars mean more I/O bytes per site, so overlap
+        // needs a larger macro batch.
+        let (s16, d16) = store_on_disk("tf16", StorePrecision::F16);
+        let (s64, d64) = store_on_disk("tf64", StorePrecision::F64);
+        let cfg = ServiceConfig {
+            n2_micro: 1,
+            ..Default::default()
+        };
+        let t16 = target_rows(&cfg, &s16);
+        let t64 = target_rows(&cfg, &s64);
+        assert!(
+            t64 >= t16,
+            "f64 store target {t64} should be ≥ f16 target {t16}"
+        );
+        assert!(t16 >= 1 && t64 <= 1 << 16);
+        std::fs::remove_dir_all(&d16).unwrap();
+        std::fs::remove_dir_all(&d64).unwrap();
+    }
+
+    #[test]
+    fn occupancy_reflects_fill() {
+        let (store, dir) = store_on_disk("occ", StorePrecision::F32);
+        let b = Batch {
+            key: BatchKey {
+                store_hash: 1,
+                compute: ComputePrecision::F32,
+            },
+            store,
+            assignments: vec![
+                Assignment { job: 1, sample0: 0, len: 30 },
+                Assignment { job: 2, sample0: 0, len: 20 },
+            ],
+            target: 100,
+        };
+        assert_eq!(b.rows(), 50);
+        assert!((b.occupancy() - 0.5).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

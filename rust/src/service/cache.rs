@@ -1,0 +1,218 @@
+//! LRU cache of opened [`GammaStore`]s, keyed by manifest hash.
+//!
+//! Opening a store parses its manifest; the expensive part the cache
+//! really amortizes is downstream: every job against a cached store shares
+//! the same `Arc<GammaStore>` and the service's one shared [`DiskModel`],
+//! so concurrent jobs in one macro batch pay each site's I/O once — the
+//! tensor-residency amortization that motivates the resident service
+//! (Adamski & Brown's block-cyclic distribution makes the same bet).
+//!
+//! Keying by *content* (manifest hash) rather than path means two paths to
+//! the same store share an entry, while a regenerated store under the same
+//! path misses and re-opens.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::io::{manifest_hash_at, DiskModel, GammaStore};
+use crate::metrics::{keys, Metrics};
+use crate::util::error::Result;
+
+struct Entry {
+    hash: u64,
+    store: Arc<GammaStore>,
+    last_use: u64,
+}
+
+struct CacheInner {
+    entries: Vec<Entry>,
+    tick: u64,
+}
+
+/// See module docs.
+pub struct StoreCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Shared bandwidth model handed to every prefetcher the service runs.
+    pub disk: Arc<DiskModel>,
+}
+
+impl StoreCache {
+    pub fn new(capacity: usize, disk: Arc<DiskModel>) -> StoreCache {
+        StoreCache {
+            inner: Mutex::new(CacheInner {
+                entries: Vec::new(),
+                tick: 0,
+            }),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            disk,
+        }
+    }
+
+    /// Open-or-reuse the store at `dir`. Returns the shared handle and
+    /// whether it was a cache hit. The lock is held across a miss's open,
+    /// deliberately serializing concurrent first-opens of the same store.
+    pub fn get(&self, dir: &Path) -> Result<(Arc<GammaStore>, bool)> {
+        let hash = manifest_hash_at(dir)?;
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g.entries.iter_mut().find(|e| e.hash == hash) {
+            e.last_use = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((e.store.clone(), true));
+        }
+        let store = Arc::new(GammaStore::open(dir)?);
+        if g.entries.len() >= self.capacity {
+            let lru = g
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+                .expect("cache non-empty at capacity");
+            g.entries.swap_remove(lru);
+        }
+        g.entries.push(Entry {
+            hash,
+            store: store.clone(),
+            last_use: tick,
+        });
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((store, false))
+    }
+
+    /// Shared handle by identity, bumping LRU recency but not the hit/miss
+    /// counters — for dispatcher-internal re-anchoring, which is not the
+    /// job-level reuse those counters measure.
+    pub fn peek(&self, hash: u64) -> Option<Arc<GammaStore>> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        g.entries.iter_mut().find(|e| e.hash == hash).map(|e| {
+            e.last_use = tick;
+            e.store.clone()
+        })
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fold hit/miss counters into a metrics snapshot.
+    pub fn account(&self, m: &mut Metrics) {
+        m.add(keys::CACHE_HITS, self.hits());
+        m.add(keys::CACHE_MISSES, self.misses());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::{StoreCodec, StorePrecision};
+    use crate::mps::gbs::GbsSpec;
+    use std::path::PathBuf;
+
+    fn make_store(tag: &str, seed: u64) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fastmps-cache-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = GbsSpec {
+            name: format!("cache-{tag}"),
+            m: 4,
+            d: 3,
+            chi_cap: 4,
+            asp: 3.0,
+            decay_k: 0.0,
+            displacement_sigma: 0.0,
+            branch_skew: 0.0,
+            seed,
+            dynamic_chi: false,
+            step_ratio_override: None,
+        };
+        GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap();
+        dir
+    }
+
+    #[test]
+    fn second_open_is_a_hit_sharing_one_arc() {
+        let dir = make_store("hit", 1);
+        let c = StoreCache::new(2, DiskModel::unlimited());
+        let (a, hit_a) = c.get(&dir).unwrap();
+        let (b, hit_b) = c.get(&dir).unwrap();
+        assert!(!hit_a);
+        assert!(hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        let mut m = Metrics::new();
+        c.account(&mut m);
+        assert_eq!(m.get(keys::CACHE_HITS), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let d1 = make_store("lru1", 1);
+        let d2 = make_store("lru2", 2);
+        let d3 = make_store("lru3", 3);
+        let c = StoreCache::new(2, DiskModel::unlimited());
+        c.get(&d1).unwrap();
+        c.get(&d2).unwrap();
+        c.get(&d1).unwrap(); // d1 now most recent
+        c.get(&d3).unwrap(); // evicts d2
+        assert_eq!(c.len(), 2);
+        let (_, hit1) = c.get(&d1).unwrap();
+        assert!(hit1, "d1 survived eviction");
+        let (_, hit2) = c.get(&d2).unwrap();
+        assert!(!hit2, "d2 was evicted");
+        for d in [d1, d2, d3] {
+            std::fs::remove_dir_all(&d).unwrap();
+        }
+    }
+
+    #[test]
+    fn regenerated_store_misses() {
+        let dir = make_store("regen", 1);
+        let c = StoreCache::new(2, DiskModel::unlimited());
+        let (old, _) = c.get(&dir).unwrap();
+        // Regenerate the store in place with a different seed → new
+        // manifest → new identity.
+        std::fs::remove_dir_all(&dir).unwrap();
+        let spec = GbsSpec {
+            seed: 99,
+            ..old.spec.clone()
+        };
+        GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap();
+        let (new, hit) = c.get(&dir).unwrap();
+        assert!(!hit);
+        assert!(!Arc::ptr_eq(&old, &new));
+        assert_eq!(new.spec.seed, 99);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_store_is_an_error_not_a_panic() {
+        let c = StoreCache::new(2, DiskModel::unlimited());
+        assert!(c.get(Path::new("/nonexistent/fastmps-store")).is_err());
+        assert_eq!(c.misses(), 0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Job descriptions and status — the service's unit of work.
+//!
+//! A [`JobSpec`] is what a client submits: which store to sample, how many
+//! samples, and (optionally) a compute-precision override plus the base of
+//! the job's sample-index stream. Sample streams are keyed by
+//! `(site, sample index)` in the store spec's RNG, so two jobs with the
+//! same base against the same store draw *identical* outcomes — callers
+//! wanting fresh randomness pass distinct `sample_base`s (reproducibility
+//! by default, the same partition-invariant-stream policy the coordinators
+//! use).
+
+use std::path::PathBuf;
+
+use crate::config::ComputePrecision;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Service-assigned job identifier (monotonic per service instance).
+pub type JobId = u64;
+
+/// A client sampling request.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Path of the `GammaStore` directory.
+    pub data: PathBuf,
+    /// Samples requested.
+    pub n_samples: u64,
+    /// Base of the job's sample-index stream (see module docs).
+    pub sample_base: u64,
+    /// Per-job override of the service-wide compute precision.
+    pub compute: Option<ComputePrecision>,
+    /// Free-form client tag, echoed in status and results.
+    pub tag: String,
+}
+
+impl JobSpec {
+    pub fn new(data: impl Into<PathBuf>, n_samples: u64) -> JobSpec {
+        JobSpec {
+            data: data.into(),
+            n_samples,
+            sample_base: 0,
+            compute: None,
+            tag: String::new(),
+        }
+    }
+
+    /// Parse the wire form used by the file transport (`api`).
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let data = j
+            .req("data")?
+            .as_str()
+            .ok_or_else(|| Error::format("job: 'data' not a string"))?;
+        let n_samples = j
+            .req("samples")?
+            .as_f64()
+            .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+            .ok_or_else(|| Error::format("job: 'samples' not a non-negative integer"))?
+            as u64;
+        let sample_base = j
+            .get("sample_base")
+            .map(|v| {
+                v.as_f64()
+                    .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                    .ok_or_else(|| Error::format("job: bad 'sample_base'"))
+            })
+            .transpose()?
+            .unwrap_or(0.0) as u64;
+        let compute = j
+            .get("compute")
+            .map(|v| {
+                v.as_str()
+                    .ok_or_else(|| Error::format("job: 'compute' not a string"))
+                    .and_then(ComputePrecision::parse)
+            })
+            .transpose()?;
+        let tag = j
+            .get("tag")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string();
+        Ok(JobSpec {
+            data: PathBuf::from(data),
+            n_samples,
+            sample_base,
+            compute,
+            tag,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("data", Json::Str(self.data.display().to_string())),
+            ("samples", Json::Num(self.n_samples as f64)),
+            ("sample_base", Json::Num(self.sample_base as f64)),
+            (
+                "compute",
+                self.compute
+                    .map(|c| Json::Str(c.as_str().into()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("tag", Json::Str(self.tag.clone())),
+        ])
+    }
+}
+
+/// Lifecycle of a job. `Queued → Running → Done` on success; admission
+/// rejections never enter the queue, so `Failed` means a runtime error
+/// (store open, engine, I/O) after acceptance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed)
+    }
+}
+
+/// Public snapshot of a job (what `fastmps jobs` prints).
+#[derive(Debug, Clone)]
+pub struct JobView {
+    pub id: JobId,
+    pub tag: String,
+    pub status: JobStatus,
+    pub n_samples: u64,
+    pub done: u64,
+    pub error: Option<String>,
+    pub latency_secs: Option<f64>,
+}
+
+impl JobView {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("tag", Json::Str(self.tag.clone())),
+            ("status", Json::Str(self.status.as_str().into())),
+            ("samples", Json::Num(self.n_samples as f64)),
+            ("done", Json::Num(self.done as f64)),
+            (
+                "error",
+                self.error
+                    .clone()
+                    .map(Json::Str)
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "latency_secs",
+                self.latency_secs.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let mut s = JobSpec::new("/tmp/store", 1000);
+        s.sample_base = 42;
+        s.compute = Some(ComputePrecision::F64);
+        s.tag = "client-7".into();
+        let j = s.to_json().dump();
+        let back = JobSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.data, s.data);
+        assert_eq!(back.n_samples, 1000);
+        assert_eq!(back.sample_base, 42);
+        assert_eq!(back.compute, Some(ComputePrecision::F64));
+        assert_eq!(back.tag, "client-7");
+    }
+
+    #[test]
+    fn spec_json_defaults_optional_fields() {
+        let j = Json::parse(r#"{"data": "/d", "samples": 5}"#).unwrap();
+        let s = JobSpec::from_json(&j).unwrap();
+        assert_eq!(s.sample_base, 0);
+        assert_eq!(s.compute, None);
+        assert!(s.tag.is_empty());
+    }
+
+    #[test]
+    fn spec_json_rejects_malformed() {
+        for bad in [
+            r#"{"samples": 5}"#,
+            r#"{"data": "/d"}"#,
+            r#"{"data": "/d", "samples": -1}"#,
+            r#"{"data": "/d", "samples": 1.5}"#,
+            r#"{"data": "/d", "samples": 5, "compute": "q8"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(JobSpec::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn status_strings_and_terminality() {
+        assert_eq!(JobStatus::Queued.as_str(), "queued");
+        assert!(!JobStatus::Running.is_terminal());
+        assert!(JobStatus::Done.is_terminal());
+        assert!(JobStatus::Failed.is_terminal());
+    }
+}

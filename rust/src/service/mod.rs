@@ -1,0 +1,511 @@
+//! The resident sampling service — batching, caching, long-lived engines.
+//!
+//! One-shot CLI runs re-open the store and rebuild the engines on every
+//! invocation; at service scale (the ROADMAP's heavy-traffic north star)
+//! that tax dominates. This subsystem keeps everything hot:
+//!
+//! - [`JobQueue`] (`queue`) — admission control, FIFO ordering, per-job
+//!   status/results, latency tracking;
+//! - [`StoreCache`] (`cache`) — LRU of opened `GammaStore`s keyed by
+//!   manifest hash, sharing one `DiskModel` across all prefetchers;
+//! - `batcher` — coalesces compatible jobs into macro batches sized by the
+//!   paper's §3.1 overlap condition (compute hides Γ I/O) under the Eq. 3
+//!   memory budget;
+//! - `worker` — a pool of threads with resident engines walking batches
+//!   through the chain, one Γ stream per batch regardless of how many jobs
+//!   share it;
+//! - `api` — a transport: file-based job directory (`inbox/` → `status/` +
+//!   `results/`) behind `fastmps serve` / `submit` / `jobs`.
+//!
+//! [`Service`] wires the pieces together; it is embeddable (tests and the
+//! smoke benchmark run it in-process) and transport-agnostic.
+
+pub mod api;
+pub mod batcher;
+pub mod cache;
+pub mod job;
+pub mod queue;
+pub mod worker;
+
+pub use batcher::{Batch, BatchKey};
+pub use cache::StoreCache;
+pub use job::{JobId, JobSpec, JobStatus, JobView};
+pub use queue::{AdmissionLimits, Assignment, JobQueue};
+pub use worker::Dispatch;
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::{ComputePrecision, ServiceConfig};
+use crate::io::DiskModel;
+use crate::metrics::{keys, Metrics};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// A running service instance. Dropping it drains and joins all threads.
+pub struct Service {
+    queue: Arc<JobQueue>,
+    cache: Arc<StoreCache>,
+    dispatch: Arc<Dispatch>,
+    metrics: Arc<Mutex<Metrics>>,
+    cfg: ServiceConfig,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        cfg.validate()?;
+        let disk = match cfg.disk_bw {
+            Some(bw) => DiskModel::throttled(bw, false),
+            None => DiskModel::unlimited(),
+        };
+        let cache = Arc::new(StoreCache::new(cfg.cache_entries, disk.clone()));
+        let queue = Arc::new(JobQueue::new(AdmissionLimits {
+            max_queue: cfg.max_queue,
+            max_samples_per_job: cfg.max_samples_per_job,
+        }));
+        let dispatch = Arc::new(Dispatch::new());
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+
+        let workers = (0..cfg.workers)
+            .map(|_| {
+                let dispatch = dispatch.clone();
+                let queue = queue.clone();
+                let cfg = cfg.clone();
+                let disk = disk.clone();
+                let metrics = metrics.clone();
+                std::thread::spawn(move || {
+                    worker::worker_loop(dispatch, queue, cfg, disk, metrics)
+                })
+            })
+            .collect();
+
+        let dispatcher = {
+            let queue = queue.clone();
+            let cache = cache.clone();
+            let dispatch = dispatch.clone();
+            let cfg = cfg.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || dispatcher_loop(queue, cache, dispatch, cfg, metrics))
+        };
+
+        Ok(Service {
+            queue,
+            cache,
+            dispatch,
+            metrics,
+            cfg,
+            dispatcher: Some(dispatcher),
+            workers,
+        })
+    }
+
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        self.queue.submit(spec)
+    }
+
+    /// Block until `id` is terminal or `timeout` passes.
+    pub fn wait(&self, id: JobId, timeout: Duration) -> Option<JobStatus> {
+        self.queue.wait_job(id, timeout)
+    }
+
+    pub fn queue(&self) -> &Arc<JobQueue> {
+        &self.queue
+    }
+
+    pub fn cache(&self) -> &Arc<StoreCache> {
+        &self.cache
+    }
+
+    /// Nothing queued, running, or waiting for a worker.
+    pub fn idle(&self) -> bool {
+        self.queue.idle() && self.dispatch.is_empty()
+    }
+
+    /// Full machine-readable service state: merged run metrics, queue and
+    /// cache counters, the latency distribution, and derived service KPIs
+    /// (cache hit rate, batch occupancy).
+    pub fn metrics_json(&self) -> Json {
+        let mut m = self.metrics.lock().unwrap().clone();
+        self.queue.account(&mut m);
+        self.cache.account(&mut m);
+        let hits = self.cache.hits();
+        let lookups = hits + self.cache.misses();
+        let hit_rate = if lookups > 0 {
+            hits as f64 / lookups as f64
+        } else {
+            0.0
+        };
+        let occupancy = m.get(keys::BATCH_ROWS) as f64 / m.get(keys::BATCH_TARGET_ROWS).max(1) as f64;
+        Json::obj(vec![
+            ("config", self.cfg.to_json()),
+            ("run", m.to_json()),
+            ("latency", self.queue.latency_json()),
+            ("cache_hit_rate", Json::Num(hit_rate)),
+            ("batch_occupancy", Json::Num(occupancy)),
+        ])
+    }
+
+    fn stop_and_join(&mut self) {
+        self.queue.shutdown();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join(); // the dispatcher closes `dispatch` on exit
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Drain queued work and stop all threads, keeping the handle alive
+    /// for final status/result/metrics queries (idempotent).
+    pub fn stop(&mut self) {
+        self.stop_and_join();
+    }
+
+    /// Drain queued work, stop all threads, and return the final metrics.
+    pub fn shutdown(mut self) -> Json {
+        self.stop_and_join();
+        self.metrics_json()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Batch-formation loop: anchor on the oldest pending job, resolve its
+/// store through the cache, coalesce every compatible pending job (same
+/// store by manifest hash + same compute) up to the §3.1 row target,
+/// dispatch.
+fn dispatcher_loop(
+    queue: Arc<JobQueue>,
+    cache: Arc<StoreCache>,
+    dispatch: Arc<Dispatch>,
+    cfg: ServiceConfig,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    // Per-job store resolution memo: each admitted job goes through the
+    // cache once (that is the job-level reuse the cache-hit KPI measures)
+    // and its manifest hash is remembered, so idle polling passes neither
+    // inflate the counters nor churn the LRU, and a small cache cannot
+    // evict the anchor out from under the compatibility check mid-pass.
+    let mut resolved: std::collections::BTreeMap<JobId, Option<u64>> =
+        std::collections::BTreeMap::new();
+    loop {
+        let has_pending = queue.wait_pending(Duration::from_millis(50));
+        if !has_pending {
+            if queue.is_shutdown() {
+                break;
+            }
+            continue;
+        }
+        if cfg.linger_ms > 0 && !queue.is_shutdown() {
+            // Give compatible jobs a moment to arrive and fill the batch.
+            std::thread::sleep(Duration::from_millis(cfg.linger_ms));
+        }
+        let Some((front_id, front_spec)) = queue.front_pending() else {
+            continue;
+        };
+        // Anchor resolution goes through the memo first: a job spanning
+        // many batches counts one cache lookup, not one per batch.
+        let memoized = resolved
+            .get(&front_id)
+            .copied()
+            .flatten()
+            .and_then(|h| cache.peek(h).map(|s| (s, h)));
+        let (store, store_hash) = match memoized {
+            Some(x) => x,
+            None => match cache.get(&front_spec.data) {
+                Ok((store, _)) => match store.manifest_hash() {
+                    Ok(h) => (store, h),
+                    Err(e) => {
+                        queue.fail_job(
+                            front_id,
+                            &format!("store manifest unreadable: {e}"),
+                        );
+                        continue;
+                    }
+                },
+                Err(e) => {
+                    queue.fail_job(
+                        front_id,
+                        &format!("cannot open store {}: {e}", front_spec.data.display()),
+                    );
+                    continue;
+                }
+            },
+        };
+        resolved.insert(front_id, Some(store_hash));
+        let key = BatchKey {
+            store_hash,
+            compute: front_spec.compute.unwrap_or(cfg.compute),
+        };
+        let target = batcher::target_rows(&cfg, &store);
+        // Resolve batch membership OUTSIDE the queue lock: store lookups
+        // read manifests (and on a miss open stores) — disk I/O that must
+        // not stall submit/status/complete on the queue mutex.
+        let pending = queue.pending_snapshot();
+        for (id, spec) in &pending {
+            if !resolved.contains_key(id) {
+                let hash = cache
+                    .get(&spec.data)
+                    .ok()
+                    .and_then(|(s, _)| s.manifest_hash().ok());
+                resolved.insert(*id, hash);
+            }
+        }
+        resolved.retain(|id, _| pending.iter().any(|(p, _)| p == id));
+        let compatible_ids: Vec<JobId> = pending
+            .iter()
+            .filter(|(id, spec)| {
+                spec.compute.unwrap_or(cfg.compute) == key.compute
+                    && resolved.get(id).copied().flatten() == Some(key.store_hash)
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        let assignments =
+            queue.take_for_batch(target, |id, _| compatible_ids.contains(&id));
+        if assignments.is_empty() {
+            continue;
+        }
+        let batch = Batch {
+            key,
+            store,
+            assignments,
+            target,
+        };
+        {
+            let mut m = metrics.lock().unwrap();
+            m.add(keys::SERVICE_BATCHES, 1);
+            m.add(keys::BATCH_ROWS, batch.rows() as u64);
+            m.add(keys::BATCH_TARGET_ROWS, batch.target as u64);
+        }
+        dispatch.push(batch);
+    }
+    dispatch.close();
+}
+
+/// Small end-to-end benchmark of the service path: generate a scratch
+/// store, run `jobs` jobs of `samples_per_job` against it through a real
+/// [`Service`], and report throughput, batch occupancy, and cache hit rate
+/// (the shape of `BENCH_service.json`).
+pub fn smoke_benchmark(scratch: &Path, jobs: usize, samples_per_job: u64) -> Result<Json> {
+    use crate::config::Preset;
+    use crate::io::{GammaStore, StoreCodec, StorePrecision};
+
+    let store_dir = scratch.join("fastmps-service-bench-store");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let mut spec = Preset::Jiuzhang2.scaled_spec(7);
+    spec.m = 10;
+    spec.chi_cap = 16;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.0;
+    GammaStore::create(&store_dir, &spec, StorePrecision::F16, StoreCodec::Lz)?;
+
+    let cfg = ServiceConfig {
+        workers: 2,
+        n2_micro: 128,
+        target_batch: Some(1024),
+        compute: ComputePrecision::F32,
+        linger_ms: 2,
+        ..Default::default()
+    };
+    let svc = Service::start(cfg)?;
+    let t0 = Instant::now();
+    let ids = (0..jobs)
+        .map(|k| {
+            let mut s = JobSpec::new(&store_dir, samples_per_job);
+            s.sample_base = k as u64 * samples_per_job;
+            s.tag = format!("bench-{k}");
+            svc.submit(s)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut done = 0usize;
+    for id in &ids {
+        if svc.wait(*id, Duration::from_secs(300)) == Some(JobStatus::Done) {
+            done += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let service = svc.shutdown();
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    let total = done as u64 * samples_per_job;
+    Ok(Json::obj(vec![
+        ("bench", Json::Str("service-smoke".into())),
+        ("jobs", Json::Num(jobs as f64)),
+        ("samples_per_job", Json::Num(samples_per_job as f64)),
+        ("jobs_done", Json::Num(done as f64)),
+        ("wall_secs", Json::Num(wall)),
+        (
+            "throughput_samples_per_sec",
+            Json::Num(if wall > 0.0 { total as f64 / wall } else { 0.0 }),
+        ),
+        ("service", service),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Preset;
+    use crate::io::{GammaStore, StoreCodec, StorePrecision};
+    use std::path::PathBuf;
+
+    fn make_store(tag: &str) -> (Arc<GammaStore>, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "fastmps-svc-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = Preset::Jiuzhang2.scaled_spec(21);
+        spec.m = 6;
+        spec.chi_cap = 10;
+        spec.decay_k = 0.0;
+        spec.displacement_sigma = 0.0;
+        let store = Arc::new(
+            GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap(),
+        );
+        (store, dir)
+    }
+
+    fn small_cfg() -> ServiceConfig {
+        ServiceConfig {
+            workers: 2,
+            n2_micro: 32,
+            target_batch: Some(256),
+            compute: ComputePrecision::F64,
+            linger_ms: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn two_jobs_share_one_cached_store() {
+        let (_, dir) = make_store("share");
+        let svc = Service::start(small_cfg()).unwrap();
+        let a = svc.submit(JobSpec::new(&dir, 64)).unwrap();
+        let mut sb = JobSpec::new(&dir, 64);
+        sb.sample_base = 64;
+        let b = svc.submit(sb).unwrap();
+        assert_eq!(svc.wait(a, Duration::from_secs(60)), Some(JobStatus::Done));
+        assert_eq!(svc.wait(b, Duration::from_secs(60)), Some(JobStatus::Done));
+        assert!(
+            svc.cache().hits() > 0,
+            "second job must hit the store cache (hits={}, misses={})",
+            svc.cache().hits(),
+            svc.cache().misses()
+        );
+        assert_eq!(svc.cache().misses(), 1, "one physical open");
+        let j = svc.shutdown();
+        assert!(j.get("cache_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn service_results_match_coordinator_run() {
+        let (store, dir) = make_store("oracle");
+        let svc = Service::start(small_cfg()).unwrap();
+        let id = svc.submit(JobSpec::new(&dir, 128)).unwrap();
+        assert_eq!(svc.wait(id, Duration::from_secs(60)), Some(JobStatus::Done));
+        let sink = svc.queue().job_sink(id).unwrap();
+        let mut rc = crate::config::RunConfig::new(store.spec.clone());
+        rc.n_samples = 128;
+        rc.n1_macro = 128;
+        rc.n2_micro = 32;
+        rc.compute = ComputePrecision::F64;
+        rc.store_precision = store.precision;
+        let reference = crate::coordinator::data_parallel::run(&rc, &store, &[]).unwrap();
+        assert_eq!(sink.hist, reference.sink.hist);
+        assert_eq!(sink.total_samples(), 128);
+        drop(svc);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compatible_jobs_coalesce_into_one_batch() {
+        let (_, dir) = make_store("coalesce");
+        // Large linger so both jobs are pending when the batcher wakes.
+        let cfg = ServiceConfig {
+            linger_ms: 80,
+            ..small_cfg()
+        };
+        let svc = Service::start(cfg).unwrap();
+        let a = svc.submit(JobSpec::new(&dir, 50)).unwrap();
+        let mut sb = JobSpec::new(&dir, 50);
+        sb.sample_base = 1000;
+        let b = svc.submit(sb).unwrap();
+        svc.wait(a, Duration::from_secs(60));
+        svc.wait(b, Duration::from_secs(60));
+        let m = svc.metrics_json();
+        let run = m.get("run").unwrap().get("counters").unwrap();
+        let batches = run.get(keys::SERVICE_BATCHES).unwrap().as_f64().unwrap();
+        assert_eq!(batches, 1.0, "both jobs in one macro batch");
+        let occupancy = m.get("batch_occupancy").unwrap().as_f64().unwrap();
+        assert!((occupancy - 100.0 / 256.0).abs() < 1e-9, "{occupancy}");
+        drop(svc);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_store_fails_cleanly_and_service_lives_on() {
+        let (_, dir) = make_store("resilient");
+        let svc = Service::start(small_cfg()).unwrap();
+        let bad = svc
+            .submit(JobSpec::new("/nonexistent/fastmps-store", 10))
+            .unwrap();
+        assert_eq!(
+            svc.wait(bad, Duration::from_secs(60)),
+            Some(JobStatus::Failed)
+        );
+        let v = svc.queue().status(bad).unwrap();
+        assert!(v.error.unwrap().contains("cannot open store"));
+        // The service still serves good jobs afterwards.
+        let ok = svc.submit(JobSpec::new(&dir, 32)).unwrap();
+        assert_eq!(svc.wait(ok, Duration::from_secs(60)), Some(JobStatus::Done));
+        drop(svc);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn job_larger_than_target_spans_batches() {
+        let (_, dir) = make_store("spans");
+        let cfg = ServiceConfig {
+            target_batch: Some(64),
+            n2_micro: 32,
+            ..small_cfg()
+        };
+        let svc = Service::start(cfg).unwrap();
+        let id = svc.submit(JobSpec::new(&dir, 200)).unwrap();
+        assert_eq!(svc.wait(id, Duration::from_secs(60)), Some(JobStatus::Done));
+        let sink = svc.queue().job_sink(id).unwrap();
+        assert_eq!(sink.total_samples(), 200);
+        let m = svc.metrics_json();
+        let run = m.get("run").unwrap().get("counters").unwrap();
+        assert!(
+            run.get(keys::SERVICE_BATCHES).unwrap().as_f64().unwrap() >= 4.0,
+            "200 samples at target 64 needs ≥ 4 batches"
+        );
+        drop(svc);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn smoke_benchmark_reports_kpis() {
+        let scratch = std::env::temp_dir().join(format!(
+            "fastmps-svc-smoke-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::create_dir_all(&scratch);
+        let j = smoke_benchmark(&scratch, 3, 200).unwrap();
+        assert_eq!(j.get("jobs_done").unwrap().as_f64(), Some(3.0));
+        assert!(j.get("throughput_samples_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("service").unwrap().get("cache_hit_rate").is_some());
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
+}

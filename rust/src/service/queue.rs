@@ -1,0 +1,549 @@
+//! The job queue: admission control, FIFO batching source, per-job status
+//! and result accumulation, and completion latency tracking.
+//!
+//! One mutex guards the whole queue state; every mutation signals the
+//! condvar so both the dispatcher (`wait_pending`) and blocked clients
+//! (`wait_job`) wake promptly. Nothing inside the lock does I/O.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::job::{JobId, JobSpec, JobStatus, JobView};
+use crate::metrics::{keys, LatencyStats, Metrics};
+use crate::sampler::sink::SampleSink;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// A contiguous slice of one job's samples placed into a macro batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub job: JobId,
+    /// First sample index of the slice in the job's stream (includes the
+    /// job's `sample_base`).
+    pub sample0: u64,
+    pub len: usize,
+}
+
+/// Admission limits enforced at submit time.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionLimits {
+    /// Max jobs queued or running at once.
+    pub max_queue: usize,
+    /// Max samples one job may request.
+    pub max_samples_per_job: u64,
+}
+
+struct JobState {
+    spec: JobSpec,
+    status: JobStatus,
+    /// Samples handed to batches so far.
+    assigned: u64,
+    /// Samples completed so far.
+    done: u64,
+    sink: Option<SampleSink>,
+    error: Option<String>,
+    t_submit: Instant,
+    latency_secs: Option<f64>,
+}
+
+/// Terminal jobs retained for status/result queries before being evicted
+/// oldest-first; bounds a long-lived service's memory. Transports that
+/// persist results call [`JobQueue::forget`] to release jobs eagerly.
+const MAX_TERMINAL_HISTORY: usize = 4096;
+
+struct Inner {
+    next_id: JobId,
+    jobs: BTreeMap<JobId, JobState>,
+    /// Jobs with unassigned samples, in arrival order.
+    pending: VecDeque<JobId>,
+    /// Non-terminal job count (admission control, O(1)).
+    active: usize,
+    /// Terminal jobs, completion order — the eviction queue.
+    terminal_order: VecDeque<JobId>,
+    shutdown: bool,
+    peak_depth: usize,
+    submitted: u64,
+    rejected: u64,
+    completed: u64,
+    failed: u64,
+    latencies: LatencyStats,
+}
+
+impl Inner {
+    /// Called exactly once per job, at its terminal transition.
+    fn note_terminal(&mut self, id: JobId) {
+        self.active -= 1;
+        self.terminal_order.push_back(id);
+        while self.terminal_order.len() > MAX_TERMINAL_HISTORY {
+            if let Some(old) = self.terminal_order.pop_front() {
+                self.jobs.remove(&old);
+            }
+        }
+    }
+}
+
+/// See module docs.
+pub struct JobQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    limits: AdmissionLimits,
+}
+
+impl JobQueue {
+    pub fn new(limits: AdmissionLimits) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(Inner {
+                next_id: 1,
+                jobs: BTreeMap::new(),
+                pending: VecDeque::new(),
+                active: 0,
+                terminal_order: VecDeque::new(),
+                shutdown: false,
+                peak_depth: 0,
+                submitted: 0,
+                rejected: 0,
+                completed: 0,
+                failed: 0,
+                latencies: LatencyStats::new(4096),
+            }),
+            cv: Condvar::new(),
+            limits,
+        }
+    }
+
+    /// Admit a job or reject it with a config error.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        let mut g = self.inner.lock().unwrap();
+        if g.shutdown {
+            g.rejected += 1;
+            return Err(Error::config("service is shutting down"));
+        }
+        if spec.n_samples == 0 {
+            g.rejected += 1;
+            return Err(Error::config("job requests 0 samples"));
+        }
+        if spec.n_samples > self.limits.max_samples_per_job {
+            g.rejected += 1;
+            return Err(Error::config(format!(
+                "job requests {} samples (limit {})",
+                spec.n_samples, self.limits.max_samples_per_job
+            )));
+        }
+        if g.active >= self.limits.max_queue {
+            g.rejected += 1;
+            return Err(Error::config(format!(
+                "queue full ({} active jobs, limit {})",
+                g.active, self.limits.max_queue
+            )));
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.jobs.insert(
+            id,
+            JobState {
+                spec,
+                status: JobStatus::Queued,
+                assigned: 0,
+                done: 0,
+                sink: None,
+                error: None,
+                t_submit: Instant::now(),
+                latency_secs: None,
+            },
+        );
+        g.pending.push_back(id);
+        g.submitted += 1;
+        g.active += 1;
+        g.peak_depth = g.peak_depth.max(g.active);
+        self.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Block until pending work exists, shutdown is requested, or `timeout`
+    /// elapses. Returns whether pending work exists.
+    pub fn wait_pending(&self, timeout: Duration) -> bool {
+        let g = self.inner.lock().unwrap();
+        let (g, _) = self
+            .cv
+            .wait_timeout_while(g, timeout, |g| g.pending.is_empty() && !g.shutdown)
+            .unwrap();
+        !g.pending.is_empty()
+    }
+
+    /// Spec of the oldest pending job (the batch anchor).
+    pub fn front_pending(&self) -> Option<(JobId, JobSpec)> {
+        let g = self.inner.lock().unwrap();
+        g.pending
+            .front()
+            .map(|&id| (id, g.jobs[&id].spec.clone()))
+    }
+
+    /// Snapshot of all pending jobs, FIFO order. The dispatcher resolves
+    /// batch compatibility against this *outside* the queue lock (store
+    /// resolution does disk I/O, which must never happen under the lock).
+    pub fn pending_snapshot(&self) -> Vec<(JobId, JobSpec)> {
+        let g = self.inner.lock().unwrap();
+        g.pending
+            .iter()
+            .map(|&id| (id, g.jobs[&id].spec.clone()))
+            .collect()
+    }
+
+    /// Carve up to `max_rows` of samples off compatible pending jobs, in
+    /// FIFO order. `compatible` decides membership (same store + execution
+    /// mode — the batcher's key) and must be pure — it runs under the
+    /// queue lock; sliced jobs move to `Running`, and jobs whose samples
+    /// are fully assigned leave `pending`.
+    pub fn take_for_batch(
+        &self,
+        max_rows: usize,
+        compatible: impl Fn(JobId, &JobSpec) -> bool,
+    ) -> Vec<Assignment> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        let mut taken = 0usize;
+        let mut still_pending = VecDeque::with_capacity(g.pending.len());
+        let pending = std::mem::take(&mut g.pending);
+        for id in pending {
+            let job = g.jobs.get_mut(&id).expect("pending id has state");
+            if taken < max_rows && compatible(id, &job.spec) {
+                let remaining = job.spec.n_samples - job.assigned;
+                let take = remaining.min((max_rows - taken) as u64);
+                if take > 0 {
+                    out.push(Assignment {
+                        job: id,
+                        sample0: job.spec.sample_base + job.assigned,
+                        len: take as usize,
+                    });
+                    job.assigned += take;
+                    job.status = JobStatus::Running;
+                    taken += take as usize;
+                }
+                if job.assigned < job.spec.n_samples {
+                    still_pending.push_back(id);
+                }
+            } else {
+                still_pending.push_back(id);
+            }
+        }
+        g.pending = still_pending;
+        out
+    }
+
+    /// Deliver one finished batch slice of a job. When the job's last
+    /// sample lands it turns `Done` and its turnaround latency is recorded.
+    pub fn complete_slice(&self, id: JobId, slice: &SampleSink, len: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(job) = g.jobs.get_mut(&id) else {
+            return;
+        };
+        if job.status.is_terminal() {
+            return; // late slice of an already-failed job
+        }
+        match &mut job.sink {
+            Some(s) => s.merge(slice),
+            None => job.sink = Some(slice.clone()),
+        }
+        job.done += len;
+        if job.done >= job.spec.n_samples {
+            job.status = JobStatus::Done;
+            let secs = job.t_submit.elapsed().as_secs_f64();
+            job.latency_secs = Some(secs);
+            g.completed += 1;
+            g.latencies.record(secs);
+            g.note_terminal(id);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Mark a job failed (admission passed but execution broke).
+    pub fn fail_job(&self, id: JobId, error: &str) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(job) = g.jobs.get_mut(&id) else {
+            return;
+        };
+        if job.status.is_terminal() {
+            return;
+        }
+        job.status = JobStatus::Failed;
+        job.error = Some(error.to_string());
+        let secs = job.t_submit.elapsed().as_secs_f64();
+        job.latency_secs = Some(secs);
+        g.failed += 1;
+        g.latencies.record(secs);
+        g.note_terminal(id);
+        g.pending.retain(|&p| p != id);
+        self.cv.notify_all();
+    }
+
+    /// Release a terminal job's retained state eagerly (a transport that
+    /// has persisted the result calls this; no-op for live jobs).
+    pub fn forget(&self, id: JobId) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let terminal = g.jobs.get(&id).is_some_and(|j| j.status.is_terminal());
+        if terminal {
+            g.jobs.remove(&id);
+        }
+        terminal
+    }
+
+    /// Block until `id` reaches a terminal status or `timeout` elapses.
+    pub fn wait_job(&self, id: JobId, timeout: Duration) -> Option<JobStatus> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            match g.jobs.get(&id) {
+                None => return None,
+                Some(j) if j.status.is_terminal() => return Some(j.status),
+                Some(_) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return g.jobs.get(&id).map(|j| j.status);
+            }
+            let (back, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = back;
+        }
+    }
+
+    fn view_of(id: JobId, j: &JobState) -> JobView {
+        JobView {
+            id,
+            tag: j.spec.tag.clone(),
+            status: j.status,
+            n_samples: j.spec.n_samples,
+            done: j.done,
+            error: j.error.clone(),
+            latency_secs: j.latency_secs,
+        }
+    }
+
+    pub fn status(&self, id: JobId) -> Option<JobView> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(&id).map(|j| Self::view_of(id, j))
+    }
+
+    /// All jobs, id order.
+    pub fn snapshot(&self) -> Vec<JobView> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.iter().map(|(&id, j)| Self::view_of(id, j)).collect()
+    }
+
+    /// Clone of a finished (or partial) job's sample statistics.
+    pub fn job_sink(&self, id: JobId) -> Option<SampleSink> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(&id).and_then(|j| j.sink.clone())
+    }
+
+    /// Full machine-readable result for a terminal job.
+    pub fn result_json(&self, id: JobId) -> Option<Json> {
+        let g = self.inner.lock().unwrap();
+        let j = g.jobs.get(&id)?;
+        let mut fields = vec![
+            ("id", Json::Num(id as f64)),
+            ("tag", Json::Str(j.spec.tag.clone())),
+            ("status", Json::Str(j.status.as_str().into())),
+            ("samples", Json::Num(j.spec.n_samples as f64)),
+            ("done", Json::Num(j.done as f64)),
+            (
+                "latency_secs",
+                j.latency_secs.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "error",
+                j.error.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+        ];
+        if let Some(sink) = &j.sink {
+            let mean = sink.mean_photons();
+            fields.push(("total_mean_photons", Json::Num(mean.iter().sum())));
+            fields.push((
+                "mean_photons",
+                Json::Arr(mean.into_iter().map(Json::Num).collect()),
+            ));
+        }
+        Some(Json::obj(fields))
+    }
+
+    /// No pending or running work.
+    pub fn idle(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.pending.is_empty() && g.jobs.values().all(|j| j.status != JobStatus::Running)
+    }
+
+    pub fn shutdown(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.lock().unwrap().shutdown
+    }
+
+    /// At the admission-control capacity (new submits would be rejected).
+    /// Durable transports use this for backpressure: hold submissions
+    /// instead of converting a momentary full queue into hard rejections.
+    pub fn is_full(&self) -> bool {
+        self.inner.lock().unwrap().active >= self.limits.max_queue
+    }
+
+    /// Fold queue counters + the latency distribution into `m` / JSON.
+    pub fn account(&self, m: &mut Metrics) {
+        let g = self.inner.lock().unwrap();
+        m.add(keys::JOBS_SUBMITTED, g.submitted);
+        m.add(keys::JOBS_REJECTED, g.rejected);
+        m.add(keys::JOBS_COMPLETED, g.completed);
+        m.add(keys::JOBS_FAILED, g.failed);
+        m.set_max(keys::QUEUE_PEAK, g.peak_depth as u64);
+    }
+
+    pub fn latency_json(&self) -> Json {
+        self.inner.lock().unwrap().latencies.to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> AdmissionLimits {
+        AdmissionLimits {
+            max_queue: 3,
+            max_samples_per_job: 1000,
+        }
+    }
+
+    fn spec(n: u64) -> JobSpec {
+        JobSpec::new("/tmp/fake-store", n)
+    }
+
+    #[test]
+    fn admission_limits_enforced() {
+        let q = JobQueue::new(limits());
+        assert!(q.submit(spec(0)).is_err());
+        assert!(q.submit(spec(1001)).is_err());
+        for _ in 0..3 {
+            q.submit(spec(10)).unwrap();
+        }
+        let err = q.submit(spec(10)).unwrap_err().to_string();
+        assert!(err.contains("queue full"), "{err}");
+        let mut m = Metrics::new();
+        q.account(&mut m);
+        assert_eq!(m.get(keys::JOBS_SUBMITTED), 3);
+        assert_eq!(m.get(keys::JOBS_REJECTED), 3);
+        assert_eq!(m.get(keys::QUEUE_PEAK), 3);
+    }
+
+    #[test]
+    fn fifo_slicing_across_jobs_and_batches() {
+        let q = JobQueue::new(limits());
+        let a = q.submit(spec(100)).unwrap();
+        let mut sb = spec(50);
+        sb.sample_base = 7000;
+        let b = q.submit(sb).unwrap();
+        // First batch: 120 rows → all of A, 20 of B.
+        let asg = q.take_for_batch(120, |_, _| true);
+        assert_eq!(
+            asg,
+            vec![
+                Assignment { job: a, sample0: 0, len: 100 },
+                Assignment { job: b, sample0: 7000, len: 20 },
+            ]
+        );
+        // Second batch resumes B where the first stopped.
+        let asg2 = q.take_for_batch(120, |_, _| true);
+        assert_eq!(asg2, vec![Assignment { job: b, sample0: 7020, len: 30 }]);
+        assert!(q.take_for_batch(120, |_, _| true).is_empty());
+        assert_eq!(q.status(a).unwrap().status, JobStatus::Running);
+    }
+
+    #[test]
+    fn incompatible_jobs_stay_pending() {
+        let q = JobQueue::new(limits());
+        let a = q.submit(spec(10)).unwrap();
+        let mut other = spec(10);
+        other.data = "/elsewhere".into();
+        let b = q.submit(other).unwrap();
+        let asg = q.take_for_batch(100, |_, s| s.data.to_str() == Some("/tmp/fake-store"));
+        assert_eq!(asg.len(), 1);
+        assert_eq!(asg[0].job, a);
+        assert_eq!(q.status(b).unwrap().status, JobStatus::Queued);
+        assert!(!q.idle()); // b pending
+    }
+
+    #[test]
+    fn completion_merges_slices_and_records_latency() {
+        let q = JobQueue::new(limits());
+        let id = q.submit(spec(4)).unwrap();
+        q.take_for_batch(2, |_, _| true);
+        let mut s1 = SampleSink::new(2, 3, 1);
+        s1.record(0, &[1, 2]);
+        s1.record(1, &[0, 1]);
+        q.complete_slice(id, &s1, 2);
+        assert_eq!(q.status(id).unwrap().status, JobStatus::Running);
+        q.take_for_batch(2, |_, _| true);
+        q.complete_slice(id, &s1, 2);
+        let v = q.status(id).unwrap();
+        assert_eq!(v.status, JobStatus::Done);
+        assert_eq!(v.done, 4);
+        assert!(v.latency_secs.unwrap() >= 0.0);
+        let sink = q.job_sink(id).unwrap();
+        assert_eq!(sink.hist[0], vec![0, 2, 2]); // two merged slices
+        assert!(q.idle());
+        let r = q.result_json(id).unwrap();
+        assert!(r.get("mean_photons").is_some());
+        assert_eq!(q.wait_job(id, Duration::from_millis(1)), Some(JobStatus::Done));
+    }
+
+    #[test]
+    fn failure_is_terminal_and_unblocks_waiters() {
+        let q = JobQueue::new(limits());
+        let id = q.submit(spec(10)).unwrap();
+        q.fail_job(id, "store went away");
+        let v = q.status(id).unwrap();
+        assert_eq!(v.status, JobStatus::Failed);
+        assert!(v.error.unwrap().contains("store went away"));
+        assert!(q.idle());
+        // Late slices of a failed job are dropped, not resurrected.
+        let s = SampleSink::new(2, 3, 1);
+        q.complete_slice(id, &s, 10);
+        assert_eq!(q.status(id).unwrap().status, JobStatus::Failed);
+        assert_eq!(q.wait_job(id, Duration::from_millis(1)), Some(JobStatus::Failed));
+        assert_eq!(q.wait_job(999, Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn terminal_history_bounded_and_forgettable() {
+        let q = JobQueue::new(AdmissionLimits {
+            max_queue: 8,
+            max_samples_per_job: 10,
+        });
+        let id = q.submit(spec(1)).unwrap();
+        q.fail_job(id, "x");
+        assert!(q.forget(id), "terminal job releasable");
+        assert!(q.status(id).is_none());
+        assert!(!q.forget(id), "double forget is a no-op");
+        let live = q.submit(spec(1)).unwrap();
+        assert!(!q.forget(live), "live jobs are not forgettable");
+        assert!(q.status(live).is_some());
+        q.fail_job(live, "x");
+        // Auto-eviction keeps the retained history bounded. Terminal jobs
+        // don't count against max_queue, so this loop never rejects.
+        for _ in 0..(MAX_TERMINAL_HISTORY + 8) {
+            let i = q.submit(spec(1)).unwrap();
+            q.fail_job(i, "x");
+        }
+        assert!(q.snapshot().len() <= MAX_TERMINAL_HISTORY + 1);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_and_wakes_dispatcher() {
+        let q = JobQueue::new(limits());
+        q.shutdown();
+        assert!(q.submit(spec(1)).is_err());
+        assert!(!q.wait_pending(Duration::from_millis(1)));
+        assert!(q.is_shutdown());
+    }
+}

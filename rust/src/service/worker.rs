@@ -1,0 +1,389 @@
+//! The worker pool: resident engines driving macro batches.
+//!
+//! Each worker thread owns its engines for the life of the service (the
+//! XLA client and its compiled-executable cache are per-thread and
+//! expensive — reuse across jobs is the service's second amortization,
+//! next to the store cache). A batch walk is the data-parallel inner loop
+//! of `coordinator::data_parallel` with one twist: the environment rows
+//! belong to *different jobs*, each stepped against its own
+//! threshold/displacement stream, so one Γ pass serves every job in the
+//! batch.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::batcher::Batch;
+use super::queue::JobQueue;
+use crate::config::{ComputePrecision, EngineKind, RunConfig, ScalingMode, ServiceConfig};
+use crate::coordinator::{env_rows, env_store_rows, EngineBox};
+use crate::io::{DiskModel, Prefetcher};
+use crate::metrics::{keys, Metrics};
+use crate::sampler::sink::SampleSink;
+use crate::sampler::{boundary_env, StepEngine};
+use crate::tensor::SplitBuf;
+use crate::util::error::{Error, Result};
+
+/// A closable MPMC batch channel (std has no shared `Receiver`).
+pub struct Dispatch {
+    q: Mutex<(VecDeque<Batch>, bool)>,
+    cv: Condvar,
+}
+
+impl Dispatch {
+    pub fn new() -> Dispatch {
+        Dispatch {
+            q: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, b: Batch) {
+        let mut g = self.q.lock().unwrap();
+        g.0.push_back(b);
+        self.cv.notify_one();
+    }
+
+    /// Stop accepting work; blocked `pop`s drain the queue then see `None`.
+    pub fn close(&self) {
+        let mut g = self.q.lock().unwrap();
+        g.1 = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<Batch> {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(b) = g.0.pop_front() {
+                return Some(b);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for Dispatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+type EngineKey = (EngineKind, ComputePrecision, ScalingMode);
+
+/// Worker thread body: pop batches until the dispatch channel closes.
+pub(crate) fn worker_loop(
+    dispatch: Arc<Dispatch>,
+    queue: Arc<JobQueue>,
+    cfg: ServiceConfig,
+    disk: Arc<DiskModel>,
+    service_metrics: Arc<Mutex<Metrics>>,
+) {
+    // Engines persist across batches, keyed by execution mode.
+    let mut engines: Vec<(EngineKey, EngineBox)> = Vec::new();
+    while let Some(batch) = dispatch.pop() {
+        let key: EngineKey = (cfg.engine, batch.key.compute, cfg.scaling);
+        let engine = match engine_for(&mut engines, key, &cfg, &batch) {
+            Ok(e) => e,
+            Err(e) => {
+                let msg = format!("engine construction failed: {e}");
+                for a in &batch.assignments {
+                    queue.fail_job(a.job, &msg);
+                }
+                continue;
+            }
+        };
+        match run_batch(engine, &batch, &cfg, &disk) {
+            Ok((mut metrics, sinks)) => {
+                for (a, sink) in batch.assignments.iter().zip(&sinks) {
+                    queue.complete_slice(a.job, sink, a.len as u64);
+                }
+                let (em, dead) = engine.drain();
+                metrics.merge(&em);
+                metrics.add("dead_rows", dead);
+                service_metrics.lock().unwrap().merge(&metrics);
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e}");
+                for a in &batch.assignments {
+                    queue.fail_job(a.job, &msg);
+                }
+                // Reset accounting so the failed walk doesn't pollute the
+                // next batch's numbers.
+                let _ = engine.drain();
+            }
+        }
+    }
+}
+
+fn engine_for<'a>(
+    engines: &'a mut Vec<(EngineKey, EngineBox)>,
+    key: EngineKey,
+    cfg: &ServiceConfig,
+    batch: &Batch,
+) -> Result<&'a mut EngineBox> {
+    if let Some(i) = engines.iter().position(|(k, _)| *k == key) {
+        return Ok(&mut engines[i].1);
+    }
+    let mut rc = RunConfig::new(batch.store.spec.clone());
+    rc.engine = key.0;
+    rc.compute = key.1;
+    rc.scaling = key.2;
+    rc.gemm_threads = cfg.gemm_threads;
+    rc.artifacts_dir = cfg.artifacts_dir.clone();
+    let e = EngineBox::build(&rc)?;
+    engines.push((key, e));
+    Ok(&mut engines.last_mut().unwrap().1)
+}
+
+/// Walk all `M` sites once, stepping every job slice of the batch, and
+/// return the batch metrics plus one sink per assignment (same order).
+pub(crate) fn run_batch(
+    engine: &mut EngineBox,
+    batch: &Batch,
+    cfg: &ServiceConfig,
+    disk: &Arc<DiskModel>,
+) -> Result<(Metrics, Vec<SampleSink>)> {
+    let store = &batch.store;
+    let spec = &store.spec;
+    let m = spec.m;
+    let rows = batch.rows();
+    if rows == 0 {
+        return Err(Error::other("empty batch dispatched"));
+    }
+    if !batch.key.compute.admissible_for(m) {
+        return Err(Error::config(format!(
+            "f16 compute requires M < 500 (store has M = {m})"
+        )));
+    }
+
+    let mut metrics = Metrics::new();
+    let mut sinks: Vec<SampleSink> = batch
+        .assignments
+        .iter()
+        .map(|_| SampleSink::new(m, spec.d, 4))
+        .collect();
+    let displaced = spec.displacement_sigma != 0.0;
+    let mut env = boundary_env(rows);
+
+    let mut pf = Prefetcher::new(store.clone(), disk.clone(), (0..m).collect(), 2);
+    let mut expected_site = 0usize;
+    while let Some(r) = pf.next_site() {
+        let (site_idx, site) = r?;
+        debug_assert_eq!(site_idx, expected_site);
+        expected_site += 1;
+        metrics.add(keys::IO_OPS, 1);
+        metrics.add(keys::IO_BYTES, store.site_bytes(site_idx));
+
+        let chi_r = site.gamma.d1;
+        let mut next = SplitBuf::zeros(&[rows, chi_r]);
+        let mut row0 = 0usize;
+        for (ai, a) in batch.assignments.iter().enumerate() {
+            let mut site_samples: Vec<i32> = Vec::with_capacity(a.len);
+            let mut off = 0usize;
+            while off < a.len {
+                let take = (a.len - off).min(cfg.n2_micro);
+                let lo = row0 + off;
+                let mut chunk = env_rows(&env, lo, lo + take);
+                let th = spec.thresholds(site_idx, a.sample0 + off as u64, take);
+                let mus = displaced
+                    .then(|| spec.displacement_draws(site_idx, a.sample0 + off as u64, take));
+                let mut s = Vec::new();
+                let t0 = Instant::now();
+                engine.step(&mut chunk, &site, &th, mus.as_deref(), &mut s)?;
+                metrics.add_phase("compute", t0.elapsed().as_secs_f64());
+                metrics.add(keys::MICRO_BATCHES, 1);
+                env_store_rows(&mut next, lo, &chunk);
+                site_samples.extend_from_slice(&s);
+                off += take;
+            }
+            sinks[ai].record(site_idx, &site_samples);
+            row0 += a.len;
+        }
+        env = next;
+    }
+    if expected_site != m {
+        return Err(Error::other(format!(
+            "prefetch delivered {expected_site} of {m} sites"
+        )));
+    }
+    metrics.add_phase("io_virtual", pf.io_secs);
+    metrics.add_phase("io_stall", pf.stall_secs);
+    pf.finish()?;
+    metrics.add(keys::SITES, m as u64);
+    metrics.add(keys::SAMPLES, rows as u64);
+    metrics.add(keys::MACRO_BATCHES, 1);
+    Ok((metrics, sinks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Preset;
+    use crate::io::{GammaStore, StoreCodec, StorePrecision};
+    use crate::service::batcher::BatchKey;
+    use crate::service::queue::Assignment;
+
+    fn test_store(tag: &str, m: usize) -> (Arc<GammaStore>, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "fastmps-worker-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut spec = Preset::Jiuzhang2.scaled_spec(11);
+        spec.m = m;
+        spec.chi_cap = 12;
+        spec.decay_k = 0.0;
+        spec.displacement_sigma = 0.0;
+        let store = Arc::new(
+            GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap(),
+        );
+        (store, dir)
+    }
+
+    fn service_cfg() -> ServiceConfig {
+        ServiceConfig {
+            n2_micro: 32,
+            compute: ComputePrecision::F64,
+            ..Default::default()
+        }
+    }
+
+    fn dp_reference(store: &Arc<GammaStore>, n: u64, n2: usize) -> SampleSink {
+        let mut rc = RunConfig::new(store.spec.clone());
+        rc.n_samples = n;
+        rc.n1_macro = n as usize;
+        rc.n2_micro = n2;
+        rc.compute = ComputePrecision::F64;
+        // Match the store width so the coordinator's broadcast pack is
+        // lossless, like the service's direct prefetch path.
+        rc.store_precision = store.precision;
+        crate::coordinator::data_parallel::run(&rc, store, &[])
+            .unwrap()
+            .sink
+    }
+
+    #[test]
+    fn batch_of_one_job_matches_data_parallel_run() {
+        let (store, dir) = test_store("oracle", 6);
+        let cfg = service_cfg();
+        let key = BatchKey {
+            store_hash: store.manifest_hash().unwrap(),
+            compute: ComputePrecision::F64,
+        };
+        let batch = Batch {
+            key,
+            store: store.clone(),
+            assignments: vec![Assignment { job: 1, sample0: 0, len: 128 }],
+            target: 128,
+        };
+        let mut rc = RunConfig::new(store.spec.clone());
+        rc.compute = ComputePrecision::F64;
+        let mut engine = EngineBox::build(&rc).unwrap();
+        let (metrics, sinks) =
+            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited()).unwrap();
+        let reference = dp_reference(&store, 128, cfg.n2_micro);
+        assert_eq!(sinks[0].hist, reference.hist, "service vs coordinator");
+        assert_eq!(sinks[0].pair_sums, reference.pair_sums);
+        assert_eq!(metrics.get(keys::SAMPLES), 128);
+        assert_eq!(metrics.get(keys::SITES), 6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn coalesced_jobs_get_independent_correct_streams() {
+        // Two jobs in one batch, second with a shifted sample base: each
+        // must match the standalone run over its own index range, and the
+        // shifted stream must actually differ from the base stream.
+        let (store, dir) = test_store("streams", 5);
+        let cfg = service_cfg();
+        let key = BatchKey {
+            store_hash: store.manifest_hash().unwrap(),
+            compute: ComputePrecision::F64,
+        };
+        let batch = Batch {
+            key,
+            store: store.clone(),
+            assignments: vec![
+                Assignment { job: 1, sample0: 0, len: 96 },
+                Assignment { job: 2, sample0: 96, len: 96 },
+            ],
+            target: 192,
+        };
+        let mut rc = RunConfig::new(store.spec.clone());
+        rc.compute = ComputePrecision::F64;
+        let mut engine = EngineBox::build(&rc).unwrap();
+        let (_, sinks) =
+            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited()).unwrap();
+        // The combined histogram equals one 192-sample standalone run
+        // (job 2's range [96, 192) continues job 1's [0, 96)).
+        let reference = dp_reference(&store, 192, cfg.n2_micro);
+        let mut combined = sinks[0].clone();
+        combined.merge(&sinks[1]);
+        assert_eq!(combined.hist, reference.hist);
+        assert_ne!(sinks[0].hist, sinks[1].hist, "streams must differ");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn engine_is_reused_across_batches() {
+        let (store, dir) = test_store("reuse", 4);
+        let cfg = service_cfg();
+        let key = BatchKey {
+            store_hash: store.manifest_hash().unwrap(),
+            compute: ComputePrecision::F64,
+        };
+        let mut rc = RunConfig::new(store.spec.clone());
+        rc.compute = ComputePrecision::F64;
+        let mut engine = EngineBox::build(&rc).unwrap();
+        for round in 0..2 {
+            let batch = Batch {
+                key,
+                store: store.clone(),
+                assignments: vec![Assignment {
+                    job: round + 1,
+                    sample0: 0,
+                    len: 32,
+                }],
+                target: 32,
+            };
+            let (m, _) = run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited()).unwrap();
+            assert_eq!(m.get(keys::SAMPLES), 32);
+            let (em, _) = engine.drain();
+            assert!(em.get(keys::FLOPS) > 0, "round {round} engine accounting");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dispatch_channel_drains_then_closes() {
+        let (store, dir) = test_store("chan", 4);
+        let d = Dispatch::new();
+        let key = BatchKey {
+            store_hash: 1,
+            compute: ComputePrecision::F32,
+        };
+        d.push(Batch {
+            key,
+            store: store.clone(),
+            assignments: vec![Assignment { job: 1, sample0: 0, len: 1 }],
+            target: 1,
+        });
+        d.close();
+        assert!(d.pop().is_some());
+        assert!(d.pop().is_none(), "closed + drained");
+        assert!(d.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

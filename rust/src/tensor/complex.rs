@@ -1,6 +1,6 @@
 //! Minimal complex scalar (num-complex is unavailable offline).
 
-use num_traits::Float;
+use crate::util::num::Float;
 use std::fmt;
 use std::iter::Sum;
 use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};

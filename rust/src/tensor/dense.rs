@@ -1,6 +1,6 @@
 //! Dense row-major complex matrices and rank-3 tensors.
 
-use num_traits::Float;
+use crate::util::num::Float;
 
 use super::complex::Complex;
 use crate::util::error::{Error, Result};

@@ -1,0 +1,266 @@
+//! Self-contained lossless blob codec (zstd is unavailable offline).
+//!
+//! A greedy LZ77 with a 64 KiB window and byte-oriented tokens — small,
+//! auditable, and fast enough for the Γ-store path where compression
+//! exists to cut §3.3.2 I/O bytes, not to win ratio benchmarks.
+//!
+//! Stream layout: LEB128 varint of the original length, then tokens:
+//! - `0x00..=0x7f` — literal run of `ctrl + 1` bytes (follow inline);
+//! - `0x80..=0xff` — match of `(ctrl & 0x7f) + 4` bytes at a 2-byte
+//!   little-endian distance (1..=65535) back into the output.
+//!
+//! Matches may overlap their own output (run-length style), so the decoder
+//! copies byte-by-byte. The decoder validates every length/distance and the
+//! final size, so corrupt blobs fail loudly instead of producing garbage Γ.
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = MIN_MATCH + 127;
+const MAX_DIST: usize = u16::MAX as usize;
+const HASH_BITS: u32 = 16;
+
+fn hash4(b: &[u8]) -> usize {
+    let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn read_varint(b: &[u8]) -> Result<(u64, usize), String> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    for (i, &byte) in b.iter().enumerate() {
+        if shift >= 64 {
+            return Err("varint overflow".into());
+        }
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok((v, i + 1));
+        }
+        shift += 7;
+    }
+    Err("truncated varint".into())
+}
+
+fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
+    for chunk in lits.chunks(128) {
+        out.push((chunk.len() - 1) as u8);
+        out.extend_from_slice(chunk);
+    }
+}
+
+/// Compress `src`. Never fails; worst case output is `src` plus ~1% framing.
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 2 + 16);
+    write_varint(&mut out, src.len() as u64);
+    if src.is_empty() {
+        return out;
+    }
+    let mut head = vec![u32::MAX; 1 << HASH_BITS];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i < src.len() {
+        let mut m_len = 0usize;
+        let mut m_dist = 0usize;
+        if i + MIN_MATCH <= src.len() {
+            let h = hash4(&src[i..i + 4]);
+            let cand = head[h];
+            head[h] = i as u32;
+            if cand != u32::MAX {
+                let cand = cand as usize;
+                if i - cand <= MAX_DIST {
+                    let max_len = MAX_MATCH.min(src.len() - i);
+                    let mut l = 0usize;
+                    while l < max_len && src[cand + l] == src[i + l] {
+                        l += 1;
+                    }
+                    if l >= MIN_MATCH {
+                        m_len = l;
+                        m_dist = i - cand;
+                    }
+                }
+            }
+        }
+        if m_len > 0 {
+            flush_literals(&mut out, &src[lit_start..i]);
+            out.push(0x80 | (m_len - MIN_MATCH) as u8);
+            out.extend_from_slice(&(m_dist as u16).to_le_bytes());
+            i += m_len;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, &src[lit_start..]);
+    out
+}
+
+/// Decompress a [`compress`] stream; errors on any framing violation.
+pub fn decompress(blob: &[u8]) -> Result<Vec<u8>, String> {
+    let (n, mut i) = read_varint(blob)?;
+    let n = usize::try_from(n).map_err(|_| "blob too large".to_string())?;
+    // The header length is untrusted: reject provably-corrupt claims
+    // before allocating. A match token is 3 bytes for ≤ MAX_MATCH output,
+    // so no valid stream expands more than ~44× its encoded size.
+    let max_plausible = blob
+        .len()
+        .saturating_mul(MAX_MATCH.div_ceil(3));
+    if n > max_plausible {
+        return Err(format!(
+            "length header {n} exceeds any valid expansion of {} input bytes",
+            blob.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let ctrl = *blob.get(i).ok_or("truncated stream")?;
+        i += 1;
+        if ctrl < 0x80 {
+            let len = ctrl as usize + 1;
+            let lits = blob
+                .get(i..i + len)
+                .ok_or_else(|| format!("truncated literal run of {len}"))?;
+            out.extend_from_slice(lits);
+            i += len;
+        } else {
+            let len = (ctrl & 0x7f) as usize + MIN_MATCH;
+            let d = blob.get(i..i + 2).ok_or("truncated match token")?;
+            let dist = u16::from_le_bytes([d[0], d[1]]) as usize;
+            i += 2;
+            if dist == 0 || dist > out.len() {
+                return Err(format!(
+                    "match distance {dist} invalid at output offset {}",
+                    out.len()
+                ));
+            }
+            let start = out.len() - dist;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+    if out.len() != n {
+        return Err(format!("decoded {} bytes, header says {n}", out.len()));
+    }
+    if i != blob.len() {
+        return Err(format!("{} trailing bytes after stream", blob.len() - i));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(src: &[u8]) {
+        let c = compress(src);
+        let back = decompress(&c).unwrap();
+        assert_eq!(back, src, "roundtrip of {} bytes", src.len());
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abc");
+        roundtrip(b"abcd");
+    }
+
+    #[test]
+    fn repetitive_input_shrinks() {
+        let src: Vec<u8> = std::iter::repeat(b"fastmps!".as_slice())
+            .take(512)
+            .flatten()
+            .copied()
+            .collect();
+        let c = compress(&src);
+        assert!(c.len() < src.len() / 4, "{} vs {}", c.len(), src.len());
+        roundtrip(&src);
+    }
+
+    #[test]
+    fn overlapping_match_rle_style() {
+        // "aaaa..." forces dist=1 matches longer than the distance.
+        let src = vec![b'a'; 1000];
+        roundtrip(&src);
+        let mut src2 = vec![0u8; 0];
+        src2.extend_from_slice(b"xyz");
+        src2.extend(std::iter::repeat(b"xyz".as_slice()).take(100).flatten());
+        roundtrip(&src2);
+    }
+
+    #[test]
+    fn incompressible_input_bounded_expansion() {
+        // A pseudo-random byte stream: expansion stays under 2%.
+        let mut x = 0x9e3779b97f4a7c15u64;
+        let src: Vec<u8> = (0..10_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                x as u8
+            })
+            .collect();
+        let c = compress(&src);
+        assert!(c.len() <= src.len() + src.len() / 50 + 16);
+        roundtrip(&src);
+    }
+
+    #[test]
+    fn property_roundtrip_random_structures() {
+        crate::util::prop::quickcheck("lz roundtrip", |g| {
+            let n = g.usize_in(0, 4096);
+            let mode = g.usize_in(0, 3);
+            let src: Vec<u8> = match mode {
+                0 => (0..n).map(|_| (g.u64() & 0xff) as u8).collect(),
+                1 => (0..n).map(|i| (i / 7) as u8).collect(),
+                _ => {
+                    let period = g.usize_in(1, 40);
+                    (0..n).map(|i| (i % period) as u8).collect()
+                }
+            };
+            let back =
+                decompress(&compress(&src)).map_err(|e| format!("decode failed: {e}"))?;
+            if back != src {
+                return Err(format!("mismatch at {} bytes (mode {mode})", src.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let src: Vec<u8> = std::iter::repeat(b"fastmps!".as_slice())
+            .take(64)
+            .flatten()
+            .copied()
+            .collect();
+        let c = compress(&src);
+        // Truncation.
+        assert!(decompress(&c[..c.len() - 3]).is_err());
+        // Header/total-size mismatch via trailing garbage.
+        let mut t = c.clone();
+        t.push(0x00);
+        t.push(0xab);
+        assert!(decompress(&t).is_err());
+        // Empty input is not a valid stream.
+        assert!(decompress(&[]).is_err());
+        // A corrupted length header may not trigger a giant allocation —
+        // it must be rejected up front.
+        let mut huge = Vec::new();
+        write_varint(&mut huge, u64::MAX / 2);
+        huge.extend_from_slice(&c[..8]);
+        // Must return Err cheaply — not attempt a ~2^62-byte allocation.
+        assert!(decompress(&huge).is_err());
+    }
+}

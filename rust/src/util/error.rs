@@ -5,52 +5,68 @@ use std::fmt;
 /// Result alias used across the crate.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// FastMPS error type.
-#[derive(Debug, thiserror::Error)]
+/// FastMPS error type. `Display`/`Error` are hand-written — thiserror is
+/// unavailable in the offline build environment.
+#[derive(Debug)]
 pub enum Error {
     /// Shape/dimension mismatch in a tensor operation.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Invalid configuration or CLI input.
-    #[error("config error: {0}")]
     Config(String),
 
     /// File-format violation in the Γ store or manifest.
-    #[error("format error: {0}")]
     Format(String),
 
     /// A required AOT artifact is missing or incompatible.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Error raised inside the simulated communication fabric.
-    #[error("fabric error: {0}")]
     Fabric(String),
 
     /// Numerical failure (NaN/Inf/underflow collapse) detected at runtime.
-    #[error("numeric error: {0}")]
     Numeric(String),
 
     /// I/O error with context.
-    #[error("io error ({ctx}): {source}")]
     Io {
         ctx: String,
-        #[source]
         source: std::io::Error,
     },
 
     /// JSON parse error.
-    #[error("json error at byte {pos}: {msg}")]
     Json { pos: usize, msg: String },
 
     /// Error bubbled up from the XLA/PJRT runtime.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Anything else.
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Fabric(m) => write!(f, "fabric error: {m}"),
+            Error::Numeric(m) => write!(f, "numeric error: {m}"),
+            Error::Io { ctx, source } => write!(f, "io error ({ctx}): {source}"),
+            Error::Json { pos, msg } => write!(f, "json error at byte {pos}: {msg}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {

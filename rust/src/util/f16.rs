@@ -191,6 +191,95 @@ mod tests {
     }
 
     #[test]
+    fn exhaustive_bit_level_roundtrip() {
+        // Every finite f16 bit pattern (normals, subnormals, ±0, max, ±inf)
+        // must survive f16 → f32 → f16 exactly; NaNs must stay NaN (the
+        // payload may quieten).
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            let man = h & 0x3ff;
+            let f = f16_bits_to_f32(h);
+            if exp == 0x1f && man != 0 {
+                assert!(f.is_nan(), "{h:#06x}");
+                let back = f32_to_f16_bits(f);
+                assert_eq!(back & 0x7c00, 0x7c00, "{h:#06x}");
+                assert_ne!(back & 0x3ff, 0, "{h:#06x} must stay NaN");
+            } else {
+                assert_eq!(f32_to_f16_bits(f), h, "{h:#06x} ({f})");
+            }
+        }
+    }
+
+    #[test]
+    fn mantissa_carry_rolls_into_exponent() {
+        // Largest f32 below 2.0: all-ones mantissa rounds up and the carry
+        // increments the f16 exponent.
+        let just_below_two = f32::from_bits(0x3fff_ffff);
+        assert_eq!(f32_to_f16_bits(just_below_two), 0x4000, "→ 2.0 exactly");
+        // Carry at the top of the exponent range overflows to +inf: 65520
+        // is the midpoint between f16::MAX (odd mantissa) and 2^16, so
+        // round-to-even goes up, and 0x7bff + 1 = 0x7c00 = +inf.
+        assert_eq!(f32_to_f16_bits(65519.0), 0x7bff, "below midpoint → MAX");
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00, "midpoint → +inf");
+        assert_eq!(f32_to_f16_bits(-65520.0), 0xfc00);
+        // Largest subnormal's upper midpoint rounds into the first normal.
+        let mid = (1023.5f64 * 2f64.powi(-24)) as f32;
+        assert_eq!(f32_to_f16_bits(mid), 0x0400, "subnormal → min normal carry");
+    }
+
+    #[test]
+    fn specials_map_to_canonical_bits() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        let n = f32_to_f16_bits(f32::NAN);
+        assert_eq!(n & 0x7c00, 0x7c00);
+        assert_ne!(n & 0x3ff, 0);
+    }
+
+    #[test]
+    fn property_roundtrip_idempotent_monotone_signed() {
+        crate::util::prop::quickcheck("f16 rounding laws", |g| {
+            // Random finite f32s spanning the whole exponent range.
+            let mut draw = |g: &mut crate::util::prop::Gen| -> f32 {
+                loop {
+                    let x = f32::from_bits(g.u64() as u32);
+                    if x.is_finite() {
+                        return x;
+                    }
+                }
+            };
+            let x = draw(g);
+            let y = draw(g);
+            let rx = round_f16(x);
+            // Idempotence: a rounded value is a fixed point.
+            if !rx.is_nan() && round_f16(rx).to_bits() != rx.to_bits() {
+                return Err(format!("not idempotent at {x} → {rx}"));
+            }
+            // Sign preservation (including signed zero).
+            if rx.is_sign_positive() != x.is_sign_positive() {
+                return Err(format!("sign flipped at {x}"));
+            }
+            // Monotonicity of round-to-nearest.
+            let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+            let (rlo, rhi) = (round_f16(lo), round_f16(hi));
+            if !(rlo <= rhi || rlo.is_nan() || rhi.is_nan()) {
+                return Err(format!("non-monotone: {lo}→{rlo} vs {hi}→{rhi}"));
+            }
+            // Relative error ≤ 2⁻¹¹ for values in f16's normal range.
+            let a = x.abs();
+            if (F16_MIN_POSITIVE..=F16_MAX).contains(&a) {
+                let err = ((rx - x) / x).abs();
+                if err > 1.0 / 2048.0 {
+                    return Err(format!("error {err} at {x}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn encode_decode_roundtrip() {
         let src: Vec<f32> = (0..257).map(|i| (i as f32 - 100.0) * 0.25).collect();
         let mut bytes = Vec::new();

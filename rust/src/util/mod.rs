@@ -1,11 +1,13 @@
 //! Small self-contained utilities that substitute for crates unavailable in
 //! the offline build environment (serde, half, proptest, env_logger).
 
+pub mod bench;
+pub mod compress;
 pub mod error;
 pub mod f16;
 pub mod json;
 pub mod logging;
-pub mod bench;
+pub mod num;
 pub mod prop;
 
 /// Round a f64 up to the next multiple of `m` (m > 0).

@@ -1,0 +1,202 @@
+//! Minimal float abstraction (num-traits is unavailable offline).
+//!
+//! The generic kernels (`linalg`, `tensor`, `sampler`) are written over a
+//! [`Float`] trait so the same code runs the f64 oracle and the f32/TF32
+//! production paths. This shim exposes exactly the surface those kernels
+//! use, implemented for `f32` and `f64`; the method names and `Option`
+//! signatures mirror `num_traits::Float`/`NumCast` so swapping the real
+//! crate back in is a one-line import change.
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// Floating-point scalar: `f32` or `f64`.
+pub trait Float:
+    Copy
+    + Clone
+    + PartialEq
+    + PartialOrd
+    + Neg<Output = Self>
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + AddAssign
+    + Send
+    + Sync
+    + 'static
+{
+    fn zero() -> Self;
+    fn one() -> Self;
+    /// Lossy conversion from any primitive float (mirrors `NumCast::from`).
+    fn from<S: Into<f64>>(v: S) -> Option<Self>;
+    fn to_f64(self) -> Option<f64>;
+    fn sqrt(self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn cos(self) -> Self;
+    fn sin(self) -> Self;
+    fn abs(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn powf(self, p: Self) -> Self;
+    fn floor(self) -> Self;
+    fn ceil(self) -> Self;
+    fn round(self) -> Self;
+    fn recip(self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn min(self, other: Self) -> Self;
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    fn is_finite(self) -> bool;
+    fn is_nan(self) -> bool;
+    fn epsilon() -> Self;
+    fn min_positive_value() -> Self;
+    fn max_value() -> Self;
+    fn infinity() -> Self;
+    fn neg_infinity() -> Self;
+    fn nan() -> Self;
+}
+
+macro_rules! impl_float {
+    ($t:ty) => {
+        impl Float for $t {
+            #[inline]
+            fn zero() -> Self {
+                0.0
+            }
+            #[inline]
+            fn one() -> Self {
+                1.0
+            }
+            #[inline]
+            fn from<S: Into<f64>>(v: S) -> Option<Self> {
+                Some(v.into() as $t)
+            }
+            #[inline]
+            fn to_f64(self) -> Option<f64> {
+                Some(self as f64)
+            }
+            #[inline]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline]
+            fn exp(self) -> Self {
+                <$t>::exp(self)
+            }
+            #[inline]
+            fn ln(self) -> Self {
+                <$t>::ln(self)
+            }
+            #[inline]
+            fn cos(self) -> Self {
+                <$t>::cos(self)
+            }
+            #[inline]
+            fn sin(self) -> Self {
+                <$t>::sin(self)
+            }
+            #[inline]
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            #[inline]
+            fn powi(self, n: i32) -> Self {
+                <$t>::powi(self, n)
+            }
+            #[inline]
+            fn powf(self, p: Self) -> Self {
+                <$t>::powf(self, p)
+            }
+            #[inline]
+            fn floor(self) -> Self {
+                <$t>::floor(self)
+            }
+            #[inline]
+            fn ceil(self) -> Self {
+                <$t>::ceil(self)
+            }
+            #[inline]
+            fn round(self) -> Self {
+                <$t>::round(self)
+            }
+            #[inline]
+            fn recip(self) -> Self {
+                <$t>::recip(self)
+            }
+            #[inline]
+            fn max(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            #[inline]
+            fn min(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+            #[inline]
+            fn mul_add(self, a: Self, b: Self) -> Self {
+                <$t>::mul_add(self, a, b)
+            }
+            #[inline]
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            #[inline]
+            fn is_nan(self) -> bool {
+                <$t>::is_nan(self)
+            }
+            #[inline]
+            fn epsilon() -> Self {
+                <$t>::EPSILON
+            }
+            #[inline]
+            fn min_positive_value() -> Self {
+                <$t>::MIN_POSITIVE
+            }
+            #[inline]
+            fn max_value() -> Self {
+                <$t>::MAX
+            }
+            #[inline]
+            fn infinity() -> Self {
+                <$t>::INFINITY
+            }
+            #[inline]
+            fn neg_infinity() -> Self {
+                <$t>::NEG_INFINITY
+            }
+            #[inline]
+            fn nan() -> Self {
+                <$t>::NAN
+            }
+        }
+    };
+}
+
+impl_float!(f32);
+impl_float!(f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poly<T: Float>(x: T) -> T {
+        // Exercise the generic surface the kernels rely on.
+        let two = T::from(2.0f64).unwrap();
+        (x * x + two).sqrt().max(T::one())
+    }
+
+    #[test]
+    fn generic_surface_works_for_both_widths() {
+        assert!((poly(1.0f64) - 3f64.sqrt()).abs() < 1e-12);
+        assert!((poly(1.0f32) - 3f32.sqrt()).abs() < 1e-6);
+        assert_eq!(<f32 as Float>::from(0.5f64).unwrap(), 0.5f32);
+        assert_eq!(1.5f64.to_f64().unwrap(), 1.5);
+        assert!(<f64 as Float>::nan().is_nan());
+        assert!(!<f32 as Float>::infinity().is_finite());
+    }
+
+    #[test]
+    fn constants_match_primitives() {
+        assert_eq!(<f32 as Float>::epsilon(), f32::EPSILON);
+        assert_eq!(<f64 as Float>::min_positive_value(), f64::MIN_POSITIVE);
+        assert_eq!(<f64 as Float>::max_value(), f64::MAX);
+    }
+}

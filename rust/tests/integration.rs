@@ -123,12 +123,12 @@ fn validation_slopes_near_one_through_full_stack() {
 }
 
 #[test]
-fn f16_store_zstd_full_pipeline() {
-    let dir = std::env::temp_dir().join(format!("fastmps-it-f16z-{}", std::process::id()));
+fn f16_store_lz_full_pipeline() {
+    let dir = std::env::temp_dir().join(format!("fastmps-it-f16lz-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     let spec = small_spec(10, 32, 0.0);
     let store = Arc::new(
-        GammaStore::create(&dir, &spec, StorePrecision::F16, StoreCodec::Zstd).unwrap(),
+        GammaStore::create(&dir, &spec, StorePrecision::F16, StoreCodec::Lz).unwrap(),
     );
     let cfg = base_cfg(&store, 256);
     let rep = data_parallel::run(&cfg, &store, &[]).unwrap();

@@ -1,0 +1,166 @@
+//! End-to-end service integration: `serve` loop × file transport ×
+//! coordinator engines × store cache, all through the public crate API —
+//! the `serve` → `submit` → results round trip of the service subsystem.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastmps::config::{ComputePrecision, Preset, RunConfig, ServiceConfig};
+use fastmps::coordinator::data_parallel;
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::service::api::{self, ServeOptions};
+use fastmps::service::{JobSpec, JobStatus, Service};
+use fastmps::util::json::Json;
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastmps-itsvc-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn make_store(root: &Path) -> (Arc<GammaStore>, PathBuf) {
+    let dir = root.join("store");
+    let mut spec = Preset::Jiuzhang2.scaled_spec(33);
+    spec.m = 6;
+    spec.chi_cap = 10;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.0;
+    let store =
+        Arc::new(GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap());
+    (store, dir)
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        n2_micro: 32,
+        target_batch: Some(256),
+        compute: ComputePrecision::F64,
+        linger_ms: 2,
+        poll_ms: 5,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn serve_submit_results_round_trip_with_shared_cache() {
+    let root = scratch("roundtrip");
+    let (store, store_dir) = make_store(&root);
+    let jobs_dir = root.join("jobs");
+
+    // Server in a background thread, drain mode: exits once all ingested
+    // work is finished.
+    let server = {
+        let cfg = service_cfg();
+        let opts = ServeOptions {
+            jobs_dir: jobs_dir.clone(),
+            poll_ms: 5,
+            drain: true,
+            max_secs: Some(120.0),
+        };
+        std::thread::spawn(move || api::serve(cfg, &opts))
+    };
+
+    // Two jobs against the SAME store, disjoint sample streams.
+    let spec_a = JobSpec::new(&store_dir, 96);
+    let mut spec_b = JobSpec::new(&store_dir, 96);
+    spec_b.sample_base = 96;
+    let stem_a = api::submit_file(&jobs_dir, &spec_a).unwrap();
+    let stem_b = api::submit_file(&jobs_dir, &spec_b).unwrap();
+
+    let res_a = api::wait_result(&jobs_dir, &stem_a, Duration::from_secs(60)).unwrap();
+    let res_b = api::wait_result(&jobs_dir, &stem_b, Duration::from_secs(60)).unwrap();
+    for (res, n) in [(&res_a, 96.0), (&res_b, 96.0)] {
+        assert_eq!(res.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(res.get("done").unwrap().as_f64(), Some(n));
+        assert_eq!(
+            res.get("mean_photons").unwrap().as_arr().unwrap().len(),
+            store.spec.m
+        );
+        assert!(res.get("latency_secs").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    let metrics = server.join().unwrap().unwrap();
+    // Acceptance: the two jobs shared one cached GammaStore.
+    let counters = metrics.get("run").unwrap().get("counters").unwrap();
+    let hits = counters.get("cache_hits").unwrap().as_f64().unwrap();
+    let misses = counters.get("cache_misses").unwrap().as_f64().unwrap();
+    assert!(hits > 0.0, "cache hits {hits} (misses {misses})");
+    assert_eq!(misses, 1.0, "exactly one physical store open");
+    assert!(metrics.get("cache_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+
+    // The on-disk metrics file matches what serve returned.
+    let on_disk = std::fs::read_to_string(jobs_dir.join("service_metrics.json")).unwrap();
+    assert_eq!(Json::parse(&on_disk).unwrap(), metrics);
+
+    // Status files reached terminal state too.
+    let listed = api::list_jobs(&jobs_dir).unwrap();
+    assert_eq!(listed.len(), 2);
+    for (stem, j) in &listed {
+        assert_eq!(j.get("status").unwrap().as_str(), Some("done"), "{stem}");
+    }
+
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn service_statistics_match_one_shot_coordinator() {
+    // A job through the full service must produce exactly the histogram a
+    // one-shot `data_parallel::run` produces for the same sample range.
+    let root = scratch("oracle");
+    let (store, store_dir) = make_store(&root);
+    let svc = Service::start(service_cfg()).unwrap();
+    let id = svc.submit(JobSpec::new(&store_dir, 160)).unwrap();
+    assert_eq!(svc.wait(id, Duration::from_secs(60)), Some(JobStatus::Done));
+    let sink = svc.queue().job_sink(id).unwrap();
+    drop(svc);
+
+    let mut rc = RunConfig::new(store.spec.clone());
+    rc.n_samples = 160;
+    rc.n1_macro = 160;
+    rc.n2_micro = 32;
+    rc.compute = ComputePrecision::F64;
+    rc.store_precision = store.precision;
+    let reference = data_parallel::run(&rc, &store, &[]).unwrap();
+    assert_eq!(sink.hist, reference.sink.hist);
+    assert_eq!(sink.pair_sums, reference.sink.pair_sums);
+
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn mixed_store_traffic_is_batched_separately_but_served() {
+    // Jobs against two different stores interleave; each gets its own
+    // batches and both complete correctly.
+    let root = scratch("mixed");
+    let (_, dir_a) = make_store(&root);
+    let dir_b = root.join("store-b");
+    let mut spec = Preset::Jiuzhang3H.scaled_spec(44);
+    spec.m = 5;
+    spec.chi_cap = 8;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.0;
+    GammaStore::create(&dir_b, &spec, StorePrecision::F16, StoreCodec::Lz).unwrap();
+
+    let svc = Service::start(service_cfg()).unwrap();
+    let ids: Vec<_> = (0..4)
+        .map(|k| {
+            let dir = if k % 2 == 0 { &dir_a } else { &dir_b };
+            let mut s = JobSpec::new(dir, 40);
+            s.sample_base = (k as u64 / 2) * 40;
+            svc.submit(s).unwrap()
+        })
+        .collect();
+    for id in ids {
+        assert_eq!(
+            svc.wait(id, Duration::from_secs(60)),
+            Some(JobStatus::Done),
+            "job {id}"
+        );
+    }
+    assert_eq!(svc.cache().misses(), 2, "two distinct stores opened");
+    drop(svc);
+    std::fs::remove_dir_all(&root).unwrap();
+}
