@@ -1,0 +1,139 @@
+//! Loopback throughput of the TCP transport: submit→stream round trips
+//! through a real `NetServer` + `net::client::Client`, reporting job
+//! round-trip rate, frames/s, and payload MB/s, written to
+//! `BENCH_net.json`.
+//!
+//! Run with `cargo bench --bench bench_net` from `rust/`.
+
+use std::time::{Duration, Instant};
+
+use fastmps::config::{ComputePrecision, NetConfig, Preset, ServiceConfig};
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::net::{Client, NetServer};
+use fastmps::service::JobSpec;
+use fastmps::util::bench;
+use fastmps::util::json::Json;
+
+const JOBS: usize = 24;
+const SAMPLES_PER_JOB: u64 = 500;
+
+fn main() {
+    bench::header("net", "loopback submit→stream throughput (FMPN/TCP)");
+
+    let root = std::env::temp_dir().join(format!("fastmps-bench-net-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let store_dir = root.join("store");
+    let mut spec = Preset::Jiuzhang2.scaled_spec(7);
+    spec.m = 10;
+    spec.chi_cap = 16;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.0;
+    GammaStore::create(&store_dir, &spec, StorePrecision::F16, StoreCodec::Lz).unwrap();
+
+    let cfg = ServiceConfig {
+        workers: 2,
+        n2_micro: 128,
+        target_batch: Some(1024),
+        compute: ComputePrecision::F32,
+        linger_ms: 2,
+        ..Default::default()
+    };
+    let net = NetConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    };
+    let server = NetServer::start(cfg, net.clone()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr, &net).unwrap();
+
+    let t0 = Instant::now();
+    let ids: Vec<_> = (0..JOBS)
+        .map(|k| {
+            let mut s = JobSpec::new(&store_dir, SAMPLES_PER_JOB);
+            s.sample_base = k as u64 * SAMPLES_PER_JOB;
+            s.tag = format!("bench-net-{k}");
+            client.submit(&s).unwrap()
+        })
+        .collect();
+    let mut streamed = 0usize;
+    for id in ids {
+        let res = client
+            .wait(id, Duration::from_secs(300))
+            .unwrap()
+            .expect("job terminal within bench timeout");
+        if res.sink.is_some() {
+            streamed += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = client.shutdown_server(Duration::from_secs(300)).unwrap();
+    drop(client);
+    let _ = server.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+
+    let counter = |k: &str| {
+        metrics
+            .get("net")
+            .and_then(|n| n.get("counters"))
+            .and_then(|c| c.get(k))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    let frames = counter("net_frames_in") + counter("net_frames_out");
+    let bytes = counter("net_bytes_in") + counter("net_bytes_out");
+    let total_samples = (JOBS as f64) * (SAMPLES_PER_JOB as f64);
+    let j = Json::obj(vec![
+        ("bench", Json::Str("net-loopback".into())),
+        ("jobs", Json::Num(JOBS as f64)),
+        ("samples_per_job", Json::Num(SAMPLES_PER_JOB as f64)),
+        ("payloads_streamed", Json::Num(streamed as f64)),
+        ("wall_secs", Json::Num(wall)),
+        (
+            "jobs_per_sec",
+            Json::Num(if wall > 0.0 { JOBS as f64 / wall } else { 0.0 }),
+        ),
+        (
+            "samples_per_sec",
+            Json::Num(if wall > 0.0 { total_samples / wall } else { 0.0 }),
+        ),
+        (
+            "frames_per_sec",
+            Json::Num(if wall > 0.0 { frames / wall } else { 0.0 }),
+        ),
+        (
+            "wire_mb_per_sec",
+            Json::Num(if wall > 0.0 { bytes / wall / 1e6 } else { 0.0 }),
+        ),
+        ("wire_bytes", Json::Num(bytes)),
+        ("wire_frames", Json::Num(frames)),
+        ("service", metrics),
+    ]);
+
+    bench::row(&[
+        ("jobs", format!("{JOBS}")),
+        ("streamed", format!("{streamed}")),
+        ("wall_secs", format!("{wall:.3}")),
+        (
+            "jobs_per_sec",
+            format!("{:.1}", j.get("jobs_per_sec").unwrap().as_f64().unwrap()),
+        ),
+        (
+            "frames_per_sec",
+            format!("{:.1}", j.get("frames_per_sec").unwrap().as_f64().unwrap()),
+        ),
+        (
+            "wire_mb_per_sec",
+            format!("{:.3}", j.get("wire_mb_per_sec").unwrap().as_f64().unwrap()),
+        ),
+    ]);
+    bench::paper("no paper counterpart — transport KPIs for the ROADMAP north star");
+
+    std::fs::write("../BENCH_net.json", j.pretty())
+        .or_else(|_| {
+            // Fall back to CWD when not run from `rust/`.
+            std::fs::write("BENCH_net.json", j.pretty())
+        })
+        .unwrap();
+    println!("  wrote BENCH_net.json");
+}

@@ -5,7 +5,10 @@ use std::sync::Arc;
 
 use super::args::Args;
 use crate::comm::NetPreset;
-use crate::config::{ComputePrecision, EngineKind, Preset, RunConfig, ScalingMode, ServiceConfig};
+use crate::config::{
+    ComputePrecision, EngineKind, NetConfig, Preset, RunConfig, ScalingMode, ServiceConfig,
+};
+use crate::net::{Client, NetServer};
 use crate::coordinator::{data_parallel, model_parallel, tensor_parallel};
 use crate::io::{GammaStore, StoreCodec, StorePrecision};
 use crate::mps::gbs::GbsSpec;
@@ -36,17 +39,26 @@ COMMANDS:
               [--net P] [--bytes B] [--p2 N]
   info        Describe a store
               --data DIR
-  serve       Run the resident batched sampling service on a job directory
-              --jobs DIR [--workers N] [--max-queue N] [--max-samples N]
+  serve       Run the resident batched sampling service
+              --jobs DIR | --listen ADDR   (file transport | TCP transport)
+              [--workers N] [--max-queue N] [--max-samples N]
               [--cache N] [--linger-ms N] [--poll-ms N] [--n2 N]
               [--target-batch N] [--compute C] [--scaling S] [--engine E]
               [--threads N] [--disk-bw BPS] [--artifacts DIR]
-              [--drain] [--max-seconds S] [--json]
+              [--max-seconds S] [--json]
+              file only: [--drain]
+              tcp only:  [--max-conns N] [--frame-mb N]
+                         [--read-timeout-ms N] [--write-timeout-ms N]
   submit      Submit a sampling job to a running serve instance
-              --jobs DIR --data STORE --samples N [--sample-base B]
-              [--compute C] [--tag T] [--wait] [--timeout-s S] [--json]
-  jobs        List job statuses under a job directory
-              --jobs DIR [--json]
+              (--jobs DIR | --connect ADDR) --data STORE --samples N
+              [--sample-base B] [--compute C] [--tag T] [--wait]
+              [--timeout-s S] [--poll-ms N] [--json]
+  jobs        List job statuses (job directory or TCP server)
+              (--jobs DIR | --connect ADDR) [--json]
+  metrics     Fetch live service + net metrics from a TCP server
+              --connect ADDR
+  stop        Gracefully drain and stop a TCP server, print final metrics
+              --connect ADDR [--timeout-s S] [--json]
   bench-service  Smoke-benchmark the service path, emit KPI JSON
               [--n-jobs N] [--samples N] [--out FILE]
   help        This text
@@ -68,6 +80,8 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
         "jobs" => cmd_jobs(&args),
+        "metrics" => cmd_metrics(&args),
+        "stop" => cmd_stop(&args),
         "bench-service" => cmd_bench_service(&args),
         other => Err(Error::config(format!(
             "unknown command '{other}' (try 'fastmps help')"
@@ -361,7 +375,25 @@ fn service_config_from_args(args: &Args) -> Result<ServiceConfig> {
     })
 }
 
+fn net_config_from_args(args: &Args, addr: String) -> Result<NetConfig> {
+    let d = NetConfig::default();
+    Ok(NetConfig {
+        addr,
+        max_conns: args.usize_or("max-conns", d.max_conns)?,
+        max_frame_bytes: args.usize_or("frame-mb", d.max_frame_bytes >> 20)? << 20,
+        read_timeout_ms: args.u64_or("read-timeout-ms", d.read_timeout_ms)?,
+        write_timeout_ms: args.u64_or("write-timeout-ms", d.write_timeout_ms)?,
+    })
+}
+
+fn connect(addr: &str) -> Result<Client> {
+    Client::connect(addr, &NetConfig::default())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.str_opt("listen").map(String::from) {
+        return cmd_serve_net(args, addr);
+    }
     let jobs_dir = PathBuf::from(args.req("jobs")?);
     let cfg = service_config_from_args(args)?;
     let mut opts = crate::service::api::ServeOptions::new(&jobs_dir);
@@ -398,8 +430,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_submit(args: &Args) -> Result<()> {
-    let jobs_dir = PathBuf::from(args.req("jobs")?);
+fn cmd_serve_net(args: &Args, addr: String) -> Result<()> {
+    let cfg = service_config_from_args(args)?;
+    let net = net_config_from_args(args, addr)?;
+    let max_secs = args.f64_opt("max-seconds")?;
+    let as_json = args.flag("json");
+    args.finish()?;
+    let server = NetServer::start(cfg, net)?;
+    let addr = server.local_addr();
+    println!("listening on {addr} (stop: fastmps stop --connect {addr})");
+    server.run_until_shutdown(max_secs);
+    let metrics = server.shutdown();
+    if as_json {
+        println!("{}", metrics.pretty());
+    } else {
+        let counter = |k: &str| {
+            metrics
+                .get("net")
+                .and_then(|n| n.get("counters"))
+                .and_then(|c| c.get(k))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        println!(
+            "served on {addr}; {} conns | {} frames in / {} out | {} busy rejects",
+            counter("net_conns"),
+            counter("net_frames_in"),
+            counter("net_frames_out"),
+            counter("net_rejects_busy") + counter("net_rejects_conn"),
+        );
+    }
+    Ok(())
+}
+
+fn job_spec_from_args(args: &Args) -> Result<crate::service::JobSpec> {
     let samples: u64 = {
         let v = args.req("samples")?;
         v.parse()
@@ -413,48 +477,109 @@ fn cmd_submit(args: &Args) -> Result<()> {
         Some(c) => Some(ComputePrecision::parse(c)?),
     };
     spec.tag = args.str_or("tag", "");
+    Ok(spec)
+}
+
+fn print_result(label: &str, result: &Json, as_json: bool) {
+    if as_json {
+        println!("{}", result.pretty());
+        return;
+    }
+    let status = result
+        .get("status")
+        .and_then(|v| v.as_str())
+        .unwrap_or("?");
+    let mean = result.get("total_mean_photons").and_then(|v| v.as_f64());
+    match (status, mean) {
+        ("done", Some(m)) => println!("{label}: done, total⟨n⟩={m:.4}"),
+        _ => println!(
+            "{label}: {status}{}",
+            result
+                .get("error")
+                .and_then(|v| v.as_str())
+                .map(|e| format!(" ({e})"))
+                .unwrap_or_default()
+        ),
+    }
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let connect_to = args.str_opt("connect").map(String::from);
+    let spec = job_spec_from_args(args)?;
     let wait = args.flag("wait");
     let timeout = args.f64_opt("timeout-s")?.unwrap_or(300.0);
+    let poll_ms = args.u64_or("poll-ms", 20)?;
     let as_json = args.flag("json");
+
+    if let Some(addr) = connect_to {
+        args.finish()?;
+        let mut client = connect(&addr)?;
+        let id = client.submit(&spec)?;
+        if !wait {
+            println!("submitted job {id} ({} samples) to {addr}", spec.n_samples);
+            return Ok(());
+        }
+        let label = format!("job {id}");
+        match client.wait(id, std::time::Duration::from_secs_f64(timeout))? {
+            Some(res) => {
+                print_result(&label, &res.result, as_json);
+                if let (false, Some(sink)) = (as_json, &res.sink) {
+                    println!(
+                        "  streamed sample block: {} samples over {} sites",
+                        sink.total_samples(),
+                        sink.m
+                    );
+                }
+            }
+            None => println!("{label}: still running after {timeout}s"),
+        }
+        return Ok(());
+    }
+
+    let jobs_dir = PathBuf::from(args.req("jobs")?);
     args.finish()?;
     let stem = crate::service::api::submit_file(&jobs_dir, &spec)?;
     if !wait {
         println!("submitted {stem} ({} samples)", spec.n_samples);
         return Ok(());
     }
-    let result = crate::service::api::wait_result(
+    let result = crate::service::api::wait_result_poll(
         &jobs_dir,
         &stem,
         std::time::Duration::from_secs_f64(timeout),
+        poll_ms,
     )?;
-    if as_json {
-        println!("{}", result.pretty());
-    } else {
-        let status = result
-            .get("status")
-            .and_then(|v| v.as_str())
-            .unwrap_or("?");
-        let mean = result
-            .get("total_mean_photons")
-            .and_then(|v| v.as_f64());
-        match (status, mean) {
-            ("done", Some(m)) => println!("{stem}: done, total⟨n⟩={m:.4}"),
-            _ => println!(
-                "{stem}: {status}{}",
-                result
-                    .get("error")
-                    .and_then(|v| v.as_str())
-                    .map(|e| format!(" ({e})"))
-                    .unwrap_or_default()
-            ),
-        }
-    }
+    print_result(&stem, &result, as_json);
     Ok(())
 }
 
 fn cmd_jobs(args: &Args) -> Result<()> {
-    let jobs_dir = PathBuf::from(args.req("jobs")?);
+    let connect_to = args.str_opt("connect").map(String::from);
     let as_json = args.flag("json");
+    if let Some(addr) = connect_to {
+        args.finish()?;
+        let listed = connect(&addr)?.list()?;
+        if as_json {
+            println!("{}", listed.pretty());
+            return Ok(());
+        }
+        let jobs = listed.as_arr().unwrap_or(&[]);
+        if jobs.is_empty() {
+            println!("no jobs on {addr}");
+            return Ok(());
+        }
+        for j in jobs {
+            println!(
+                "job {}  {}  {}/{}",
+                j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                j.get("status").and_then(|v| v.as_str()).unwrap_or("?"),
+                j.get("done").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                j.get("samples").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+        }
+        return Ok(());
+    }
+    let jobs_dir = PathBuf::from(args.req("jobs")?);
     args.finish()?;
     let jobs = crate::service::api::list_jobs(&jobs_dir)?;
     if as_json {
@@ -473,6 +598,35 @@ fn cmd_jobs(args: &Args) -> Result<()> {
             j.get("done").and_then(|v| v.as_f64()).unwrap_or(0.0),
             j.get("samples").and_then(|v| v.as_f64()).unwrap_or(0.0),
         );
+    }
+    Ok(())
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let addr = args.req("connect")?.to_string();
+    args.finish()?;
+    let metrics = connect(&addr)?.metrics()?;
+    println!("{}", metrics.pretty());
+    Ok(())
+}
+
+fn cmd_stop(args: &Args) -> Result<()> {
+    let addr = args.req("connect")?.to_string();
+    let timeout = args.f64_opt("timeout-s")?.unwrap_or(600.0);
+    let as_json = args.flag("json");
+    args.finish()?;
+    let metrics = connect(&addr)?
+        .shutdown_server(std::time::Duration::from_secs_f64(timeout))?;
+    if as_json {
+        println!("{}", metrics.pretty());
+    } else {
+        let jobs = metrics
+            .get("run")
+            .and_then(|r| r.get("counters"))
+            .and_then(|c| c.get("jobs_completed"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        println!("{addr} drained and stopped ({jobs} jobs completed)");
     }
     Ok(())
 }
@@ -572,6 +726,44 @@ mod tests {
         server.join().unwrap().unwrap();
         run_cli(&argv(&format!("jobs --jobs {}", jobs.display()))).unwrap();
         assert!(jobs.join("service_metrics.json").exists());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn net_cli_commands_round_trip() {
+        let root = std::env::temp_dir().join(format!("fastmps-cli-net-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let store = root.join("store");
+        run_cli(&argv(&format!(
+            "gen-data --m 5 --chi 8 --d 3 --out {} --decay 0 --sigma 0",
+            store.display()
+        )))
+        .unwrap();
+        let cfg = ServiceConfig {
+            workers: 2,
+            n2_micro: 32,
+            target_batch: Some(128),
+            compute: ComputePrecision::F64,
+            linger_ms: 2,
+            ..Default::default()
+        };
+        let net = NetConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let server = NetServer::start(cfg, net).unwrap();
+        let addr = server.local_addr().to_string();
+        run_cli(&argv(&format!(
+            "submit --connect {addr} --data {} --samples 64 --wait --timeout-s 60 --json",
+            store.display()
+        )))
+        .unwrap();
+        run_cli(&argv(&format!("jobs --connect {addr}"))).unwrap();
+        run_cli(&argv(&format!("metrics --connect {addr}"))).unwrap();
+        run_cli(&argv(&format!("stop --connect {addr}"))).unwrap();
+        assert!(server.shutdown_requested());
+        drop(server);
         std::fs::remove_dir_all(&root).unwrap();
     }
 

@@ -348,6 +348,67 @@ impl ServiceConfig {
     }
 }
 
+/// Configuration of the TCP transport (`net::server` / `net::client`,
+/// `fastmps serve --listen` / `--connect`). One struct serves both sides:
+/// the server reads `addr` as the listen address and `max_conns` as its
+/// connection-pool bound; clients read `addr` as the default connect
+/// target; the frame cap and timeouts apply to both.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Listen/connect address, `host:port` (port 0 = ephemeral).
+    pub addr: String,
+    /// Server-side bound on concurrent connections; further connects get
+    /// a typed `busy` frame and are closed.
+    pub max_conns: usize,
+    /// Cap on a single frame's payload length, enforced before allocating.
+    pub max_frame_bytes: usize,
+    /// Socket read timeout — the server's idle-poll tick and the client's
+    /// per-RPC reply deadline.
+    pub read_timeout_ms: u64,
+    /// Socket write timeout (slow-peer guard).
+    pub write_timeout_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            addr: "127.0.0.1:7733".into(),
+            max_conns: 64,
+            max_frame_bytes: 64 << 20,
+            read_timeout_ms: 2000,
+            write_timeout_ms: 10_000,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.addr.is_empty() {
+            return Err(Error::config("net: addr must not be empty"));
+        }
+        if self.max_conns == 0 {
+            return Err(Error::config("net: max_conns must be ≥ 1"));
+        }
+        if self.max_frame_bytes < 1024 {
+            return Err(Error::config("net: max_frame_bytes must be ≥ 1024"));
+        }
+        if self.read_timeout_ms == 0 || self.write_timeout_ms == 0 {
+            return Err(Error::config("net: timeouts must be ≥ 1 ms"));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("addr", Json::Str(self.addr.clone())),
+            ("max_conns", Json::Num(self.max_conns as f64)),
+            ("max_frame_bytes", Json::Num(self.max_frame_bytes as f64)),
+            ("read_timeout_ms", Json::Num(self.read_timeout_ms as f64)),
+            ("write_timeout_ms", Json::Num(self.write_timeout_ms as f64)),
+        ])
+    }
+}
+
 /// Paper datasets (Table 1). `scale` shrinks (M, χ) to CPU-testbed size
 /// while keeping ASP (and hence the dynamic-χ profile shape) intact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -510,6 +571,33 @@ mod tests {
         assert!(s.validate().is_err());
         let j = ServiceConfig::default().to_json();
         assert_eq!(j.get("engine").unwrap().as_str(), Some("native"));
+    }
+
+    #[test]
+    fn net_config_validation() {
+        let n = NetConfig::default();
+        n.validate().unwrap();
+        assert_eq!(n.to_json().get("max_conns").unwrap().as_usize(), Some(64));
+        let bad = NetConfig {
+            max_conns: 0,
+            ..NetConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = NetConfig {
+            max_frame_bytes: 16,
+            ..NetConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = NetConfig {
+            addr: String::new(),
+            ..NetConfig::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = NetConfig {
+            read_timeout_ms: 0,
+            ..NetConfig::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -18,6 +18,9 @@
 //!   queue + store cache + §3.1-sized batcher + worker pool — behind
 //!   `fastmps serve`/`submit`/`jobs`, amortizing store opens, Γ streaming
 //!   and engine construction across requests.
+//! - **Net (`net`)**: the service's TCP transport — the versioned FMPN
+//!   wire protocol (`docs/PROTOCOL.md`), a bounded-pool server, and a
+//!   blocking client — behind `serve --listen` / `submit --connect`.
 
 pub mod cli;
 pub mod comm;
@@ -27,6 +30,7 @@ pub mod io;
 pub mod linalg;
 pub mod metrics;
 pub mod mps;
+pub mod net;
 pub mod perfmodel;
 pub mod rng;
 pub mod runtime;

@@ -49,6 +49,20 @@ pub mod keys {
     pub const BATCH_TARGET_ROWS: &str = "batch_target_rows";
     /// High-water mark of the job queue (gauge via [`Metrics::set_max`]).
     pub const QUEUE_PEAK: &str = "queue_peak";
+
+    // Net-transport counters (`net::server`).
+    pub const NET_BYTES_IN: &str = "net_bytes_in";
+    pub const NET_BYTES_OUT: &str = "net_bytes_out";
+    pub const NET_FRAMES_IN: &str = "net_frames_in";
+    pub const NET_FRAMES_OUT: &str = "net_frames_out";
+    /// Connections accepted over the server's lifetime.
+    pub const NET_CONNS: &str = "net_conns";
+    /// High-water mark of concurrent connections (gauge).
+    pub const NET_CONN_PEAK: &str = "net_conn_peak";
+    /// Connections turned away at the `max_conns` pool bound.
+    pub const NET_REJECTS_CONN: &str = "net_rejects_conn";
+    /// Submissions rejected with a typed `busy` frame (admission full).
+    pub const NET_REJECTS_BUSY: &str = "net_rejects_busy";
 }
 
 impl Metrics {

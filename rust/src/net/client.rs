@@ -1,0 +1,242 @@
+//! Blocking client for the FMPN protocol: connect / submit / wait /
+//! stream. Used by the CLI (`--connect`) and the integration tests;
+//! embeddable anywhere a `std::net::TcpStream` can reach a server.
+//!
+//! Requests on one connection are strictly sequential (send a control
+//! frame, read the reply, optionally read a payload frame), so a single
+//! `Client` is `&mut self` throughout and needs no internal locking.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::frame::{self, Frame, FrameReader, FrameWriter};
+use crate::config::NetConfig;
+use crate::sampler::sink::SampleSink;
+use crate::service::{JobId, JobSpec};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// A terminal job's result: the JSON summary and, when the server has
+/// sample statistics for the job, the decoded [`SampleSink`].
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub result: Json,
+    pub sink: Option<SampleSink>,
+}
+
+/// One connection to a [`super::server::NetServer`].
+pub struct Client {
+    stream: TcpStream,
+    reader: FrameReader<BufReader<TcpStream>>,
+    writer: FrameWriter<BufWriter<TcpStream>>,
+    read_timeout_ms: u64,
+}
+
+impl Client {
+    /// Connect and exchange preambles. `net.addr` is ignored — the
+    /// explicit `addr` wins — but the frame cap and timeouts apply.
+    pub fn connect(addr: &str, net: &NetConfig) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| Error::io(format!("connect {addr}"), e))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_write_timeout(Some(Duration::from_millis(net.write_timeout_ms.max(1))))
+            .map_err(|e| Error::io("set_write_timeout", e))?;
+        let read_half = stream.try_clone().map_err(|e| Error::io("clone stream", e))?;
+        let mut c = Client {
+            reader: FrameReader::new(BufReader::new(read_half), net.max_frame_bytes),
+            writer: FrameWriter::new(BufWriter::new(stream.try_clone().map_err(
+                |e| Error::io("clone stream", e),
+            )?)),
+            stream,
+            read_timeout_ms: net.read_timeout_ms,
+        };
+        c.set_read_timeout(c.read_timeout_ms)?;
+        c.writer.write_preamble()?;
+        c.reader.read_preamble()?;
+        Ok(c)
+    }
+
+    fn set_read_timeout(&mut self, ms: u64) -> Result<()> {
+        self.stream
+            .set_read_timeout(Some(Duration::from_millis(ms.max(1))))
+            .map_err(|e| Error::io("set_read_timeout", e))
+    }
+
+    /// Send `msg`, read one control reply. A `busy` reply becomes
+    /// [`Error::Busy`]; any `ok:false` reply becomes an error.
+    fn rpc(&mut self, msg: &Json) -> Result<Json> {
+        self.writer.write_ctrl(msg)?;
+        self.read_ctrl()
+    }
+
+    fn read_ctrl(&mut self) -> Result<Json> {
+        match self.reader.read_frame()? {
+            Frame::Ctrl(j) => Self::check(j),
+            Frame::Payload(_) => Err(Error::format(
+                "net wire: unexpected payload frame (expected control reply)",
+            )),
+        }
+    }
+
+    fn check(j: Json) -> Result<Json> {
+        let ok = j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
+        if ok {
+            return Ok(j);
+        }
+        let err = j
+            .get("error")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unspecified server error")
+            .to_string();
+        if j.get("type").and_then(|v| v.as_str()) == Some("busy") {
+            Err(Error::Busy(err))
+        } else {
+            Err(Error::other(format!("server: {err}")))
+        }
+    }
+
+    fn expect(j: &Json, kind: &str) -> Result<()> {
+        match j.get("type").and_then(|v| v.as_str()) {
+            Some(t) if t == kind => Ok(()),
+            t => Err(Error::format(format!(
+                "net wire: expected '{kind}' reply, got {t:?}"
+            ))),
+        }
+    }
+
+    /// Round-trip liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        let r = self.rpc(&Json::obj(vec![("op", Json::Str("ping".into()))]))?;
+        Self::expect(&r, "pong")
+    }
+
+    /// Submit a job; returns the server-side job id, or [`Error::Busy`]
+    /// when admission control rejected it (back off and retry).
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<JobId> {
+        let r = self.rpc(&Json::obj(vec![
+            ("op", Json::Str("submit".into())),
+            ("job", spec.to_json()),
+        ]))?;
+        Self::expect(&r, "submitted")?;
+        r.get("id")
+            .and_then(|v| v.as_f64())
+            .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+            .map(|v| v as JobId)
+            .ok_or_else(|| Error::format("net wire: submitted reply without id"))
+    }
+
+    /// Current status snapshot of `id` (the `JobView` JSON).
+    pub fn status(&mut self, id: JobId) -> Result<Json> {
+        let r = self.rpc(&Json::obj(vec![
+            ("op", Json::Str("status".into())),
+            ("id", Json::Num(id as f64)),
+        ]))?;
+        Self::expect(&r, "status")?;
+        r.get("job")
+            .cloned()
+            .ok_or_else(|| Error::format("net wire: status reply without job"))
+    }
+
+    /// Block (server side) until `id` is terminal or `timeout` passes.
+    /// `Ok(Some(result))` streams the result — including the binary
+    /// sample-block payload when present — `Ok(None)` means the job was
+    /// still running when the timeout hit. Timeouts beyond the server's
+    /// 600 s per-request cap are honored by re-issuing the wait until
+    /// the full deadline passes.
+    pub fn wait(&mut self, id: JobId, timeout: Duration) -> Result<Option<JobResult>> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if let Some(res) = self.wait_once(id, remaining.min(Duration::from_secs(600)))? {
+                return Ok(Some(res));
+            }
+            if std::time::Instant::now() >= deadline {
+                return Ok(None);
+            }
+            // Server-side 600 s per-request cap hit; re-issue for the rest.
+        }
+    }
+
+    fn wait_once(&mut self, id: JobId, timeout: Duration) -> Result<Option<JobResult>> {
+        let timeout_ms = timeout.as_millis().min(600_000) as u64;
+        // The server blocks for up to timeout_ms before replying; widen
+        // the socket timeout so a quiet-but-working wait is not an error.
+        self.set_read_timeout(timeout_ms + self.read_timeout_ms.max(1000))?;
+        let outcome: Result<Option<JobResult>> = (|| {
+            let r = self.rpc(&Json::obj(vec![
+                ("op", Json::Str("wait".into())),
+                ("id", Json::Num(id as f64)),
+                ("timeout_ms", Json::Num(timeout_ms as f64)),
+            ]))?;
+            match r.get("type").and_then(|v| v.as_str()) {
+                Some("status") => Ok(None),
+                Some("result") => {
+                    let result = r
+                        .get("result")
+                        .cloned()
+                        .ok_or_else(|| Error::format("net wire: result reply without result"))?;
+                    let sink = if r.get("payload").and_then(|v| v.as_bool()) == Some(true) {
+                        match self.reader.read_frame()? {
+                            Frame::Payload(p) => Some(frame::unpack_sink(&p)?),
+                            Frame::Ctrl(_) => {
+                                return Err(Error::format(
+                                    "net wire: expected payload frame after result",
+                                ));
+                            }
+                        }
+                    } else {
+                        None
+                    };
+                    Ok(Some(JobResult { result, sink }))
+                }
+                t => Err(Error::format(format!(
+                    "net wire: unexpected wait reply type {t:?}"
+                ))),
+            }
+        })();
+        self.set_read_timeout(self.read_timeout_ms)?;
+        outcome
+    }
+
+    /// Cancel a live job (terminal jobs are left as they ended).
+    pub fn cancel(&mut self, id: JobId) -> Result<()> {
+        let r = self.rpc(&Json::obj(vec![
+            ("op", Json::Str("cancel".into())),
+            ("id", Json::Num(id as f64)),
+        ]))?;
+        Self::expect(&r, "cancelled")
+    }
+
+    /// All jobs the server retains, sorted by (submit time, id).
+    pub fn list(&mut self) -> Result<Json> {
+        let r = self.rpc(&Json::obj(vec![("op", Json::Str("list".into()))]))?;
+        Self::expect(&r, "jobs")?;
+        r.get("jobs")
+            .cloned()
+            .ok_or_else(|| Error::format("net wire: jobs reply without jobs"))
+    }
+
+    /// Service + net metrics snapshot.
+    pub fn metrics(&mut self) -> Result<Json> {
+        let r = self.rpc(&Json::obj(vec![("op", Json::Str("metrics".into()))]))?;
+        Self::expect(&r, "metrics")?;
+        r.get("metrics")
+            .cloned()
+            .ok_or_else(|| Error::format("net wire: metrics reply without metrics"))
+    }
+
+    /// Ask the server to drain in-flight jobs and stop; returns its final
+    /// metrics. The reply only arrives once the drain completes, so this
+    /// can block for as long as the queued work takes.
+    pub fn shutdown_server(&mut self, drain_timeout: Duration) -> Result<Json> {
+        let ms = drain_timeout.as_millis().min(u128::from(u64::MAX)) as u64;
+        self.set_read_timeout(ms.max(1000))?;
+        let r = self.rpc(&Json::obj(vec![("op", Json::Str("shutdown".into()))]))?;
+        Self::expect(&r, "shutdown")?;
+        r.get("metrics")
+            .cloned()
+            .ok_or_else(|| Error::format("net wire: shutdown reply without metrics"))
+    }
+}

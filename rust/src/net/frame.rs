@@ -1,0 +1,492 @@
+//! The FMPN wire format: preamble, varint-framed messages, sink payloads.
+//!
+//! A connection starts with a 5-byte preamble in each direction (4-byte
+//! magic `FMPN` + 1-byte protocol version); both sides send eagerly and
+//! validate what the peer sent, so the handshake cannot deadlock. After
+//! the preamble the stream is a sequence of frames:
+//!
+//! ```text
+//! frame := type:u8 | len:varint(LEB128) | payload[len]
+//! ```
+//!
+//! Two frame types exist in version 1:
+//! - [`FRAME_CTRL`] — one NDJSON control message (a single JSON object,
+//!   UTF-8; see `docs/PROTOCOL.md` for the op vocabulary);
+//! - [`FRAME_PAYLOAD`] — a binary sample block: an encoded [`SampleSink`]
+//!   run through `util::compress`, so results stream back without
+//!   JSON-escaping tensors.
+//!
+//! Readers enforce a frame-size cap (`NetConfig::max_frame_bytes`) before
+//! allocating, and every decode validates lengths, so a corrupt or
+//! malicious stream errors instead of exhausting memory or panicking.
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::sampler::sink::SampleSink;
+use crate::util::compress;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Wire magic: "FastMPS Net".
+pub const MAGIC: [u8; 4] = *b"FMPN";
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+
+/// Frame type: NDJSON control message.
+pub const FRAME_CTRL: u8 = 1;
+/// Frame type: binary sample-block payload.
+pub const FRAME_PAYLOAD: u8 = 2;
+
+/// A decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// One JSON control message.
+    Ctrl(Json),
+    /// One compressed sample block (still packed; see [`unpack_sink`]).
+    Payload(Vec<u8>),
+}
+
+fn wire_err(msg: impl std::fmt::Display) -> Error {
+    Error::Format(format!("net wire: {msg}"))
+}
+
+fn io_wire(ctx: &str, e: std::io::Error) -> Error {
+    Error::io(format!("net wire ({ctx})"), e)
+}
+
+/// True when an I/O error is a read timeout (idle socket), not a failure.
+pub fn is_timeout(e: &Error) -> bool {
+    match e {
+        Error::Io { source, .. } => {
+            matches!(source.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+        }
+        _ => false,
+    }
+}
+
+/// Send our preamble (magic + version).
+pub fn write_preamble<W: Write>(w: &mut W) -> Result<()> {
+    w.write_all(&MAGIC).map_err(|e| io_wire("preamble", e))?;
+    w.write_all(&[VERSION]).map_err(|e| io_wire("preamble", e))?;
+    w.flush().map_err(|e| io_wire("preamble", e))
+}
+
+/// Read and validate the peer's preamble; returns its version.
+pub fn read_preamble<R: Read>(r: &mut R) -> Result<u8> {
+    let mut buf = [0u8; 5];
+    r.read_exact(&mut buf).map_err(|e| io_wire("preamble", e))?;
+    if buf[..4] != MAGIC {
+        return Err(wire_err(format!(
+            "bad magic {:02x}{:02x}{:02x}{:02x} (not an FMPN endpoint)",
+            buf[0], buf[1], buf[2], buf[3]
+        )));
+    }
+    if buf[4] != VERSION {
+        return Err(wire_err(format!(
+            "peer speaks protocol version {}, this build speaks {VERSION}",
+            buf[4]
+        )));
+    }
+    Ok(buf[4])
+}
+
+/// LEB128-encode `v` into `out` (the same codec `util::compress` frames
+/// its blobs with — one implementation, shared).
+pub fn push_varint(out: &mut Vec<u8>, v: u64) {
+    compress::write_varint(out, v);
+}
+
+/// Decode a LEB128 varint from `b[*i]..`, advancing `i`.
+pub fn take_varint(b: &[u8], i: &mut usize) -> Result<u64> {
+    let (v, n) = compress::read_varint(&b[(*i).min(b.len())..]).map_err(wire_err)?;
+    *i += n;
+    Ok(v)
+}
+
+fn read_varint_stream<R: Read>(r: &mut R) -> Result<(u64, usize)> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    let mut n = 0usize;
+    loop {
+        let mut byte = [0u8; 1];
+        r.read_exact(&mut byte).map_err(|e| io_wire("frame length", e))?;
+        n += 1;
+        if shift >= 64 {
+            return Err(wire_err("frame length varint overflow"));
+        }
+        v |= u64::from(byte[0] & 0x7f) << shift;
+        if byte[0] & 0x80 == 0 {
+            return Ok((v, n));
+        }
+        shift += 7;
+    }
+}
+
+/// Serializing side of a connection. Tracks bytes/frames written so the
+/// owner can fold them into the net metrics.
+pub struct FrameWriter<W: Write> {
+    w: W,
+    bytes: u64,
+    frames: u64,
+}
+
+impl<W: Write> FrameWriter<W> {
+    pub fn new(w: W) -> FrameWriter<W> {
+        FrameWriter {
+            w,
+            bytes: 0,
+            frames: 0,
+        }
+    }
+
+    fn write_frame(&mut self, kind: u8, payload: &[u8]) -> Result<()> {
+        let mut head = Vec::with_capacity(11);
+        head.push(kind);
+        push_varint(&mut head, payload.len() as u64);
+        self.w.write_all(&head).map_err(|e| io_wire("frame header", e))?;
+        self.w.write_all(payload).map_err(|e| io_wire("frame payload", e))?;
+        self.w.flush().map_err(|e| io_wire("frame flush", e))?;
+        self.bytes += (head.len() + payload.len()) as u64;
+        self.frames += 1;
+        Ok(())
+    }
+
+    /// Send our preamble through this writer (raw bytes, not a frame).
+    pub fn write_preamble(&mut self) -> Result<()> {
+        write_preamble(&mut self.w)?;
+        self.bytes += 5;
+        Ok(())
+    }
+
+    /// Send one NDJSON control message.
+    pub fn write_ctrl(&mut self, msg: &Json) -> Result<()> {
+        self.write_frame(FRAME_CTRL, msg.dump().as_bytes())
+    }
+
+    /// Send one binary payload block (already packed).
+    pub fn write_payload(&mut self, packed: &[u8]) -> Result<()> {
+        self.write_frame(FRAME_PAYLOAD, packed)
+    }
+
+    /// Return and reset the (bytes, frames) written since the last call.
+    pub fn drain_counters(&mut self) -> (u64, u64) {
+        let out = (self.bytes, self.frames);
+        self.bytes = 0;
+        self.frames = 0;
+        out
+    }
+}
+
+/// Deserializing side of a connection, with a frame-size cap.
+pub struct FrameReader<R: Read> {
+    r: R,
+    max_frame: usize,
+    bytes: u64,
+    frames: u64,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(r: R, max_frame: usize) -> FrameReader<R> {
+        FrameReader {
+            r,
+            max_frame: max_frame.max(64),
+            bytes: 0,
+            frames: 0,
+        }
+    }
+
+    /// Read and validate the peer's preamble through this reader.
+    pub fn read_preamble(&mut self) -> Result<u8> {
+        let v = read_preamble(&mut self.r)?;
+        self.bytes += 5;
+        Ok(v)
+    }
+
+    /// Blocking read of the next frame. Errors on EOF, timeout, cap
+    /// violation, or malformed content.
+    pub fn read_frame(&mut self) -> Result<Frame> {
+        let mut kind = [0u8; 1];
+        self.r.read_exact(&mut kind).map_err(|e| io_wire("frame type", e))?;
+        self.read_frame_body(kind[0])
+    }
+
+    /// Like [`read_frame`](Self::read_frame), but a read timeout *before
+    /// the first byte* of a frame returns `Ok(None)` (idle connection) so
+    /// server loops can poll their stop flag. A timeout mid-frame is still
+    /// an error — the stream would be out of sync.
+    pub fn read_frame_idle(&mut self) -> Result<Option<Frame>> {
+        let mut kind = [0u8; 1];
+        match self.r.read_exact(&mut kind) {
+            Ok(()) => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return Ok(None);
+            }
+            Err(e) => return Err(io_wire("frame type", e)),
+        }
+        self.read_frame_body(kind[0]).map(Some)
+    }
+
+    fn read_frame_body(&mut self, kind: u8) -> Result<Frame> {
+        let (len, len_bytes) = read_varint_stream(&mut self.r)?;
+        let len = usize::try_from(len).map_err(|_| wire_err("frame length overflow"))?;
+        if len > self.max_frame {
+            return Err(wire_err(format!(
+                "frame of {len} bytes exceeds the {} byte cap",
+                self.max_frame
+            )));
+        }
+        let mut payload = vec![0u8; len];
+        self.r
+            .read_exact(&mut payload)
+            .map_err(|e| io_wire("frame payload", e))?;
+        self.bytes += (1 + len_bytes + len) as u64;
+        self.frames += 1;
+        match kind {
+            FRAME_CTRL => {
+                let text = std::str::from_utf8(&payload)
+                    .map_err(|_| wire_err("control frame is not UTF-8"))?;
+                Ok(Frame::Ctrl(Json::parse(text.trim_end_matches('\n'))?))
+            }
+            FRAME_PAYLOAD => Ok(Frame::Payload(payload)),
+            other => Err(wire_err(format!("unknown frame type 0x{other:02x}"))),
+        }
+    }
+
+    /// Return and reset the (bytes, frames) read since the last call.
+    pub fn drain_counters(&mut self) -> (u64, u64) {
+        let out = (self.bytes, self.frames);
+        self.bytes = 0;
+        self.frames = 0;
+        out
+    }
+}
+
+/// Raw (uncompressed) binary encoding of a [`SampleSink`]:
+///
+/// ```text
+/// sink := varint m | varint d | varint max_gap
+///       | m*d varints            (hist, site-major)
+///       | m varints              (counts)
+///       | (m-1)*max_gap f64-le   (pair_sums)
+/// ```
+pub fn encode_sink(s: &SampleSink) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + s.m * s.d * 2 + s.pair_sums.len() * 8);
+    push_varint(&mut out, s.m as u64);
+    push_varint(&mut out, s.d as u64);
+    push_varint(&mut out, s.max_gap as u64);
+    for site in &s.hist {
+        for &c in site {
+            push_varint(&mut out, c);
+        }
+    }
+    for &c in &s.counts {
+        push_varint(&mut out, c);
+    }
+    for &p in &s.pair_sums {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_sink`]; validates every length.
+pub fn decode_sink(b: &[u8]) -> Result<SampleSink> {
+    let mut i = 0usize;
+    let m = take_varint(b, &mut i)? as usize;
+    let d = take_varint(b, &mut i)? as usize;
+    let max_gap = take_varint(b, &mut i)? as usize;
+    // A sink this code ever puts on the wire is store-shaped; reject
+    // absurd headers before allocating m*d vectors.
+    if m > 1 << 20 || d > 1 << 16 || max_gap > 1 << 16 {
+        return Err(wire_err(format!(
+            "implausible sink header m={m} d={d} max_gap={max_gap}"
+        )));
+    }
+    if m == 0 || d == 0 {
+        return Err(wire_err("sink header has zero dimension"));
+    }
+    // The header is untrusted: a varint is ≥ 1 byte and a pair sum is 8,
+    // so the smallest stream this header could describe is bounded below.
+    // Reject claims the buffer cannot possibly satisfy BEFORE allocating
+    // (the per-dimension caps above still admit ~512 GiB of hist).
+    let min_need = (m as u64) * (d as u64) + m as u64
+        + 8 * (m.saturating_sub(1) as u64) * (max_gap as u64);
+    if min_need > b.len() as u64 {
+        return Err(wire_err(format!(
+            "sink header needs ≥ {min_need} bytes, buffer has {}",
+            b.len()
+        )));
+    }
+    let mut sink = SampleSink::new(m, d, max_gap);
+    for site in sink.hist.iter_mut() {
+        for c in site.iter_mut() {
+            *c = take_varint(b, &mut i)?;
+        }
+    }
+    for c in sink.counts.iter_mut() {
+        *c = take_varint(b, &mut i)?;
+    }
+    for p in sink.pair_sums.iter_mut() {
+        let bytes: [u8; 8] = b
+            .get(i..i + 8)
+            .ok_or_else(|| wire_err("truncated pair_sums"))?
+            .try_into()
+            .unwrap();
+        *p = f64::from_le_bytes(bytes);
+        i += 8;
+    }
+    if i != b.len() {
+        return Err(wire_err(format!("{} trailing bytes after sink", b.len() - i)));
+    }
+    Ok(sink)
+}
+
+/// Encode + compress a sink for a payload frame.
+pub fn pack_sink(s: &SampleSink) -> Vec<u8> {
+    compress::compress(&encode_sink(s))
+}
+
+/// Decompress + decode a payload frame into a sink.
+pub fn unpack_sink(packed: &[u8]) -> Result<SampleSink> {
+    let raw = compress::decompress(packed).map_err(wire_err)?;
+    decode_sink(&raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_sink() -> SampleSink {
+        let mut s = SampleSink::new(4, 3, 2);
+        s.reset_walk();
+        s.record(0, &[0, 1, 2]);
+        s.record(1, &[2, 2, 1]);
+        s.record(2, &[1, 0, 0]);
+        s.record(3, &[0, 0, 2]);
+        s
+    }
+
+    #[test]
+    fn varint_roundtrip_boundaries() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            push_varint(&mut buf, v);
+            let mut i = 0;
+            assert_eq!(take_varint(&buf, &mut i).unwrap(), v);
+            assert_eq!(i, buf.len());
+        }
+        let mut i = 0;
+        assert!(take_varint(&[0x80], &mut i).is_err(), "truncated");
+        let mut i = 0;
+        assert!(
+            take_varint(&[0xff; 11], &mut i).is_err(),
+            "overlong varint rejected"
+        );
+    }
+
+    #[test]
+    fn preamble_roundtrip_and_rejections() {
+        let mut buf = Vec::new();
+        write_preamble(&mut buf).unwrap();
+        assert_eq!(read_preamble(&mut buf.as_slice()).unwrap(), VERSION);
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(read_preamble(&mut bad.as_slice()).is_err(), "bad magic");
+        let mut newer = buf.clone();
+        newer[4] = VERSION + 1;
+        let e = read_preamble(&mut newer.as_slice()).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+        assert!(read_preamble(&mut &buf[..3]).is_err(), "short preamble");
+    }
+
+    #[test]
+    fn frame_roundtrip_ctrl_and_payload() {
+        let msg = Json::obj(vec![
+            ("op", Json::Str("submit".into())),
+            ("id", Json::Num(7.0)),
+        ]);
+        let mut buf = Vec::new();
+        let mut w = FrameWriter::new(&mut buf);
+        w.write_ctrl(&msg).unwrap();
+        w.write_payload(b"\x01\x02\x03").unwrap();
+        let (bytes, frames) = w.drain_counters();
+        assert_eq!(frames, 2);
+        assert_eq!(bytes as usize, buf.len());
+
+        let mut r = FrameReader::new(buf.as_slice(), 1 << 20);
+        assert_eq!(r.read_frame().unwrap(), Frame::Ctrl(msg));
+        assert_eq!(r.read_frame().unwrap(), Frame::Payload(vec![1, 2, 3]));
+        let (rbytes, rframes) = r.drain_counters();
+        assert_eq!((rbytes as usize, rframes), (buf.len(), 2));
+        assert!(r.read_frame().is_err(), "EOF is an error");
+    }
+
+    #[test]
+    fn frame_cap_and_corruption_rejected() {
+        let mut buf = Vec::new();
+        let mut w = FrameWriter::new(&mut buf);
+        w.write_payload(&[0u8; 4096]).unwrap();
+        let mut r = FrameReader::new(buf.as_slice(), 1024);
+        let e = r.read_frame().unwrap_err().to_string();
+        assert!(e.contains("cap"), "{e}");
+
+        // Unknown frame type.
+        let mut junk = vec![0x7fu8];
+        push_varint(&mut junk, 0);
+        assert!(FrameReader::new(junk.as_slice(), 1024).read_frame().is_err());
+
+        // Control frame with broken JSON.
+        let mut bad = vec![FRAME_CTRL];
+        push_varint(&mut bad, 2);
+        bad.extend_from_slice(b"{n");
+        assert!(FrameReader::new(bad.as_slice(), 1024).read_frame().is_err());
+
+        // Truncated payload.
+        let mut short = vec![FRAME_PAYLOAD];
+        push_varint(&mut short, 10);
+        short.extend_from_slice(b"abc");
+        assert!(FrameReader::new(short.as_slice(), 1024).read_frame().is_err());
+    }
+
+    #[test]
+    fn sink_roundtrips_exactly() {
+        let s = sample_sink();
+        let packed = pack_sink(&s);
+        let back = unpack_sink(&packed).unwrap();
+        assert_eq!(back.m, s.m);
+        assert_eq!(back.d, s.d);
+        assert_eq!(back.max_gap, s.max_gap);
+        assert_eq!(back.hist, s.hist);
+        assert_eq!(back.counts, s.counts);
+        assert_eq!(back.pair_sums, s.pair_sums);
+    }
+
+    #[test]
+    fn sink_decode_rejects_corruption() {
+        let raw = encode_sink(&sample_sink());
+        assert!(decode_sink(&raw[..raw.len() - 4]).is_err(), "truncated");
+        let mut trailing = raw.clone();
+        trailing.push(0);
+        assert!(decode_sink(&trailing).is_err(), "trailing bytes");
+        // Implausible header must not allocate terabytes.
+        let mut huge = Vec::new();
+        push_varint(&mut huge, u64::MAX / 4);
+        push_varint(&mut huge, 3);
+        push_varint(&mut huge, 1);
+        assert!(decode_sink(&huge).is_err());
+        // Zero-dimension header.
+        let mut zero = Vec::new();
+        push_varint(&mut zero, 0);
+        push_varint(&mut zero, 3);
+        push_varint(&mut zero, 1);
+        assert!(decode_sink(&zero).is_err());
+        // Packed stream with flipped bytes must error, not panic.
+        let packed = pack_sink(&sample_sink());
+        for flip in [0usize, packed.len() / 2, packed.len() - 1] {
+            let mut c = packed.clone();
+            c[flip] ^= 0xa5;
+            let _ = unpack_sink(&c); // must not panic; Err or (rarely) Ok
+        }
+        assert!(unpack_sink(&packed[..packed.len() - 2]).is_err());
+    }
+}

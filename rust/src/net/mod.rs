@@ -1,0 +1,29 @@
+//! Network transport for the resident sampling service.
+//!
+//! The file-based job directory (`service::api`) is fine for one machine;
+//! this subsystem is the servable front end: the same [`Service`] core
+//! behind a TCP listener, speaking a small versioned wire protocol
+//! ("FMPN", documented in `docs/PROTOCOL.md`):
+//!
+//! - [`frame`] — magic/version preamble, varint-length-prefixed frames,
+//!   NDJSON control messages, and binary payload frames that carry
+//!   LZ-compressed [`SampleSink`] blocks so tensors never transit as
+//!   escaped JSON;
+//! - [`server`] — accept loop with a bounded connection pool,
+//!   per-connection reader/writer threads, admission backpressure (typed
+//!   `busy` frames instead of unbounded queueing), graceful drain;
+//! - [`client`] — a blocking connect/submit/wait/stream library used by
+//!   `fastmps submit --connect` and the integration tests.
+//!
+//! Everything is `std::net` + threads — the crate stays dependency-free
+//! and offline-buildable.
+//!
+//! [`Service`]: crate::service::Service
+//! [`SampleSink`]: crate::sampler::sink::SampleSink
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{Client, JobResult};
+pub use server::{NetServer, NetStats};

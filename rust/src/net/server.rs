@@ -1,0 +1,510 @@
+//! TCP front end for the resident [`Service`]: accept loop, bounded
+//! connection pool, per-connection reader/writer threads, admission
+//! backpressure, graceful drain.
+//!
+//! Life of a connection: the accept loop (one thread, non-blocking accept
+//! so shutdown never hangs on `accept(2)`) exchanges preambles, rejects
+//! with a typed `busy` frame when the pool is at `max_conns`, and
+//! otherwise spawns a *reader* thread. The reader parses control frames
+//! and executes ops against the shared [`Service`]; responses go through
+//! an mpsc channel to a *writer* thread that owns the socket's write half,
+//! so a slow peer never blocks request parsing. Submissions that hit the
+//! `JobQueue` admission limit come back as a typed `busy` frame — the
+//! server never queues unboundedly on behalf of a client.
+//!
+//! Shutdown (`{"op":"shutdown"}` or [`NetServer::shutdown`]) is a drain:
+//! admissions close, in-flight jobs finish, the final metrics are the
+//! reply, and only then do the threads join.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::frame::{self, Frame, FrameReader, FrameWriter};
+use crate::config::{NetConfig, ServiceConfig};
+use crate::metrics::{keys, Metrics};
+use crate::service::{JobId, JobSpec, Service};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Net-layer counters, folded into the service metrics under `"net"`.
+#[derive(Default)]
+pub struct NetStats {
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    pub conns_accepted: AtomicU64,
+    pub conns_active: AtomicUsize,
+    pub conns_peak: AtomicU64,
+    /// Connections turned away at the pool limit.
+    pub rejects_conn: AtomicU64,
+    /// Submissions turned away by admission control (typed `busy`).
+    pub rejects_busy: AtomicU64,
+}
+
+impl NetStats {
+    fn add_io(&self, reader: Option<(u64, u64)>, writer: Option<(u64, u64)>) {
+        if let Some((b, f)) = reader {
+            self.bytes_in.fetch_add(b, Ordering::Relaxed);
+            self.frames_in.fetch_add(f, Ordering::Relaxed);
+        }
+        if let Some((b, f)) = writer {
+            self.bytes_out.fetch_add(b, Ordering::Relaxed);
+            self.frames_out.fetch_add(f, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold the counters into a [`Metrics`] snapshot.
+    pub fn account(&self, m: &mut Metrics) {
+        m.add(keys::NET_BYTES_IN, self.bytes_in.load(Ordering::Relaxed));
+        m.add(keys::NET_BYTES_OUT, self.bytes_out.load(Ordering::Relaxed));
+        m.add(keys::NET_FRAMES_IN, self.frames_in.load(Ordering::Relaxed));
+        m.add(keys::NET_FRAMES_OUT, self.frames_out.load(Ordering::Relaxed));
+        m.add(keys::NET_CONNS, self.conns_accepted.load(Ordering::Relaxed));
+        m.set_max(keys::NET_CONN_PEAK, self.conns_peak.load(Ordering::Relaxed));
+        m.add(keys::NET_REJECTS_CONN, self.rejects_conn.load(Ordering::Relaxed));
+        m.add(keys::NET_REJECTS_BUSY, self.rejects_busy.load(Ordering::Relaxed));
+    }
+}
+
+/// What a reader hands its connection's writer thread.
+enum Out {
+    Ctrl(Json),
+    Payload(Vec<u8>),
+}
+
+struct Shared {
+    svc: Service,
+    net: NetConfig,
+    stats: NetStats,
+    /// Close connections and stop the accept loop.
+    stop: AtomicBool,
+    /// A client asked for shutdown; `run_until_shutdown` observes this.
+    shutdown_requested: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Service metrics with the net counters attached.
+    fn metrics_json(&self) -> Json {
+        let mut net = Metrics::new();
+        self.stats.account(&mut net);
+        match self.svc.metrics_json() {
+            Json::Obj(mut m) => {
+                m.insert("net".into(), net.to_json());
+                Json::Obj(m)
+            }
+            other => other,
+        }
+    }
+
+    /// Stop admissions and block until every in-flight job is terminal.
+    fn drain(&self, cap: Duration) {
+        self.svc.queue().shutdown();
+        let deadline = Instant::now() + cap;
+        let mut delay = Duration::from_millis(1);
+        while !self.svc.idle() && Instant::now() < deadline {
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(Duration::from_millis(50));
+        }
+    }
+}
+
+/// A running TCP front end. Dropping it stops and joins everything.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Start a [`Service`] and listen on `net.addr` (use port 0 for an
+    /// ephemeral port; see [`NetServer::local_addr`]).
+    pub fn start(cfg: ServiceConfig, net: NetConfig) -> Result<NetServer> {
+        net.validate()?;
+        let svc = Service::start(cfg)?;
+        let listener =
+            TcpListener::bind(&net.addr).map_err(|e| Error::io(format!("bind {}", net.addr), e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::io("local_addr", e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::io("set_nonblocking", e))?;
+        let shared = Arc::new(Shared {
+            svc,
+            net,
+            stats: NetStats::default(),
+            stop: AtomicBool::new(false),
+            shutdown_requested: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(NetServer {
+            shared,
+            addr,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The service behind the listener (for embedding and tests).
+    pub fn service(&self) -> &Service {
+        &self.shared.svc
+    }
+
+    /// Current metrics (service + net counters).
+    pub fn metrics_json(&self) -> Json {
+        self.shared.metrics_json()
+    }
+
+    /// True once a client's `shutdown` op has drained the service.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Block until a client requests shutdown or `max_secs` elapses.
+    pub fn run_until_shutdown(&self, max_secs: Option<f64>) {
+        let t0 = Instant::now();
+        while !self.shutdown_requested() && !self.shared.stopping() {
+            if let Some(max) = max_secs {
+                if t0.elapsed().as_secs_f64() >= max {
+                    return;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    fn stop_and_join(&mut self) {
+        // Drain jobs first so in-flight work lands before sockets close.
+        self.shared.drain(Duration::from_secs(600));
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+
+    /// Drain jobs, close the listener and all connections, join every
+    /// thread, and return the final metrics.
+    pub fn shutdown(mut self) -> Json {
+        self.stop_and_join();
+        let shared = self.shared.clone();
+        drop(self); // Drop sees accept == None and joined conns: no-op work
+        match Arc::try_unwrap(shared) {
+            Ok(inner) => {
+                let mut net = Metrics::new();
+                inner.stats.account(&mut net);
+                match inner.svc.shutdown() {
+                    Json::Obj(mut m) => {
+                        m.insert("net".into(), net.to_json());
+                        Json::Obj(m)
+                    }
+                    other => other,
+                }
+            }
+            // A connection thread leaked a reference (should not happen);
+            // fall back to the racy-but-close snapshot.
+            Err(shared) => shared.metrics_json(),
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    while !shared.stopping() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                handle_accept(stream, &shared);
+                reap_finished(&shared);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Join connection threads that already finished so the handle list does
+/// not grow for the life of a busy server.
+fn reap_finished(shared: &Arc<Shared>) {
+    let mut g = shared.conns.lock().unwrap();
+    let mut i = 0;
+    while i < g.len() {
+        if g[i].is_finished() {
+            let _ = g.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn handle_accept(stream: TcpStream, shared: &Arc<Shared>) {
+    let stats = &shared.stats;
+    let prev = stats.conns_active.fetch_add(1, Ordering::SeqCst);
+    if prev >= shared.net.max_conns {
+        stats.conns_active.fetch_sub(1, Ordering::SeqCst);
+        stats.rejects_conn.fetch_add(1, Ordering::Relaxed);
+        let write_timeout = shared.net.write_timeout_ms.max(1);
+        // Detached lame-duck thread: deliver the typed rejection, then
+        // hold the socket open (draining, ≤ 5 s) until the peer closes —
+        // an immediate close would let a client write mid-request and
+        // have the kernel RST the rejection frame out of its buffer.
+        std::thread::spawn(move || {
+            let _ = stream.set_write_timeout(Some(Duration::from_millis(write_timeout)));
+            let read_half = stream.try_clone();
+            let mut w = FrameWriter::new(BufWriter::new(stream));
+            if w.write_preamble().is_err() {
+                return;
+            }
+            let _ = w.write_ctrl(&reply_err("busy", "connection limit reached"));
+            if let Ok(mut r) = read_half {
+                let _ = r.set_read_timeout(Some(Duration::from_secs(5)));
+                let mut buf = [0u8; 256];
+                while matches!(std::io::Read::read(&mut r, &mut buf), Ok(n) if n > 0) {}
+            }
+        });
+        return;
+    }
+    stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
+    stats
+        .conns_peak
+        .fetch_max((prev + 1) as u64, Ordering::Relaxed);
+    let shared2 = shared.clone();
+    let handle = std::thread::spawn(move || {
+        connection(stream, &shared2);
+        shared2.stats.conns_active.fetch_sub(1, Ordering::SeqCst);
+    });
+    shared.conns.lock().unwrap().push(handle);
+}
+
+fn reply_err(kind: &str, msg: impl std::fmt::Display) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("type", Json::Str(kind.into())),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+fn reply_ok(kind: &str, mut extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("type", Json::Str(kind.into())),
+    ];
+    fields.append(&mut extra);
+    Json::obj(fields)
+}
+
+/// Reader half of one connection (runs on the connection thread).
+fn connection(stream: TcpStream, shared: &Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(
+        shared.net.read_timeout_ms.max(1),
+    )));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = write_half.set_write_timeout(Some(Duration::from_millis(
+        shared.net.write_timeout_ms.max(1),
+    )));
+
+    let (tx, rx) = std::sync::mpsc::channel::<Out>();
+    let writer = {
+        let shared = shared.clone();
+        std::thread::spawn(move || writer_loop(write_half, rx, shared))
+    };
+
+    let mut reader = FrameReader::new(BufReader::new(stream), shared.net.max_frame_bytes);
+    let outcome = reader_loop(&mut reader, &tx, shared);
+    shared.stats.add_io(Some(reader.drain_counters()), None);
+    if let Err(e) = outcome {
+        if !frame::is_timeout(&e) {
+            // Parse/protocol failure: tell the peer why before closing.
+            let _ = tx.send(Out::Ctrl(reply_err("error", &e)));
+        }
+    }
+    drop(tx); // writer drains queued replies, then exits
+    let _ = writer.join();
+}
+
+fn reader_loop(
+    reader: &mut FrameReader<BufReader<TcpStream>>,
+    tx: &Sender<Out>,
+    shared: &Arc<Shared>,
+) -> Result<()> {
+    reader.read_preamble()?;
+    loop {
+        if shared.stopping() {
+            return Ok(());
+        }
+        let msg = match reader.read_frame_idle()? {
+            None => continue, // idle tick: re-check the stop flag
+            Some(Frame::Payload(_)) => {
+                return Err(Error::format(
+                    "net wire: unexpected payload frame from client",
+                ));
+            }
+            Some(Frame::Ctrl(msg)) => msg,
+        };
+        shared.stats.add_io(Some(reader.drain_counters()), None);
+        if !handle_op(&msg, tx, shared)? {
+            return Ok(());
+        }
+    }
+}
+
+/// Execute one control op; `Ok(false)` closes the connection.
+fn handle_op(msg: &Json, tx: &Sender<Out>, shared: &Arc<Shared>) -> Result<bool> {
+    let op = msg.get("op").and_then(|v| v.as_str()).unwrap_or("");
+    let send = |j: Json| {
+        tx.send(Out::Ctrl(j))
+            .map_err(|_| Error::other("net: writer thread gone"))
+    };
+    match op {
+        "ping" => send(reply_ok("pong", vec![]))?,
+        "submit" => {
+            let spec = JobSpec::from_json(msg.req("job")?)?;
+            match shared.svc.submit(spec) {
+                Ok(id) => send(reply_ok("submitted", vec![("id", Json::Num(id as f64))]))?,
+                Err(Error::Busy(m)) => {
+                    shared.stats.rejects_busy.fetch_add(1, Ordering::Relaxed);
+                    send(reply_err("busy", m))?;
+                }
+                Err(e) => send(reply_err("error", e))?,
+            }
+        }
+        "status" => {
+            let id = req_id(msg)?;
+            match shared.svc.queue().status(id) {
+                Some(v) => send(reply_ok("status", vec![("job", v.to_json())]))?,
+                None => send(reply_err("error", format!("unknown job {id}")))?,
+            }
+        }
+        "wait" => {
+            let id = req_id(msg)?;
+            let timeout_ms = msg
+                .get("timeout_ms")
+                .and_then(|v| v.as_f64())
+                .filter(|t| *t >= 0.0)
+                .unwrap_or(60_000.0)
+                .min(600_000.0);
+            match shared.svc.wait(id, Duration::from_millis(timeout_ms as u64)) {
+                None => send(reply_err("error", format!("unknown job {id}")))?,
+                Some(st) if st.is_terminal() => {
+                    let result = shared
+                        .svc
+                        .queue()
+                        .result_json(id)
+                        .unwrap_or_else(|| reply_err("error", "result evicted"));
+                    let sink = shared.svc.queue().job_sink(id);
+                    send(reply_ok(
+                        "result",
+                        vec![
+                            ("result", result),
+                            ("payload", Json::Bool(sink.is_some())),
+                        ],
+                    ))?;
+                    if let Some(s) = sink {
+                        tx.send(Out::Payload(frame::pack_sink(&s)))
+                            .map_err(|_| Error::other("net: writer thread gone"))?;
+                    }
+                }
+                Some(_) => {
+                    // Still running at the client's timeout: report status.
+                    let v = shared.svc.queue().status(id);
+                    match v {
+                        Some(v) => send(reply_ok("status", vec![("job", v.to_json())]))?,
+                        None => send(reply_err("error", format!("unknown job {id}")))?,
+                    }
+                }
+            }
+        }
+        "cancel" => {
+            let id = req_id(msg)?;
+            match shared.svc.queue().status(id) {
+                None => send(reply_err("error", format!("unknown job {id}")))?,
+                Some(_) => {
+                    shared.svc.queue().fail_job(id, "cancelled by client");
+                    send(reply_ok("cancelled", vec![("id", Json::Num(id as f64))]))?;
+                }
+            }
+        }
+        "list" => {
+            let mut views = shared.svc.queue().snapshot();
+            crate::service::job::sort_views(&mut views);
+            let jobs = Json::Arr(views.iter().map(|v| v.to_json()).collect());
+            send(reply_ok("jobs", vec![("jobs", jobs)]))?;
+        }
+        "metrics" => {
+            send(reply_ok("metrics", vec![("metrics", shared.metrics_json())]))?;
+        }
+        "shutdown" => {
+            shared.drain(Duration::from_secs(600));
+            // Flag before the reply is enqueued: a client that has seen
+            // the reply must never observe shutdown_requested() == false.
+            // The reply still flushes — the writer drains its channel
+            // before exiting, and joins happen after that.
+            shared.shutdown_requested.store(true, Ordering::SeqCst);
+            send(reply_ok(
+                "shutdown",
+                vec![("metrics", shared.metrics_json())],
+            ))?;
+            return Ok(false);
+        }
+        other => send(reply_err("error", format!("unknown op '{other}'")))?,
+    }
+    Ok(true)
+}
+
+fn req_id(msg: &Json) -> Result<JobId> {
+    msg.req("id")?
+        .as_f64()
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as JobId)
+        .ok_or_else(|| Error::format("net: 'id' is not a job id"))
+}
+
+fn writer_loop(stream: TcpStream, rx: Receiver<Out>, shared: Arc<Shared>) {
+    let mut w = FrameWriter::new(BufWriter::new(stream));
+    if w.write_preamble().is_err() {
+        return;
+    }
+    for out in rx {
+        let r = match out {
+            Out::Ctrl(j) => w.write_ctrl(&j),
+            Out::Payload(p) => w.write_payload(&p),
+        };
+        shared.stats.add_io(None, Some(w.drain_counters()));
+        if r.is_err() {
+            return; // peer went away; reader will notice on its next read
+        }
+    }
+}

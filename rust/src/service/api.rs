@@ -81,27 +81,47 @@ pub fn submit_file(jobs_dir: &Path, spec: &JobSpec) -> Result<String> {
     Ok(stem)
 }
 
-/// Client side: poll for the result of a submission. Errors on timeout.
+/// Client side: poll for the result of a submission with the default
+/// 20 ms poll ceiling. Errors on timeout.
 pub fn wait_result(jobs_dir: &Path, stem: &str, timeout: Duration) -> Result<Json> {
+    wait_result_poll(jobs_dir, stem, timeout, 20)
+}
+
+/// Client side: poll for the result of a submission. The poll interval
+/// backs off exponentially from 1 ms up to `poll_ms` — fast results are
+/// seen almost immediately, while long jobs cost one directory stat per
+/// `poll_ms` instead of a fixed hot spin. Errors on timeout.
+pub fn wait_result_poll(
+    jobs_dir: &Path,
+    stem: &str,
+    timeout: Duration,
+    poll_ms: u64,
+) -> Result<Json> {
     let path = jobs_dir.join("results").join(format!("{stem}.json"));
     let deadline = Instant::now() + timeout;
+    let cap = Duration::from_millis(poll_ms.max(1));
+    let mut delay = Duration::from_millis(1).min(cap);
     loop {
         if path.exists() {
             let text =
                 fs::read_to_string(&path).map_err(|e| Error::io(path.display(), e))?;
             return Json::parse(&text);
         }
-        if Instant::now() >= deadline {
+        let now = Instant::now();
+        if now >= deadline {
             return Err(Error::other(format!(
                 "timed out waiting for result {}",
                 path.display()
             )));
         }
-        std::thread::sleep(Duration::from_millis(10));
+        std::thread::sleep(delay.min(deadline - now));
+        delay = (delay * 2).min(cap);
     }
 }
 
-/// Client side: all status files, stem order (what `fastmps jobs` prints).
+/// Client side: all status files (what `fastmps jobs` prints), sorted by
+/// submit time then service job id — deterministic for scripting and
+/// tests even when stems interleave across client processes.
 pub fn list_jobs(jobs_dir: &Path) -> Result<Vec<(String, Json)>> {
     let status = jobs_dir.join("status");
     let mut out = Vec::new();
@@ -123,6 +143,18 @@ pub fn list_jobs(jobs_dir: &Path) -> Result<Vec<(String, Json)>> {
         let text = fs::read_to_string(&p).map_err(|e| Error::io(p.display(), e))?;
         out.push((stem, Json::parse(&text)?));
     }
+    let key = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::MAX);
+    out.sort_by(|(sa, a), (sb, b)| {
+        key(a, "submitted_unix")
+            .partial_cmp(&key(b, "submitted_unix"))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(
+                key(a, "id")
+                    .partial_cmp(&key(b, "id"))
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then(sa.cmp(sb))
+    });
     Ok(out)
 }
 
@@ -372,6 +404,53 @@ mod tests {
     fn list_jobs_empty_when_no_server_ran() {
         let root = scratch("list");
         assert!(list_jobs(&root.join("nowhere")).unwrap().is_empty());
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn list_jobs_sorted_by_submit_time_then_id() {
+        let root = scratch("sorted");
+        let status = root.join("status");
+        fs::create_dir_all(&status).unwrap();
+        // Stem order (a, b, c) deliberately disagrees with submit order.
+        let write = |stem: &str, id: f64, t: f64| {
+            let j = Json::obj(vec![
+                ("id", Json::Num(id)),
+                ("status", Json::Str("done".into())),
+                ("submitted_unix", Json::Num(t)),
+            ]);
+            fs::write(status.join(format!("{stem}.json")), j.pretty()).unwrap();
+        };
+        write("a", 3.0, 300.0);
+        write("b", 1.0, 100.0);
+        write("c", 2.0, 100.0);
+        let listed = list_jobs(&root).unwrap();
+        let stems: Vec<&str> = listed.iter().map(|(s, _)| s.as_str()).collect();
+        assert_eq!(stems, vec!["b", "c", "a"], "time asc, then id");
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn wait_result_backoff_sees_late_results_and_times_out() {
+        let root = scratch("backoff");
+        let results = root.join("results");
+        fs::create_dir_all(&results).unwrap();
+        // Timeout path is fast and reports the path.
+        let e = wait_result_poll(&root, "nope", Duration::from_millis(40), 10)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("timed out"), "{e}");
+        // A result landing mid-wait is picked up despite the backoff.
+        let writer = {
+            let results = results.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(60));
+                fs::write(results.join("late.json"), "{\"status\": \"done\"}").unwrap();
+            })
+        };
+        let j = wait_result_poll(&root, "late", Duration::from_secs(10), 50).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("done"));
+        writer.join().unwrap();
         fs::remove_dir_all(&root).unwrap();
     }
 }

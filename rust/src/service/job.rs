@@ -138,7 +138,20 @@ pub struct JobView {
     pub n_samples: u64,
     pub done: u64,
     pub error: Option<String>,
+    /// Wall-clock submit time, unix seconds (listing sort key).
+    pub submitted_unix: f64,
     pub latency_secs: Option<f64>,
+}
+
+/// Deterministic listing order: submit time, then id. Stable for
+/// scripting and tests regardless of how a transport gathered the views.
+pub fn sort_views(views: &mut [JobView]) {
+    views.sort_by(|a, b| {
+        a.submitted_unix
+            .partial_cmp(&b.submitted_unix)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
 }
 
 impl JobView {
@@ -149,6 +162,7 @@ impl JobView {
             ("status", Json::Str(self.status.as_str().into())),
             ("samples", Json::Num(self.n_samples as f64)),
             ("done", Json::Num(self.done as f64)),
+            ("submitted_unix", Json::Num(self.submitted_unix)),
             (
                 "error",
                 self.error
@@ -204,6 +218,25 @@ mod tests {
             let j = Json::parse(bad).unwrap();
             assert!(JobSpec::from_json(&j).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn views_sort_by_submit_time_then_id() {
+        let view = |id: JobId, t: f64| JobView {
+            id,
+            tag: String::new(),
+            status: JobStatus::Queued,
+            n_samples: 1,
+            done: 0,
+            error: None,
+            submitted_unix: t,
+            latency_secs: None,
+        };
+        let mut vs = vec![view(3, 20.0), view(2, 10.0), view(1, 10.0), view(4, 5.0)];
+        sort_views(&mut vs);
+        let ids: Vec<JobId> = vs.iter().map(|v| v.id).collect();
+        assert_eq!(ids, vec![4, 1, 2, 3]);
+        assert!(vs[0].to_json().get("submitted_unix").is_some());
     }
 
     #[test]

@@ -44,6 +44,9 @@ struct JobState {
     sink: Option<SampleSink>,
     error: Option<String>,
     t_submit: Instant,
+    /// Wall-clock submit time (unix seconds) — listing sort key; `Instant`
+    /// above stays the latency clock (monotonic).
+    submitted_unix: f64,
     latency_secs: Option<f64>,
 }
 
@@ -132,7 +135,10 @@ impl JobQueue {
         }
         if g.active >= self.limits.max_queue {
             g.rejected += 1;
-            return Err(Error::config(format!(
+            // Typed as Busy: a well-formed request hitting a transient
+            // capacity limit, which transports turn into backpressure
+            // (net's `busy` frame, the inbox hold) rather than a failure.
+            return Err(Error::busy(format!(
                 "queue full ({} active jobs, limit {})",
                 g.active, self.limits.max_queue
             )));
@@ -149,6 +155,10 @@ impl JobQueue {
                 sink: None,
                 error: None,
                 t_submit: Instant::now(),
+                submitted_unix: std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_secs_f64())
+                    .unwrap_or(0.0),
                 latency_secs: None,
             },
         );
@@ -315,6 +325,7 @@ impl JobQueue {
             n_samples: j.spec.n_samples,
             done: j.done,
             error: j.error.clone(),
+            submitted_unix: j.submitted_unix,
             latency_secs: j.latency_secs,
         }
     }

@@ -23,7 +23,8 @@ fn hash4(b: &[u8]) -> usize {
     (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
 }
 
-fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+/// LEB128 encode (shared with the net wire format — `net::frame`).
+pub(crate) fn write_varint(out: &mut Vec<u8>, mut v: u64) {
     loop {
         let byte = (v & 0x7f) as u8;
         v >>= 7;
@@ -35,7 +36,8 @@ fn write_varint(out: &mut Vec<u8>, mut v: u64) {
     }
 }
 
-fn read_varint(b: &[u8]) -> Result<(u64, usize), String> {
+/// LEB128 decode from the front of `b`; returns (value, bytes consumed).
+pub(crate) fn read_varint(b: &[u8]) -> Result<(u64, usize), String> {
     let mut v = 0u64;
     let mut shift = 0u32;
     for (i, &byte) in b.iter().enumerate() {
@@ -236,6 +238,87 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // Edge cases exercised by the net payload-frame path (`net::frame`
+    // packs every sample block through this codec).
+
+    #[test]
+    fn empty_input_is_a_one_byte_stream() {
+        let c = compress(b"");
+        assert_eq!(c, vec![0u8], "varint 0, no tokens");
+        assert_eq!(decompress(&c).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn incompressible_random_bytes_roundtrip_with_bounded_overhead() {
+        // splitmix64-style stream: no 4-byte match survives, so the output
+        // is all literal runs — 1 control byte per 128 literals plus the
+        // length header.
+        let mut x = 0x243f6a8885a308d3u64;
+        let src: Vec<u8> = (0..100_000)
+            .map(|_| {
+                x = x.wrapping_add(0x9e3779b97f4a7c15);
+                let mut z = x;
+                z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+                (z ^ (z >> 31)) as u8
+            })
+            .collect();
+        let c = compress(&src);
+        assert!(
+            c.len() <= src.len() + src.len() / 100 + 16,
+            "expansion {} over {}",
+            c.len(),
+            src.len()
+        );
+        assert_eq!(decompress(&c).unwrap(), src);
+    }
+
+    #[test]
+    fn multi_megabyte_repetitive_input_roundtrips_and_shrinks() {
+        // ~4 MiB of period-24 structure: long matches at short distances,
+        // the shape of a broadcast Γ block or a sink histogram run.
+        let src: Vec<u8> = (0..4 << 20).map(|i| ((i % 24) * 7) as u8).collect();
+        let c = compress(&src);
+        assert!(
+            c.len() < src.len() / 20,
+            "repetitive 4 MiB should compress ≥ 20×, got {} from {}",
+            c.len(),
+            src.len()
+        );
+        assert_eq!(decompress(&c).unwrap(), src);
+    }
+
+    #[test]
+    fn corrupted_streams_error_instead_of_panicking() {
+        let src: Vec<u8> = (0..4096).map(|i| ((i / 5) % 251) as u8).collect();
+        let c = compress(&src);
+        // Every single-byte truncation must fail loudly or (for a byte
+        // boundary that still parses) decode to the wrong length — never
+        // panic, never return the original bytes as a false positive.
+        for cut in [1, c.len() / 3, c.len() / 2, c.len() - 1] {
+            match decompress(&c[..cut]) {
+                Err(_) => {}
+                Ok(out) => assert_ne!(out, src, "truncation at {cut} decoded clean"),
+            }
+        }
+        // Systematic single-byte corruption over a smaller stream: every
+        // flip must surface as `Err` or a well-formed (if wrong) decode —
+        // never a panic, never an out-of-bounds copy. An `Ok` is possible
+        // (e.g. a distance flip landing on equivalent periodic data), so
+        // the property under test is purely "no panic + validated frame".
+        let small: Vec<u8> = (0..512).map(|i| ((i / 3) % 17) as u8).collect();
+        let cs = compress(&small);
+        let mut errors = 0usize;
+        for i in 0..cs.len() {
+            let mut bad = cs.clone();
+            bad[i] ^= 0x5a;
+            if decompress(&bad).is_err() {
+                errors += 1;
+            }
+        }
+        assert!(errors > 0, "no flip of {} bytes was detected", cs.len());
     }
 
     #[test]

@@ -39,6 +39,11 @@ pub enum Error {
     /// Error bubbled up from the XLA/PJRT runtime.
     Xla(String),
 
+    /// The service is at capacity *right now*; the request was well-formed
+    /// and can be retried after backing off. Transports map this to their
+    /// typed busy rejection (`net`'s `busy` frame, `api`'s inbox hold).
+    Busy(String),
+
     /// Anything else.
     Other(String),
 }
@@ -55,6 +60,7 @@ impl fmt::Display for Error {
             Error::Io { ctx, source } => write!(f, "io error ({ctx}): {source}"),
             Error::Json { pos, msg } => write!(f, "json error at byte {pos}: {msg}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Busy(m) => write!(f, "service busy: {m}"),
             Error::Other(m) => write!(f, "{m}"),
         }
     }
@@ -98,6 +104,15 @@ impl Error {
         Error::Numeric(msg.to_string())
     }
 
+    pub fn busy(msg: impl fmt::Display) -> Self {
+        Error::Busy(msg.to_string())
+    }
+
+    /// A capacity condition worth retrying (vs a terminal rejection).
+    pub fn is_busy(&self) -> bool {
+        matches!(self, Error::Busy(_))
+    }
+
     pub fn other(msg: impl fmt::Display) -> Self {
         Error::Other(msg.to_string())
     }
@@ -122,5 +137,9 @@ mod tests {
         assert!(Error::config("bad").to_string().contains("config"));
         let io = Error::io("/tmp/x", std::io::Error::other("boom"));
         assert!(io.to_string().contains("/tmp/x"));
+        let busy = Error::busy("queue full (3 active)");
+        assert!(busy.is_busy());
+        assert!(!Error::config("x").is_busy());
+        assert!(busy.to_string().contains("queue full"));
     }
 }

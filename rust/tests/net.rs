@@ -1,0 +1,245 @@
+//! End-to-end network-transport integration: a loopback `NetServer` in
+//! front of a real `Service`, driven through `net::client::Client` — the
+//! TCP analogue of `tests/service.rs`, plus the transport-only behaviors
+//! (payload streaming, typed busy backpressure, graceful drain).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastmps::config::{ComputePrecision, NetConfig, Preset, RunConfig, ServiceConfig};
+use fastmps::coordinator::data_parallel;
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::net::{Client, NetServer};
+use fastmps::service::JobSpec;
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastmps-itnet-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn make_store(root: &Path) -> (Arc<GammaStore>, PathBuf) {
+    let dir = root.join("store");
+    let mut spec = Preset::Jiuzhang2.scaled_spec(55);
+    spec.m = 6;
+    spec.chi_cap = 10;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.0;
+    let store =
+        Arc::new(GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap());
+    (store, dir)
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        n2_micro: 32,
+        target_batch: Some(256),
+        compute: ComputePrecision::F64,
+        linger_ms: 2,
+        ..Default::default()
+    }
+}
+
+fn loopback_net() -> NetConfig {
+    NetConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn tcp_round_trip_streams_exact_sample_payloads() {
+    let root = scratch("roundtrip");
+    let (store, store_dir) = make_store(&root);
+    let server = NetServer::start(service_cfg(), loopback_net()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+    client.ping().unwrap();
+
+    // Two jobs over TCP, disjoint sample streams.
+    let a = client.submit(&JobSpec::new(&store_dir, 96)).unwrap();
+    let mut spec_b = JobSpec::new(&store_dir, 96);
+    spec_b.sample_base = 96;
+    spec_b.tag = "tcp-b".into();
+    let b = client.submit(&spec_b).unwrap();
+    assert_ne!(a, b);
+
+    let res_a = client.wait(a, Duration::from_secs(60)).unwrap().unwrap();
+    let res_b = client.wait(b, Duration::from_secs(60)).unwrap().unwrap();
+    for res in [&res_a, &res_b] {
+        assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(res.result.get("done").unwrap().as_f64(), Some(96.0));
+    }
+
+    // Payload round trip, twice over: the streamed sink must equal the
+    // server's own accumulator byte-for-byte…
+    let sink_a = res_a.sink.as_ref().expect("payload frame for job a");
+    let direct = server.service().queue().job_sink(a).unwrap();
+    assert_eq!(sink_a.hist, direct.hist);
+    assert_eq!(sink_a.counts, direct.counts);
+    assert_eq!(sink_a.pair_sums, direct.pair_sums);
+
+    // …and the combined statistics must equal a directly-sampled one-shot
+    // coordinator run over the union range [0, 192).
+    let mut rc = RunConfig::new(store.spec.clone());
+    rc.n_samples = 192;
+    rc.n1_macro = 192;
+    rc.n2_micro = 32;
+    rc.compute = ComputePrecision::F64;
+    rc.store_precision = store.precision;
+    let reference = data_parallel::run(&rc, &store, &[]).unwrap();
+    let mut combined = sink_a.clone();
+    combined.merge(res_b.sink.as_ref().unwrap());
+    assert_eq!(combined.hist, reference.sink.hist);
+    assert_eq!(combined.pair_sums, reference.sink.pair_sums);
+
+    // Listing is deterministic: submit order == (time, id) order.
+    let listed = client.list().unwrap();
+    let jobs = listed.as_arr().unwrap();
+    assert_eq!(jobs.len(), 2);
+    let ids: Vec<f64> = jobs
+        .iter()
+        .map(|j| j.get("id").unwrap().as_f64().unwrap())
+        .collect();
+    assert_eq!(ids, vec![a as f64, b as f64]);
+    assert_eq!(jobs[1].get("tag").unwrap().as_str(), Some("tcp-b"));
+
+    // Live metrics carry the net counters.
+    let m = client.metrics().unwrap();
+    let net = m.get("net").unwrap().get("counters").unwrap();
+    assert!(net.get("net_frames_in").unwrap().as_f64().unwrap() > 0.0);
+    assert!(net.get("net_bytes_out").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(net.get("net_conns").unwrap().as_f64(), Some(1.0));
+
+    drop(client);
+    let final_metrics = server.shutdown();
+    let run = final_metrics.get("run").unwrap().get("counters").unwrap();
+    assert_eq!(run.get("jobs_completed").unwrap().as_f64(), Some(2.0));
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn saturated_admission_returns_typed_busy() {
+    let root = scratch("busy");
+    let (_, store_dir) = make_store(&root);
+    // One queue slot, and a long linger so the first job reliably holds
+    // it while the second submission arrives.
+    let cfg = ServiceConfig {
+        max_queue: 1,
+        linger_ms: 400,
+        ..service_cfg()
+    };
+    let server = NetServer::start(cfg, loopback_net()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+
+    let a = client.submit(&JobSpec::new(&store_dir, 64)).unwrap();
+    let err = client
+        .submit(&JobSpec::new(&store_dir, 64))
+        .expect_err("second job must hit admission control");
+    assert!(err.is_busy(), "typed busy, got: {err}");
+    assert!(err.to_string().contains("queue full"), "{err}");
+
+    // Busy is retryable: once the slot frees, the same submit succeeds.
+    let res_a = client.wait(a, Duration::from_secs(60)).unwrap().unwrap();
+    assert_eq!(res_a.result.get("status").unwrap().as_str(), Some("done"));
+    let c = client.submit(&JobSpec::new(&store_dir, 32)).unwrap();
+    assert!(client.wait(c, Duration::from_secs(60)).unwrap().is_some());
+
+    let m = client.metrics().unwrap();
+    let net = m.get("net").unwrap().get("counters").unwrap();
+    assert!(
+        net.get("net_rejects_busy").unwrap().as_f64().unwrap() >= 1.0,
+        "busy rejection counted"
+    );
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn connection_pool_bound_rejects_then_recovers() {
+    let root = scratch("pool");
+    let (_, _store_dir) = make_store(&root);
+    let net = NetConfig {
+        max_conns: 1,
+        ..loopback_net()
+    };
+    let server = NetServer::start(service_cfg(), net.clone()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut first = Client::connect(&addr, &net).unwrap();
+    first.ping().unwrap();
+    // Second connection is accepted at the TCP level but rejected with a
+    // typed busy frame before any op is served.
+    let mut second = Client::connect(&addr, &net).unwrap();
+    let err = second.ping().expect_err("pool bound must reject");
+    assert!(err.is_busy(), "typed busy, got: {err}");
+
+    // Dropping the first connection frees the slot (the server reaps the
+    // closed socket on its next read); a fresh connection then works.
+    drop(first);
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    loop {
+        let mut retry = Client::connect(&addr, &net).unwrap();
+        if retry.ping().is_ok() {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "slot never freed after client disconnect"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    drop(second);
+    drop(server);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_jobs() {
+    let root = scratch("drain");
+    let (_, store_dir) = make_store(&root);
+    // A long linger keeps the job in flight when shutdown arrives.
+    let cfg = ServiceConfig {
+        linger_ms: 300,
+        ..service_cfg()
+    };
+    let server = NetServer::start(cfg, loopback_net()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+
+    let id = client.submit(&JobSpec::new(&store_dir, 96)).unwrap();
+    // Shutdown races the linger window: the reply must still prove the
+    // accepted job ran to completion before the server stopped.
+    let metrics = client.shutdown_server(Duration::from_secs(120)).unwrap();
+    let run = metrics.get("run").unwrap().get("counters").unwrap();
+    assert_eq!(
+        run.get("jobs_completed").unwrap().as_f64(),
+        Some(1.0),
+        "in-flight job drained, not dropped"
+    );
+    assert_eq!(run.get("jobs_failed").and_then(|v| v.as_f64()), Some(0.0));
+    let view = server.service().queue().status(id).unwrap();
+    assert_eq!(view.status.as_str(), "done");
+    assert_eq!(view.done, 96);
+    assert!(server.shutdown_requested());
+
+    // New work after the drain is refused (shutdown, not busy).
+    let mut late = Client::connect(&addr, &loopback_net()).unwrap();
+    let err = late
+        .submit(&JobSpec::new(&store_dir, 8))
+        .expect_err("post-drain submit must fail");
+    assert!(!err.is_busy());
+    assert!(err.to_string().contains("shutting down"), "{err}");
+
+    drop(client);
+    drop(late);
+    let final_metrics = server.shutdown();
+    let run = final_metrics.get("run").unwrap().get("counters").unwrap();
+    assert_eq!(run.get("jobs_completed").unwrap().as_f64(), Some(1.0));
+    std::fs::remove_dir_all(&root).unwrap();
+}
