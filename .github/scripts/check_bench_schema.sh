@@ -1,0 +1,71 @@
+#!/usr/bin/env bash
+# Validate the repo-root BENCH_*.json KPI files against
+# docs/bench.schema.json using jq only — no Rust toolchain needed, so
+# this gate runs even where cargo cannot.
+#
+# Enforced rules (see the schema's description):
+#   - required keys present (bench, measured, wall_secs) with the
+#     declared types;
+#   - non-empty bench name;
+#   - at least one KPI field (key matching the schema's x-kpi-pattern);
+#   - no placeholder/measured drift: measured:true demands a numeric
+#     wall_secs and at least one numeric KPI field.
+set -euo pipefail
+cd "$(dirname "$0")/../.."
+
+schema=docs/bench.schema.json
+if ! jq empty "$schema" 2>/dev/null; then
+  echo "FAIL $schema is not valid JSON" >&2
+  exit 1
+fi
+
+shopt -s nullglob
+files=(BENCH_*.json)
+if [ ${#files[@]} -eq 0 ]; then
+  echo "no BENCH_*.json files found at the repo root" >&2
+  exit 1
+fi
+
+status=0
+for f in "${files[@]}"; do
+  if jq -e --slurpfile schema "$schema" '
+    $schema[0] as $s
+    | . as $doc
+    | ($s.required - ($doc | keys)) as $missing
+    | if ($missing | length) > 0
+        then error("missing required keys: " + ($missing | join(", ")))
+      else . end
+    | reduce ($s.properties | to_entries[]) as $p (.;
+        if ($doc | has($p.key) | not) then .
+        else
+          (($doc[$p.key]) | type) as $t
+          | (if ($p.value.type | type) == "array"
+               then $p.value.type
+             else [$p.value.type] end) as $want
+          | if ($want | index($t)) == null
+              then error("key " + $p.key + ": got " + $t
+                         + ", want " + ($want | join("|")))
+            else . end
+        end)
+    | if ($doc.bench | length) == 0
+        then error("empty bench name")
+      else . end
+    | ([$doc | keys[] | select(test($s["x-kpi-pattern"]))]) as $kpis
+    | if ($kpis | length) == 0
+        then error("no KPI field matching " + $s["x-kpi-pattern"])
+      else . end
+    | if $doc.measured == true and (($doc.wall_secs | type) != "number")
+        then error("measured:true but wall_secs is not a number")
+      else . end
+    | if $doc.measured == true
+         and (([$kpis[] | $doc[.] | select(type == "number")] | length) == 0)
+        then error("measured:true but every KPI field is null")
+      else . end
+  ' "$f" > /dev/null; then
+    echo "ok   $f"
+  else
+    echo "FAIL $f violates $schema" >&2
+    status=1
+  fi
+done
+exit $status

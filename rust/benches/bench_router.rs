@@ -1,15 +1,16 @@
-//! Loopback throughput of the TCP transport: submit→stream round trips
-//! through a real `NetServer` + `net::client::Client`, reporting job
-//! round-trip rate, frames/s, and payload MB/s, written to
-//! `BENCH_net.json`.
+//! Loopback throughput of the routing tier: submit→stream round trips
+//! through a real `Router` in front of two real `NetServer`s, reporting
+//! routed-job rate, affinity share, and spillover counts, written to
+//! `BENCH_router.json`.
 //!
-//! Run with `cargo bench --bench bench_net` from `rust/`.
+//! Run with `cargo bench --bench bench_router` from `rust/`.
 
 use std::time::{Duration, Instant};
 
-use fastmps::config::{ComputePrecision, NetConfig, Preset, ServiceConfig};
+use fastmps::config::{ComputePrecision, NetConfig, Preset, RouterConfig, ServiceConfig};
 use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
 use fastmps::net::{Client, NetServer};
+use fastmps::router::Router;
 use fastmps::service::JobSpec;
 use fastmps::util::bench;
 use fastmps::util::json::Json;
@@ -18,9 +19,9 @@ const JOBS: usize = 24;
 const SAMPLES_PER_JOB: u64 = 500;
 
 fn main() {
-    bench::header("net", "loopback submit→stream throughput (FMPN/TCP)");
+    bench::header("router", "loopback routed submit→stream throughput (2 backends)");
 
-    let root = std::env::temp_dir().join(format!("fastmps-bench-net-{}", std::process::id()));
+    let root = std::env::temp_dir().join(format!("fastmps-bench-router-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&root);
     std::fs::create_dir_all(&root).unwrap();
     let store_dir = root.join("store");
@@ -31,7 +32,7 @@ fn main() {
     spec.displacement_sigma = 0.0;
     GammaStore::create(&store_dir, &spec, StorePrecision::F16, StoreCodec::Lz).unwrap();
 
-    let cfg = ServiceConfig {
+    let backend_cfg = || ServiceConfig {
         workers: 2,
         n2_micro: 128,
         target_batch: Some(1024),
@@ -43,51 +44,61 @@ fn main() {
         addr: "127.0.0.1:0".into(),
         ..Default::default()
     };
-    let server = NetServer::start(cfg, net.clone()).unwrap();
-    let addr = server.local_addr().to_string();
+    let b1 = NetServer::start(backend_cfg(), net.clone()).unwrap();
+    let b2 = NetServer::start(backend_cfg(), net.clone()).unwrap();
+    let rcfg = RouterConfig {
+        backends: vec![b1.local_addr().to_string(), b2.local_addr().to_string()],
+        probe_interval_ms: 100,
+        ..Default::default()
+    };
+    let router = Router::start(rcfg, net.clone()).unwrap();
+    let addr = router.local_addr().to_string();
     let mut client = Client::connect(&addr, &net).unwrap();
 
     let t0 = Instant::now();
-    let ids: Vec<_> = (0..JOBS)
+    let ids: Vec<u64> = (0..JOBS)
         .map(|k| {
             let mut s = JobSpec::new(&store_dir, SAMPLES_PER_JOB);
             s.sample_base = k as u64 * SAMPLES_PER_JOB;
-            s.tag = format!("bench-net-{k}");
+            s.tag = format!("bench-router-{k}");
             client.submit(&s).unwrap()
         })
         .collect();
     let mut streamed = 0usize;
-    for id in ids {
+    for id in &ids {
         let res = client
-            .wait(id, Duration::from_secs(300))
+            .wait(*id, Duration::from_secs(300))
             .unwrap()
-            .expect("job terminal within bench timeout");
+            .expect("job terminal within bench budget");
         if res.sink.is_some() {
             streamed += 1;
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let metrics = client.shutdown_server(Duration::from_secs(300)).unwrap();
+    let metrics = router.metrics_json();
     drop(client);
-    let _ = server.shutdown();
+    drop(router);
+    drop(b1);
+    drop(b2);
     let _ = std::fs::remove_dir_all(&root);
 
     let counter = |k: &str| {
         metrics
-            .get("net")
-            .and_then(|n| n.get("counters"))
+            .get("run")
+            .and_then(|r| r.get("counters"))
             .and_then(|c| c.get(k))
             .and_then(|v| v.as_f64())
             .unwrap_or(0.0)
     };
-    let frames = counter("net_frames_in") + counter("net_frames_out");
-    let bytes = counter("net_bytes_in") + counter("net_bytes_out");
     let total_samples = (JOBS as f64) * (SAMPLES_PER_JOB as f64);
+    let submits = counter("router_submits");
+    let spillovers = counter("router_spillovers");
     let j = Json::obj(vec![
-        ("bench", Json::Str("net-loopback".into())),
+        ("bench", Json::Str("router-loopback".into())),
         ("measured", Json::Bool(true)),
         ("jobs", Json::Num(JOBS as f64)),
         ("samples_per_job", Json::Num(SAMPLES_PER_JOB as f64)),
+        ("backends", Json::Num(2.0)),
         ("payloads_streamed", Json::Num(streamed as f64)),
         ("wall_secs", Json::Num(wall)),
         (
@@ -99,16 +110,18 @@ fn main() {
             Json::Num(if wall > 0.0 { total_samples / wall } else { 0.0 }),
         ),
         (
-            "frames_per_sec",
-            Json::Num(if wall > 0.0 { frames / wall } else { 0.0 }),
+            "affinity_share",
+            // One store ⇒ every job should land on its rendezvous pick;
+            // spillovers only under induced Busy.
+            Json::Num(if submits > 0.0 {
+                (submits - spillovers) / submits
+            } else {
+                0.0
+            }),
         ),
-        (
-            "wire_mb_per_sec",
-            Json::Num(if wall > 0.0 { bytes / wall / 1e6 } else { 0.0 }),
-        ),
-        ("wire_bytes", Json::Num(bytes)),
-        ("wire_frames", Json::Num(frames)),
-        ("service", metrics),
+        ("spillovers", Json::Num(spillovers)),
+        ("busy_rejects", Json::Num(counter("router_busy_rejects"))),
+        ("router", metrics),
     ]);
 
     bench::row(&[
@@ -120,21 +133,18 @@ fn main() {
             format!("{:.1}", j.get("jobs_per_sec").unwrap().as_f64().unwrap()),
         ),
         (
-            "frames_per_sec",
-            format!("{:.1}", j.get("frames_per_sec").unwrap().as_f64().unwrap()),
+            "affinity_share",
+            format!("{:.3}", j.get("affinity_share").unwrap().as_f64().unwrap()),
         ),
-        (
-            "wire_mb_per_sec",
-            format!("{:.3}", j.get("wire_mb_per_sec").unwrap().as_f64().unwrap()),
-        ),
+        ("spillovers", format!("{spillovers:.0}")),
     ]);
-    bench::paper("no paper counterpart — transport KPIs for the ROADMAP north star");
+    bench::paper("no paper counterpart — routing-tier KPIs for the ROADMAP north star");
 
-    std::fs::write("../BENCH_net.json", j.pretty())
+    std::fs::write("../BENCH_router.json", j.pretty())
         .or_else(|_| {
             // Fall back to CWD when not run from `rust/`.
-            std::fs::write("BENCH_net.json", j.pretty())
+            std::fs::write("BENCH_router.json", j.pretty())
         })
         .unwrap();
-    println!("  wrote BENCH_net.json");
+    println!("  wrote BENCH_router.json");
 }

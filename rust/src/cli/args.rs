@@ -7,7 +7,10 @@ use crate::util::error::{Error, Result};
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
-    values: BTreeMap<String, String>,
+    /// Every occurrence of `--key value`, in order — repeatable flags
+    /// (`--backend a --backend b`) keep all values; scalar getters read
+    /// the last one, shell-override style.
+    values: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
 }
@@ -19,7 +22,7 @@ impl Args {
             .next()
             .cloned()
             .ok_or_else(|| Error::config("missing subcommand (try 'fastmps help')"))?;
-        let mut values = BTreeMap::new();
+        let mut values: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut flags = Vec::new();
         while let Some(a) = it.next() {
             let Some(key) = a.strip_prefix("--") else {
@@ -27,7 +30,10 @@ impl Args {
             };
             match it.peek() {
                 Some(v) if !v.starts_with("--") => {
-                    values.insert(key.to_string(), it.next().unwrap().clone());
+                    values
+                        .entry(key.to_string())
+                        .or_default()
+                        .push(it.next().unwrap().clone());
                 }
                 _ => flags.push(key.to_string()),
             }
@@ -42,7 +48,26 @@ impl Args {
 
     pub fn str_opt(&self, key: &str) -> Option<&str> {
         self.consumed.borrow_mut().push(key.to_string());
-        self.values.get(key).map(|s| s.as_str())
+        self.values
+            .get(key)
+            .and_then(|vs| vs.last())
+            .map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable option, in argv order; each occurrence
+    /// may also be comma-separated (`--backend a:1,b:1`).
+    pub fn str_list(&self, key: &str) -> Vec<String> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.values
+            .get(key)
+            .map(|vs| {
+                vs.iter()
+                    .flat_map(|v| v.split(','))
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect()
+            })
+            .unwrap_or_default()
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
@@ -150,5 +175,18 @@ mod tests {
     fn negative_numbers_as_values() {
         let a = Args::parse(&argv("x --k 2")).unwrap();
         assert_eq!(a.usize_or("k", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn repeated_options_collect_and_scalar_reads_last() {
+        let a = Args::parse(&argv(
+            "route --backend a:1 --backend b:2,c:3 --workers 2 --workers 4",
+        ))
+        .unwrap();
+        assert_eq!(a.str_list("backend"), vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(a.usize_or("workers", 0).unwrap(), 4, "last wins");
+        a.finish().unwrap();
+        let b = Args::parse(&argv("route")).unwrap();
+        assert!(b.str_list("backend").is_empty());
     }
 }

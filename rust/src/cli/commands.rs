@@ -6,9 +6,11 @@ use std::sync::Arc;
 use super::args::Args;
 use crate::comm::NetPreset;
 use crate::config::{
-    ComputePrecision, EngineKind, NetConfig, Preset, RunConfig, ScalingMode, ServiceConfig,
+    ComputePrecision, EngineKind, NetConfig, Preset, RouterConfig, RunConfig, ScalingMode,
+    ServiceConfig,
 };
 use crate::net::{Client, NetServer};
+use crate::router::Router;
 use crate::coordinator::{data_parallel, model_parallel, tensor_parallel};
 use crate::io::{GammaStore, StoreCodec, StorePrecision};
 use crate::mps::gbs::GbsSpec;
@@ -49,6 +51,14 @@ COMMANDS:
               file only: [--drain]
               tcp only:  [--max-conns N] [--frame-mb N]
                          [--read-timeout-ms N] [--write-timeout-ms N]
+  route       Front a fleet of TCP serve instances with store-affinity routing
+              --listen ADDR --backend ADDR [--backend ADDR ...]
+              [--probe-ms N] [--degraded-after N] [--down-after N]
+              [--retry-budget N] [--backoff-ms N] [--backoff-cap-ms N]
+              [--jitter-ms N] [--drain-cap-s N] [--seed N]
+              [--max-conns N] [--frame-mb N]
+              [--read-timeout-ms N] [--write-timeout-ms N]
+              [--max-seconds S] [--json]
   submit      Submit a sampling job to a running serve instance
               (--jobs DIR | --connect ADDR) --data STORE --samples N
               [--sample-base B] [--compute C] [--tag T] [--wait]
@@ -78,6 +88,7 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "bench-comm" => cmd_bench_comm(&args),
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
         "submit" => cmd_submit(&args),
         "jobs" => cmd_jobs(&args),
         "metrics" => cmd_metrics(&args),
@@ -463,6 +474,59 @@ fn cmd_serve_net(args: &Args, addr: String) -> Result<()> {
     Ok(())
 }
 
+fn router_config_from_args(args: &Args) -> Result<RouterConfig> {
+    let d = RouterConfig::default();
+    Ok(RouterConfig {
+        backends: args.str_list("backend"),
+        probe_interval_ms: args.u64_or("probe-ms", d.probe_interval_ms)?,
+        degraded_after: args.u64_or("degraded-after", u64::from(d.degraded_after))? as u32,
+        down_after: args.u64_or("down-after", u64::from(d.down_after))? as u32,
+        retry_budget: args.usize_or("retry-budget", d.retry_budget)?,
+        backoff_base_ms: args.u64_or("backoff-ms", d.backoff_base_ms)?,
+        backoff_cap_ms: args.u64_or("backoff-cap-ms", d.backoff_cap_ms)?,
+        jitter_ms: args.u64_or("jitter-ms", d.jitter_ms)?,
+        drain_cap_secs: args.u64_or("drain-cap-s", d.drain_cap_secs)?,
+        seed: args.u64_or("seed", d.seed)?,
+    })
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    let addr = args.req("listen")?.to_string();
+    let cfg = router_config_from_args(args)?;
+    let net = net_config_from_args(args, addr)?;
+    let max_secs = args.f64_opt("max-seconds")?;
+    let as_json = args.flag("json");
+    args.finish()?;
+    let router = Router::start(cfg, net)?;
+    let addr = router.local_addr();
+    println!(
+        "routing on {addr} across {} backends (stop: fastmps stop --connect {addr})",
+        router.health().len()
+    );
+    router.run_until_shutdown(max_secs);
+    let metrics = router.shutdown();
+    if as_json {
+        println!("{}", metrics.pretty());
+    } else {
+        let counter = |k: &str| {
+            metrics
+                .get("run")
+                .and_then(|r| r.get("counters"))
+                .and_then(|c| c.get(k))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        println!(
+            "routed on {addr}; {} jobs placed | {} spillovers | {} busy rejects | {} dropped",
+            counter("router_submits"),
+            counter("router_spillovers"),
+            counter("router_busy_rejects"),
+            counter("router_dropped_jobs"),
+        );
+    }
+    Ok(())
+}
+
 fn job_spec_from_args(args: &Args) -> Result<crate::service::JobSpec> {
     let samples: u64 = {
         let v = args.req("samples")?;
@@ -765,6 +829,58 @@ mod tests {
         assert!(server.shutdown_requested());
         drop(server);
         std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn router_cli_round_trip() {
+        let root = std::env::temp_dir().join(format!("fastmps-cli-route-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let store = root.join("store");
+        run_cli(&argv(&format!(
+            "gen-data --m 5 --chi 8 --d 3 --out {} --decay 0 --sigma 0",
+            store.display()
+        )))
+        .unwrap();
+        let backend_cfg = || ServiceConfig {
+            workers: 2,
+            n2_micro: 32,
+            target_batch: Some(128),
+            compute: ComputePrecision::F64,
+            linger_ms: 2,
+            ..Default::default()
+        };
+        let net0 = NetConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        };
+        let b1 = NetServer::start(backend_cfg(), net0.clone()).unwrap();
+        let b2 = NetServer::start(backend_cfg(), net0.clone()).unwrap();
+        let rcfg = RouterConfig {
+            backends: vec![b1.local_addr().to_string(), b2.local_addr().to_string()],
+            probe_interval_ms: 50,
+            ..Default::default()
+        };
+        let router = Router::start(rcfg, net0).unwrap();
+        let addr = router.local_addr().to_string();
+        run_cli(&argv(&format!(
+            "submit --connect {addr} --data {} --samples 64 --wait --timeout-s 60 --json",
+            store.display()
+        )))
+        .unwrap();
+        run_cli(&argv(&format!("jobs --connect {addr}"))).unwrap();
+        run_cli(&argv(&format!("metrics --connect {addr}"))).unwrap();
+        run_cli(&argv(&format!("stop --connect {addr}"))).unwrap();
+        assert!(router.shutdown_requested());
+        drop(router);
+        drop(b1);
+        drop(b2);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn route_requires_backends() {
+        assert!(run_cli(&argv("route --listen 127.0.0.1:0")).is_err());
     }
 
     #[test]

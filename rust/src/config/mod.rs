@@ -409,6 +409,114 @@ impl NetConfig {
     }
 }
 
+/// Configuration of the store-affinity routing tier (`fastmps route`,
+/// `router::Router`). The router fronts a fleet of FMPN backends: it
+/// speaks FMPN to clients on its listen side (listener knobs come from
+/// [`NetConfig`], exactly like a plain server) and FMPN to each backend
+/// on the other, so neither side needs protocol changes.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// FMPN backend addresses (`host:port`). Order-insensitive:
+    /// placement comes from rendezvous hashing over the address strings,
+    /// not from list position — restarts with a reordered flag list keep
+    /// the same store→backend affinity.
+    pub backends: Vec<String>,
+    /// Health-probe period (one `ping` round-trip per backend per tick).
+    pub probe_interval_ms: u64,
+    /// Consecutive probe/forward failures before a backend is `Degraded`
+    /// (still routable, ranked after every `Alive` backend).
+    pub degraded_after: u32,
+    /// Consecutive failures before `Down` (excluded from routing until a
+    /// probe succeeds again).
+    pub down_after: u32,
+    /// Total submit attempts across backends before the router replies
+    /// with a typed `busy` frame of its own.
+    pub retry_budget: usize,
+    /// Base / cap of the capped exponential backoff between spillover
+    /// retry cycles.
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+    /// Max extra jitter added to each backoff sleep (de-correlates
+    /// retrying clients).
+    pub jitter_ms: u64,
+    /// Cap on the graceful drain triggered by the `shutdown` op.
+    pub drain_cap_secs: u64,
+    /// Seed of the jitter stream (deterministic tests).
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            backends: Vec::new(),
+            probe_interval_ms: 250,
+            degraded_after: 1,
+            down_after: 3,
+            retry_budget: 6,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 500,
+            jitter_ms: 10,
+            drain_cap_secs: 600,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RouterConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.backends.is_empty() {
+            return Err(Error::config("router: at least one --backend is required"));
+        }
+        for b in &self.backends {
+            if b.is_empty() {
+                return Err(Error::config("router: backend address must not be empty"));
+            }
+        }
+        let mut seen = self.backends.clone();
+        seen.sort();
+        seen.dedup();
+        if seen.len() != self.backends.len() {
+            return Err(Error::config(
+                "router: duplicate backend address (each backend routes once)",
+            ));
+        }
+        if self.probe_interval_ms == 0 {
+            return Err(Error::config("router: probe_interval_ms must be ≥ 1"));
+        }
+        if self.degraded_after == 0 || self.down_after < self.degraded_after {
+            return Err(Error::config(
+                "router: need down_after ≥ degraded_after ≥ 1",
+            ));
+        }
+        if self.retry_budget == 0 {
+            return Err(Error::config("router: retry_budget must be ≥ 1"));
+        }
+        if self.backoff_base_ms == 0 || self.backoff_cap_ms < self.backoff_base_ms {
+            return Err(Error::config(
+                "router: need backoff_cap_ms ≥ backoff_base_ms ≥ 1",
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "backends",
+                Json::Arr(self.backends.iter().cloned().map(Json::Str).collect()),
+            ),
+            ("probe_interval_ms", Json::Num(self.probe_interval_ms as f64)),
+            ("degraded_after", Json::Num(self.degraded_after as f64)),
+            ("down_after", Json::Num(self.down_after as f64)),
+            ("retry_budget", Json::Num(self.retry_budget as f64)),
+            ("backoff_base_ms", Json::Num(self.backoff_base_ms as f64)),
+            ("backoff_cap_ms", Json::Num(self.backoff_cap_ms as f64)),
+            ("jitter_ms", Json::Num(self.jitter_ms as f64)),
+            ("drain_cap_secs", Json::Num(self.drain_cap_secs as f64)),
+        ])
+    }
+}
+
 /// Paper datasets (Table 1). `scale` shrinks (M, χ) to CPU-testbed size
 /// while keeping ASP (and hence the dynamic-χ profile shape) intact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -598,6 +706,33 @@ mod tests {
             ..NetConfig::default()
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn router_config_validation() {
+        let mut r = RouterConfig {
+            backends: vec!["127.0.0.1:7734".into(), "127.0.0.1:7735".into()],
+            ..RouterConfig::default()
+        };
+        r.validate().unwrap();
+        assert_eq!(
+            r.to_json().get("backends").unwrap().as_arr().map(|a| a.len()),
+            Some(2)
+        );
+        r.backends.clear();
+        assert!(r.validate().is_err(), "no backends");
+        r.backends = vec!["a:1".into(), "a:1".into()];
+        assert!(r.validate().is_err(), "duplicate backends");
+        r.backends = vec!["a:1".into()];
+        r.down_after = 0;
+        assert!(r.validate().is_err(), "down_after below degraded_after");
+        r.down_after = 3;
+        r.retry_budget = 0;
+        assert!(r.validate().is_err(), "zero retry budget");
+        r.retry_budget = 1;
+        r.backoff_cap_ms = 1;
+        r.backoff_base_ms = 2;
+        assert!(r.validate().is_err(), "cap below base");
     }
 
     #[test]

@@ -310,12 +310,7 @@ fn site_path(dir: &Path, i: usize) -> PathBuf {
 pub fn manifest_hash_at(dir: &Path) -> Result<u64> {
     let path = dir.join("manifest.json");
     let bytes = fs::read(&path).map_err(|e| Error::io(path.display(), e))?;
-    let mut h = 0xcbf29ce484222325u64;
-    for b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    Ok(h)
+    Ok(crate::util::fnv1a(&bytes))
 }
 
 fn encode_site(g: &Tensor3<f64>, precision: StorePrecision, codec: StoreCodec) -> Result<Vec<u8>> {

@@ -21,6 +21,10 @@
 //! - **Net (`net`)**: the service's TCP transport — the versioned FMPN
 //!   wire protocol (`docs/PROTOCOL.md`), a bounded-pool server, and a
 //!   blocking client — behind `serve --listen` / `submit --connect`.
+//! - **Router (`router`)**: the horizontal tier — a store-affinity
+//!   gateway (rendezvous hashing on manifest hashes, health-probed
+//!   backends, `Busy`-aware spillover, graceful drain) that fronts a
+//!   fleet of FMPN servers behind `fastmps route`.
 
 pub mod cli;
 pub mod comm;
@@ -33,6 +37,7 @@ pub mod mps;
 pub mod net;
 pub mod perfmodel;
 pub mod rng;
+pub mod router;
 pub mod runtime;
 pub mod sampler;
 pub mod service;

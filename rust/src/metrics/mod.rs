@@ -63,6 +63,25 @@ pub mod keys {
     pub const NET_REJECTS_CONN: &str = "net_rejects_conn";
     /// Submissions rejected with a typed `busy` frame (admission full).
     pub const NET_REJECTS_BUSY: &str = "net_rejects_busy";
+
+    // Routing-tier counters (`router::gateway`).
+    /// Jobs the router placed on a backend.
+    pub const ROUTER_SUBMITS: &str = "router_submits";
+    /// Jobs that landed on a backend other than their rendezvous-first
+    /// choice (that backend was `Busy`, unhealthy, or unreachable).
+    pub const ROUTER_SPILLOVERS: &str = "router_spillovers";
+    /// Submits that exhausted the retry budget (the client saw `busy`).
+    pub const ROUTER_BUSY_REJECTS: &str = "router_busy_rejects";
+    /// Forwarded RPCs that failed at the transport level.
+    pub const ROUTER_FORWARD_ERRORS: &str = "router_forward_errors";
+    /// Non-submit ops (status/wait/cancel/list) forwarded to backends.
+    pub const ROUTER_FORWARDS: &str = "router_forwards";
+    /// Health probes issued / failed.
+    pub const ROUTER_PROBES: &str = "router_probes";
+    pub const ROUTER_PROBE_FAILURES: &str = "router_probe_failures";
+    /// In-flight jobs the drain gave up on (backend unreachable); a clean
+    /// drain leaves this at 0.
+    pub const ROUTER_DROPPED_JOBS: &str = "router_dropped_jobs";
 }
 
 impl Metrics {

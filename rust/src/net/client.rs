@@ -14,6 +14,7 @@ use super::frame::{self, Frame, FrameReader, FrameWriter};
 use crate::config::NetConfig;
 use crate::sampler::sink::SampleSink;
 use crate::service::{JobId, JobSpec};
+use crate::util::backoff::Backoff;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -35,10 +36,10 @@ pub struct Client {
 
 impl Client {
     /// Connect and exchange preambles. `net.addr` is ignored — the
-    /// explicit `addr` wins — but the frame cap and timeouts apply.
+    /// explicit `addr` wins — but the frame cap and timeouts apply; the
+    /// write timeout doubles as the dial deadline.
     pub fn connect(addr: &str, net: &NetConfig) -> Result<Client> {
-        let stream =
-            TcpStream::connect(addr).map_err(|e| Error::io(format!("connect {addr}"), e))?;
+        let stream = connect_stream(addr, net.write_timeout_ms.max(1))?;
         let _ = stream.set_nodelay(true);
         stream
             .set_write_timeout(Some(Duration::from_millis(net.write_timeout_ms.max(1))))
@@ -145,17 +146,40 @@ impl Client {
     /// still running when the timeout hit. Timeouts beyond the server's
     /// 600 s per-request cap are honored by re-issuing the wait until
     /// the full deadline passes.
+    ///
+    /// A typed `busy` reply (a saturated router, or a connection-pool
+    /// rejection in front of the service) is backpressure, not failure:
+    /// the wait is retried with capped exponential backoff + jitter —
+    /// mirroring the file transport's `wait_result_poll` — and only
+    /// surfaces as [`Error::Busy`] once the deadline passes.
     pub fn wait(&mut self, id: JobId, timeout: Duration) -> Result<Option<JobResult>> {
         let deadline = std::time::Instant::now() + timeout;
+        let mut backoff = Backoff::new(1, 250, 16, id ^ self.read_timeout_ms);
+        let mut last_busy: Option<Error> = None;
         loop {
             let remaining = deadline.saturating_duration_since(std::time::Instant::now());
-            if let Some(res) = self.wait_once(id, remaining.min(Duration::from_secs(600)))? {
-                return Ok(Some(res));
+            match self.wait_once(id, remaining.min(Duration::from_secs(600))) {
+                Ok(Some(res)) => return Ok(Some(res)),
+                Ok(None) => {
+                    if std::time::Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                    // Server-side 600 s per-request cap; re-issue the rest.
+                }
+                Err(e) if e.is_busy() => {
+                    if !backoff.sleep_before(deadline) {
+                        return Err(e);
+                    }
+                    last_busy = Some(e);
+                }
+                Err(e) => {
+                    // A failure right after a busy reply is usually the
+                    // rejecting endpoint closing its lame-duck socket:
+                    // surface the typed (retryable) Busy rather than the
+                    // secondary transport error.
+                    return Err(last_busy.unwrap_or(e));
+                }
             }
-            if std::time::Instant::now() >= deadline {
-                return Ok(None);
-            }
-            // Server-side 600 s per-request cap hit; re-issue for the rest.
         }
     }
 
@@ -238,5 +262,122 @@ impl Client {
         r.get("metrics")
             .cloned()
             .ok_or_else(|| Error::format("net wire: shutdown reply without metrics"))
+    }
+}
+
+/// Resolve and dial with a connect deadline, so a blackholed peer (dead
+/// IP, dropped packets) cannot stall callers for the OS default of
+/// minutes — the router's health prober depends on failing fast here.
+fn connect_stream(addr: &str, timeout_ms: u64) -> Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let timeout = Duration::from_millis(timeout_ms);
+    let addrs = addr
+        .to_socket_addrs()
+        .map_err(|e| Error::io(format!("resolve {addr}"), e))?;
+    let mut last: Option<std::io::Error> = None;
+    for a in addrs {
+        match TcpStream::connect_timeout(&a, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(Error::io(
+        format!("connect {addr}"),
+        last.unwrap_or_else(|| std::io::Error::other("address resolved to nothing")),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufReader as IoBufReader, BufWriter as IoBufWriter};
+    use std::net::TcpListener;
+    use std::time::Instant;
+
+    /// A minimal scripted FMPN endpoint: replies `busy` to the first
+    /// `busy_replies` wait ops, then a terminal `result`. Returns the
+    /// number of wait ops it served.
+    fn scripted_server(busy_replies: usize) -> (String, std::thread::JoinHandle<usize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut w = FrameWriter::new(IoBufWriter::new(stream.try_clone().unwrap()));
+            let mut r = FrameReader::new(IoBufReader::new(stream), 1 << 20);
+            w.write_preamble().unwrap();
+            r.read_preamble().unwrap();
+            let mut waits = 0usize;
+            loop {
+                let msg = match r.read_frame() {
+                    Ok(Frame::Ctrl(msg)) => msg,
+                    _ => return waits, // client hung up
+                };
+                assert_eq!(msg.get("op").and_then(|v| v.as_str()), Some("wait"));
+                waits += 1;
+                if waits <= busy_replies {
+                    w.write_ctrl(&Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("type", Json::Str("busy".into())),
+                        ("error", Json::Str("queue full".into())),
+                    ]))
+                    .unwrap();
+                } else {
+                    w.write_ctrl(&Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("type", Json::Str("result".into())),
+                        (
+                            "result",
+                            Json::obj(vec![
+                                ("id", Json::Num(7.0)),
+                                ("status", Json::Str("done".into())),
+                            ]),
+                        ),
+                        ("payload", Json::Bool(false)),
+                    ]))
+                    .unwrap();
+                    return waits;
+                }
+            }
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn wait_backs_off_and_retries_through_busy() {
+        let (addr, server) = scripted_server(2);
+        let net = NetConfig {
+            addr: addr.clone(),
+            ..NetConfig::default()
+        };
+        let mut c = Client::connect(&addr, &net).unwrap();
+        let t0 = Instant::now();
+        let res = c
+            .wait(7, Duration::from_secs(30))
+            .unwrap()
+            .expect("terminal result after busy replies");
+        // Two busy replies ⇒ two backoff sleeps (1 ms + 2 ms minimum).
+        assert!(t0.elapsed() >= Duration::from_millis(3), "{:?}", t0.elapsed());
+        assert_eq!(
+            res.result.get("status").and_then(|v| v.as_str()),
+            Some("done")
+        );
+        assert!(res.sink.is_none());
+        assert_eq!(server.join().unwrap(), 3, "busy, busy, result");
+    }
+
+    #[test]
+    fn wait_surfaces_busy_once_the_deadline_passes() {
+        let (addr, server) = scripted_server(usize::MAX);
+        let net = NetConfig {
+            addr: addr.clone(),
+            ..NetConfig::default()
+        };
+        let mut c = Client::connect(&addr, &net).unwrap();
+        let err = c
+            .wait(7, Duration::from_millis(60))
+            .expect_err("permanently busy must surface as Busy");
+        assert!(err.is_busy(), "typed busy, got: {err}");
+        drop(c); // server loop exits on EOF
+        assert!(server.join().unwrap() >= 1);
     }
 }

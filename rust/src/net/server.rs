@@ -242,7 +242,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 handle_accept(stream, &shared);
-                reap_finished(&shared);
+                reap_conns(&shared.conns);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(10));
@@ -253,9 +253,9 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 }
 
 /// Join connection threads that already finished so the handle list does
-/// not grow for the life of a busy server.
-fn reap_finished(shared: &Arc<Shared>) {
-    let mut g = shared.conns.lock().unwrap();
+/// not grow for the life of a busy server (shared with the routing tier).
+pub(crate) fn reap_conns(conns: &Mutex<Vec<JoinHandle<()>>>) {
+    let mut g = conns.lock().unwrap();
     let mut i = 0;
     while i < g.len() {
         if g[i].is_finished() {
@@ -266,31 +266,35 @@ fn reap_finished(shared: &Arc<Shared>) {
     }
 }
 
+/// Detached lame-duck rejection (shared with the routing tier): deliver
+/// the typed `busy` frame, then hold the socket open (draining, ≤ 5 s)
+/// until the peer closes — an immediate close would let a client write
+/// mid-request and have the kernel RST the rejection frame out of its
+/// buffer.
+pub(crate) fn lame_duck_reject(stream: TcpStream, write_timeout_ms: u64) {
+    std::thread::spawn(move || {
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(write_timeout_ms.max(1))));
+        let read_half = stream.try_clone();
+        let mut w = FrameWriter::new(BufWriter::new(stream));
+        if w.write_preamble().is_err() {
+            return;
+        }
+        let _ = w.write_ctrl(&reply_err("busy", "connection limit reached"));
+        if let Ok(mut r) = read_half {
+            let _ = r.set_read_timeout(Some(Duration::from_secs(5)));
+            let mut buf = [0u8; 256];
+            while matches!(std::io::Read::read(&mut r, &mut buf), Ok(n) if n > 0) {}
+        }
+    });
+}
+
 fn handle_accept(stream: TcpStream, shared: &Arc<Shared>) {
     let stats = &shared.stats;
     let prev = stats.conns_active.fetch_add(1, Ordering::SeqCst);
     if prev >= shared.net.max_conns {
         stats.conns_active.fetch_sub(1, Ordering::SeqCst);
         stats.rejects_conn.fetch_add(1, Ordering::Relaxed);
-        let write_timeout = shared.net.write_timeout_ms.max(1);
-        // Detached lame-duck thread: deliver the typed rejection, then
-        // hold the socket open (draining, ≤ 5 s) until the peer closes —
-        // an immediate close would let a client write mid-request and
-        // have the kernel RST the rejection frame out of its buffer.
-        std::thread::spawn(move || {
-            let _ = stream.set_write_timeout(Some(Duration::from_millis(write_timeout)));
-            let read_half = stream.try_clone();
-            let mut w = FrameWriter::new(BufWriter::new(stream));
-            if w.write_preamble().is_err() {
-                return;
-            }
-            let _ = w.write_ctrl(&reply_err("busy", "connection limit reached"));
-            if let Ok(mut r) = read_half {
-                let _ = r.set_read_timeout(Some(Duration::from_secs(5)));
-                let mut buf = [0u8; 256];
-                while matches!(std::io::Read::read(&mut r, &mut buf), Ok(n) if n > 0) {}
-            }
-        });
+        lame_duck_reject(stream, shared.net.write_timeout_ms);
         return;
     }
     stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
@@ -305,7 +309,9 @@ fn handle_accept(stream: TcpStream, shared: &Arc<Shared>) {
     shared.conns.lock().unwrap().push(handle);
 }
 
-fn reply_err(kind: &str, msg: impl std::fmt::Display) -> Json {
+/// Typed error reply (shared with the routing tier, which speaks the
+/// same frame vocabulary on its listen side).
+pub(crate) fn reply_err(kind: &str, msg: impl std::fmt::Display) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("type", Json::Str(kind.into())),
@@ -313,7 +319,7 @@ fn reply_err(kind: &str, msg: impl std::fmt::Display) -> Json {
     ])
 }
 
-fn reply_ok(kind: &str, mut extra: Vec<(&str, Json)>) -> Json {
+pub(crate) fn reply_ok(kind: &str, mut extra: Vec<(&str, Json)>) -> Json {
     let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("type", Json::Str(kind.into())),

@@ -1,0 +1,990 @@
+//! The routing gateway: an FMPN listener in front of a fleet of FMPN
+//! backends.
+//!
+//! Clients connect to the router exactly as they would to a single
+//! `NetServer` — same preamble, same frames, same op vocabulary — so
+//! `fastmps submit/jobs/metrics/stop --connect` and `net::Client` work
+//! unchanged. Per op:
+//!
+//! - `submit` resolves the job's store to a routing key
+//!   ([`JobSpec::store_key`]) and places it by rendezvous hash, so every
+//!   job against one MPS lands on the backend whose `StoreCache` already
+//!   holds it. A `Busy` backend spills over to the next-ranked routable
+//!   backend under a retry budget with capped-exponential backoff +
+//!   jitter. The reply carries a *router-global* job id.
+//! - `status`/`wait`/`cancel` map the global id back to its backend and
+//!   forward; replies are rewritten to the global id. `wait` re-streams
+//!   the backend's binary sample payload verbatim semantics.
+//! - `list` fans out to routable backends and merges the views of jobs
+//!   routed through this gateway, sorted by (submit time, id).
+//! - `shutdown` drains: new submits are refused while every in-flight
+//!   routed job is polled to a terminal state, then the final metrics are
+//!   the reply — proof of drain, mirroring the single-server semantics.
+//!
+//! A prober thread pings each backend every `probe_interval_ms` and
+//! drives the alive/degraded/down state that gates routing.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::health::{failover_order, BackendHealth, HealthState};
+use super::rendezvous;
+use crate::config::{NetConfig, RouterConfig};
+use crate::metrics::{keys, Metrics};
+use crate::net::frame::{self, Frame, FrameReader, FrameWriter};
+use crate::net::server::{lame_duck_reject, reap_conns, reply_err, reply_ok};
+use crate::net::Client;
+use crate::service::{JobId, JobSpec};
+use crate::util::backoff::Backoff;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Router-tier counters, folded into a [`Metrics`] snapshot (plus the
+/// listener's own wire traffic under the shared `net_*` keys).
+#[derive(Default)]
+pub struct RouterStats {
+    pub submits: AtomicU64,
+    pub spillovers: AtomicU64,
+    pub busy_rejects: AtomicU64,
+    pub forward_errors: AtomicU64,
+    pub forwards: AtomicU64,
+    pub probes: AtomicU64,
+    pub probe_failures: AtomicU64,
+    pub dropped_jobs: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    pub conns_accepted: AtomicU64,
+    pub conns_active: AtomicUsize,
+    pub rejects_conn: AtomicU64,
+}
+
+impl RouterStats {
+    fn add_io(&self, reader: Option<(u64, u64)>, writer: Option<(u64, u64)>) {
+        if let Some((b, f)) = reader {
+            self.bytes_in.fetch_add(b, Ordering::Relaxed);
+            self.frames_in.fetch_add(f, Ordering::Relaxed);
+        }
+        if let Some((b, f)) = writer {
+            self.bytes_out.fetch_add(b, Ordering::Relaxed);
+            self.frames_out.fetch_add(f, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold the counters into a [`Metrics`] snapshot.
+    pub fn account(&self, m: &mut Metrics) {
+        m.add(keys::ROUTER_SUBMITS, self.submits.load(Ordering::Relaxed));
+        m.add(keys::ROUTER_SPILLOVERS, self.spillovers.load(Ordering::Relaxed));
+        m.add(keys::ROUTER_BUSY_REJECTS, self.busy_rejects.load(Ordering::Relaxed));
+        m.add(
+            keys::ROUTER_FORWARD_ERRORS,
+            self.forward_errors.load(Ordering::Relaxed),
+        );
+        m.add(keys::ROUTER_FORWARDS, self.forwards.load(Ordering::Relaxed));
+        m.add(keys::ROUTER_PROBES, self.probes.load(Ordering::Relaxed));
+        m.add(
+            keys::ROUTER_PROBE_FAILURES,
+            self.probe_failures.load(Ordering::Relaxed),
+        );
+        m.add(keys::ROUTER_DROPPED_JOBS, self.dropped_jobs.load(Ordering::Relaxed));
+        m.add(keys::NET_BYTES_IN, self.bytes_in.load(Ordering::Relaxed));
+        m.add(keys::NET_BYTES_OUT, self.bytes_out.load(Ordering::Relaxed));
+        m.add(keys::NET_FRAMES_IN, self.frames_in.load(Ordering::Relaxed));
+        m.add(keys::NET_FRAMES_OUT, self.frames_out.load(Ordering::Relaxed));
+        m.add(keys::NET_CONNS, self.conns_accepted.load(Ordering::Relaxed));
+        m.add(keys::NET_REJECTS_CONN, self.rejects_conn.load(Ordering::Relaxed));
+    }
+}
+
+/// Per-backend forwarding counters (exposed in the metrics JSON).
+#[derive(Default)]
+struct BackendCounters {
+    /// Jobs placed here.
+    submits: AtomicU64,
+    /// `Busy` replies seen from this backend.
+    busy: AtomicU64,
+    /// Transport-level forward failures.
+    errors: AtomicU64,
+    /// Non-submit RPCs forwarded here.
+    forwards: AtomicU64,
+}
+
+/// Where one routed job lives.
+#[derive(Debug, Clone, Copy)]
+struct RoutedJob {
+    backend: usize,
+    backend_id: JobId,
+    /// A reservation is taken *before* the first forward attempt and
+    /// only becomes placed once a backend accepted the job; the drain
+    /// waits on reservations too, closing the submit/drain race.
+    placed: bool,
+    /// Seen terminal (done/failed/cancelled) — drain bookkeeping.
+    terminal: bool,
+}
+
+struct RouteTable {
+    next_id: JobId,
+    by_global: BTreeMap<JobId, RoutedJob>,
+    by_backend: BTreeMap<(usize, JobId), JobId>,
+}
+
+struct Shared {
+    cfg: RouterConfig,
+    net: NetConfig,
+    backends: Vec<Arc<BackendHealth>>,
+    counters: Vec<BackendCounters>,
+    stats: RouterStats,
+    table: Mutex<RouteTable>,
+    /// Close connections and stop the accept/probe loops.
+    stop: AtomicBool,
+    /// Refuse new submits (drain in progress or completed).
+    draining: AtomicBool,
+    /// A client's `shutdown` op has drained; `run_until_shutdown` observes.
+    shutdown_requested: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Transport-level failure (socket, framing, garbled reply) vs an
+/// application-level error relayed from a backend. Only the former says
+/// anything about the backend's health.
+fn is_transport_error(e: &Error) -> bool {
+    matches!(e, Error::Io { .. } | Error::Format(_) | Error::Json { .. })
+}
+
+/// Rewrite the `id` field of a backend reply to the router-global id.
+fn with_global_id(mut j: Json, gid: JobId) -> Json {
+    if let Json::Obj(ref mut m) = j {
+        m.insert("id".into(), Json::Num(gid as f64));
+    }
+    j
+}
+
+fn terminal_status(view: &Json) -> bool {
+    matches!(
+        view.get("status").and_then(|v| v.as_str()),
+        Some("done") | Some("failed")
+    )
+}
+
+impl Shared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Reserve a global id for a submit in flight, unless draining. The
+    /// reservation is checked and inserted under the table lock, so a
+    /// drain that starts concurrently either refuses this submit or
+    /// sees the reservation in its pending snapshot and waits for it to
+    /// be placed or released — the job can never slip past the drain.
+    fn reserve(&self) -> Option<JobId> {
+        let mut t = self.table.lock().unwrap();
+        if self.draining() {
+            return None;
+        }
+        let gid = t.next_id;
+        t.next_id += 1;
+        t.by_global.insert(
+            gid,
+            RoutedJob {
+                backend: 0,
+                backend_id: 0,
+                placed: false,
+                terminal: false,
+            },
+        );
+        Some(gid)
+    }
+
+    /// Resolve a reservation to the backend that accepted the job.
+    fn place(&self, gid: JobId, backend: usize, backend_id: JobId) {
+        let mut t = self.table.lock().unwrap();
+        if let Some(r) = t.by_global.get_mut(&gid) {
+            r.backend = backend;
+            r.backend_id = backend_id;
+            r.placed = true;
+        }
+        t.by_backend.insert((backend, backend_id), gid);
+    }
+
+    /// Drop a reservation whose submit was refused everywhere.
+    fn release(&self, gid: JobId) {
+        self.table.lock().unwrap().by_global.remove(&gid);
+    }
+
+    fn routed(&self, gid: JobId) -> Option<RoutedJob> {
+        let t = self.table.lock().unwrap();
+        t.by_global.get(&gid).copied().filter(|r| r.placed)
+    }
+
+    fn mark_terminal(&self, gid: JobId) {
+        let mut t = self.table.lock().unwrap();
+        if let Some(r) = t.by_global.get_mut(&gid) {
+            r.terminal = true;
+        }
+    }
+
+    /// A transport-level forward failure: health + counters in one place.
+    fn note_forward_failure(&self, b: usize) {
+        self.counters[b].errors.fetch_add(1, Ordering::Relaxed);
+        self.stats.forward_errors.fetch_add(1, Ordering::Relaxed);
+        self.backends[b].note_failure(self.cfg.degraded_after, self.cfg.down_after);
+    }
+
+    fn note_forward(&self, b: usize) {
+        self.stats.forwards.fetch_add(1, Ordering::Relaxed);
+        self.counters[b].forwards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Full router metrics: aggregate counters, per-backend health +
+    /// counters, and routing-table occupancy.
+    fn metrics_json(&self) -> Json {
+        let mut m = Metrics::new();
+        self.stats.account(&mut m);
+        let (routed, in_flight) = {
+            let t = self.table.lock().unwrap();
+            let live = t.by_global.values().filter(|r| !r.terminal).count();
+            (t.by_global.len(), live)
+        };
+        let backends = Json::Arr(
+            self.backends
+                .iter()
+                .enumerate()
+                .map(|(i, h)| {
+                    let c = &self.counters[i];
+                    Json::obj(vec![
+                        ("addr", Json::Str(h.addr.clone())),
+                        ("state", Json::Str(h.state().as_str().into())),
+                        (
+                            "probes",
+                            Json::Num(h.probes.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "probe_failures",
+                            Json::Num(h.probe_failures.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "submits",
+                            Json::Num(c.submits.load(Ordering::Relaxed) as f64),
+                        ),
+                        ("busy", Json::Num(c.busy.load(Ordering::Relaxed) as f64)),
+                        ("errors", Json::Num(c.errors.load(Ordering::Relaxed) as f64)),
+                        (
+                            "forwards",
+                            Json::Num(c.forwards.load(Ordering::Relaxed) as f64),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("config", self.cfg.to_json()),
+            ("run", m.to_json()),
+            ("backends", backends),
+            ("jobs_routed", Json::Num(routed as f64)),
+            ("jobs_in_flight", Json::Num(in_flight as f64)),
+        ])
+    }
+
+    /// Stop admitting new jobs and poll every in-flight routed job to a
+    /// terminal state (or give up at `cap` / after repeated backend
+    /// errors, counting those as dropped — a clean drain drops zero).
+    fn drain(&self, cap: Duration) {
+        self.draining.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + cap;
+        let mut clients: Vec<Option<Client>> = self.backends.iter().map(|_| None).collect();
+        let mut err_streak: BTreeMap<JobId, u32> = BTreeMap::new();
+        let mut delay = Duration::from_millis(2);
+        loop {
+            let pending: Vec<(JobId, RoutedJob)> = {
+                let t = self.table.lock().unwrap();
+                t.by_global
+                    .iter()
+                    .filter(|(_, r)| !r.terminal)
+                    .map(|(g, r)| (*g, *r))
+                    .collect()
+            };
+            if pending.is_empty() {
+                return;
+            }
+            if Instant::now() >= deadline {
+                for (gid, _) in &pending {
+                    self.stats.dropped_jobs.fetch_add(1, Ordering::Relaxed);
+                    self.mark_terminal(*gid);
+                }
+                return;
+            }
+            for (gid, r) in pending {
+                if !r.placed {
+                    // A submit is mid-flight on some connection thread;
+                    // it will place or release the reservation shortly
+                    // (bounded by its socket timeouts + retry budget).
+                    continue;
+                }
+                let status = (|| -> Result<Json> {
+                    if clients[r.backend].is_none() {
+                        clients[r.backend] =
+                            Some(Client::connect(&self.backends[r.backend].addr, &self.net)?);
+                    }
+                    clients[r.backend].as_mut().unwrap().status(r.backend_id)
+                })();
+                match status {
+                    Ok(view) => {
+                        err_streak.remove(&gid);
+                        if terminal_status(&view) {
+                            self.mark_terminal(gid);
+                        }
+                    }
+                    Err(e) if e.is_busy() => {
+                        // Backend at its connection limit right now:
+                        // backpressure, not evidence about the job — the
+                        // pool-rejected socket is a lame duck, re-dial
+                        // and keep polling.
+                        err_streak.remove(&gid);
+                        clients[r.backend] = None;
+                    }
+                    Err(e) if !is_transport_error(&e) && e.to_string().contains("unknown job") => {
+                        // The backend answered but no longer knows the
+                        // job (terminal history evicted) — it finished.
+                        err_streak.remove(&gid);
+                        self.mark_terminal(gid);
+                    }
+                    Err(_) => {
+                        clients[r.backend] = None;
+                        let n = err_streak.entry(gid).or_insert(0);
+                        *n += 1;
+                        if *n >= 5 {
+                            // Backend unreachable: beyond recovery from
+                            // here — count the job dropped and move on.
+                            self.stats.dropped_jobs.fetch_add(1, Ordering::Relaxed);
+                            self.mark_terminal(gid);
+                        }
+                    }
+                }
+            }
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(Duration::from_millis(50));
+        }
+    }
+}
+
+/// A running routing gateway. Dropping it stops and joins the router's
+/// threads *without* draining — routed jobs keep running on their
+/// backends; use [`Router::shutdown`] (or the wire `shutdown` op) for a
+/// drain with proof of completion.
+pub struct Router {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    probe: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Start routing on `net.addr` (port 0 = ephemeral) across
+    /// `cfg.backends`.
+    pub fn start(cfg: RouterConfig, net: NetConfig) -> Result<Router> {
+        cfg.validate()?;
+        net.validate()?;
+        let listener =
+            TcpListener::bind(&net.addr).map_err(|e| Error::io(format!("bind {}", net.addr), e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::io("local_addr", e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::io("set_nonblocking", e))?;
+        let backends: Vec<Arc<BackendHealth>> = cfg
+            .backends
+            .iter()
+            .map(|a| Arc::new(BackendHealth::new(a.clone())))
+            .collect();
+        let counters = cfg.backends.iter().map(|_| BackendCounters::default()).collect();
+        let shared = Arc::new(Shared {
+            cfg,
+            net,
+            backends,
+            counters,
+            stats: RouterStats::default(),
+            table: Mutex::new(RouteTable {
+                next_id: 1,
+                by_global: BTreeMap::new(),
+                by_backend: BTreeMap::new(),
+            }),
+            stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            shutdown_requested: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let probe = {
+            let shared = shared.clone();
+            std::thread::spawn(move || probe_loop(shared))
+        };
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(Router {
+            shared,
+            addr,
+            accept: Some(accept),
+            probe: Some(probe),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current router metrics (aggregate + per-backend).
+    pub fn metrics_json(&self) -> Json {
+        self.shared.metrics_json()
+    }
+
+    /// Health snapshot, backend order as configured (for tests/ops).
+    pub fn health(&self) -> Vec<(String, HealthState)> {
+        self.shared
+            .backends
+            .iter()
+            .map(|b| (b.addr.clone(), b.state()))
+            .collect()
+    }
+
+    /// True once a client's `shutdown` op has drained the router.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Block until a client requests shutdown or `max_secs` elapses.
+    pub fn run_until_shutdown(&self, max_secs: Option<f64>) {
+        let t0 = Instant::now();
+        while !self.shutdown_requested() && !self.shared.stopping() {
+            if let Some(max) = max_secs {
+                if t0.elapsed().as_secs_f64() >= max {
+                    return;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.probe.take() {
+            let _ = h.join();
+        }
+        let conns: Vec<JoinHandle<()>> = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+
+    /// Drain in-flight routed jobs, stop every thread, and return the
+    /// final metrics.
+    pub fn shutdown(mut self) -> Json {
+        self.shared.drain(Duration::from_secs(self.shared.cfg.drain_cap_secs));
+        self.stop_and_join();
+        self.shared.metrics_json()
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn probe_loop(shared: Arc<Shared>) {
+    // Probes want to fail fast: tighten both timeouts toward the probe
+    // period (the write timeout doubles as the client's dial deadline)
+    // so one wedged or blackholed backend cannot stall the whole round.
+    let probe_ms = shared.cfg.probe_interval_ms.max(50);
+    let net = NetConfig {
+        read_timeout_ms: shared.net.read_timeout_ms.min(probe_ms),
+        write_timeout_ms: shared.net.write_timeout_ms.min(probe_ms.max(250)),
+        ..shared.net.clone()
+    };
+    while !shared.stopping() {
+        for h in &shared.backends {
+            if shared.stopping() {
+                return;
+            }
+            let ok = Client::connect(&h.addr, &net)
+                .and_then(|mut c| c.ping())
+                .is_ok();
+            h.note_probe(ok, shared.cfg.degraded_after, shared.cfg.down_after);
+            shared.stats.probes.fetch_add(1, Ordering::Relaxed);
+            if !ok {
+                shared.stats.probe_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let deadline = Instant::now() + Duration::from_millis(shared.cfg.probe_interval_ms);
+        loop {
+            if shared.stopping() {
+                return;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            std::thread::sleep(left.min(Duration::from_millis(10)));
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    while !shared.stopping() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                handle_accept(stream, &shared);
+                reap_conns(&shared.conns);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn handle_accept(stream: TcpStream, shared: &Arc<Shared>) {
+    let stats = &shared.stats;
+    let prev = stats.conns_active.fetch_add(1, Ordering::SeqCst);
+    if prev >= shared.net.max_conns {
+        stats.conns_active.fetch_sub(1, Ordering::SeqCst);
+        stats.rejects_conn.fetch_add(1, Ordering::Relaxed);
+        lame_duck_reject(stream, shared.net.write_timeout_ms);
+        return;
+    }
+    stats.conns_accepted.fetch_add(1, Ordering::Relaxed);
+    let shared2 = shared.clone();
+    let handle = std::thread::spawn(move || {
+        connection(stream, &shared2);
+        shared2.stats.conns_active.fetch_sub(1, Ordering::SeqCst);
+    });
+    shared.conns.lock().unwrap().push(handle);
+}
+
+/// Lazily-connected per-client-connection backend channels. Requests on
+/// one client connection are sequential, so these need no locking; a
+/// channel that errors is dropped and re-dialed on next use.
+struct BackendConns {
+    clients: Vec<Option<Client>>,
+}
+
+impl BackendConns {
+    fn new(n: usize) -> BackendConns {
+        BackendConns {
+            clients: (0..n).map(|_| None).collect(),
+        }
+    }
+
+    fn client(&mut self, b: usize, shared: &Shared) -> Result<&mut Client> {
+        if self.clients[b].is_none() {
+            self.clients[b] = Some(Client::connect(&shared.backends[b].addr, &shared.net)?);
+        }
+        Ok(self.clients[b].as_mut().expect("just connected"))
+    }
+
+    fn drop_conn(&mut self, b: usize) {
+        self.clients[b] = None;
+    }
+}
+
+/// One client connection: single-threaded, inline replies (the protocol
+/// is strictly sequential per connection, so no writer thread is
+/// needed — forwarding latency dominates anyway).
+fn connection(stream: TcpStream, shared: &Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(
+        shared.net.read_timeout_ms.max(1),
+    )));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = write_half.set_write_timeout(Some(Duration::from_millis(
+        shared.net.write_timeout_ms.max(1),
+    )));
+    let mut w = FrameWriter::new(BufWriter::new(write_half));
+    if w.write_preamble().is_err() {
+        return;
+    }
+    let mut reader = FrameReader::new(BufReader::new(stream), shared.net.max_frame_bytes);
+    let mut conns = BackendConns::new(shared.backends.len());
+    let outcome = (|| -> Result<()> {
+        reader.read_preamble()?;
+        loop {
+            if shared.stopping() {
+                return Ok(());
+            }
+            let msg = match reader.read_frame_idle()? {
+                None => continue, // idle tick: re-check the stop flag
+                Some(Frame::Payload(_)) => {
+                    return Err(Error::format(
+                        "net wire: unexpected payload frame from client",
+                    ));
+                }
+                Some(Frame::Ctrl(msg)) => msg,
+            };
+            shared.stats.add_io(Some(reader.drain_counters()), None);
+            let more = handle_op(&msg, &mut w, &mut conns, shared)?;
+            shared.stats.add_io(None, Some(w.drain_counters()));
+            if !more {
+                return Ok(());
+            }
+        }
+    })();
+    shared.stats.add_io(Some(reader.drain_counters()), None);
+    if let Err(e) = outcome {
+        if !frame::is_timeout(&e) {
+            let _ = w.write_ctrl(&reply_err("error", &e));
+        }
+    }
+    shared.stats.add_io(None, Some(w.drain_counters()));
+}
+
+fn req_job_id(msg: &Json) -> Result<JobId> {
+    msg.req("id")?
+        .as_f64()
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as JobId)
+        .ok_or_else(|| Error::format("net: 'id' is not a job id"))
+}
+
+/// Execute one control op; `Ok(false)` closes the connection.
+fn handle_op(
+    msg: &Json,
+    w: &mut FrameWriter<BufWriter<TcpStream>>,
+    conns: &mut BackendConns,
+    shared: &Arc<Shared>,
+) -> Result<bool> {
+    let op = msg.get("op").and_then(|v| v.as_str()).unwrap_or("");
+    match op {
+        "ping" => w.write_ctrl(&reply_ok("pong", vec![]))?,
+        "submit" => handle_submit(msg, w, conns, shared)?,
+        "status" => {
+            let gid = req_job_id(msg)?;
+            match shared.routed(gid) {
+                None => w.write_ctrl(&reply_err("error", format!("unknown job {gid}")))?,
+                Some(r) => {
+                    shared.note_forward(r.backend);
+                    let view = conns
+                        .client(r.backend, shared)
+                        .and_then(|c| c.status(r.backend_id));
+                    match view {
+                        Ok(view) => {
+                            shared.backends[r.backend].note_ok();
+                            if terminal_status(&view) {
+                                shared.mark_terminal(gid);
+                            }
+                            w.write_ctrl(&reply_ok(
+                                "status",
+                                vec![("job", with_global_id(view, gid))],
+                            ))?;
+                        }
+                        Err(e) => relay_error(w, conns, shared, r.backend, e)?,
+                    }
+                }
+            }
+        }
+        "wait" => {
+            let gid = req_job_id(msg)?;
+            let timeout_ms = msg
+                .get("timeout_ms")
+                .and_then(|v| v.as_f64())
+                .filter(|t| *t >= 0.0)
+                .unwrap_or(60_000.0)
+                .min(600_000.0);
+            match shared.routed(gid) {
+                None => w.write_ctrl(&reply_err("error", format!("unknown job {gid}")))?,
+                Some(r) => {
+                    shared.note_forward(r.backend);
+                    let timeout = Duration::from_millis(timeout_ms as u64);
+                    let outcome = conns
+                        .client(r.backend, shared)
+                        .and_then(|c| c.wait(r.backend_id, timeout));
+                    match outcome {
+                        Ok(Some(res)) => {
+                            shared.backends[r.backend].note_ok();
+                            shared.mark_terminal(gid);
+                            let payload = res.sink.as_ref().map(frame::pack_sink);
+                            w.write_ctrl(&reply_ok(
+                                "result",
+                                vec![
+                                    ("result", with_global_id(res.result, gid)),
+                                    ("payload", Json::Bool(payload.is_some())),
+                                ],
+                            ))?;
+                            if let Some(p) = payload {
+                                w.write_payload(&p)?;
+                            }
+                        }
+                        Ok(None) => {
+                            // Still running at the client's deadline:
+                            // relay the live status, like the server does.
+                            let view = conns
+                                .client(r.backend, shared)
+                                .and_then(|c| c.status(r.backend_id));
+                            match view {
+                                Ok(view) => w.write_ctrl(&reply_ok(
+                                    "status",
+                                    vec![("job", with_global_id(view, gid))],
+                                ))?,
+                                Err(e) => relay_error(w, conns, shared, r.backend, e)?,
+                            }
+                        }
+                        Err(e) => relay_error(w, conns, shared, r.backend, e)?,
+                    }
+                }
+            }
+        }
+        "cancel" => {
+            let gid = req_job_id(msg)?;
+            match shared.routed(gid) {
+                None => w.write_ctrl(&reply_err("error", format!("unknown job {gid}")))?,
+                Some(r) => {
+                    shared.note_forward(r.backend);
+                    let outcome = conns
+                        .client(r.backend, shared)
+                        .and_then(|c| c.cancel(r.backend_id));
+                    match outcome {
+                        Ok(()) => {
+                            shared.backends[r.backend].note_ok();
+                            shared.mark_terminal(gid);
+                            w.write_ctrl(&reply_ok(
+                                "cancelled",
+                                vec![("id", Json::Num(gid as f64))],
+                            ))?;
+                        }
+                        Err(e) => relay_error(w, conns, shared, r.backend, e)?,
+                    }
+                }
+            }
+        }
+        "list" => {
+            let map: BTreeMap<(usize, JobId), JobId> =
+                shared.table.lock().unwrap().by_backend.clone();
+            let mut entries: Vec<(f64, JobId, Json)> = Vec::new();
+            for b in 0..shared.backends.len() {
+                if !shared.backends[b].routable() {
+                    continue;
+                }
+                shared.note_forward(b);
+                let listed = conns.client(b, shared).and_then(|c| c.list());
+                match listed {
+                    Ok(jobs) => {
+                        shared.backends[b].note_ok();
+                        for j in jobs.as_arr().unwrap_or(&[]) {
+                            let Some(bid) =
+                                j.get("id").and_then(|v| v.as_f64()).map(|v| v as JobId)
+                            else {
+                                continue;
+                            };
+                            // Jobs not routed through this gateway (e.g.
+                            // submitted to a backend directly) stay out
+                            // of the merged view — their ids are not ours
+                            // to expose.
+                            let Some(&gid) = map.get(&(b, bid)) else {
+                                continue;
+                            };
+                            let t = j
+                                .get("submitted_unix")
+                                .and_then(|v| v.as_f64())
+                                .unwrap_or(0.0);
+                            entries.push((t, gid, with_global_id(j.clone(), gid)));
+                        }
+                    }
+                    Err(e) => {
+                        if is_transport_error(&e) {
+                            shared.note_forward_failure(b);
+                            conns.drop_conn(b);
+                        }
+                        // A partial merge beats no reply: skip this
+                        // backend and report what the rest returned.
+                    }
+                }
+            }
+            entries.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.cmp(&b.1))
+            });
+            let jobs = Json::Arr(entries.into_iter().map(|(_, _, j)| j).collect());
+            w.write_ctrl(&reply_ok("jobs", vec![("jobs", jobs)]))?;
+        }
+        "metrics" => {
+            w.write_ctrl(&reply_ok("metrics", vec![("metrics", shared.metrics_json())]))?;
+        }
+        "shutdown" => {
+            shared.drain(Duration::from_secs(shared.cfg.drain_cap_secs));
+            // Flag before the reply is written: a client that has seen
+            // the reply must never observe shutdown_requested() == false.
+            shared.shutdown_requested.store(true, Ordering::SeqCst);
+            w.write_ctrl(&reply_ok(
+                "shutdown",
+                vec![("metrics", shared.metrics_json())],
+            ))?;
+            return Ok(false);
+        }
+        other => w.write_ctrl(&reply_err("error", format!("unknown op '{other}'")))?,
+    }
+    Ok(true)
+}
+
+/// Relay a forward failure to the client, updating backend health when
+/// the failure was transport-level.
+fn relay_error(
+    w: &mut FrameWriter<BufWriter<TcpStream>>,
+    conns: &mut BackendConns,
+    shared: &Shared,
+    b: usize,
+    e: Error,
+) -> Result<()> {
+    if e.is_busy() {
+        // Backend-side backpressure stays *typed* through the router so
+        // the client's busy handling (backoff + retry) still engages;
+        // the pool-rejected channel is a lame duck, so re-dial next use.
+        conns.drop_conn(b);
+        w.write_ctrl(&reply_err("busy", e))
+    } else if is_transport_error(&e) {
+        shared.note_forward_failure(b);
+        conns.drop_conn(b);
+        w.write_ctrl(&reply_err(
+            "error",
+            format!("backend {}: {e}", shared.backends[b].addr),
+        ))
+    } else {
+        // Application-level error from the backend ("server: …"): relay
+        // verbatim — it says nothing about the backend's health.
+        w.write_ctrl(&reply_err("error", e))
+    }
+}
+
+/// Outcome of the spillover placement loop.
+enum Placement {
+    Placed {
+        backend: usize,
+        backend_id: JobId,
+        spilled: bool,
+    },
+    /// Retry budget exhausted (or no routable backends) — typed `busy`.
+    Saturated(&'static str),
+    /// Terminal application-level rejection (bad job shape, over-limit,
+    /// backend draining): retrying elsewhere would duplicate nothing
+    /// but the refusal.
+    Refused(Error),
+}
+
+/// Rendezvous placement with `Busy`-aware spillover (see module docs).
+/// Infallible on the client socket by design: the caller holds a table
+/// reservation, and keeping all `?` exits out of this loop guarantees
+/// the reservation is always placed or released.
+fn place_with_spillover(
+    spec: &JobSpec,
+    conns: &mut BackendConns,
+    shared: &Arc<Shared>,
+) -> Placement {
+    let key = spec.store_key();
+    let addrs: Vec<&str> = shared.backends.iter().map(|b| b.addr.as_str()).collect();
+    let first_choice = rendezvous::rank(key, &addrs)[0];
+    let mut backoff = Backoff::new(
+        shared.cfg.backoff_base_ms,
+        shared.cfg.backoff_cap_ms,
+        shared.cfg.jitter_ms,
+        shared.cfg.seed ^ key,
+    );
+    let mut budget = shared.cfg.retry_budget;
+    let mut saw_busy = false;
+    loop {
+        let order = failover_order(key, &shared.backends);
+        if order.is_empty() {
+            return Placement::Saturated("no routable backends");
+        }
+        for b in order {
+            if budget == 0 {
+                break;
+            }
+            budget -= 1;
+            let outcome = conns.client(b, shared).and_then(|c| c.submit(spec));
+            match outcome {
+                Ok(bid) => {
+                    shared.backends[b].note_ok();
+                    shared.counters[b].submits.fetch_add(1, Ordering::Relaxed);
+                    return Placement::Placed {
+                        backend: b,
+                        backend_id: bid,
+                        spilled: b != first_choice,
+                    };
+                }
+                Err(e) if e.is_busy() => {
+                    // A busy backend is healthy — spill to the next rank.
+                    saw_busy = true;
+                    shared.counters[b].busy.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) if is_transport_error(&e) => {
+                    shared.note_forward_failure(b);
+                    conns.drop_conn(b);
+                }
+                Err(e) => return Placement::Refused(e),
+            }
+        }
+        if budget == 0 {
+            return Placement::Saturated(if saw_busy {
+                "all backends busy (back off and retry)"
+            } else {
+                "no backend accepted the job"
+            });
+        }
+        // Between spillover cycles: capped exponential backoff + jitter.
+        std::thread::sleep(backoff.next_delay());
+    }
+}
+
+fn handle_submit(
+    msg: &Json,
+    w: &mut FrameWriter<BufWriter<TcpStream>>,
+    conns: &mut BackendConns,
+    shared: &Arc<Shared>,
+) -> Result<()> {
+    let spec = JobSpec::from_json(msg.req("job")?)?;
+    let Some(gid) = shared.reserve() else {
+        w.write_ctrl(&reply_err("error", "router shutting down (draining)"))?;
+        return Ok(());
+    };
+    match place_with_spillover(&spec, conns, shared) {
+        Placement::Placed {
+            backend,
+            backend_id,
+            spilled,
+        } => {
+            shared.place(gid, backend, backend_id);
+            shared.stats.submits.fetch_add(1, Ordering::Relaxed);
+            if spilled {
+                shared.stats.spillovers.fetch_add(1, Ordering::Relaxed);
+            }
+            w.write_ctrl(&reply_ok("submitted", vec![("id", Json::Num(gid as f64))]))
+        }
+        Placement::Saturated(m) => {
+            shared.release(gid);
+            shared.stats.busy_rejects.fetch_add(1, Ordering::Relaxed);
+            w.write_ctrl(&reply_err("busy", m))
+        }
+        Placement::Refused(e) => {
+            shared.release(gid);
+            w.write_ctrl(&reply_err("error", e))
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Per-backend health state, driven by `ping` probes and forward
+//! failures.
+//!
+//! The state machine is a consecutive-failure counter with two
+//! thresholds: `degraded_after` failures demote `Alive → Degraded`
+//! (still routable, but ranked after every alive backend so new stores
+//! prefer healthy nodes), `down_after` demotes to `Down` (excluded from
+//! routing entirely). Any success snaps straight back to `Alive` — a
+//! backend that answers a ping is servable, whatever its history.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+
+use super::rendezvous;
+
+/// Routability of one backend, as the prober last saw it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Probes succeed; first pick for its rendezvous keys.
+    Alive,
+    /// Some consecutive failures; routable, ranked after alive backends.
+    Degraded,
+    /// Too many consecutive failures; excluded from routing.
+    Down,
+}
+
+impl HealthState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthState::Alive => "alive",
+            HealthState::Degraded => "degraded",
+            HealthState::Down => "down",
+        }
+    }
+
+    fn from_u8(v: u8) -> HealthState {
+        match v {
+            0 => HealthState::Alive,
+            1 => HealthState::Degraded,
+            _ => HealthState::Down,
+        }
+    }
+}
+
+/// Shared health record for one backend. Lock-free: the prober and every
+/// connection thread update it through atomics.
+pub struct BackendHealth {
+    pub addr: String,
+    consecutive_failures: AtomicU32,
+    state: AtomicU8,
+    pub probes: AtomicU64,
+    pub probe_failures: AtomicU64,
+}
+
+impl BackendHealth {
+    /// New backends start `Alive` — the first probe corrects optimism
+    /// within one probe interval, and an optimistic start lets a router
+    /// serve immediately after boot instead of stalling on a probe round.
+    pub fn new(addr: impl Into<String>) -> BackendHealth {
+        BackendHealth {
+            addr: addr.into(),
+            consecutive_failures: AtomicU32::new(0),
+            state: AtomicU8::new(HealthState::Alive as u8),
+            probes: AtomicU64::new(0),
+            probe_failures: AtomicU64::new(0),
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        HealthState::from_u8(self.state.load(Ordering::SeqCst))
+    }
+
+    /// Eligible to receive traffic (alive or degraded).
+    pub fn routable(&self) -> bool {
+        self.state() != HealthState::Down
+    }
+
+    /// A probe or forwarded RPC succeeded.
+    pub fn note_ok(&self) {
+        self.consecutive_failures.store(0, Ordering::SeqCst);
+        self.state.store(HealthState::Alive as u8, Ordering::SeqCst);
+    }
+
+    /// A probe or forwarded RPC failed at the transport level. (`Busy`
+    /// replies are *not* failures — a busy backend is healthy.)
+    pub fn note_failure(&self, degraded_after: u32, down_after: u32) {
+        let n = self.consecutive_failures.fetch_add(1, Ordering::SeqCst) + 1;
+        let s = if n >= down_after {
+            HealthState::Down
+        } else if n >= degraded_after {
+            HealthState::Degraded
+        } else {
+            HealthState::Alive
+        };
+        self.state.store(s as u8, Ordering::SeqCst);
+    }
+
+    /// Record one probe outcome (counters + state transition).
+    pub fn note_probe(&self, ok: bool, degraded_after: u32, down_after: u32) {
+        self.probes.fetch_add(1, Ordering::Relaxed);
+        if ok {
+            self.note_ok();
+        } else {
+            self.probe_failures.fetch_add(1, Ordering::Relaxed);
+            self.note_failure(degraded_after, down_after);
+        }
+    }
+}
+
+/// Health-aware failover order for `key`: routable backends in
+/// rendezvous rank, with every `Alive` backend ahead of every
+/// `Degraded` one and `Down` backends excluded.
+pub fn failover_order(key: u64, backends: &[Arc<BackendHealth>]) -> Vec<usize> {
+    let addrs: Vec<&str> = backends.iter().map(|b| b.addr.as_str()).collect();
+    let ranked = rendezvous::rank(key, &addrs);
+    let mut alive = Vec::with_capacity(ranked.len());
+    let mut degraded = Vec::new();
+    for i in ranked {
+        match backends[i].state() {
+            HealthState::Alive => alive.push(i),
+            HealthState::Degraded => degraded.push(i),
+            HealthState::Down => {}
+        }
+    }
+    alive.extend(degraded);
+    alive
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_drive_the_state_machine() {
+        let h = BackendHealth::new("b:1");
+        assert_eq!(h.state(), HealthState::Alive);
+        assert!(h.routable());
+        h.note_failure(2, 3);
+        assert_eq!(h.state(), HealthState::Alive, "1 failure < degraded_after");
+        h.note_failure(2, 3);
+        assert_eq!(h.state(), HealthState::Degraded);
+        assert!(h.routable());
+        h.note_failure(2, 3);
+        assert_eq!(h.state(), HealthState::Down);
+        assert!(!h.routable());
+        h.note_ok();
+        assert_eq!(h.state(), HealthState::Alive, "one success resurrects");
+    }
+
+    #[test]
+    fn probes_count_and_transition() {
+        let h = BackendHealth::new("b:1");
+        h.note_probe(false, 1, 2);
+        assert_eq!(h.state(), HealthState::Degraded);
+        h.note_probe(false, 1, 2);
+        assert_eq!(h.state(), HealthState::Down);
+        h.note_probe(true, 1, 2);
+        assert_eq!(h.state(), HealthState::Alive);
+        assert_eq!(h.probes.load(Ordering::Relaxed), 3);
+        assert_eq!(h.probe_failures.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn failover_order_prefers_alive_and_skips_down() {
+        let backends: Vec<Arc<BackendHealth>> = (0..4)
+            .map(|i| Arc::new(BackendHealth::new(format!("10.0.0.{i}:7733"))))
+            .collect();
+        let key = 777u64;
+        let healthy = failover_order(key, &backends);
+        assert_eq!(healthy.len(), 4, "all alive → full rendezvous order");
+        let addrs: Vec<&str> = backends.iter().map(|b| b.addr.as_str()).collect();
+        assert_eq!(healthy, rendezvous::rank(key, &addrs));
+
+        // Degrade the top pick: it must fall behind every alive backend
+        // but stay routable (last).
+        let top = healthy[0];
+        backends[top].note_failure(1, 3);
+        let demoted = failover_order(key, &backends);
+        assert_eq!(demoted.len(), 4);
+        assert_eq!(*demoted.last().unwrap(), top);
+        assert_ne!(demoted[0], top);
+
+        // Take it down entirely: excluded.
+        backends[top].note_failure(1, 2);
+        let gone = failover_order(key, &backends);
+        assert_eq!(gone.len(), 3);
+        assert!(!gone.contains(&top));
+
+        // Relative rendezvous order among the survivors is preserved.
+        let rest: Vec<usize> = rendezvous::rank(key, &addrs)
+            .into_iter()
+            .filter(|i| *i != top)
+            .collect();
+        assert_eq!(gone, rest);
+    }
+}

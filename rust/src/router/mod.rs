@@ -1,0 +1,29 @@
+//! Store-affinity routing tier for multi-server FMPN fleets.
+//!
+//! One `NetServer` caps scale-out; the paper's bet (§1, §3) is that data
+//! parallelism over samples scales once each worker's working set stays
+//! hot. This subsystem revives that bet *across servers*: a gateway that
+//! speaks FMPN on both sides (clients need zero changes — `net::frame`
+//! is reused verbatim) and places jobs by **rendezvous hashing** on the
+//! store's manifest hash, so every job against one MPS lands on the
+//! backend whose `StoreCache` already holds it — the placement-aware
+//! routing that block-cyclic distributed-MPS work (Adamski & Brown,
+//! arXiv:2505.06119) shows keeps per-node working sets hot.
+//!
+//! - [`rendezvous`] — highest-random-weight placement: adding/removing a
+//!   backend moves only the departed backend's keys (≈ 1/N);
+//! - [`health`] — per-backend alive/degraded/down state driven by `ping`
+//!   probes; down backends leave the rotation until a probe succeeds;
+//! - [`gateway`] — the [`Router`]: forwarding of
+//!   `submit`/`status`/`wait`/`cancel`/`list`/`metrics`, `Busy`-aware
+//!   spillover with retry budget + jitter, graceful drain, per-backend
+//!   counters in the metrics registry.
+//!
+//! Everything is `std::net` + threads — still zero dependencies.
+
+pub mod gateway;
+pub mod health;
+pub mod rendezvous;
+
+pub use gateway::{Router, RouterStats};
+pub use health::{BackendHealth, HealthState};

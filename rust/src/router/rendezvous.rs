@@ -1,0 +1,126 @@
+//! Rendezvous (highest-random-weight) hashing — the placement function
+//! of the routing tier.
+//!
+//! For a routing key `k` (a store's manifest hash) and a backend address
+//! `b`, the weight is a 64-bit mix of `hash(b)` and `k`; jobs go to the
+//! highest-weight backend. The property that makes HRW the right tool
+//! here (vs. mod-N or consistent-hash rings): when a backend joins or
+//! leaves, the *only* keys that move are the ones whose top choice was
+//! the departed backend (≈ 1/N of them) — every other store keeps its
+//! warm `StoreCache` entry on the same backend. The full descending
+//! ranking doubles as the failover order: spillover walks down the same
+//! list every router instance computes, so a fleet of routers agrees on
+//! placement without coordination.
+
+use crate::util::backoff::mix64;
+use crate::util::fnv1a;
+
+/// HRW weight of `backend` for `key`. Deterministic across processes —
+/// no per-run state enters the hash.
+pub fn weight(key: u64, backend: &str) -> u64 {
+    mix64(key ^ fnv1a(backend.as_bytes()).rotate_left(32))
+}
+
+/// Backend indices ranked by descending HRW weight (ties break by
+/// index, which cannot recur for distinct addresses in practice).
+pub fn rank<S: AsRef<str>>(key: u64, backends: &[S]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..backends.len()).collect();
+    idx.sort_by_key(|&i| (std::cmp::Reverse(weight(key, backends[i].as_ref())), i));
+    idx
+}
+
+/// The top-ranked backend for `key` (`None` for an empty fleet).
+pub fn pick<S: AsRef<str>>(key: u64, backends: &[S]) -> Option<usize> {
+    rank(key, backends).into_iter().next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7733")).collect()
+    }
+
+    #[test]
+    fn rank_is_a_deterministic_permutation() {
+        let backends = fleet(5);
+        let r1 = rank(42, &backends);
+        let r2 = rank(42, &backends);
+        assert_eq!(r1, r2);
+        let mut sorted = r1.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+        assert_ne!(rank(42, &backends), rank(43, &backends), "keys spread");
+    }
+
+    #[test]
+    fn keys_spread_over_the_fleet() {
+        let backends = fleet(5);
+        let mut hits = vec![0usize; backends.len()];
+        for key in 0..2000u64 {
+            hits[pick(mix64(key), &backends).unwrap()] += 1;
+        }
+        for (i, h) in hits.iter().enumerate() {
+            // Expected 400 per backend; a 2× band is a loose sanity check
+            // that the mix is not degenerate.
+            assert!((200..=800).contains(h), "backend {i} got {h} of 2000");
+        }
+    }
+
+    #[test]
+    fn removing_a_backend_moves_only_its_own_keys() {
+        let full = fleet(5);
+        let removed = 2usize;
+        let rest: Vec<String> = full
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != removed)
+            .map(|(_, b)| b.clone())
+            .collect();
+        let mut moved = 0usize;
+        let mut owned_by_removed = 0usize;
+        for key in 0..2000u64 {
+            let key = mix64(key);
+            let before = pick(key, &full).unwrap();
+            let after = &rest[pick(key, &rest).unwrap()];
+            if before == removed {
+                owned_by_removed += 1;
+            } else if &full[before] != after {
+                moved += 1;
+            }
+        }
+        assert_eq!(moved, 0, "keys not owned by the removed backend stay put");
+        assert!(owned_by_removed > 0, "the removed backend owned something");
+    }
+
+    #[test]
+    fn adding_a_backend_moves_about_one_over_n_keys() {
+        let old = fleet(5);
+        let mut new = old.clone();
+        new.push("10.0.0.99:7733".into());
+        let n_keys = 3000u64;
+        let mut moved = 0usize;
+        for key in 0..n_keys {
+            let key = mix64(key);
+            let before = &old[pick(key, &old).unwrap()];
+            let after = &new[pick(key, &new).unwrap()];
+            if before != after {
+                // HRW guarantee: a key only ever moves TO the new backend.
+                assert_eq!(after, "10.0.0.99:7733");
+                moved += 1;
+            }
+        }
+        let expect = n_keys as f64 / new.len() as f64;
+        let ratio = moved as f64 / expect;
+        assert!(
+            (0.5..=1.5).contains(&ratio),
+            "moved {moved}, expected ≈ {expect:.0}"
+        );
+    }
+
+    #[test]
+    fn empty_fleet_has_no_pick() {
+        assert_eq!(pick::<String>(1, &[]), None);
+    }
+}

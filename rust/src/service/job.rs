@@ -44,6 +44,21 @@ impl JobSpec {
         }
     }
 
+    /// Stable routing/affinity key of this job's store.
+    ///
+    /// When the store's manifest is readable from this process the key is
+    /// its content hash ([`crate::io::manifest_hash_at`]) — every path to
+    /// one store shares a key, and the router lands all of its jobs on
+    /// the backend whose `StoreCache` already holds that store. When the
+    /// manifest is *not* readable (a router without the data volume
+    /// mounted), the key falls back to an FNV-1a hash of the path string:
+    /// affinity is still deterministic, just keyed on path spelling
+    /// instead of content.
+    pub fn store_key(&self) -> u64 {
+        crate::io::manifest_hash_at(&self.data)
+            .unwrap_or_else(|_| crate::util::fnv1a(self.data.to_string_lossy().as_bytes()))
+    }
+
     /// Parse the wire form used by the file transport (`api`).
     pub fn from_json(j: &Json) -> Result<JobSpec> {
         let data = j
@@ -218,6 +233,19 @@ mod tests {
             let j = Json::parse(bad).unwrap();
             assert!(JobSpec::from_json(&j).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn store_key_is_stable_and_distinguishes_paths() {
+        let a = JobSpec::new("/nonexistent/fastmps-store-a", 1);
+        let b = JobSpec::new("/nonexistent/fastmps-store-b", 1);
+        assert_eq!(a.store_key(), a.store_key(), "deterministic");
+        assert_eq!(
+            a.store_key(),
+            JobSpec::new("/nonexistent/fastmps-store-a", 999).store_key(),
+            "key depends on the store, not the job shape"
+        );
+        assert_ne!(a.store_key(), b.store_key());
     }
 
     #[test]

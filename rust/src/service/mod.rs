@@ -338,6 +338,7 @@ pub fn smoke_benchmark(scratch: &Path, jobs: usize, samples_per_job: u64) -> Res
     let total = done as u64 * samples_per_job;
     Ok(Json::obj(vec![
         ("bench", Json::Str("service-smoke".into())),
+        ("measured", Json::Bool(true)),
         ("jobs", Json::Num(jobs as f64)),
         ("samples_per_job", Json::Num(samples_per_job as f64)),
         ("jobs_done", Json::Num(done as f64)),

@@ -1,0 +1,116 @@
+//! Capped exponential backoff with deterministic jitter — the retry
+//! policy shared by the net client's `Busy` handling, the router's
+//! spillover loop, and anything else that re-tries a transient capacity
+//! condition. Delays double from a base up to a cap; each sleep gets up
+//! to `jitter_ms` of extra pseudo-random delay so a fleet of retrying
+//! clients does not thundering-herd in lockstep.
+
+use std::time::{Duration, Instant};
+
+/// splitmix64 finalizer: a cheap, high-quality 64-bit mixer. Public
+/// because the router's rendezvous hash builds on the same primitive.
+pub fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// See module docs. The jitter stream is seeded, so a given `(seed,
+/// attempt)` pair always produces the same delay — tests stay
+/// reproducible while distinct clients (distinct seeds) de-correlate.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    next_ms: u64,
+    cap_ms: u64,
+    jitter_ms: u64,
+    rng: u64,
+    /// Delays handed out so far (observable for tests and metrics).
+    pub attempts: u32,
+}
+
+impl Backoff {
+    pub fn new(base_ms: u64, cap_ms: u64, jitter_ms: u64, seed: u64) -> Backoff {
+        let base = base_ms.max(1);
+        Backoff {
+            next_ms: base,
+            cap_ms: cap_ms.max(base),
+            jitter_ms,
+            rng: mix64(seed | 1),
+            attempts: 0,
+        }
+    }
+
+    /// The next delay (exponential step + jitter), advancing the schedule.
+    pub fn next_delay(&mut self) -> Duration {
+        let jitter = if self.jitter_ms == 0 {
+            0
+        } else {
+            self.rng = mix64(self.rng);
+            self.rng % (self.jitter_ms + 1)
+        };
+        let d = Duration::from_millis(self.next_ms + jitter);
+        self.next_ms = self.next_ms.saturating_mul(2).min(self.cap_ms);
+        self.attempts += 1;
+        d
+    }
+
+    /// Sleep for the next delay, clipped to `deadline`. Returns `false`
+    /// (without sleeping) when the deadline has already passed — the
+    /// caller should give up instead of retrying.
+    pub fn sleep_before(&mut self, deadline: Instant) -> bool {
+        let now = Instant::now();
+        if now >= deadline {
+            return false;
+        }
+        std::thread::sleep(self.next_delay().min(deadline - now));
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_double_up_to_the_cap() {
+        let mut b = Backoff::new(1, 8, 0, 42);
+        let ms: Vec<u64> = (0..6).map(|_| b.next_delay().as_millis() as u64).collect();
+        assert_eq!(ms, vec![1, 2, 4, 8, 8, 8]);
+        assert_eq!(b.attempts, 6);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic_per_seed() {
+        let mut a = Backoff::new(10, 10, 5, 7);
+        let mut b = Backoff::new(10, 10, 5, 7);
+        for _ in 0..32 {
+            let da = a.next_delay().as_millis() as u64;
+            let db = b.next_delay().as_millis() as u64;
+            assert_eq!(da, db, "same seed, same schedule");
+            assert!((10..=15).contains(&da), "{da}");
+        }
+    }
+
+    #[test]
+    fn zero_base_is_clamped() {
+        let mut b = Backoff::new(0, 0, 0, 1);
+        assert_eq!(b.next_delay(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn sleep_before_respects_deadline() {
+        let mut b = Backoff::new(1, 4, 0, 1);
+        assert!(!b.sleep_before(Instant::now() - Duration::from_millis(1)));
+        assert_eq!(b.attempts, 0, "no delay consumed past the deadline");
+        let t0 = Instant::now();
+        assert!(b.sleep_before(t0 + Duration::from_millis(50)));
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn mix64_spreads_nearby_inputs() {
+        assert_ne!(mix64(1), mix64(2));
+        assert_ne!(mix64(0), 0);
+    }
+}

@@ -1,6 +1,7 @@
 //! Small self-contained utilities that substitute for crates unavailable in
 //! the offline build environment (serde, half, proptest, env_logger).
 
+pub mod backoff;
 pub mod bench;
 pub mod compress;
 pub mod error;
@@ -9,6 +10,18 @@ pub mod json;
 pub mod logging;
 pub mod num;
 pub mod prop;
+
+/// FNV-1a over a byte string — the crate's one content-hash primitive
+/// (store-manifest identity, router store keys, rendezvous weights all
+/// build on it; keep a single implementation so they stay in agreement).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in bytes {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 /// Round a f64 up to the next multiple of `m` (m > 0).
 pub fn round_up(x: usize, m: usize) -> usize {
@@ -63,6 +76,14 @@ pub fn human_secs(s: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
 
     #[test]
     fn round_up_works() {

@@ -1,0 +1,317 @@
+//! End-to-end routing-tier integration: two real loopback `NetServer`s
+//! behind one `Router`, driven through the unchanged `net::client`.
+//! Proves the ISSUE's acceptance behaviors: store affinity (same
+//! manifest → same backend), `Busy` spillover to the next-ranked
+//! backend, typed busy once every backend is saturated, graceful drain
+//! with zero dropped in-flight jobs, and down-backend exclusion.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastmps::config::{ComputePrecision, NetConfig, Preset, RouterConfig, RunConfig, ServiceConfig};
+use fastmps::coordinator::data_parallel;
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::net::{Client, NetServer};
+use fastmps::router::{rendezvous, HealthState, Router};
+use fastmps::service::JobSpec;
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastmps-itroute-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn make_store(root: &Path) -> (Arc<GammaStore>, PathBuf) {
+    let dir = root.join("store");
+    let mut spec = Preset::Jiuzhang2.scaled_spec(77);
+    spec.m = 6;
+    spec.chi_cap = 10;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.0;
+    let store =
+        Arc::new(GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap());
+    (store, dir)
+}
+
+fn backend_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        n2_micro: 32,
+        target_batch: Some(256),
+        compute: ComputePrecision::F64,
+        linger_ms: 2,
+        ..Default::default()
+    }
+}
+
+fn loopback_net() -> NetConfig {
+    NetConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    }
+}
+
+fn router_cfg(backends: Vec<String>) -> RouterConfig {
+    RouterConfig {
+        backends,
+        probe_interval_ms: 50,
+        backoff_base_ms: 1,
+        backoff_cap_ms: 4,
+        jitter_ms: 0,
+        ..Default::default()
+    }
+}
+
+/// `run.counters.<key>` of a metrics JSON.
+fn counter(metrics: &fastmps::util::json::Json, key: &str) -> f64 {
+    metrics
+        .get("run")
+        .and_then(|r| r.get("counters"))
+        .and_then(|c| c.get(key))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0)
+}
+
+fn backend_submitted(server: &NetServer) -> f64 {
+    counter(&server.service().metrics_json(), "jobs_submitted")
+}
+
+#[test]
+fn same_manifest_jobs_share_a_backend_and_payloads_survive_forwarding() {
+    let root = scratch("affinity");
+    let (store, store_dir) = make_store(&root);
+    let b1 = NetServer::start(backend_cfg(), loopback_net()).unwrap();
+    let b2 = NetServer::start(backend_cfg(), loopback_net()).unwrap();
+    let addrs = vec![b1.local_addr().to_string(), b2.local_addr().to_string()];
+    let router = Router::start(router_cfg(addrs.clone()), loopback_net()).unwrap();
+    let mut client = Client::connect(&router.local_addr().to_string(), &loopback_net()).unwrap();
+    client.ping().unwrap();
+
+    let a = client.submit(&JobSpec::new(&store_dir, 96)).unwrap();
+    let mut spec_b = JobSpec::new(&store_dir, 96);
+    spec_b.sample_base = 96;
+    spec_b.tag = "routed-b".into();
+    let b = client.submit(&spec_b).unwrap();
+    assert_ne!(a, b, "router-global ids are distinct");
+
+    let res_a = client.wait(a, Duration::from_secs(60)).unwrap().unwrap();
+    let res_b = client.wait(b, Duration::from_secs(60)).unwrap().unwrap();
+    for res in [&res_a, &res_b] {
+        assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+        assert_eq!(res.result.get("done").unwrap().as_f64(), Some(96.0));
+    }
+    // Result ids are rewritten to the router-global ids.
+    assert_eq!(res_a.result.get("id").unwrap().as_f64(), Some(a as f64));
+
+    // Affinity: both jobs landed on the rendezvous-chosen backend, the
+    // other stayed cold.
+    let expected = rendezvous::rank(JobSpec::new(&store_dir, 1).store_key(), &addrs)[0];
+    let (hot, cold) = if expected == 0 { (&b1, &b2) } else { (&b2, &b1) };
+    assert_eq!(backend_submitted(hot), 2.0, "both jobs on the HRW choice");
+    assert_eq!(backend_submitted(cold), 0.0, "no stray placement");
+
+    // Payloads forwarded through the router are exact: the union of the
+    // two jobs' sinks equals a direct coordinator run over [0, 192).
+    let mut rc = RunConfig::new(store.spec.clone());
+    rc.n_samples = 192;
+    rc.n1_macro = 192;
+    rc.n2_micro = 32;
+    rc.compute = ComputePrecision::F64;
+    rc.store_precision = store.precision;
+    let reference = data_parallel::run(&rc, &store, &[]).unwrap();
+    let mut combined = res_a.sink.clone().unwrap();
+    combined.merge(res_b.sink.as_ref().unwrap());
+    assert_eq!(combined.hist, reference.sink.hist);
+    assert_eq!(combined.pair_sums, reference.sink.pair_sums);
+
+    // status / list speak router-global ids.
+    let view = client.status(a).unwrap();
+    assert_eq!(view.get("id").unwrap().as_f64(), Some(a as f64));
+    let listed = client.list().unwrap();
+    let ids: Vec<f64> = listed
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.get("id").unwrap().as_f64().unwrap())
+        .collect();
+    assert_eq!(ids, vec![a as f64, b as f64]);
+
+    // Router metrics: submits counted, no spillover, no rejects.
+    let m = client.metrics().unwrap();
+    assert_eq!(counter(&m, "router_submits"), 2.0);
+    assert_eq!(counter(&m, "router_spillovers"), 0.0);
+    assert_eq!(counter(&m, "router_busy_rejects"), 0.0);
+
+    drop(client);
+    drop(router);
+    drop(b1);
+    drop(b2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn busy_backend_spills_over_then_saturation_is_typed_busy() {
+    let root = scratch("spill");
+    let (_, store_dir) = make_store(&root);
+    // One queue slot per backend; a long linger keeps an admitted job
+    // holding that slot while the next submission arrives.
+    let cfg = || ServiceConfig {
+        max_queue: 1,
+        linger_ms: 400,
+        ..backend_cfg()
+    };
+    let b1 = NetServer::start(cfg(), loopback_net()).unwrap();
+    let b2 = NetServer::start(cfg(), loopback_net()).unwrap();
+    let addrs = vec![b1.local_addr().to_string(), b2.local_addr().to_string()];
+    let mut rcfg = router_cfg(addrs.clone());
+    rcfg.retry_budget = 4;
+    let router = Router::start(rcfg, loopback_net()).unwrap();
+    let mut client = Client::connect(&router.local_addr().to_string(), &loopback_net()).unwrap();
+
+    // First job occupies the rendezvous-first backend; the second gets
+    // its Busy and spills to the next-ranked one.
+    let a = client.submit(&JobSpec::new(&store_dir, 64)).unwrap();
+    let mut spec_b = JobSpec::new(&store_dir, 64);
+    spec_b.sample_base = 64;
+    let b = client.submit(&spec_b).unwrap();
+
+    let expected = rendezvous::rank(JobSpec::new(&store_dir, 1).store_key(), &addrs)[0];
+    let (first, second) = if expected == 0 { (&b1, &b2) } else { (&b2, &b1) };
+    assert_eq!(backend_submitted(first), 1.0, "affinity pick took job a");
+    assert_eq!(backend_submitted(second), 1.0, "busy spillover took job b");
+
+    // Both slots held: a third submission exhausts the retry budget and
+    // comes back as a typed busy (retryable), not a hard error.
+    let mut spec_c = JobSpec::new(&store_dir, 64);
+    spec_c.sample_base = 128;
+    let err = client
+        .submit(&spec_c)
+        .expect_err("both backends saturated must reject");
+    assert!(err.is_busy(), "typed busy, got: {err}");
+
+    let m = client.metrics().unwrap();
+    assert!(counter(&m, "router_spillovers") >= 1.0);
+    assert!(counter(&m, "router_busy_rejects") >= 1.0);
+
+    // Busy is transient: once the fleet drains, the same submit works.
+    assert!(client.wait(a, Duration::from_secs(60)).unwrap().is_some());
+    assert!(client.wait(b, Duration::from_secs(60)).unwrap().is_some());
+    let c = client.submit(&spec_c).unwrap();
+    assert!(client.wait(c, Duration::from_secs(60)).unwrap().is_some());
+
+    drop(client);
+    drop(router);
+    drop(b1);
+    drop(b2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn router_drain_finishes_in_flight_jobs_and_refuses_new_ones() {
+    let root = scratch("drain");
+    let (_, store_dir) = make_store(&root);
+    // A long linger keeps the job in flight when the drain starts.
+    let cfg = || ServiceConfig {
+        linger_ms: 300,
+        ..backend_cfg()
+    };
+    let b1 = NetServer::start(cfg(), loopback_net()).unwrap();
+    let b2 = NetServer::start(cfg(), loopback_net()).unwrap();
+    let addrs = vec![b1.local_addr().to_string(), b2.local_addr().to_string()];
+    let router = Router::start(router_cfg(addrs), loopback_net()).unwrap();
+    let addr = router.local_addr().to_string();
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+
+    let id = client.submit(&JobSpec::new(&store_dir, 96)).unwrap();
+    // Drain races the linger window: the reply must prove the routed job
+    // ran to completion with nothing dropped.
+    let metrics = client.shutdown_server(Duration::from_secs(120)).unwrap();
+    assert_eq!(metrics.get("jobs_routed").unwrap().as_f64(), Some(1.0));
+    assert_eq!(metrics.get("jobs_in_flight").unwrap().as_f64(), Some(0.0));
+    assert_eq!(counter(&metrics, "router_dropped_jobs"), 0.0, "zero dropped");
+    assert!(router.shutdown_requested());
+
+    // The job really finished on its backend (not cancelled, not lost).
+    let completed = counter(&b1.service().metrics_json(), "jobs_completed")
+        + counter(&b2.service().metrics_json(), "jobs_completed");
+    let failed = counter(&b1.service().metrics_json(), "jobs_failed")
+        + counter(&b2.service().metrics_json(), "jobs_failed");
+    assert_eq!(completed, 1.0);
+    assert_eq!(failed, 0.0);
+
+    // The shutdown reply closed the original connection; a fresh one can
+    // still fetch the terminal result, but new work is refused while
+    // draining (a deliberate error, not busy).
+    let mut late = Client::connect(&addr, &loopback_net()).unwrap();
+    let res = late.wait(id, Duration::from_secs(30)).unwrap().unwrap();
+    assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+    let err = late
+        .submit(&JobSpec::new(&store_dir, 8))
+        .expect_err("post-drain submit must fail");
+    assert!(!err.is_busy());
+    assert!(err.to_string().contains("shutting down"), "{err}");
+
+    drop(client);
+    drop(late);
+    drop(router);
+    drop(b1);
+    drop(b2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn dead_backend_goes_down_and_traffic_routes_around_it() {
+    let root = scratch("down");
+    let (_, store_dir) = make_store(&root);
+    let live = NetServer::start(backend_cfg(), loopback_net()).unwrap();
+    // A bound-then-dropped listener: connections are refused immediately.
+    let dead_addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut rcfg = router_cfg(vec![live.local_addr().to_string(), dead_addr.clone()]);
+    rcfg.probe_interval_ms = 30;
+    rcfg.degraded_after = 1;
+    rcfg.down_after = 2;
+    let router = Router::start(rcfg, loopback_net()).unwrap();
+
+    // The prober marks the dead backend Down within a few intervals.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let health = router.health();
+        if health[1].1 == HealthState::Down {
+            assert_eq!(health[0].1, HealthState::Alive);
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "never marked down");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Every submit lands on the live backend, whatever its rendezvous
+    // rank; the job completes end to end.
+    let mut client = Client::connect(&router.local_addr().to_string(), &loopback_net()).unwrap();
+    let id = client.submit(&JobSpec::new(&store_dir, 64)).unwrap();
+    let res = client.wait(id, Duration::from_secs(60)).unwrap().unwrap();
+    assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+    assert_eq!(backend_submitted(&live), 1.0);
+
+    // The metrics expose the per-backend states.
+    let m = client.metrics().unwrap();
+    let states: Vec<String> = m
+        .get("backends")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|b| b.get("state").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(states, vec!["alive".to_string(), "down".to_string()]);
+    assert!(counter(&m, "router_probe_failures") >= 2.0);
+
+    drop(client);
+    drop(router);
+    drop(live);
+    std::fs::remove_dir_all(&root).unwrap();
+}
