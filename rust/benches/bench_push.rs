@@ -1,0 +1,109 @@
+//! Throughput of the chunked store-push path: loopback upload of a
+//! generated store into a `NetServer` (pipelined compression), a dedup
+//! round trip, and a submit-by-key job against the pushed copy. Writes
+//! `BENCH_push.json`.
+//!
+//! Run with `cargo bench --bench bench_push` from `rust/`.
+
+use std::time::{Duration, Instant};
+
+use fastmps::config::{ComputePrecision, NetConfig, Preset, ServiceConfig};
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::net::{Client, NetServer};
+use fastmps::service::JobSpec;
+use fastmps::util::bench;
+use fastmps::util::json::Json;
+
+const CHUNK_BYTES: usize = 64 << 10;
+
+fn main() {
+    bench::header("push", "loopback chunked store push (FMPN/TCP)");
+
+    let root = std::env::temp_dir().join(format!("fastmps-bench-push-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let store_dir = root.join("store");
+    let mut spec = Preset::BorealisM216H.scaled_spec(7);
+    spec.m = 24;
+    spec.chi_cap = 48;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.1;
+    GammaStore::create(&store_dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap();
+
+    let cfg = ServiceConfig {
+        workers: 2,
+        n2_micro: 128,
+        target_batch: Some(1024),
+        compute: ComputePrecision::F32,
+        linger_ms: 2,
+        ..Default::default()
+    };
+    let net = NetConfig {
+        addr: "127.0.0.1:0".into(),
+        push_dir: Some(root.join("pushed")),
+        ..Default::default()
+    };
+    let server = NetServer::start(cfg, net.clone()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr, &net).unwrap();
+
+    let t0 = Instant::now();
+    let report = client.push_store(&store_dir, CHUNK_BYTES).unwrap();
+    let push_secs = t0.elapsed().as_secs_f64();
+    assert!(!report.dedup);
+
+    let t1 = Instant::now();
+    let again = client.push_store(&store_dir, CHUNK_BYTES).unwrap();
+    let dedup_secs = t1.elapsed().as_secs_f64();
+    assert!(again.dedup);
+
+    let id = client.submit(&JobSpec::by_key(report.key, 2000)).unwrap();
+    let res = client
+        .wait(id, Duration::from_secs(300))
+        .unwrap()
+        .expect("job terminal within bench timeout");
+    assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+
+    let metrics = client.shutdown_server(Duration::from_secs(300)).unwrap();
+    drop(client);
+    let _ = server.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+
+    let wall = push_secs + dedup_secs;
+    let mb = report.raw_bytes as f64 / 1e6;
+    let push_mb_per_sec = if push_secs > 0.0 { mb / push_secs } else { 0.0 };
+    let j = Json::obj(vec![
+        ("bench", Json::Str("push-loopback".into())),
+        ("measured", Json::Bool(true)),
+        ("raw_bytes", Json::Num(report.raw_bytes as f64)),
+        ("chunks", Json::Num(report.chunks as f64)),
+        ("chunk_bytes", Json::Num(CHUNK_BYTES as f64)),
+        ("wall_secs", Json::Num(wall)),
+        ("push_secs", Json::Num(push_secs)),
+        ("dedup_secs", Json::Num(dedup_secs)),
+        ("push_mb_per_sec", Json::Num(push_mb_per_sec)),
+        (
+            "chunks_per_sec",
+            Json::Num(if push_secs > 0.0 {
+                report.chunks as f64 / push_secs
+            } else {
+                0.0
+            }),
+        ),
+        ("service", metrics),
+    ]);
+
+    bench::row(&[
+        ("raw_bytes", format!("{}", report.raw_bytes)),
+        ("chunks", format!("{}", report.chunks)),
+        ("push_secs", format!("{push_secs:.3}")),
+        ("push_mb_per_sec", format!("{push_mb_per_sec:.2}")),
+        ("dedup_secs", format!("{dedup_secs:.4}")),
+    ]);
+    bench::paper("no paper counterpart — §3.3-style compression+overlap applied to ingest");
+
+    std::fs::write("../BENCH_push.json", j.pretty())
+        .or_else(|_| std::fs::write("BENCH_push.json", j.pretty()))
+        .unwrap();
+    println!("  wrote BENCH_push.json");
+}

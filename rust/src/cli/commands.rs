@@ -51,6 +51,7 @@ COMMANDS:
               file only: [--drain]
               tcp only:  [--max-conns N] [--frame-mb N]
                          [--read-timeout-ms N] [--write-timeout-ms N]
+                         [--push-dir DIR] [--chunk-kb N] [--staging-mb N]
   route       Front a fleet of TCP serve instances with store-affinity routing
               --listen ADDR --backend ADDR [--backend ADDR ...]
               [--probe-ms N] [--degraded-after N] [--down-after N]
@@ -59,8 +60,13 @@ COMMANDS:
               [--max-conns N] [--frame-mb N]
               [--read-timeout-ms N] [--write-timeout-ms N]
               [--max-seconds S] [--json]
+  push        Upload a store to a server/router (chunked, content-addressed)
+              --connect ADDR --data STORE [--chunk-kb N] [--json]
+              Prints the content key; submit jobs with --key afterwards —
+              no shared data volume needed.
   submit      Submit a sampling job to a running serve instance
-              (--jobs DIR | --connect ADDR) --data STORE --samples N
+              (--jobs DIR | --connect ADDR) (--data STORE | --key HEX)
+              --samples N
               [--sample-base B] [--compute C] [--tag T] [--wait]
               [--timeout-s S] [--poll-ms N] [--json]
   jobs        List job statuses (job directory or TCP server)
@@ -89,6 +95,7 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
         "route" => cmd_route(&args),
+        "push" => cmd_push(&args),
         "submit" => cmd_submit(&args),
         "jobs" => cmd_jobs(&args),
         "metrics" => cmd_metrics(&args),
@@ -394,6 +401,9 @@ fn net_config_from_args(args: &Args, addr: String) -> Result<NetConfig> {
         max_frame_bytes: args.usize_or("frame-mb", d.max_frame_bytes >> 20)? << 20,
         read_timeout_ms: args.u64_or("read-timeout-ms", d.read_timeout_ms)?,
         write_timeout_ms: args.u64_or("write-timeout-ms", d.write_timeout_ms)?,
+        push_dir: args.str_opt("push-dir").map(PathBuf::from),
+        push_chunk_bytes: args.usize_or("chunk-kb", d.push_chunk_bytes >> 10)? << 10,
+        push_staging_bytes: args.u64_or("staging-mb", d.push_staging_bytes >> 20)? << 20,
     })
 }
 
@@ -527,14 +537,68 @@ fn cmd_route(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_push(args: &Args) -> Result<()> {
+    let addr = args.req("connect")?.to_string();
+    let data = PathBuf::from(args.req("data")?);
+    let d = NetConfig::default();
+    let chunk = args.usize_or("chunk-kb", d.push_chunk_bytes >> 10)? << 10;
+    let as_json = args.flag("json");
+    args.finish()?;
+    let t0 = std::time::Instant::now();
+    let report = connect(&addr)?.push_store(&data, chunk)?;
+    let secs = t0.elapsed().as_secs_f64();
+    if as_json {
+        let j = Json::obj(vec![
+            ("key", Json::Str(format!("{:016x}", report.key))),
+            ("dedup", Json::Bool(report.dedup)),
+            ("chunks", Json::Num(report.chunks as f64)),
+            ("raw_bytes", Json::Num(report.raw_bytes as f64)),
+            ("wall_secs", Json::Num(secs)),
+        ]);
+        println!("{}", j.pretty());
+    } else if report.dedup {
+        println!(
+            "{addr} already has this store — key {:016x} (deduplicated, nothing sent)",
+            report.key
+        );
+    } else {
+        let rate = if secs > 0.0 {
+            (report.raw_bytes as f64 / secs) as u64
+        } else {
+            0
+        };
+        println!(
+            "pushed {} as key {:016x}: {} in {} chunks over {} ({}/s)",
+            data.display(),
+            report.key,
+            crate::util::human_bytes(report.raw_bytes),
+            report.chunks,
+            crate::util::human_secs(secs),
+            crate::util::human_bytes(rate),
+        );
+        println!(
+            "submit against it with: fastmps submit --connect {addr} --key {:016x} --samples N",
+            report.key
+        );
+    }
+    Ok(())
+}
+
 fn job_spec_from_args(args: &Args) -> Result<crate::service::JobSpec> {
     let samples: u64 = {
         let v = args.req("samples")?;
         v.parse()
             .map_err(|_| Error::config(format!("--samples: '{v}' is not an integer")))?
     };
-    let mut spec =
-        crate::service::JobSpec::new(PathBuf::from(args.req("data")?), samples);
+    let mut spec = match (args.str_opt("key"), args.str_opt("data")) {
+        (Some(k), _) => {
+            let key = u64::from_str_radix(k, 16)
+                .map_err(|_| Error::config(format!("--key: '{k}' is not a hex store key")))?;
+            crate::service::JobSpec::by_key(key, samples)
+        }
+        (None, Some(d)) => crate::service::JobSpec::new(PathBuf::from(d), samples),
+        (None, None) => return Err(Error::config("submit needs --data DIR or --key HEX")),
+    };
     spec.sample_base = args.u64_or("sample-base", 0)?;
     spec.compute = match args.str_opt("compute") {
         None => None,
@@ -881,6 +945,61 @@ mod tests {
     #[test]
     fn route_requires_backends() {
         assert!(run_cli(&argv("route --listen 127.0.0.1:0")).is_err());
+    }
+
+    #[test]
+    fn push_cli_round_trip_and_key_submit() {
+        let root = std::env::temp_dir().join(format!("fastmps-cli-push-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let store = root.join("store");
+        run_cli(&argv(&format!(
+            "gen-data --m 5 --chi 8 --d 3 --out {} --decay 0 --sigma 0",
+            store.display()
+        )))
+        .unwrap();
+        let cfg = ServiceConfig {
+            workers: 2,
+            n2_micro: 32,
+            target_batch: Some(128),
+            compute: ComputePrecision::F64,
+            linger_ms: 2,
+            ..Default::default()
+        };
+        let net = NetConfig {
+            addr: "127.0.0.1:0".into(),
+            push_dir: Some(root.join("pushed")),
+            ..Default::default()
+        };
+        let server = NetServer::start(cfg, net).unwrap();
+        let addr = server.local_addr().to_string();
+        run_cli(&argv(&format!(
+            "push --connect {addr} --data {} --chunk-kb 2 --json",
+            store.display()
+        )))
+        .unwrap();
+        let key = crate::io::manifest_hash_at(&store).unwrap();
+        run_cli(&argv(&format!(
+            "submit --connect {addr} --key {key:016x} --samples 32 --wait --timeout-s 60 --json"
+        )))
+        .unwrap();
+        // Second push dedups (exercises the dedup print path).
+        run_cli(&argv(&format!(
+            "push --connect {addr} --data {}",
+            store.display()
+        )))
+        .unwrap();
+        drop(server);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn submit_requires_data_or_key() {
+        assert!(run_cli(&argv("submit --connect 127.0.0.1:1 --samples 5")).is_err());
+        assert!(run_cli(&argv(
+            "submit --connect 127.0.0.1:1 --key not-hex --samples 5"
+        ))
+        .is_err());
     }
 
     #[test]

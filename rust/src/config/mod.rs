@@ -367,6 +367,18 @@ pub struct NetConfig {
     pub read_timeout_ms: u64,
     /// Socket write timeout (slow-peer guard).
     pub write_timeout_ms: u64,
+    /// Server side: where pushed stores are staged and installed
+    /// (`store-<hash>` directories). `None` disables the `push_begin` op
+    /// with a clear error — a server without local scratch should say so
+    /// rather than fill `/tmp`.
+    pub push_dir: Option<PathBuf>,
+    /// Client side: raw bytes per push chunk before compression (each
+    /// chunk becomes one CHUNK frame; compressed size is bounded by
+    /// `max_frame_bytes`).
+    pub push_chunk_bytes: usize,
+    /// Server side: max announced size of one incoming push — the staging
+    /// quota a single `push_begin` may claim.
+    pub push_staging_bytes: u64,
 }
 
 impl Default for NetConfig {
@@ -377,11 +389,31 @@ impl Default for NetConfig {
             max_frame_bytes: 64 << 20,
             read_timeout_ms: 2000,
             write_timeout_ms: 10_000,
+            push_dir: None,
+            push_chunk_bytes: 1 << 20,
+            push_staging_bytes: 4 << 30,
         }
     }
 }
 
 impl NetConfig {
+    /// How long a push endpoint waits without receiving a frame before
+    /// aborting the transfer. One definition shared by the server's chunk
+    /// receiver, the router's relay, and the router's failure drain, so
+    /// the tiers can never disagree about what "stalled" means.
+    pub fn push_stall_cap(&self) -> std::time::Duration {
+        std::time::Duration::from_millis((self.read_timeout_ms.saturating_mul(4)).max(1000))
+    }
+
+    /// Read deadline for a push's closing exchange (`push_end` → reply):
+    /// finalization (checksum, manifest hash, open, rename) can outlast
+    /// the per-RPC deadline, so both the client and the router's relay
+    /// widen to this before waiting on the final verdict. Associated (not
+    /// a method) because the client carries only its read timeout.
+    pub fn push_end_timeout_ms(read_timeout_ms: u64) -> u64 {
+        read_timeout_ms.max(30_000)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.addr.is_empty() {
             return Err(Error::config("net: addr must not be empty"));
@@ -395,6 +427,22 @@ impl NetConfig {
         if self.read_timeout_ms == 0 || self.write_timeout_ms == 0 {
             return Err(Error::config("net: timeouts must be ≥ 1 ms"));
         }
+        if self.push_chunk_bytes < 1024 {
+            return Err(Error::config("net: push_chunk_bytes must be ≥ 1024"));
+        }
+        // A compressed chunk can exceed its raw size by ~1%; leave margin
+        // so every CHUNK frame fits under the frame cap.
+        if self.push_chunk_bytes > self.max_frame_bytes / 2 {
+            return Err(Error::config(format!(
+                "net: push_chunk_bytes {} exceeds half the {} byte frame cap",
+                self.push_chunk_bytes, self.max_frame_bytes
+            )));
+        }
+        if self.push_staging_bytes < self.push_chunk_bytes as u64 {
+            return Err(Error::config(
+                "net: push_staging_bytes below push_chunk_bytes",
+            ));
+        }
         Ok(())
     }
 
@@ -405,6 +453,18 @@ impl NetConfig {
             ("max_frame_bytes", Json::Num(self.max_frame_bytes as f64)),
             ("read_timeout_ms", Json::Num(self.read_timeout_ms as f64)),
             ("write_timeout_ms", Json::Num(self.write_timeout_ms as f64)),
+            (
+                "push_dir",
+                self.push_dir
+                    .as_ref()
+                    .map(|p| Json::Str(p.display().to_string()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("push_chunk_bytes", Json::Num(self.push_chunk_bytes as f64)),
+            (
+                "push_staging_bytes",
+                Json::Num(self.push_staging_bytes as f64),
+            ),
         ])
     }
 }
@@ -706,6 +766,23 @@ mod tests {
             ..NetConfig::default()
         };
         assert!(bad.validate().is_err());
+        let bad = NetConfig {
+            push_chunk_bytes: 16,
+            ..NetConfig::default()
+        };
+        assert!(bad.validate().is_err(), "tiny chunk");
+        let bad = NetConfig {
+            push_chunk_bytes: 60 << 20, // over half the 64 MiB frame cap
+            ..NetConfig::default()
+        };
+        assert!(bad.validate().is_err(), "chunk vs frame cap");
+        let bad = NetConfig {
+            push_staging_bytes: 1,
+            ..NetConfig::default()
+        };
+        assert!(bad.validate().is_err(), "staging below chunk");
+        let n = NetConfig::default();
+        assert_eq!(n.to_json().get("push_dir"), Some(&Json::Null));
     }
 
     #[test]

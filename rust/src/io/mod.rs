@@ -21,4 +21,7 @@ mod store;
 
 pub use diskmodel::DiskModel;
 pub use loader::{PrefetchStats, Prefetcher};
-pub use store::{manifest_hash_at, GammaStore, StoreCodec, StorePrecision};
+pub use store::{
+    manifest_hash_at, GammaStore, StoreCodec, StorePrecision, StoreStreamSource,
+    StoreStreamWriter, STREAM_MAGIC,
+};

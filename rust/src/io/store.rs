@@ -287,6 +287,28 @@ impl GammaStore {
         })
     }
 
+    /// Cheap integrity check of the blob files against the manifest:
+    /// every site file must exist with exactly its recorded byte count.
+    /// The push path runs this before installing a received store, so a
+    /// stream that delivered a valid manifest but missing or truncated
+    /// blobs is rejected instead of dedup-poisoning its content key.
+    /// (Does not decode blob contents — `load_site` still validates
+    /// shapes and codec framing on first use.)
+    pub fn verify_blobs(&self) -> Result<()> {
+        for i in 0..self.spec.m {
+            let path = site_path(&self.dir, i);
+            let meta = fs::metadata(&path).map_err(|e| Error::io(path.display(), e))?;
+            if meta.len() != self.blob_bytes[i] {
+                return Err(Error::format(format!(
+                    "site {i} blob is {} bytes, manifest records {}",
+                    meta.len(),
+                    self.blob_bytes[i]
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Load the full chain (small scales only).
     pub fn load_all(&self) -> Result<Mps> {
         let sites = (0..self.spec.m)
@@ -301,8 +323,12 @@ impl GammaStore {
     }
 }
 
+fn site_name(i: usize) -> String {
+    format!("site_{i:05}.bin")
+}
+
 fn site_path(dir: &Path, i: usize) -> PathBuf {
-    dir.join(format!("site_{i:05}.bin"))
+    dir.join(site_name(i))
 }
 
 /// FNV-1a over the manifest file of the store at `dir` (see
@@ -311,6 +337,315 @@ pub fn manifest_hash_at(dir: &Path) -> Result<u64> {
     let path = dir.join("manifest.json");
     let bytes = fs::read(&path).map_err(|e| Error::io(path.display(), e))?;
     Ok(crate::util::fnv1a(&bytes))
+}
+
+// ---------------------------------------------------------------------------
+// FMSS: the serialized store stream behind the chunked push path
+// (`net::push`). A self-delimiting concatenation of the manifest and every
+// site blob:
+//
+// ```text
+// stream := "FMSS" | varint n_files | file*
+// file   := varint name_len | name (UTF-8, no path separators)
+//         | varint data_len | data
+// ```
+//
+// The manifest comes first so receivers can validate identity early; blobs
+// follow in site order. `StoreStreamSource` produces the stream
+// incrementally (one open file at a time — constant memory regardless of
+// store size); `StoreStreamWriter` is the receiving state machine, writing
+// files into a staging directory as bytes arrive at arbitrary chunk
+// boundaries.
+// ---------------------------------------------------------------------------
+
+/// Magic prefix of a serialized store stream.
+pub const STREAM_MAGIC: [u8; 4] = *b"FMSS";
+
+/// Upper bound on files in one stream (a store has M + 1).
+const MAX_STREAM_FILES: u64 = 1 << 20;
+
+fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+/// Sending half of the FMSS stream (see the section comment above).
+pub struct StoreStreamSource {
+    dir: PathBuf,
+    /// `(name, size)` in stream order.
+    files: Vec<(String, u64)>,
+    next_file: usize,
+    /// Header bytes not yet emitted.
+    pending: Vec<u8>,
+    pending_pos: usize,
+    /// Open file + bytes remaining in it.
+    current: Option<(fs::File, u64)>,
+    total: u64,
+}
+
+impl StoreStreamSource {
+    /// Open the store at `dir` for streaming. Validates it parses as an
+    /// FMPS1 store first, so a push can never ship a broken directory.
+    pub fn open(dir: &Path) -> Result<StoreStreamSource> {
+        let store = GammaStore::open(dir)?;
+        let mut files = Vec::with_capacity(store.num_sites() + 1);
+        for name in std::iter::once("manifest.json".to_string())
+            .chain((0..store.num_sites()).map(site_name))
+        {
+            let path = dir.join(&name);
+            let meta = fs::metadata(&path).map_err(|e| Error::io(path.display(), e))?;
+            files.push((name, meta.len()));
+        }
+        let mut total = (STREAM_MAGIC.len() + varint_len(files.len() as u64)) as u64;
+        for (name, size) in &files {
+            total += (varint_len(name.len() as u64) + name.len() + varint_len(*size)) as u64
+                + *size;
+        }
+        let mut pending = Vec::with_capacity(16);
+        pending.extend_from_slice(&STREAM_MAGIC);
+        compress::write_varint(&mut pending, files.len() as u64);
+        Ok(StoreStreamSource {
+            dir: dir.to_path_buf(),
+            files,
+            next_file: 0,
+            pending,
+            pending_pos: 0,
+            current: None,
+            total,
+        })
+    }
+
+    /// Exact length of the full stream in bytes (known up front — file
+    /// sizes come from metadata, headers are deterministic).
+    pub fn total_len(&self) -> u64 {
+        self.total
+    }
+
+    /// Fill `buf` with the next stream bytes; returns the count written
+    /// (0 = end of stream).
+    pub fn read_chunk(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let mut n = 0usize;
+        while n < buf.len() {
+            if self.pending_pos < self.pending.len() {
+                let take = (self.pending.len() - self.pending_pos).min(buf.len() - n);
+                buf[n..n + take]
+                    .copy_from_slice(&self.pending[self.pending_pos..self.pending_pos + take]);
+                self.pending_pos += take;
+                n += take;
+                continue;
+            }
+            if let Some((f, remaining)) = self.current.as_mut() {
+                if *remaining == 0 {
+                    self.current = None;
+                    continue;
+                }
+                let want = (buf.len() - n).min(usize::try_from(*remaining).unwrap_or(usize::MAX));
+                let got = std::io::Read::read(f, &mut buf[n..n + want])
+                    .map_err(|e| Error::io("store stream read", e))?;
+                if got == 0 {
+                    // The file shrank after the size was recorded: the
+                    // announced total would be wrong — abort loudly.
+                    return Err(Error::format("store blob shrank while streaming"));
+                }
+                *remaining -= got as u64;
+                n += got;
+                continue;
+            }
+            if self.next_file >= self.files.len() {
+                break; // end of stream
+            }
+            let (name, size) = self.files[self.next_file].clone();
+            self.next_file += 1;
+            self.pending.clear();
+            self.pending_pos = 0;
+            compress::write_varint(&mut self.pending, name.len() as u64);
+            self.pending.extend_from_slice(name.as_bytes());
+            compress::write_varint(&mut self.pending, size);
+            let path = self.dir.join(&name);
+            let f = fs::File::open(&path).map_err(|e| Error::io(path.display(), e))?;
+            self.current = Some((f, size));
+        }
+        Ok(n)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum WriterState {
+    Magic,
+    NFiles,
+    NameLen,
+    Name { len: usize },
+    DataLen,
+    Data { remaining: u64 },
+    Done,
+}
+
+/// Accumulate one varint across feed boundaries; `Ok(None)` = need more
+/// bytes.
+fn take_stream_varint(header: &mut Vec<u8>, b: &mut &[u8]) -> Result<Option<u64>> {
+    while let Some((&first, rest)) = b.split_first() {
+        header.push(first);
+        *b = rest;
+        if header.len() > 10 {
+            return Err(Error::format("store stream: varint overflow"));
+        }
+        if first & 0x80 == 0 {
+            let (v, n) = compress::read_varint(header).map_err(Error::format)?;
+            debug_assert_eq!(n, header.len());
+            header.clear();
+            return Ok(Some(v));
+        }
+    }
+    Ok(None)
+}
+
+fn validate_stream_name(name: &str) -> Result<()> {
+    let ok = !name.is_empty()
+        && !name.starts_with('.')
+        && !name.contains("..")
+        && name
+            .bytes()
+            .all(|c| c.is_ascii_alphanumeric() || c == b'.' || c == b'_' || c == b'-');
+    if !ok {
+        return Err(Error::format(format!(
+            "store stream: unsafe file name '{name}'"
+        )));
+    }
+    Ok(())
+}
+
+/// Receiving half of the FMSS stream: feed bytes in arbitrary-sized
+/// pieces; files are created under `dir` as their headers complete.
+/// Rejects path-escaping names, implausible counts, and data after the
+/// final file. The caller owns cleanup of `dir` on failure.
+pub struct StoreStreamWriter {
+    dir: PathBuf,
+    state: WriterState,
+    /// Bytes buffered while a header (magic/varint/name) completes.
+    header: Vec<u8>,
+    current_name: String,
+    current: Option<fs::File>,
+    n_files: u64,
+    files_done: u64,
+}
+
+impl StoreStreamWriter {
+    pub fn new(dir: &Path) -> Result<StoreStreamWriter> {
+        fs::create_dir_all(dir).map_err(|e| Error::io(dir.display(), e))?;
+        Ok(StoreStreamWriter {
+            dir: dir.to_path_buf(),
+            state: WriterState::Magic,
+            header: Vec::new(),
+            current_name: String::new(),
+            current: None,
+            n_files: 0,
+            files_done: 0,
+        })
+    }
+
+    /// True once exactly `n_files` complete files have been written.
+    pub fn finished(&self) -> bool {
+        matches!(self.state, WriterState::Done)
+    }
+
+    fn close_current_file(&mut self) -> WriterState {
+        self.current = None;
+        self.files_done += 1;
+        if self.files_done == self.n_files {
+            WriterState::Done
+        } else {
+            WriterState::NameLen
+        }
+    }
+
+    pub fn feed(&mut self, mut b: &[u8]) -> Result<()> {
+        while !b.is_empty() {
+            match self.state {
+                WriterState::Magic => {
+                    let take = (STREAM_MAGIC.len() - self.header.len()).min(b.len());
+                    self.header.extend_from_slice(&b[..take]);
+                    b = &b[take..];
+                    if self.header.len() == STREAM_MAGIC.len() {
+                        if self.header[..] != STREAM_MAGIC {
+                            return Err(Error::format("store stream: bad magic (want FMSS)"));
+                        }
+                        self.header.clear();
+                        self.state = WriterState::NFiles;
+                    }
+                }
+                WriterState::NFiles => {
+                    if let Some(v) = take_stream_varint(&mut self.header, &mut b)? {
+                        if v == 0 || v > MAX_STREAM_FILES {
+                            return Err(Error::format(format!(
+                                "store stream: implausible file count {v}"
+                            )));
+                        }
+                        self.n_files = v;
+                        self.state = WriterState::NameLen;
+                    }
+                }
+                WriterState::NameLen => {
+                    if let Some(v) = take_stream_varint(&mut self.header, &mut b)? {
+                        if v == 0 || v > 255 {
+                            return Err(Error::format(format!(
+                                "store stream: implausible name length {v}"
+                            )));
+                        }
+                        self.state = WriterState::Name { len: v as usize };
+                    }
+                }
+                WriterState::Name { len } => {
+                    let take = (len - self.header.len()).min(b.len());
+                    self.header.extend_from_slice(&b[..take]);
+                    b = &b[take..];
+                    if self.header.len() == len {
+                        let name = std::str::from_utf8(&self.header)
+                            .map_err(|_| Error::format("store stream: name not UTF-8"))?;
+                        validate_stream_name(name)?;
+                        self.current_name = name.to_string();
+                        self.header.clear();
+                        self.state = WriterState::DataLen;
+                    }
+                }
+                WriterState::DataLen => {
+                    if let Some(v) = take_stream_varint(&mut self.header, &mut b)? {
+                        let path = self.dir.join(&self.current_name);
+                        let f =
+                            fs::File::create(&path).map_err(|e| Error::io(path.display(), e))?;
+                        self.current = Some(f);
+                        self.state = if v == 0 {
+                            // Zero-length file: complete immediately so a
+                            // stream ending on it still finishes.
+                            self.close_current_file()
+                        } else {
+                            WriterState::Data { remaining: v }
+                        };
+                    }
+                }
+                WriterState::Data { remaining } => {
+                    let take = usize::try_from(remaining).unwrap_or(usize::MAX).min(b.len());
+                    let f = self.current.as_mut().expect("file open in Data state");
+                    std::io::Write::write_all(f, &b[..take])
+                        .map_err(|e| Error::io("store stream write", e))?;
+                    b = &b[take..];
+                    let remaining = remaining - take as u64;
+                    self.state = if remaining == 0 {
+                        self.close_current_file()
+                    } else {
+                        WriterState::Data { remaining }
+                    };
+                }
+                WriterState::Done => {
+                    return Err(Error::format("store stream: data after final file"));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 fn encode_site(g: &Tensor3<f64>, precision: StorePrecision, codec: StoreCodec) -> Result<Vec<u8>> {
@@ -542,6 +877,80 @@ mod tests {
             GammaStore::create(&dir, &spec(), StorePrecision::F32, StoreCodec::Raw).unwrap();
         assert!(store.load_site(6).is_err());
         fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_stream_roundtrips_at_odd_chunk_sizes() {
+        let dir = tmpdir("stream-src");
+        let s = spec();
+        let store = GammaStore::create(&dir, &s, StorePrecision::F32, StoreCodec::Lz).unwrap();
+        let hash = store.manifest_hash().unwrap();
+        for chunk in [1usize, 7, 64, 1 << 16] {
+            let out = tmpdir(&format!("stream-dst-{chunk}"));
+            let mut src = StoreStreamSource::open(&dir).unwrap();
+            let total = src.total_len();
+            let mut w = StoreStreamWriter::new(&out).unwrap();
+            let mut buf = vec![0u8; chunk];
+            let mut moved = 0u64;
+            loop {
+                let n = src.read_chunk(&mut buf).unwrap();
+                if n == 0 {
+                    break;
+                }
+                w.feed(&buf[..n]).unwrap();
+                moved += n as u64;
+            }
+            assert_eq!(moved, total, "total_len is exact (chunk {chunk})");
+            assert!(w.finished(), "writer complete (chunk {chunk})");
+            assert_eq!(manifest_hash_at(&out).unwrap(), hash, "identity preserved");
+            let back = GammaStore::open(&out).unwrap();
+            assert_eq!(back.bonds, store.bonds);
+            back.load_all().unwrap();
+            fs::remove_dir_all(&out).unwrap();
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_stream_writer_rejects_hostile_input() {
+        use crate::util::compress::write_varint;
+        let out = tmpdir("stream-bad");
+
+        // Bad magic.
+        let mut w = StoreStreamWriter::new(&out).unwrap();
+        assert!(w.feed(b"NOPE").is_err());
+
+        // Path-escaping name ('/' is outside the allowed alphabet).
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&STREAM_MAGIC);
+        write_varint(&mut evil, 1);
+        let name = b"../escape";
+        write_varint(&mut evil, name.len() as u64);
+        evil.extend_from_slice(name);
+        let mut w = StoreStreamWriter::new(&out).unwrap();
+        assert!(w.feed(&evil).is_err());
+
+        // Zero files is implausible.
+        let mut zero = Vec::new();
+        zero.extend_from_slice(&STREAM_MAGIC);
+        write_varint(&mut zero, 0);
+        let mut w = StoreStreamWriter::new(&out).unwrap();
+        assert!(w.feed(&zero).is_err());
+
+        // Trailing bytes after the final file.
+        let mut tail = Vec::new();
+        tail.extend_from_slice(&STREAM_MAGIC);
+        write_varint(&mut tail, 1);
+        write_varint(&mut tail, 1);
+        tail.extend_from_slice(b"f");
+        write_varint(&mut tail, 2);
+        tail.extend_from_slice(b"ok");
+        let mut w = StoreStreamWriter::new(&out).unwrap();
+        w.feed(&tail).unwrap();
+        assert!(w.finished());
+        assert!(w.feed(b"x").is_err(), "data after final file");
+
+        fs::remove_dir_all(&out).unwrap();
     }
 
     #[test]

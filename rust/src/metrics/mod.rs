@@ -63,6 +63,15 @@ pub mod keys {
     pub const NET_REJECTS_CONN: &str = "net_rejects_conn";
     /// Submissions rejected with a typed `busy` frame (admission full).
     pub const NET_REJECTS_BUSY: &str = "net_rejects_busy";
+    /// Stores installed through the chunked-push path (`push_begin`).
+    pub const NET_PUSHES: &str = "net_pushes";
+    /// Raw (decompressed) bytes landed by completed pushes.
+    pub const NET_PUSH_BYTES: &str = "net_push_bytes";
+    /// `push_begin` requests answered by dedup (store already present).
+    pub const NET_PUSH_DEDUPS: &str = "net_push_dedups";
+    /// Pushes aborted mid-transfer (disconnect, stall, checksum mismatch);
+    /// each one left *no* partial store behind.
+    pub const NET_PUSH_ABORTS: &str = "net_push_aborts";
 
     // Routing-tier counters (`router::gateway`).
     /// Jobs the router placed on a backend.
@@ -82,6 +91,14 @@ pub mod keys {
     /// In-flight jobs the drain gave up on (backend unreachable); a clean
     /// drain leaves this at 0.
     pub const ROUTER_DROPPED_JOBS: &str = "router_dropped_jobs";
+    /// Store pushes proxied through the router to a completed upload.
+    pub const ROUTER_PUSHES: &str = "router_pushes";
+    /// `push_begin` requests a backend answered by dedup (mirrors the
+    /// server-side `net_pushes` / `net_push_dedups` split).
+    pub const ROUTER_PUSH_DEDUPS: &str = "router_push_dedups";
+    /// Proxied pushes that failed mid-stream (backend lost); the client
+    /// saw a typed `busy` and can retry against the next-ranked backend.
+    pub const ROUTER_PUSH_FAILURES: &str = "router_push_failures";
 }
 
 impl Metrics {

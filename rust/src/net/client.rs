@@ -8,6 +8,7 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
+use std::path::Path;
 use std::time::Duration;
 
 use super::frame::{self, Frame, FrameReader, FrameWriter};
@@ -24,6 +25,19 @@ use crate::util::json::Json;
 pub struct JobResult {
     pub result: Json,
     pub sink: Option<SampleSink>,
+}
+
+/// Outcome of [`Client::push_store`].
+#[derive(Debug, Clone)]
+pub struct PushReport {
+    /// Content key (manifest hash) — submit jobs with [`JobSpec::by_key`].
+    pub key: u64,
+    /// The receiver already had the store; nothing was transferred.
+    pub dedup: bool,
+    /// Chunks sent (0 on dedup).
+    pub chunks: u64,
+    /// Raw stream bytes sent (0 on dedup).
+    pub raw_bytes: u64,
 }
 
 /// One connection to a [`super::server::NetServer`].
@@ -75,10 +89,38 @@ impl Client {
     fn read_ctrl(&mut self) -> Result<Json> {
         match self.reader.read_frame()? {
             Frame::Ctrl(j) => Self::check(j),
-            Frame::Payload(_) => Err(Error::format(
-                "net wire: unexpected payload frame (expected control reply)",
+            Frame::Payload(_) | Frame::Chunk(_) => Err(Error::format(
+                "net wire: unexpected binary frame (expected control reply)",
             )),
         }
+    }
+
+    /// Send `msg` and return the raw control reply without interpreting
+    /// `ok`/`type`/`busy` — the router's relay paths forward backend
+    /// verdicts verbatim. `Err` means transport/framing only.
+    pub(crate) fn rpc_raw(&mut self, msg: &Json) -> Result<Json> {
+        self.writer.write_ctrl(msg)?;
+        match self.reader.read_frame()? {
+            Frame::Ctrl(j) => Ok(j),
+            Frame::Payload(_) | Frame::Chunk(_) => Err(Error::format(
+                "net wire: unexpected binary frame (expected control reply)",
+            )),
+        }
+    }
+
+    /// [`rpc_raw`](Self::rpc_raw) under a widened read deadline, restored
+    /// afterwards — for replies that legitimately take longer than one
+    /// RPC (a backend finalizing a push).
+    pub(crate) fn rpc_raw_deadline(&mut self, msg: &Json, read_ms: u64) -> Result<Json> {
+        self.set_read_timeout(read_ms.max(1))?;
+        let out = self.rpc_raw(msg);
+        self.set_read_timeout(self.read_timeout_ms)?;
+        out
+    }
+
+    /// Forward one already-packed push chunk (router relay path).
+    pub(crate) fn forward_chunk(&mut self, packed: &[u8]) -> Result<()> {
+        self.writer.write_chunk(packed)
     }
 
     fn check(j: Json) -> Result<Json> {
@@ -204,7 +246,7 @@ impl Client {
                     let sink = if r.get("payload").and_then(|v| v.as_bool()) == Some(true) {
                         match self.reader.read_frame()? {
                             Frame::Payload(p) => Some(frame::unpack_sink(&p)?),
-                            Frame::Ctrl(_) => {
+                            Frame::Ctrl(_) | Frame::Chunk(_) => {
                                 return Err(Error::format(
                                     "net wire: expected payload frame after result",
                                 ));
@@ -249,6 +291,101 @@ impl Client {
         r.get("metrics")
             .cloned()
             .ok_or_else(|| Error::format("net wire: metrics reply without metrics"))
+    }
+
+    /// Upload the `GammaStore` at `dir` (chunked, content-addressed; see
+    /// `docs/PROTOCOL.md` § Chunked store push). Returns the content key
+    /// to submit jobs by ([`JobSpec::by_key`]); `dedup == true` means the
+    /// receiver already had the store and nothing was transferred.
+    ///
+    /// The upload is pipelined: a worker thread reads and LZ-compresses
+    /// chunk *k+1* while the socket write of chunk *k* is in flight
+    /// (bounded channel, so at most two chunks are in memory).
+    ///
+    /// A failed push leaves this connection out of sync with the peer —
+    /// drop it and reconnect before reusing the client. A typed
+    /// [`Error::Busy`] (e.g. a router that lost its backend mid-stream)
+    /// is retryable on a fresh connection.
+    pub fn push_store(&mut self, dir: &Path, chunk_bytes: usize) -> Result<PushReport> {
+        use crate::io::{manifest_hash_at, StoreStreamSource};
+        use crate::util::Fnv1a;
+
+        let chunk_bytes = chunk_bytes.clamp(1024, 16 << 20);
+        let key = manifest_hash_at(dir)?;
+        let mut src = StoreStreamSource::open(dir)?;
+        let total = src.total_len();
+        let chunks = total.div_ceil(chunk_bytes as u64).max(1);
+        let r = self.rpc(&Json::obj(vec![
+            ("op", Json::Str("push_begin".into())),
+            ("key", Json::Str(format!("{key:016x}"))),
+            ("total_bytes", Json::Num(total as f64)),
+            ("chunks", Json::Num(chunks as f64)),
+        ]))?;
+        Self::expect(&r, "push_ready")?;
+        if r.get("dedup").and_then(|v| v.as_bool()) == Some(true) {
+            return Ok(PushReport {
+                key,
+                dedup: true,
+                chunks: 0,
+                raw_bytes: 0,
+            });
+        }
+
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<u8>>(2);
+        let worker = std::thread::spawn(move || -> Result<u64> {
+            let mut fnv = Fnv1a::new();
+            let mut buf = vec![0u8; chunk_bytes];
+            let mut index = 0u64;
+            loop {
+                let n = src.read_chunk(&mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                fnv.update(&buf[..n]);
+                let packed = frame::encode_chunk(index, fnv.digest(), &buf[..n]);
+                index += 1;
+                if tx.send(packed).is_err() {
+                    break; // writer side bailed; it carries the error
+                }
+            }
+            Ok(fnv.digest())
+        });
+        let mut write_err: Option<Error> = None;
+        loop {
+            let packed = match rx.recv() {
+                Ok(p) => p,
+                Err(_) => break, // worker done (or died; join reports it)
+            };
+            if let Err(e) = self.writer.write_chunk(&packed) {
+                write_err = Some(e);
+                break;
+            }
+        }
+        drop(rx); // unblock a worker still waiting on channel capacity
+        let checksum = worker
+            .join()
+            .map_err(|_| Error::other("push worker panicked"))??;
+        if let Some(e) = write_err {
+            return Err(e);
+        }
+
+        // Finalization (verify + rename + open) can outlast the per-RPC
+        // read deadline; widen it for the closing exchange (same floor
+        // the router's relay applies on its backend leg).
+        self.set_read_timeout(NetConfig::push_end_timeout_ms(self.read_timeout_ms))?;
+        let end = self.rpc(&Json::obj(vec![
+            ("op", Json::Str("push_end".into())),
+            ("checksum", Json::Str(format!("{checksum:016x}"))),
+        ]));
+        self.set_read_timeout(self.read_timeout_ms)?;
+        let end = end?;
+        Self::expect(&end, "pushed")?;
+        Ok(PushReport {
+            key,
+            dedup: end.get("dedup").and_then(|v| v.as_bool()) == Some(true),
+            chunks,
+            raw_bytes: total,
+        })
     }
 
     /// Ask the server to drain in-flight jobs and stop; returns its final

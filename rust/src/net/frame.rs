@@ -36,6 +36,9 @@ pub const VERSION: u8 = 1;
 pub const FRAME_CTRL: u8 = 1;
 /// Frame type: binary sample-block payload.
 pub const FRAME_PAYLOAD: u8 = 2;
+/// Frame type: one chunk of a store push (`push_begin` … `push_end`);
+/// see [`encode_chunk`] and `docs/PROTOCOL.md` § Chunked store push.
+pub const FRAME_CHUNK: u8 = 3;
 
 /// A decoded frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,6 +47,8 @@ pub enum Frame {
     Ctrl(Json),
     /// One compressed sample block (still packed; see [`unpack_sink`]).
     Payload(Vec<u8>),
+    /// One store-push chunk (still packed; see [`decode_chunk`]).
+    Chunk(Vec<u8>),
 }
 
 fn wire_err(msg: impl std::fmt::Display) -> Error {
@@ -96,9 +101,19 @@ pub fn push_varint(out: &mut Vec<u8>, v: u64) {
     compress::write_varint(out, v);
 }
 
-/// Decode a LEB128 varint from `b[*i]..`, advancing `i`.
+/// Decode a LEB128 varint from `b[*i]..`, advancing `i`. A cursor past
+/// the end of `b` is a hard decode error — never clamped: a caller whose
+/// cursor ran off the buffer has already lost sync, and silently reading
+/// "from the end" would let it advance further still.
 pub fn take_varint(b: &[u8], i: &mut usize) -> Result<u64> {
-    let (v, n) = compress::read_varint(&b[(*i).min(b.len())..]).map_err(wire_err)?;
+    if *i > b.len() {
+        return Err(wire_err(format!(
+            "varint cursor {} beyond buffer of {} bytes",
+            *i,
+            b.len()
+        )));
+    }
+    let (v, n) = compress::read_varint(&b[*i..]).map_err(wire_err)?;
     *i += n;
     Ok(v)
 }
@@ -166,6 +181,11 @@ impl<W: Write> FrameWriter<W> {
     /// Send one binary payload block (already packed).
     pub fn write_payload(&mut self, packed: &[u8]) -> Result<()> {
         self.write_frame(FRAME_PAYLOAD, packed)
+    }
+
+    /// Send one store-push chunk (already packed; see [`encode_chunk`]).
+    pub fn write_chunk(&mut self, packed: &[u8]) -> Result<()> {
+        self.write_frame(FRAME_CHUNK, packed)
     }
 
     /// Return and reset the (bytes, frames) written since the last call.
@@ -248,6 +268,7 @@ impl<R: Read> FrameReader<R> {
                 Ok(Frame::Ctrl(Json::parse(text.trim_end_matches('\n'))?))
             }
             FRAME_PAYLOAD => Ok(Frame::Payload(payload)),
+            FRAME_CHUNK => Ok(Frame::Chunk(payload)),
             other => Err(wire_err(format!("unknown frame type 0x{other:02x}"))),
         }
     }
@@ -265,9 +286,9 @@ impl<R: Read> FrameReader<R> {
 ///
 /// ```text
 /// sink := varint m | varint d | varint max_gap
-///       | m*d varints            (hist, site-major)
-///       | m varints              (counts)
-///       | (m-1)*max_gap f64-le   (pair_sums)
+///       | m*d varints                    (hist, site-major)
+///       | m varints                      (counts)
+///       | (m-1)*max(max_gap,1) f64-le    (pair_sums; SampleSink::pair_sum_len)
 /// ```
 pub fn encode_sink(s: &SampleSink) -> Vec<u8> {
     let mut out = Vec::with_capacity(16 + s.m * s.d * 2 + s.pair_sums.len() * 8);
@@ -307,9 +328,14 @@ pub fn decode_sink(b: &[u8]) -> Result<SampleSink> {
     // The header is untrusted: a varint is ≥ 1 byte and a pair sum is 8,
     // so the smallest stream this header could describe is bounded below.
     // Reject claims the buffer cannot possibly satisfy BEFORE allocating
-    // (the per-dimension caps above still admit ~512 GiB of hist).
-    let min_need = (m as u64) * (d as u64) + m as u64
-        + 8 * (m.saturating_sub(1) as u64) * (max_gap as u64);
+    // (the per-dimension caps above still admit ~512 GiB of hist). The
+    // pair-sum count comes from the sink's own allocation rule so the
+    // bound can never drift from what `SampleSink::new` (and hence
+    // `encode_sink`) actually puts on the wire — in particular a
+    // `max_gap == 0` sink still carries `m - 1` pair sums.
+    let min_need = (m as u64) * (d as u64)
+        + m as u64
+        + 8 * SampleSink::pair_sum_len(m, max_gap) as u64;
     if min_need > b.len() as u64 {
         return Err(wire_err(format!(
             "sink header needs ≥ {min_need} bytes, buffer has {}",
@@ -351,6 +377,40 @@ pub fn unpack_sink(packed: &[u8]) -> Result<SampleSink> {
     decode_sink(&raw)
 }
 
+/// Encode one store-push chunk for a [`FRAME_CHUNK`] frame:
+///
+/// ```text
+/// chunk := varint index          # 0-based position in the push
+///        | fnv:u64-le            # running FNV-1a of ALL raw bytes so far
+///        | lz(raw)               # this chunk, independently compressed
+/// ```
+///
+/// The running checksum chains chunks together, so a dropped, duplicated,
+/// or reordered chunk is detected at the first affected chunk rather than
+/// only at `push_end`.
+pub fn encode_chunk(index: u64, running_fnv: u64, raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(raw.len() / 2 + 16);
+    push_varint(&mut out, index);
+    out.extend_from_slice(&running_fnv.to_le_bytes());
+    out.extend_from_slice(&compress::compress(raw));
+    out
+}
+
+/// Inverse of [`encode_chunk`]: `(index, running_fnv, raw_bytes)`.
+pub fn decode_chunk(packed: &[u8]) -> Result<(u64, u64, Vec<u8>)> {
+    let mut i = 0usize;
+    let index = take_varint(packed, &mut i)?;
+    let fnv_bytes: [u8; 8] = packed
+        .get(i..i + 8)
+        .ok_or_else(|| wire_err("truncated chunk checksum"))?
+        .try_into()
+        .unwrap();
+    i += 8;
+    let running_fnv = u64::from_le_bytes(fnv_bytes);
+    let raw = compress::decompress(&packed[i..]).map_err(wire_err)?;
+    Ok((index, running_fnv, raw))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -381,6 +441,16 @@ mod tests {
             take_varint(&[0xff; 11], &mut i).is_err(),
             "overlong varint rejected"
         );
+        // Invariant: a cursor beyond the buffer is a hard decode error —
+        // not clamped to the end — and must not advance.
+        let buf = [0x01u8, 0x02];
+        let mut i = buf.len(); // exactly at the end: empty read, clean error
+        assert!(take_varint(&buf, &mut i).is_err(), "cursor at end");
+        assert_eq!(i, buf.len(), "cursor unchanged on error");
+        let mut i = buf.len() + 3; // beyond the end: must error, never wrap
+        let e = take_varint(&buf, &mut i).unwrap_err().to_string();
+        assert!(e.contains("beyond buffer"), "{e}");
+        assert_eq!(i, buf.len() + 3, "cursor unchanged on error");
     }
 
     #[test]
@@ -459,6 +529,61 @@ mod tests {
         assert_eq!(back.hist, s.hist);
         assert_eq!(back.counts, s.counts);
         assert_eq!(back.pair_sums, s.pair_sums);
+    }
+
+    #[test]
+    fn max_gap_zero_sink_roundtrips_and_its_bytes_are_counted() {
+        // A max_gap == 0 sink still allocates (m-1) pair sums
+        // (`SampleSink::pair_sum_len`); they transit the wire and the
+        // decoder's pre-allocation bound must count them.
+        let mut s = SampleSink::new(4, 3, 0);
+        s.reset_walk();
+        for site in 0..4 {
+            s.record(site, &[0, 2, 1]);
+        }
+        let back = unpack_sink(&pack_sink(&s)).unwrap();
+        assert_eq!(back.max_gap, 0);
+        assert_eq!(back.hist, s.hist);
+        assert_eq!(back.counts, s.counts);
+        assert_eq!(back.pair_sums, s.pair_sums);
+        assert_eq!(back.pair_sums.len(), SampleSink::pair_sum_len(4, 0));
+
+        // Regression: a header claiming m=4 d=1 max_gap=0 describes ≥
+        // 4 + 4 + 8·3 = 32 bytes. The old bound ignored the pair sums
+        // (8·(m-1)·max_gap = 0) and let a 20-byte buffer through to the
+        // slow path; the shared-helper bound must reject it up front.
+        let mut short = Vec::new();
+        push_varint(&mut short, 4);
+        push_varint(&mut short, 1);
+        push_varint(&mut short, 0);
+        short.resize(20, 0);
+        let e = decode_sink(&short).unwrap_err().to_string();
+        assert!(e.contains("needs ≥"), "bound check must fire first: {e}");
+    }
+
+    #[test]
+    fn chunk_roundtrip_and_corruption() {
+        let raw: Vec<u8> = (0..5000).map(|i| ((i / 3) % 251) as u8).collect();
+        let packed = encode_chunk(7, 0xdead_beef_cafe_f00d, &raw);
+        let (index, fnv, back) = decode_chunk(&packed).unwrap();
+        assert_eq!(index, 7);
+        assert_eq!(fnv, 0xdead_beef_cafe_f00d);
+        assert_eq!(back, raw);
+
+        // Chunk frames transit the frame layer like any other type.
+        let mut buf = Vec::new();
+        let mut w = FrameWriter::new(&mut buf);
+        w.write_chunk(&packed).unwrap();
+        let mut r = FrameReader::new(buf.as_slice(), 1 << 20);
+        assert_eq!(r.read_frame().unwrap(), Frame::Chunk(packed.clone()));
+
+        // Truncations error instead of panicking.
+        assert!(decode_chunk(&packed[..4]).is_err(), "truncated checksum");
+        assert!(decode_chunk(&[]).is_err(), "empty chunk");
+        assert!(
+            decode_chunk(&packed[..packed.len() - 3]).is_err(),
+            "truncated body"
+        );
     }
 
     #[test]

@@ -13,7 +13,11 @@
 //!   per-connection reader/writer threads, admission backpressure (typed
 //!   `busy` frames instead of unbounded queueing), graceful drain;
 //! - [`client`] — a blocking connect/submit/wait/stream library used by
-//!   `fastmps submit --connect` and the integration tests.
+//!   `fastmps submit --connect` and the integration tests;
+//! - [`push`] — chunked, content-addressed store upload (`fastmps push`):
+//!   a client streams a `GammaStore` to a server (or through the router
+//!   to the affinity backend) in pipelined, independently compressed
+//!   chunks, so fleets need no shared data volume.
 //!
 //! Everything is `std::net` + threads — the crate stays dependency-free
 //! and offline-buildable.
@@ -23,7 +27,8 @@
 
 pub mod client;
 pub mod frame;
+pub mod push;
 pub mod server;
 
-pub use client::{Client, JobResult};
+pub use client::{Client, JobResult, PushReport};
 pub use server::{NetServer, NetStats};

@@ -1,0 +1,368 @@
+//! Server half of the chunked store push (`push_begin` → CHUNK frames →
+//! `push_end`; see `docs/PROTOCOL.md` § Chunked store push).
+//!
+//! Lifecycle of one push:
+//!
+//! 1. `push_begin` announces the store's content key (manifest hash), its
+//!    exact raw stream size, and the chunk count. The server dedups by
+//!    key (the store may already be cached, registered, or installed on
+//!    disk), enforces the staging quota, and replies `push_ready`.
+//! 2. CHUNK frames arrive pipelined — the client compresses chunk *k+1*
+//!    while *k* is on the wire, and the server decompresses and writes
+//!    chunk *k* while *k+1* transits: ingest mirrors the paper's
+//!    compute/I-O overlap. Each chunk carries its index and the running
+//!    FNV-1a of all raw bytes so far, so loss, reorder, or corruption is
+//!    caught at the first affected chunk.
+//! 3. `push_end` closes the books: chunk count, byte count, checksum,
+//!    staged manifest hash, and a full `GammaStore::open` validation all
+//!    must agree before the staging directory is atomically renamed into
+//!    place and the store is installed in the `StoreCache`.
+//!
+//! Failure at any point — disconnect, stall, checksum mismatch, hostile
+//! stream — removes the staging directory and touches neither the cache
+//! nor the install root: a partial store is never visible.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::frame::{self, Frame, FrameReader};
+use super::server::{reply_err, reply_ok, NetStats};
+use crate::config::NetConfig;
+use crate::io::{manifest_hash_at, GammaStore, StoreStreamWriter};
+use crate::service::StoreCache;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::Fnv1a;
+
+/// Install directory of a pushed store under the push root.
+pub fn store_dir(push_dir: &Path, key: u64) -> PathBuf {
+    push_dir.join(format!("store-{key:016x}"))
+}
+
+/// Distinguishes concurrent staging dirs for the same key.
+static STAGING_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// Scan `push_dir` for previously installed stores (`store-*`), register
+/// each with the cache, and remove leftover staging directories from a
+/// crashed push. Returns the number of stores registered.
+pub fn register_existing(cache: &StoreCache, push_dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(push_dir) else {
+        return 0;
+    };
+    let mut n = 0;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with(".staging-") {
+            let _ = std::fs::remove_dir_all(&path);
+            continue;
+        }
+        if !name.starts_with("store-") {
+            continue;
+        }
+        // Only re-register installs whose blobs still match the manifest;
+        // a directory broken out-of-band must not answer dedup.
+        let intact = manifest_hash_at(&path).ok().filter(|_| {
+            GammaStore::open(&path)
+                .and_then(|s| s.verify_blobs())
+                .is_ok()
+        });
+        if let Some(hash) = intact {
+            cache.register(hash, path);
+            n += 1;
+        }
+    }
+    n
+}
+
+/// What `push_begin` announced, validated.
+struct PushRequest {
+    key: u64,
+    total_bytes: u64,
+    chunks: u64,
+}
+
+impl PushRequest {
+    fn parse(msg: &Json, net: &NetConfig) -> Result<PushRequest> {
+        let key = msg
+            .get("key")
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| Error::format("push_begin: missing hex 'key'"))?;
+        let total_bytes = msg
+            .get("total_bytes")
+            .and_then(|v| v.as_f64())
+            .filter(|v| *v >= 1.0 && v.fract() == 0.0)
+            .ok_or_else(|| Error::format("push_begin: bad 'total_bytes'"))?
+            as u64;
+        let chunks = msg
+            .get("chunks")
+            .and_then(|v| v.as_f64())
+            .filter(|v| *v >= 1.0 && v.fract() == 0.0)
+            .ok_or_else(|| Error::format("push_begin: bad 'chunks'"))?
+            as u64;
+        if chunks > total_bytes {
+            return Err(Error::format("push_begin: more chunks than bytes"));
+        }
+        if total_bytes > net.push_staging_bytes {
+            return Err(Error::format(format!(
+                "push of {total_bytes} bytes exceeds the {} byte staging quota",
+                net.push_staging_bytes
+            )));
+        }
+        Ok(PushRequest {
+            key,
+            total_bytes,
+            chunks,
+        })
+    }
+}
+
+/// Removes the staging directory unless the push completed.
+struct StagingGuard {
+    dir: PathBuf,
+    armed: bool,
+}
+
+impl Drop for StagingGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+/// Handle one `push_begin` on a server connection. Reads CHUNK frames
+/// from `reader` until `push_end`; replies through `reply` (the caller's
+/// writer channel). Returns `Err` only when the connection must close
+/// (the framing is out of sync); well-formed rejections reply inline and
+/// return `Ok`.
+pub(crate) fn serve_push<R: std::io::Read>(
+    msg: &Json,
+    reader: &mut FrameReader<R>,
+    reply: &mut impl FnMut(Json) -> Result<()>,
+    cache: &StoreCache,
+    net: &NetConfig,
+    stats: &NetStats,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let Some(push_dir) = net.push_dir.as_deref() else {
+        reply(reply_err(
+            "error",
+            "store push is disabled on this server (no push dir configured)",
+        ))?;
+        return Ok(());
+    };
+    let req = match PushRequest::parse(msg, net) {
+        Ok(r) => r,
+        Err(e) => {
+            // Nothing streamed yet — the client waits for push_ready
+            // before sending chunks, so an inline rejection stays in sync.
+            reply(reply_err("error", e))?;
+            return Ok(());
+        }
+    };
+    let key_hex = format!("{:016x}", req.key);
+    let final_dir = store_dir(push_dir, req.key);
+
+    // Dedup by content key: cached, registered, or already on disk from a
+    // previous run all count — the client skips the upload entirely.
+    if cache.knows(req.key) || installed_at(&final_dir, req.key, cache) {
+        stats.push_dedups.fetch_add(1, Ordering::Relaxed);
+        reply(reply_ok(
+            "push_ready",
+            vec![
+                ("dedup", Json::Bool(true)),
+                ("key", Json::Str(key_hex)),
+            ],
+        ))?;
+        return Ok(());
+    }
+
+    std::fs::create_dir_all(push_dir).map_err(|e| Error::io(push_dir.display(), e))?;
+    let staging = push_dir.join(format!(
+        ".staging-{key_hex}-{}",
+        STAGING_NONCE.fetch_add(1, Ordering::Relaxed)
+    ));
+    let mut guard = StagingGuard {
+        dir: staging.clone(),
+        armed: true,
+    };
+    let mut writer = StoreStreamWriter::new(&staging)?;
+    reply(reply_ok(
+        "push_ready",
+        vec![("dedup", Json::Bool(false)), ("key", Json::Str(key_hex.clone()))],
+    ))?;
+
+    match receive_chunks(reader, &mut writer, &req, net, stop) {
+        Ok(()) => {}
+        Err(e) => {
+            stats.push_aborts.fetch_add(1, Ordering::Relaxed);
+            return Err(e); // guard removes the staging dir
+        }
+    }
+
+    // Everything the wire promised checked out; now verify the *content*:
+    // the staged manifest must hash to the announced key (it is the
+    // routing identity), and the store must open as a valid FMPS1 tree.
+    let finalize = (|| -> Result<Json> {
+        let staged_hash = manifest_hash_at(&staging)?;
+        if staged_hash != req.key {
+            return Err(Error::format(format!(
+                "pushed manifest hashes to {staged_hash:016x}, announced {key_hex}"
+            )));
+        }
+        GammaStore::open(&staging)?.verify_blobs()?;
+        match std::fs::rename(&staging, &final_dir) {
+            Ok(()) => {}
+            Err(_) if final_dir.exists() => {
+                // A concurrent push of the same store won the rename —
+                // that's a dedup, not a failure.
+                let _ = std::fs::remove_dir_all(&staging);
+            }
+            Err(e) => return Err(Error::io(final_dir.display(), e)),
+        }
+        let store = std::sync::Arc::new(GammaStore::open(&final_dir)?);
+        cache.install(req.key, store);
+        stats.pushes.fetch_add(1, Ordering::Relaxed);
+        stats
+            .push_bytes
+            .fetch_add(req.total_bytes, Ordering::Relaxed);
+        Ok(reply_ok(
+            "pushed",
+            vec![
+                ("key", Json::Str(key_hex.clone())),
+                ("chunks", Json::Num(req.chunks as f64)),
+                ("bytes", Json::Num(req.total_bytes as f64)),
+                ("dedup", Json::Bool(false)),
+            ],
+        ))
+    })();
+    match finalize {
+        Ok(ok_reply) => {
+            guard.armed = false; // installed (or lost a benign rename race)
+            reply(ok_reply)
+        }
+        Err(e) => {
+            stats.push_aborts.fetch_add(1, Ordering::Relaxed);
+            // The stream is fully consumed (push_end arrived), so the
+            // connection is still in sync — reject inline and keep it.
+            reply(reply_err("error", format!("push rejected: {e}")))
+        }
+    }
+}
+
+/// True when a store with `key` is already installed *intact* at `dir`
+/// (e.g. from a previous process) — registers it with the cache as a
+/// side effect. Blob integrity is part of the check: answering dedup for
+/// a directory with a valid manifest but broken blobs would poison the
+/// key exactly the way `verify_blobs` at install time exists to prevent.
+fn installed_at(dir: &Path, key: u64, cache: &StoreCache) -> bool {
+    let intact = manifest_hash_at(dir).map(|h| h == key).unwrap_or(false)
+        && GammaStore::open(dir)
+            .and_then(|s| s.verify_blobs())
+            .is_ok();
+    if intact {
+        cache.register(key, dir.to_path_buf());
+    }
+    intact
+}
+
+/// Drive the chunk sub-protocol to `push_end`, feeding the staged writer.
+fn receive_chunks<R: std::io::Read>(
+    reader: &mut FrameReader<R>,
+    writer: &mut StoreStreamWriter,
+    req: &PushRequest,
+    net: &NetConfig,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let mut fnv = Fnv1a::new();
+    let mut next_index = 0u64;
+    let mut raw_total = 0u64;
+    let stall_cap = net.push_stall_cap();
+    let mut last_frame = Instant::now();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Err(Error::other("server stopping; push aborted"));
+        }
+        let frame = match reader.read_frame_idle()? {
+            Some(f) => f,
+            None => {
+                if last_frame.elapsed() > stall_cap {
+                    return Err(Error::other(format!(
+                        "push stalled: no frame for {} ms",
+                        stall_cap.as_millis()
+                    )));
+                }
+                continue;
+            }
+        };
+        last_frame = Instant::now();
+        match frame {
+            Frame::Chunk(packed) => {
+                let (index, declared_fnv, raw) = frame::decode_chunk(&packed)?;
+                if index != next_index {
+                    return Err(Error::format(format!(
+                        "push chunk {index} out of order (expected {next_index})"
+                    )));
+                }
+                if next_index >= req.chunks {
+                    return Err(Error::format("more push chunks than announced"));
+                }
+                next_index += 1;
+                raw_total += raw.len() as u64;
+                if raw_total > req.total_bytes {
+                    return Err(Error::format(format!(
+                        "push exceeds its announced {} bytes",
+                        req.total_bytes
+                    )));
+                }
+                fnv.update(&raw);
+                if fnv.digest() != declared_fnv {
+                    return Err(Error::format(format!(
+                        "running checksum mismatch at chunk {index}"
+                    )));
+                }
+                writer.feed(&raw)?;
+            }
+            Frame::Ctrl(m) if m.get("op").and_then(|v| v.as_str()) == Some("push_end") => {
+                if next_index != req.chunks {
+                    return Err(Error::format(format!(
+                        "push_end after {next_index} of {} chunks",
+                        req.chunks
+                    )));
+                }
+                if raw_total != req.total_bytes {
+                    return Err(Error::format(format!(
+                        "push_end at {raw_total} of {} bytes",
+                        req.total_bytes
+                    )));
+                }
+                let declared = m
+                    .get("checksum")
+                    .and_then(|v| v.as_str())
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+                    .ok_or_else(|| Error::format("push_end: missing hex 'checksum'"))?;
+                if declared != fnv.digest() {
+                    return Err(Error::format("push_end checksum mismatch"));
+                }
+                if !writer.finished() {
+                    return Err(Error::format("push stream ended mid-file"));
+                }
+                return Ok(());
+            }
+            Frame::Ctrl(_) => {
+                return Err(Error::format(
+                    "net wire: unexpected control frame during push",
+                ));
+            }
+            Frame::Payload(_) => {
+                return Err(Error::format(
+                    "net wire: unexpected payload frame during push",
+                ));
+            }
+        }
+    }
+}

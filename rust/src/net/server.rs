@@ -45,6 +45,14 @@ pub struct NetStats {
     pub rejects_conn: AtomicU64,
     /// Submissions turned away by admission control (typed `busy`).
     pub rejects_busy: AtomicU64,
+    /// Stores installed through the chunked-push path.
+    pub pushes: AtomicU64,
+    /// Raw (decompressed) bytes landed by completed pushes.
+    pub push_bytes: AtomicU64,
+    /// `push_begin` requests answered by dedup.
+    pub push_dedups: AtomicU64,
+    /// Pushes aborted mid-transfer (no partial store left behind).
+    pub push_aborts: AtomicU64,
 }
 
 impl NetStats {
@@ -69,6 +77,10 @@ impl NetStats {
         m.set_max(keys::NET_CONN_PEAK, self.conns_peak.load(Ordering::Relaxed));
         m.add(keys::NET_REJECTS_CONN, self.rejects_conn.load(Ordering::Relaxed));
         m.add(keys::NET_REJECTS_BUSY, self.rejects_busy.load(Ordering::Relaxed));
+        m.add(keys::NET_PUSHES, self.pushes.load(Ordering::Relaxed));
+        m.add(keys::NET_PUSH_BYTES, self.push_bytes.load(Ordering::Relaxed));
+        m.add(keys::NET_PUSH_DEDUPS, self.push_dedups.load(Ordering::Relaxed));
+        m.add(keys::NET_PUSH_ABORTS, self.push_aborts.load(Ordering::Relaxed));
     }
 }
 
@@ -132,6 +144,11 @@ impl NetServer {
     pub fn start(cfg: ServiceConfig, net: NetConfig) -> Result<NetServer> {
         net.validate()?;
         let svc = Service::start(cfg)?;
+        if let Some(dir) = net.push_dir.as_deref() {
+            // Restart recovery: stores installed by a previous process
+            // stay resolvable by content key; crashed staging dirs go.
+            super::push::register_existing(svc.cache(), dir);
+        }
         let listener =
             TcpListener::bind(&net.addr).map_err(|e| Error::io(format!("bind {}", net.addr), e))?;
         let addr = listener
@@ -373,14 +390,34 @@ fn reader_loop(
         }
         let msg = match reader.read_frame_idle()? {
             None => continue, // idle tick: re-check the stop flag
-            Some(Frame::Payload(_)) => {
+            Some(Frame::Payload(_) | Frame::Chunk(_)) => {
                 return Err(Error::format(
-                    "net wire: unexpected payload frame from client",
+                    "net wire: unexpected binary frame from client",
                 ));
             }
             Some(Frame::Ctrl(msg)) => msg,
         };
         shared.stats.add_io(Some(reader.drain_counters()), None);
+        if msg.get("op").and_then(|v| v.as_str()) == Some("push_begin") {
+            // Push owns the reader until push_end (chunk frames are only
+            // meaningful inside a push), so it is driven from here rather
+            // than handle_op.
+            let mut send = |j: Json| {
+                tx.send(Out::Ctrl(j))
+                    .map_err(|_| Error::other("net: writer thread gone"))
+            };
+            super::push::serve_push(
+                &msg,
+                reader,
+                &mut send,
+                shared.svc.cache(),
+                &shared.net,
+                &shared.stats,
+                &shared.stop,
+            )?;
+            shared.stats.add_io(Some(reader.drain_counters()), None);
+            continue;
+        }
         if !handle_op(&msg, tx, shared)? {
             return Ok(());
         }

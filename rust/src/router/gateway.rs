@@ -56,6 +56,12 @@ pub struct RouterStats {
     pub probes: AtomicU64,
     pub probe_failures: AtomicU64,
     pub dropped_jobs: AtomicU64,
+    /// Store pushes proxied to a backend to a completed upload.
+    pub pushes: AtomicU64,
+    /// `push_begin` requests answered by backend dedup (no upload).
+    pub push_dedups: AtomicU64,
+    /// Proxied pushes that failed mid-stream (client saw typed `busy`).
+    pub push_failures: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
     pub frames_in: AtomicU64,
@@ -93,6 +99,15 @@ impl RouterStats {
             self.probe_failures.load(Ordering::Relaxed),
         );
         m.add(keys::ROUTER_DROPPED_JOBS, self.dropped_jobs.load(Ordering::Relaxed));
+        m.add(keys::ROUTER_PUSHES, self.pushes.load(Ordering::Relaxed));
+        m.add(
+            keys::ROUTER_PUSH_DEDUPS,
+            self.push_dedups.load(Ordering::Relaxed),
+        );
+        m.add(
+            keys::ROUTER_PUSH_FAILURES,
+            self.push_failures.load(Ordering::Relaxed),
+        );
         m.add(keys::NET_BYTES_IN, self.bytes_in.load(Ordering::Relaxed));
         m.add(keys::NET_BYTES_OUT, self.bytes_out.load(Ordering::Relaxed));
         m.add(keys::NET_FRAMES_IN, self.frames_in.load(Ordering::Relaxed));
@@ -632,15 +647,22 @@ fn connection(stream: TcpStream, shared: &Arc<Shared>) {
             }
             let msg = match reader.read_frame_idle()? {
                 None => continue, // idle tick: re-check the stop flag
-                Some(Frame::Payload(_)) => {
+                Some(Frame::Payload(_) | Frame::Chunk(_)) => {
                     return Err(Error::format(
-                        "net wire: unexpected payload frame from client",
+                        "net wire: unexpected binary frame from client",
                     ));
                 }
                 Some(Frame::Ctrl(msg)) => msg,
             };
             shared.stats.add_io(Some(reader.drain_counters()), None);
-            let more = handle_op(&msg, &mut w, &mut conns, shared)?;
+            let more = if msg.get("op").and_then(|v| v.as_str()) == Some("push_begin") {
+                // The push owns the reader until push_end; drive the
+                // relay from here, where the reader is in scope.
+                handle_push_proxy(&msg, &mut reader, &mut w, &mut conns, shared)?;
+                true
+            } else {
+                handle_op(&msg, &mut w, &mut conns, shared)?
+            };
             shared.stats.add_io(None, Some(w.drain_counters()));
             if !more {
                 return Ok(());
@@ -888,6 +910,14 @@ enum Placement {
     Refused(Error),
 }
 
+/// A backend's synchronous "this store was never pushed here" refusal
+/// (see `Service::submit`). Not terminal for placement: a keyed job's
+/// store may live on another backend when health churn or spillover
+/// shifted the rendezvous order since the push.
+fn is_missing_store_error(e: &Error) -> bool {
+    !is_transport_error(e) && e.to_string().contains("unknown store key")
+}
+
 /// Rendezvous placement with `Busy`-aware spillover (see module docs).
 /// Infallible on the client socket by design: the caller holds a table
 /// reservation, and keeping all `?` exits out of this loop guarantees
@@ -908,16 +938,22 @@ fn place_with_spillover(
     );
     let mut budget = shared.cfg.retry_budget;
     let mut saw_busy = false;
+    let mut last_missing: Option<Error> = None;
     loop {
         let order = failover_order(key, &shared.backends);
         if order.is_empty() {
             return Placement::Saturated("no routable backends");
         }
+        let order_len = order.len();
+        let full_fleet = order_len == shared.backends.len();
+        let mut pass_attempts = 0usize;
+        let mut pass_missing = 0usize;
         for b in order {
             if budget == 0 {
                 break;
             }
             budget -= 1;
+            pass_attempts += 1;
             let outcome = conns.client(b, shared).and_then(|c| c.submit(spec));
             match outcome {
                 Ok(bid) => {
@@ -938,18 +974,241 @@ fn place_with_spillover(
                     shared.note_forward_failure(b);
                     conns.drop_conn(b);
                 }
+                Err(e) if is_missing_store_error(&e) => {
+                    // The pushed store lives on some other backend; keep
+                    // walking the failover order.
+                    last_missing = Some(e);
+                    pass_missing += 1;
+                }
                 Err(e) => return Placement::Refused(e),
             }
         }
+        if full_fleet && !saw_busy && pass_attempts == order_len && pass_missing == pass_attempts {
+            // An untruncated pass over the ENTIRE fleet in which every
+            // backend answered "unknown store key", with no busy or
+            // unreachable backend seen at any point: the store simply is
+            // not in the fleet. Terminal — retry cannot conjure it. Any
+            // weaker condition (budget-truncated pass, excluded backends,
+            // an earlier busy) falls through to the typed-busy paths
+            // below, because the key's holder may just be busy or down.
+            return Placement::Refused(last_missing.expect("missing > 0"));
+        }
         if budget == 0 {
-            return Placement::Saturated(if saw_busy {
-                "all backends busy (back off and retry)"
-            } else {
-                "no backend accepted the job"
-            });
+            if saw_busy {
+                // The holder of the store may merely be busy: typed busy
+                // so the client backs off and retries.
+                return Placement::Saturated("all backends busy (back off and retry)");
+            }
+            return match last_missing {
+                // Every backend in the full fleet lacks the key —
+                // retrying will not help until the store is pushed again.
+                Some(e) if full_fleet => Placement::Refused(e),
+                // Some backends were excluded (down): the key's holder
+                // may be among them — retryable.
+                Some(_) => Placement::Saturated(
+                    "store key not on any reachable backend (holder may be down; retry)",
+                ),
+                None => Placement::Saturated("no backend accepted the job"),
+            };
         }
         // Between spillover cycles: capped exponential backoff + jitter.
         std::thread::sleep(backoff.next_delay());
+    }
+}
+
+/// Proxy one store push to the rendezvous-chosen backend (see
+/// `docs/PROTOCOL.md` § Chunked store push, routing).
+///
+/// The `push_begin` message already carries the content key, so placement
+/// needs no filesystem — the whole point of push. Delivery of
+/// `push_begin` fails over freely (nothing is committed yet): the first
+/// reachable backend in affinity order wins. Once chunks are streaming,
+/// the router holds no buffer to replay from, so a lost backend aborts
+/// the relay *cleanly*: the client's remaining frames are drained (the
+/// framing stays in sync), the failure is counted against the backend's
+/// health, and the client gets a typed `busy` — its retry lands on the
+/// next-ranked backend because this one is now degraded/down.
+fn handle_push_proxy(
+    msg: &Json,
+    reader: &mut FrameReader<BufReader<TcpStream>>,
+    w: &mut FrameWriter<BufWriter<TcpStream>>,
+    conns: &mut BackendConns,
+    shared: &Arc<Shared>,
+) -> Result<()> {
+    let Some(key) = msg
+        .get("key")
+        .and_then(|v| v.as_str())
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+    else {
+        w.write_ctrl(&reply_err("error", "push_begin without a hex 'key'"))?;
+        return Ok(());
+    };
+    if shared.draining() {
+        w.write_ctrl(&reply_err("error", "router shutting down (draining)"))?;
+        return Ok(());
+    }
+
+    // Deliver push_begin along the affinity order; failover is free here.
+    let mut chosen: Option<(usize, Json)> = None;
+    for b in failover_order(key, &shared.backends) {
+        match conns.client(b, shared).and_then(|c| c.rpc_raw(msg)) {
+            Ok(reply) => {
+                chosen = Some((b, reply));
+                break;
+            }
+            Err(_) => {
+                shared.note_forward_failure(b);
+                conns.drop_conn(b);
+            }
+        }
+    }
+    let Some((b, ready)) = chosen else {
+        shared.stats.busy_rejects.fetch_add(1, Ordering::Relaxed);
+        w.write_ctrl(&reply_err("busy", "no routable backends for push"))?;
+        return Ok(());
+    };
+    shared.note_forward(b);
+    let ok = ready.get("ok").and_then(|v| v.as_bool()) == Some(true);
+    let dedup = ready.get("dedup").and_then(|v| v.as_bool()) == Some(true);
+    w.write_ctrl(&ready)?;
+    if !ok || dedup {
+        // Rejection or dedup: the client sends no chunks; verdict relayed
+        // verbatim, stream in sync.
+        if ok {
+            shared.backends[b].note_ok();
+            shared.stats.push_dedups.fetch_add(1, Ordering::Relaxed);
+        }
+        return Ok(());
+    }
+    shared.backends[b].note_ok();
+    // Bound for the failure drain: the client announced its chunk count,
+    // so a drain consuming more than that is a protocol violation, not
+    // patience worth having.
+    let announced_chunks = msg
+        .get("chunks")
+        .and_then(|v| v.as_f64())
+        .filter(|v| *v >= 1.0)
+        .map(|v| v as u64)
+        .unwrap_or(u64::MAX);
+
+    let lose_backend = |conns: &mut BackendConns,
+                        w: &mut FrameWriter<BufWriter<TcpStream>>,
+                        reader: &mut FrameReader<BufReader<TcpStream>>,
+                        drain_chunks: Option<u64>|
+     -> Result<()> {
+        shared.note_forward_failure(b);
+        conns.drop_conn(b);
+        shared.stats.push_failures.fetch_add(1, Ordering::Relaxed);
+        if let Some(remaining) = drain_chunks {
+            drain_push_stream(reader, &shared.net, remaining)?;
+        }
+        w.write_ctrl(&reply_err(
+            "busy",
+            format!(
+                "backend {} lost mid-push; retry (placement will re-route)",
+                shared.backends[b].addr
+            ),
+        ))
+    };
+
+    let stall_cap = shared.net.push_stall_cap();
+    let mut last_frame = Instant::now();
+    let mut forwarded = 0u64;
+    loop {
+        if shared.stopping() {
+            return Err(Error::other("router stopping during push"));
+        }
+        let frame = match reader.read_frame_idle()? {
+            Some(f) => f,
+            None => {
+                if last_frame.elapsed() > stall_cap {
+                    return Err(Error::other("push relay stalled"));
+                }
+                continue;
+            }
+        };
+        last_frame = Instant::now();
+        match frame {
+            Frame::Chunk(packed) => {
+                if forwarded >= announced_chunks {
+                    return Err(Error::format("more push chunks than announced"));
+                }
+                forwarded += 1;
+                let fwd = conns.client(b, shared).and_then(|c| c.forward_chunk(&packed));
+                if fwd.is_err() {
+                    let left = announced_chunks.saturating_sub(forwarded);
+                    return lose_backend(conns, w, reader, Some(left));
+                }
+            }
+            Frame::Ctrl(m) if m.get("op").and_then(|v| v.as_str()) == Some("push_end") => {
+                // The backend's finalize can outlast one RPC deadline —
+                // widen the relay leg exactly as a direct client does.
+                let end_ms = NetConfig::push_end_timeout_ms(shared.net.read_timeout_ms);
+                let reply = conns
+                    .client(b, shared)
+                    .and_then(|c| c.rpc_raw_deadline(&m, end_ms));
+                let reply = match reply {
+                    Ok(r) => r,
+                    Err(_) => return lose_backend(conns, w, reader, None),
+                };
+                if reply.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+                    shared.backends[b].note_ok();
+                    shared.stats.pushes.fetch_add(1, Ordering::Relaxed);
+                }
+                return w.write_ctrl(&reply);
+            }
+            Frame::Ctrl(_) => {
+                return Err(Error::format(
+                    "net wire: unexpected control frame during push relay",
+                ));
+            }
+            Frame::Payload(_) => {
+                return Err(Error::format(
+                    "net wire: unexpected payload frame during push relay",
+                ));
+            }
+        }
+    }
+}
+
+/// Consume the client's remaining push frames after the backend is gone,
+/// so the connection's framing stays in sync for the rejection reply.
+/// Progress-bounded, not wall-clock-bounded: frames may keep arriving for
+/// as long as a quota-sized push legitimately takes, but at most
+/// `max_chunks` of them — and any gap beyond the shared stall cap aborts.
+fn drain_push_stream(
+    reader: &mut FrameReader<BufReader<TcpStream>>,
+    net: &NetConfig,
+    max_chunks: u64,
+) -> Result<()> {
+    let stall_cap = net.push_stall_cap();
+    let mut last_frame = Instant::now();
+    let mut seen = 0u64;
+    loop {
+        match reader.read_frame_idle()? {
+            None => {
+                if last_frame.elapsed() > stall_cap {
+                    return Err(Error::other("push drain stalled"));
+                }
+            }
+            Some(Frame::Chunk(_)) => {
+                seen += 1;
+                if seen > max_chunks {
+                    return Err(Error::format("more push chunks than announced"));
+                }
+                last_frame = Instant::now();
+            }
+            Some(Frame::Ctrl(m))
+                if m.get("op").and_then(|v| v.as_str()) == Some("push_end") =>
+            {
+                return Ok(());
+            }
+            Some(_) => {
+                return Err(Error::format(
+                    "net wire: unexpected frame during push drain",
+                ));
+            }
+        }
     }
 }
 

@@ -18,9 +18,13 @@ pub struct SampleSink {
     pub pair_sums: Vec<f64>,
     /// Samples accounted per site (all sites equal unless a run aborts).
     pub counts: Vec<u64>,
-    /// Ring of recent outcome vectors for pair products.
+    /// Rotating ring of the last `max_gap` outcome vectors for pair
+    /// products: `ring[ring_head]` is the next write slot, `ring_live`
+    /// slots hold vectors from the current walk. Fixed capacity — no
+    /// front-shifting, no reallocation on the hot sampling path.
     ring: Vec<Vec<i32>>,
-    ring_site: usize,
+    ring_head: usize,
+    ring_live: usize,
 }
 
 impl SampleSink {
@@ -30,19 +34,31 @@ impl SampleSink {
             d,
             max_gap,
             hist: vec![vec![0; d]; m],
-            pair_sums: vec![0.0; m.saturating_sub(1) * max_gap.max(1)],
+            pair_sums: vec![0.0; Self::pair_sum_len(m, max_gap)],
             counts: vec![0; m],
-            ring: Vec::new(),
-            ring_site: 0,
+            ring: vec![Vec::new(); max_gap],
+            ring_head: 0,
+            ring_live: 0,
         }
+    }
+
+    /// Length of `pair_sums` for an `(m, max_gap)` sink — the single
+    /// source of truth for this allocation, shared with the wire codec's
+    /// pre-allocation bound (`net::frame::decode_sink`), which must count
+    /// exactly these slots (note the `max_gap.max(1)`: a `max_gap == 0`
+    /// sink still carries `m - 1` slots).
+    pub fn pair_sum_len(m: usize, max_gap: usize) -> usize {
+        m.saturating_sub(1) * max_gap.max(1)
     }
 
     /// Record the outcomes of one micro/macro batch at `site`. Sites must
     /// arrive in order 0..M per batch walk (the sampling order); `reset_walk`
     /// starts a new batch.
     pub fn reset_walk(&mut self) {
-        self.ring.clear();
-        self.ring_site = 0;
+        // Slot allocations are kept; they are overwritten before any read
+        // (only the `ring_live` most recent slots are ever dereferenced).
+        self.ring_head = 0;
+        self.ring_live = 0;
     }
 
     pub fn record(&mut self, site: usize, samples: &[i32]) {
@@ -54,29 +70,30 @@ impl SampleSink {
         self.counts[site] += samples.len() as u64;
 
         // Pair products with the previous `max_gap` sites of this walk.
-        if self.max_gap > 0 && site > 0 {
-            let lo_gap = 1usize;
-            let hi_gap = self.max_gap.min(site).min(self.ring.len());
-            for gap in lo_gap..=hi_gap {
-                let prev = &self.ring[self.ring.len() - gap];
-                if prev.len() != samples.len() {
-                    continue; // defensive: mismatched batch (shouldn't happen)
-                }
-                let sum: f64 = prev
-                    .iter()
-                    .zip(samples)
-                    .map(|(&a, &b)| (a as f64) * (b as f64))
-                    .sum();
-                self.pair_sums[(site - 1) * self.max_gap + (gap - 1)] += sum;
-            }
-        }
         if self.max_gap > 0 {
-            self.ring.push(samples.to_vec());
-            if self.ring.len() > self.max_gap {
-                self.ring.remove(0);
+            let cap = self.max_gap;
+            if site > 0 {
+                let hi_gap = cap.min(site).min(self.ring_live);
+                for gap in 1..=hi_gap {
+                    // gap = 1 is the most recently written slot.
+                    let prev = &self.ring[(self.ring_head + cap - gap) % cap];
+                    if prev.len() != samples.len() {
+                        continue; // defensive: mismatched batch (shouldn't happen)
+                    }
+                    let sum: f64 = prev
+                        .iter()
+                        .zip(samples)
+                        .map(|(&a, &b)| (a as f64) * (b as f64))
+                        .sum();
+                    self.pair_sums[(site - 1) * cap + (gap - 1)] += sum;
+                }
             }
+            let slot = &mut self.ring[self.ring_head];
+            slot.clear();
+            slot.extend_from_slice(samples);
+            self.ring_head = (self.ring_head + 1) % cap;
+            self.ring_live = (self.ring_live + 1).min(cap);
         }
-        self.ring_site = site;
     }
 
     /// Mean photon number per site.
@@ -202,6 +219,113 @@ mod tests {
         let mut s = SampleSink::new(1, 2, 0);
         s.record(0, &[-3, 9]);
         assert_eq!(s.hist[0], vec![1, 1]);
+    }
+
+    #[test]
+    fn rotating_ring_matches_naive_window_reference() {
+        use crate::util::prop::{quickcheck, Gen};
+
+        // The pre-ring reference: a growing window shifted from the front
+        // (`Vec::remove(0)`) — the semantics the O(1) rotating ring must
+        // preserve exactly, bit-for-bit.
+        #[allow(clippy::type_complexity)]
+        fn naive(
+            m: usize,
+            d: usize,
+            gap: usize,
+            walks: &[Vec<Vec<i32>>],
+        ) -> (Vec<Vec<u64>>, Vec<f64>, Vec<u64>) {
+            let mut hist = vec![vec![0u64; d]; m];
+            let mut counts = vec![0u64; m];
+            let mut pair = vec![0.0; SampleSink::pair_sum_len(m, gap)];
+            for walk in walks {
+                let mut window: Vec<&Vec<i32>> = Vec::new();
+                for (site, samples) in walk.iter().enumerate() {
+                    for &s in samples {
+                        hist[site][(s.max(0) as usize).min(d - 1)] += 1;
+                    }
+                    counts[site] += samples.len() as u64;
+                    if gap > 0 && site > 0 {
+                        let hi = gap.min(site).min(window.len());
+                        for g in 1..=hi {
+                            let prev = window[window.len() - g];
+                            let sum: f64 = prev
+                                .iter()
+                                .zip(samples)
+                                .map(|(&a, &b)| a as f64 * b as f64)
+                                .sum();
+                            pair[(site - 1) * gap + (g - 1)] += sum;
+                        }
+                    }
+                    if gap > 0 {
+                        window.push(samples);
+                        if window.len() > gap {
+                            window.remove(0);
+                        }
+                    }
+                }
+            }
+            (hist, pair, counts)
+        }
+
+        fn random_walks(g: &mut Gen, m: usize, d: usize) -> Vec<Vec<Vec<i32>>> {
+            (0..g.usize_in(1, 3))
+                .map(|_| {
+                    let n = g.usize_in(1, 5);
+                    (0..m)
+                        .map(|_| (0..n).map(|_| g.usize_in(0, d) as i32).collect())
+                        .collect()
+                })
+                .collect()
+        }
+
+        quickcheck("rotating ring == naive window", |g| {
+            let m = g.usize_in(1, 7);
+            let d = g.usize_in(2, 4);
+            let gap = g.usize_in(0, 5);
+            let walks = random_walks(g, m, d);
+            let mut s = SampleSink::new(m, d, gap);
+            for walk in &walks {
+                s.reset_walk();
+                for (site, samples) in walk.iter().enumerate() {
+                    s.record(site, samples);
+                }
+            }
+            let (hist, pair, counts) = naive(m, d, gap, &walks);
+            if s.hist != hist {
+                return Err(format!("hist diverged at m={m} d={d} gap={gap}"));
+            }
+            if s.pair_sums != pair {
+                return Err(format!("pair_sums diverged at m={m} d={d} gap={gap}"));
+            }
+            if s.counts != counts {
+                return Err(format!("counts diverged at m={m} d={d} gap={gap}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ring_capacity_fixed_and_pair_len_helper_is_truth() {
+        let mut s = SampleSink::new(5, 3, 2);
+        assert_eq!(s.pair_sums.len(), SampleSink::pair_sum_len(5, 2));
+        assert_eq!(
+            SampleSink::new(5, 3, 0).pair_sums.len(),
+            SampleSink::pair_sum_len(5, 0)
+        );
+        assert_eq!(
+            SampleSink::pair_sum_len(5, 0),
+            4,
+            "max_gap 0 still allocates (m-1) slots"
+        );
+        assert_eq!(SampleSink::pair_sum_len(1, 3), 0);
+        for _ in 0..3 {
+            s.reset_walk();
+            for site in 0..5 {
+                s.record(site, &[1, 2, 0]);
+            }
+            assert_eq!(s.ring.len(), 2, "ring capacity fixed at max_gap");
+        }
     }
 
     #[test]

@@ -11,13 +11,15 @@
 //! the same store share an entry, while a regenerated store under the same
 //! path misses and re-opens.
 
-use std::path::Path;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::io::{manifest_hash_at, DiskModel, GammaStore};
 use crate::metrics::{keys, Metrics};
-use crate::util::error::Result;
+use crate::service::JobSpec;
+use crate::util::error::{Error, Result};
 
 struct Entry {
     hash: u64,
@@ -36,6 +38,11 @@ pub struct StoreCache {
     capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Content-key registry: manifest hash → install directory of a store
+    /// this process can re-open (pushed stores register here). Unlike the
+    /// LRU entries, registrations are never evicted — they are paths, not
+    /// open stores — so a key stays resolvable after its entry ages out.
+    registry: Mutex<BTreeMap<u64, PathBuf>>,
     /// Shared bandwidth model handed to every prefetcher the service runs.
     pub disk: Arc<DiskModel>,
 }
@@ -50,6 +57,7 @@ impl StoreCache {
             capacity: capacity.max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            registry: Mutex::new(BTreeMap::new()),
             disk,
         }
     }
@@ -68,7 +76,19 @@ impl StoreCache {
             return Ok((e.store.clone(), true));
         }
         let store = Arc::new(GammaStore::open(dir)?);
-        if g.entries.len() >= self.capacity {
+        Self::push_entry(&mut g, self.capacity, hash, store.clone(), tick);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((store, false))
+    }
+
+    fn push_entry(
+        g: &mut CacheInner,
+        capacity: usize,
+        hash: u64,
+        store: Arc<GammaStore>,
+        tick: u64,
+    ) {
+        if g.entries.len() >= capacity {
             let lru = g
                 .entries
                 .iter()
@@ -80,11 +100,102 @@ impl StoreCache {
         }
         g.entries.push(Entry {
             hash,
-            store: store.clone(),
+            store,
             last_use: tick,
         });
+    }
+
+    /// Resolve a job's store: by content key when the spec carries one
+    /// (pushed stores), else by path. The single entry point the
+    /// dispatcher uses, so both spellings share the LRU and counters.
+    pub fn resolve(&self, spec: &JobSpec) -> Result<(Arc<GammaStore>, bool)> {
+        match spec.key {
+            Some(k) => self.get_by_key(k),
+            None => self.get(&spec.data),
+        }
+    }
+
+    /// Open-or-reuse a store by content key. Hits the LRU first; on a
+    /// miss, re-opens from the registered install directory. Unregistered
+    /// keys are a terminal error — there is no path to fall back to.
+    pub fn get_by_key(&self, hash: u64) -> Result<(Arc<GammaStore>, bool)> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g.entries.iter_mut().find(|e| e.hash == hash) {
+            e.last_use = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((e.store.clone(), true));
+        }
+        let dir = self
+            .registry
+            .lock()
+            .unwrap()
+            .get(&hash)
+            .cloned()
+            .ok_or_else(|| {
+                Error::format(format!(
+                    "unknown store key {hash:016x} (push the store to this server first)"
+                ))
+            })?;
+        let store = match GammaStore::open(&dir) {
+            Ok(s) => Arc::new(s),
+            Err(e) => {
+                // The install directory is gone or corrupt: drop the
+                // registration so a re-push can repair the key instead of
+                // being dedup'd against a ghost forever.
+                self.unregister(hash);
+                return Err(e);
+            }
+        };
+        Self::push_entry(&mut g, self.capacity, hash, store.clone(), tick);
         self.misses.fetch_add(1, Ordering::Relaxed);
         Ok((store, false))
+    }
+
+    /// Record that the store identified by `hash` lives at `dir` (without
+    /// opening or caching it) — restart recovery scans call this.
+    pub fn register(&self, hash: u64, dir: PathBuf) {
+        self.registry.lock().unwrap().insert(hash, dir);
+    }
+
+    /// Drop a registration (its install directory disappeared).
+    pub fn unregister(&self, hash: u64) {
+        self.registry.lock().unwrap().remove(&hash);
+    }
+
+    /// True when `hash` is resolvable (cached or registered) — the push
+    /// path's dedup check. A registration whose install directory no
+    /// longer hashes to `hash` (deleted or replaced out-of-band) is
+    /// dropped and reported unknown, so a re-push can repair it.
+    pub fn knows(&self, hash: u64) -> bool {
+        if self.inner.lock().unwrap().entries.iter().any(|e| e.hash == hash) {
+            return true;
+        }
+        let Some(dir) = self.registry.lock().unwrap().get(&hash).cloned() else {
+            return false;
+        };
+        // Verify outside the lock — this reads the manifest from disk.
+        if manifest_hash_at(&dir).map(|h| h == hash).unwrap_or(false) {
+            return true;
+        }
+        self.unregister(hash);
+        false
+    }
+
+    /// Register + warm-insert a freshly installed store (the push path's
+    /// final step). Counts neither hit nor miss: installation is not the
+    /// job-level reuse those KPIs measure.
+    pub fn install(&self, hash: u64, store: Arc<GammaStore>) {
+        self.register(hash, store.dir.clone());
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g.entries.iter_mut().find(|e| e.hash == hash) {
+            e.last_use = tick;
+            return;
+        }
+        Self::push_entry(&mut g, self.capacity, hash, store, tick);
     }
 
     /// Shared handle by identity, bumping LRU recency but not the hit/miss
@@ -214,5 +325,61 @@ mod tests {
         let c = StoreCache::new(2, DiskModel::unlimited());
         assert!(c.get(Path::new("/nonexistent/fastmps-store")).is_err());
         assert_eq!(c.misses(), 0);
+    }
+
+    #[test]
+    fn content_key_resolution_survives_eviction() {
+        let d1 = make_store("key1", 1);
+        let d2 = make_store("key2", 2);
+        let c = StoreCache::new(1, DiskModel::unlimited());
+        let hash = crate::io::manifest_hash_at(&d1).unwrap();
+
+        // Unregistered key is a terminal error, not a panic.
+        let e = c.get_by_key(hash).unwrap_err().to_string();
+        assert!(e.contains("unknown store key"), "{e}");
+        assert!(!c.knows(hash));
+
+        // Install: resolvable by key, no hit/miss accounting.
+        let store = Arc::new(GammaStore::open(&d1).unwrap());
+        c.install(hash, store.clone());
+        assert!(c.knows(hash));
+        assert_eq!((c.hits(), c.misses()), (0, 0));
+        let (got, hit) = c.get_by_key(hash).unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&got, &store));
+
+        // Evict via the 1-entry LRU; the registry still resolves the key
+        // by re-opening the install dir.
+        c.get(&d2).unwrap();
+        let (reopened, hit) = c.get_by_key(hash).unwrap();
+        assert!(!hit, "entry was evicted; registry re-open");
+        assert_eq!(reopened.spec.seed, 1);
+
+        // resolve() routes key specs through get_by_key.
+        let spec = JobSpec::by_key(hash, 10);
+        let (via_spec, _) = c.resolve(&spec).unwrap();
+        assert_eq!(via_spec.spec.seed, 1);
+
+        for d in [d1, d2] {
+            std::fs::remove_dir_all(&d).unwrap();
+        }
+    }
+
+    #[test]
+    fn stale_registration_is_dropped_not_dedup_forever() {
+        let dir = make_store("stale", 5);
+        let c = StoreCache::new(1, DiskModel::unlimited());
+        let hash = crate::io::manifest_hash_at(&dir).unwrap();
+        c.register(hash, dir.clone());
+        assert!(c.knows(hash));
+
+        // The install directory vanishes out-of-band (operator cleanup).
+        std::fs::remove_dir_all(&dir).unwrap();
+
+        // knows() verifies on disk, drops the ghost, and reports unknown
+        // — so a re-push is NOT dedup'd against nothing.
+        assert!(!c.knows(hash), "ghost registration must not answer dedup");
+        let e = c.get_by_key(hash).unwrap_err().to_string();
+        assert!(e.contains("unknown store key"), "{e}");
     }
 }

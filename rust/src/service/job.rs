@@ -21,8 +21,13 @@ pub type JobId = u64;
 /// A client sampling request.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
-    /// Path of the `GammaStore` directory.
+    /// Path of the `GammaStore` directory (may be empty when `key` names
+    /// the store by content instead).
     pub data: PathBuf,
+    /// Content key of the store (its manifest hash) — how jobs reference
+    /// a store uploaded with `fastmps push`, with no shared filesystem.
+    /// When set, routing and resolution ignore `data`.
+    pub key: Option<u64>,
     /// Samples requested.
     pub n_samples: u64,
     /// Base of the job's sample-index stream (see module docs).
@@ -37,6 +42,19 @@ impl JobSpec {
     pub fn new(data: impl Into<PathBuf>, n_samples: u64) -> JobSpec {
         JobSpec {
             data: data.into(),
+            key: None,
+            n_samples,
+            sample_base: 0,
+            compute: None,
+            tag: String::new(),
+        }
+    }
+
+    /// A job that names its store by content key (see [`JobSpec::key`]).
+    pub fn by_key(key: u64, n_samples: u64) -> JobSpec {
+        JobSpec {
+            data: PathBuf::new(),
+            key: Some(key),
             n_samples,
             sample_base: 0,
             compute: None,
@@ -46,25 +64,46 @@ impl JobSpec {
 
     /// Stable routing/affinity key of this job's store.
     ///
-    /// When the store's manifest is readable from this process the key is
-    /// its content hash ([`crate::io::manifest_hash_at`]) — every path to
-    /// one store shares a key, and the router lands all of its jobs on
-    /// the backend whose `StoreCache` already holds that store. When the
-    /// manifest is *not* readable (a router without the data volume
-    /// mounted), the key falls back to an FNV-1a hash of the path string:
-    /// affinity is still deterministic, just keyed on path spelling
-    /// instead of content.
+    /// A content-keyed job ([`JobSpec::key`]) *is* its affinity key — no
+    /// filesystem involved, which is what lets a router without any data
+    /// volume still key on content. For path jobs: when the manifest is
+    /// readable from this process the key is its content hash
+    /// ([`crate::io::manifest_hash_at`]) — every path to one store shares
+    /// a key, and the router lands all of its jobs on the backend whose
+    /// `StoreCache` already holds that store. When the manifest is *not*
+    /// readable (a router without the data volume mounted), the key falls
+    /// back to an FNV-1a hash of the path string: affinity is still
+    /// deterministic, just keyed on path spelling instead of content —
+    /// push the store and submit by key to avoid that degradation.
     pub fn store_key(&self) -> u64 {
+        if let Some(k) = self.key {
+            return k;
+        }
         crate::io::manifest_hash_at(&self.data)
             .unwrap_or_else(|_| crate::util::fnv1a(self.data.to_string_lossy().as_bytes()))
     }
 
     /// Parse the wire form used by the file transport (`api`).
     pub fn from_json(j: &Json) -> Result<JobSpec> {
-        let data = j
-            .req("data")?
-            .as_str()
-            .ok_or_else(|| Error::format("job: 'data' not a string"))?;
+        let key = j
+            .get("key")
+            .filter(|v| !matches!(**v, Json::Null))
+            .map(|v| {
+                v.as_str()
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+                    .ok_or_else(|| Error::format("job: 'key' is not a hex store key"))
+            })
+            .transpose()?;
+        let data = match j.get("data") {
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| Error::format("job: 'data' not a string"))?,
+            None if key.is_some() => "",
+            None => return Err(Error::format("job: needs 'data' or 'key'")),
+        };
+        if key.is_none() && data.is_empty() {
+            return Err(Error::format("job: needs 'data' or 'key'"));
+        }
         let n_samples = j
             .req("samples")?
             .as_f64()
@@ -95,6 +134,7 @@ impl JobSpec {
             .to_string();
         Ok(JobSpec {
             data: PathBuf::from(data),
+            key,
             n_samples,
             sample_base,
             compute,
@@ -105,6 +145,12 @@ impl JobSpec {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("data", Json::Str(self.data.display().to_string())),
+            (
+                "key",
+                self.key
+                    .map(|k| Json::Str(format!("{k:016x}")))
+                    .unwrap_or(Json::Null),
+            ),
             ("samples", Json::Num(self.n_samples as f64)),
             ("sample_base", Json::Num(self.sample_base as f64)),
             (
@@ -229,10 +275,29 @@ mod tests {
             r#"{"data": "/d", "samples": -1}"#,
             r#"{"data": "/d", "samples": 1.5}"#,
             r#"{"data": "/d", "samples": 5, "compute": "q8"}"#,
+            r#"{"data": "", "samples": 5}"#,
+            r#"{"key": "not-hex", "samples": 5}"#,
+            r#"{"key": 17, "samples": 5}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(JobSpec::from_json(&j).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn content_keyed_spec_roundtrips_and_keys_affinity() {
+        let s = JobSpec::by_key(0xdead_beef_0042_1337, 64);
+        assert_eq!(s.store_key(), 0xdead_beef_0042_1337, "key IS the affinity");
+        let j = s.to_json().dump();
+        let back = JobSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.key, Some(0xdead_beef_0042_1337));
+        assert_eq!(back.n_samples, 64);
+        assert_eq!(back.store_key(), s.store_key());
+        // Without "data" at all, a keyed spec still parses.
+        let j = Json::parse(r#"{"key": "00000000000000ff", "samples": 3}"#).unwrap();
+        let k = JobSpec::from_json(&j).unwrap();
+        assert_eq!(k.key, Some(0xff));
+        assert_eq!(k.store_key(), 0xff);
     }
 
     #[test]

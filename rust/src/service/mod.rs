@@ -104,6 +104,17 @@ impl Service {
     }
 
     pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        // Content-keyed jobs are checked at admission, not in the
+        // dispatcher: an unknown key would otherwise be accepted and fail
+        // asynchronously, which a router's spillover cannot react to —
+        // synchronous refusal lets it try the backend that has the store.
+        if let Some(k) = spec.key {
+            if !self.cache.knows(k) {
+                return Err(crate::util::error::Error::format(format!(
+                    "unknown store key {k:016x} (push the store to this server first)"
+                )));
+            }
+        }
         self.queue.submit(spec)
     }
 
@@ -220,7 +231,7 @@ fn dispatcher_loop(
             .and_then(|h| cache.peek(h).map(|s| (s, h)));
         let (store, store_hash) = match memoized {
             Some(x) => x,
-            None => match cache.get(&front_spec.data) {
+            None => match cache.resolve(&front_spec) {
                 Ok((store, _)) => match store.manifest_hash() {
                     Ok(h) => (store, h),
                     Err(e) => {
@@ -232,10 +243,11 @@ fn dispatcher_loop(
                     }
                 },
                 Err(e) => {
-                    queue.fail_job(
-                        front_id,
-                        &format!("cannot open store {}: {e}", front_spec.data.display()),
-                    );
+                    let what = match front_spec.key {
+                        Some(k) => format!("key {k:016x}"),
+                        None => front_spec.data.display().to_string(),
+                    };
+                    queue.fail_job(front_id, &format!("cannot open store {what}: {e}"));
                     continue;
                 }
             },
@@ -253,7 +265,7 @@ fn dispatcher_loop(
         for (id, spec) in &pending {
             if !resolved.contains_key(id) {
                 let hash = cache
-                    .get(&spec.data)
+                    .resolve(spec)
                     .ok()
                     .and_then(|(s, _)| s.manifest_hash().ok());
                 resolved.insert(*id, hash);

@@ -18,6 +18,17 @@ const MAX_MATCH: usize = MIN_MATCH + 127;
 const MAX_DIST: usize = u16::MAX as usize;
 const HASH_BITS: u32 = 16;
 
+/// Hash-table slots hold candidate positions as `u32`. For inputs of
+/// 4 GiB and beyond a raw byte offset would silently wrap, making the
+/// encoder read "candidates" at the wrong position (garbage matches the
+/// compare loop then rejects — quadratic slowdown at best, and a
+/// correctness trap if this code ever changes). So the encoder works in
+/// independent segments well under the `u32` bound, storing positions
+/// relative to the segment start; matches never cross back over a
+/// segment start, which costs at most one 64 KiB window of ratio per
+/// 2 GiB. The stream format is unchanged — decoders don't know or care.
+const SEG_BYTES: usize = 1 << 31;
+
 fn hash4(b: &[u8]) -> usize {
     let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
     (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
@@ -61,48 +72,67 @@ fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
 }
 
 /// Compress `src`. Never fails; worst case output is `src` plus ~1% framing.
+/// Inputs at or beyond 4 GiB are handled by segmenting (see [`SEG_BYTES`]).
 pub fn compress(src: &[u8]) -> Vec<u8> {
+    compress_segmented(src, SEG_BYTES)
+}
+
+/// [`compress`] with an explicit segment bound — factored out so tests can
+/// exercise the ≥ 4 GiB boundary discipline with tiny segments instead of
+/// allocating 4 GiB.
+fn compress_segmented(src: &[u8], seg_bytes: usize) -> Vec<u8> {
+    let seg_bytes = seg_bytes.max(MIN_MATCH);
     let mut out = Vec::with_capacity(src.len() / 2 + 16);
     write_varint(&mut out, src.len() as u64);
     if src.is_empty() {
         return out;
     }
     let mut head = vec![u32::MAX; 1 << HASH_BITS];
-    let mut i = 0usize;
-    let mut lit_start = 0usize;
-    while i < src.len() {
-        let mut m_len = 0usize;
-        let mut m_dist = 0usize;
-        if i + MIN_MATCH <= src.len() {
-            let h = hash4(&src[i..i + 4]);
-            let cand = head[h];
-            head[h] = i as u32;
-            if cand != u32::MAX {
-                let cand = cand as usize;
-                if i - cand <= MAX_DIST {
-                    let max_len = MAX_MATCH.min(src.len() - i);
-                    let mut l = 0usize;
-                    while l < max_len && src[cand + l] == src[i + l] {
-                        l += 1;
-                    }
-                    if l >= MIN_MATCH {
-                        m_len = l;
-                        m_dist = i - cand;
+    let mut seg_start = 0usize;
+    while seg_start < src.len() {
+        let seg_end = seg_start.saturating_add(seg_bytes).min(src.len());
+        if seg_start > 0 {
+            // Candidates are relative to the segment start; stale entries
+            // from the previous segment would alias into this one.
+            head.fill(u32::MAX);
+        }
+        let mut i = seg_start;
+        let mut lit_start = seg_start;
+        while i < seg_end {
+            let mut m_len = 0usize;
+            let mut m_dist = 0usize;
+            if i + MIN_MATCH <= seg_end {
+                let h = hash4(&src[i..i + 4]);
+                let cand = head[h];
+                head[h] = (i - seg_start) as u32;
+                if cand != u32::MAX {
+                    let cand = seg_start + cand as usize;
+                    if i - cand <= MAX_DIST {
+                        let max_len = MAX_MATCH.min(seg_end - i);
+                        let mut l = 0usize;
+                        while l < max_len && src[cand + l] == src[i + l] {
+                            l += 1;
+                        }
+                        if l >= MIN_MATCH {
+                            m_len = l;
+                            m_dist = i - cand;
+                        }
                     }
                 }
             }
+            if m_len > 0 {
+                flush_literals(&mut out, &src[lit_start..i]);
+                out.push(0x80 | (m_len - MIN_MATCH) as u8);
+                out.extend_from_slice(&(m_dist as u16).to_le_bytes());
+                i += m_len;
+                lit_start = i;
+            } else {
+                i += 1;
+            }
         }
-        if m_len > 0 {
-            flush_literals(&mut out, &src[lit_start..i]);
-            out.push(0x80 | (m_len - MIN_MATCH) as u8);
-            out.extend_from_slice(&(m_dist as u16).to_le_bytes());
-            i += m_len;
-            lit_start = i;
-        } else {
-            i += 1;
-        }
+        flush_literals(&mut out, &src[lit_start..seg_end]);
+        seg_start = seg_end;
     }
-    flush_literals(&mut out, &src[lit_start..]);
     out
 }
 
@@ -288,6 +318,38 @@ mod tests {
             src.len()
         );
         assert_eq!(decompress(&c).unwrap(), src);
+    }
+
+    #[test]
+    fn segmented_compression_roundtrips_across_boundaries() {
+        // The ≥ 4 GiB discipline, scaled down. Hash-table candidates are
+        // stored relative to each segment start, and the table is cleared
+        // between segments; a bug in either would produce matches that
+        // point at the wrong bytes and fail these roundtrips. Testing at
+        // SEG_BYTES itself would need a > 4 GiB allocation, so the
+        // boundary bookkeeping is exercised with tiny segments instead —
+        // the code path is identical.
+        let src: Vec<u8> = (0..10_000).map(|i| ((i % 7) * 3) as u8).collect();
+        for seg in [5usize, 64, 100, 1000, 4096] {
+            let c = compress_segmented(&src, seg);
+            assert_eq!(decompress(&c).unwrap(), src, "seg {seg}");
+        }
+        // One segment covering everything is byte-identical to the
+        // default path for inputs under the bound.
+        assert_eq!(compress_segmented(&src, usize::MAX), compress(&src));
+        // Incompressible data across many boundaries.
+        let mut x = 0x2545_f491_4f6c_dd1du64;
+        let rnd: Vec<u8> = (0..3000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                x as u8
+            })
+            .collect();
+        for seg in [17usize, 256] {
+            assert_eq!(decompress(&compress_segmented(&rnd, seg)).unwrap(), rnd);
+        }
     }
 
     #[test]

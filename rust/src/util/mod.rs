@@ -15,12 +15,38 @@ pub mod prop;
 /// (store-manifest identity, router store keys, rendezvous weights all
 /// build on it; keep a single implementation so they stay in agreement).
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in bytes {
-        h ^= u64::from(*b);
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.digest()
+}
+
+/// Streaming form of [`fnv1a`] for data that arrives in pieces (the
+/// chunked store-push path hashes gigabytes without buffering them).
+/// `Fnv1a::new().update(b).digest() == fnv1a(b)` by construction.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
     }
-    h
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for b in bytes {
+            self.0 ^= u64::from(*b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn digest(&self) -> u64 {
+        self.0
+    }
 }
 
 /// Round a f64 up to the next multiple of `m` (m > 0).
@@ -83,6 +109,18 @@ mod tests {
         assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
         assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
+
+    #[test]
+    fn fnv1a_streaming_matches_one_shot_at_any_split() {
+        let data = b"chunked-store-push running checksum";
+        for split in 0..=data.len() {
+            let mut h = Fnv1a::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.digest(), fnv1a(data), "split at {split}");
+        }
+        assert_eq!(Fnv1a::new().digest(), fnv1a(b""));
     }
 
     #[test]

@@ -200,6 +200,176 @@ fn connection_pool_bound_rejects_then_recovers() {
 }
 
 #[test]
+fn version_skew_rejected_with_clear_errors_on_both_sides() {
+    use fastmps::net::frame::{self, Frame, FrameReader};
+    use std::io::{BufReader, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    // Client side: a peer announcing VERSION+1 is refused at connect.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut preamble = Vec::from(frame::MAGIC);
+        preamble.push(frame::VERSION + 1);
+        s.write_all(&preamble).unwrap();
+        let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+        let mut buf = [0u8; 64];
+        let _ = s.read(&mut buf); // client's preamble, then its hangup
+    });
+    let err = Client::connect(&addr, &loopback_net()).expect_err("newer peer must be rejected");
+    let msg = err.to_string();
+    assert!(msg.contains("version"), "clear version error, got: {msg}");
+    fake.join().unwrap();
+
+    // Server side: a raw client announcing VERSION+1 gets a clear error
+    // frame back before the connection closes.
+    let server = NetServer::start(service_cfg(), loopback_net()).unwrap();
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut bad = Vec::from(frame::MAGIC);
+    bad.push(frame::VERSION + 1);
+    raw.write_all(&bad).unwrap();
+    let mut r = FrameReader::new(BufReader::new(raw.try_clone().unwrap()), 1 << 20);
+    assert_eq!(r.read_preamble().unwrap(), frame::VERSION);
+    match r.read_frame().unwrap() {
+        Frame::Ctrl(j) => {
+            assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+            let e = j.get("error").unwrap().as_str().unwrap();
+            assert!(e.contains("version"), "clear version error, got: {e}");
+        }
+        other => panic!("expected error ctrl frame, got {other:?}"),
+    }
+    drop(raw);
+    drop(server);
+}
+
+#[test]
+fn interrupted_push_leaves_no_partial_store() {
+    use fastmps::io::StoreStreamSource;
+    use fastmps::net::frame::{self, Frame, FrameReader, FrameWriter};
+    use fastmps::util::json::Json;
+    use fastmps::util::Fnv1a;
+    use std::io::{BufReader, BufWriter};
+    use std::net::TcpStream;
+    use std::time::Instant;
+
+    let root = scratch("pushabort");
+    let (_, store_dir) = make_store(&root);
+    let push_dir = root.join("pushed");
+    let net = NetConfig {
+        push_dir: Some(push_dir.clone()),
+        // Small read timeout → ~1 s push stall cap: the idle-abort case
+        // stays fast.
+        read_timeout_ms: 50,
+        ..loopback_net()
+    };
+    let server = NetServer::start(service_cfg(), net.clone()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // First chunk of a real push stream, hand-built so the transfer can
+    // die mid-flight.
+    let chunk_bytes = 1024usize;
+    let mut src = StoreStreamSource::open(&store_dir).unwrap();
+    let total = src.total_len();
+    let chunks = total.div_ceil(chunk_bytes as u64);
+    assert!(chunks > 1, "store must span multiple chunks");
+    let mut buf = vec![0u8; chunk_bytes];
+    let n = src.read_chunk(&mut buf).unwrap();
+    let mut fnv = Fnv1a::new();
+    fnv.update(&buf[..n]);
+    let chunk0 = frame::encode_chunk(0, fnv.digest(), &buf[..n]);
+    let key = fastmps::io::manifest_hash_at(&store_dir).unwrap();
+    let begin = Json::obj(vec![
+        ("op", Json::Str("push_begin".into())),
+        ("key", Json::Str(format!("{key:016x}"))),
+        ("total_bytes", Json::Num(total as f64)),
+        ("chunks", Json::Num(chunks as f64)),
+    ]);
+
+    let start_push = |die_by_drop: bool| {
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut w = FrameWriter::new(BufWriter::new(stream.try_clone().unwrap()));
+        let mut r = FrameReader::new(BufReader::new(stream), 64 << 20);
+        w.write_preamble().unwrap();
+        r.read_preamble().unwrap();
+        w.write_ctrl(&begin).unwrap();
+        match r.read_frame().unwrap() {
+            Frame::Ctrl(j) => {
+                assert_eq!(j.get("type").unwrap().as_str(), Some("push_ready"));
+                assert_eq!(j.get("dedup").unwrap().as_bool(), Some(false));
+            }
+            other => panic!("expected push_ready, got {other:?}"),
+        }
+        w.write_chunk(&chunk0).unwrap();
+        if die_by_drop {
+            return; // connection drop mid-transfer
+        }
+        // Idle mid-transfer: the server's stall cap must abort the push
+        // with an error frame (or close the socket outright).
+        match r.read_frame() {
+            Ok(Frame::Ctrl(j)) => {
+                let e = j.get("error").unwrap().as_str().unwrap();
+                assert!(e.contains("stalled"), "stall abort, got: {e}");
+            }
+            Ok(other) => panic!("expected stall error, got {other:?}"),
+            Err(_) => {} // server closed on us — equally fine
+        }
+    };
+
+    start_push(true); // connection drop
+    start_push(false); // idle timeout
+
+    // Neither failure may leave anything behind: no installed store, no
+    // staging leftovers, nothing in the cache.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let leftovers: Vec<String> = std::fs::read_dir(&push_dir)
+            .map(|rd| {
+                rd.flatten()
+                    .map(|e| e.file_name().to_string_lossy().into_owned())
+                    .collect()
+            })
+            .unwrap_or_default();
+        if leftovers.is_empty() {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "staging never cleaned: {leftovers:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(!server.service().cache().knows(key), "no partial install");
+
+    // Both aborts are visible in the metrics, and a full push still
+    // succeeds afterwards on a fresh connection (with a forgiving RPC
+    // deadline — the tight one above was only to speed the stall cap).
+    let client_net = NetConfig {
+        read_timeout_ms: 2000,
+        ..net.clone()
+    };
+    let mut client = Client::connect(&addr, &client_net).unwrap();
+    let report = client.push_store(&store_dir, chunk_bytes).unwrap();
+    assert!(!report.dedup);
+    assert!(server.service().cache().knows(key));
+    let m = client.metrics().unwrap();
+    let netc = m.get("net").unwrap().get("counters").unwrap();
+    assert!(
+        netc.get("net_push_aborts").unwrap().as_f64().unwrap() >= 2.0,
+        "aborts counted"
+    );
+    assert_eq!(netc.get("net_pushes").unwrap().as_f64(), Some(1.0));
+
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
 fn graceful_shutdown_drains_in_flight_jobs() {
     let root = scratch("drain");
     let (_, store_dir) = make_store(&root);

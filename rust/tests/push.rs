@@ -1,0 +1,245 @@
+//! End-to-end chunked store push (`docs/PROTOCOL.md` § Chunked store
+//! push): a client uploads a multi-chunk store through the router to the
+//! rendezvous-chosen backend — no shared data volume anywhere — then
+//! submits a job by content key and checks the streamed sink against a
+//! locally-sampled oracle. Also covers direct-to-server push, dedup,
+//! restart recovery, and the staging quota.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastmps::config::{
+    ComputePrecision, NetConfig, Preset, RouterConfig, RunConfig, ServiceConfig,
+};
+use fastmps::coordinator::data_parallel;
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::net::{Client, NetServer};
+use fastmps::router::Router;
+use fastmps::service::JobSpec;
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastmps-itpush-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn make_store(root: &Path) -> (Arc<GammaStore>, PathBuf) {
+    let dir = root.join("source-store");
+    let mut spec = Preset::Jiuzhang2.scaled_spec(77);
+    spec.m = 6;
+    spec.chi_cap = 10;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.0;
+    let store =
+        Arc::new(GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap());
+    (store, dir)
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        n2_micro: 32,
+        target_batch: Some(256),
+        compute: ComputePrecision::F64,
+        linger_ms: 2,
+        ..Default::default()
+    }
+}
+
+fn loopback_net() -> NetConfig {
+    NetConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    }
+}
+
+fn backend_net(root: &Path, tag: &str) -> NetConfig {
+    NetConfig {
+        push_dir: Some(root.join(format!("pushed-{tag}"))),
+        ..loopback_net()
+    }
+}
+
+#[test]
+fn push_through_router_then_submit_by_key_matches_oracle() {
+    let root = scratch("e2e");
+    let (store, store_dir) = make_store(&root);
+
+    // Two backends, each with its own private push dir — the source
+    // store's path is never given to either, so jobs can only succeed if
+    // the chunked push actually delivered the bytes.
+    let b1 = NetServer::start(service_cfg(), backend_net(&root, "b1")).unwrap();
+    let b2 = NetServer::start(service_cfg(), backend_net(&root, "b2")).unwrap();
+    let rcfg = RouterConfig {
+        backends: vec![b1.local_addr().to_string(), b2.local_addr().to_string()],
+        probe_interval_ms: 50,
+        ..Default::default()
+    };
+    let router = Router::start(rcfg, loopback_net()).unwrap();
+    let addr = router.local_addr().to_string();
+
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+    // Small chunks force a genuinely multi-chunk transfer.
+    let report = client.push_store(&store_dir, 2048).unwrap();
+    assert!(!report.dedup);
+    assert!(report.chunks > 1, "multi-chunk push ({} chunks)", report.chunks);
+
+    // Exactly one backend holds the store: the rendezvous choice.
+    let on1 = b1.service().cache().knows(report.key);
+    let on2 = b2.service().cache().knows(report.key);
+    assert!(on1 ^ on2, "store on exactly one backend (b1={on1} b2={on2})");
+
+    // Submit by content key — the spec carries no path at all — and the
+    // router's affinity lands it on the backend that has the store.
+    let mut spec = JobSpec::by_key(report.key, 96);
+    spec.compute = Some(ComputePrecision::F64);
+    let id = client.submit(&spec).unwrap();
+    let res = client.wait(id, Duration::from_secs(60)).unwrap().unwrap();
+    assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+    let sink = res.sink.expect("payload streamed back through the router");
+
+    // Oracle: the same sample range computed locally from the source.
+    let mut rc = RunConfig::new(store.spec.clone());
+    rc.n_samples = 96;
+    rc.n1_macro = 96;
+    rc.n2_micro = 32;
+    rc.compute = ComputePrecision::F64;
+    rc.store_precision = store.precision;
+    let reference = data_parallel::run(&rc, &store, &[]).unwrap();
+    assert_eq!(sink.hist, reference.sink.hist);
+    assert_eq!(sink.counts, reference.sink.counts);
+    assert_eq!(sink.pair_sums, reference.sink.pair_sums);
+
+    // A second push of the same store is deduplicated by manifest hash:
+    // nothing is re-transferred.
+    let mut c2 = Client::connect(&addr, &loopback_net()).unwrap();
+    let again = c2.push_store(&store_dir, 2048).unwrap();
+    assert!(again.dedup, "second push must dedup");
+    assert_eq!(again.key, report.key);
+    assert_eq!(again.raw_bytes, 0, "nothing re-transferred");
+
+    // A key nobody holds is refused synchronously through the router —
+    // a terminal error (not busy: retrying cannot conjure the store).
+    let err = c2
+        .submit(&JobSpec::by_key(report.key ^ 1, 8))
+        .expect_err("unknown key must be refused at submit");
+    assert!(!err.is_busy(), "terminal, not backpressure: {err}");
+    assert!(err.to_string().contains("unknown store key"), "{err}");
+
+    // Router metrics split uploads from dedups, mirroring the server.
+    let m = client.metrics().unwrap();
+    let run = m.get("run").unwrap().get("counters").unwrap();
+    assert_eq!(
+        run.get("router_pushes").unwrap().as_f64(),
+        Some(1.0),
+        "one completed upload"
+    );
+    assert_eq!(
+        run.get("router_push_dedups").unwrap().as_f64(),
+        Some(1.0),
+        "one dedup'd push_begin"
+    );
+
+    drop(client);
+    drop(c2);
+    drop(router);
+    drop(b1);
+    drop(b2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn direct_push_dedup_and_restart_recovery() {
+    let root = scratch("direct");
+    let (_, store_dir) = make_store(&root);
+    let net = backend_net(&root, "solo");
+    let push_dir = net.push_dir.clone().unwrap();
+
+    let key = {
+        let server = NetServer::start(service_cfg(), net.clone()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr, &net).unwrap();
+        let report = client.push_store(&store_dir, 4096).unwrap();
+        assert!(!report.dedup);
+        // Same connection, same store: dedup without re-upload.
+        let again = client.push_store(&store_dir, 4096).unwrap();
+        assert!(again.dedup);
+        // The job runs from the pushed copy.
+        let id = client.submit(&JobSpec::by_key(report.key, 32)).unwrap();
+        let res = client.wait(id, Duration::from_secs(60)).unwrap().unwrap();
+        assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+        let m = client.metrics().unwrap();
+        let netc = m.get("net").unwrap().get("counters").unwrap();
+        assert_eq!(netc.get("net_pushes").unwrap().as_f64(), Some(1.0));
+        assert_eq!(netc.get("net_push_dedups").unwrap().as_f64(), Some(1.0));
+        drop(client);
+        drop(server);
+        report.key
+    };
+
+    // A fresh server over the same push dir re-registers installed
+    // stores at startup: the key resolves with no new push.
+    let server = NetServer::start(service_cfg(), net.clone()).unwrap();
+    assert!(
+        server.service().cache().knows(key),
+        "restart recovery re-registers installed stores"
+    );
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr, &net).unwrap();
+    let report = client.push_store(&store_dir, 4096).unwrap();
+    assert!(report.dedup, "installed store dedups across restarts");
+    let id = client.submit(&JobSpec::by_key(key, 16)).unwrap();
+    let res = client.wait(id, Duration::from_secs(60)).unwrap().unwrap();
+    assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+    assert!(push_dir.join(format!("store-{key:016x}")).exists());
+
+    // Admission checks keys synchronously: an unknown key never becomes
+    // an accepted-then-failed job.
+    let err = client
+        .submit(&JobSpec::by_key(key ^ 0xff, 8))
+        .expect_err("unknown key refused at admission");
+    assert!(err.to_string().contains("unknown store key"), "{err}");
+
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn push_disabled_and_quota_are_clean_rejections() {
+    let root = scratch("reject");
+    let (_, store_dir) = make_store(&root);
+
+    // No push dir: typed error, connection stays usable.
+    let server = NetServer::start(service_cfg(), loopback_net()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+    let err = client.push_store(&store_dir, 4096).expect_err("disabled");
+    assert!(err.to_string().contains("disabled"), "{err}");
+    client.ping().unwrap(); // no desync: nothing was streamed
+    drop(client);
+    drop(server);
+
+    // Staging quota: an announced size over the cap is refused up front.
+    let net = NetConfig {
+        push_chunk_bytes: 1024,
+        push_staging_bytes: 2048, // far below the store's stream size
+        ..backend_net(&root, "quota")
+    };
+    let server = NetServer::start(service_cfg(), net.clone()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr, &net).unwrap();
+    let err = client.push_store(&store_dir, 1024).expect_err("quota");
+    assert!(err.to_string().contains("staging quota"), "{err}");
+    client.ping().unwrap();
+    let pushed = net.push_dir.as_ref().unwrap();
+    assert!(
+        !pushed.exists() || std::fs::read_dir(pushed).unwrap().next().is_none(),
+        "nothing staged or installed"
+    );
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&root).unwrap();
+}
