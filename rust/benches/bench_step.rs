@@ -1,0 +1,153 @@
+//! Hot-path step micro-benchmark: steps/sec, effective GFLOP/s, and
+//! allocs/step of `NativeEngine::step_prepared` at several N×χ×d points,
+//! written to `BENCH_step.json`.
+//!
+//! Exercises the three tentpole optimizations directly: the prepared-site
+//! path (no Γ clone/convert per step), the reusable step workspace
+//! (allocs/step must read 0.000 after warm-up), and the row-vs-bond GEMM
+//! split (the small-N × large-χ points are where the bond split wins).
+//!
+//! Run with `cargo bench --bench bench_step` from `rust/`.
+
+use fastmps::config::{ComputePrecision, ScalingMode};
+use fastmps::linalg::{matmul_flops, GemmSplit};
+use fastmps::metrics::keys;
+use fastmps::mps::Site;
+use fastmps::rng::Xoshiro256;
+use fastmps::sampler::native::NativeEngine;
+use fastmps::sampler::PreparedSite;
+use fastmps::tensor::{SplitBuf, Tensor3, C64};
+use fastmps::util::bench;
+use fastmps::util::json::Json;
+
+fn square_site(chi: usize, d: usize, seed: u64) -> Site {
+    let mut rng = Xoshiro256::seed_from(seed);
+    let mut gamma = Tensor3::zeros(chi, chi, d);
+    for z in &mut gamma.data {
+        *z = C64::new(rng.normal() * 0.3, rng.normal() * 0.3);
+    }
+    Site {
+        lambda: vec![1.0; chi],
+        gamma,
+    }
+}
+
+fn filled_env(n: usize, chi: usize, seed: u64) -> SplitBuf {
+    let mut rng = Xoshiro256::seed_from(seed);
+    let mut env = SplitBuf::zeros(&[n, chi]);
+    for v in env.re.iter_mut().chain(env.im.iter_mut()) {
+        *v = rng.normal() as f32;
+    }
+    env
+}
+
+struct Point {
+    n: usize,
+    chi: usize,
+    d: usize,
+    threads: usize,
+    split: GemmSplit,
+}
+
+fn run_point(p: &Point, reps: usize) -> Json {
+    let site = square_site(p.chi, p.d, 42);
+    let mut eng = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, p.threads);
+    eng.split = p.split;
+    let prep = PreparedSite::prepare(&site, eng.prep_key());
+    let mut env = filled_env(p.n, p.chi, 7);
+    let th: Vec<f32> = (0..p.n).map(|i| ((i % 97) as f32 + 0.5) / 97.0).collect();
+    let mus: Vec<(f64, f64)> = (0..p.n).map(|i| (0.01 * (i % 13) as f64, 0.02)).collect();
+    let mut samples = Vec::new();
+    // Explicit warm-up OUTSIDE the allocs-per-step baseline: the first
+    // steps necessarily grow the empty workspace; the KPI measures the
+    // steady state after them.
+    for _ in 0..3 {
+        eng.step_prepared(&mut env, &prep, &th, Some(&mus), &mut samples)
+            .unwrap();
+    }
+    let grows0 = eng.metrics.get(keys::STEP_WS_GROWS);
+    let steps0 = eng.metrics.get(keys::STEPS);
+    let (mean, std) = bench::time(0, reps, || {
+        eng.step_prepared(&mut env, &prep, &th, Some(&mus), &mut samples)
+            .unwrap();
+    });
+    // One step = contraction + displacement + measurement (engine FLOP
+    // accounting convention).
+    let flops_per_step = matmul_flops(p.n, p.chi, p.chi * p.d)
+        + 8 * (p.n * p.chi * p.d * p.d) as u64
+        + 8 * (p.n * p.chi * p.d) as u64;
+    let steps_per_sec = if mean > 0.0 { 1.0 / mean } else { 0.0 };
+    let gflops = if mean > 0.0 {
+        flops_per_step as f64 / mean / 1e9
+    } else {
+        0.0
+    };
+    // Steady state must read 0.000 (the counting-allocator test in
+    // `sampler::native` asserts the hard zero-allocation form).
+    let grows = eng.metrics.get(keys::STEP_WS_GROWS) - grows0;
+    let steps = (eng.metrics.get(keys::STEPS) - steps0).max(1);
+    let steady_allocs = grows as f64 / steps as f64;
+    bench::row(&[
+        ("n", format!("{}", p.n)),
+        ("chi", format!("{}", p.chi)),
+        ("d", format!("{}", p.d)),
+        ("threads", format!("{}", p.threads)),
+        ("split", p.split.as_str().into()),
+        ("steps_per_sec", format!("{steps_per_sec:.1}")),
+        ("gflop_per_sec", format!("{gflops:.2}")),
+        ("allocs_per_step", format!("{steady_allocs:.3}")),
+        ("std_pct", format!("{:.1}", 100.0 * std / mean.max(1e-12))),
+    ]);
+    Json::obj(vec![
+        ("n", Json::Num(p.n as f64)),
+        ("chi", Json::Num(p.chi as f64)),
+        ("d", Json::Num(p.d as f64)),
+        ("threads", Json::Num(p.threads as f64)),
+        ("split", Json::Str(p.split.as_str().into())),
+        ("steps_per_sec", Json::Num(steps_per_sec)),
+        ("gflop_per_sec", Json::Num(gflops)),
+        ("allocs_per_step", Json::Num(steady_allocs)),
+    ])
+}
+
+fn main() {
+    bench::header("step", "allocation-free prepared-site step hot path");
+    let points = [
+        // Large N: the classic data-parallel regime (row split).
+        Point { n: 256, chi: 96, d: 3, threads: 1, split: GemmSplit::Auto },
+        Point { n: 256, chi: 96, d: 3, threads: 4, split: GemmSplit::Auto },
+        // Small N × wide bond: where the bond (column) split earns its keep.
+        Point { n: 8, chi: 256, d: 4, threads: 4, split: GemmSplit::Rows },
+        Point { n: 8, chi: 256, d: 4, threads: 4, split: GemmSplit::Cols },
+        // Single-sample latency point.
+        Point { n: 1, chi: 256, d: 4, threads: 4, split: GemmSplit::Auto },
+    ];
+    let t0 = std::time::Instant::now();
+    let results: Vec<Json> = points.iter().map(|p| run_point(p, 30)).collect();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let best = results
+        .iter()
+        .filter_map(|j| j.get("steps_per_sec").and_then(|v| v.as_f64()))
+        .fold(0.0f64, f64::max);
+    let worst_allocs = results
+        .iter()
+        .filter_map(|j| j.get("allocs_per_step").and_then(|v| v.as_f64()))
+        .fold(0.0f64, f64::max);
+    bench::paper(
+        "§3: per-site step cost bounds sampling; resident tensors + bond-axis parallelism",
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("step-hotpath".into())),
+        ("measured", Json::Bool(true)),
+        ("wall_secs", Json::Num(wall)),
+        ("steps_per_sec", Json::Num(best)),
+        ("allocs_per_step_worst", Json::Num(worst_allocs)),
+        ("points", Json::Arr(results)),
+    ]);
+    std::fs::write("../BENCH_step.json", out.pretty())
+        .or_else(|_| std::fs::write("BENCH_step.json", out.pretty()))
+        .unwrap();
+    println!("  wrote BENCH_step.json");
+}

@@ -31,6 +31,7 @@ COMMANDS:
               --data DIR --samples N [--scheme dp|mp|tp] [--engine xla|native]
               [--p1 N] [--p2 N] [--single-site] [--n1 N] [--n2 N]
               [--compute f64|f32|tf32] [--scaling per-sample|global|none]
+              [--threads N] [--gemm-split auto|rows|cols]
               [--net nvlink3|pcie4|ib|tianhe3|sunway|ideal] [--disk-bw BPS]
               [--artifacts DIR] [--json]
   validate    Sample + compare against exact marginals (Fig. 9)
@@ -46,7 +47,8 @@ COMMANDS:
               [--workers N] [--max-queue N] [--max-samples N]
               [--cache N] [--linger-ms N] [--poll-ms N] [--n2 N]
               [--target-batch N] [--compute C] [--scaling S] [--engine E]
-              [--threads N] [--disk-bw BPS] [--artifacts DIR]
+              [--threads N] [--gemm-split auto|rows|cols] [--prep-mb N]
+              [--disk-bw BPS] [--artifacts DIR]
               [--max-seconds S] [--json]
               file only: [--drain]
               tcp only:  [--max-conns N] [--frame-mb N]
@@ -189,6 +191,7 @@ fn config_from_args(args: &Args, store: &GammaStore) -> Result<RunConfig> {
     cfg.p1 = args.usize_or("p1", 1)?;
     cfg.p2 = args.usize_or("p2", 1)?;
     cfg.gemm_threads = args.usize_or("threads", 1)?;
+    cfg.gemm_split = crate::linalg::GemmSplit::parse(&args.str_or("gemm-split", "auto"))?;
     cfg.compute = ComputePrecision::parse(&args.str_or("compute", "f32"))?;
     cfg.scaling = ScalingMode::parse(&args.str_or("scaling", "per-sample"))?;
     cfg.engine = EngineKind::parse(&args.str_or("engine", "native"))?;
@@ -387,6 +390,8 @@ fn service_config_from_args(args: &Args) -> Result<ServiceConfig> {
         scaling: ScalingMode::parse(&args.str_or("scaling", "per-sample"))?,
         engine: EngineKind::parse(&args.str_or("engine", "native"))?,
         gemm_threads: args.usize_or("threads", d.gemm_threads)?,
+        gemm_split: crate::linalg::GemmSplit::parse(&args.str_or("gemm-split", "auto"))?,
+        prep_cache_bytes: args.u64_or("prep-mb", d.prep_cache_bytes >> 20)? << 20,
         disk_bw: args.f64_opt("disk-bw")?,
         artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
         ..d
@@ -812,6 +817,18 @@ mod tests {
             "sample --data {d} --samples 64 --n1 32 --n2 16 --p1 2 --compute f64 --json"
         )))
         .unwrap();
+        run_cli(&argv(&format!(
+            "sample --data {d} --samples 32 --n1 32 --n2 16 --threads 2 \
+             --gemm-split cols --compute f64"
+        )))
+        .unwrap();
+        assert!(
+            run_cli(&argv(&format!(
+                "sample --data {d} --samples 32 --gemm-split diagonal"
+            )))
+            .is_err(),
+            "bad --gemm-split must be rejected"
+        );
         run_cli(&argv(&format!(
             "sample --data {d} --samples 32 --n1 32 --n2 32 --scheme mp --compute f64"
         )))

@@ -10,6 +10,7 @@ use std::path::PathBuf;
 
 use crate::comm::NetPreset;
 use crate::io::{StoreCodec, StorePrecision};
+use crate::linalg::GemmSplit;
 use crate::mps::gbs::GbsSpec;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
@@ -131,6 +132,10 @@ pub struct RunConfig {
     pub p2: usize,
     /// Threads for the native engine's GEMM.
     pub gemm_threads: usize,
+    /// Which axis the threaded GEMM splits (rows = samples, cols = the
+    /// bond dimension — the paper's tensor-parallel axis; auto picks by
+    /// shape).
+    pub gemm_split: GemmSplit,
     pub compute: ComputePrecision,
     pub store_precision: StorePrecision,
     pub store_codec: StoreCodec,
@@ -167,6 +172,7 @@ impl RunConfig {
             p1: 1,
             p2: 1,
             gemm_threads: 1,
+            gemm_split: GemmSplit::Auto,
             compute: ComputePrecision::F32,
             store_precision: StorePrecision::F16,
             store_codec: StoreCodec::Raw,
@@ -228,6 +234,7 @@ impl RunConfig {
             ("p1", Json::Num(self.p1 as f64)),
             ("p2", Json::Num(self.p2 as f64)),
             ("compute", Json::Str(self.compute.as_str().into())),
+            ("gemm_split", Json::Str(self.gemm_split.as_str().into())),
             (
                 "store_precision",
                 Json::Str(self.store_precision.as_str().into()),
@@ -271,6 +278,13 @@ pub struct ServiceConfig {
     pub compute: ComputePrecision,
     pub scaling: ScalingMode,
     pub gemm_threads: usize,
+    /// GEMM split axis for the resident engines (see [`RunConfig`]).
+    pub gemm_split: GemmSplit,
+    /// Byte budget for resident prepared-Γ chains per `(store, precision)`
+    /// entry in the `StoreCache` — warm batches walk converted tensors
+    /// with zero per-step conversion (and zero Γ I/O once fully resident).
+    /// 0 disables residency (sites are still prepared once per batch).
+    pub prep_cache_bytes: u64,
     /// Simulated disk bandwidth shared by all cached stores' prefetchers.
     pub disk_bw: Option<f64>,
     pub artifacts_dir: PathBuf,
@@ -292,6 +306,8 @@ impl Default for ServiceConfig {
             compute: ComputePrecision::F32,
             scaling: ScalingMode::PerSample,
             gemm_threads: 1,
+            gemm_split: GemmSplit::Auto,
+            prep_cache_bytes: 256 << 20,
             disk_bw: None,
             artifacts_dir: PathBuf::from("artifacts"),
         }
@@ -344,6 +360,8 @@ impl ServiceConfig {
             ("engine", Json::Str(self.engine.as_str().into())),
             ("compute", Json::Str(self.compute.as_str().into())),
             ("scaling", Json::Str(self.scaling.as_str().into())),
+            ("gemm_split", Json::Str(self.gemm_split.as_str().into())),
+            ("prep_cache_bytes", Json::Num(self.prep_cache_bytes as f64)),
         ])
     }
 }

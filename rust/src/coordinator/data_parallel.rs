@@ -18,8 +18,8 @@ use crate::coordinator::{env_probe, env_rows, env_store_rows, EngineBox, RunRepo
 use crate::io::{DiskModel, GammaStore, Prefetcher, StorePrecision};
 use crate::metrics::{keys, Metrics};
 use crate::mps::Site;
+use crate::sampler::boundary_env;
 use crate::sampler::sink::SampleSink;
-use crate::sampler::{boundary_env, StepEngine};
 use crate::tensor::{SplitBuf, Tensor3};
 use crate::util::error::{Error, Result};
 use crate::util::f16;
@@ -174,6 +174,14 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>, probe_sites: &[usize]) -> R
 
                                 // ---- local macro batch step (micro-batched).
                                 if let (Some(b), Some(env_buf)) = (&batch, &mut env) {
+                                    // Convert Γ to compute precision ONCE
+                                    // per site; every micro batch below
+                                    // borrows it (the per-step
+                                    // clone/re-round is gone).
+                                    let prepared = engine.prep_key().map(|k| {
+                                        metrics.add(keys::STEP_PREP_CONVERSIONS, 1);
+                                        crate::sampler::PreparedSite::prepare(&site, k)
+                                    });
                                     let chi_r = site.gamma.d1;
                                     let mut next =
                                         SplitBuf::zeros(&[b.len, chi_r]);
@@ -195,9 +203,10 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>, probe_sites: &[usize]) -> R
                                         });
                                         let mut s = Vec::new();
                                         let t0 = std::time::Instant::now();
-                                        engine.step(
+                                        engine.step_site(
                                             &mut chunk,
-                                            &site,
+                                            Some(&site),
+                                            prepared.as_ref(),
                                             &th,
                                             mus.as_deref(),
                                             &mut s,

@@ -36,11 +36,11 @@ pub enum EngineBox {
 impl EngineBox {
     pub fn build(cfg: &RunConfig) -> Result<EngineBox> {
         match cfg.engine {
-            EngineKind::Native => Ok(EngineBox::Native(NativeEngine::new(
-                cfg.compute,
-                cfg.scaling,
-                cfg.gemm_threads,
-            ))),
+            EngineKind::Native => {
+                let mut e = NativeEngine::new(cfg.compute, cfg.scaling, cfg.gemm_threads);
+                e.split = cfg.gemm_split;
+                Ok(EngineBox::Native(e))
+            }
             EngineKind::Xla => {
                 let mut e = crate::runtime::XlaEngine::new(&cfg.artifacts_dir)?;
                 e.prefer_tf32 = cfg.compute == crate::config::ComputePrecision::Tf32;
@@ -53,6 +53,46 @@ impl EngineBox {
         match self {
             EngineBox::Native(e) => &e.metrics,
             EngineBox::Xla(e) => &e.metrics,
+        }
+    }
+
+    /// The precision-pipeline key a [`PreparedSite`] must be built with
+    /// for this engine, or `None` when the engine consumes raw sites (the
+    /// PJRT path does its own device staging).
+    pub fn prep_key(&self) -> Option<crate::sampler::PrepKey> {
+        match self {
+            EngineBox::Native(e) => Some(e.prep_key()),
+            EngineBox::Xla(_) => None,
+        }
+    }
+
+    /// Step through the allocation-free prepared path when one is
+    /// available, falling back to the raw-site path otherwise. Callers
+    /// prepare once per site (via `prep_key`) and reuse across micro
+    /// batches — that is where the per-step Γ clone/convert dies. A fully
+    /// resident walk may pass `site: None`; engines without a prepared
+    /// path then error instead of silently recomputing.
+    pub fn step_site(
+        &mut self,
+        env: &mut SplitBuf,
+        site: Option<&Site>,
+        prepared: Option<&crate::sampler::PreparedSite>,
+        thresholds: &[f32],
+        displacements: Option<&[(f64, f64)]>,
+        samples: &mut Vec<i32>,
+    ) -> Result<()> {
+        match (self, prepared) {
+            (EngineBox::Native(e), Some(p)) => {
+                e.step_prepared(env, p, thresholds, displacements, samples)
+            }
+            (me, _) => {
+                let site = site.ok_or_else(|| {
+                    crate::util::error::Error::other(
+                        "step_site: engine has no prepared path and no raw site was given",
+                    )
+                })?;
+                me.step(env, site, thresholds, displacements, samples)
+            }
         }
     }
 

@@ -46,3 +46,11 @@ pub mod util;
 pub mod validate;
 
 pub use util::error::{Error, Result};
+
+/// Test builds run under the counting allocator so the zero-allocation
+/// steady-state contract of the step engines is asserted, not assumed
+/// (`sampler::native` tests; docs/PERF.md). Non-test builds use the
+/// system allocator untouched.
+#[cfg(test)]
+#[global_allocator]
+static COUNTING_ALLOC: util::alloc::CountingAlloc = util::alloc::CountingAlloc;

@@ -134,6 +134,38 @@ pub fn displacement_fast<T: Float + std::ops::AddAssign>(
     Ok(out)
 }
 
+/// Reusable scratch for [`displacement_fast_batch_into`]: the μ-independent
+/// coefficient table (recomputed only when `d` changes) and the power
+/// ladders. Part of the step engine's allocation-free workspace.
+#[derive(Debug, Clone)]
+pub struct DisplacementWs<T> {
+    coef: Vec<T>,
+    coef_d: usize,
+    mu_pow: Vec<Complex<T>>,
+    nmu_pow: Vec<Complex<T>>,
+}
+
+// Manual impl: the derive would demand `T: Default`, which the `Float`
+// shim does not guarantee.
+impl<T> Default for DisplacementWs<T> {
+    fn default() -> Self {
+        DisplacementWs {
+            coef: Vec::new(),
+            coef_d: 0,
+            mu_pow: Vec::new(),
+            nmu_pow: Vec::new(),
+        }
+    }
+}
+
+impl<T> DisplacementWs<T> {
+    /// Total buffer capacity (elements) — the step workspace folds this
+    /// into its growth detection.
+    pub fn capacity_units(&self) -> usize {
+        self.coef.capacity() + self.mu_pow.capacity() + self.nmu_pow.capacity()
+    }
+}
+
 /// Batched displacement: one `D(μ_n)` per sample, emitted with the **batch
 /// axis innermost** (`out[(j·d + k)·n_batch + n]`) — the transposed layout
 /// of §3.4.1 so consumers stream contiguous per-sample lanes.
@@ -141,21 +173,48 @@ pub fn displacement_fast_batch<T: Float + std::ops::AddAssign>(
     mus: &[Complex<T>],
     d: usize,
 ) -> Result<Vec<Complex<T>>> {
-    let nb = mus.len();
-    let mut out = vec![Complex::<T>::zero(); d * d * nb];
-    // Precompute the μ-independent coefficient table c[j][m] = √(j!/m!)/(j−m)!
-    let mut coef = vec![T::zero(); d * d];
-    for j in 0..d {
-        for m in 0..=j {
-            coef[j * d + m] = sqrt_fact_ratio::<T>(j, m) * inv_factorial::<T>(j - m);
-        }
+    let mut out = Vec::new();
+    let mut ws = DisplacementWs::default();
+    displacement_fast_batch_into(mus, d, &mut out, &mut ws)?;
+    Ok(out)
+}
+
+/// [`displacement_fast_batch`] into caller-owned buffers — allocation-free
+/// once `out` and `ws` have warmed up to the working shape.
+pub fn displacement_fast_batch_into<T: Float + std::ops::AddAssign>(
+    mus: &[Complex<T>],
+    d: usize,
+    out: &mut Vec<Complex<T>>,
+    ws: &mut DisplacementWs<T>,
+) -> Result<()> {
+    if d == 0 {
+        return Err(Error::shape("displacement: d = 0"));
     }
-    let mut mu_pow = vec![Complex::<T>::one(); d];
-    let mut nmu_pow = vec![Complex::<T>::one(); d];
+    let nb = mus.len();
+    out.clear();
+    out.resize(d * d * nb, Complex::zero());
+    // Coefficient table c[j][m] = √(j!/m!)/(j−m)! — depends only on d.
+    if ws.coef_d != d {
+        ws.coef.clear();
+        ws.coef.resize(d * d, T::zero());
+        for j in 0..d {
+            for m in 0..=j {
+                ws.coef[j * d + m] = sqrt_fact_ratio::<T>(j, m) * inv_factorial::<T>(j - m);
+            }
+        }
+        ws.coef_d = d;
+        ws.mu_pow.clear();
+        ws.mu_pow.resize(d, Complex::one());
+        ws.nmu_pow.clear();
+        ws.nmu_pow.resize(d, Complex::one());
+    }
+    let (coef, mu_pow, nmu_pow) = (&ws.coef, &mut ws.mu_pow, &mut ws.nmu_pow);
     for (n, &mu) in mus.iter().enumerate() {
         let pref =
             Complex::from_re(T::from((-0.5) * mu.norm_sq().to_f64().unwrap()).unwrap().exp());
         let nmu = -mu.conj();
+        mu_pow[0] = Complex::one();
+        nmu_pow[0] = Complex::one();
         for p in 1..d {
             mu_pow[p] = mu_pow[p - 1] * mu;
             nmu_pow[p] = nmu_pow[p - 1] * nmu;
@@ -172,7 +231,7 @@ pub fn displacement_fast_batch<T: Float + std::ops::AddAssign>(
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -310,6 +369,28 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn batch_into_reuses_buffers_and_matches() {
+        let mut rng = Xoshiro256::seed_from(44);
+        let d = 3;
+        let mus: Vec<C64> = (0..5)
+            .map(|_| {
+                let (re, im) = rng.complex_normal();
+                C64::new(re * 0.4, im * 0.4)
+            })
+            .collect();
+        let want = displacement_fast_batch(&mus, d).unwrap();
+        let mut out = Vec::new();
+        let mut ws = DisplacementWs::default();
+        displacement_fast_batch_into(&mus, d, &mut out, &mut ws).unwrap();
+        assert_eq!(out, want);
+        let ptr = out.as_ptr();
+        displacement_fast_batch_into(&mus, d, &mut out, &mut ws).unwrap();
+        assert_eq!(out, want, "second fill identical");
+        assert_eq!(out.as_ptr(), ptr, "no reallocation on reuse");
+        assert!(displacement_fast_batch_into(&mus, 0, &mut out, &mut ws).is_err());
     }
 
     #[test]

@@ -3,12 +3,24 @@
 //! The native engine must be fast enough to make the CPU-scaled paper
 //! experiments (Table 3, Figs. 10/12) meaningful, so the kernel is cache
 //! blocked (MC×KC panels), accumulates in registers across an unrolled k
-//! loop, and splits the row dimension across scoped threads. FLOP counts
-//! follow the convention of the paper: one complex MAC = 8 real FLOPs.
+//! loop, and splits work across scoped threads along one of two axes:
+//!
+//! - **row split** — partition C's rows (the sample axis N). Best when
+//!   N ≥ threads: each thread streams its own disjoint C panel.
+//! - **column split** — partition C's columns (the bond axis χ_r·d, the
+//!   paper's tensor-parallel axis). When N is small and χ is huge a row
+//!   split leaves most threads idle; the column split keeps them all busy
+//!   on disjoint column stripes of every row.
+//!
+//! [`GemmSplit::Auto`] picks between them with a utilization heuristic
+//! (see [`choose_split`]); both splits produce bit-identical results to
+//! the single-threaded kernel because every C element is accumulated by
+//! exactly one thread in the same k order. FLOP counts follow the paper's
+//! convention: one complex MAC = 8 real FLOPs.
 
 use crate::util::num::Float;
 
-use crate::tensor::{Complex, Mat, Tensor3};
+use crate::tensor::{Complex, Mat, MatRef, Tensor3};
 use crate::util::error::{Error, Result};
 
 /// Real FLOPs of an (m,k)×(k,n) complex GEMM (8 per complex MAC).
@@ -19,7 +31,61 @@ pub fn matmul_flops(m: usize, k: usize, n: usize) -> u64 {
 const MC: usize = 64; // row block
 const KC: usize = 256; // depth block
 
-/// C ← A·B (complex). Single allocation; panics only on shape mismatch.
+/// Minimum columns per thread before a column split is worth the extra
+/// passes over A (each stripe re-reads every A row).
+const COL_MIN: usize = 16;
+
+/// Which axis of C the threaded GEMM partitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GemmSplit {
+    /// Pick per call from the shape (see [`choose_split`]).
+    #[default]
+    Auto,
+    /// Always split C's rows (the sample axis).
+    Rows,
+    /// Always split C's columns (the bond axis — tensor-parallel style).
+    Cols,
+}
+
+impl GemmSplit {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GemmSplit::Auto => "auto",
+            GemmSplit::Rows => "rows",
+            GemmSplit::Cols => "cols",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(GemmSplit::Auto),
+            "rows" => Ok(GemmSplit::Rows),
+            "cols" | "bond" => Ok(GemmSplit::Cols),
+            _ => Err(Error::config(format!(
+                "unknown gemm split '{s}' (auto|rows|cols)"
+            ))),
+        }
+    }
+}
+
+/// Resolve `Auto` for an (m × n) output on `threads` threads: prefer the
+/// row split whenever it can occupy every thread (better A/C locality);
+/// fall back to the bond split when rows are scarce but the bond axis is
+/// wide enough to give each thread a ≥ [`COL_MIN`]-column stripe.
+pub fn choose_split(split: GemmSplit, m: usize, n: usize, threads: usize) -> GemmSplit {
+    match split {
+        GemmSplit::Auto => {
+            if m >= threads || n < threads * COL_MIN {
+                GemmSplit::Rows
+            } else {
+                GemmSplit::Cols
+            }
+        }
+        s => s,
+    }
+}
+
+/// C ← A·B (complex). Single allocation; errors on shape mismatch.
 pub fn gemm<T: Float + std::ops::AddAssign + Send + Sync>(
     a: &Mat<T>,
     b: &Mat<T>,
@@ -36,12 +102,25 @@ pub fn gemm<T: Float + std::ops::AddAssign + Send + Sync>(
     Ok(c)
 }
 
-/// C += A·B (complex), blocked and threaded over row panels.
+/// C += A·B (complex), blocked and threaded over row panels (or column
+/// stripes when the auto heuristic prefers the bond axis).
 pub fn gemm_acc<T: Float + std::ops::AddAssign + Send + Sync>(
     a: &Mat<T>,
     b: &Mat<T>,
     c: &mut Mat<T>,
     threads: usize,
+) -> Result<()> {
+    gemm_acc_split(a.view(), b.view(), c, threads, GemmSplit::Auto)
+}
+
+/// C += A·B over borrowed views, with an explicit split policy. The core
+/// kernel of the hot path: zero allocation when `threads == 1`.
+pub fn gemm_acc_split<T: Float + std::ops::AddAssign + Send + Sync>(
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    c: &mut Mat<T>,
+    threads: usize,
+    split: GemmSplit,
 ) -> Result<()> {
     if a.cols != b.rows || c.rows != a.rows || c.cols != b.cols {
         return Err(Error::shape(format!(
@@ -49,53 +128,145 @@ pub fn gemm_acc<T: Float + std::ops::AddAssign + Send + Sync>(
             a.rows, a.cols, b.rows, b.cols, c.rows, c.cols
         )));
     }
+    // C is written through a raw base pointer below; a hand-built Mat
+    // whose buffer disagrees with its dims must fail here, not corrupt
+    // the heap.
+    if c.data.len() != c.rows * c.cols {
+        return Err(Error::shape(format!(
+            "gemm_acc: C buffer holds {} elements for a {}×{} shape",
+            c.data.len(),
+            c.rows,
+            c.cols
+        )));
+    }
+    let m = a.rows;
     let n = b.cols;
-    let k = a.cols;
-    let threads = threads.max(1).min(a.rows.max(1));
-
-    // Partition C's rows across threads; each thread owns a disjoint slice.
-    let rows_per = a.rows.div_ceil(threads);
-    let c_rows: Vec<&mut [Complex<T>]> = c.data.chunks_mut(rows_per * n).collect();
-
-    std::thread::scope(|scope| {
-        for (t, c_chunk) in c_rows.into_iter().enumerate() {
-            let row0 = t * rows_per;
-            scope.spawn(move || {
-                let my_rows = c_chunk.len() / n;
-                for ib in (0..my_rows).step_by(MC) {
-                    let ie = (ib + MC).min(my_rows);
-                    for kb in (0..k).step_by(KC) {
-                        let ke = (kb + KC).min(k);
-                        for i in ib..ie {
-                            let arow = a.row(row0 + i);
-                            let crow = &mut c_chunk[i * n..(i + 1) * n];
-                            for kk in kb..ke {
-                                let av = arow[kk];
-                                if av.re == T::zero() && av.im == T::zero() {
-                                    continue;
-                                }
-                                let brow = b.row(kk);
-                                // Inner axpy: crow += av * brow, unrolled by 4.
-                                let mut j = 0;
-                                while j + 4 <= n {
-                                    crow[j] = crow[j].mul_add(av, brow[j]);
-                                    crow[j + 1] = crow[j + 1].mul_add(av, brow[j + 1]);
-                                    crow[j + 2] = crow[j + 2].mul_add(av, brow[j + 2]);
-                                    crow[j + 3] = crow[j + 3].mul_add(av, brow[j + 3]);
-                                    j += 4;
-                                }
-                                while j < n {
-                                    crow[j] = crow[j].mul_add(av, brow[j]);
-                                    j += 1;
-                                }
-                            }
-                        }
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
+    let threads = threads.max(1);
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    if threads == 1 {
+        // Inline fast path: no scope, no spawn — the allocation-free
+        // steady state the step workspace depends on.
+        // Safety: `c` is exclusively borrowed and no other region is live.
+        unsafe { kernel_blocked(a, b, c_ptr, 0, m, 0, n) };
+        return Ok(());
+    }
+    match choose_split(split, m, n, threads) {
+        GemmSplit::Rows | GemmSplit::Auto => {
+            let threads = threads.min(m);
+            let rows_per = m.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for t in 0..threads {
+                    let r0 = t * rows_per;
+                    let r1 = ((t + 1) * rows_per).min(m);
+                    if r0 >= r1 {
+                        break;
                     }
+                    let c_ptr = c_ptr;
+                    scope.spawn(move || {
+                        // Safety: row panels [r0, r1) are disjoint across
+                        // threads; the buffer outlives the scope.
+                        unsafe { kernel_blocked(a, b, c_ptr, r0, r1 - r0, 0, n) };
+                    });
                 }
             });
         }
-    });
+        GemmSplit::Cols => {
+            let threads = threads.min(n.div_ceil(COL_MIN)).max(1).min(n);
+            let cols_per = n.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for t in 0..threads {
+                    let j0 = t * cols_per;
+                    let j1 = ((t + 1) * cols_per).min(n);
+                    if j0 >= j1 {
+                        break;
+                    }
+                    let c_ptr = c_ptr;
+                    scope.spawn(move || {
+                        // Safety: column stripes [j0, j1) are disjoint
+                        // across threads; the buffer outlives the scope.
+                        unsafe { kernel_blocked(a, b, c_ptr, 0, m, j0, j1) };
+                    });
+                }
+            });
+        }
+    }
     Ok(())
+}
+
+/// Shared raw pointer for the splits' disjoint C-region writes.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Inner axpy: `crow += av * brow`, unrolled by 4.
+#[inline]
+fn axpy_row<T: Float + std::ops::AddAssign>(
+    crow: &mut [Complex<T>],
+    av: Complex<T>,
+    brow: &[Complex<T>],
+) {
+    let w = crow.len();
+    let mut j = 0;
+    while j + 4 <= w {
+        crow[j] = crow[j].mul_add(av, brow[j]);
+        crow[j + 1] = crow[j + 1].mul_add(av, brow[j + 1]);
+        crow[j + 2] = crow[j + 2].mul_add(av, brow[j + 2]);
+        crow[j + 3] = crow[j + 3].mul_add(av, brow[j + 3]);
+        j += 4;
+    }
+    while j < w {
+        crow[j] = crow[j].mul_add(av, brow[j]);
+        j += 1;
+    }
+}
+
+/// THE blocked kernel — one body for the serial path, the row split, and
+/// the column split, so their accumulation order (and hence bitwise
+/// results) cannot drift apart. Processes C rows `[row0, row0+my_rows)`
+/// × columns `[j0, j1)`; `c_ptr` is the base of the full (m×n) C buffer.
+///
+/// # Safety
+/// The caller must guarantee that the `[row0, row0+my_rows) × [j0, j1)`
+/// region of C is exclusively owned by this call (no concurrent reader
+/// or writer overlaps it) and that the buffer outlives the call.
+unsafe fn kernel_blocked<T: Float + std::ops::AddAssign>(
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    c_ptr: SendPtr<Complex<T>>,
+    row0: usize,
+    my_rows: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let n = b.cols;
+    let k = a.cols;
+    for ib in (0..my_rows).step_by(MC) {
+        let ie = (ib + MC).min(my_rows);
+        for kb in (0..k).step_by(KC) {
+            let ke = (kb + KC).min(k);
+            for i in ib..ie {
+                let arow = a.row(row0 + i);
+                // Safety (per the contract above): this row segment lies
+                // inside the caller's exclusive region.
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        c_ptr.0.add((row0 + i) * n + j0),
+                        j1 - j0,
+                    )
+                };
+                for kk in kb..ke {
+                    let av = arow[kk];
+                    if av.re == T::zero() && av.im == T::zero() {
+                        continue;
+                    }
+                    axpy_row(crow, av, &b.row(kk)[j0..j1]);
+                }
+            }
+        }
+    }
 }
 
 /// y ← A·x (complex matrix–vector).
@@ -126,27 +297,43 @@ pub fn gemv<T: Float + std::ops::AddAssign>(
 /// The paper's per-site bond contraction:
 /// `left_env (N, χ_l) × Γ (χ_l, χ_r, d) → temp (N, χ_r, d)`.
 ///
-/// Γ is viewed as a `(χ_l, χ_r·d)` matrix — the physical index is innermost,
-/// so this is a single GEMM with no repacking (the reason `Tensor3` uses
-/// that layout).
+/// Γ is *viewed* as a `(χ_l, χ_r·d)` matrix over its own storage — the
+/// physical index is innermost, so this is a single GEMM with no repacking
+/// and no copy (the reason `Tensor3` uses that layout).
 pub fn contract_env<T: Float + std::ops::AddAssign + Send + Sync>(
     env: &Mat<T>,
     gamma: &Tensor3<T>,
     threads: usize,
 ) -> Result<Tensor3<T>> {
+    let mut temp = Tensor3::zeros(env.rows, gamma.d1, gamma.d2);
+    contract_env_into(env, gamma, &mut temp, threads, GemmSplit::Auto)?;
+    Ok(temp)
+}
+
+/// [`contract_env`] into a caller-owned output tensor (reshaped in place,
+/// allocation-free once its capacity suffices) with an explicit split.
+pub fn contract_env_into<T: Float + std::ops::AddAssign + Send + Sync>(
+    env: &Mat<T>,
+    gamma: &Tensor3<T>,
+    temp: &mut Tensor3<T>,
+    threads: usize,
+    split: GemmSplit,
+) -> Result<()> {
     if env.cols != gamma.d0 {
         return Err(Error::shape(format!(
             "contract_env: env (N,{}) vs Γ ({},{},{})",
             env.cols, gamma.d0, gamma.d1, gamma.d2
         )));
     }
-    let gm = Mat {
-        rows: gamma.d0,
+    temp.reset(env.rows, gamma.d1, gamma.d2);
+    let mut c = Mat {
+        rows: env.rows,
         cols: gamma.d1 * gamma.d2,
-        data: gamma.data.clone(),
+        data: std::mem::take(&mut temp.data),
     };
-    let c = gemm(env, &gm, threads)?;
-    Tensor3::from_vec(env.rows, gamma.d1, gamma.d2, c.data)
+    let r = gemm_acc_split(env.view(), gamma.as_mat_ref(), &mut c, threads, split);
+    temp.data = c.data;
+    r
 }
 
 #[cfg(test)]
@@ -249,6 +436,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn contract_env_into_reuses_buffer() {
+        let mut rng = Xoshiro256::seed_from(9);
+        let env = random_mat(&mut rng, 8, 6);
+        let g = Tensor3::from_vec(
+            6,
+            4,
+            3,
+            (0..6 * 4 * 3)
+                .map(|_| C64::new(rng.normal(), rng.normal()))
+                .collect(),
+        )
+        .unwrap();
+        let want = contract_env(&env, &g, 1).unwrap();
+        let mut temp: Tensor3<f64> = Tensor3::zeros(8, 4, 3); // right-sized
+        let ptr = temp.data.as_ptr();
+        for split in [GemmSplit::Auto, GemmSplit::Rows, GemmSplit::Cols] {
+            contract_env_into(&env, &g, &mut temp, 2, split).unwrap();
+            assert_eq!(temp.data, want.data, "{split:?} bit-identical");
+        }
+        contract_env_into(&env, &g, &mut temp, 1, GemmSplit::Auto).unwrap();
+        assert_eq!(temp.data.as_ptr(), ptr, "no reallocation across calls");
+    }
+
+    #[test]
+    fn column_split_bit_identical_to_serial() {
+        // The bond-parallel kernel must match the single-thread result
+        // EXACTLY — each C element is accumulated by one thread in the
+        // same k order, so not even the last ulp may move.
+        crate::util::prop::quickcheck("col-split == serial", |g| {
+            let m = g.len(1, 12);
+            let k = g.len(1, 24);
+            let n = g.len(1, 48);
+            let threads = g.len(2, 6);
+            let mut rng = Xoshiro256::seed_from(g.u64());
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let mut serial = Mat::zeros(m, n);
+            gemm_acc_split(a.view(), b.view(), &mut serial, 1, GemmSplit::Rows)
+                .unwrap();
+            for split in [GemmSplit::Cols, GemmSplit::Rows, GemmSplit::Auto] {
+                let mut par = Mat::zeros(m, n);
+                gemm_acc_split(a.view(), b.view(), &mut par, threads, split).unwrap();
+                if par.data != serial.data {
+                    return Err(format!(
+                        "{split:?} with {threads} threads diverged at ({m},{k},{n})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn auto_split_heuristic_prefers_busy_threads() {
+        // Plenty of rows → row split regardless of width.
+        assert_eq!(choose_split(GemmSplit::Auto, 64, 1024, 8), GemmSplit::Rows);
+        // Few rows, wide bond axis → bond split.
+        assert_eq!(choose_split(GemmSplit::Auto, 2, 1024, 8), GemmSplit::Cols);
+        // Few rows AND narrow → rows (col stripes would be too thin).
+        assert_eq!(choose_split(GemmSplit::Auto, 2, 32, 8), GemmSplit::Rows);
+        // Explicit choices pass through.
+        assert_eq!(choose_split(GemmSplit::Cols, 64, 64, 2), GemmSplit::Cols);
+        assert_eq!(GemmSplit::parse("bond").unwrap(), GemmSplit::Cols);
+        assert!(GemmSplit::parse("diag").is_err());
     }
 
     #[test]

@@ -21,8 +21,12 @@ mod gemm;
 mod lu;
 
 pub use displacement::{
-    displacement_exact, displacement_fast, displacement_fast_batch, ladder_matrix,
+    displacement_exact, displacement_fast, displacement_fast_batch,
+    displacement_fast_batch_into, ladder_matrix, DisplacementWs,
 };
 pub use expm::expm;
-pub use gemm::{contract_env, gemm, gemm_acc, gemv, matmul_flops};
+pub use gemm::{
+    choose_split, contract_env, contract_env_into, gemm, gemm_acc, gemm_acc_split, gemv,
+    matmul_flops, GemmSplit,
+};
 pub use lu::{lu_decompose, lu_solve_in_place, Lu};

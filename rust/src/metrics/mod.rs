@@ -35,6 +35,18 @@ pub mod keys {
     pub const COLLECTIVES: &str = "collectives";
     pub const STEPS_SKIPPED: &str = "steps_skipped"; // dynamic-χ fast path
 
+    // Hot-path step counters (`sampler::native`).
+    /// Engine step invocations (one per micro batch per site).
+    pub const STEPS: &str = "steps";
+    /// Workspace buffer growth events. After warm-up this stops moving —
+    /// `step_ws_grows / steps` is the engine's allocs-per-step KPI and its
+    /// steady state is 0 (see docs/PERF.md).
+    pub const STEP_WS_GROWS: &str = "step_ws_grows";
+    /// Γ precision conversions performed (PreparedSite constructions).
+    pub const STEP_PREP_CONVERSIONS: &str = "step_prep_conversions";
+    /// Steps served from an already-prepared Γ (no conversion, no clone).
+    pub const STEP_PREP_HITS: &str = "step_prep_hits";
+
     // Service-layer counters (`service::*`).
     pub const JOBS_SUBMITTED: &str = "jobs_submitted";
     pub const JOBS_REJECTED: &str = "jobs_rejected";
@@ -107,7 +119,15 @@ impl Metrics {
     }
 
     pub fn add(&mut self, counter: &str, v: u64) {
-        *self.counters.entry(counter.to_string()).or_insert(0) += v;
+        // get_mut-first: after a key's first use this is allocation-free,
+        // which the engines' zero-alloc steady state relies on (`entry`
+        // would build a `String` on every call).
+        match self.counters.get_mut(counter) {
+            Some(e) => *e += v,
+            None => {
+                self.counters.insert(counter.to_string(), v);
+            }
+        }
     }
 
     pub fn get(&self, counter: &str) -> u64 {
@@ -124,7 +144,13 @@ impl Metrics {
     }
 
     pub fn add_phase(&mut self, phase: &str, secs: f64) {
-        *self.phases.entry(phase.to_string()).or_insert(0.0) += secs;
+        // See `add` — allocation-free after the phase's first use.
+        match self.phases.get_mut(phase) {
+            Some(e) => *e += secs,
+            None => {
+                self.phases.insert(phase.to_string(), secs);
+            }
+        }
     }
 
     pub fn phase(&self, phase: &str) -> f64 {

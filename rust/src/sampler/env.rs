@@ -2,13 +2,92 @@
 //! ([`SplitBuf`], f32 planes) and the native engines' `Mat<T>`.
 
 use crate::config::ComputePrecision;
-use crate::tensor::{Mat, SplitBuf};
-use crate::util::error::Result;
+use crate::tensor::{Complex, Mat, SplitBuf};
+use crate::util::error::{Error, Result};
 use crate::util::f16;
 
 /// Lift a SplitBuf environment to f64 for the native-f64 oracle.
 pub fn to_f64(env: &SplitBuf) -> Result<Mat<f64>> {
     env.to_mat_c64()
+}
+
+fn rank2(env: &SplitBuf) -> Result<(usize, usize)> {
+    if env.shape.len() != 2 {
+        return Err(Error::shape(format!(
+            "env adapter: shape {:?} is not rank-2",
+            env.shape
+        )));
+    }
+    env.check()?;
+    Ok((env.shape[0], env.shape[1]))
+}
+
+/// [`to_f64`] into a workspace matrix — allocation-free once `out` has
+/// warmed up to the working shape; single write pass (no zero-fill).
+pub fn to_f64_into(env: &SplitBuf, out: &mut Mat<f64>) -> Result<()> {
+    let (r, c) = rank2(env)?;
+    out.rows = r;
+    out.cols = c;
+    out.data.clear();
+    out.data.extend(
+        env.re
+            .iter()
+            .zip(&env.im)
+            .map(|(&re, &im)| Complex::new(re as f64, im as f64)),
+    );
+    Ok(())
+}
+
+/// [`to_f32`] into a workspace matrix (same rounding semantics).
+pub fn to_f32_into(env: &SplitBuf, precision: ComputePrecision, out: &mut Mat<f32>) -> Result<()> {
+    let (r, c) = rank2(env)?;
+    out.rows = r;
+    out.cols = c;
+    out.data.clear();
+    out.data.extend(
+        env.re
+            .iter()
+            .zip(&env.im)
+            .map(|(&re, &im)| Complex::new(re, im)),
+    );
+    match precision {
+        ComputePrecision::Tf32 => {
+            for z in &mut out.data {
+                z.re = f16::round_tf32(z.re);
+                z.im = f16::round_tf32(z.im);
+            }
+        }
+        ComputePrecision::F16 => {
+            for z in &mut out.data {
+                z.re = f16::round_f16(z.re);
+                z.im = f16::round_f16(z.im);
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Store back into an existing boundary buffer, reusing its planes
+/// (allocation-free at steady state; single write pass per plane).
+pub fn from_f64_into(m: &Mat<f64>, env: &mut SplitBuf) {
+    env.shape.clear();
+    env.shape.push(m.rows);
+    env.shape.push(m.cols);
+    env.re.clear();
+    env.re.extend(m.data.iter().map(|z| z.re as f32));
+    env.im.clear();
+    env.im.extend(m.data.iter().map(|z| z.im as f32));
+}
+
+pub fn from_f32_into(m: &Mat<f32>, env: &mut SplitBuf) {
+    env.shape.clear();
+    env.shape.push(m.rows);
+    env.shape.push(m.cols);
+    env.re.clear();
+    env.re.extend(m.data.iter().map(|z| z.re));
+    env.im.clear();
+    env.im.extend(m.data.iter().map(|z| z.im));
 }
 
 /// Lift to f32 with optional TF32/FP16 input rounding (what tensor cores
@@ -71,6 +150,33 @@ mod tests {
         let tf = to_f32(&sb, ComputePrecision::Tf32).unwrap();
         assert_ne!(plain[(0, 0)].re, tf[(0, 0)].re);
         assert_eq!(tf[(0, 0)].re, 1.0);
+    }
+
+    #[test]
+    fn into_adapters_match_allocating_forms() {
+        let mut sb = SplitBuf::zeros(&[2, 3]);
+        for (i, v) in sb.re.iter_mut().enumerate() {
+            *v = 0.125 + i as f32;
+        }
+        sb.im[4] = -2.5;
+        let mut m64 = Mat::zeros(1, 1);
+        to_f64_into(&sb, &mut m64).unwrap();
+        assert_eq!(m64, to_f64(&sb).unwrap());
+        for prec in [
+            ComputePrecision::F32,
+            ComputePrecision::Tf32,
+            ComputePrecision::F16,
+        ] {
+            let mut m32 = Mat::zeros(1, 1);
+            to_f32_into(&sb, prec, &mut m32).unwrap();
+            assert_eq!(m32, to_f32(&sb, prec).unwrap(), "{prec:?}");
+        }
+        let mut back = SplitBuf::zeros(&[1, 1]);
+        from_f64_into(&m64, &mut back);
+        assert_eq!(back, from_f64(&m64));
+        let mut bad = sb.clone();
+        bad.shape = vec![6];
+        assert!(to_f64_into(&bad, &mut m64).is_err());
     }
 
     #[test]

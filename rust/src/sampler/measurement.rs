@@ -1,14 +1,22 @@
 //! Native Alg. 1: measurement of the physical index + environment collapse,
 //! with the three scaling strategies of §3.3.1.
 //!
-//! Mirrors `python/compile/kernels/ref.py` exactly (same threshold
-//! semantics, same degenerate-row handling) so the native and XLA engines
-//! sample identical outcomes from identical inputs.
+//! Mirrors `python/compile/kernels/ref.py` (same threshold semantics, same
+//! degenerate-row handling). The threshold scan hoists the normalization
+//! division out of the outcome loop (`inv_tot` computed once) and breaks
+//! at the first `!(u > cum)` — index-equivalent to the full scan
+//! (including on overflowed/NaN rows) and regression-tested against it,
+//! though `p * inv_tot` can differ from ref.py's per-term `p / tot` in
+//! the last ulp of a cumulative boundary, so native-vs-XLA agreement is
+//! statistical (knife-edge outcome flips at ~2⁻²⁴ per comparison in f32),
+//! not bitwise. [`measure_into`] runs rows in parallel into a caller-owned
+//! workspace, bit-identically to the serial scan — the single-threaded hot
+//! loop was rivalling the GEMM at large χ.
 
 use crate::util::num::Float;
 
 use crate::config::ScalingMode;
-use crate::tensor::{Mat, Tensor3};
+use crate::tensor::{Complex, Mat, Tensor3};
 use crate::util::error::{Error, Result};
 
 /// Measurement output.
@@ -23,12 +31,101 @@ pub struct Measured<T> {
 }
 
 /// Alg. 1 over the unmeasured temp tensor `(N, χ_r, d)`.
-pub fn measure<T: Float + std::ops::AddAssign>(
+pub fn measure<T: Float + std::ops::AddAssign + Send + Sync>(
     temp: &Tensor3<T>,
     lambda: &[T],
     thresholds: &[f32],
     mode: ScalingMode,
 ) -> Result<Measured<T>> {
+    let mut env = Mat::zeros(temp.d0, temp.d1);
+    let mut samples = Vec::new();
+    let mut probs = Vec::new();
+    let dead_rows = measure_into(
+        temp, lambda, thresholds, mode, 1, &mut env, &mut samples, &mut probs,
+    )?;
+    Ok(Measured {
+        env,
+        samples,
+        dead_rows,
+    })
+}
+
+/// One sample row of Alg. 1: probability contraction, threshold scan, and
+/// environment collapse. Shared verbatim by the serial and row-parallel
+/// drivers so their outcomes are bit-identical.
+///
+/// The threshold scan computes `inv_tot = 1/tot` once (one division
+/// instead of `d`) and keeps the old counting form but breaks at the
+/// first `!(u > cum)`: with non-negative probabilities `cum` is
+/// non-decreasing, and once it is NaN (overflowed rows) it stays NaN, so
+/// in both cases `u > cum` can never become true again after first
+/// failing — the early exit is index-equivalent to the old full scan,
+/// including on ±inf/NaN inputs.
+#[inline]
+fn measure_row<T: Float + std::ops::AddAssign>(
+    panel: &[Complex<T>],
+    lambda: &[T],
+    threshold: f32,
+    d: usize,
+    probs: &mut [T],
+    erow: &mut [Complex<T>],
+) -> (i32, bool) {
+    let y = lambda.len();
+    // probs_j = Σ_y |temp[s,y,j]|²·Λ_y
+    for p in probs.iter_mut() {
+        *p = T::zero();
+    }
+    for yy in 0..y {
+        let lam = lambda[yy];
+        let row = &panel[yy * d..(yy + 1) * d];
+        for (j, z) in row.iter().enumerate() {
+            probs[j] += z.norm_sq() * lam;
+        }
+    }
+    let tot: T = probs.iter().fold(T::zero(), |a, &b| a + b);
+    let (outcome, dead) = if tot > T::zero() {
+        let u = T::from(threshold).unwrap();
+        let inv_tot = T::one() / tot;
+        let mut cum = T::zero();
+        let mut k = 0i32;
+        for &p in probs.iter() {
+            cum = cum + p * inv_tot;
+            if u > cum {
+                k += 1;
+            } else {
+                break;
+            }
+        }
+        (k.min(d as i32 - 1), false)
+    } else {
+        (0, true)
+    };
+
+    // Collapse: env[s, :] = temp[s, :, outcome].
+    let o = outcome as usize;
+    for yy in 0..y {
+        erow[yy] = panel[yy * d + o];
+    }
+    (outcome, dead)
+}
+
+/// Alg. 1 into caller-owned buffers (the step workspace): `env` is reshaped
+/// in place to `(N, χ_r)`, `samples` to length `N`, `probs` to length `d` —
+/// allocation-free once their capacities have warmed up. With `threads > 1`
+/// the sample rows are partitioned across scoped threads (each row is
+/// independent), bit-identically to the serial scan. Returns the dead-row
+/// count.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_into<T: Float + std::ops::AddAssign + Send + Sync>(
+    temp: &Tensor3<T>,
+    lambda: &[T],
+    thresholds: &[f32],
+    mode: ScalingMode,
+    threads: usize,
+    env: &mut Mat<T>,
+    samples: &mut Vec<i32>,
+    probs: &mut Vec<T>,
+) -> Result<usize> {
     let (n, y, d) = (temp.d0, temp.d1, temp.d2);
     if lambda.len() != y {
         return Err(Error::shape(format!(
@@ -43,57 +140,66 @@ pub fn measure<T: Float + std::ops::AddAssign>(
         )));
     }
 
-    let mut env = Mat::zeros(n, y);
-    let mut samples = vec![0i32; n];
+    // No zero-fill: the collapse below writes every (row, column) of the
+    // environment, including dead rows (outcome-0 column).
+    env.reshape(n, y);
+    samples.clear();
+    samples.resize(n, 0);
+    probs.clear();
+    probs.resize(d, T::zero());
+
+    let threads = threads.max(1).min(n.max(1));
     let mut dead_rows = 0usize;
-    let mut probs = vec![T::zero(); d];
-
-    for s in 0..n {
-        // probs_j = Σ_y |temp[s,y,j]|²·Λ_y
-        for p in probs.iter_mut() {
-            *p = T::zero();
+    if threads == 1 || y == 0 {
+        for s in 0..n {
+            let (outcome, dead) = measure_row(
+                temp.panel(s),
+                lambda,
+                thresholds[s],
+                d,
+                probs,
+                &mut env.data[s * y..(s + 1) * y],
+            );
+            samples[s] = outcome;
+            dead_rows += dead as usize;
         }
-        let panel = temp.panel(s); // (y, d) contiguous
-        for yy in 0..y {
-            let lam = lambda[yy];
-            let row = &panel[yy * d..(yy + 1) * d];
-            for (j, z) in row.iter().enumerate() {
-                probs[j] += z.norm_sq() * lam;
-            }
-        }
-        let tot: T = probs.iter().fold(T::zero(), |a, &b| a + b);
-        let outcome = if tot > T::zero() {
-            // cumulative > threshold count (matches ref.py).
-            let u = T::from(thresholds[s]).unwrap();
-            let mut cum = T::zero();
-            let mut k = 0i32;
-            for &p in probs.iter() {
-                cum = cum + p / tot;
-                if u > cum {
-                    k += 1;
-                }
-            }
-            k.min(d as i32 - 1)
-        } else {
-            dead_rows += 1;
-            0
-        };
-        samples[s] = outcome;
-
-        // Collapse: env[s, :] = temp[s, :, outcome].
-        let o = outcome as usize;
-        let erow = env.row_mut(s);
-        for yy in 0..y {
-            erow[yy] = panel[yy * d + o];
-        }
+    } else {
+        let rows_per = n.div_ceil(threads);
+        let env_chunks = env.data.chunks_mut(rows_per * y);
+        let sample_chunks = samples.chunks_mut(rows_per);
+        let th_chunks = thresholds.chunks(rows_per);
+        dead_rows = std::thread::scope(|scope| {
+            let handles: Vec<_> = env_chunks
+                .zip(sample_chunks)
+                .zip(th_chunks)
+                .enumerate()
+                .map(|(t, ((e_chunk, s_chunk), th_chunk))| {
+                    let row0 = t * rows_per;
+                    scope.spawn(move || {
+                        let mut probs = vec![T::zero(); d];
+                        let mut dead = 0usize;
+                        for (i, (sv, &u)) in s_chunk.iter_mut().zip(th_chunk).enumerate() {
+                            let (outcome, is_dead) = measure_row(
+                                temp.panel(row0 + i),
+                                lambda,
+                                u,
+                                d,
+                                &mut probs,
+                                &mut e_chunk[i * y..(i + 1) * y],
+                            );
+                            *sv = outcome;
+                            dead += is_dead as usize;
+                        }
+                        dead
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
     }
 
-    apply_scaling(&mut env, mode);
-    Ok(Measured {
-        env,
-        samples,
-        dead_rows,
-    })
+    apply_scaling(env, mode);
+    Ok(dead_rows)
 }
 
 /// Apply the configured rescaling to a collapsed environment.
@@ -251,5 +357,174 @@ mod tests {
         let t: Tensor3<f64> = Tensor3::zeros(2, 3, 2);
         assert!(measure(&t, &[1.0; 2], &[0.5; 2], ScalingMode::None).is_err());
         assert!(measure(&t, &[1.0; 3], &[0.5; 1], ScalingMode::None).is_err());
+    }
+
+    /// The pre-optimization scan (full walk, per-outcome division) — the
+    /// regression oracle for the hoisted-division early-break rewrite.
+    fn reference_measure(
+        temp: &Tensor3<f64>,
+        lambda: &[f64],
+        thresholds: &[f32],
+        mode: ScalingMode,
+    ) -> Measured<f64> {
+        let (n, y, d) = (temp.d0, temp.d1, temp.d2);
+        let mut env = Mat::zeros(n, y);
+        let mut samples = vec![0i32; n];
+        let mut dead_rows = 0usize;
+        let mut probs = vec![0.0f64; d];
+        for s in 0..n {
+            for p in probs.iter_mut() {
+                *p = 0.0;
+            }
+            let panel = temp.panel(s);
+            for yy in 0..y {
+                let lam = lambda[yy];
+                let row = &panel[yy * d..(yy + 1) * d];
+                for (j, z) in row.iter().enumerate() {
+                    probs[j] += z.norm_sq() * lam;
+                }
+            }
+            let tot: f64 = probs.iter().sum();
+            let outcome = if tot > 0.0 {
+                let u = thresholds[s] as f64;
+                let mut cum = 0.0;
+                let mut k = 0i32;
+                for &p in probs.iter() {
+                    cum += p / tot;
+                    if u > cum {
+                        k += 1;
+                    }
+                }
+                k.min(d as i32 - 1)
+            } else {
+                dead_rows += 1;
+                0
+            };
+            samples[s] = outcome;
+            let o = outcome as usize;
+            let erow = env.row_mut(s);
+            for yy in 0..y {
+                erow[yy] = panel[yy * d + o];
+            }
+        }
+        apply_scaling(&mut env, mode);
+        Measured {
+            env,
+            samples,
+            dead_rows,
+        }
+    }
+
+    fn random_temp(g: &mut crate::util::prop::Gen) -> (Tensor3<f64>, Vec<f64>, Vec<f32>) {
+        let n = g.len(1, 12);
+        let y = g.len(1, 10);
+        let d = g.len(2, 6);
+        let mut t = Tensor3::zeros(n, y, d);
+        for z in &mut t.data {
+            *z = C64::new(g.normal(), g.normal());
+        }
+        // Occasionally zero a whole sample row to exercise the dead path.
+        if g.bool() {
+            let s = g.usize_in(0, n);
+            let panel = y * d;
+            for z in &mut t.data[s * panel..(s + 1) * panel] {
+                *z = C64::zero();
+            }
+        }
+        let lambda: Vec<f64> = (0..y).map(|_| g.unit_f64()).collect();
+        let thresholds: Vec<f32> = (0..n).map(|_| g.unit_f64() as f32).collect();
+        (t, lambda, thresholds)
+    }
+
+    #[test]
+    fn early_break_scan_matches_reference_outcomes() {
+        crate::util::prop::quickcheck("measure == reference", |g| {
+            let (t, lambda, thresholds) = random_temp(g);
+            let mode = *g.choose(&[
+                ScalingMode::None,
+                ScalingMode::Global,
+                ScalingMode::PerSample,
+            ]);
+            let want = reference_measure(&t, &lambda, &thresholds, mode);
+            let got = measure(&t, &lambda, &thresholds, mode).unwrap();
+            if got.samples != want.samples {
+                return Err(format!("outcomes {:?} vs {:?}", got.samples, want.samples));
+            }
+            if got.dead_rows != want.dead_rows {
+                return Err(format!("dead {} vs {}", got.dead_rows, want.dead_rows));
+            }
+            // Same outcome ⇒ same collapsed column ⇒ identical env bits.
+            if got.env != want.env {
+                return Err("collapsed env diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn overflowed_rows_match_reference_scan() {
+        // A probability that overflows to +inf poisons the cumulative sum
+        // with NaN from that index on; the early-break counting scan must
+        // land on the same outcome as the old full scan (stop counting at
+        // the first non-(u > cum), i.e. at the inf entry).
+        let mut t = Tensor3::zeros(1, 1, 4);
+        *t.at_mut(0, 0, 0) = C64::new(1.0, 0.0);
+        *t.at_mut(0, 0, 1) = C64::new(f64::MAX, 0.0); // norm_sq → +inf
+        let lam = vec![1.0f64];
+        let want = reference_measure(&t, &lam, &[0.5], ScalingMode::None);
+        let got = measure(&t, &lam, &[0.5], ScalingMode::None).unwrap();
+        assert_eq!(got.samples, want.samples);
+        assert_eq!(got.samples, vec![1], "stops at the overflowed entry");
+        assert_eq!(got.dead_rows, want.dead_rows);
+    }
+
+    #[test]
+    fn parallel_measure_bit_identical_to_serial() {
+        crate::util::prop::quickcheck("parallel measure == serial", |g| {
+            let (t, lambda, thresholds) = random_temp(g);
+            let threads = g.len(2, 6);
+            let mode = *g.choose(&[
+                ScalingMode::None,
+                ScalingMode::Global,
+                ScalingMode::PerSample,
+            ]);
+            let serial = measure(&t, &lambda, &thresholds, mode).unwrap();
+            let mut env = Mat::zeros(1, 1);
+            let mut samples = Vec::new();
+            let mut probs = Vec::new();
+            let dead = measure_into(
+                &t, &lambda, &thresholds, mode, threads, &mut env, &mut samples, &mut probs,
+            )
+            .map_err(|e| e.to_string())?;
+            if samples != serial.samples || env.data != serial.env.data {
+                return Err(format!("{threads}-thread measure diverged"));
+            }
+            if dead != serial.dead_rows {
+                return Err(format!("dead {} vs {}", dead, serial.dead_rows));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn measure_into_reuses_workspace_buffers() {
+        let t = temp_with_probs(&[0.2, 0.3, 0.5]);
+        let lam = vec![1.0f64];
+        let mut env = Mat::zeros(1, 1);
+        let mut samples = Vec::new();
+        let mut probs = Vec::new();
+        measure_into(
+            &t, &lam, &[0.6], ScalingMode::None, 1, &mut env, &mut samples, &mut probs,
+        )
+        .unwrap();
+        let (pe, ps, pp) = (env.data.as_ptr(), samples.as_ptr(), probs.as_ptr());
+        measure_into(
+            &t, &lam, &[0.6], ScalingMode::None, 1, &mut env, &mut samples, &mut probs,
+        )
+        .unwrap();
+        assert_eq!(samples, vec![2]);
+        assert_eq!(env.data.as_ptr(), pe);
+        assert_eq!(samples.as_ptr(), ps);
+        assert_eq!(probs.as_ptr(), pp);
     }
 }

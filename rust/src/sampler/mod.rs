@@ -15,7 +15,10 @@
 pub mod env;
 pub mod measurement;
 pub mod native;
+pub mod prepared;
 pub mod sink;
+
+pub use prepared::{PrepKey, PreparedGamma, PreparedSite, PreparedStore};
 
 use crate::mps::Site;
 use crate::tensor::SplitBuf;

@@ -6,29 +6,106 @@
 //! floating-point path: f64, f32, or TF32-emulated inputs, and any of the
 //! three scaling strategies. The Fig. 5/6 experiments need exactly this
 //! control; the XLA engine wins on throughput.
+//!
+//! ## Allocation-free steady state
+//!
+//! The hot entry point is [`NativeEngine::step_prepared`]: Γ arrives as a
+//! [`PreparedSite`] (converted to compute precision **once**, at store
+//! load) and every intermediate — environment precision lifts, the temp
+//! tensor, displacement matrices, probabilities, the collapsed
+//! environment — lives in a per-engine [`StepWorkspace`] that is only
+//! *reshaped* between steps. After warm-up a single-threaded step performs
+//! **zero** heap allocations (asserted by a counting-allocator test; the
+//! `step_ws_grows` counter tracks residual growth events in production).
+//! [`StepEngine::step`] remains as the compatibility path: it prepares a
+//! transient site and delegates.
 
 use crate::util::num::Float;
 
 use crate::config::{ComputePrecision, ScalingMode};
-use crate::linalg::{contract_env, displacement_fast_batch, matmul_flops};
+use crate::linalg::{
+    contract_env_into, displacement_fast_batch_into, matmul_flops, DisplacementWs, GemmSplit,
+};
 use crate::metrics::{keys, Metrics};
 use crate::mps::Site;
+use crate::sampler::prepared::{PrepKey, PreparedGamma, PreparedSite};
 use crate::sampler::{env as envmod, measurement, StepEngine};
 use crate::tensor::{Complex, Mat, SplitBuf, Tensor3};
 use crate::util::error::{Error, Result};
+
+/// Per-precision scratch arena of the step loop. Buffers are reshaped in
+/// place every step and grow only until the largest working set has been
+/// seen; `capacity_units` feeds the engine's growth detection.
+#[derive(Debug, Clone)]
+pub struct StepWorkspace<T> {
+    /// Environment lifted to compute precision (N, χ_l).
+    env_in: Mat<T>,
+    /// Unmeasured temp tensor (N, χ_r, d).
+    temp: Tensor3<T>,
+    /// Collapsed environment after measurement (N, χ_r).
+    env_out: Mat<T>,
+    /// Per-outcome probability accumulator (d).
+    probs: Vec<T>,
+    /// Displacement draws in compute precision (N).
+    mus: Vec<Complex<T>>,
+    /// Batched D(μ) matrices, batch-last layout (d·d·N).
+    dmats: Vec<Complex<T>>,
+    /// One sample's D repacked contiguously, transposed to `[k][j]` (d·d).
+    dmat_t: Vec<Complex<T>>,
+    /// One (χ_r-row, d) lane of temp during the displacement update (d).
+    drow: Vec<Complex<T>>,
+    /// Scratch of the batched displacement builder.
+    disp: DisplacementWs<T>,
+}
+
+impl<T: Float + std::ops::AddAssign> Default for StepWorkspace<T> {
+    fn default() -> Self {
+        StepWorkspace {
+            env_in: Mat::zeros(0, 0),
+            temp: Tensor3::zeros(0, 0, 0),
+            env_out: Mat::zeros(0, 0),
+            probs: Vec::new(),
+            mus: Vec::new(),
+            dmats: Vec::new(),
+            dmat_t: Vec::new(),
+            drow: Vec::new(),
+            disp: DisplacementWs::default(),
+        }
+    }
+}
+
+impl<T: Float + std::ops::AddAssign> StepWorkspace<T> {
+    /// Total element capacity across all buffers — constant at steady
+    /// state; any increase is a workspace growth event.
+    fn capacity_units(&self) -> usize {
+        self.env_in.data.capacity()
+            + self.temp.data.capacity()
+            + self.env_out.data.capacity()
+            + self.probs.capacity()
+            + self.mus.capacity()
+            + self.dmats.capacity()
+            + self.dmat_t.capacity()
+            + self.drow.capacity()
+            + self.disp.capacity_units()
+    }
+}
 
 /// Native engine configuration + counters.
 pub struct NativeEngine {
     pub precision: ComputePrecision,
     pub scaling: ScalingMode,
-    /// Threads for the bond-contraction GEMM.
+    /// Threads for the bond-contraction GEMM and the row-parallel measure.
     pub threads: usize,
+    /// How the threaded GEMM partitions C (rows vs the bond axis).
+    pub split: GemmSplit,
     /// Round Γ through f16 before compute (models fp16-stored tensors that
     /// were only converted, §3.3.2).
     pub gamma_f16: bool,
     pub metrics: Metrics,
     /// Dead (underflowed) sample rows seen so far — Fig. 6's failure signal.
     pub dead_rows: u64,
+    ws64: StepWorkspace<f64>,
+    ws32: StepWorkspace<f32>,
 }
 
 impl NativeEngine {
@@ -37,77 +114,219 @@ impl NativeEngine {
             precision,
             scaling,
             threads: threads.max(1),
+            split: GemmSplit::Auto,
             gamma_f16: false,
             metrics: Metrics::new(),
             dead_rows: 0,
+            ws64: StepWorkspace::default(),
+            ws32: StepWorkspace::default(),
         }
     }
 
-    fn step_typed<T>(
+    /// The precision pipeline this engine expects its [`PreparedSite`]s to
+    /// have been built with.
+    pub fn prep_key(&self) -> PrepKey {
+        PrepKey {
+            compute: self.precision,
+            gamma_f16: self.gamma_f16,
+        }
+    }
+
+    /// Workspace growth events per step so far — the allocs-per-step KPI
+    /// (0.0 at steady state; warm-up growth amortizes away).
+    pub fn allocs_per_step(&self) -> f64 {
+        let steps = self.metrics.get(keys::STEPS);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.metrics.get(keys::STEP_WS_GROWS) as f64 / steps as f64
+    }
+
+    /// The allocation-free hot path: step a batch against a site that was
+    /// converted to this engine's compute precision once, up front.
+    pub fn step_prepared(
         &mut self,
-        env: Mat<T>,
-        gamma: &Tensor3<T>,
-        lambda: &[T],
+        env: &mut SplitBuf,
+        site: &PreparedSite,
         thresholds: &[f32],
         displacements: Option<&[(f64, f64)]>,
         samples: &mut Vec<i32>,
-    ) -> Result<Mat<T>>
-    where
-        T: Float + std::ops::AddAssign + Send + Sync,
-    {
-        let n = env.rows;
-        let mut temp = self.metrics.time("compute", || {
-            contract_env(&env, gamma, self.threads)
-        })?;
-        self.metrics.add(
-            keys::FLOPS,
-            matmul_flops(n, gamma.d0, gamma.d1 * gamma.d2),
-        );
-
-        if let Some(mus) = displacements {
-            if mus.len() != n {
-                return Err(Error::shape(format!(
-                    "displacements: {} for N={n}",
-                    mus.len()
-                )));
-            }
-            self.metrics.time("displace", || {
-                apply_displacement(&mut temp, mus);
-            });
-            self.metrics
-                .add(keys::FLOPS, 8 * (n * gamma.d1 * gamma.d2 * gamma.d2) as u64);
+    ) -> Result<()> {
+        if site.key != self.prep_key() {
+            return Err(Error::config(format!(
+                "prepared site key {:?} does not match engine {:?}",
+                site.key,
+                self.prep_key()
+            )));
         }
-
-        let measured = self.metrics.time("measure", || {
-            measurement::measure(&temp, lambda, thresholds, self.scaling)
-        })?;
-        self.metrics
-            .add(keys::FLOPS, 8 * (n * gamma.d1 * gamma.d2) as u64);
-        self.dead_rows += measured.dead_rows as u64;
-        *samples = measured.samples;
-        Ok(measured.env)
+        // Growth detection covers engine-owned workspace only: caller
+        // buffers (env planes, samples) legitimately grow when a walk's χ
+        // widens, and the counting-allocator test asserts the full
+        // contract under a steady shape.
+        match &site.gamma {
+            PreparedGamma::F64(gamma) => {
+                let ws = &mut self.ws64;
+                let cap0 = ws.capacity_units();
+                envmod::to_f64_into(env, &mut ws.env_in)?;
+                let dead = step_in_workspace(
+                    ws,
+                    &mut self.metrics,
+                    self.scaling,
+                    self.threads,
+                    self.split,
+                    gamma,
+                    &site.lambda64,
+                    thresholds,
+                    displacements,
+                    samples,
+                )?;
+                self.dead_rows += dead as u64;
+                envmod::from_f64_into(&self.ws64.env_out, env);
+                let cap1 = self.ws64.capacity_units();
+                self.note_step(cap0, cap1, thresholds.len());
+            }
+            PreparedGamma::F32(gamma) => {
+                let ws = &mut self.ws32;
+                let cap0 = ws.capacity_units();
+                envmod::to_f32_into(env, self.precision, &mut ws.env_in)?;
+                let dead = step_in_workspace(
+                    ws,
+                    &mut self.metrics,
+                    self.scaling,
+                    self.threads,
+                    self.split,
+                    gamma,
+                    &site.lambda32,
+                    thresholds,
+                    displacements,
+                    samples,
+                )?;
+                self.dead_rows += dead as u64;
+                if self.precision == ComputePrecision::F16 {
+                    // ComplexHalf result storage: round the collapsed env.
+                    for z in &mut self.ws32.env_out.data {
+                        z.re = crate::util::f16::round_f16(z.re);
+                        z.im = crate::util::f16::round_f16(z.im);
+                    }
+                }
+                envmod::from_f32_into(&self.ws32.env_out, env);
+                let cap1 = self.ws32.capacity_units();
+                self.note_step(cap0, cap1, thresholds.len());
+            }
+        }
+        Ok(())
     }
+
+    fn note_step(&mut self, cap_before: usize, cap_after: usize, n: usize) {
+        self.metrics.add(keys::SAMPLES, n as u64);
+        self.metrics.add(keys::STEPS, 1);
+        self.metrics.add(keys::STEP_WS_GROWS, (cap_after > cap_before) as u64);
+    }
+}
+
+/// The per-site pipeline over an already-lifted environment (`ws.env_in`)
+/// and a borrowed prepared Γ: contract → optional displacement → measure.
+/// Leaves the collapsed environment in `ws.env_out` and the outcomes in
+/// `samples`; returns the dead-row count. Zero heap allocation once the
+/// workspace has warmed up (threads = 1).
+#[allow(clippy::too_many_arguments)]
+fn step_in_workspace<T>(
+    ws: &mut StepWorkspace<T>,
+    metrics: &mut Metrics,
+    scaling: ScalingMode,
+    threads: usize,
+    split: GemmSplit,
+    gamma: &Tensor3<T>,
+    lambda: &[T],
+    thresholds: &[f32],
+    displacements: Option<&[(f64, f64)]>,
+    samples: &mut Vec<i32>,
+) -> Result<usize>
+where
+    T: Float + std::ops::AddAssign + Send + Sync,
+{
+    let StepWorkspace {
+        env_in,
+        temp,
+        env_out,
+        probs,
+        mus,
+        dmats,
+        dmat_t,
+        drow,
+        disp,
+    } = ws;
+    let n = env_in.rows;
+
+    metrics.time("compute", || {
+        contract_env_into(env_in, gamma, temp, threads, split)
+    })?;
+    metrics.add(keys::FLOPS, matmul_flops(n, gamma.d0, gamma.d1 * gamma.d2));
+
+    if let Some(raw_mus) = displacements {
+        if raw_mus.len() != n {
+            return Err(Error::shape(format!(
+                "displacements: {} for N={n}",
+                raw_mus.len()
+            )));
+        }
+        metrics.time("displace", || -> Result<()> {
+            mus.clear();
+            mus.extend(
+                raw_mus
+                    .iter()
+                    .map(|&(re, im)| Complex::new(T::from(re).unwrap(), T::from(im).unwrap())),
+            );
+            // Batched analytic D, batch-last layout (§3.4.1).
+            displacement_fast_batch_into(mus, gamma.d2, dmats, disp)?;
+            apply_displacement(temp, dmats, dmat_t, drow);
+            Ok(())
+        })?;
+        metrics.add(keys::FLOPS, 8 * (n * gamma.d1 * gamma.d2 * gamma.d2) as u64);
+    }
+
+    let dead = metrics.time("measure", || {
+        measurement::measure_into(
+            temp, lambda, thresholds, scaling, threads, env_out, samples, probs,
+        )
+    })?;
+    metrics.add(keys::FLOPS, 8 * (n * gamma.d1 * gamma.d2) as u64);
+    Ok(dead)
 }
 
 /// Apply per-sample fast displacement matrices to the temp tensor in place:
 /// `temp[s, y, :] ← temp[s, y, :] · D(μ_s)`.
-fn apply_displacement<T: Float + std::ops::AddAssign>(temp: &mut Tensor3<T>, mus: &[(f64, f64)]) {
+///
+/// `dmats` is batch-last (`[(j·d + k)·n + s]`), which is ideal for the
+/// builder but strides the innermost consumer loop by `n·d`; each sample's
+/// D is therefore repacked once into `dmat_t` (transposed, `[k][j]`) so
+/// the accumulation streams contiguously — verified against a naive
+/// per-sample oracle in the tests.
+fn apply_displacement<T: Float + std::ops::AddAssign>(
+    temp: &mut Tensor3<T>,
+    dmats: &[Complex<T>],
+    dmat_t: &mut Vec<Complex<T>>,
+    drow: &mut Vec<Complex<T>>,
+) {
     let (n, y, d) = (temp.d0, temp.d1, temp.d2);
-    let mu_c: Vec<Complex<T>> = mus
-        .iter()
-        .map(|&(re, im)| Complex::new(T::from(re).unwrap(), T::from(im).unwrap()))
-        .collect();
-    // Batched analytic D, batch-last layout (§3.4.1).
-    let dmats = displacement_fast_batch(&mu_c, d).expect("d >= 1");
-    let mut row = vec![Complex::<T>::zero(); d];
+    dmat_t.clear();
+    dmat_t.resize(d * d, Complex::zero());
+    drow.clear();
+    drow.resize(d, Complex::zero());
     for s in 0..n {
+        for j in 0..d {
+            for k in 0..d {
+                dmat_t[k * d + j] = dmats[(j * d + k) * n + s];
+            }
+        }
         for yy in 0..y {
             let base = (s * y + yy) * d;
-            row.copy_from_slice(&temp.data[base..base + d]);
+            drow.copy_from_slice(&temp.data[base..base + d]);
             for k in 0..d {
                 let mut acc = Complex::zero();
-                for (j, &r) in row.iter().enumerate() {
-                    acc = acc.mul_add(r, dmats[(j * d + k) * n + s]);
+                let dk = &dmat_t[k * d..(k + 1) * d];
+                for (r, m) in drow.iter().zip(dk) {
+                    acc = acc.mul_add(*r, *m);
                 }
                 temp.data[base + k] = acc;
             }
@@ -124,57 +343,12 @@ impl StepEngine for NativeEngine {
         displacements: Option<&[(f64, f64)]>,
         samples: &mut Vec<i32>,
     ) -> Result<()> {
-        let mut gamma = site.gamma.clone();
-        if self.gamma_f16 {
-            for z in &mut gamma.data {
-                z.re = crate::util::f16::round_f16(z.re as f32) as f64;
-                z.im = crate::util::f16::round_f16(z.im as f32) as f64;
-            }
-        }
-        match self.precision {
-            ComputePrecision::F64 => {
-                let e = envmod::to_f64(env)?;
-                let lambda: Vec<f64> = site.lambda.clone();
-                let out =
-                    self.step_typed(e, &gamma, &lambda, thresholds, displacements, samples)?;
-                *env = envmod::from_f64(&out);
-            }
-            ComputePrecision::F32 | ComputePrecision::Tf32 | ComputePrecision::F16 => {
-                let e = envmod::to_f32(env, self.precision)?;
-                let mut g32 = Tensor3::zeros(gamma.d0, gamma.d1, gamma.d2);
-                for (dst, src) in g32.data.iter_mut().zip(&gamma.data) {
-                    *dst = src.to_c32();
-                }
-                match self.precision {
-                    ComputePrecision::Tf32 => {
-                        for z in &mut g32.data {
-                            z.re = crate::util::f16::round_tf32(z.re);
-                            z.im = crate::util::f16::round_tf32(z.im);
-                        }
-                    }
-                    ComputePrecision::F16 => {
-                        for z in &mut g32.data {
-                            z.re = crate::util::f16::round_f16(z.re);
-                            z.im = crate::util::f16::round_f16(z.im);
-                        }
-                    }
-                    _ => {}
-                }
-                let lambda: Vec<f32> = site.lambda.iter().map(|&l| l as f32).collect();
-                let mut out =
-                    self.step_typed(e, &g32, &lambda, thresholds, displacements, samples)?;
-                if self.precision == ComputePrecision::F16 {
-                    // ComplexHalf result storage: round the collapsed env.
-                    for z in &mut out.data {
-                        z.re = crate::util::f16::round_f16(z.re);
-                        z.im = crate::util::f16::round_f16(z.im);
-                    }
-                }
-                *env = envmod::from_f32(&out);
-            }
-        }
-        self.metrics.add(keys::SAMPLES, thresholds.len() as u64);
-        Ok(())
+        // Compatibility path: one-shot conversion, then the prepared hot
+        // path. Callers stepping one site many times should prepare once
+        // and call `step_prepared` directly.
+        let prepared = PreparedSite::prepare(site, self.prep_key());
+        self.metrics.add(keys::STEP_PREP_CONVERSIONS, 1);
+        self.step_prepared(env, &prepared, thresholds, displacements, samples)
     }
 
     fn name(&self) -> &'static str {
@@ -187,6 +361,7 @@ mod tests {
     use super::*;
     use crate::mps::gbs::GbsSpec;
     use crate::sampler::boundary_env;
+    use crate::tensor::C64;
 
     fn spec(decay: f64) -> GbsSpec {
         GbsSpec {
@@ -354,6 +529,229 @@ mod tests {
         walk(&mut eng, &sp, 16, false);
         assert!(eng.metrics.get(keys::FLOPS) > 0);
         assert_eq!(eng.metrics.get(keys::SAMPLES), 160); // 16 × 10 sites
+        assert_eq!(eng.metrics.get(keys::STEPS), 10);
+        assert_eq!(eng.metrics.get(keys::STEP_PREP_CONVERSIONS), 10);
         assert!(eng.metrics.phase("compute") >= 0.0);
+    }
+
+    // --- prepared / workspace path -------------------------------------
+
+    /// A square site (χ_l = χ_r) so one environment can be stepped against
+    /// the same site repeatedly.
+    fn square_site(chi: usize, d: usize, seed: u64) -> Site {
+        let mut rng = crate::rng::Xoshiro256::seed_from(seed);
+        let mut gamma = Tensor3::zeros(chi, chi, d);
+        for z in &mut gamma.data {
+            *z = C64::new(rng.normal() * 0.3, rng.normal() * 0.3);
+        }
+        Site {
+            lambda: vec![1.0; chi],
+            gamma,
+        }
+    }
+
+    fn filled_env(n: usize, chi: usize, seed: u64) -> SplitBuf {
+        let mut rng = crate::rng::Xoshiro256::seed_from(seed);
+        let mut env = SplitBuf::zeros(&[n, chi]);
+        for v in env.re.iter_mut().chain(env.im.iter_mut()) {
+            *v = rng.normal() as f32;
+        }
+        env
+    }
+
+    #[test]
+    fn step_and_step_prepared_sample_identically() {
+        for (compute, gamma_f16) in [
+            (ComputePrecision::F64, false),
+            (ComputePrecision::F64, true),
+            (ComputePrecision::F32, false),
+            (ComputePrecision::Tf32, false),
+            (ComputePrecision::F16, true),
+        ] {
+            let site = square_site(9, 3, 5);
+            let th: Vec<f32> = (0..32).map(|i| (i as f32 + 0.5) / 32.0).collect();
+            let mus: Vec<(f64, f64)> = (0..32).map(|i| (0.01 * i as f64, -0.02)).collect();
+
+            let mut a = NativeEngine::new(compute, ScalingMode::PerSample, 1);
+            a.gamma_f16 = gamma_f16;
+            let mut env_a = filled_env(32, 9, 6);
+            let mut s_a = Vec::new();
+            a.step(&mut env_a, &site, &th, Some(&mus), &mut s_a).unwrap();
+
+            let mut b = NativeEngine::new(compute, ScalingMode::PerSample, 1);
+            b.gamma_f16 = gamma_f16;
+            let prep = PreparedSite::prepare(&site, b.prep_key());
+            let mut env_b = filled_env(32, 9, 6);
+            let mut s_b = Vec::new();
+            b.step_prepared(&mut env_b, &prep, &th, Some(&mus), &mut s_b)
+                .unwrap();
+
+            assert_eq!(s_a, s_b, "{compute:?} outcomes");
+            assert_eq!(env_a, env_b, "{compute:?} environments bit-identical");
+        }
+    }
+
+    #[test]
+    fn prepared_key_mismatch_is_rejected() {
+        let site = square_site(4, 3, 9);
+        let prep = PreparedSite::prepare(
+            &site,
+            PrepKey {
+                compute: ComputePrecision::F64,
+                gamma_f16: false,
+            },
+        );
+        let mut eng = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 1);
+        let mut env = boundary_env(4);
+        let mut s = Vec::new();
+        let err = eng
+            .step_prepared(&mut env, &prep, &[0.5; 4], None, &mut s)
+            .unwrap_err();
+        assert!(err.to_string().contains("does not match engine"), "{err}");
+    }
+
+    #[test]
+    fn threaded_step_matches_single_thread_bit_identically() {
+        // Row-split, bond-split, and row-parallel measure must not move a
+        // single bit relative to the serial engine.
+        let site = square_site(24, 3, 11);
+        let th: Vec<f32> = (0..16).map(|i| (i as f32 + 0.3) / 16.0).collect();
+        let mus: Vec<(f64, f64)> = (0..16).map(|i| (0.02 * i as f64, 0.01)).collect();
+        let run = |threads: usize, split: GemmSplit| {
+            let mut eng = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, threads);
+            eng.split = split;
+            let prep = PreparedSite::prepare(&site, eng.prep_key());
+            let mut env = filled_env(16, 24, 3);
+            let mut s = Vec::new();
+            eng.step_prepared(&mut env, &prep, &th, Some(&mus), &mut s)
+                .unwrap();
+            (env, s)
+        };
+        let (env1, s1) = run(1, GemmSplit::Auto);
+        for threads in [2, 4] {
+            for split in [GemmSplit::Auto, GemmSplit::Rows, GemmSplit::Cols] {
+                let (env_t, s_t) = run(threads, split);
+                assert_eq!(s1, s_t, "outcomes t={threads} {split:?}");
+                assert_eq!(env1, env_t, "env bits t={threads} {split:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn displacement_repack_matches_naive_oracle() {
+        // temp[s, y, :] · D(μ_s) via the repacked batch path vs a naive
+        // per-sample matrix product over `displacement_fast`.
+        let mut rng = crate::rng::Xoshiro256::seed_from(13);
+        let (n, y, d) = (6, 4, 4);
+        let mut temp: Tensor3<f64> = Tensor3::zeros(n, y, d);
+        for z in &mut temp.data {
+            *z = C64::new(rng.normal(), rng.normal());
+        }
+        let mus: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.normal() * 0.3, rng.normal() * 0.3))
+            .collect();
+        let naive = {
+            let mut out = temp.clone();
+            for s in 0..n {
+                let dm =
+                    crate::linalg::displacement_fast(C64::new(mus[s].0, mus[s].1), d, false)
+                        .unwrap();
+                for yy in 0..y {
+                    let base = (s * y + yy) * d;
+                    let row: Vec<C64> = temp.data[base..base + d].to_vec();
+                    for k in 0..d {
+                        let mut acc = C64::zero();
+                        for (j, r) in row.iter().enumerate() {
+                            acc += *r * dm[(j, k)];
+                        }
+                        out.data[base + k] = acc;
+                    }
+                }
+            }
+            out
+        };
+        let mut got = temp.clone();
+        let mu_c: Vec<C64> = mus.iter().map(|&(re, im)| C64::new(re, im)).collect();
+        let dmats = crate::linalg::displacement_fast_batch(&mu_c, d).unwrap();
+        let mut dmat_t = Vec::new();
+        let mut drow = Vec::new();
+        apply_displacement(&mut got, &dmats, &mut dmat_t, &mut drow);
+        for (g, w) in got.data.iter().zip(&naive.data) {
+            assert!((*g - *w).abs() < 1e-12, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn steady_state_step_is_allocation_free() {
+        // The tentpole contract: after warm-up, a single-threaded
+        // step_prepared performs ZERO heap allocations — no Γ clone, no
+        // re-rounding, no temp/env/displacement buffers. The counting
+        // allocator is process-global and other test threads may allocate
+        // concurrently, so retry until a clean window is observed; a real
+        // per-step allocation would make every window dirty.
+        for compute in [ComputePrecision::F64, ComputePrecision::F32] {
+            let site = square_site(12, 3, 21);
+            let mut eng = NativeEngine::new(compute, ScalingMode::PerSample, 1);
+            let prep = PreparedSite::prepare(&site, eng.prep_key());
+            let th: Vec<f32> = (0..24).map(|i| (i as f32 + 0.5) / 24.0).collect();
+            let mus: Vec<(f64, f64)> = (0..24).map(|i| (0.01 * i as f64, 0.005)).collect();
+            let mut env = filled_env(24, 12, 8);
+            let mut samples = Vec::new();
+            for _ in 0..3 {
+                eng.step_prepared(&mut env, &prep, &th, Some(&mus), &mut samples)
+                    .unwrap();
+            }
+            let grows_after_warmup = eng.metrics.get(keys::STEP_WS_GROWS);
+            let mut clean = false;
+            for _ in 0..128 {
+                let before = crate::util::alloc::allocation_count();
+                eng.step_prepared(&mut env, &prep, &th, Some(&mus), &mut samples)
+                    .unwrap();
+                if crate::util::alloc::allocation_count() == before {
+                    clean = true;
+                    break;
+                }
+            }
+            assert!(clean, "{compute:?}: no allocation-free step observed");
+            assert_eq!(
+                eng.metrics.get(keys::STEP_WS_GROWS),
+                grows_after_warmup,
+                "{compute:?}: workspace grew after warm-up"
+            );
+            let steps = eng.metrics.get(keys::STEPS) as f64;
+            assert_eq!(eng.allocs_per_step(), grows_after_warmup as f64 / steps);
+        }
+    }
+
+    #[test]
+    fn workspace_capacities_stable_across_shapes_below_high_water() {
+        // Walking a chain with varying χ must stop growing once the
+        // largest site has been seen.
+        let sp = spec(0.0);
+        let mps = sp.generate().unwrap();
+        let mut eng = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 1);
+        let preps: Vec<PreparedSite> = mps
+            .sites
+            .iter()
+            .map(|s| PreparedSite::prepare(s, eng.prep_key()))
+            .collect();
+        let n = 32;
+        let walk_once = |eng: &mut NativeEngine| {
+            let mut env = boundary_env(n);
+            let mut s = Vec::new();
+            for (i, p) in preps.iter().enumerate() {
+                let th = sp.thresholds(i, 0, n);
+                eng.step_prepared(&mut env, p, &th, None, &mut s).unwrap();
+            }
+        };
+        walk_once(&mut eng);
+        let grows_first = eng.metrics.get(keys::STEP_WS_GROWS);
+        walk_once(&mut eng);
+        assert_eq!(
+            eng.metrics.get(keys::STEP_WS_GROWS),
+            grows_first,
+            "second walk must not grow the workspace"
+        );
+        assert_eq!(eng.metrics.get(keys::STEPS), 20);
     }
 }

@@ -1,0 +1,362 @@
+//! Prepared-site cache: Γ converted to the engine's compute precision
+//! **once**, not once per micro batch.
+//!
+//! The old hot loop cloned the f64 Γ and re-ran the f16/tf32 rounding
+//! loops on every `step` — at χ = 10⁴ that copy/convert churn dominates
+//! the steady state instead of the GEMM (the failure mode resident,
+//! pre-staged tensors eliminate; cf. "DMRG with Tensor Processing
+//! Units"). A [`PreparedSite`] is the site tensor after the *entire*
+//! precision pipeline of the native engine (optional Γ-f16 storage
+//! rounding, f32 conversion, TF32/FP16 input rounding), built once and
+//! then only borrowed; a [`PreparedStore`] keeps one lazily-filled chain
+//! of them resident per `(store, PrepKey)` under a byte budget, so a
+//! service batch after the first walks the chain with zero conversions
+//! and zero Γ I/O.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::config::ComputePrecision;
+use crate::mps::Site;
+use crate::tensor::Tensor3;
+use crate::util::f16;
+
+/// Identity of a precision pipeline: two sites prepared under equal keys
+/// are interchangeable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrepKey {
+    pub compute: ComputePrecision,
+    /// Round Γ through binary16 before compute (§3.3.2 storage modelling).
+    pub gamma_f16: bool,
+}
+
+/// The converted Γ, in the representation the engine contracts with.
+#[derive(Debug, Clone)]
+pub enum PreparedGamma {
+    /// `ComputePrecision::F64` (post Γ-f16 rounding when enabled).
+    F64(Tensor3<f64>),
+    /// `F32` / `Tf32` / `F16` — f32 storage with the input rounding of the
+    /// precision already applied.
+    F32(Tensor3<f32>),
+}
+
+/// A site after one-time precision conversion. Steady-state steps borrow
+/// it; nothing in here is cloned or re-rounded again.
+#[derive(Debug, Clone)]
+pub struct PreparedSite {
+    pub key: PrepKey,
+    pub gamma: PreparedGamma,
+    /// Λ in the compute precision (exactly one of these is non-empty).
+    pub lambda64: Vec<f64>,
+    pub lambda32: Vec<f32>,
+}
+
+impl PreparedSite {
+    /// Run the native engine's exact conversion pipeline once. The
+    /// sequence (f64 Γ-f16 rounding → f32 conversion → TF32/FP16 input
+    /// rounding) replicates the old per-step loops bit for bit, so a
+    /// prepared step samples identical outcomes.
+    pub fn prepare(site: &Site, key: PrepKey) -> PreparedSite {
+        // Unconditional f16 rounding in the f64 domain; callers below
+        // guard on `key.gamma_f16` (one idiom for the flag).
+        let round64 = |z: crate::tensor::C64| {
+            crate::tensor::C64::new(
+                f16::round_f16(z.re as f32) as f64,
+                f16::round_f16(z.im as f32) as f64,
+            )
+        };
+        match key.compute {
+            ComputePrecision::F64 => {
+                let mut g = site.gamma.clone();
+                if key.gamma_f16 {
+                    for z in &mut g.data {
+                        *z = round64(*z);
+                    }
+                }
+                PreparedSite {
+                    key,
+                    gamma: PreparedGamma::F64(g),
+                    lambda64: site.lambda.clone(),
+                    lambda32: Vec::new(),
+                }
+            }
+            ComputePrecision::F32 | ComputePrecision::Tf32 | ComputePrecision::F16 => {
+                let mut g32 = Tensor3::zeros(site.gamma.d0, site.gamma.d1, site.gamma.d2);
+                for (dst, src) in g32.data.iter_mut().zip(&site.gamma.data) {
+                    let s = if key.gamma_f16 { round64(*src) } else { *src };
+                    *dst = s.to_c32();
+                }
+                match key.compute {
+                    ComputePrecision::Tf32 => {
+                        for z in &mut g32.data {
+                            z.re = f16::round_tf32(z.re);
+                            z.im = f16::round_tf32(z.im);
+                        }
+                    }
+                    ComputePrecision::F16 => {
+                        for z in &mut g32.data {
+                            z.re = f16::round_f16(z.re);
+                            z.im = f16::round_f16(z.im);
+                        }
+                    }
+                    _ => {}
+                }
+                PreparedSite {
+                    key,
+                    gamma: PreparedGamma::F32(g32),
+                    lambda64: Vec::new(),
+                    lambda32: site.lambda.iter().map(|&l| l as f32).collect(),
+                }
+            }
+        }
+    }
+
+    pub fn chi_l(&self) -> usize {
+        match &self.gamma {
+            PreparedGamma::F64(g) => g.d0,
+            PreparedGamma::F32(g) => g.d0,
+        }
+    }
+
+    pub fn chi_r(&self) -> usize {
+        match &self.gamma {
+            PreparedGamma::F64(g) => g.d1,
+            PreparedGamma::F32(g) => g.d1,
+        }
+    }
+
+    pub fn phys_d(&self) -> usize {
+        match &self.gamma {
+            PreparedGamma::F64(g) => g.d2,
+            PreparedGamma::F32(g) => g.d2,
+        }
+    }
+
+    /// Resident heap bytes (budget accounting in [`PreparedStore`]).
+    pub fn bytes(&self) -> u64 {
+        let g = match &self.gamma {
+            PreparedGamma::F64(g) => g.len() * 16,
+            PreparedGamma::F32(g) => g.len() * 8,
+        };
+        (g + self.lambda64.len() * 8 + self.lambda32.len() * 4) as u64
+    }
+}
+
+/// A lazily-filled chain of prepared sites for one `(store, PrepKey)` —
+/// the residency layer the `StoreCache` hands to service workers. Sites
+/// are prepared on first touch and kept while the byte budget allows;
+/// over budget, `site()` still returns a (transient) prepared site, so
+/// correctness never depends on residency.
+pub struct PreparedStore {
+    key: PrepKey,
+    sites: Vec<OnceLock<Arc<PreparedSite>>>,
+    budget_bytes: u64,
+    resident_bytes: AtomicU64,
+    /// One-time conversions performed (`step_prep_conversions`).
+    pub conversions: AtomicU64,
+    /// Lookups served from an already-resident site (`step_prep_hits`).
+    pub hits: AtomicU64,
+}
+
+impl PreparedStore {
+    pub fn new(num_sites: usize, key: PrepKey, budget_bytes: u64) -> PreparedStore {
+        PreparedStore {
+            key,
+            sites: (0..num_sites).map(|_| OnceLock::new()).collect(),
+            budget_bytes,
+            resident_bytes: AtomicU64::new(0),
+            conversions: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn key(&self) -> PrepKey {
+        self.key
+    }
+
+    pub fn num_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// True when site `i` is already resident — callers that can skip
+    /// loading the raw Γ (and its disk I/O) entirely check this first.
+    pub fn is_resident(&self, i: usize) -> bool {
+        self.sites.get(i).map(|c| c.get().is_some()).unwrap_or(false)
+    }
+
+    /// Get-or-prepare site `i` from `raw`. Returns the shared resident
+    /// site when cached (second tuple element `false`), otherwise
+    /// prepares (`true`; caching the result if the budget allows) — the
+    /// flag lets callers account conversion work exactly, even when a
+    /// concurrent preparer published between their residency check and
+    /// this call.
+    pub fn site(&self, i: usize, raw: &Site) -> (Arc<PreparedSite>, bool) {
+        if let Some(p) = self.sites[i].get() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (p.clone(), false);
+        }
+        let p = Arc::new(PreparedSite::prepare(raw, self.key));
+        self.conversions.fetch_add(1, Ordering::Relaxed);
+        let b = p.bytes();
+        // Reserve the bytes atomically BEFORE publishing, so concurrent
+        // preparers cannot each pass a stale load and overshoot the
+        // budget; a lost set race rolls its reservation back.
+        let reserved = self
+            .resident_bytes
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                (cur + b <= self.budget_bytes).then_some(cur + b)
+            })
+            .is_ok();
+        if reserved && self.sites[i].set(p.clone()).is_err() {
+            self.resident_bytes.fetch_sub(b, Ordering::Relaxed);
+        }
+        // A concurrent preparer may have won the set; either Arc is a
+        // bit-identical conversion of the same raw site.
+        (p, true)
+    }
+
+    /// Resident site `i` without raw data (only when already prepared).
+    pub fn resident(&self, i: usize) -> Option<Arc<PreparedSite>> {
+        let p = self.sites.get(i)?.get()?.clone();
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(p)
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes.load(Ordering::Relaxed)
+    }
+
+    /// True once every site of the chain is resident — the walk can run
+    /// with zero store I/O.
+    pub fn fully_resident(&self) -> bool {
+        self.sites.iter().all(|c| c.get().is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mps::gbs::GbsSpec;
+
+    fn spec() -> GbsSpec {
+        GbsSpec {
+            name: "prep".into(),
+            m: 5,
+            d: 3,
+            chi_cap: 8,
+            asp: 3.0,
+            decay_k: 0.0,
+            displacement_sigma: 0.0,
+            branch_skew: 0.0,
+            seed: 31,
+            dynamic_chi: false,
+            step_ratio_override: None,
+        }
+    }
+
+    #[test]
+    fn f64_preparation_is_the_identity_without_rounding() {
+        let mps = spec().generate().unwrap();
+        let site = &mps.sites[1];
+        let p = PreparedSite::prepare(
+            site,
+            PrepKey {
+                compute: ComputePrecision::F64,
+                gamma_f16: false,
+            },
+        );
+        match &p.gamma {
+            PreparedGamma::F64(g) => assert_eq!(g.data, site.gamma.data),
+            _ => panic!("wrong precision arm"),
+        }
+        assert_eq!(p.lambda64, site.lambda);
+        assert_eq!((p.chi_l(), p.chi_r(), p.phys_d()), (site.chi_l(), site.chi_r(), 3));
+    }
+
+    #[test]
+    fn rounding_pipeline_matches_the_per_step_loops() {
+        // Replicate the old NativeEngine::step conversion by hand and
+        // compare bit for bit.
+        let mps = spec().generate().unwrap();
+        let site = &mps.sites[2];
+        for compute in [
+            ComputePrecision::F32,
+            ComputePrecision::Tf32,
+            ComputePrecision::F16,
+        ] {
+            for gamma_f16 in [false, true] {
+                let p = PreparedSite::prepare(site, PrepKey { compute, gamma_f16 });
+                let mut gamma = site.gamma.clone();
+                if gamma_f16 {
+                    for z in &mut gamma.data {
+                        z.re = f16::round_f16(z.re as f32) as f64;
+                        z.im = f16::round_f16(z.im as f32) as f64;
+                    }
+                }
+                let mut want = Tensor3::zeros(gamma.d0, gamma.d1, gamma.d2);
+                for (dst, src) in want.data.iter_mut().zip(&gamma.data) {
+                    *dst = src.to_c32();
+                }
+                match compute {
+                    ComputePrecision::Tf32 => {
+                        for z in &mut want.data {
+                            z.re = f16::round_tf32(z.re);
+                            z.im = f16::round_tf32(z.im);
+                        }
+                    }
+                    ComputePrecision::F16 => {
+                        for z in &mut want.data {
+                            z.re = f16::round_f16(z.re);
+                            z.im = f16::round_f16(z.im);
+                        }
+                    }
+                    _ => {}
+                }
+                match &p.gamma {
+                    PreparedGamma::F32(g) => {
+                        assert_eq!(g.data, want.data, "{compute:?} gamma_f16={gamma_f16}")
+                    }
+                    _ => panic!("wrong precision arm"),
+                }
+                assert!(p.lambda64.is_empty());
+                assert_eq!(p.lambda32.len(), site.lambda.len());
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_store_caches_and_respects_budget() {
+        let mps = spec().generate().unwrap();
+        let key = PrepKey {
+            compute: ComputePrecision::F32,
+            gamma_f16: false,
+        };
+        // Generous budget: everything resident, second pass all hits.
+        let ps = PreparedStore::new(mps.sites.len(), key, u64::MAX);
+        for (i, s) in mps.sites.iter().enumerate() {
+            assert!(!ps.is_resident(i));
+            let (_, converted) = ps.site(i, s);
+            assert!(converted, "cold site must convert");
+            assert!(ps.is_resident(i));
+        }
+        assert!(ps.fully_resident());
+        assert_eq!(ps.conversions.load(Ordering::Relaxed), 5);
+        let (a, ca) = ps.site(1, &mps.sites[1]);
+        let (b, cb) = ps.site(1, &mps.sites[1]);
+        assert!(Arc::ptr_eq(&a, &b), "resident site is shared");
+        assert!(!ca && !cb, "resident lookups must not report conversions");
+        assert_eq!(ps.hits.load(Ordering::Relaxed), 2);
+        assert!(ps.resident_bytes() > 0);
+        assert!(ps.resident(0).is_some());
+
+        // Tiny budget: nothing cached, every call converts, still correct.
+        let tiny = PreparedStore::new(mps.sites.len(), key, 1);
+        assert!(tiny.site(0, &mps.sites[0]).1);
+        assert!(tiny.site(0, &mps.sites[0]).1, "uncached call converts again");
+        assert!(!tiny.is_resident(0));
+        assert_eq!(tiny.conversions.load(Ordering::Relaxed), 2);
+        assert_eq!(tiny.resident_bytes(), 0);
+        assert!(tiny.resident(0).is_none());
+        assert!(!tiny.fully_resident());
+    }
+}

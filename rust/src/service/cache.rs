@@ -18,6 +18,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::io::{manifest_hash_at, DiskModel, GammaStore};
 use crate::metrics::{keys, Metrics};
+use crate::sampler::{PrepKey, PreparedStore};
 use crate::service::JobSpec;
 use crate::util::error::{Error, Result};
 
@@ -32,6 +33,19 @@ struct CacheInner {
     tick: u64,
 }
 
+struct PrepEntry {
+    hash: u64,
+    key: PrepKey,
+    prep: Arc<PreparedStore>,
+    last_use: u64,
+}
+
+#[derive(Default)]
+struct PrepInner {
+    entries: Vec<PrepEntry>,
+    tick: u64,
+}
+
 /// See module docs.
 pub struct StoreCache {
     inner: Mutex<CacheInner>,
@@ -43,6 +57,17 @@ pub struct StoreCache {
     /// LRU entries, registrations are never evicted — they are paths, not
     /// open stores — so a key stays resolvable after its entry ages out.
     registry: Mutex<BTreeMap<u64, PathBuf>>,
+    /// Resident prepared-Γ chains, keyed by `(manifest hash, PrepKey)` —
+    /// the precision-conversion amortization on top of the store LRU.
+    /// Bounded by [`Self::prep_capacity`], NOT the store capacity: one
+    /// store can legitimately hold several precision variants at once,
+    /// and sharing the store bound would make distinct `(store,
+    /// precision)` pairs evict each other every batch (silently
+    /// re-converting whole stores).
+    prepared: Mutex<PrepInner>,
+    /// Entry bound of `prepared`: store capacity × the number of
+    /// plausible precision variants per store.
+    prep_capacity: usize,
     /// Shared bandwidth model handed to every prefetcher the service runs.
     pub disk: Arc<DiskModel>,
 }
@@ -58,8 +83,68 @@ impl StoreCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             registry: Mutex::new(BTreeMap::new()),
+            prepared: Mutex::new(PrepInner::default()),
+            // The full PrepKey space per store: four compute precisions ×
+            // the Γ-f16 toggle — so no mix of concurrent variants of one
+            // store can thrash a live chain.
+            prep_capacity: capacity.max(1) * 8,
             disk,
         }
+    }
+
+    /// Get-or-create the resident prepared chain for `(hash, key)`. The
+    /// chain itself fills lazily (sites are converted on first touch, up
+    /// to `budget_bytes`); entries are LRU-bounded by `prep_capacity`.
+    /// On a hit, `num_sites`/`budget_bytes` are IGNORED — a chain keeps
+    /// the parameters it was created with (all service workers share one
+    /// `ServiceConfig`, so they cannot disagree within a process).
+    pub fn prepared(
+        &self,
+        hash: u64,
+        num_sites: usize,
+        key: PrepKey,
+        budget_bytes: u64,
+    ) -> Arc<PreparedStore> {
+        let mut g = self.prepared.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g
+            .entries
+            .iter_mut()
+            .find(|e| e.hash == hash && e.key == key)
+        {
+            e.last_use = tick;
+            return e.prep.clone();
+        }
+        let prep = Arc::new(PreparedStore::new(num_sites, key, budget_bytes));
+        if g.entries.len() >= self.prep_capacity {
+            let lru = g
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+                .expect("prep cache non-empty at capacity");
+            g.entries.swap_remove(lru);
+        }
+        g.entries.push(PrepEntry {
+            hash,
+            key,
+            prep: prep.clone(),
+            last_use: tick,
+        });
+        prep
+    }
+
+    /// Total bytes of resident prepared tensors across cached chains.
+    pub fn prepared_bytes(&self) -> u64 {
+        self.prepared
+            .lock()
+            .unwrap()
+            .entries
+            .iter()
+            .map(|e| e.prep.resident_bytes())
+            .sum()
     }
 
     /// Open-or-reuse the store at `dir`. Returns the shared handle and
@@ -363,6 +448,54 @@ mod tests {
         for d in [d1, d2] {
             std::fs::remove_dir_all(&d).unwrap();
         }
+    }
+
+    #[test]
+    fn prepared_chains_shared_per_hash_and_key() {
+        use crate::config::ComputePrecision;
+        let dir = make_store("prep", 8);
+        let c = StoreCache::new(1, DiskModel::unlimited());
+        let (store, _) = c.get(&dir).unwrap();
+        let hash = store.manifest_hash().unwrap();
+        let key_for = |compute, gamma_f16| PrepKey { compute, gamma_f16 };
+        let k32 = key_for(ComputePrecision::F32, false);
+        let a = c.prepared(hash, store.num_sites(), k32, u64::MAX);
+        let b = c.prepared(hash, store.num_sites(), k32, u64::MAX);
+        assert!(Arc::ptr_eq(&a, &b), "same (hash, key) shares a chain");
+        let k64 = key_for(ComputePrecision::F64, false);
+        let d = c.prepared(hash, store.num_sites(), k64, u64::MAX);
+        assert!(!Arc::ptr_eq(&a, &d), "different precision gets its own chain");
+        assert_eq!(c.prepared_bytes(), 0, "chains fill lazily");
+        let site = store.load_site(0).unwrap();
+        let _ = a.site(0, &site);
+        assert!(c.prepared_bytes() > 0);
+        // The prep LRU holds 8× the store capacity — the full PrepKey
+        // space (4 precisions × the Γ-f16 toggle) — so EVERY variant of
+        // one store coexists without thrash; only a competing store's
+        // chain evicts the least-recently-used one.
+        let k32t = key_for(ComputePrecision::F32, true);
+        let oldest = c.prepared(hash, store.num_sites(), k32t, u64::MAX);
+        for compute in [
+            ComputePrecision::F32,
+            ComputePrecision::F64,
+            ComputePrecision::Tf32,
+            ComputePrecision::F16,
+        ] {
+            for gamma_f16 in [false, true] {
+                if key_for(compute, gamma_f16) != k32t {
+                    c.prepared(hash, store.num_sites(), key_for(compute, gamma_f16), u64::MAX);
+                }
+            }
+        }
+        let a_again = c.prepared(hash, store.num_sites(), k32, u64::MAX);
+        assert!(Arc::ptr_eq(&a, &a_again), "all 8 variants coexist");
+        let dir2 = make_store("prep2", 2);
+        let hash2 = crate::io::manifest_hash_at(&dir2).unwrap();
+        c.prepared(hash2, 8, k32, u64::MAX);
+        let rebuilt = c.prepared(hash, store.num_sites(), k32t, u64::MAX);
+        assert!(!Arc::ptr_eq(&oldest, &rebuilt), "LRU chain evicted past capacity");
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&dir2).unwrap();
     }
 
     #[test]

@@ -75,10 +75,11 @@ impl Service {
                 let dispatch = dispatch.clone();
                 let queue = queue.clone();
                 let cfg = cfg.clone();
+                let cache = cache.clone();
                 let disk = disk.clone();
                 let metrics = metrics.clone();
                 std::thread::spawn(move || {
-                    worker::worker_loop(dispatch, queue, cfg, disk, metrics)
+                    worker::worker_loop(dispatch, queue, cfg, cache, disk, metrics)
                 })
             })
             .collect();
@@ -157,6 +158,10 @@ impl Service {
             ("latency", self.queue.latency_json()),
             ("cache_hit_rate", Json::Num(hit_rate)),
             ("batch_occupancy", Json::Num(occupancy)),
+            (
+                "prep_resident_bytes",
+                Json::Num(self.cache.prepared_bytes() as f64),
+            ),
         ])
     }
 

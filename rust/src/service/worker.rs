@@ -14,13 +14,14 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::batcher::Batch;
+use super::cache::StoreCache;
 use super::queue::JobQueue;
 use crate::config::{ComputePrecision, EngineKind, RunConfig, ScalingMode, ServiceConfig};
 use crate::coordinator::{env_rows, env_store_rows, EngineBox};
 use crate::io::{DiskModel, Prefetcher};
 use crate::metrics::{keys, Metrics};
 use crate::sampler::sink::SampleSink;
-use crate::sampler::{boundary_env, StepEngine};
+use crate::sampler::{boundary_env, PreparedSite, PreparedStore};
 use crate::tensor::SplitBuf;
 use crate::util::error::{Error, Result};
 
@@ -87,6 +88,7 @@ pub(crate) fn worker_loop(
     dispatch: Arc<Dispatch>,
     queue: Arc<JobQueue>,
     cfg: ServiceConfig,
+    cache: Arc<StoreCache>,
     disk: Arc<DiskModel>,
     service_metrics: Arc<Mutex<Metrics>>,
 ) {
@@ -104,7 +106,19 @@ pub(crate) fn worker_loop(
                 continue;
             }
         };
-        match run_batch(engine, &batch, &cfg, &disk) {
+        // The residency tier: all batches against one (store, precision)
+        // share a lazily-filled chain of prepared sites, so only the
+        // first walk pays the Γ conversion (and, once fully resident,
+        // later walks skip the store I/O too).
+        let prep = engine.prep_key().map(|k| {
+            cache.prepared(
+                batch.key.store_hash,
+                batch.store.num_sites(),
+                k,
+                cfg.prep_cache_bytes,
+            )
+        });
+        match run_batch(engine, &batch, &cfg, &disk, prep.as_deref()) {
             Ok((mut metrics, sinks)) => {
                 for (a, sink) in batch.assignments.iter().zip(&sinks) {
                     queue.complete_slice(a.job, sink, a.len as u64);
@@ -141,6 +155,7 @@ fn engine_for<'a>(
     rc.compute = key.1;
     rc.scaling = key.2;
     rc.gemm_threads = cfg.gemm_threads;
+    rc.gemm_split = cfg.gemm_split;
     rc.artifacts_dir = cfg.artifacts_dir.clone();
     let e = EngineBox::build(&rc)?;
     engines.push((key, e));
@@ -149,11 +164,17 @@ fn engine_for<'a>(
 
 /// Walk all `M` sites once, stepping every job slice of the batch, and
 /// return the batch metrics plus one sink per assignment (same order).
+///
+/// With a [`PreparedStore`] the walk borrows converted Γ tensors instead
+/// of converting per micro batch, and only the sites not yet resident
+/// are streamed from the store — a partially resident chain saves I/O in
+/// proportion, and a fully resident one performs zero store I/O.
 pub(crate) fn run_batch(
     engine: &mut EngineBox,
     batch: &Batch,
     cfg: &ServiceConfig,
     disk: &Arc<DiskModel>,
+    prep: Option<&PreparedStore>,
 ) -> Result<(Metrics, Vec<SampleSink>)> {
     let store = &batch.store;
     let spec = &store.spec;
@@ -176,17 +197,66 @@ pub(crate) fn run_batch(
         .collect();
     let displaced = spec.displacement_sigma != 0.0;
     let mut env = boundary_env(rows);
+    // Batch-local residency accounting (the chain's own counters are
+    // shared across workers, so deltas there would double-count).
+    let mut prep_hits = 0u64;
+    let mut prep_convs = 0u64;
 
-    let mut pf = Prefetcher::new(store.clone(), disk.clone(), (0..m).collect(), 2);
-    let mut expected_site = 0usize;
-    while let Some(r) = pf.next_site() {
-        let (site_idx, site) = r?;
-        debug_assert_eq!(site_idx, expected_site);
-        expected_site += 1;
-        metrics.add(keys::IO_OPS, 1);
-        metrics.add(keys::IO_BYTES, store.site_bytes(site_idx));
+    // Stream only the sites whose prepared form is NOT yet resident —
+    // I/O savings scale with residency instead of being all-or-nothing,
+    // and a fully resident chain streams nothing. Residency is monotone
+    // within a chain (sites are never evicted from it), so a site
+    // resident when this plan is built is still resident when the walk
+    // reaches it and the prefetch order cannot desynchronize.
+    let stream_order: Vec<usize> = match prep {
+        Some(p) => (0..m).filter(|&i| !p.is_resident(i)).collect(),
+        None => (0..m).collect(),
+    };
+    let mut pf = (!stream_order.is_empty()).then(|| {
+        Prefetcher::new(store.clone(), disk.clone(), stream_order.clone(), 2)
+    });
+    let mut next_streamed = 0usize;
+    let mut samples_buf: Vec<i32> = Vec::new();
+    for site_idx in 0..m {
+        let from_disk =
+            next_streamed < stream_order.len() && stream_order[next_streamed] == site_idx;
+        let (raw_site, psite): (Option<crate::mps::Site>, Option<Arc<PreparedSite>>) =
+            if from_disk {
+                next_streamed += 1;
+                let pf = pf.as_mut().expect("stream order non-empty");
+                let (i, site) = pf
+                    .next_site()
+                    .ok_or_else(|| Error::other("prefetch ended early"))??;
+                debug_assert_eq!(i, site_idx);
+                metrics.add(keys::IO_OPS, 1);
+                metrics.add(keys::IO_BYTES, store.site_bytes(site_idx));
+                let ps = prep.map(|p| {
+                    // `site` reports whether it really converted, so a
+                    // concurrent worker publishing first counts as the
+                    // hit this batch actually experienced.
+                    let (ps, converted) = p.site(site_idx, &site);
+                    if converted {
+                        prep_convs += 1;
+                    } else {
+                        prep_hits += 1;
+                    }
+                    ps
+                });
+                (Some(site), ps)
+            } else {
+                let p = prep.expect("non-streamed site implies a prepared chain");
+                let ps = p.resident(site_idx).ok_or_else(|| {
+                    Error::other(format!("prepared site {site_idx} vanished mid-walk"))
+                })?;
+                prep_hits += 1;
+                (None, Some(ps))
+            };
 
-        let chi_r = site.gamma.d1;
+        let chi_r = psite
+            .as_ref()
+            .map(|p| p.chi_r())
+            .or_else(|| raw_site.as_ref().map(|s| s.gamma.d1))
+            .expect("either raw or prepared site");
         let mut next = SplitBuf::zeros(&[rows, chi_r]);
         let mut row0 = 0usize;
         for (ai, a) in batch.assignments.iter().enumerate() {
@@ -199,13 +269,19 @@ pub(crate) fn run_batch(
                 let th = spec.thresholds(site_idx, a.sample0 + off as u64, take);
                 let mus = displaced
                     .then(|| spec.displacement_draws(site_idx, a.sample0 + off as u64, take));
-                let mut s = Vec::new();
                 let t0 = Instant::now();
-                engine.step(&mut chunk, &site, &th, mus.as_deref(), &mut s)?;
+                engine.step_site(
+                    &mut chunk,
+                    raw_site.as_ref(),
+                    psite.as_deref(),
+                    &th,
+                    mus.as_deref(),
+                    &mut samples_buf,
+                )?;
                 metrics.add_phase("compute", t0.elapsed().as_secs_f64());
                 metrics.add(keys::MICRO_BATCHES, 1);
                 env_store_rows(&mut next, lo, &chunk);
-                site_samples.extend_from_slice(&s);
+                site_samples.extend_from_slice(&samples_buf);
                 off += take;
             }
             sinks[ai].record(site_idx, &site_samples);
@@ -213,14 +289,13 @@ pub(crate) fn run_batch(
         }
         env = next;
     }
-    if expected_site != m {
-        return Err(Error::other(format!(
-            "prefetch delivered {expected_site} of {m} sites"
-        )));
+    if let Some(pf) = pf {
+        metrics.add_phase("io_virtual", pf.io_secs);
+        metrics.add_phase("io_stall", pf.stall_secs);
+        pf.finish()?;
     }
-    metrics.add_phase("io_virtual", pf.io_secs);
-    metrics.add_phase("io_stall", pf.stall_secs);
-    pf.finish()?;
+    metrics.add(keys::STEP_PREP_HITS, prep_hits);
+    metrics.add(keys::STEP_PREP_CONVERSIONS, prep_convs);
     metrics.add(keys::SITES, m as u64);
     metrics.add(keys::SAMPLES, rows as u64);
     metrics.add(keys::MACRO_BATCHES, 1);
@@ -292,7 +367,7 @@ mod tests {
         rc.compute = ComputePrecision::F64;
         let mut engine = EngineBox::build(&rc).unwrap();
         let (metrics, sinks) =
-            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited()).unwrap();
+            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited(), None).unwrap();
         let reference = dp_reference(&store, 128, cfg.n2_micro);
         assert_eq!(sinks[0].hist, reference.hist, "service vs coordinator");
         assert_eq!(sinks[0].pair_sums, reference.pair_sums);
@@ -325,7 +400,7 @@ mod tests {
         rc.compute = ComputePrecision::F64;
         let mut engine = EngineBox::build(&rc).unwrap();
         let (_, sinks) =
-            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited()).unwrap();
+            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited(), None).unwrap();
         // The combined histogram equals one 192-sample standalone run
         // (job 2's range [96, 192) continues job 1's [0, 96)).
         let reference = dp_reference(&store, 192, cfg.n2_micro);
@@ -358,11 +433,89 @@ mod tests {
                 }],
                 target: 32,
             };
-            let (m, _) = run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited()).unwrap();
+            let (m, _) =
+                run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited(), None).unwrap();
             assert_eq!(m.get(keys::SAMPLES), 32);
             let (em, _) = engine.drain();
             assert!(em.get(keys::FLOPS) > 0, "round {round} engine accounting");
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn warm_batch_walks_resident_tensors_with_zero_io() {
+        let (store, dir) = test_store("resident", 6);
+        let cfg = service_cfg();
+        let key = BatchKey {
+            store_hash: store.manifest_hash().unwrap(),
+            compute: ComputePrecision::F64,
+        };
+        let batch = Batch {
+            key,
+            store: store.clone(),
+            assignments: vec![Assignment { job: 1, sample0: 0, len: 64 }],
+            target: 64,
+        };
+        let mut rc = RunConfig::new(store.spec.clone());
+        rc.compute = ComputePrecision::F64;
+        let mut engine = EngineBox::build(&rc).unwrap();
+        let prep = PreparedStore::new(store.num_sites(), engine.prep_key().unwrap(), u64::MAX);
+
+        // Cold batch: streams Γ, converts every site once.
+        let (m1, s1) =
+            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited(), Some(&prep)).unwrap();
+        assert_eq!(m1.get(keys::IO_OPS), 6);
+        assert_eq!(m1.get(keys::STEP_PREP_CONVERSIONS), 6);
+        assert_eq!(m1.get(keys::STEP_PREP_HITS), 0);
+        assert!(prep.fully_resident());
+
+        // Warm batch: zero store I/O, every site a residency hit, and the
+        // exact same sample stream.
+        let (m2, s2) =
+            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited(), Some(&prep)).unwrap();
+        assert_eq!(m2.get(keys::IO_OPS), 0, "resident walk reads nothing");
+        assert_eq!(m2.get(keys::IO_BYTES), 0);
+        assert_eq!(m2.get(keys::STEP_PREP_HITS), 6);
+        assert_eq!(m2.get(keys::STEP_PREP_CONVERSIONS), 0);
+        assert_eq!(s1[0].hist, s2[0].hist, "residency must not change outcomes");
+        assert_eq!(s1[0].pair_sums, s2[0].pair_sums);
+
+        // And the warm walk matches the plain (unprepared) path.
+        let (_, s3) =
+            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited(), None).unwrap();
+        assert_eq!(s2[0].hist, s3[0].hist);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn partially_resident_chain_streams_only_missing_sites() {
+        let (store, dir) = test_store("partial", 6);
+        let cfg = service_cfg();
+        let key = BatchKey {
+            store_hash: store.manifest_hash().unwrap(),
+            compute: ComputePrecision::F64,
+        };
+        let batch = Batch {
+            key,
+            store: store.clone(),
+            assignments: vec![Assignment { job: 1, sample0: 0, len: 64 }],
+            target: 64,
+        };
+        let mut rc = RunConfig::new(store.spec.clone());
+        rc.compute = ComputePrecision::F64;
+        let mut engine = EngineBox::build(&rc).unwrap();
+        let prep = PreparedStore::new(store.num_sites(), engine.prep_key().unwrap(), u64::MAX);
+        for i in [0usize, 2, 5] {
+            prep.site(i, &store.load_site(i).unwrap());
+        }
+        let (m1, s1) =
+            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited(), Some(&prep)).unwrap();
+        assert_eq!(m1.get(keys::IO_OPS), 3, "only the 3 missing sites stream");
+        assert_eq!(m1.get(keys::STEP_PREP_CONVERSIONS), 3);
+        assert_eq!(m1.get(keys::STEP_PREP_HITS), 3);
+        let (_, s2) =
+            run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited(), None).unwrap();
+        assert_eq!(s1[0].hist, s2[0].hist, "partial residency must not change outcomes");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

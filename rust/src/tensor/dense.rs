@@ -13,12 +13,83 @@ pub struct Mat<T> {
     pub data: Vec<Complex<T>>,
 }
 
+/// Borrowed row-major matrix view — the zero-copy counterpart of [`Mat`].
+///
+/// The hot sampling path views a `Tensor3` Γ as a `(χ_l, χ_r·d)` matrix
+/// without cloning its data ([`Tensor3::as_mat_ref`]); the GEMM kernels
+/// accept views so that reshape costs nothing.
+#[derive(Debug, Clone, Copy)]
+pub struct MatRef<'a, T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [Complex<T>],
+}
+
+impl<'a, T> MatRef<'a, T> {
+    pub fn new(rows: usize, cols: usize, data: &'a [Complex<T>]) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "MatRef::new: {}×{} != {} elements",
+                rows,
+                cols,
+                data.len()
+            )));
+        }
+        Ok(MatRef { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [Complex<T>] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
 impl<T: Float + std::ops::AddAssign> Mat<T> {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat {
             rows,
             cols,
             data: vec![Complex::zero(); rows * cols],
+        }
+    }
+
+    /// Borrowed view of the whole matrix. (Named `view`, not `as_ref`, to
+    /// stay clear of `AsRef`.)
+    #[inline]
+    pub fn view(&self) -> MatRef<'_, T> {
+        MatRef {
+            rows: self.rows,
+            cols: self.cols,
+            data: &self.data,
+        }
+    }
+
+    /// Reshape in place to `(rows, cols)` with every entry zeroed. Only
+    /// grows the backing buffer when capacity is insufficient — the
+    /// workspace-reuse contract of the step engines relies on this being
+    /// allocation-free at steady state.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        let n = rows * cols;
+        self.data.clear();
+        self.data.resize(n, Complex::zero());
+    }
+
+    /// Reshape in place WITHOUT zeroing: entry values are unspecified
+    /// (stale) and the caller must overwrite every one. For hot-path
+    /// consumers that fully rewrite the buffer anyway ([`reset`]'s
+    /// zero-fill would be a wasted full pass there).
+    ///
+    /// [`reset`]: Mat::reset
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        let n = rows * cols;
+        if self.data.len() < n {
+            self.data.resize(n, Complex::zero());
+        } else {
+            self.data.truncate(n);
         }
     }
 
@@ -182,6 +253,28 @@ impl<T: Float + std::ops::AddAssign> Tensor3<T> {
         }
     }
 
+    /// Zero-copy `(d0, d1*d2)` matrix view — how the bond contraction
+    /// consumes a prepared Γ without cloning it.
+    #[inline]
+    pub fn as_mat_ref(&self) -> MatRef<'_, T> {
+        MatRef {
+            rows: self.d0,
+            cols: self.d1 * self.d2,
+            data: &self.data,
+        }
+    }
+
+    /// Reshape in place to `(d0, d1, d2)`, zero-filled; grows the backing
+    /// buffer only when capacity is insufficient (see [`Mat::reset`]).
+    pub fn reset(&mut self, d0: usize, d1: usize, d2: usize) {
+        self.d0 = d0;
+        self.d1 = d1;
+        self.d2 = d2;
+        let n = d0 * d1 * d2;
+        self.data.clear();
+        self.data.resize(n, Complex::zero());
+    }
+
     /// Slice `rows ∈ [lo, hi)` of the first axis (a χ_l shard for tensor
     /// parallelism). Copies.
     pub fn slice_d0(&self, lo: usize, hi: usize) -> Result<Tensor3<T>> {
@@ -292,6 +385,39 @@ mod tests {
         assert_eq!(s1.at(2, 0, 0), C64::new(210.0, 0.0));
         assert!(t.slice_d0(2, 4).is_err());
         assert!(t.slice_d1(3, 2).is_err());
+    }
+
+    #[test]
+    fn mat_ref_views_share_data() {
+        let mut t: Tensor3<f64> = Tensor3::zeros(2, 3, 2);
+        *t.at_mut(1, 2, 1) = C64::new(7.0, -1.0);
+        let v = t.as_mat_ref();
+        assert_eq!((v.rows, v.cols), (2, 6));
+        assert_eq!(v.row(1)[5], C64::new(7.0, -1.0));
+        let m: Mat<f64> = Mat::zeros(2, 2);
+        assert_eq!(m.view().rows, 2);
+        assert!(MatRef::new(2, 2, &t.data).is_err());
+    }
+
+    #[test]
+    fn reset_reuses_capacity() {
+        let mut m: Mat<f64> = Mat::zeros(4, 4);
+        m[(0, 0)] = C64::new(1.0, 0.0);
+        let cap = m.data.capacity();
+        let ptr = m.data.as_ptr();
+        m.reset(2, 3);
+        assert_eq!((m.rows, m.cols, m.data.len()), (2, 3, 6));
+        assert_eq!(m[(0, 0)], C64::zero(), "reset zero-fills");
+        assert_eq!(m.data.capacity(), cap);
+        assert_eq!(m.data.as_ptr(), ptr, "no reallocation when shrinking");
+        m[(0, 0)] = C64::new(2.0, 0.0);
+        m.reshape(1, 4);
+        assert_eq!((m.rows, m.cols, m.data.len()), (1, 4, 4));
+        assert_eq!(m[(0, 0)], C64::new(2.0, 0.0), "reshape keeps stale values");
+        assert_eq!(m.data.as_ptr(), ptr);
+        let mut t: Tensor3<f64> = Tensor3::zeros(2, 2, 2);
+        t.reset(1, 2, 3);
+        assert_eq!((t.d0, t.d1, t.d2, t.data.len()), (1, 2, 3, 6));
     }
 
     #[test]

@@ -15,5 +15,5 @@ mod dense;
 mod split;
 
 pub use complex::{Complex, C32, C64};
-pub use dense::{Mat, Tensor3};
+pub use dense::{Mat, MatRef, Tensor3};
 pub use split::SplitBuf;

@@ -1,0 +1,76 @@
+//! Counting allocator — the proof harness behind the zero-allocation step
+//! contract (docs/PERF.md).
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! allocation with a relaxed atomic. `lib.rs` installs it as the global
+//! allocator **in test builds only**, so tests can assert that a
+//! steady-state `NativeEngine::step_prepared` performs zero heap
+//! allocations after warm-up; release builds keep the plain system
+//! allocator. The counter is process-global — callers must diff
+//! [`allocation_count`] around a single-threaded region to get a
+//! meaningful number.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator plus a global allocation counter.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A realloc that moves (or grows in place) still counts: the hot
+        // path must not grow buffers at steady state either.
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocations since process start (test builds; always 0 deltas in
+/// builds where [`CountingAlloc`] is not the global allocator).
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_observes_heap_activity() {
+        let before = allocation_count();
+        let v: Vec<u64> = Vec::with_capacity(64);
+        std::hint::black_box(&v);
+        let after = allocation_count();
+        assert!(after > before, "allocation not counted ({before}→{after})");
+    }
+
+    #[test]
+    fn counter_is_quiet_for_stack_work() {
+        // Pure arithmetic on the stack must not move the counter (in this
+        // thread; other test threads may allocate concurrently, so allow
+        // the check to retry a few times for a clean window).
+        for _ in 0..16 {
+            let before = allocation_count();
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+            if allocation_count() == before {
+                return;
+            }
+        }
+        panic!("never observed an allocation-free arithmetic window");
+    }
+}

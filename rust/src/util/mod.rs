@@ -1,6 +1,7 @@
 //! Small self-contained utilities that substitute for crates unavailable in
 //! the offline build environment (serde, half, proptest, env_logger).
 
+pub mod alloc;
 pub mod backoff;
 pub mod bench;
 pub mod compress;
