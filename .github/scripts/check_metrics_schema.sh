@@ -1,0 +1,122 @@
+#!/usr/bin/env bash
+# Validate the committed `fastmps metrics --json` fixtures
+# (docs/metrics.fixture*.json) against docs/metrics.schema.json using
+# jq only — no Rust toolchain needed, so this gate runs even where
+# cargo cannot. The fixtures are the documented reply shapes (server +
+# router); if the code changes the shape, the fixture must change with
+# it, and this script keeps the fixture honest against the schema.
+#
+# Enforced rules (see the schema's description):
+#   - required keys present (config, run; run.phases/counters/
+#     achieved_flops) with the declared types;
+#   - run.phases and run.counters values are all numbers;
+#   - every *_secs field is a number, null, or a histogram object —
+#     durations are seconds, never strings or milliseconds;
+#   - each run.hists entry has the full HistogramStats key set, sparse
+#     ascending [index, count] bucket pairs that sum to `count`,
+#     numeric stats when count > 0 and null stats when count == 0,
+#     and min ≤ p50 ≤ p99 ≤ max.
+set -euo pipefail
+cd "$(dirname "$0")/../.."
+
+schema=docs/metrics.schema.json
+if ! jq empty "$schema" 2>/dev/null; then
+  echo "FAIL $schema is not valid JSON" >&2
+  exit 1
+fi
+
+shopt -s nullglob
+files=(docs/metrics.fixture*.json)
+if [ ${#files[@]} -eq 0 ]; then
+  echo "no docs/metrics.fixture*.json files found" >&2
+  exit 1
+fi
+
+status=0
+for f in "${files[@]}"; do
+  if jq -e --slurpfile schema "$schema" '
+    $schema[0] as $s
+    | . as $doc
+    | ($s.required - ($doc | keys)) as $missing
+    | if ($missing | length) > 0
+        then error("missing required keys: " + ($missing | join(", ")))
+      else . end
+    | reduce ($s.properties | to_entries[]) as $p (.;
+        if ($doc | has($p.key) | not) then .
+        else
+          (($doc[$p.key]) | type) as $t
+          | (if ($p.value.type | type) == "array"
+               then $p.value.type
+             else [$p.value.type] end) as $want
+          | if ($want | index($t)) == null
+              then error("key " + $p.key + ": got " + $t
+                         + ", want " + ($want | join("|")))
+            else . end
+        end)
+    | ($s.properties.run.required - ($doc.run | keys)) as $rmissing
+    | if ($rmissing | length) > 0
+        then error("run missing keys: " + ($rmissing | join(", ")))
+      else . end
+    | if ([$doc.run.phases[] | select(type != "number")] | length) > 0
+        then error("run.phases has a non-numeric value")
+      else . end
+    | if ([$doc.run.counters[] | select(type != "number")] | length) > 0
+        then error("run.counters has a non-numeric value")
+      else . end
+    | ([$doc | .. | objects | to_entries[]
+        | select(.key | endswith($s["x-duration-suffix"]))
+        | select((.value | type) as $t
+                 | ($t != "number" and $t != "null" and $t != "object"))
+        | .key]) as $baddur
+    | if ($baddur | length) > 0
+        then error("non-numeric duration fields: " + ($baddur | join(", ")))
+      else . end
+    | reduce (($doc.run.hists // {}) | to_entries[]) as $h (.;
+        $h.value as $v
+        | ($s["x-hist-required"] - ($v | keys)) as $hm
+        | if ($hm | length) > 0
+            then error("hist " + $h.key + " missing: " + ($hm | join(", ")))
+          else . end
+        | if ($v.count | type) != "number"
+            then error("hist " + $h.key + ": count is not a number")
+          else . end
+        | if ([$v.buckets[]
+               | select((type != "array") or (length != 2)
+                        or ((.[0] | type) != "number")
+                        or ((.[1] | type) != "number"))] | length) > 0
+            then error("hist " + $h.key + ": malformed bucket pair")
+          else . end
+        | ([$v.buckets[] | .[1]] | add // 0) as $bsum
+        | if $bsum != $v.count
+            then error("hist " + $h.key + ": bucket counts sum to "
+                       + ($bsum | tostring) + ", count says "
+                       + ($v.count | tostring))
+          else . end
+        | ([$v.buckets[] | .[0]]) as $idx
+        | if ($idx | sort) != $idx
+            then error("hist " + $h.key + ": bucket indices not ascending")
+          else . end
+        | if $v.count == 0
+             and ([$v.min_secs, $v.max_secs, $v.mean_secs,
+                   $v.p50_secs, $v.p99_secs] | any(. != null))
+            then error("hist " + $h.key + ": empty hist must report null stats")
+          else . end
+        | if $v.count > 0
+             and ([$v.min_secs, $v.max_secs, $v.mean_secs,
+                   $v.p50_secs, $v.p99_secs]
+                  | any(type != "number"))
+            then error("hist " + $h.key + ": non-empty hist must report numeric stats")
+          else . end
+        | if $v.count > 0
+             and ($v.min_secs > $v.p50_secs or $v.p50_secs > $v.p99_secs
+                  or $v.p99_secs > $v.max_secs)
+            then error("hist " + $h.key + ": expect min <= p50 <= p99 <= max")
+          else . end)
+  ' "$f" > /dev/null; then
+    echo "ok   $f"
+  else
+    echo "FAIL $f violates $schema" >&2
+    status=1
+  fi
+done
+exit $status

@@ -7,12 +7,17 @@ use crate::util::error::{Error, Result};
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
+    /// Bare arguments after the subcommand (`fastmps trace 7`), in
+    /// order. A positional is only legal where a command reads it via
+    /// [`Args::pos`] — `finish` rejects leftovers like flags.
+    positionals: Vec<String>,
     /// Every occurrence of `--key value`, in order — repeatable flags
     /// (`--backend a --backend b`) keep all values; scalar getters read
     /// the last one, shell-override style.
     values: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
+    pos_consumed: std::cell::Cell<usize>,
 }
 
 impl Args {
@@ -22,11 +27,13 @@ impl Args {
             .next()
             .cloned()
             .ok_or_else(|| Error::config("missing subcommand (try 'fastmps help')"))?;
+        let mut positionals = Vec::new();
         let mut values: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut flags = Vec::new();
         while let Some(a) = it.next() {
             let Some(key) = a.strip_prefix("--") else {
-                return Err(Error::config(format!("unexpected positional '{a}'")));
+                positionals.push(a.clone());
+                continue;
             };
             match it.peek() {
                 Some(v) if !v.starts_with("--") => {
@@ -40,10 +47,20 @@ impl Args {
         }
         Ok(Args {
             command,
+            positionals,
             values,
             flags,
             consumed: Default::default(),
+            pos_consumed: std::cell::Cell::new(0),
         })
+    }
+
+    /// The `i`-th bare argument after the subcommand, if given.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        if i + 1 > self.pos_consumed.get() {
+            self.pos_consumed.set(i + 1);
+        }
+        self.positionals.get(i).map(|s| s.as_str())
     }
 
     pub fn str_opt(&self, key: &str) -> Option<&str> {
@@ -125,6 +142,12 @@ impl Args {
                 return Err(Error::config(format!("unknown flag --{k}")));
             }
         }
+        if self.positionals.len() > self.pos_consumed.get() {
+            return Err(Error::config(format!(
+                "unexpected positional '{}'",
+                self.positionals[self.pos_consumed.get()]
+            )));
+        }
         Ok(())
     }
 }
@@ -175,6 +198,19 @@ mod tests {
     fn negative_numbers_as_values() {
         let a = Args::parse(&argv("x --k 2")).unwrap();
         assert_eq!(a.usize_or("k", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn positionals_read_in_order_and_leftovers_caught() {
+        let a = Args::parse(&argv("trace 7 --connect h:1")).unwrap();
+        assert_eq!(a.pos(0), Some("7"));
+        assert_eq!(a.pos(1), None);
+        assert_eq!(a.req("connect").unwrap(), "h:1");
+        a.finish().unwrap();
+        // An unread positional is a usage error, like an unknown flag.
+        let b = Args::parse(&argv("jobs 7 --connect h:1")).unwrap();
+        let _ = b.req("connect");
+        assert!(b.finish().is_err());
     }
 
     #[test]

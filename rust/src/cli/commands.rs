@@ -48,7 +48,7 @@ COMMANDS:
               [--cache N] [--linger-ms N] [--poll-ms N] [--n2 N]
               [--target-batch N] [--compute C] [--scaling S] [--engine E]
               [--threads N] [--gemm-split auto|rows|cols] [--prep-mb N]
-              [--disk-bw BPS] [--artifacts DIR]
+              [--disk-bw BPS] [--artifacts DIR] [--trace-buf N]
               [--max-seconds S] [--json]
               file only: [--drain]
               tcp only:  [--max-conns N] [--frame-mb N]
@@ -59,7 +59,7 @@ COMMANDS:
               [--probe-ms N] [--degraded-after N] [--down-after N]
               [--retry-budget N] [--backoff-ms N] [--backoff-cap-ms N]
               [--jitter-ms N] [--drain-cap-s N] [--seed N]
-              [--max-conns N] [--frame-mb N]
+              [--max-conns N] [--frame-mb N] [--trace-buf N]
               [--read-timeout-ms N] [--write-timeout-ms N]
               [--max-seconds S] [--json]
   push        Upload a store to a server/router (chunked, content-addressed)
@@ -74,7 +74,14 @@ COMMANDS:
   jobs        List job statuses (job directory or TCP server)
               (--jobs DIR | --connect ADDR) [--json]
   metrics     Fetch live service + net metrics from a TCP server
-              --connect ADDR
+              --connect ADDR [--json]
+              --json emits the full machine-readable document
+              (schema: docs/metrics.schema.json, docs/OBSERVABILITY.md)
+  trace       Replay one job's end-to-end timeline from the flight recorder
+              <job> --connect ADDR [--trace HEX] [--chrome FILE] [--json]
+              Works against a server or a router (router timelines stitch
+              in the owning backend's events). --chrome writes Chrome
+              trace_event JSON for chrome://tracing / Perfetto.
   stop        Gracefully drain and stop a TCP server, print final metrics
               --connect ADDR [--timeout-s S] [--json]
   bench-service  Smoke-benchmark the service path, emit KPI JSON
@@ -101,6 +108,7 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "submit" => cmd_submit(&args),
         "jobs" => cmd_jobs(&args),
         "metrics" => cmd_metrics(&args),
+        "trace" => cmd_trace(&args),
         "stop" => cmd_stop(&args),
         "bench-service" => cmd_bench_service(&args),
         other => Err(Error::config(format!(
@@ -394,6 +402,7 @@ fn service_config_from_args(args: &Args) -> Result<ServiceConfig> {
         prep_cache_bytes: args.u64_or("prep-mb", d.prep_cache_bytes >> 20)? << 20,
         disk_bw: args.f64_opt("disk-bw")?,
         artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
+        trace_buf: args.usize_or("trace-buf", d.trace_buf)?,
         ..d
     })
 }
@@ -502,6 +511,7 @@ fn router_config_from_args(args: &Args) -> Result<RouterConfig> {
         jitter_ms: args.u64_or("jitter-ms", d.jitter_ms)?,
         drain_cap_secs: args.u64_or("drain-cap-s", d.drain_cap_secs)?,
         seed: args.u64_or("seed", d.seed)?,
+        trace_buf: args.usize_or("trace-buf", d.trace_buf)?,
     })
 }
 
@@ -737,9 +747,75 @@ fn cmd_jobs(args: &Args) -> Result<()> {
 
 fn cmd_metrics(args: &Args) -> Result<()> {
     let addr = args.req("connect")?.to_string();
+    let as_json = args.flag("json");
     args.finish()?;
     let metrics = connect(&addr)?.metrics()?;
-    println!("{}", metrics.pretty());
+    if as_json {
+        // The machine-readable document; shape documented in
+        // docs/OBSERVABILITY.md and validated by docs/metrics.schema.json.
+        println!("{}", metrics.pretty());
+        return Ok(());
+    }
+    println!("metrics from {addr}:");
+    let run = metrics.get("run");
+    if let Some(Json::Obj(counters)) = run.and_then(|r| r.get("counters")) {
+        for (k, v) in counters {
+            if let Some(n) = v.as_f64() {
+                println!("  {k:<28} {n}");
+            }
+        }
+    }
+    if let Some(Json::Obj(hists)) = run.and_then(|r| r.get("hists")) {
+        for (k, h) in hists {
+            let g = |key: &str| h.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            println!(
+                "  {k:<28} n={} p50={:.2} ms p99={:.2} ms max={:.2} ms",
+                g("count"),
+                g("p50_secs") * 1e3,
+                g("p99_secs") * 1e3,
+                g("max_secs") * 1e3,
+            );
+        }
+    }
+    println!("  (full document: fastmps metrics --connect {addr} --json)");
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let addr = args.req("connect")?.to_string();
+    let job: u64 = match args.pos(0) {
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::config(format!("trace: '{v}' is not a job id")))?,
+        None => args.u64_or("job", 0)?,
+    };
+    let trace = match args.str_opt("trace") {
+        Some(s) => crate::trace::parse_trace_id(s)
+            .ok_or_else(|| Error::config(format!("--trace: '{s}' is not a 16-hex trace id")))?,
+        None => 0,
+    };
+    if job == 0 && trace == 0 {
+        return Err(Error::config(
+            "trace needs a job id (fastmps trace <job> --connect ADDR) or --trace HEX",
+        ));
+    }
+    let chrome_out = args.str_opt("chrome").map(PathBuf::from);
+    let as_json = args.flag("json");
+    args.finish()?;
+    let reply = connect(&addr)?.trace_events(job, trace)?;
+    if let Some(path) = chrome_out {
+        let j = crate::trace::chrome_trace(&reply);
+        std::fs::write(&path, j.pretty()).map_err(|e| Error::io(path.display(), e))?;
+        eprintln!(
+            "wrote Chrome trace_event JSON to {} (load in chrome://tracing or Perfetto)",
+            path.display()
+        );
+    }
+    if as_json {
+        println!("{}", reply.pretty());
+    } else {
+        print!("{}", crate::trace::render_human(&reply));
+    }
     Ok(())
 }
 
@@ -906,6 +982,25 @@ mod tests {
         .unwrap();
         run_cli(&argv(&format!("jobs --connect {addr}"))).unwrap();
         run_cli(&argv(&format!("metrics --connect {addr}"))).unwrap();
+        run_cli(&argv(&format!("metrics --connect {addr} --json"))).unwrap();
+        // The flight recorder is on by default: the job's timeline
+        // replays in human form and exports as valid Chrome JSON.
+        run_cli(&argv(&format!("trace 1 --connect {addr}"))).unwrap();
+        let chrome = root.join("trace.json");
+        run_cli(&argv(&format!(
+            "trace 1 --connect {addr} --chrome {}",
+            chrome.display()
+        )))
+        .unwrap();
+        let cj = Json::parse(&std::fs::read_to_string(&chrome).unwrap()).unwrap();
+        assert!(
+            !cj.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+            "chrome export should carry the job's events"
+        );
+        assert!(
+            run_cli(&argv(&format!("trace --connect {addr}"))).is_err(),
+            "trace without a job or trace id is a usage error"
+        );
         run_cli(&argv(&format!("stop --connect {addr}"))).unwrap();
         assert!(server.shutdown_requested());
         drop(server);
@@ -951,6 +1046,8 @@ mod tests {
         .unwrap();
         run_cli(&argv(&format!("jobs --connect {addr}"))).unwrap();
         run_cli(&argv(&format!("metrics --connect {addr}"))).unwrap();
+        // Stitched router+backend timeline through the same subcommand.
+        run_cli(&argv(&format!("trace 1 --connect {addr}"))).unwrap();
         run_cli(&argv(&format!("stop --connect {addr}"))).unwrap();
         assert!(router.shutdown_requested());
         drop(router);

@@ -288,6 +288,10 @@ pub struct ServiceConfig {
     /// Simulated disk bandwidth shared by all cached stores' prefetchers.
     pub disk_bw: Option<f64>,
     pub artifacts_dir: PathBuf,
+    /// Capacity (events) of the service's flight-recorder ring
+    /// (`crate::trace`). 0 disables tracing; the default keeps the last
+    /// few thousand events at a fixed ~64 B/event memory cost.
+    pub trace_buf: usize,
 }
 
 impl Default for ServiceConfig {
@@ -310,6 +314,7 @@ impl Default for ServiceConfig {
             prep_cache_bytes: 256 << 20,
             disk_bw: None,
             artifacts_dir: PathBuf::from("artifacts"),
+            trace_buf: crate::trace::DEFAULT_BUF,
         }
     }
 }
@@ -362,6 +367,7 @@ impl ServiceConfig {
             ("scaling", Json::Str(self.scaling.as_str().into())),
             ("gemm_split", Json::Str(self.gemm_split.as_str().into())),
             ("prep_cache_bytes", Json::Num(self.prep_cache_bytes as f64)),
+            ("trace_buf", Json::Num(self.trace_buf as f64)),
         ])
     }
 }
@@ -521,6 +527,9 @@ pub struct RouterConfig {
     pub drain_cap_secs: u64,
     /// Seed of the jitter stream (deterministic tests).
     pub seed: u64,
+    /// Capacity (events) of the router's flight-recorder ring
+    /// (`crate::trace`); 0 disables tracing.
+    pub trace_buf: usize,
 }
 
 impl Default for RouterConfig {
@@ -536,6 +545,7 @@ impl Default for RouterConfig {
             jitter_ms: 10,
             drain_cap_secs: 600,
             seed: 0x5eed,
+            trace_buf: crate::trace::DEFAULT_BUF,
         }
     }
 }
@@ -591,6 +601,7 @@ impl RouterConfig {
             ("backoff_cap_ms", Json::Num(self.backoff_cap_ms as f64)),
             ("jitter_ms", Json::Num(self.jitter_ms as f64)),
             ("drain_cap_secs", Json::Num(self.drain_cap_secs as f64)),
+            ("trace_buf", Json::Num(self.trace_buf as f64)),
         ])
     }
 }

@@ -25,6 +25,10 @@
 //!   gateway (rendezvous hashing on manifest hashes, health-probed
 //!   backends, `Busy`-aware spillover, graceful drain) that fronts a
 //!   fleet of FMPN servers behind `fastmps route`.
+//! - **Trace (`trace`)**: flight-recorder tracing — fixed-capacity ring
+//!   buffers of span events in every component, stitched by trace id
+//!   into end-to-end per-job timelines (`fastmps trace`,
+//!   `docs/OBSERVABILITY.md`).
 
 pub mod cli;
 pub mod comm;
@@ -42,6 +46,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod service;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod validate;
 

@@ -19,6 +19,9 @@ pub struct Metrics {
     pub phases: BTreeMap<String, f64>,
     /// Monotonic counters (flops, io_bytes, comm_bytes, samples, ...).
     pub counters: BTreeMap<String, u64>,
+    /// Log-bucketed duration histograms (queue wait, batch formation,
+    /// net frame RTT, push chunk timings — see [`HistogramStats`]).
+    pub hists: BTreeMap<String, HistogramStats>,
 }
 
 /// Standard counter names.
@@ -111,6 +114,21 @@ pub mod keys {
     /// Proxied pushes that failed mid-stream (backend lost); the client
     /// saw a typed `busy` and can retry against the next-ranked backend.
     pub const ROUTER_PUSH_FAILURES: &str = "router_push_failures";
+
+    // Histogram names (`Metrics::observe`, [`super::HistogramStats`]).
+    /// Admission → first batch assignment, per job.
+    pub const HIST_QUEUE_WAIT: &str = "queue_wait_secs";
+    /// Batch-anchor arrival → dispatch (linger + slicing), per batch.
+    pub const HIST_BATCH_FORM: &str = "batch_form_secs";
+    /// Client-observed control-frame round-trip time (surfaced through
+    /// the router for its backend connections).
+    pub const HIST_NET_RTT: &str = "net_rtt_secs";
+    /// Server-side per-chunk handling time during a store push.
+    pub const HIST_PUSH_CHUNK: &str = "push_chunk_secs";
+
+    /// Peak gauges ([`super::Metrics::set_max`]) that
+    /// [`super::Metrics::merge`] combines with max instead of summing.
+    pub const PEAK_GAUGES: [&str; 2] = [QUEUE_PEAK, NET_CONN_PEAK];
 }
 
 impl Metrics {
@@ -135,12 +153,16 @@ impl Metrics {
     }
 
     /// Raise a gauge-style counter to `v` if it is below it (high-water
-    /// marks like queue depth). Merging two snapshots still *adds* — peak
-    /// gauges should be merged by the caller with `set_max` when that
-    /// matters.
+    /// marks like queue depth). [`Metrics::merge`] combines the known
+    /// peak gauges (`keys::PEAK_GAUGES`) with max, not sum.
     pub fn set_max(&mut self, counter: &str, v: u64) {
-        let e = self.counters.entry(counter.to_string()).or_insert(0);
-        *e = (*e).max(v);
+        // get_mut-first, like `add`: allocation-free after first use.
+        match self.counters.get_mut(counter) {
+            Some(e) => *e = (*e).max(v),
+            None => {
+                self.counters.insert(counter.to_string(), v);
+            }
+        }
     }
 
     pub fn add_phase(&mut self, phase: &str, secs: f64) {
@@ -165,14 +187,46 @@ impl Metrics {
         r
     }
 
-    /// Merge another worker's metrics into this one (phases add — divide by
-    /// worker count for averages if needed by the caller).
+    /// Record one duration into the named log-bucketed histogram.
+    /// get_mut-first like `add` — allocation-free after first use.
+    pub fn observe(&mut self, hist: &str, secs: f64) {
+        match self.hists.get_mut(hist) {
+            Some(h) => h.record(secs),
+            None => {
+                let mut h = HistogramStats::new();
+                h.record(secs);
+                self.hists.insert(hist.to_string(), h);
+            }
+        }
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistogramStats> {
+        self.hists.get(name)
+    }
+
+    /// Merge another worker's metrics into this one. Phases and counters
+    /// add (divide by worker count for averages if needed by the
+    /// caller), histograms merge bucket-wise, and the known peak gauges
+    /// (`keys::PEAK_GAUGES`) combine with max — summing two snapshots'
+    /// high-water marks would fabricate a depth no queue ever reached.
     pub fn merge(&mut self, other: &Metrics) {
         for (k, v) in &other.phases {
             self.add_phase(k, *v);
         }
         for (k, v) in &other.counters {
-            self.add(k, *v);
+            if keys::PEAK_GAUGES.contains(&k.as_str()) {
+                self.set_max(k, *v);
+            } else {
+                self.add(k, *v);
+            }
+        }
+        for (k, h) in &other.hists {
+            match self.hists.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.hists.insert(k.clone(), h.clone());
+                }
+            }
         }
     }
 
@@ -216,11 +270,23 @@ impl Metrics {
                 .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
                 .collect(),
         );
-        Json::obj(vec![
+        let mut pairs = vec![
             ("phases", phases),
             ("counters", counters),
             ("achieved_flops", Json::Num(self.achieved_flops())),
-        ])
+        ];
+        if !self.hists.is_empty() {
+            pairs.push((
+                "hists",
+                Json::Obj(
+                    self.hists
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     /// One-line human summary.
@@ -262,6 +328,137 @@ impl Drop for PhaseTimer<'_> {
     }
 }
 
+/// Number of log₂ buckets in a [`HistogramStats`]. Bucket `i` covers
+/// durations in `[2^(i + HIST_MIN_EXP), 2^(i + 1 + HIST_MIN_EXP))`
+/// seconds; with `HIST_MIN_EXP = -30` bucket 0 starts at ~1 ns and the
+/// last bucket tops out above 2⁴ hours — the full range a sampling
+/// fleet can produce, at ≤ ×2 relative error per bucket.
+pub const HIST_BUCKETS: usize = 44;
+const HIST_MIN_EXP: i32 = -30;
+
+/// Fixed-footprint log-bucketed duration histogram. Unlike
+/// [`LatencyStats`] (a bounded sample window with exact order
+/// statistics over *recent* observations), a histogram never evicts:
+/// counts are exact over the whole lifetime, quantiles are approximate
+/// (≤ ×√2 off, the bucket's geometric midpoint), and two histograms
+/// merge losslessly by adding buckets — which is what fleet-level
+/// aggregation (router + N backends) needs.
+#[derive(Debug, Clone)]
+pub struct HistogramStats {
+    buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for HistogramStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistogramStats {
+    pub fn new() -> HistogramStats {
+        HistogramStats {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        if !(secs > 0.0) {
+            return 0;
+        }
+        let idx = secs.log2().floor() as i32 - HIST_MIN_EXP;
+        idx.clamp(0, HIST_BUCKETS as i32 - 1) as usize
+    }
+
+    /// Lower bound (seconds) of bucket `i`.
+    pub fn bucket_floor(i: usize) -> f64 {
+        (2.0f64).powi(i as i32 + HIST_MIN_EXP)
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        let s = if secs.is_finite() { secs.max(0.0) } else { 0.0 };
+        self.buckets[Self::bucket_of(s)] += 1;
+        self.count += 1;
+        self.sum += s;
+        self.min = self.min.min(s);
+        self.max = self.max.max(s);
+    }
+
+    pub fn merge(&mut self, other: &HistogramStats) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Approximate nearest-rank quantile: the geometric midpoint of the
+    /// bucket holding the target rank, clamped to the observed min/max.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                let mid = Self::bucket_floor(i) * std::f64::consts::SQRT_2;
+                return Some(mid.clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.sum / self.count as f64)
+        }
+    }
+
+    /// Schema (docs/metrics.schema.json): `count`, `sum_secs`,
+    /// `min_secs`/`max_secs`/`mean_secs`, `p50_secs`/`p99_secs`, and a
+    /// sparse `buckets` array of `[index, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let num_or_null = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        let buckets = Json::Arr(
+            self.buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| **n > 0)
+                .map(|(i, n)| Json::Arr(vec![Json::Num(i as f64), Json::Num(*n as f64)]))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum_secs", Json::Num(self.sum)),
+            (
+                "min_secs",
+                num_or_null((self.count > 0).then_some(self.min)),
+            ),
+            (
+                "max_secs",
+                num_or_null((self.count > 0).then_some(self.max)),
+            ),
+            ("mean_secs", num_or_null(self.mean())),
+            ("p50_secs", num_or_null(self.quantile(0.5))),
+            ("p99_secs", num_or_null(self.quantile(0.99))),
+            ("buckets", buckets),
+        ])
+    }
+}
+
 /// Streaming latency recorder for the service layer: keeps up to `cap`
 /// samples (ring overwrite once full, so long-running services track the
 /// *recent* distribution) and reports order statistics. p50/p99 of job
@@ -297,16 +494,37 @@ impl LatencyStats {
     }
 
     /// Nearest-rank quantile over the retained window; `q` in [0, 1].
+    /// Clones + sorts the window — for several quantiles at once use
+    /// [`LatencyStats::snapshot`], which sorts a single time.
     pub fn quantile(&self, q: f64) -> Option<f64> {
         if self.samples.is_empty() {
             return None;
         }
         let mut xs = self.samples.clone();
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        let idx = ((q.clamp(0.0, 1.0) * xs.len() as f64).ceil() as usize)
+        Some(xs[Self::rank(q, xs.len())])
+    }
+
+    fn rank(q: f64, n: usize) -> usize {
+        ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize)
             .saturating_sub(1)
-            .min(xs.len() - 1);
-        Some(xs[idx])
+            .min(n - 1)
+    }
+
+    /// All exported order statistics from **one** sort of the window
+    /// (`to_json` used to sort three times for p50 + p99 + max).
+    pub fn snapshot(&self) -> Option<LatencySnapshot> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        Some(LatencySnapshot {
+            count: self.count,
+            p50: xs[Self::rank(0.5, xs.len())],
+            p99: xs[Self::rank(0.99, xs.len())],
+            max: xs[xs.len() - 1],
+        })
     }
 
     pub fn p50(&self) -> Option<f64> {
@@ -327,14 +545,26 @@ impl LatencyStats {
     }
 
     pub fn to_json(&self) -> Json {
-        let num_or_null = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        let snap = self.snapshot();
+        let pick = |f: fn(&LatencySnapshot) -> f64| {
+            snap.as_ref().map(|s| Json::Num(f(s))).unwrap_or(Json::Null)
+        };
         Json::obj(vec![
             ("count", Json::Num(self.count as f64)),
-            ("p50_secs", num_or_null(self.p50())),
-            ("p99_secs", num_or_null(self.p99())),
-            ("max_secs", num_or_null(self.quantile(1.0))),
+            ("p50_secs", pick(|s| s.p50)),
+            ("p99_secs", pick(|s| s.p99)),
+            ("max_secs", pick(|s| s.max)),
         ])
     }
+}
+
+/// Order statistics of a [`LatencyStats`] window, from a single sort.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
 }
 
 #[cfg(test)]
@@ -423,6 +653,133 @@ mod tests {
         assert_eq!(a.get(keys::SAMPLES), 15);
         assert_eq!(a.phase("compute"), 3.0);
         assert_eq!(a.phase("comm"), 0.5);
+    }
+
+    #[test]
+    fn merge_combines_peak_gauges_with_max() {
+        // Regression: summing two snapshots' high-water marks fabricated
+        // a queue depth no queue ever reached.
+        let mut a = Metrics::new();
+        a.set_max(keys::QUEUE_PEAK, 7);
+        a.set_max(keys::NET_CONN_PEAK, 2);
+        a.add(keys::SAMPLES, 10);
+        let mut b = Metrics::new();
+        b.set_max(keys::QUEUE_PEAK, 4);
+        b.set_max(keys::NET_CONN_PEAK, 5);
+        b.add(keys::SAMPLES, 1);
+        a.merge(&b);
+        assert_eq!(a.get(keys::QUEUE_PEAK), 7, "max, not 11");
+        assert_eq!(a.get(keys::NET_CONN_PEAK), 5, "max, not 7");
+        assert_eq!(a.get(keys::SAMPLES), 11, "plain counters still sum");
+        // A peak only present on one side survives the merge.
+        let mut c = Metrics::new();
+        c.merge(&a);
+        assert_eq!(c.get(keys::QUEUE_PEAK), 7);
+    }
+
+    #[test]
+    fn set_max_is_allocation_free_after_first_use() {
+        let mut m = Metrics::new();
+        m.set_max(keys::QUEUE_PEAK, 1);
+        let mut clean = false;
+        for _ in 0..128 {
+            let before = crate::util::alloc::allocation_count();
+            m.set_max(keys::QUEUE_PEAK, 2);
+            if crate::util::alloc::allocation_count() == before {
+                clean = true;
+                break;
+            }
+        }
+        assert!(clean, "set_max allocated on a warm key");
+    }
+
+    #[test]
+    fn latency_snapshot_matches_triple_sort() {
+        let mut l = LatencyStats::new(256);
+        let mut x = 7u64;
+        for _ in 0..200 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            l.record((x % 1000) as f64 / 10.0);
+        }
+        let s = l.snapshot().unwrap();
+        assert_eq!(Some(s.p50), l.p50());
+        assert_eq!(Some(s.p99), l.p99());
+        assert_eq!(Some(s.max), l.quantile(1.0));
+        assert_eq!(s.count, l.count);
+        assert_eq!(LatencyStats::new(4).snapshot(), None);
+    }
+
+    #[test]
+    fn histogram_records_merges_and_quantiles() {
+        let mut h = HistogramStats::new();
+        assert_eq!(h.quantile(0.5), None);
+        for _ in 0..90 {
+            h.record(0.001); // 1 ms
+        }
+        for _ in 0..10 {
+            h.record(1.0); // 1 s
+        }
+        assert_eq!(h.count, 100);
+        let p50 = h.quantile(0.5).unwrap();
+        assert!((0.0005..0.002).contains(&p50), "p50 in the 1 ms bucket: {p50}");
+        let p99 = h.quantile(0.99).unwrap();
+        assert!((0.5..2.0).contains(&p99), "p99 in the 1 s bucket: {p99}");
+        assert_eq!(h.max, 1.0);
+        assert_eq!(h.min, 0.001);
+
+        let mut other = HistogramStats::new();
+        other.record(10.0);
+        h.merge(&other);
+        assert_eq!(h.count, 101);
+        assert_eq!(h.max, 10.0);
+        assert!((h.sum - (90.0 * 0.001 + 10.0 + 10.0)).abs() < 1e-9);
+
+        // Out-of-range and degenerate values land in the edge buckets
+        // instead of panicking.
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::INFINITY);
+        h.record(1e12);
+        assert_eq!(h.count, 105);
+        assert_eq!(h.min, 0.0);
+    }
+
+    #[test]
+    fn histogram_json_shape() {
+        let mut h = HistogramStats::new();
+        h.record(0.5);
+        h.record(0.25);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("sum_secs").unwrap().as_f64(), Some(0.75));
+        assert!(j.get("p50_secs").unwrap().as_f64().is_some());
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 2, "sparse pairs, one per hit bucket");
+        for pair in buckets {
+            assert_eq!(pair.as_arr().unwrap().len(), 2);
+        }
+        // Reparses cleanly (the metrics --json path).
+        assert!(crate::util::json::Json::parse(&j.dump()).is_ok());
+        // Empty histogram exports nulls, not NaN/Inf garbage.
+        let empty = HistogramStats::new().to_json();
+        assert_eq!(empty.get("min_secs"), Some(&Json::Null));
+        assert!(Json::parse(&empty.dump()).is_ok());
+    }
+
+    #[test]
+    fn metrics_observe_and_merge_histograms() {
+        let mut a = Metrics::new();
+        a.observe(keys::HIST_QUEUE_WAIT, 0.1);
+        let mut b = Metrics::new();
+        b.observe(keys::HIST_QUEUE_WAIT, 0.2);
+        b.observe(keys::HIST_NET_RTT, 0.001);
+        a.merge(&b);
+        assert_eq!(a.hist(keys::HIST_QUEUE_WAIT).unwrap().count, 2);
+        assert_eq!(a.hist(keys::HIST_NET_RTT).unwrap().count, 1);
+        let j = a.to_json();
+        assert!(j.get("hists").unwrap().get(keys::HIST_QUEUE_WAIT).is_some());
+        // No histograms → no "hists" key (backward-compatible shape).
+        assert!(Metrics::new().to_json().get("hists").is_none());
     }
 
     #[test]

@@ -9,12 +9,15 @@
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
 use std::path::Path;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::frame::{self, Frame, FrameReader, FrameWriter};
 use crate::config::NetConfig;
+use crate::metrics::HistogramStats;
 use crate::sampler::sink::SampleSink;
 use crate::service::{JobId, JobSpec};
+use crate::trace::{Layer, Recorder};
 use crate::util::backoff::Backoff;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
@@ -46,6 +49,12 @@ pub struct Client {
     reader: FrameReader<BufReader<TcpStream>>,
     writer: FrameWriter<BufWriter<TcpStream>>,
     read_timeout_ms: u64,
+    /// Optional flight recorder: short control RPCs emit `Layer::Client`
+    /// spans here (the router attaches its own recorder per backend leg).
+    rec: Option<Arc<Recorder>>,
+    /// Round-trip latency of short control ops only — long-poll `wait`,
+    /// chunked pushes and drains would swamp the distribution.
+    rtt: HistogramStats,
 }
 
 impl Client {
@@ -66,6 +75,8 @@ impl Client {
             )?)),
             stream,
             read_timeout_ms: net.read_timeout_ms,
+            rec: None,
+            rtt: HistogramStats::new(),
         };
         c.set_read_timeout(c.read_timeout_ms)?;
         c.writer.write_preamble()?;
@@ -77,6 +88,50 @@ impl Client {
         self.stream
             .set_read_timeout(Some(Duration::from_millis(ms.max(1))))
             .map_err(|e| Error::io("set_read_timeout", e))
+    }
+
+    /// Attach a flight recorder; subsequent short RPCs emit client spans.
+    pub fn set_recorder(&mut self, rec: Arc<Recorder>) {
+        self.rec = Some(rec);
+    }
+
+    /// Round-trip latency histogram of short control ops on this
+    /// connection (`ping`/`submit`/`status`/`cancel`/`list`/`metrics`).
+    pub fn rtt(&self) -> &HistogramStats {
+        &self.rtt
+    }
+
+    /// Drain the RTT histogram, leaving it empty — the router folds each
+    /// backend leg's histogram into its `net_rtt_secs` metric this way.
+    pub fn take_rtt(&mut self) -> HistogramStats {
+        std::mem::replace(&mut self.rtt, HistogramStats::new())
+    }
+
+    /// [`rpc`](Self::rpc) with round-trip accounting: successful calls
+    /// feed the RTT histogram and, when a recorder is attached, emit a
+    /// backdated `Layer::Client` span; failures emit an `rpc_error`
+    /// instant instead so dead peers stay visible in the timeline.
+    fn rpc_timed(
+        &mut self,
+        msg: &Json,
+        name: &'static str,
+        job: JobId,
+        trace: u64,
+    ) -> Result<Json> {
+        let t0 = Instant::now();
+        let out = self.rpc(msg);
+        let dt = t0.elapsed();
+        match (&out, &self.rec) {
+            (Ok(_), Some(rec)) => {
+                rec.span(Layer::Client, name, job, trace, dt.as_nanos() as u64, 0)
+            }
+            (Err(_), Some(rec)) => rec.instant(Layer::Client, "rpc_error", job, trace, 0),
+            _ => {}
+        }
+        if out.is_ok() {
+            self.rtt.record(dt.as_secs_f64());
+        }
+        out
     }
 
     /// Send `msg`, read one control reply. A `busy` reply becomes
@@ -151,17 +206,19 @@ impl Client {
 
     /// Round-trip liveness probe.
     pub fn ping(&mut self) -> Result<()> {
-        let r = self.rpc(&Json::obj(vec![("op", Json::Str("ping".into()))]))?;
+        let msg = Json::obj(vec![("op", Json::Str("ping".into()))]);
+        let r = self.rpc_timed(&msg, "ping", 0, 0)?;
         Self::expect(&r, "pong")
     }
 
     /// Submit a job; returns the server-side job id, or [`Error::Busy`]
     /// when admission control rejected it (back off and retry).
     pub fn submit(&mut self, spec: &JobSpec) -> Result<JobId> {
-        let r = self.rpc(&Json::obj(vec![
+        let msg = Json::obj(vec![
             ("op", Json::Str("submit".into())),
             ("job", spec.to_json()),
-        ]))?;
+        ]);
+        let r = self.rpc_timed(&msg, "submit", 0, spec.trace.unwrap_or(0))?;
         Self::expect(&r, "submitted")?;
         r.get("id")
             .and_then(|v| v.as_f64())
@@ -170,16 +227,50 @@ impl Client {
             .ok_or_else(|| Error::format("net wire: submitted reply without id"))
     }
 
+    /// [`submit`](Self::submit) that guarantees the job travels with a
+    /// trace id: the spec's own id is kept when set, otherwise a fresh
+    /// one is generated. Returns `(job id, trace id)` so the caller can
+    /// later stitch the full cross-host timeline with the `trace` op.
+    pub fn submit_traced(&mut self, spec: &JobSpec) -> Result<(JobId, u64)> {
+        let mut spec = spec.clone();
+        let trace = spec
+            .trace
+            .filter(|t| *t != 0)
+            .unwrap_or_else(crate::trace::gen_trace_id);
+        spec.trace = Some(trace);
+        let id = self.submit(&spec)?;
+        Ok((id, trace))
+    }
+
     /// Current status snapshot of `id` (the `JobView` JSON).
     pub fn status(&mut self, id: JobId) -> Result<Json> {
-        let r = self.rpc(&Json::obj(vec![
+        let msg = Json::obj(vec![
             ("op", Json::Str("status".into())),
             ("id", Json::Num(id as f64)),
-        ]))?;
+        ]);
+        let r = self.rpc_timed(&msg, "status", id, 0)?;
         Self::expect(&r, "status")?;
         r.get("job")
             .cloned()
             .ok_or_else(|| Error::format("net wire: status reply without job"))
+    }
+
+    /// Fetch the server's recorded trace events. Either filter may be 0:
+    /// a job id selects that job's events, a trace id additionally pulls
+    /// in spans recorded before admission assigned the job id. The reply
+    /// is the full `trace` object (`job`/`trace`/`events`/`dropped`) that
+    /// `trace::render_human` and `trace::chrome_trace` consume.
+    pub fn trace_events(&mut self, id: JobId, trace: u64) -> Result<Json> {
+        let mut fields = vec![("op", Json::Str("trace".into()))];
+        if id != 0 {
+            fields.push(("id", Json::Num(id as f64)));
+        }
+        if trace != 0 {
+            fields.push(("trace", Json::Str(format!("{trace:016x}"))));
+        }
+        let r = self.rpc(&Json::obj(fields))?;
+        Self::expect(&r, "trace")?;
+        Ok(r)
     }
 
     /// Block (server side) until `id` is terminal or `timeout` passes.
@@ -268,16 +359,18 @@ impl Client {
 
     /// Cancel a live job (terminal jobs are left as they ended).
     pub fn cancel(&mut self, id: JobId) -> Result<()> {
-        let r = self.rpc(&Json::obj(vec![
+        let msg = Json::obj(vec![
             ("op", Json::Str("cancel".into())),
             ("id", Json::Num(id as f64)),
-        ]))?;
+        ]);
+        let r = self.rpc_timed(&msg, "cancel", id, 0)?;
         Self::expect(&r, "cancelled")
     }
 
     /// All jobs the server retains, sorted by (submit time, id).
     pub fn list(&mut self) -> Result<Json> {
-        let r = self.rpc(&Json::obj(vec![("op", Json::Str("list".into()))]))?;
+        let msg = Json::obj(vec![("op", Json::Str("list".into()))]);
+        let r = self.rpc_timed(&msg, "list", 0, 0)?;
         Self::expect(&r, "jobs")?;
         r.get("jobs")
             .cloned()
@@ -286,7 +379,8 @@ impl Client {
 
     /// Service + net metrics snapshot.
     pub fn metrics(&mut self) -> Result<Json> {
-        let r = self.rpc(&Json::obj(vec![("op", Json::Str("metrics".into()))]))?;
+        let msg = Json::obj(vec![("op", Json::Str("metrics".into()))]);
+        let r = self.rpc_timed(&msg, "metrics", 0, 0)?;
         Self::expect(&r, "metrics")?;
         r.get("metrics")
             .cloned()

@@ -147,6 +147,7 @@ pub(crate) fn serve_push<R: std::io::Read>(
     net: &NetConfig,
     stats: &NetStats,
     stop: &AtomicBool,
+    observe_chunk: &mut dyn FnMut(f64),
 ) -> Result<()> {
     let Some(push_dir) = net.push_dir.as_deref() else {
         reply(reply_err(
@@ -196,7 +197,7 @@ pub(crate) fn serve_push<R: std::io::Read>(
         vec![("dedup", Json::Bool(false)), ("key", Json::Str(key_hex.clone()))],
     ))?;
 
-    match receive_chunks(reader, &mut writer, &req, net, stop) {
+    match receive_chunks(reader, &mut writer, &req, net, stop, observe_chunk) {
         Ok(()) => {}
         Err(e) => {
             stats.push_aborts.fetch_add(1, Ordering::Relaxed);
@@ -271,12 +272,15 @@ fn installed_at(dir: &Path, key: u64, cache: &StoreCache) -> bool {
 }
 
 /// Drive the chunk sub-protocol to `push_end`, feeding the staged writer.
+/// `observe_chunk` sees the server-side processing time of each chunk
+/// (decode + verify + staged write, not the wait on the wire).
 fn receive_chunks<R: std::io::Read>(
     reader: &mut FrameReader<R>,
     writer: &mut StoreStreamWriter,
     req: &PushRequest,
     net: &NetConfig,
     stop: &AtomicBool,
+    observe_chunk: &mut dyn FnMut(f64),
 ) -> Result<()> {
     let mut fnv = Fnv1a::new();
     let mut next_index = 0u64;
@@ -302,6 +306,7 @@ fn receive_chunks<R: std::io::Read>(
         last_frame = Instant::now();
         match frame {
             Frame::Chunk(packed) => {
+                let t_chunk = Instant::now();
                 let (index, declared_fnv, raw) = frame::decode_chunk(&packed)?;
                 if index != next_index {
                     return Err(Error::format(format!(
@@ -326,6 +331,7 @@ fn receive_chunks<R: std::io::Read>(
                     )));
                 }
                 writer.feed(&raw)?;
+                observe_chunk(t_chunk.elapsed().as_secs_f64());
             }
             Frame::Ctrl(m) if m.get("op").and_then(|v| v.as_str()) == Some("push_end") => {
                 if next_index != req.chunks {

@@ -28,6 +28,7 @@ use super::frame::{self, Frame, FrameReader, FrameWriter};
 use crate::config::{NetConfig, ServiceConfig};
 use crate::metrics::{keys, Metrics};
 use crate::service::{JobId, JobSpec, Service};
+use crate::trace::Layer;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -406,6 +407,8 @@ fn reader_loop(
                 tx.send(Out::Ctrl(j))
                     .map_err(|_| Error::other("net: writer thread gone"))
             };
+            let mut observe_chunk =
+                |secs: f64| shared.svc.observe(keys::HIST_PUSH_CHUNK, secs);
             super::push::serve_push(
                 &msg,
                 reader,
@@ -414,13 +417,60 @@ fn reader_loop(
                 &shared.net,
                 &shared.stats,
                 &shared.stop,
+                &mut observe_chunk,
             )?;
             shared.stats.add_io(Some(reader.drain_counters()), None);
             continue;
         }
-        if !handle_op(&msg, tx, shared)? {
+        // One Net-layer span per control op, attributed to the job when
+        // the op names one (decode happened in read_frame; this span is
+        // the server-side handling time a client's RTT is made of).
+        let op = msg.get("op").and_then(|v| v.as_str()).unwrap_or("");
+        let op_job = msg
+            .get("id")
+            .and_then(|v| v.as_f64())
+            .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+            .map(|v| v as u64)
+            .unwrap_or(0);
+        let t_op = Instant::now();
+        let keep = handle_op(&msg, tx, shared)?;
+        let trace = if op_job != 0 {
+            shared.svc.queue().trace_of(op_job)
+        } else {
+            // A submit carries its trace id inside the job spec.
+            msg.get("job")
+                .and_then(|j| j.get("trace"))
+                .and_then(|v| v.as_str())
+                .and_then(crate::trace::parse_trace_id)
+                .unwrap_or(0)
+        };
+        shared.svc.recorder().span(
+            Layer::Net,
+            op_span_name(op),
+            op_job,
+            trace,
+            t_op.elapsed().as_nanos() as u64,
+            0,
+        );
+        if !keep {
             return Ok(());
         }
+    }
+}
+
+/// Static span name for a control op (ring slots hold `&'static str`).
+fn op_span_name(op: &str) -> &'static str {
+    match op {
+        "ping" => "op_ping",
+        "submit" => "op_submit",
+        "status" => "op_status",
+        "wait" => "op_wait",
+        "cancel" => "op_cancel",
+        "list" => "op_list",
+        "metrics" => "op_metrics",
+        "trace" => "op_trace",
+        "shutdown" => "op_shutdown",
+        _ => "op_other",
     }
 }
 
@@ -476,7 +526,17 @@ fn handle_op(msg: &Json, tx: &Sender<Out>, shared: &Arc<Shared>) -> Result<bool>
                         ],
                     ))?;
                     if let Some(s) = sink {
-                        tx.send(Out::Payload(frame::pack_sink(&s)))
+                        let t0 = Instant::now();
+                        let packed = frame::pack_sink(&s);
+                        shared.svc.recorder().span(
+                            Layer::Sink,
+                            "encode",
+                            id,
+                            shared.svc.queue().trace_of(id),
+                            t0.elapsed().as_nanos() as u64,
+                            packed.len() as u64,
+                        );
+                        tx.send(Out::Payload(packed))
                             .map_err(|_| Error::other("net: writer thread gone"))?;
                     }
                 }
@@ -508,6 +568,35 @@ fn handle_op(msg: &Json, tx: &Sender<Out>, shared: &Arc<Shared>) -> Result<bool>
         }
         "metrics" => {
             send(reply_ok("metrics", vec![("metrics", shared.metrics_json())]))?;
+        }
+        "trace" => {
+            // Either filter may be present: a job id, a 16-hex trace id,
+            // or both. The reply carries the flattened `trace_json`
+            // fields so `fastmps trace` renders it directly.
+            let id = msg
+                .get("id")
+                .and_then(|v| v.as_f64())
+                .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                .map(|v| v as JobId)
+                .unwrap_or(0);
+            let trace = msg
+                .get("trace")
+                .and_then(|v| v.as_str())
+                .and_then(crate::trace::parse_trace_id)
+                .unwrap_or(0);
+            match shared.svc.trace_json(id, trace) {
+                Json::Obj(fields) => {
+                    let extra: Vec<(String, Json)> = fields.into_iter().collect();
+                    let mut reply = reply_ok("trace", vec![]);
+                    if let Json::Obj(m) = &mut reply {
+                        for (k, v) in extra {
+                            m.insert(k, v);
+                        }
+                    }
+                    send(reply)?;
+                }
+                other => send(reply_ok("trace", vec![("events", other)]))?,
+            }
         }
         "shutdown" => {
             shared.drain(Duration::from_secs(600));
@@ -543,7 +632,20 @@ fn writer_loop(stream: TcpStream, rx: Receiver<Out>, shared: Arc<Shared>) {
     for out in rx {
         let r = match out {
             Out::Ctrl(j) => w.write_ctrl(&j),
-            Out::Payload(p) => w.write_payload(&p),
+            Out::Payload(p) => {
+                // Sample-block flush — the last hop of a job's lifecycle.
+                let t0 = Instant::now();
+                let r = w.write_payload(&p);
+                shared.svc.recorder().span(
+                    Layer::Sink,
+                    "flush",
+                    0,
+                    0,
+                    t0.elapsed().as_nanos() as u64,
+                    p.len() as u64,
+                );
+                r
+            }
         };
         shared.stats.add_io(None, Some(w.drain_counters()));
         if r.is_err() {

@@ -35,7 +35,8 @@ use std::time::{Duration, Instant};
 use super::health::{failover_order, BackendHealth, HealthState};
 use super::rendezvous;
 use crate::config::{NetConfig, RouterConfig};
-use crate::metrics::{keys, Metrics};
+use crate::metrics::{keys, HistogramStats, Metrics};
+use crate::trace::{self, Layer, Recorder};
 use crate::net::frame::{self, Frame, FrameReader, FrameWriter};
 use crate::net::server::{lame_duck_reject, reap_conns, reply_err, reply_ok};
 use crate::net::Client;
@@ -155,6 +156,11 @@ struct Shared {
     backends: Vec<Arc<BackendHealth>>,
     counters: Vec<BackendCounters>,
     stats: RouterStats,
+    /// Router-tier flight recorder: placement attempts, spillovers, and
+    /// (via attached backend clients) per-forward RPC spans.
+    rec: Arc<Recorder>,
+    /// Backend-leg round-trip latency, folded from connection threads.
+    net_rtt: Mutex<HistogramStats>,
     table: Mutex<RouteTable>,
     /// Close connections and stop the accept/probe loops.
     stop: AtomicBool,
@@ -248,6 +254,14 @@ impl Shared {
         }
     }
 
+    /// Fold a drained backend-leg RTT histogram into the router-wide one.
+    fn fold_rtt(&self, h: HistogramStats) {
+        if h.count == 0 {
+            return;
+        }
+        self.net_rtt.lock().unwrap().merge(&h);
+    }
+
     /// A transport-level forward failure: health + counters in one place.
     fn note_forward_failure(&self, b: usize) {
         self.counters[b].errors.fetch_add(1, Ordering::Relaxed);
@@ -265,6 +279,12 @@ impl Shared {
     fn metrics_json(&self) -> Json {
         let mut m = Metrics::new();
         self.stats.account(&mut m);
+        {
+            let rtt = self.net_rtt.lock().unwrap();
+            if rtt.count > 0 {
+                m.hists.insert(keys::HIST_NET_RTT.to_string(), rtt.clone());
+            }
+        }
         let (routed, in_flight) = {
             let t = self.table.lock().unwrap();
             let live = t.by_global.values().filter(|r| !r.terminal).count();
@@ -423,12 +443,15 @@ impl Router {
             .map(|a| Arc::new(BackendHealth::new(a.clone())))
             .collect();
         let counters = cfg.backends.iter().map(|_| BackendCounters::default()).collect();
+        let rec = Arc::new(Recorder::new(cfg.trace_buf));
         let shared = Arc::new(Shared {
             cfg,
             net,
             backends,
             counters,
             stats: RouterStats::default(),
+            rec,
+            net_rtt: Mutex::new(HistogramStats::new()),
             table: Mutex::new(RouteTable {
                 next_id: 1,
                 by_global: BTreeMap::new(),
@@ -597,24 +620,43 @@ fn handle_accept(stream: TcpStream, shared: &Arc<Shared>) {
 /// channel that errors is dropped and re-dialed on next use.
 struct BackendConns {
     clients: Vec<Option<Client>>,
+    /// RTT samples salvaged from dropped channels, pending a fold into
+    /// the shared router histogram.
+    rtt: HistogramStats,
 }
 
 impl BackendConns {
     fn new(n: usize) -> BackendConns {
         BackendConns {
             clients: (0..n).map(|_| None).collect(),
+            rtt: HistogramStats::new(),
         }
     }
 
     fn client(&mut self, b: usize, shared: &Shared) -> Result<&mut Client> {
         if self.clients[b].is_none() {
-            self.clients[b] = Some(Client::connect(&shared.backends[b].addr, &shared.net)?);
+            let mut c = Client::connect(&shared.backends[b].addr, &shared.net)?;
+            // Forwarded RPCs show up as Client-layer spans in the
+            // router's own timeline.
+            c.set_recorder(shared.rec.clone());
+            self.clients[b] = Some(c);
         }
         Ok(self.clients[b].as_mut().expect("just connected"))
     }
 
     fn drop_conn(&mut self, b: usize) {
-        self.clients[b] = None;
+        if let Some(mut c) = self.clients[b].take() {
+            self.rtt.merge(&c.take_rtt());
+        }
+    }
+
+    /// Drain every backend leg's RTT histogram (live and salvaged).
+    fn take_rtt(&mut self) -> HistogramStats {
+        let mut h = std::mem::replace(&mut self.rtt, HistogramStats::new());
+        for c in self.clients.iter_mut().flatten() {
+            h.merge(&c.take_rtt());
+        }
+        h
     }
 }
 
@@ -669,6 +711,7 @@ fn connection(stream: TcpStream, shared: &Arc<Shared>) {
             }
         }
     })();
+    shared.fold_rtt(conns.take_rtt());
     shared.stats.add_io(Some(reader.drain_counters()), None);
     if let Err(e) = outcome {
         if !frame::is_timeout(&e) {
@@ -848,9 +891,14 @@ fn handle_op(
             w.write_ctrl(&reply_ok("jobs", vec![("jobs", jobs)]))?;
         }
         "metrics" => {
+            // Fold this connection's backend-leg RTT first so the
+            // snapshot includes the forwards that led up to the ask.
+            shared.fold_rtt(conns.take_rtt());
             w.write_ctrl(&reply_ok("metrics", vec![("metrics", shared.metrics_json())]))?;
         }
+        "trace" => handle_trace(msg, w, conns, shared)?,
         "shutdown" => {
+            shared.fold_rtt(conns.take_rtt());
             shared.drain(Duration::from_secs(shared.cfg.drain_cap_secs));
             // Flag before the reply is written: a client that has seen
             // the reply must never observe shutdown_requested() == false.
@@ -864,6 +912,94 @@ fn handle_op(
         other => w.write_ctrl(&reply_err("error", format!("unknown op '{other}'")))?,
     }
     Ok(true)
+}
+
+/// The `trace` op, router edition: the router's own placement events
+/// stitched with the owning backend's timeline, backend-local job ids
+/// rewritten to the router-global one. A lost backend degrades to the
+/// router-side half of the story rather than an error — a partial
+/// timeline still answers "where did the time go before the loss".
+fn handle_trace(
+    msg: &Json,
+    w: &mut FrameWriter<BufWriter<TcpStream>>,
+    conns: &mut BackendConns,
+    shared: &Arc<Shared>,
+) -> Result<()> {
+    let gid = msg
+        .get("id")
+        .and_then(|v| v.as_f64())
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as JobId)
+        .unwrap_or(0);
+    let trace_req = msg
+        .get("trace")
+        .and_then(|v| v.as_str())
+        .and_then(trace::parse_trace_id)
+        .unwrap_or(0);
+    let mut own = shared.rec.events_for(gid, trace_req);
+    // When only a job id was given, the router's own events resolve the
+    // trace id — that is what lets the backend fetch pull in spans
+    // recorded before the backend assigned its local job id.
+    let trace_id = if trace_req != 0 {
+        trace_req
+    } else {
+        own.iter().map(|e| e.trace).find(|t| *t != 0).unwrap_or(0)
+    };
+    if trace_req == 0 && trace_id != 0 {
+        // Re-query with the resolved id: the forwarding-leg client spans
+        // predate the reply that names the job, so they are trace-keyed
+        // only and a pure by-job scan would miss them.
+        own = shared.rec.events_for(gid, trace_id);
+    }
+    let mut events: Vec<Json> = match shared.rec.events_json(&own) {
+        Json::Arr(v) => v,
+        _ => Vec::new(),
+    };
+    if let Some(r) = shared.routed(gid) {
+        shared.note_forward(r.backend);
+        let fetched = conns
+            .client(r.backend, shared)
+            .and_then(|c| c.trace_events(r.backend_id, trace_id));
+        match fetched {
+            Ok(reply) => {
+                shared.backends[r.backend].note_ok();
+                let backend_bid = r.backend_id as f64;
+                for e in reply.get("events").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                    let mut e = e.clone();
+                    if let Json::Obj(m) = &mut e {
+                        if m.get("job").and_then(|v| v.as_f64()) == Some(backend_bid) {
+                            m.insert("job".into(), Json::Num(gid as f64));
+                        }
+                    }
+                    events.push(e);
+                }
+            }
+            Err(e) => {
+                if is_transport_error(&e) {
+                    shared.note_forward_failure(r.backend);
+                    conns.drop_conn(r.backend);
+                }
+            }
+        }
+    }
+    let events = trace::merge_events(events);
+    w.write_ctrl(&reply_ok(
+        "trace",
+        vec![
+            ("job", Json::Num(gid as f64)),
+            (
+                "trace",
+                if trace_id != 0 {
+                    Json::Str(format!("{trace_id:016x}"))
+                } else {
+                    Json::Null
+                },
+            ),
+            ("events", Json::Arr(events)),
+            ("dropped", Json::Num(shared.rec.dropped() as f64)),
+            ("trace_buf", Json::Num(shared.rec.capacity() as f64)),
+        ],
+    ))
 }
 
 /// Relay a forward failure to the client, updating backend health when
@@ -926,6 +1062,8 @@ fn place_with_spillover(
     spec: &JobSpec,
     conns: &mut BackendConns,
     shared: &Arc<Shared>,
+    gid: JobId,
+    trace_id: u64,
 ) -> Placement {
     let key = spec.store_key();
     let addrs: Vec<&str> = shared.backends.iter().map(|b| b.addr.as_str()).collect();
@@ -954,11 +1092,21 @@ fn place_with_spillover(
             }
             budget -= 1;
             pass_attempts += 1;
+            // Placement breadcrumbs (arg = 1-based backend index, so the
+            // first backend is distinguishable from "no arg").
+            shared
+                .rec
+                .instant(Layer::Router, "attempt", gid, trace_id, b as u64 + 1);
             let outcome = conns.client(b, shared).and_then(|c| c.submit(spec));
             match outcome {
                 Ok(bid) => {
                     shared.backends[b].note_ok();
                     shared.counters[b].submits.fetch_add(1, Ordering::Relaxed);
+                    if b != first_choice {
+                        shared
+                            .rec
+                            .instant(Layer::Router, "spillover", gid, trace_id, b as u64 + 1);
+                    }
                     return Placement::Placed {
                         backend: b,
                         backend_id: bid,
@@ -969,6 +1117,9 @@ fn place_with_spillover(
                     // A busy backend is healthy — spill to the next rank.
                     saw_busy = true;
                     shared.counters[b].busy.fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .rec
+                        .instant(Layer::Router, "busy", gid, trace_id, b as u64 + 1);
                 }
                 Err(e) if is_transport_error(&e) => {
                     shared.note_forward_failure(b);
@@ -1219,11 +1370,15 @@ fn handle_submit(
     shared: &Arc<Shared>,
 ) -> Result<()> {
     let spec = JobSpec::from_json(msg.req("job")?)?;
+    let trace_id = spec.trace.unwrap_or(0);
     let Some(gid) = shared.reserve() else {
         w.write_ctrl(&reply_err("error", "router shutting down (draining)"))?;
         return Ok(());
     };
-    match place_with_spillover(&spec, conns, shared) {
+    shared.rec.begin(Layer::Router, "place", gid, trace_id);
+    let placement = place_with_spillover(&spec, conns, shared, gid, trace_id);
+    shared.rec.end(Layer::Router, "place", gid, trace_id);
+    match placement {
         Placement::Placed {
             backend,
             backend_id,

@@ -685,10 +685,15 @@ mod tests {
     fn steady_state_step_is_allocation_free() {
         // The tentpole contract: after warm-up, a single-threaded
         // step_prepared performs ZERO heap allocations — no Γ clone, no
-        // re-rounding, no temp/env/displacement buffers. The counting
-        // allocator is process-global and other test threads may allocate
-        // concurrently, so retry until a clean window is observed; a real
-        // per-step allocation would make every window dirty.
+        // re-rounding, no temp/env/displacement buffers. Flight-recorder
+        // tracing must not break this: the clean window below records a
+        // ring event per step exactly the way a traced worker would
+        // (preallocated slots, `&'static str` names, Copy events). The
+        // counting allocator is process-global and other test threads may
+        // allocate concurrently, so retry until a clean window is
+        // observed; a real per-step allocation would make every window
+        // dirty.
+        let rec = crate::trace::Recorder::new(crate::trace::DEFAULT_BUF);
         for compute in [ComputePrecision::F64, ComputePrecision::F32] {
             let site = square_site(12, 3, 21);
             let mut eng = NativeEngine::new(compute, ScalingMode::PerSample, 1);
@@ -703,8 +708,12 @@ mod tests {
             }
             let grows_after_warmup = eng.metrics.get(keys::STEP_WS_GROWS);
             let mut clean = false;
-            for _ in 0..128 {
+            for site_idx in 0..128u64 {
                 let before = crate::util::alloc::allocation_count();
+                // Default sampling only thins event *frequency*; the ring
+                // write itself must be allocation-free, so every candidate
+                // window records one — any clean window proves both.
+                rec.instant(crate::trace::Layer::Engine, "site", 1, 1, site_idx);
                 eng.step_prepared(&mut env, &prep, &th, Some(&mus), &mut samples)
                     .unwrap();
                 if crate::util::alloc::allocation_count() == before {
@@ -712,6 +721,7 @@ mod tests {
                     break;
                 }
             }
+            assert!(crate::trace::site_sampled(0), "site 0 is always sampled");
             assert!(clean, "{compute:?}: no allocation-free step observed");
             assert_eq!(
                 eng.metrics.get(keys::STEP_WS_GROWS),

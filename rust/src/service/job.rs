@@ -36,6 +36,11 @@ pub struct JobSpec {
     pub compute: Option<ComputePrecision>,
     /// Free-form client tag, echoed in status and results.
     pub tag: String,
+    /// Flight-recorder trace id (`docs/PROTOCOL.md` § Trace propagation).
+    /// Optional on the wire as a 16-hex-digit string; peers that predate
+    /// tracing ignore it (unknown JSON keys are skipped) or omit it, and
+    /// the job runs untraced either way. `None`/zero means untraced.
+    pub trace: Option<u64>,
 }
 
 impl JobSpec {
@@ -47,6 +52,7 @@ impl JobSpec {
             sample_base: 0,
             compute: None,
             tag: String::new(),
+            trace: None,
         }
     }
 
@@ -59,6 +65,7 @@ impl JobSpec {
             sample_base: 0,
             compute: None,
             tag: String::new(),
+            trace: None,
         }
     }
 
@@ -132,6 +139,13 @@ impl JobSpec {
             .and_then(|v| v.as_str())
             .unwrap_or("")
             .to_string();
+        // Deliberately lenient: a missing, null, or malformed trace id
+        // degrades to "untraced", never to a rejected job — the skew
+        // contract of docs/PROTOCOL.md § Trace propagation.
+        let trace = j
+            .get("trace")
+            .and_then(|v| v.as_str())
+            .and_then(crate::trace::parse_trace_id);
         Ok(JobSpec {
             data: PathBuf::from(data),
             key,
@@ -139,11 +153,12 @@ impl JobSpec {
             sample_base,
             compute,
             tag,
+            trace,
         })
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("data", Json::Str(self.data.display().to_string())),
             (
                 "key",
@@ -160,7 +175,13 @@ impl JobSpec {
                     .unwrap_or(Json::Null),
             ),
             ("tag", Json::Str(self.tag.clone())),
-        ])
+        ];
+        // Omitted (not null) when untraced, so the wire form of an
+        // untraced job is byte-identical to pre-tracing builds.
+        if let Some(t) = self.trace.filter(|t| *t != 0) {
+            fields.push(("trace", Json::Str(format!("{t:016x}"))));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -202,6 +223,8 @@ pub struct JobView {
     /// Wall-clock submit time, unix seconds (listing sort key).
     pub submitted_unix: f64,
     pub latency_secs: Option<f64>,
+    /// The job's trace id, when it was submitted traced.
+    pub trace: Option<u64>,
 }
 
 /// Deterministic listing order: submit time, then id. Stable for
@@ -235,6 +258,13 @@ impl JobView {
                 "latency_secs",
                 self.latency_secs.map(Json::Num).unwrap_or(Json::Null),
             ),
+            (
+                "trace",
+                self.trace
+                    .filter(|t| *t != 0)
+                    .map(|t| Json::Str(format!("{t:016x}")))
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -265,6 +295,30 @@ mod tests {
         assert_eq!(s.sample_base, 0);
         assert_eq!(s.compute, None);
         assert!(s.tag.is_empty());
+        assert_eq!(s.trace, None);
+    }
+
+    #[test]
+    fn trace_id_roundtrips_and_degrades_tolerantly() {
+        let mut s = JobSpec::new("/d", 5);
+        s.trace = Some(0x00ab_cdef_0123_4567);
+        let j = s.to_json();
+        assert_eq!(j.get("trace").unwrap().as_str(), Some("00abcdef01234567"));
+        let back = JobSpec::from_json(&j).unwrap();
+        assert_eq!(back.trace, Some(0x00ab_cdef_0123_4567));
+        // Untraced specs omit the field entirely (old-peer byte parity).
+        assert!(JobSpec::new("/d", 5).to_json().get("trace").is_none());
+        // Malformed / null / zero trace ids parse as untraced, never as
+        // an error — new-server-old-client skew must not break submits.
+        for wire in [
+            r#"{"data": "/d", "samples": 5, "trace": null}"#,
+            r#"{"data": "/d", "samples": 5, "trace": "zz"}"#,
+            r#"{"data": "/d", "samples": 5, "trace": 12}"#,
+            r#"{"data": "/d", "samples": 5, "trace": "0000000000000000"}"#,
+        ] {
+            let s = JobSpec::from_json(&Json::parse(wire).unwrap()).unwrap();
+            assert_eq!(s.trace, None, "{wire}");
+        }
     }
 
     #[test]
@@ -324,6 +378,7 @@ mod tests {
             error: None,
             submitted_unix: t,
             latency_secs: None,
+            trace: None,
         };
         let mut vs = vec![view(3, 20.0), view(2, 10.0), view(1, 10.0), view(4, 5.0)];
         sort_views(&mut vs);

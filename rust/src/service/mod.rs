@@ -41,6 +41,7 @@ use std::time::{Duration, Instant};
 use crate::config::{ComputePrecision, ServiceConfig};
 use crate::io::DiskModel;
 use crate::metrics::{keys, Metrics};
+use crate::trace::Recorder;
 use crate::util::error::Result;
 use crate::util::json::Json;
 
@@ -50,6 +51,7 @@ pub struct Service {
     cache: Arc<StoreCache>,
     dispatch: Arc<Dispatch>,
     metrics: Arc<Mutex<Metrics>>,
+    rec: Arc<Recorder>,
     cfg: ServiceConfig,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
@@ -62,11 +64,18 @@ impl Service {
             Some(bw) => DiskModel::throttled(bw, false),
             None => DiskModel::unlimited(),
         };
+        // One flight recorder shared by every service component, so a
+        // job's queue, batcher, worker, and engine events interleave in
+        // one ring and drain in one pass (`trace_json`).
+        let rec = Arc::new(Recorder::new(cfg.trace_buf));
         let cache = Arc::new(StoreCache::new(cfg.cache_entries, disk.clone()));
-        let queue = Arc::new(JobQueue::new(AdmissionLimits {
-            max_queue: cfg.max_queue,
-            max_samples_per_job: cfg.max_samples_per_job,
-        }));
+        let queue = Arc::new(JobQueue::new_traced(
+            AdmissionLimits {
+                max_queue: cfg.max_queue,
+                max_samples_per_job: cfg.max_samples_per_job,
+            },
+            rec.clone(),
+        ));
         let dispatch = Arc::new(Dispatch::new());
         let metrics = Arc::new(Mutex::new(Metrics::new()));
 
@@ -78,8 +87,9 @@ impl Service {
                 let cache = cache.clone();
                 let disk = disk.clone();
                 let metrics = metrics.clone();
+                let rec = rec.clone();
                 std::thread::spawn(move || {
-                    worker::worker_loop(dispatch, queue, cfg, cache, disk, metrics)
+                    worker::worker_loop(dispatch, queue, cfg, cache, disk, metrics, rec)
                 })
             })
             .collect();
@@ -90,7 +100,10 @@ impl Service {
             let dispatch = dispatch.clone();
             let cfg = cfg.clone();
             let metrics = metrics.clone();
-            std::thread::spawn(move || dispatcher_loop(queue, cache, dispatch, cfg, metrics))
+            let rec = rec.clone();
+            std::thread::spawn(move || {
+                dispatcher_loop(queue, cache, dispatch, cfg, metrics, rec)
+            })
         };
 
         Ok(Service {
@@ -98,6 +111,7 @@ impl Service {
             cache,
             dispatch,
             metrics,
+            rec,
             cfg,
             dispatcher: Some(dispatcher),
             workers,
@@ -130,6 +144,39 @@ impl Service {
 
     pub fn cache(&self) -> &Arc<StoreCache> {
         &self.cache
+    }
+
+    /// The service-wide flight recorder (capacity 0 when tracing is off).
+    pub fn recorder(&self) -> &Arc<Recorder> {
+        &self.rec
+    }
+
+    /// Wire reply of the `trace` op: every retained event touching the
+    /// job (by id and/or trace id), oldest first, plus ring bookkeeping
+    /// so a caller can tell "no events" from "events rolled off".
+    pub fn trace_json(&self, job: JobId, trace: u64) -> Json {
+        let trace = if trace != 0 { trace } else { self.queue.trace_of(job) };
+        let events = self.rec.events_for(job, trace);
+        Json::obj(vec![
+            ("job", Json::Num(job as f64)),
+            (
+                "trace",
+                if trace != 0 {
+                    Json::Str(format!("{trace:016x}"))
+                } else {
+                    Json::Null
+                },
+            ),
+            ("events", self.rec.events_json(&events)),
+            ("dropped", Json::Num(self.rec.dropped() as f64)),
+            ("trace_buf", Json::Num(self.rec.capacity() as f64)),
+        ])
+    }
+
+    /// Record one observation into a named service histogram — lets the
+    /// net layer feed e.g. push chunk timings without holding the lock.
+    pub fn observe(&self, key: &str, secs: f64) {
+        self.metrics.lock().unwrap().observe(key, secs);
     }
 
     /// Nothing queued, running, or waiting for a worker.
@@ -204,6 +251,7 @@ fn dispatcher_loop(
     dispatch: Arc<Dispatch>,
     cfg: ServiceConfig,
     metrics: Arc<Mutex<Metrics>>,
+    rec: Arc<Recorder>,
 ) {
     // Per-job store resolution memo: each admitted job goes through the
     // cache once (that is the job-level reuse the cache-hit KPI measures)
@@ -220,6 +268,7 @@ fn dispatcher_loop(
             }
             continue;
         }
+        let t_form = Instant::now();
         if cfg.linger_ms > 0 && !queue.is_shutdown() {
             // Give compatible jobs a moment to arrive and fill the batch.
             std::thread::sleep(Duration::from_millis(cfg.linger_ms));
@@ -296,12 +345,24 @@ fn dispatcher_loop(
             assignments,
             target,
         };
+        let form_secs = t_form.elapsed();
         {
             let mut m = metrics.lock().unwrap();
             m.add(keys::SERVICE_BATCHES, 1);
             m.add(keys::BATCH_ROWS, batch.rows() as u64);
             m.add(keys::BATCH_TARGET_ROWS, batch.target as u64);
+            m.observe(keys::HIST_BATCH_FORM, form_secs.as_secs_f64());
         }
+        // Formation span attributed to the batch anchor (linger + store
+        // resolution + slicing); arg carries the rows actually filled.
+        rec.span(
+            crate::trace::Layer::Batcher,
+            "form",
+            front_id,
+            queue.trace_of(front_id),
+            form_secs.as_nanos() as u64,
+            batch.rows() as u64,
+        );
         dispatch.push(batch);
     }
     dispatch.close();

@@ -6,12 +6,13 @@
 //! (`wait_job`) wake promptly. Nothing inside the lock does I/O.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::job::{JobId, JobSpec, JobStatus, JobView};
-use crate::metrics::{keys, LatencyStats, Metrics};
+use crate::metrics::{keys, HistogramStats, LatencyStats, Metrics};
 use crate::sampler::sink::SampleSink;
+use crate::trace::{Layer, Recorder};
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -71,6 +72,8 @@ struct Inner {
     completed: u64,
     failed: u64,
     latencies: LatencyStats,
+    /// Admission → first batch slice, per job (log-bucketed, mergeable).
+    queue_wait: HistogramStats,
 }
 
 impl Inner {
@@ -91,10 +94,17 @@ pub struct JobQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
     limits: AdmissionLimits,
+    rec: Arc<Recorder>,
 }
 
 impl JobQueue {
     pub fn new(limits: AdmissionLimits) -> JobQueue {
+        // Standalone queues (tests, embedders) trace into a ring of their
+        // own; the service passes its shared recorder via `new_traced`.
+        Self::new_traced(limits, Arc::new(Recorder::new(0)))
+    }
+
+    pub fn new_traced(limits: AdmissionLimits, rec: Arc<Recorder>) -> JobQueue {
         JobQueue {
             inner: Mutex::new(Inner {
                 next_id: 1,
@@ -109,10 +119,21 @@ impl JobQueue {
                 completed: 0,
                 failed: 0,
                 latencies: LatencyStats::new(4096),
+                queue_wait: HistogramStats::new(),
             }),
             cv: Condvar::new(),
             limits,
+            rec,
         }
+    }
+
+    /// Trace id of a live or retained job (0 when unknown/untraced).
+    pub fn trace_of(&self, id: JobId) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.jobs
+            .get(&id)
+            .and_then(|j| j.spec.trace)
+            .unwrap_or(0)
     }
 
     /// Admit a job or reject it with a config error.
@@ -145,6 +166,7 @@ impl JobQueue {
         }
         let id = g.next_id;
         g.next_id += 1;
+        let trace = spec.trace.unwrap_or(0);
         g.jobs.insert(
             id,
             JobState {
@@ -166,6 +188,7 @@ impl JobQueue {
         g.submitted += 1;
         g.active += 1;
         g.peak_depth = g.peak_depth.max(g.active);
+        self.rec.instant(Layer::Queue, "admit", id, trace, g.active as u64);
         self.cv.notify_all();
         Ok(id)
     }
@@ -211,16 +234,20 @@ impl JobQueue {
         compatible: impl Fn(JobId, &JobSpec) -> bool,
     ) -> Vec<Assignment> {
         let mut g = self.inner.lock().unwrap();
+        // One explicit deref so `jobs` and `queue_wait` borrow as
+        // disjoint fields inside the loop.
+        let inner = &mut *g;
         let mut out = Vec::new();
         let mut taken = 0usize;
-        let mut still_pending = VecDeque::with_capacity(g.pending.len());
-        let pending = std::mem::take(&mut g.pending);
+        let mut still_pending = VecDeque::with_capacity(inner.pending.len());
+        let pending = std::mem::take(&mut inner.pending);
         for id in pending {
-            let job = g.jobs.get_mut(&id).expect("pending id has state");
+            let job = inner.jobs.get_mut(&id).expect("pending id has state");
             if taken < max_rows && compatible(id, &job.spec) {
                 let remaining = job.spec.n_samples - job.assigned;
                 let take = remaining.min((max_rows - taken) as u64);
                 if take > 0 {
+                    let first_slice = job.assigned == 0;
                     out.push(Assignment {
                         job: id,
                         sample0: job.spec.sample_base + job.assigned,
@@ -229,6 +256,21 @@ impl JobQueue {
                     job.assigned += take;
                     job.status = JobStatus::Running;
                     taken += take as usize;
+                    if first_slice {
+                        // Queue wait ends at the job's first placement
+                        // into a batch, not at completion.
+                        let wait = job.t_submit.elapsed();
+                        let trace = job.spec.trace.unwrap_or(0);
+                        inner.queue_wait.record(wait.as_secs_f64());
+                        self.rec.span(
+                            Layer::Queue,
+                            "queue_wait",
+                            id,
+                            trace,
+                            wait.as_nanos() as u64,
+                            0,
+                        );
+                    }
                 }
                 if job.assigned < job.spec.n_samples {
                     still_pending.push_back(id);
@@ -237,7 +279,7 @@ impl JobQueue {
                 still_pending.push_back(id);
             }
         }
-        g.pending = still_pending;
+        inner.pending = still_pending;
         out
     }
 
@@ -260,9 +302,12 @@ impl JobQueue {
             job.status = JobStatus::Done;
             let secs = job.t_submit.elapsed().as_secs_f64();
             job.latency_secs = Some(secs);
+            let trace = job.spec.trace.unwrap_or(0);
+            let done = job.done;
             g.completed += 1;
             g.latencies.record(secs);
             g.note_terminal(id);
+            self.rec.instant(Layer::Queue, "job_done", id, trace, done);
         }
         self.cv.notify_all();
     }
@@ -280,10 +325,12 @@ impl JobQueue {
         job.error = Some(error.to_string());
         let secs = job.t_submit.elapsed().as_secs_f64();
         job.latency_secs = Some(secs);
+        let trace = job.spec.trace.unwrap_or(0);
         g.failed += 1;
         g.latencies.record(secs);
         g.note_terminal(id);
         g.pending.retain(|&p| p != id);
+        self.rec.instant(Layer::Queue, "job_failed", id, trace, 0);
         self.cv.notify_all();
     }
 
@@ -327,6 +374,7 @@ impl JobQueue {
             error: j.error.clone(),
             submitted_unix: j.submitted_unix,
             latency_secs: j.latency_secs,
+            trace: j.spec.trace,
         }
     }
 
@@ -408,6 +456,15 @@ impl JobQueue {
         m.add(keys::JOBS_COMPLETED, g.completed);
         m.add(keys::JOBS_FAILED, g.failed);
         m.set_max(keys::QUEUE_PEAK, g.peak_depth as u64);
+        if g.queue_wait.count > 0 {
+            match m.hists.get_mut(keys::HIST_QUEUE_WAIT) {
+                Some(h) => h.merge(&g.queue_wait),
+                None => {
+                    m.hists
+                        .insert(keys::HIST_QUEUE_WAIT.to_string(), g.queue_wait.clone());
+                }
+            }
+        }
     }
 
     pub fn latency_json(&self) -> Json {

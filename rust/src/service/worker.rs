@@ -23,6 +23,7 @@ use crate::metrics::{keys, Metrics};
 use crate::sampler::sink::SampleSink;
 use crate::sampler::{boundary_env, PreparedSite, PreparedStore};
 use crate::tensor::SplitBuf;
+use crate::trace::{Layer, Recorder};
 use crate::util::error::{Error, Result};
 
 /// A closable MPMC batch channel (std has no shared `Receiver`).
@@ -91,10 +92,19 @@ pub(crate) fn worker_loop(
     cache: Arc<StoreCache>,
     disk: Arc<DiskModel>,
     service_metrics: Arc<Mutex<Metrics>>,
+    rec: Arc<Recorder>,
 ) {
     // Engines persist across batches, keyed by execution mode.
     let mut engines: Vec<(EngineKey, EngineBox)> = Vec::new();
     while let Some(batch) = dispatch.pop() {
+        // (job, trace) per assignment, resolved once — the batch span and
+        // the per-phase engine spans below are recorded for every job
+        // sharing the batch, so each job's timeline is complete.
+        let jobs: Vec<(u64, u64)> = batch
+            .assignments
+            .iter()
+            .map(|a| (a.job, queue.trace_of(a.job)))
+            .collect();
         let key: EngineKey = (cfg.engine, batch.key.compute, cfg.scaling);
         let engine = match engine_for(&mut engines, key, &cfg, &batch) {
             Ok(e) => e,
@@ -118,6 +128,7 @@ pub(crate) fn worker_loop(
                 cfg.prep_cache_bytes,
             )
         });
+        let t_batch = Instant::now();
         match run_batch(engine, &batch, &cfg, &disk, prep.as_deref()) {
             Ok((mut metrics, sinks)) => {
                 for (a, sink) in batch.assignments.iter().zip(&sinks) {
@@ -126,6 +137,26 @@ pub(crate) fn worker_loop(
                 let (em, dead) = engine.drain();
                 metrics.merge(&em);
                 metrics.add("dead_rows", dead);
+                let batch_ns = t_batch.elapsed().as_nanos() as u64;
+                for &(job, trace) in &jobs {
+                    rec.span(Layer::Worker, "batch", job, trace, batch_ns, batch.rows() as u64);
+                    // Bridge the engines' accumulated PhaseTimer points
+                    // into Engine-layer spans: one retroactive span per
+                    // phase per job, covering this batch's walk.
+                    for (phase, secs) in &metrics.phases {
+                        if *secs <= 0.0 {
+                            continue;
+                        }
+                        rec.span(
+                            Layer::Engine,
+                            phase_span_name(phase),
+                            job,
+                            trace,
+                            (*secs * 1e9) as u64,
+                            0,
+                        );
+                    }
+                }
                 service_metrics.lock().unwrap().merge(&metrics);
             }
             Err(e) => {
@@ -133,11 +164,30 @@ pub(crate) fn worker_loop(
                 for a in &batch.assignments {
                     queue.fail_job(a.job, &msg);
                 }
+                for &(job, trace) in &jobs {
+                    rec.instant(Layer::Worker, "batch_failed", job, trace, 0);
+                }
                 // Reset accounting so the failed walk doesn't pollute the
                 // next batch's numbers.
                 let _ = engine.drain();
             }
         }
+    }
+}
+
+/// Map a dynamic phase-timer name onto the `&'static str` the recorder's
+/// preallocated slots require (unknown phases fold into "phase").
+fn phase_span_name(phase: &str) -> &'static str {
+    match phase {
+        "compute" => "compute",
+        "io_virtual" => "io_virtual",
+        "io_stall" => "io_stall",
+        "comm" => "comm",
+        "measure" => "measure",
+        "bcast" => "bcast",
+        "prep" => "prep",
+        "displace" => "displace",
+        _ => "phase",
     }
 }
 

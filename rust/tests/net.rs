@@ -370,6 +370,196 @@ fn interrupted_push_leaves_no_partial_store() {
 }
 
 #[test]
+fn trace_field_skew_old_client_runs_untraced() {
+    use fastmps::net::frame::{Frame, FrameReader, FrameWriter};
+    use fastmps::util::json::Json;
+    use std::io::{BufReader, BufWriter};
+    use std::net::TcpStream;
+
+    // An "old client" — a hand-rolled submit whose job-spec JSON predates
+    // the optional "trace" field (and carries a future field of its own:
+    // skew tolerance must cut both ways). Same preamble, same version.
+    let root = scratch("skew-oldclient");
+    let (_, store_dir) = make_store(&root);
+    let server = NetServer::start(service_cfg(), loopback_net()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut w = FrameWriter::new(BufWriter::new(stream.try_clone().unwrap()));
+    let mut r = FrameReader::new(BufReader::new(stream), 1 << 20);
+    w.write_preamble().unwrap();
+    r.read_preamble().unwrap();
+    let msg = Json::obj(vec![
+        ("op", Json::Str("submit".into())),
+        (
+            "job",
+            Json::obj(vec![
+                ("data", Json::Str(store_dir.display().to_string())),
+                ("samples", Json::Num(32.0)),
+                ("from_the_future", Json::Str("ignored".into())),
+            ]),
+        ),
+    ]);
+    w.write_ctrl(&msg).unwrap();
+    let id = match r.read_frame().unwrap() {
+        Frame::Ctrl(j) => {
+            assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+            j.get("id").unwrap().as_f64().unwrap() as u64
+        }
+        other => panic!("expected submitted ctrl, got {other:?}"),
+    };
+
+    // The job runs to completion, observed over a normal client…
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+    let res = client.wait(id, Duration::from_secs(60)).unwrap().unwrap();
+    assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+    // …untraced: no trace id anywhere, but the job-keyed server spans
+    // (queue wait, worker batch, sink encode) are still replayable.
+    assert!(matches!(res.result.get("trace"), Some(Json::Null)));
+    let reply = client.trace_events(id, 0).unwrap();
+    assert!(matches!(reply.get("trace"), Some(Json::Null)));
+    let events = reply.get("events").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "job-keyed events survive without a trace id");
+    assert!(
+        events.iter().all(|e| e.get("trace").is_none()),
+        "untraced events must omit the trace key"
+    );
+
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn trace_field_skew_old_server_ignores_it() {
+    use fastmps::net::frame::{Frame, FrameReader, FrameWriter};
+    use fastmps::util::json::Json;
+    use std::io::{BufReader, BufWriter};
+    use std::net::TcpListener;
+
+    // An "old server" — a scripted peer with no notion of the "trace"
+    // key. JSON readers skip unknown keys, so a traced submit must go
+    // through unchanged; the job just runs untraced on the far side.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let old_server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut w = FrameWriter::new(BufWriter::new(stream.try_clone().unwrap()));
+        let mut r = FrameReader::new(BufReader::new(stream), 1 << 20);
+        w.write_preamble().unwrap();
+        r.read_preamble().unwrap();
+        let msg = match r.read_frame().unwrap() {
+            Frame::Ctrl(j) => j,
+            other => panic!("expected ctrl frame, got {other:?}"),
+        };
+        assert_eq!(msg.get("op").unwrap().as_str(), Some("submit"));
+        let job = msg.get("job").unwrap();
+        // The new field is on the wire…
+        assert!(job.get("trace").and_then(|v| v.as_str()).is_some());
+        // …but an old reader never looks at it: drop the key wholesale
+        // and the spec must still parse from the remaining fields.
+        let mut pruned = match job.clone() {
+            Json::Obj(m) => m,
+            other => panic!("job spec not an object: {other:?}"),
+        };
+        pruned.remove("trace");
+        let spec = JobSpec::from_json(&Json::Obj(pruned)).unwrap();
+        assert_eq!(spec.n_samples, 16);
+        w.write_ctrl(&Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("type", Json::Str("submitted".into())),
+            ("id", Json::Num(7.0)),
+        ]))
+        .unwrap();
+    });
+
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+    let (id, trace) = client
+        .submit_traced(&JobSpec::new("/tmp/ignored", 16))
+        .unwrap();
+    assert_eq!(id, 7);
+    assert_ne!(trace, 0, "client keeps its trace id even when unechoed");
+    old_server.join().unwrap();
+}
+
+#[test]
+fn trace_op_replays_job_timeline_end_to_end() {
+    use std::collections::BTreeSet;
+
+    let root = scratch("traceop");
+    let (_, store_dir) = make_store(&root);
+    let server = NetServer::start(service_cfg(), loopback_net()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+
+    let (id, trace) = client
+        .submit_traced(&JobSpec::new(&store_dir, 64))
+        .unwrap();
+    assert_ne!(trace, 0);
+    let res = client.wait(id, Duration::from_secs(60)).unwrap().unwrap();
+    assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+    let hex = format!("{trace:016x}");
+    assert_eq!(
+        res.result.get("trace").unwrap().as_str(),
+        Some(hex.as_str()),
+        "trace id round-trips through the job view"
+    );
+
+    // Query by job id alone: the server resolves the trace id itself.
+    let by_job = client.trace_events(id, 0).unwrap();
+    assert_eq!(by_job.get("trace").unwrap().as_str(), Some(hex.as_str()));
+    let events = by_job.get("events").unwrap().as_arr().unwrap().to_vec();
+    assert!(!events.is_empty());
+
+    // The timeline spans the server-side layers end to end, in merged
+    // time order.
+    let layers: BTreeSet<&str> = events
+        .iter()
+        .map(|e| e.get("layer").unwrap().as_str().unwrap())
+        .collect();
+    for want in ["net", "queue", "batcher", "worker", "engine", "sink"] {
+        assert!(layers.contains(want), "missing {want} layer in {layers:?}");
+    }
+    let names: BTreeSet<&str> = events
+        .iter()
+        .map(|e| e.get("name").unwrap().as_str().unwrap())
+        .collect();
+    for want in ["op_submit", "admit", "queue_wait", "batch", "job_done", "encode"] {
+        assert!(names.contains(want), "missing {want} event in {names:?}");
+    }
+    let ts: Vec<f64> = events
+        .iter()
+        .map(|e| e.get("t_us").unwrap().as_f64().unwrap())
+        .collect();
+    assert!(ts.windows(2).all(|p| p[0] <= p[1]), "events sorted by time");
+
+    // Query by trace id alone: at least the same timeline (plus any ops
+    // recorded since, e.g. the by-job trace query itself).
+    let by_trace = client.trace_events(0, trace).unwrap();
+    let n_by_trace = by_trace.get("events").unwrap().as_arr().unwrap().len();
+    assert!(n_by_trace >= events.len(), "{n_by_trace} < {}", events.len());
+
+    // Both renderings work off the same reply: a human timeline and a
+    // chrome://tracing export with one entry per event.
+    let human = fastmps::trace::render_human(&by_job);
+    assert!(human.contains(&hex), "{human}");
+    assert!(human.contains("queue_wait"), "{human}");
+    let chrome = fastmps::trace::chrome_trace(&by_job);
+    let te = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(te.len(), events.len());
+
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
 fn graceful_shutdown_drains_in_flight_jobs() {
     let root = scratch("drain");
     let (_, store_dir) = make_store(&root);

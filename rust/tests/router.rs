@@ -209,6 +209,118 @@ fn busy_backend_spills_over_then_saturation_is_typed_busy() {
 }
 
 #[test]
+fn forced_spillover_replays_as_one_stitched_timeline() {
+    use std::collections::BTreeSet;
+
+    let root = scratch("tracespill");
+    let (_, store_dir) = make_store(&root);
+    // Same saturation setup as the spillover test above: one queue slot
+    // per backend, long linger, so the traced job reliably gets a Busy
+    // from its first-choice backend before landing on the runner-up.
+    let cfg = || ServiceConfig {
+        max_queue: 1,
+        linger_ms: 400,
+        ..backend_cfg()
+    };
+    let b1 = NetServer::start(cfg(), loopback_net()).unwrap();
+    let b2 = NetServer::start(cfg(), loopback_net()).unwrap();
+    let addrs = vec![b1.local_addr().to_string(), b2.local_addr().to_string()];
+    let mut rcfg = router_cfg(addrs.clone());
+    rcfg.retry_budget = 4;
+    let router = Router::start(rcfg, loopback_net()).unwrap();
+    let mut client = Client::connect(&router.local_addr().to_string(), &loopback_net()).unwrap();
+
+    let a = client.submit(&JobSpec::new(&store_dir, 64)).unwrap();
+    let mut spec_b = JobSpec::new(&store_dir, 64);
+    spec_b.sample_base = 64;
+    let (b, trace) = client.submit_traced(&spec_b).unwrap();
+    assert_ne!(trace, 0);
+    assert!(client.wait(b, Duration::from_secs(60)).unwrap().is_some());
+
+    // Replay through the router by the global id alone: the router must
+    // resolve the trace id itself and stitch its own placement events
+    // with the winning backend's, rewriting backend-local job ids.
+    let reply = client.trace_events(b, 0).unwrap();
+    let hex = format!("{trace:016x}");
+    assert_eq!(reply.get("trace").unwrap().as_str(), Some(hex.as_str()));
+    assert_eq!(reply.get("job").unwrap().as_f64(), Some(b as f64));
+    let events = reply.get("events").unwrap().as_arr().unwrap().to_vec();
+    assert!(!events.is_empty());
+
+    // Placement story, in full: an attempt on the rendezvous-first
+    // backend, its busy verdict, the retry on the runner-up, and the
+    // spillover marker — args carry 1-based backend indices.
+    let expected = rendezvous::rank(JobSpec::new(&store_dir, 1).store_key(), &addrs)[0];
+    let first = expected as f64 + 1.0;
+    let second = (1 - expected) as f64 + 1.0;
+    let router_events: Vec<(&str, f64)> = events
+        .iter()
+        .filter(|e| e.get("layer").unwrap().as_str() == Some("router"))
+        .map(|e| {
+            (
+                e.get("name").unwrap().as_str().unwrap(),
+                e.get("arg").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            )
+        })
+        .collect();
+    assert!(
+        router_events.contains(&("attempt", first)),
+        "failed first-choice attempt missing from {router_events:?}"
+    );
+    assert!(router_events.contains(&("busy", first)), "{router_events:?}");
+    assert!(router_events.contains(&("attempt", second)), "{router_events:?}");
+    assert!(router_events.contains(&("spillover", second)), "{router_events:?}");
+    assert!(router_events.iter().any(|(n, _)| *n == "place"));
+
+    // The winning backend's execution spans are in the same timeline…
+    let names: BTreeSet<&str> = events
+        .iter()
+        .map(|e| e.get("name").unwrap().as_str().unwrap())
+        .collect();
+    for want in ["queue_wait", "batch", "job_done", "encode"] {
+        assert!(names.contains(want), "missing backend {want} in {names:?}");
+    }
+    // …keyed by the router-global id, never a backend-local one.
+    for e in &events {
+        if let Some(j) = e.get("job").and_then(|v| v.as_f64()) {
+            assert_eq!(j, b as f64, "backend-local id leaked: {e:?}");
+        }
+    }
+
+    // Merged order: non-decreasing timestamps, and the failed attempt
+    // strictly precedes the winning backend's batch execution.
+    let ts: Vec<f64> = events
+        .iter()
+        .map(|e| e.get("t_us").unwrap().as_f64().unwrap())
+        .collect();
+    assert!(ts.windows(2).all(|p| p[0] <= p[1]), "stitched events sorted");
+    let idx = |name: &str| {
+        events
+            .iter()
+            .position(|e| e.get("name").unwrap().as_str() == Some(name))
+            .unwrap()
+    };
+    assert!(idx("busy") < idx("batch"), "rejection precedes execution");
+
+    // Both renderings accept the stitched reply.
+    let human = fastmps::trace::render_human(&reply);
+    assert!(human.contains("spillover"), "{human}");
+    let chrome = fastmps::trace::chrome_trace(&reply);
+    let te = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(te.len(), events.len());
+    assert!(te
+        .iter()
+        .all(|e| e.get("ts").unwrap().as_f64().unwrap() >= 0.0));
+
+    assert!(client.wait(a, Duration::from_secs(60)).unwrap().is_some());
+    drop(client);
+    drop(router);
+    drop(b1);
+    drop(b2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
 fn router_drain_finishes_in_flight_jobs_and_refuses_new_ones() {
     let root = scratch("drain");
     let (_, store_dir) = make_store(&root);
