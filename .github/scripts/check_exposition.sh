@@ -1,0 +1,175 @@
+#!/usr/bin/env bash
+# Validate the committed Prometheus text-format fixtures
+# (docs/exposition.fixture*.prom) using awk only — no Rust toolchain
+# needed, so this gate runs even where cargo cannot. The fixture is the
+# documented shape of `GET /metrics` (server and router); if the
+# exporter changes, the fixture must change with it.
+#
+# Enforced rules (Prometheus exposition format 0.0.4):
+#   - metric names match [a-zA-Z_:][a-zA-Z0-9_:]* and label names match
+#     [a-zA-Z_][a-zA-Z0-9_]*;
+#   - every family declares `# HELP` then `# TYPE` exactly once, before
+#     its first sample; TYPE is counter|gauge|histogram; no other
+#     comment lines;
+#   - counter families end in `_total` with non-negative samples;
+#   - histogram bucket series are cumulative: per label set the `le`
+#     edges strictly increase, counts never decrease, the `+Inf` bucket
+#     equals the `_count` sample, and `_sum` is present.
+#
+# The same rules live in rust/src/telemetry/prom.rs
+# (validate_exposition), and a unit test there runs against this very
+# fixture — the two validators cannot drift apart silently.
+set -euo pipefail
+cd "$(dirname "$0")/../.."
+
+shopt -s nullglob
+files=(docs/exposition.fixture*.prom)
+if [ ${#files[@]} -eq 0 ]; then
+  echo "no docs/exposition.fixture*.prom files found" >&2
+  exit 1
+fi
+
+status=0
+for f in "${files[@]}"; do
+  if awk '
+    function fail(msg) {
+      printf "%s:%d: %s\n", FILENAME, NR, msg > "/dev/stderr"
+      bad = 1
+    }
+    function numval(s) { if (s == "+Inf") return 1e308; return s + 0 }
+
+    /^$/ { next }
+
+    /^# HELP / {
+      name = $3
+      if (name in help) fail("duplicate HELP for " name)
+      if (name in sampled) fail("HELP for " name " after its samples")
+      help[name] = 1
+      next
+    }
+    /^# TYPE / {
+      name = $3; kind = $4
+      if (!(name in help)) fail("TYPE without preceding HELP for " name)
+      if (name in type) fail("duplicate TYPE for " name)
+      if (name in sampled) fail("TYPE for " name " after its samples")
+      if (kind != "counter" && kind != "gauge" && kind != "histogram")
+        fail("TYPE " name ": unknown kind " kind)
+      type[name] = kind
+      next
+    }
+    /^#/ { fail("comment is neither HELP nor TYPE: " $0); next }
+
+    {
+      line = $0
+      if (match(line, /^[a-zA-Z_:][a-zA-Z0-9_:]*/) == 0) {
+        fail("bad metric name: " line)
+        next
+      }
+      name = substr(line, 1, RLENGTH)
+      rest = substr(line, RLENGTH + 1)
+      labels = ""
+      if (substr(rest, 1, 1) == "{") {
+        close_idx = index(rest, "}")
+        if (close_idx == 0) { fail("unterminated label block: " line); next }
+        labels = substr(rest, 2, close_idx - 2)
+        rest = substr(rest, close_idx + 1)
+      }
+      sub(/^[ \t]+/, "", rest)
+      value = rest
+      if (value !~ /^(-?[0-9][0-9.eE+-]*|[+-]Inf|NaN)$/) {
+        fail("bad sample value \"" value "\": " line)
+        next
+      }
+
+      # Resolve the family: exact name, or histogram suffix.
+      fam = ""
+      if (name in type) {
+        fam = name
+      } else {
+        base = name
+        if (sub(/_bucket$/, "", base) || sub(/_sum$/, "", base) ||
+            sub(/_count$/, "", base)) {
+          if (base in type && type[base] == "histogram") fam = base
+        }
+      }
+      if (fam == "") { fail("sample for undeclared family: " name); next }
+      sampled[fam] = 1
+
+      # Label hygiene; pull out le and the le-less label set.
+      le = ""; lset = ""
+      if (labels != "") {
+        n = split(labels, parts, /",/)
+        for (i = 1; i <= n; i++) {
+          p = parts[i]
+          sub(/"$/, "", p)
+          eq = index(p, "=\"")
+          if (eq == 0) { fail("malformed label \"" p "\": " line); continue }
+          k = substr(p, 1, eq - 1)
+          v = substr(p, eq + 2)
+          if (k !~ /^[a-zA-Z_][a-zA-Z0-9_]*$/)
+            fail("bad label name \"" k "\": " line)
+          if (k == "le") le = v
+          else lset = lset k "=" v ";"
+        }
+      }
+
+      if (type[fam] == "counter") {
+        if (name != fam) fail("counter " fam " with suffix sample " name)
+        if (fam !~ /_total$/) fail("counter " fam " does not end in _total")
+        if (value + 0 < 0) fail("counter " fam " is negative: " value)
+      }
+
+      if (type[fam] == "histogram") {
+        key = fam SUBSEP lset
+        hseen[key] = fam
+        if (name == fam "_bucket") {
+          if (le == "") { fail("bucket without le label: " line); next }
+          e = numval(le)
+          c = value + 0
+          if ((key in lastle) && e <= lastle[key])
+            fail("histogram " fam ": le edges not strictly increasing")
+          if ((key in lastcum) && c < lastcum[key])
+            fail("histogram " fam ": cumulative counts decreased")
+          lastle[key] = e
+          lastcum[key] = c
+          if (le == "+Inf") { haveinf[key] = 1; infcnt[key] = c }
+        } else if (name == fam "_sum") {
+          havesum[key] = 1
+        } else if (name == fam "_count") {
+          havecount[key] = 1
+          cnt[key] = value + 0
+        } else if (name == fam) {
+          fail("histogram " fam " with a bare sample line")
+        }
+      }
+    }
+
+    END {
+      for (key in hseen) {
+        fam = hseen[key]
+        if (!(key in haveinf)) {
+          printf "histogram %s: series without +Inf bucket\n", fam > "/dev/stderr"
+          bad = 1
+        }
+        if (!(key in havecount)) {
+          printf "histogram %s: series without _count\n", fam > "/dev/stderr"
+          bad = 1
+        } else if ((key in haveinf) && infcnt[key] != cnt[key]) {
+          printf "histogram %s: +Inf bucket %d != _count %d\n", fam, infcnt[key], cnt[key] > "/dev/stderr"
+          bad = 1
+        }
+        if (!(key in havesum)) {
+          printf "histogram %s: series without _sum\n", fam > "/dev/stderr"
+          bad = 1
+        }
+      }
+      exit bad ? 1 : 0
+    }
+  ' "$f" > /dev/null; then
+    echo "ok   $f"
+  else
+    echo "FAIL $f violates the exposition format rules" >&2
+    status=1
+  fi
+done
+exit $status

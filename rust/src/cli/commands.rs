@@ -49,11 +49,12 @@ COMMANDS:
               [--target-batch N] [--compute C] [--scaling S] [--engine E]
               [--threads N] [--gemm-split auto|rows|cols] [--prep-mb N]
               [--disk-bw BPS] [--artifacts DIR] [--trace-buf N]
-              [--max-seconds S] [--json]
+              [--max-seconds S] [--log-level L] [--json]
               file only: [--drain]
               tcp only:  [--max-conns N] [--frame-mb N]
                          [--read-timeout-ms N] [--write-timeout-ms N]
                          [--push-dir DIR] [--chunk-kb N] [--staging-mb N]
+                         [--telemetry-interval S] [--metrics-listen ADDR]
   route       Front a fleet of TCP serve instances with store-affinity routing
               --listen ADDR --backend ADDR [--backend ADDR ...]
               [--probe-ms N] [--degraded-after N] [--down-after N]
@@ -61,7 +62,8 @@ COMMANDS:
               [--jitter-ms N] [--drain-cap-s N] [--seed N]
               [--max-conns N] [--frame-mb N] [--trace-buf N]
               [--read-timeout-ms N] [--write-timeout-ms N]
-              [--max-seconds S] [--json]
+              [--telemetry-interval S] [--metrics-listen ADDR]
+              [--max-seconds S] [--log-level L] [--json]
   push        Upload a store to a server/router (chunked, content-addressed)
               --connect ADDR --data STORE [--chunk-kb N] [--json]
               Prints the content key; submit jobs with --key afterwards —
@@ -82,11 +84,19 @@ COMMANDS:
               Works against a server or a router (router timelines stitch
               in the owning backend's events). --chrome writes Chrome
               trace_event JSON for chrome://tracing / Perfetto.
+  top         Live terminal dashboard from a server/router telemetry ring
+              --connect ADDR [--interval S] [--once] [--log-level L]
+              Shows queue depth, jobs/s, net bytes/s, cache hit rate, and
+              p50/p99 latency sparklines; per-backend rows against a
+              router. --once prints a single frame and exits.
   stop        Gracefully drain and stop a TCP server, print final metrics
               --connect ADDR [--timeout-s S] [--json]
   bench-service  Smoke-benchmark the service path, emit KPI JSON
               [--n-jobs N] [--samples N] [--out FILE]
   help        This text
+
+--log-level L (error|warn|info|debug|trace) overrides the FASTMPS_LOG
+environment variable for this invocation.
 ";
 
 pub fn run_cli(argv: &[String]) -> Result<()> {
@@ -108,6 +118,7 @@ pub fn run_cli(argv: &[String]) -> Result<()> {
         "submit" => cmd_submit(&args),
         "jobs" => cmd_jobs(&args),
         "metrics" => cmd_metrics(&args),
+        "top" => cmd_top(&args),
         "trace" => cmd_trace(&args),
         "stop" => cmd_stop(&args),
         "bench-service" => cmd_bench_service(&args),
@@ -418,7 +429,32 @@ fn net_config_from_args(args: &Args, addr: String) -> Result<NetConfig> {
         push_dir: args.str_opt("push-dir").map(PathBuf::from),
         push_chunk_bytes: args.usize_or("chunk-kb", d.push_chunk_bytes >> 10)? << 10,
         push_staging_bytes: args.u64_or("staging-mb", d.push_staging_bytes >> 20)? << 20,
+        telemetry_interval_ms: match args.f64_opt("telemetry-interval")? {
+            Some(s) => (s * 1000.0).round() as u64,
+            None => d.telemetry_interval_ms,
+        },
+        metrics_listen: args.str_opt("metrics-listen").map(String::from),
     })
+}
+
+/// Apply `--log-level` (overrides the `FASTMPS_LOG` environment variable).
+fn apply_log_level(args: &Args) -> Result<()> {
+    use crate::util::logging::{set_level, Level};
+    if let Some(l) = args.str_opt("log-level") {
+        set_level(match l {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            other => {
+                return Err(Error::config(format!(
+                    "--log-level: '{other}' (error|warn|info|debug|trace)"
+                )))
+            }
+        });
+    }
+    Ok(())
 }
 
 fn connect(addr: &str) -> Result<Client> {
@@ -426,6 +462,7 @@ fn connect(addr: &str) -> Result<Client> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    apply_log_level(args)?;
     if let Some(addr) = args.str_opt("listen").map(String::from) {
         return cmd_serve_net(args, addr);
     }
@@ -474,6 +511,9 @@ fn cmd_serve_net(args: &Args, addr: String) -> Result<()> {
     let server = NetServer::start(cfg, net)?;
     let addr = server.local_addr();
     println!("listening on {addr} (stop: fastmps stop --connect {addr})");
+    if let Some(m) = server.metrics_addr() {
+        println!("prometheus exposition on http://{m}/metrics");
+    }
     server.run_until_shutdown(max_secs);
     let metrics = server.shutdown();
     if as_json {
@@ -516,6 +556,7 @@ fn router_config_from_args(args: &Args) -> Result<RouterConfig> {
 }
 
 fn cmd_route(args: &Args) -> Result<()> {
+    apply_log_level(args)?;
     let addr = args.req("listen")?.to_string();
     let cfg = router_config_from_args(args)?;
     let net = net_config_from_args(args, addr)?;
@@ -528,6 +569,9 @@ fn cmd_route(args: &Args) -> Result<()> {
         "routing on {addr} across {} backends (stop: fastmps stop --connect {addr})",
         router.health().len()
     );
+    if let Some(m) = router.metrics_addr() {
+        println!("prometheus exposition on http://{m}/metrics");
+    }
     router.run_until_shutdown(max_secs);
     let metrics = router.shutdown();
     if as_json {
@@ -781,6 +825,30 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_top(args: &Args) -> Result<()> {
+    apply_log_level(args)?;
+    let addr = args.req("connect")?.to_string();
+    let interval = args.f64_opt("interval")?.unwrap_or(1.0).max(0.05);
+    let once = args.flag("once");
+    args.finish()?;
+    let mut client = connect(&addr)?;
+    loop {
+        let reply = client.telemetry()?;
+        let view = crate::telemetry::top::TopView::parse(&addr, &reply);
+        let frame = crate::telemetry::top::render(&view);
+        if once {
+            print!("{frame}");
+            return Ok(());
+        }
+        // Clear + home between frames; the frame itself carries no ANSI,
+        // so --once output stays pipe- and test-friendly.
+        print!("\x1b[2J\x1b[H{frame}");
+        use std::io::Write;
+        let _ = std::io::stdout().flush();
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
+}
+
 fn cmd_trace(args: &Args) -> Result<()> {
     let addr = args.req("connect")?.to_string();
     let job: u64 = match args.pos(0) {
@@ -983,6 +1051,8 @@ mod tests {
         run_cli(&argv(&format!("jobs --connect {addr}"))).unwrap();
         run_cli(&argv(&format!("metrics --connect {addr}"))).unwrap();
         run_cli(&argv(&format!("metrics --connect {addr} --json"))).unwrap();
+        // One dashboard frame over the telemetry ring (no ANSI in --once).
+        run_cli(&argv(&format!("top --connect {addr} --once"))).unwrap();
         // The flight recorder is on by default: the job's timeline
         // replays in human form and exports as valid Chrome JSON.
         run_cli(&argv(&format!("trace 1 --connect {addr}"))).unwrap();
@@ -1059,6 +1129,13 @@ mod tests {
     #[test]
     fn route_requires_backends() {
         assert!(run_cli(&argv("route --listen 127.0.0.1:0")).is_err());
+    }
+
+    #[test]
+    fn bad_log_level_rejected() {
+        // apply_log_level runs before any socket is dialed, so this fails
+        // fast with a config error, not a connect error.
+        assert!(run_cli(&argv("top --connect 127.0.0.1:1 --log-level silly")).is_err());
     }
 
     #[test]

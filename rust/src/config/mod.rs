@@ -403,6 +403,15 @@ pub struct NetConfig {
     /// Server side: max announced size of one incoming push — the staging
     /// quota a single `push_begin` may claim.
     pub push_staging_bytes: u64,
+    /// Telemetry sampling period: how often `serve`/`route` snapshot
+    /// counters and quantiles into their time-series ring, and how
+    /// often a router scrapes its backends (`--telemetry-interval`).
+    pub telemetry_interval_ms: u64,
+    /// Where to serve the Prometheus `GET /metrics` endpoint
+    /// (`--metrics-listen ADDR`, port 0 = ephemeral). `None` (the
+    /// default) disables the HTTP exporter; the `telemetry` FMPN op
+    /// and the ring sampler run regardless.
+    pub metrics_listen: Option<String>,
 }
 
 impl Default for NetConfig {
@@ -416,6 +425,8 @@ impl Default for NetConfig {
             push_dir: None,
             push_chunk_bytes: 1 << 20,
             push_staging_bytes: 4 << 30,
+            telemetry_interval_ms: 1000,
+            metrics_listen: None,
         }
     }
 }
@@ -467,6 +478,16 @@ impl NetConfig {
                 "net: push_staging_bytes below push_chunk_bytes",
             ));
         }
+        if self.telemetry_interval_ms < 10 {
+            return Err(Error::config(
+                "net: telemetry_interval_ms must be ≥ 10 ms",
+            ));
+        }
+        if let Some(addr) = &self.metrics_listen {
+            if addr.is_empty() {
+                return Err(Error::config("net: metrics_listen must not be empty"));
+            }
+        }
         Ok(())
     }
 
@@ -488,6 +509,17 @@ impl NetConfig {
             (
                 "push_staging_bytes",
                 Json::Num(self.push_staging_bytes as f64),
+            ),
+            (
+                "telemetry_interval_ms",
+                Json::Num(self.telemetry_interval_ms as f64),
+            ),
+            (
+                "metrics_listen",
+                self.metrics_listen
+                    .as_ref()
+                    .map(|a| Json::Str(a.clone()))
+                    .unwrap_or(Json::Null),
             ),
         ])
     }
@@ -775,6 +807,26 @@ mod tests {
         let n = NetConfig::default();
         n.validate().unwrap();
         assert_eq!(n.to_json().get("max_conns").unwrap().as_usize(), Some(64));
+        assert_eq!(
+            n.to_json().get("telemetry_interval_ms").unwrap().as_usize(),
+            Some(1000)
+        );
+        assert_eq!(n.to_json().get("metrics_listen"), Some(&Json::Null));
+        let bad = NetConfig {
+            telemetry_interval_ms: 5,
+            ..NetConfig::default()
+        };
+        assert!(bad.validate().is_err(), "sub-10ms sampling");
+        let bad = NetConfig {
+            metrics_listen: Some(String::new()),
+            ..NetConfig::default()
+        };
+        assert!(bad.validate().is_err(), "empty metrics_listen");
+        let ok = NetConfig {
+            metrics_listen: Some("127.0.0.1:0".into()),
+            ..NetConfig::default()
+        };
+        ok.validate().unwrap();
         let bad = NetConfig {
             max_conns: 0,
             ..NetConfig::default()

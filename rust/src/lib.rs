@@ -29,6 +29,11 @@
 //!   buffers of span events in every component, stitched by trace id
 //!   into end-to-end per-job timelines (`fastmps trace`,
 //!   `docs/OBSERVABILITY.md`).
+//! - **Telemetry (`telemetry`)**: the continuous-monitoring plane —
+//!   background time-series rings in `serve`/`route`, a Prometheus
+//!   text exposition at `GET /metrics` (`--metrics-listen`), a router
+//!   fleet poller labeling each backend's series, and the `fastmps
+//!   top` live dashboard.
 
 pub mod cli;
 pub mod comm;
@@ -45,6 +50,7 @@ pub mod router;
 pub mod runtime;
 pub mod sampler;
 pub mod service;
+pub mod telemetry;
 pub mod tensor;
 pub mod trace;
 pub mod util;

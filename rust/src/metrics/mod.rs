@@ -126,6 +126,15 @@ pub mod keys {
     /// Server-side per-chunk handling time during a store push.
     pub const HIST_PUSH_CHUNK: &str = "push_chunk_secs";
 
+    // Health-state transition totals ([`crate::router::BackendHealth`]):
+    // entries *into* the named state, summed over a router's backends.
+    // Named with an explicit `_total` so the Prometheus exposition
+    // keeps the key verbatim.
+    /// Backend transitions into `degraded`.
+    pub const ROUTER_HEALTH_DEGRADED: &str = "router_health_degraded_total";
+    /// Backend transitions into `down`.
+    pub const ROUTER_HEALTH_DOWN: &str = "router_health_down_total";
+
     /// Peak gauges ([`super::Metrics::set_max`]) that
     /// [`super::Metrics::merge`] combines with max instead of summing.
     pub const PEAK_GAUGES: [&str; 2] = [QUEUE_PEAK, NET_CONN_PEAK];
@@ -380,6 +389,12 @@ impl HistogramStats {
     /// Lower bound (seconds) of bucket `i`.
     pub fn bucket_floor(i: usize) -> f64 {
         (2.0f64).powi(i as i32 + HIST_MIN_EXP)
+    }
+
+    /// Raw per-bucket counts (the telemetry exposition maps these to
+    /// cumulative `le` buckets; see `telemetry::prom::cumulative_le`).
+    pub fn bucket_counts(&self) -> &[u64; HIST_BUCKETS] {
+        &self.buckets
     }
 
     pub fn record(&mut self, secs: f64) {
@@ -802,5 +817,71 @@ mod tests {
         let j = m.to_json().dump();
         let v = crate::util::json::Json::parse(&j).unwrap();
         assert_eq!(v.get("phases").unwrap().get("x").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn empty_histogram_statistics_are_absent_not_zero() {
+        let h = HistogramStats::new();
+        assert_eq!(h.count, 0);
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.quantile(0.99), None);
+        assert_eq!(h.mean(), None);
+        assert!(h.bucket_counts().iter().all(|&n| n == 0));
+        let j = h.to_json();
+        assert_eq!(j.get("p50_secs"), Some(&crate::util::json::Json::Null));
+        assert_eq!(j.get("mean_secs"), Some(&crate::util::json::Json::Null));
+    }
+
+    #[test]
+    fn huge_values_land_in_the_top_overflow_bucket() {
+        let mut h = HistogramStats::new();
+        // 2^13 s == the exact floor of the last bucket; anything
+        // beyond (hours, or absurd values) clamps into it too.
+        for v in [(2.0f64).powi(13), 1e6, 1e30] {
+            h.record(v);
+        }
+        let counts = h.bucket_counts();
+        assert_eq!(counts[HIST_BUCKETS - 1], 3);
+        assert!(counts[..HIST_BUCKETS - 1].iter().all(|&n| n == 0));
+        // Quantiles stay the geometric midpoint of the overflow
+        // bucket, clamped inside the observed [min, max] window.
+        let p99 = h.quantile(0.99).unwrap();
+        let mid = HistogramStats::bucket_floor(HIST_BUCKETS - 1) * std::f64::consts::SQRT_2;
+        assert_eq!(p99, mid);
+        assert!(p99 >= h.min && p99 <= h.max);
+        assert_eq!(h.min, (2.0f64).powi(13));
+        assert_eq!(h.max, 1e30);
+    }
+
+    #[test]
+    fn merge_of_disjoint_sparse_buckets_keeps_both() {
+        let mut lo = HistogramStats::new();
+        // Both land in bucket 0: [2^-30, 2^-29) covers ~0.93–1.86 ns.
+        lo.record(1e-9);
+        lo.record(1.5e-9);
+        let mut hi = HistogramStats::new();
+        hi.record(100.0);
+        lo.merge(&hi);
+        assert_eq!(lo.count, 3);
+        assert_eq!(lo.min, 1e-9);
+        assert_eq!(lo.max, 100.0);
+        let occupied: Vec<usize> = lo
+            .bucket_counts()
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(occupied.len(), 2, "disjoint buckets must not collapse");
+        // Sparse JSON export keeps both, ascending, summing to count.
+        let j = lo.to_json();
+        let pairs = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(pairs.len(), 2);
+        let idx: Vec<usize> =
+            pairs.iter().map(|p| p.as_arr().unwrap()[0].as_usize().unwrap()).collect();
+        assert!(idx[0] < idx[1]);
+        let total: f64 =
+            pairs.iter().map(|p| p.as_arr().unwrap()[1].as_f64().unwrap()).sum();
+        assert_eq!(total as u64, lo.count);
     }
 }

@@ -387,6 +387,17 @@ impl Client {
             .ok_or_else(|| Error::format("net wire: metrics reply without metrics"))
     }
 
+    /// Ring history for dashboards (`fastmps top`): the whole
+    /// `telemetry` reply — `interval_ms`, `samples` (oldest first),
+    /// and, from a router, per-backend `backends` entries with their
+    /// own sample rings.
+    pub fn telemetry(&mut self) -> Result<Json> {
+        let msg = Json::obj(vec![("op", Json::Str("telemetry".into()))]);
+        let r = self.rpc_timed(&msg, "telemetry", 0, 0)?;
+        Self::expect(&r, "telemetry")?;
+        Ok(r)
+    }
+
     /// Upload the `GammaStore` at `dir` (chunked, content-addressed; see
     /// `docs/PROTOCOL.md` § Chunked store push). Returns the content key
     /// to submit jobs by ([`JobSpec::by_key`]); `dedup == true` means the

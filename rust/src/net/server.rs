@@ -28,6 +28,7 @@ use super::frame::{self, Frame, FrameReader, FrameWriter};
 use crate::config::{NetConfig, ServiceConfig};
 use crate::metrics::{keys, Metrics};
 use crate::service::{JobId, JobSpec, Service};
+use crate::telemetry::{self, http::MetricsHttp, TsRing};
 use crate::trace::Layer;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
@@ -95,6 +96,9 @@ struct Shared {
     svc: Service,
     net: NetConfig,
     stats: NetStats,
+    /// Time-series ring the telemetry sampler writes every interval
+    /// (`telemetry` op + `fastmps top`).
+    ring: TsRing,
     /// Close connections and stop the accept loop.
     stop: AtomicBool,
     /// A client asked for shutdown; `run_until_shutdown` observes this.
@@ -120,6 +124,41 @@ impl Shared {
         }
     }
 
+    /// One telemetry sample off the live service — a few atomic loads,
+    /// two short lock holds, no registry clone, no allocation beyond
+    /// the fixed-size histogram copy on the stack.
+    fn telemetry_sample(&self) -> telemetry::TsSample {
+        let q = self.svc.queue();
+        let (submitted, _rejected, completed, failed) = q.job_counters();
+        let qw = q.queue_wait_stats();
+        let (samples_done, steps) = self
+            .svc
+            .with_metrics(|m| (m.get(keys::SAMPLES), m.get(keys::STEPS)));
+        let hits = self.svc.cache().hits();
+        let lookups = hits + self.svc.cache().misses();
+        telemetry::TsSample {
+            unix_ms: telemetry::now_unix_ms(),
+            queue_depth: q.depth() as u64,
+            inflight_batches: self.svc.inflight_batches() as u64,
+            cache_hit_rate: if lookups > 0 {
+                Some(hits as f64 / lookups as f64)
+            } else {
+                None
+            },
+            jobs_submitted: submitted,
+            jobs_completed: completed,
+            jobs_failed: failed,
+            samples_done,
+            steps,
+            net_bytes_in: self.stats.bytes_in.load(Ordering::Relaxed),
+            net_bytes_out: self.stats.bytes_out.load(Ordering::Relaxed),
+            queue_wait_p50: qw.quantile(0.5),
+            queue_wait_p99: qw.quantile(0.99),
+            rtt_p50: None,
+            rtt_p99: None,
+        }
+    }
+
     /// Stop admissions and block until every in-flight job is terminal.
     fn drain(&self, cap: Duration) {
         self.svc.queue().shutdown();
@@ -137,6 +176,8 @@ pub struct NetServer {
     shared: Arc<Shared>,
     addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
+    sampler: Option<JoinHandle<()>>,
+    exporter: Option<MetricsHttp>,
 }
 
 impl NetServer {
@@ -162,10 +203,27 @@ impl NetServer {
             svc,
             net,
             stats: NetStats::default(),
+            ring: TsRing::new(telemetry::RING_CAPACITY),
             stop: AtomicBool::new(false),
             shutdown_requested: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
         });
+        // Start the exporter before any thread spawns: a bind failure
+        // on the metrics address aborts startup cleanly (dropping
+        // `shared` joins the service).
+        let exporter = match shared.net.metrics_listen.clone() {
+            Some(listen) => {
+                let sh = shared.clone();
+                let render: telemetry::http::RenderFn =
+                    Arc::new(move || telemetry::prom::render_document(&sh.metrics_json()));
+                Some(MetricsHttp::start(&listen, render)?)
+            }
+            None => None,
+        };
+        let sampler = {
+            let shared = shared.clone();
+            std::thread::spawn(move || telemetry_loop(shared))
+        };
         let accept = {
             let shared = shared.clone();
             std::thread::spawn(move || accept_loop(listener, shared))
@@ -174,12 +232,20 @@ impl NetServer {
             shared,
             addr,
             accept: Some(accept),
+            sampler: Some(sampler),
+            exporter,
         })
     }
 
     /// The bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Where the Prometheus `/metrics` endpoint listens (resolves port
+    /// 0); `None` unless `metrics_listen` is configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.exporter.as_ref().map(|e| e.local_addr())
     }
 
     /// The service behind the listener (for embedding and tests).
@@ -217,6 +283,12 @@ impl NetServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.sampler.take() {
+            let _ = h.join();
+        }
+        if let Some(mut e) = self.exporter.take() {
+            e.shutdown();
+        }
         let conns: Vec<JoinHandle<()>> =
             std::mem::take(&mut *self.shared.conns.lock().unwrap());
         for h in conns {
@@ -252,6 +324,28 @@ impl NetServer {
 impl Drop for NetServer {
     fn drop(&mut self) {
         self.stop_and_join();
+    }
+}
+
+/// Background telemetry sampler: one ring snapshot immediately (so
+/// `top` has data right after boot), then one per interval until stop.
+/// The sleep is chopped into ≤ 10 ms ticks so shutdown never waits out
+/// a full interval.
+fn telemetry_loop(shared: Arc<Shared>) {
+    loop {
+        shared.ring.snapshot(shared.telemetry_sample());
+        let deadline =
+            Instant::now() + Duration::from_millis(shared.net.telemetry_interval_ms);
+        loop {
+            if shared.stopping() {
+                return;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            std::thread::sleep(left.min(Duration::from_millis(10)));
+        }
     }
 }
 
@@ -468,6 +562,7 @@ fn op_span_name(op: &str) -> &'static str {
         "cancel" => "op_cancel",
         "list" => "op_list",
         "metrics" => "op_metrics",
+        "telemetry" => "op_telemetry",
         "trace" => "op_trace",
         "shutdown" => "op_shutdown",
         _ => "op_other",
@@ -568,6 +663,18 @@ fn handle_op(msg: &Json, tx: &Sender<Out>, shared: &Arc<Shared>) -> Result<bool>
         }
         "metrics" => {
             send(reply_ok("metrics", vec![("metrics", shared.metrics_json())]))?;
+        }
+        "telemetry" => {
+            send(reply_ok(
+                "telemetry",
+                vec![
+                    (
+                        "interval_ms",
+                        Json::Num(shared.net.telemetry_interval_ms as f64),
+                    ),
+                    ("samples", shared.ring.to_json()),
+                ],
+            ))?;
         }
         "trace" => {
             // Either filter may be present: a job id, a 16-hex trace id,

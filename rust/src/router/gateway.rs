@@ -41,6 +41,7 @@ use crate::net::frame::{self, Frame, FrameReader, FrameWriter};
 use crate::net::server::{lame_duck_reject, reap_conns, reply_err, reply_ok};
 use crate::net::Client;
 use crate::service::{JobId, JobSpec};
+use crate::telemetry::{self, http::MetricsHttp, prom::Exposition, TsRing};
 use crate::util::backoff::Backoff;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
@@ -150,6 +151,15 @@ struct RouteTable {
     by_backend: BTreeMap<(usize, JobId), JobId>,
 }
 
+/// Per-backend telemetry held by the fleet poller: the last successfully
+/// scraped metrics document plus a ring of samples derived from it. The
+/// document is kept (stale) across scrape failures so the exposition and
+/// `fastmps top` never flicker empty while a backend blips.
+struct FleetBackend {
+    ring: TsRing,
+    doc: Mutex<Option<Json>>,
+}
+
 struct Shared {
     cfg: RouterConfig,
     net: NetConfig,
@@ -161,6 +171,10 @@ struct Shared {
     rec: Arc<Recorder>,
     /// Backend-leg round-trip latency, folded from connection threads.
     net_rtt: Mutex<HistogramStats>,
+    /// Router-side telemetry ring, sampled on the telemetry interval.
+    ring: TsRing,
+    /// Scraped backend telemetry, index-aligned with `backends`.
+    fleet: Vec<FleetBackend>,
     table: Mutex<RouteTable>,
     /// Close connections and stop the accept/probe loops.
     stop: AtomicBool,
@@ -274,11 +288,49 @@ impl Shared {
         self.counters[b].forwards.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One router-side telemetry sample: routing-table occupancy as the
+    /// queue depth, the backend-leg RTT quantiles, and the listener's
+    /// wire counters. Engine-side fields (steps, cache hits) stay at
+    /// their defaults — those belong to the scraped backend samples.
+    fn telemetry_sample(&self) -> telemetry::TsSample {
+        let (rtt_p50, rtt_p99) = {
+            let rtt = self.net_rtt.lock().unwrap();
+            (rtt.quantile(0.5), rtt.quantile(0.99))
+        };
+        let (routed, in_flight) = {
+            let t = self.table.lock().unwrap();
+            let live = t.by_global.values().filter(|r| !r.terminal).count();
+            (t.by_global.len() as u64, live as u64)
+        };
+        let dropped = self.stats.dropped_jobs.load(Ordering::Relaxed);
+        telemetry::TsSample {
+            unix_ms: telemetry::now_unix_ms(),
+            queue_depth: in_flight,
+            jobs_submitted: self.stats.submits.load(Ordering::Relaxed),
+            jobs_completed: (routed - in_flight).saturating_sub(dropped),
+            jobs_failed: dropped,
+            net_bytes_in: self.stats.bytes_in.load(Ordering::Relaxed),
+            net_bytes_out: self.stats.bytes_out.load(Ordering::Relaxed),
+            rtt_p50,
+            rtt_p99,
+            ..Default::default()
+        }
+    }
+
     /// Full router metrics: aggregate counters, per-backend health +
     /// counters, and routing-table occupancy.
     fn metrics_json(&self) -> Json {
         let mut m = Metrics::new();
         self.stats.account(&mut m);
+        {
+            let (mut degraded, mut down) = (0u64, 0u64);
+            for h in &self.backends {
+                degraded += h.degraded_transitions.load(Ordering::Relaxed);
+                down += h.down_transitions.load(Ordering::Relaxed);
+            }
+            m.add(keys::ROUTER_HEALTH_DEGRADED, degraded);
+            m.add(keys::ROUTER_HEALTH_DOWN, down);
+        }
         {
             let rtt = self.net_rtt.lock().unwrap();
             if rtt.count > 0 {
@@ -306,6 +358,14 @@ impl Shared {
                         (
                             "probe_failures",
                             Json::Num(h.probe_failures.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "degraded_transitions",
+                            Json::Num(h.degraded_transitions.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "down_transitions",
+                            Json::Num(h.down_transitions.load(Ordering::Relaxed) as f64),
                         ),
                         (
                             "submits",
@@ -421,6 +481,8 @@ pub struct Router {
     addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
     probe: Option<JoinHandle<()>>,
+    poller: Option<JoinHandle<()>>,
+    exporter: Option<MetricsHttp>,
 }
 
 impl Router {
@@ -443,6 +505,14 @@ impl Router {
             .map(|a| Arc::new(BackendHealth::new(a.clone())))
             .collect();
         let counters = cfg.backends.iter().map(|_| BackendCounters::default()).collect();
+        let fleet = cfg
+            .backends
+            .iter()
+            .map(|_| FleetBackend {
+                ring: TsRing::new(telemetry::RING_CAPACITY),
+                doc: Mutex::new(None),
+            })
+            .collect();
         let rec = Arc::new(Recorder::new(cfg.trace_buf));
         let shared = Arc::new(Shared {
             cfg,
@@ -452,6 +522,8 @@ impl Router {
             stats: RouterStats::default(),
             rec,
             net_rtt: Mutex::new(HistogramStats::new()),
+            ring: TsRing::new(telemetry::RING_CAPACITY),
+            fleet,
             table: Mutex::new(RouteTable {
                 next_id: 1,
                 by_global: BTreeMap::new(),
@@ -462,9 +534,24 @@ impl Router {
             shutdown_requested: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
         });
+        // Exporter first: a bad --metrics-listen address aborts startup
+        // cleanly, before any thread needs joining.
+        let exporter = match shared.net.metrics_listen.clone() {
+            Some(listen) => {
+                let sh = shared.clone();
+                let render: crate::telemetry::http::RenderFn =
+                    Arc::new(move || render_fleet(&sh));
+                Some(MetricsHttp::start(&listen, render)?)
+            }
+            None => None,
+        };
         let probe = {
             let shared = shared.clone();
             std::thread::spawn(move || probe_loop(shared))
+        };
+        let poller = {
+            let shared = shared.clone();
+            std::thread::spawn(move || fleet_poll_loop(shared))
         };
         let accept = {
             let shared = shared.clone();
@@ -475,12 +562,20 @@ impl Router {
             addr,
             accept: Some(accept),
             probe: Some(probe),
+            poller: Some(poller),
+            exporter,
         })
     }
 
     /// The bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The Prometheus exporter's bound address, when `metrics_listen` is
+    /// configured (resolves port 0).
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.exporter.as_ref().map(|e| e.local_addr())
     }
 
     /// Current router metrics (aggregate + per-backend).
@@ -522,6 +617,12 @@ impl Router {
         }
         if let Some(h) = self.probe.take() {
             let _ = h.join();
+        }
+        if let Some(h) = self.poller.take() {
+            let _ = h.join();
+        }
+        if let Some(e) = self.exporter.as_mut() {
+            e.shutdown();
         }
         let conns: Vec<JoinHandle<()>> = std::mem::take(&mut *self.shared.conns.lock().unwrap());
         for h in conns {
@@ -580,6 +681,77 @@ fn probe_loop(shared: Arc<Shared>) {
             std::thread::sleep(left.min(Duration::from_millis(10)));
         }
     }
+}
+
+/// Telemetry sweep: one router-side ring sample plus a `metrics` scrape
+/// of every backend per telemetry interval. Mirrors `probe_loop`'s
+/// timeout tightening so one wedged backend cannot stall the sweep — but
+/// unlike the prober it never touches health state: a failed scrape just
+/// keeps the backend's previous document (the prober owns liveness).
+fn fleet_poll_loop(shared: Arc<Shared>) {
+    let interval_ms = shared.net.telemetry_interval_ms.max(10);
+    let net = NetConfig {
+        read_timeout_ms: shared.net.read_timeout_ms.min(interval_ms.max(250)),
+        write_timeout_ms: shared.net.write_timeout_ms.min(interval_ms.max(250)),
+        ..shared.net.clone()
+    };
+    while !shared.stopping() {
+        shared.ring.snapshot(shared.telemetry_sample());
+        for (i, h) in shared.backends.iter().enumerate() {
+            if shared.stopping() {
+                return;
+            }
+            let doc = Client::connect(&h.addr, &net)
+                .and_then(|mut c| c.metrics())
+                .ok();
+            if let Some(doc) = doc {
+                let sample =
+                    telemetry::TsSample::from_metrics_json(&doc, telemetry::now_unix_ms());
+                shared.fleet[i].ring.snapshot(sample);
+                *shared.fleet[i].doc.lock().unwrap() = Some(doc);
+            }
+        }
+        let deadline = Instant::now() + Duration::from_millis(interval_ms);
+        loop {
+            if shared.stopping() {
+                return;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            std::thread::sleep(left.min(Duration::from_millis(10)));
+        }
+    }
+}
+
+/// Render the fleet exposition: the router's own document unlabeled,
+/// then per backend a health-state gauge, an info series carrying the
+/// address, and the last scraped backend document with a
+/// `backend="<index>"` label on every series.
+fn render_fleet(shared: &Shared) -> String {
+    let mut exp = Exposition::new();
+    exp.add_metrics_json(&shared.metrics_json(), &[]);
+    for (i, h) in shared.backends.iter().enumerate() {
+        let idx = i.to_string();
+        let labels: [(&str, &str); 1] = [("backend", idx.as_str())];
+        exp.gauge(
+            "router_backend_state",
+            "Backend health as seen by the prober: 0 alive, 1 degraded, 2 down.",
+            &labels,
+            h.state() as u8 as f64,
+        );
+        exp.gauge(
+            "router_backend_info",
+            "Constant 1; the labels carry the backend address.",
+            &[("backend", idx.as_str()), ("addr", h.addr.as_str())],
+            1.0,
+        );
+        if let Some(doc) = shared.fleet[i].doc.lock().unwrap().as_ref() {
+            exp.add_metrics_json(doc, &labels);
+        }
+    }
+    exp.render()
 }
 
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
@@ -895,6 +1067,34 @@ fn handle_op(
             // snapshot includes the forwards that led up to the ask.
             shared.fold_rtt(conns.take_rtt());
             w.write_ctrl(&reply_ok("metrics", vec![("metrics", shared.metrics_json())]))?;
+        }
+        "telemetry" => {
+            let backends = Json::Arr(
+                shared
+                    .backends
+                    .iter()
+                    .enumerate()
+                    .map(|(i, h)| {
+                        Json::obj(vec![
+                            ("backend", Json::Num(i as f64)),
+                            ("addr", Json::Str(h.addr.clone())),
+                            ("state", Json::Str(h.state().as_str().into())),
+                            ("samples", shared.fleet[i].ring.to_json()),
+                        ])
+                    })
+                    .collect(),
+            );
+            w.write_ctrl(&reply_ok(
+                "telemetry",
+                vec![
+                    (
+                        "interval_ms",
+                        Json::Num(shared.net.telemetry_interval_ms as f64),
+                    ),
+                    ("samples", shared.ring.to_json()),
+                    ("backends", backends),
+                ],
+            ))?;
         }
         "trace" => handle_trace(msg, w, conns, shared)?,
         "shutdown" => {

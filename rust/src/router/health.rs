@@ -50,6 +50,12 @@ pub struct BackendHealth {
     state: AtomicU8,
     pub probes: AtomicU64,
     pub probe_failures: AtomicU64,
+    /// Entries *into* `Degraded` / `Down` (state-transition totals,
+    /// exposed as `router_health_degraded_total` /
+    /// `router_health_down_total` — flapping backends show up here
+    /// even when every point-in-time scrape catches them alive).
+    pub degraded_transitions: AtomicU64,
+    pub down_transitions: AtomicU64,
 }
 
 impl BackendHealth {
@@ -63,6 +69,8 @@ impl BackendHealth {
             state: AtomicU8::new(HealthState::Alive as u8),
             probes: AtomicU64::new(0),
             probe_failures: AtomicU64::new(0),
+            degraded_transitions: AtomicU64::new(0),
+            down_transitions: AtomicU64::new(0),
         }
     }
 
@@ -75,10 +83,28 @@ impl BackendHealth {
         self.state() != HealthState::Down
     }
 
+    /// Store the new state and count the transition when it actually
+    /// changed (the `swap` makes each edge counted exactly once even
+    /// with prober and connection threads racing).
+    fn transition(&self, s: HealthState) {
+        let prev = self.state.swap(s as u8, Ordering::SeqCst);
+        if prev != s as u8 {
+            match s {
+                HealthState::Degraded => {
+                    self.degraded_transitions.fetch_add(1, Ordering::Relaxed);
+                }
+                HealthState::Down => {
+                    self.down_transitions.fetch_add(1, Ordering::Relaxed);
+                }
+                HealthState::Alive => {}
+            }
+        }
+    }
+
     /// A probe or forwarded RPC succeeded.
     pub fn note_ok(&self) {
         self.consecutive_failures.store(0, Ordering::SeqCst);
-        self.state.store(HealthState::Alive as u8, Ordering::SeqCst);
+        self.transition(HealthState::Alive);
     }
 
     /// A probe or forwarded RPC failed at the transport level. (`Busy`
@@ -92,7 +118,7 @@ impl BackendHealth {
         } else {
             HealthState::Alive
         };
-        self.state.store(s as u8, Ordering::SeqCst);
+        self.transition(s);
     }
 
     /// Record one probe outcome (counters + state transition).
@@ -158,6 +184,29 @@ mod tests {
         assert_eq!(h.state(), HealthState::Alive);
         assert_eq!(h.probes.load(Ordering::Relaxed), 3);
         assert_eq!(h.probe_failures.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn transitions_count_edges_not_occupancy() {
+        let h = BackendHealth::new("b:1");
+        // Alive → Degraded → Down: one edge each.
+        h.note_failure(1, 3);
+        h.note_failure(1, 3);
+        assert_eq!(h.state(), HealthState::Degraded);
+        assert_eq!(h.degraded_transitions.load(Ordering::Relaxed), 1, "re-entering Degraded while already Degraded is not a transition");
+        h.note_failure(1, 3);
+        assert_eq!(h.state(), HealthState::Down);
+        assert_eq!(h.down_transitions.load(Ordering::Relaxed), 1);
+        // Staying Down adds nothing; recovery adds nothing; a second
+        // trip through Degraded/Down counts again.
+        h.note_failure(1, 3);
+        assert_eq!(h.down_transitions.load(Ordering::Relaxed), 1);
+        h.note_ok();
+        assert_eq!(h.state(), HealthState::Alive);
+        h.note_probe(false, 1, 2);
+        h.note_probe(false, 1, 2);
+        assert_eq!(h.degraded_transitions.load(Ordering::Relaxed), 2);
+        assert_eq!(h.down_transitions.load(Ordering::Relaxed), 2);
     }
 
     #[test]

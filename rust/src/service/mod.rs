@@ -179,6 +179,19 @@ impl Service {
         self.metrics.lock().unwrap().observe(key, secs);
     }
 
+    /// Batches formed and not yet retired by a worker — the telemetry
+    /// inflight-batches gauge.
+    pub fn inflight_batches(&self) -> usize {
+        self.dispatch.len()
+    }
+
+    /// Run a closure against the live run metrics under the lock. The
+    /// telemetry sampler reads a few counters this way every interval
+    /// instead of cloning the whole registry.
+    pub fn with_metrics<R>(&self, f: impl FnOnce(&Metrics) -> R) -> R {
+        f(&self.metrics.lock().unwrap())
+    }
+
     /// Nothing queued, running, or waiting for a worker.
     pub fn idle(&self) -> bool {
         self.queue.idle() && self.dispatch.is_empty()
@@ -208,6 +221,11 @@ impl Service {
             (
                 "prep_resident_bytes",
                 Json::Num(self.cache.prepared_bytes() as f64),
+            ),
+            ("queue_depth", Json::Num(self.queue.depth() as f64)),
+            (
+                "inflight_batches",
+                Json::Num(self.dispatch.len() as f64),
             ),
         ])
     }

@@ -448,6 +448,26 @@ impl JobQueue {
         self.inner.lock().unwrap().active >= self.limits.max_queue
     }
 
+    /// Live (non-terminal) job count — the telemetry queue-depth gauge
+    /// (`peak_depth` tracks this same quantity's high-water mark).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().active
+    }
+
+    /// `(submitted, rejected, completed, failed)` lifetime counters,
+    /// read without building a `Metrics` (the telemetry sampler calls
+    /// this every interval).
+    pub fn job_counters(&self) -> (u64, u64, u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.submitted, g.rejected, g.completed, g.failed)
+    }
+
+    /// Copy of the queue-wait histogram. Fixed footprint — the clone
+    /// is a stack copy, no heap traffic.
+    pub fn queue_wait_stats(&self) -> HistogramStats {
+        self.inner.lock().unwrap().queue_wait.clone()
+    }
+
     /// Fold queue counters + the latency distribution into `m` / JSON.
     pub fn account(&self, m: &mut Metrics) {
         let g = self.inner.lock().unwrap();

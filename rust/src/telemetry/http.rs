@@ -1,0 +1,170 @@
+//! Minimal HTTP/1.0 `GET /metrics` responder.
+//!
+//! Just enough HTTP for a Prometheus scrape or `curl`: one accept
+//! loop, requests served inline (a scrape is a read of one request
+//! line and one buffered write), `Connection: close` on every reply.
+//! Deliberately not a web server — no keep-alive, no chunking, no
+//! routing beyond `/metrics`. Runs on its own listener so the metrics
+//! plane shares nothing with the FMPN data plane except the process.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::log_debug;
+use crate::util::error::{Error, Result};
+
+/// Renders the current exposition body on demand, once per scrape.
+pub type RenderFn = Arc<dyn Fn() -> String + Send + Sync>;
+
+struct HttpInner {
+    stop: AtomicBool,
+}
+
+/// A running `/metrics` endpoint. Dropping it (or calling
+/// [`MetricsHttp::shutdown`]) stops the accept loop and joins it.
+pub struct MetricsHttp {
+    addr: SocketAddr,
+    inner: Arc<HttpInner>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl MetricsHttp {
+    /// Bind `listen` (`host:port`; port 0 picks a free port, see
+    /// [`MetricsHttp::local_addr`]) and serve `render()` at
+    /// `GET /metrics` until shutdown.
+    pub fn start(listen: &str, render: RenderFn) -> Result<MetricsHttp> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| Error::io(format!("telemetry http: bind {listen}"), e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::io("telemetry http: local_addr", e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::io("telemetry http: set_nonblocking", e))?;
+        let inner = Arc::new(HttpInner { stop: AtomicBool::new(false) });
+        let accept = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("fastmps-metrics-http".into())
+                .spawn(move || accept_loop(listener, inner, render))
+                .map_err(|e| Error::io("telemetry http: spawn", e))?
+        };
+        Ok(MetricsHttp { addr, inner, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsHttp {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<HttpInner>, render: RenderFn) {
+    while !inner.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if let Err(e) = serve_one(stream, &render) {
+                    log_debug!("telemetry http: scrape failed: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                log_debug!("telemetry http: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn serve_one(mut stream: TcpStream, render: &RenderFn) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(1000)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(2000)))?;
+    // Read until the blank line ending the request head (or 4 KiB,
+    // whichever first) — only the request line matters.
+    let mut buf = [0u8; 4096];
+    let mut used = 0usize;
+    loop {
+        if used == buf.len() {
+            break;
+        }
+        let n = stream.read(&mut buf[used..])?;
+        if n == 0 {
+            break;
+        }
+        used += n;
+        if buf[..used].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..used]);
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, body) = if method != "GET" {
+        ("405 Method Not Allowed", "method not allowed\n".to_string())
+    } else if path == "/metrics" {
+        ("200 OK", render())
+    } else if path == "/" {
+        ("200 OK", "fastmps telemetry endpoint; scrape /metrics\n".to_string())
+    } else {
+        ("404 Not Found", "not found; scrape /metrics\n".to_string())
+    };
+    let reply = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(reply.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_elsewhere() {
+        let render: RenderFn = Arc::new(|| "# HELP fastmps_up u\n# TYPE fastmps_up gauge\nfastmps_up 1\n".to_string());
+        let mut srv = MetricsHttp::start("127.0.0.1:0", render).unwrap();
+        let addr = srv.local_addr();
+        let ok = get(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.0 200 OK\r\n"), "got: {ok}");
+        assert!(ok.contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(ok.ends_with("fastmps_up 1\n"));
+        let missing = get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.0 404"));
+        // Each scrape re-renders: the closure runs per request.
+        let again = get(addr, "/metrics");
+        assert!(again.contains("fastmps_up 1"));
+        srv.shutdown();
+        // Idempotent shutdown; the port is released after join.
+        srv.shutdown();
+    }
+}

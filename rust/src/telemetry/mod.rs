@@ -1,0 +1,461 @@
+//! Telemetry plane: continuous monitoring for servers, routers, and fleets.
+//!
+//! Where the flight recorder (`trace`) answers "what happened to this
+//! job" and `fastmps metrics` answers "what are the lifetime totals",
+//! this module answers "what is happening *right now*, and what did the
+//! last ten minutes look like". Three pieces, all zero-dependency:
+//!
+//! - [`TsRing`]: a fixed-capacity time-series ring. A background
+//!   sampler in `serve` and `route` snapshots selected counters,
+//!   gauges, and histogram quantiles into it on the telemetry interval
+//!   (`NetConfig::telemetry_interval_ms`, default 1 s). The snapshot
+//!   hot path never allocates. Rates (jobs/s, bytes/s, steps/s) are
+//!   derived from adjacent-sample deltas at render time, so the ring
+//!   stores only monotonic raw values and stays merge-trivial.
+//! - [`prom`]: a Prometheus text-format exposition renderer over the
+//!   `fastmps metrics --json` document, served at `GET /metrics` by the
+//!   minimal HTTP/1.0 responder in [`http`] when `--metrics-listen` is
+//!   set. The router renders its scraped backends with `backend="N"`
+//!   labels for a single fleet-wide scrape target.
+//! - [`top`]: the `fastmps top` terminal dashboard, rendered from ring
+//!   history fetched over the `telemetry` FMPN op.
+
+pub mod http;
+pub mod prom;
+pub mod top;
+
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Ring capacity used by the built-in samplers: ten minutes of history
+/// at the default 1 s interval. Deliberately a constant, not a config
+/// knob — the ring is ~100 B/slot, and a fixed horizon keeps the
+/// `telemetry` op reply bounded.
+pub const RING_CAPACITY: usize = 600;
+
+/// Wall-clock unix milliseconds (the timestamp base for samples, so
+/// rings from different processes line up in one dashboard).
+pub fn now_unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// One point-in-time sample. Fixed size, `Copy`, no heap — writing one
+/// into a [`TsRing`] is a lock plus a handful of stores.
+///
+/// Counter fields (`jobs_*`, `samples_done`, `steps`, `net_bytes_*`)
+/// are cumulative lifetime values; [`rates`] turns two adjacent samples
+/// into per-second deltas. Quantile fields are `None` while the
+/// backing histogram is empty — an empty window is null, never zero.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TsSample {
+    /// Wall-clock unix milliseconds at snapshot time.
+    pub unix_ms: u64,
+    /// Live (non-terminal) jobs in the queue; routed-and-unfinished
+    /// jobs when sampled by a router.
+    pub queue_depth: u64,
+    /// Batches formed and waiting for (or on) a worker.
+    pub inflight_batches: u64,
+    /// Lifetime store-cache hit rate, `None` before the first lookup
+    /// (and always `None` on a router, which has no cache).
+    pub cache_hit_rate: Option<f64>,
+    /// Lifetime jobs admitted (router: jobs placed on a backend).
+    pub jobs_submitted: u64,
+    /// Lifetime jobs completed.
+    pub jobs_completed: u64,
+    /// Lifetime jobs failed (router: jobs dropped in drain).
+    pub jobs_failed: u64,
+    /// Lifetime samples produced (`keys::SAMPLES`).
+    pub samples_done: u64,
+    /// Lifetime per-site step executions (`keys::STEPS`).
+    pub steps: u64,
+    /// Lifetime bytes read off / written to sockets.
+    pub net_bytes_in: u64,
+    pub net_bytes_out: u64,
+    /// Queue-wait quantiles, seconds (admission → first batch).
+    pub queue_wait_p50: Option<f64>,
+    pub queue_wait_p99: Option<f64>,
+    /// Control-frame RTT quantiles, seconds (router → backend legs;
+    /// `None` on a plain server, which observes no RTT of its own).
+    pub rtt_p50: Option<f64>,
+    pub rtt_p99: Option<f64>,
+}
+
+fn num_or_null(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+fn opt_f64(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(|v| v.as_f64())
+}
+
+fn u64_of(j: &Json, key: &str) -> u64 {
+    opt_f64(j, key).map(|v| v.max(0.0) as u64).unwrap_or(0)
+}
+
+impl TsSample {
+    /// Wire form for the `telemetry` op. Duration fields follow the
+    /// metrics-JSON conventions: `_secs` suffix, null when unobserved.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("unix_ms", Json::Num(self.unix_ms as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("inflight_batches", Json::Num(self.inflight_batches as f64)),
+            ("cache_hit_rate", num_or_null(self.cache_hit_rate)),
+            ("jobs_submitted", Json::Num(self.jobs_submitted as f64)),
+            ("jobs_completed", Json::Num(self.jobs_completed as f64)),
+            ("jobs_failed", Json::Num(self.jobs_failed as f64)),
+            ("samples_done", Json::Num(self.samples_done as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("net_bytes_in", Json::Num(self.net_bytes_in as f64)),
+            ("net_bytes_out", Json::Num(self.net_bytes_out as f64)),
+            ("queue_wait_p50_secs", num_or_null(self.queue_wait_p50)),
+            ("queue_wait_p99_secs", num_or_null(self.queue_wait_p99)),
+            ("rtt_p50_secs", num_or_null(self.rtt_p50)),
+            ("rtt_p99_secs", num_or_null(self.rtt_p99)),
+        ])
+    }
+
+    /// Parse one wire sample back (the `top` client side). Missing
+    /// fields read as zero/null so the format can grow.
+    pub fn from_json(j: &Json) -> TsSample {
+        TsSample {
+            unix_ms: u64_of(j, "unix_ms"),
+            queue_depth: u64_of(j, "queue_depth"),
+            inflight_batches: u64_of(j, "inflight_batches"),
+            cache_hit_rate: opt_f64(j, "cache_hit_rate"),
+            jobs_submitted: u64_of(j, "jobs_submitted"),
+            jobs_completed: u64_of(j, "jobs_completed"),
+            jobs_failed: u64_of(j, "jobs_failed"),
+            samples_done: u64_of(j, "samples_done"),
+            steps: u64_of(j, "steps"),
+            net_bytes_in: u64_of(j, "net_bytes_in"),
+            net_bytes_out: u64_of(j, "net_bytes_out"),
+            queue_wait_p50: opt_f64(j, "queue_wait_p50_secs"),
+            queue_wait_p99: opt_f64(j, "queue_wait_p99_secs"),
+            rtt_p50: opt_f64(j, "rtt_p50_secs"),
+            rtt_p99: opt_f64(j, "rtt_p99_secs"),
+        }
+    }
+
+    /// Build a sample from a scraped `metrics` op document (the fleet
+    /// poller's path: the router has a backend's JSON, not its
+    /// internals). Absent fields read as zero/null.
+    pub fn from_metrics_json(doc: &Json, unix_ms: u64) -> TsSample {
+        let empty = Json::obj(vec![]);
+        let run = doc.get("run").unwrap_or(&empty);
+        let counters = run.get("counters").unwrap_or(&empty);
+        let net = doc.get("net").and_then(|n| n.get("counters"));
+        let net = net.unwrap_or(&empty);
+        let qw = run.get("hists").and_then(|h| h.get("queue_wait_secs"));
+        let rtt = run.get("hists").and_then(|h| h.get("net_rtt_secs"));
+        TsSample {
+            unix_ms,
+            queue_depth: u64_of(doc, "queue_depth").max(u64_of(doc, "jobs_in_flight")),
+            inflight_batches: u64_of(doc, "inflight_batches"),
+            cache_hit_rate: opt_f64(doc, "cache_hit_rate"),
+            jobs_submitted: u64_of(counters, "jobs_submitted"),
+            jobs_completed: u64_of(counters, "jobs_completed"),
+            jobs_failed: u64_of(counters, "jobs_failed"),
+            samples_done: u64_of(counters, "samples"),
+            steps: u64_of(counters, "steps"),
+            net_bytes_in: u64_of(net, "net_bytes_in"),
+            net_bytes_out: u64_of(net, "net_bytes_out"),
+            queue_wait_p50: qw.and_then(|h| opt_f64(h, "p50_secs")),
+            queue_wait_p99: qw.and_then(|h| opt_f64(h, "p99_secs")),
+            rtt_p50: rtt.and_then(|h| opt_f64(h, "p50_secs")),
+            rtt_p99: rtt.and_then(|h| opt_f64(h, "p99_secs")),
+        }
+    }
+}
+
+/// Per-second rates derived from two adjacent samples.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TsRates {
+    pub jobs_per_sec: f64,
+    pub samples_per_sec: f64,
+    pub steps_per_sec: f64,
+    pub bytes_in_per_sec: f64,
+    pub bytes_out_per_sec: f64,
+}
+
+/// Delta rates between `prev` and `next`. Counters are monotonic per
+/// process; a counter that went backwards (process restart between
+/// samples) clamps to zero rather than reporting a negative rate.
+pub fn rates(prev: &TsSample, next: &TsSample) -> TsRates {
+    let dt_ms = next.unix_ms.saturating_sub(prev.unix_ms);
+    if dt_ms == 0 {
+        return TsRates::default();
+    }
+    let dt = dt_ms as f64 / 1000.0;
+    let d = |a: u64, b: u64| b.saturating_sub(a) as f64 / dt;
+    TsRates {
+        jobs_per_sec: d(prev.jobs_completed, next.jobs_completed),
+        samples_per_sec: d(prev.samples_done, next.samples_done),
+        steps_per_sec: d(prev.steps, next.steps),
+        bytes_in_per_sec: d(prev.net_bytes_in, next.net_bytes_in),
+        bytes_out_per_sec: d(prev.net_bytes_out, next.net_bytes_out),
+    }
+}
+
+struct RingInner {
+    /// Preallocated to capacity at construction; never grows.
+    slots: Vec<TsSample>,
+    /// Next write index.
+    head: usize,
+    /// Total samples ever written (so `len = min(written, cap)`).
+    written: u64,
+}
+
+/// Fixed-capacity time-series ring. Writers call [`TsRing::snapshot`]
+/// — a lock and a slot store, no allocation — and the ring overwrites
+/// its oldest sample when full. Readers get history oldest-first.
+pub struct TsRing {
+    inner: Mutex<RingInner>,
+}
+
+impl TsRing {
+    pub fn new(capacity: usize) -> TsRing {
+        let cap = capacity.max(2);
+        TsRing {
+            inner: Mutex::new(RingInner {
+                slots: vec![TsSample::default(); cap],
+                head: 0,
+                written: 0,
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    /// Samples currently held (saturates at capacity).
+    pub fn len(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        (g.written as usize).min(g.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record one sample. This is the hot path the background sampler
+    /// hits every interval: it never allocates (the slot vec is
+    /// preallocated and `TsSample` is `Copy`).
+    pub fn snapshot(&self, s: TsSample) {
+        let mut g = self.inner.lock().unwrap();
+        let cap = g.slots.len();
+        let head = g.head;
+        g.slots[head] = s;
+        g.head = (head + 1) % cap;
+        g.written += 1;
+    }
+
+    /// Most recent sample, if any.
+    pub fn latest(&self) -> Option<TsSample> {
+        let g = self.inner.lock().unwrap();
+        if g.written == 0 {
+            return None;
+        }
+        let cap = g.slots.len();
+        Some(g.slots[(g.head + cap - 1) % cap])
+    }
+
+    /// The two most recent samples `(previous, latest)`, for rates.
+    pub fn last_two(&self) -> Option<(TsSample, TsSample)> {
+        let g = self.inner.lock().unwrap();
+        if g.written < 2 {
+            return None;
+        }
+        let cap = g.slots.len();
+        let last = (g.head + cap - 1) % cap;
+        let prev = (g.head + cap - 2) % cap;
+        Some((g.slots[prev], g.slots[last]))
+    }
+
+    /// Copy history, oldest first, into `out` (cleared first). With
+    /// `out.capacity() >= len` this does not allocate either.
+    pub fn history_into(&self, out: &mut Vec<TsSample>) {
+        out.clear();
+        let g = self.inner.lock().unwrap();
+        let cap = g.slots.len();
+        let len = (g.written as usize).min(cap);
+        let start = if g.written as usize > cap { g.head } else { 0 };
+        for i in 0..len {
+            out.push(g.slots[(start + i) % cap]);
+        }
+    }
+
+    pub fn history(&self) -> Vec<TsSample> {
+        let mut out = Vec::with_capacity(self.capacity());
+        self.history_into(&mut out);
+        out
+    }
+
+    /// Ring history as a JSON array, oldest first (the `telemetry` op
+    /// reply body).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.history().iter().map(|s| s.to_json()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: u64, jobs: u64) -> TsSample {
+        TsSample {
+            unix_ms: t,
+            queue_depth: 3,
+            inflight_batches: 1,
+            cache_hit_rate: Some(0.5),
+            jobs_submitted: jobs + 2,
+            jobs_completed: jobs,
+            jobs_failed: 1,
+            samples_done: jobs * 100,
+            steps: jobs * 1000,
+            net_bytes_in: jobs * 10,
+            net_bytes_out: jobs * 20,
+            queue_wait_p50: Some(0.001),
+            queue_wait_p99: Some(0.1),
+            rtt_p50: None,
+            rtt_p99: None,
+        }
+    }
+
+    #[test]
+    fn ring_holds_and_rolls_oldest_first() {
+        let ring = TsRing::new(4);
+        assert!(ring.is_empty());
+        assert_eq!(ring.latest(), None);
+        for t in 0..3 {
+            ring.snapshot(sample(t, t));
+        }
+        assert_eq!(ring.len(), 3);
+        let h = ring.history();
+        assert_eq!(h.iter().map(|s| s.unix_ms).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // Overflow: oldest rolls off, order stays oldest-first.
+        for t in 3..10 {
+            ring.snapshot(sample(t, t));
+        }
+        assert_eq!(ring.len(), 4);
+        let h = ring.history();
+        assert_eq!(h.iter().map(|s| s.unix_ms).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(ring.latest().unwrap().unix_ms, 9);
+        let (prev, last) = ring.last_two().unwrap();
+        assert_eq!((prev.unix_ms, last.unix_ms), (8, 9));
+    }
+
+    #[test]
+    fn snapshot_is_allocation_free() {
+        let ring = TsRing::new(RING_CAPACITY);
+        // Warm: the slot vec is preallocated in new(), but give the
+        // allocator one pass anyway before measuring.
+        ring.snapshot(sample(1, 1));
+        let mut clean = false;
+        for t in 0..128u64 {
+            let before = crate::util::alloc::allocation_count();
+            ring.snapshot(sample(t + 2, t));
+            if crate::util::alloc::allocation_count() == before {
+                clean = true;
+                break;
+            }
+        }
+        assert!(clean, "TsRing::snapshot allocated in every window");
+    }
+
+    #[test]
+    fn history_into_reuses_capacity_without_allocating() {
+        let ring = TsRing::new(8);
+        for t in 0..20 {
+            ring.snapshot(sample(t, t));
+        }
+        let mut out = Vec::with_capacity(ring.capacity());
+        ring.history_into(&mut out); // warm
+        let mut clean = false;
+        for _ in 0..128 {
+            let before = crate::util::alloc::allocation_count();
+            ring.history_into(&mut out);
+            if crate::util::alloc::allocation_count() == before {
+                clean = true;
+                break;
+            }
+        }
+        assert!(clean, "history_into allocated with sufficient capacity");
+        assert_eq!(out.len(), 8);
+        assert_eq!(out[0].unix_ms, 12);
+    }
+
+    #[test]
+    fn sample_json_round_trip() {
+        let s = sample(1234, 7);
+        let j = Json::parse(&s.to_json().dump()).unwrap();
+        assert_eq!(TsSample::from_json(&j), s);
+        // Null quantiles survive the trip as None.
+        let mut e = TsSample::default();
+        e.unix_ms = 5;
+        let j = Json::parse(&e.to_json().dump()).unwrap();
+        assert_eq!(j.get("queue_wait_p50_secs"), Some(&Json::Null));
+        assert_eq!(TsSample::from_json(&j), e);
+    }
+
+    #[test]
+    fn rates_from_deltas() {
+        let a = sample(1000, 10);
+        let b = sample(3000, 20); // 2 s apart, +10 jobs
+        let r = rates(&a, &b);
+        assert!((r.jobs_per_sec - 5.0).abs() < 1e-12);
+        assert!((r.samples_per_sec - 500.0).abs() < 1e-9);
+        assert!((r.steps_per_sec - 5000.0).abs() < 1e-9);
+        assert!((r.bytes_in_per_sec - 50.0).abs() < 1e-12);
+        assert!((r.bytes_out_per_sec - 100.0).abs() < 1e-12);
+        // Zero dt and backwards counters both clamp to zero.
+        assert_eq!(rates(&a, &a), TsRates::default());
+        assert_eq!(rates(&b, &a).jobs_per_sec, 0.0);
+    }
+
+    #[test]
+    fn sample_from_metrics_document() {
+        let doc = Json::parse(
+            r#"{
+              "config": {},
+              "run": {
+                "phases": {}, "achieved_flops": 0.0,
+                "counters": {"jobs_submitted": 9, "jobs_completed": 7, "jobs_failed": 1,
+                             "samples": 700, "steps": 7000},
+                "hists": {"queue_wait_secs": {"count": 7, "sum_secs": 0.7,
+                          "p50_secs": 0.01, "p99_secs": 0.2, "buckets": [[20, 7]]}}
+              },
+              "net": {"counters": {"net_bytes_in": 123, "net_bytes_out": 456}},
+              "cache_hit_rate": 0.9,
+              "queue_depth": 2,
+              "inflight_batches": 1
+            }"#,
+        )
+        .unwrap();
+        let s = TsSample::from_metrics_json(&doc, 42);
+        assert_eq!(s.unix_ms, 42);
+        assert_eq!(s.queue_depth, 2);
+        assert_eq!(s.inflight_batches, 1);
+        assert_eq!(s.jobs_completed, 7);
+        assert_eq!(s.samples_done, 700);
+        assert_eq!(s.net_bytes_out, 456);
+        assert_eq!(s.cache_hit_rate, Some(0.9));
+        assert_eq!(s.queue_wait_p99, Some(0.2));
+        assert_eq!(s.rtt_p50, None);
+        // A router document: jobs_in_flight stands in for queue depth.
+        let doc = Json::parse(
+            r#"{"run": {"counters": {"router_submits": 3}}, "jobs_in_flight": 5}"#,
+        )
+        .unwrap();
+        assert_eq!(TsSample::from_metrics_json(&doc, 1).queue_depth, 5);
+    }
+}

@@ -1,0 +1,662 @@
+//! Prometheus text-format exposition (version 0.0.4) over the metrics
+//! registry, zero dependencies.
+//!
+//! The renderer is JSON-driven: it consumes the `fastmps metrics
+//! --json` document rather than a live [`Metrics`] — so a router can
+//! render metrics it *scraped* from a backend over FMPN exactly the
+//! way a server renders its own, just with a `backend="N"` label
+//! prepended. Naming conventions (documented in
+//! `docs/OBSERVABILITY.md`):
+//!
+//! - everything is prefixed `fastmps_`;
+//! - counters keep their registry key and gain `_total` (unless the
+//!   key already ends in `_total`);
+//! - the documented peak gauges (`metrics::keys::PEAK_GAUGES`) and
+//!   derived instantaneous values (`queue_depth`, `cache_hit_rate`,
+//!   …) are `gauge`;
+//! - phase timers fold into one counter family,
+//!   `fastmps_phase_seconds_total{phase="..."}`;
+//! - a `<stem>_secs` histogram becomes `fastmps_<stem>_seconds` with
+//!   cumulative `le` buckets: log₂ bucket *i* (floor `2^(i-30)` s)
+//!   contributes its upper edge `2^(i-29)` as `le`, zero-count buckets
+//!   are omitted, and the terminal `le="+Inf"` equals `_count`.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{keys, HistogramStats, HIST_BUCKETS};
+use crate::util::json::Json;
+
+/// Map a log₂ histogram to cumulative Prometheus buckets:
+/// `(upper_edge_secs, cumulative_count)` pairs for each *occupied*
+/// bucket, ascending. The caller appends `le="+Inf"` = `count`.
+pub fn cumulative_le(h: &HistogramStats) -> Vec<(f64, u64)> {
+    let mut out = Vec::new();
+    let mut cum = 0u64;
+    for (i, &n) in h.bucket_counts().iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        cum += n;
+        out.push((HistogramStats::bucket_floor(i + 1), cum));
+    }
+    out
+}
+
+fn cumulative_le_sparse(buckets: &[Json]) -> Vec<(f64, u64)> {
+    let mut out = Vec::new();
+    let mut cum = 0u64;
+    for pair in buckets {
+        let p = match pair.as_arr() {
+            Some(p) if p.len() == 2 => p,
+            _ => continue,
+        };
+        let i = p[0].as_usize().unwrap_or(0).min(HIST_BUCKETS - 1);
+        let n = p[1].as_f64().unwrap_or(0.0).max(0.0) as u64;
+        if n == 0 {
+            continue;
+        }
+        cum += n;
+        out.push((HistogramStats::bucket_floor(i + 1), cum));
+    }
+    out
+}
+
+/// `fastmps_`-prefix a registry key, mapping any stray character
+/// outside the Prometheus name charset to `_`.
+pub fn metric_name(key: &str) -> String {
+    let mut out = String::with_capacity(key.len() + 8);
+    out.push_str("fastmps_");
+    for c in key.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn counter_name(key: &str) -> String {
+    let base = metric_name(key);
+    if base.ends_with("_total") {
+        base
+    } else {
+        base + "_total"
+    }
+}
+
+fn hist_name(key: &str) -> String {
+    metric_name(key.strip_suffix("_secs").unwrap_or(key)) + "_seconds"
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        return "NaN".into();
+    }
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".into() } else { "-Inf".into() };
+    }
+    if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn label_block(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+struct Family {
+    kind: &'static str,
+    help: String,
+    lines: Vec<String>,
+}
+
+/// Accumulates samples grouped by metric family, then renders them in
+/// deterministic (alphabetical) order with `# HELP`/`# TYPE` headers
+/// emitted exactly once per family.
+pub struct Exposition {
+    families: BTreeMap<String, Family>,
+}
+
+impl Default for Exposition {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Exposition {
+    pub fn new() -> Exposition {
+        Exposition { families: BTreeMap::new() }
+    }
+
+    fn family(&mut self, name: &str, kind: &'static str, help: &str) -> &mut Family {
+        self.families.entry(name.to_string()).or_insert_with(|| Family {
+            kind,
+            help: help.to_string(),
+            lines: Vec::new(),
+        })
+    }
+
+    /// One gauge sample; `key` is the raw registry key (prefixed and
+    /// sanitized here).
+    pub fn gauge(&mut self, key: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        let name = metric_name(key);
+        let lb = label_block(labels);
+        let line = format!("{name}{lb} {}", fmt_value(v));
+        self.family(&name, "gauge", help).lines.push(line);
+    }
+
+    /// One counter sample; the family name gains `_total` unless the
+    /// key already carries it.
+    pub fn counter(&mut self, key: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        let name = counter_name(key);
+        let lb = label_block(labels);
+        let line = format!("{name}{lb} {}", fmt_value(v));
+        self.family(&name, "counter", help).lines.push(line);
+    }
+
+    fn hist_lines(
+        &mut self,
+        key: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        le: &[(f64, u64)],
+        count: u64,
+        sum: f64,
+    ) {
+        let name = hist_name(key);
+        let fam = self.family(&name, "histogram", help);
+        for &(edge, cum) in le {
+            let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+            let edge_s = fmt_value(edge);
+            with_le.push(("le", edge_s.as_str()));
+            fam.lines.push(format!("{name}_bucket{} {cum}", label_block(&with_le)));
+        }
+        let mut inf: Vec<(&str, &str)> = labels.to_vec();
+        inf.push(("le", "+Inf"));
+        fam.lines.push(format!("{name}_bucket{} {count}", label_block(&inf)));
+        let lb = label_block(labels);
+        fam.lines.push(format!("{name}_sum{lb} {}", fmt_value(sum)));
+        fam.lines.push(format!("{name}_count{lb} {count}"));
+    }
+
+    /// A live histogram (used by unit tests and anything holding a
+    /// `HistogramStats` directly).
+    pub fn histogram(&mut self, key: &str, help: &str, labels: &[(&str, &str)], h: &HistogramStats) {
+        self.hist_lines(key, help, labels, &cumulative_le(h), h.count, h.sum);
+    }
+
+    fn histogram_json(&mut self, key: &str, labels: &[(&str, &str)], h: &Json) {
+        let count = h.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0).max(0.0) as u64;
+        let sum = h.get("sum_secs").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let le = match h.get("buckets").and_then(|b| b.as_arr()) {
+            Some(pairs) => cumulative_le_sparse(pairs),
+            None => Vec::new(),
+        };
+        let help = format!("Log2-bucketed duration histogram {key} (seconds).");
+        self.hist_lines(key, &help, labels, &le, count, sum);
+    }
+
+    fn counters_obj(&mut self, counters: &Json, labels: &[(&str, &str)]) {
+        if let Json::Obj(map) = counters {
+            for (k, v) in map {
+                let v = v.as_f64().unwrap_or(0.0);
+                if keys::PEAK_GAUGES.contains(&k.as_str()) {
+                    self.gauge(k, &format!("High-water mark of {k}."), labels, v);
+                } else {
+                    self.counter(k, &format!("Lifetime total of {k}."), labels, v);
+                }
+            }
+        }
+    }
+
+    /// Render a full `fastmps metrics --json` document (server or
+    /// router shape) into exposition samples, every one carrying
+    /// `labels`. The `backends` array is *not* descended into — the
+    /// router adds each scraped backend document itself, labeled.
+    pub fn add_metrics_json(&mut self, doc: &Json, labels: &[(&str, &str)]) {
+        if let Some(run) = doc.get("run") {
+            if let Some(c) = run.get("counters") {
+                self.counters_obj(c, labels);
+            }
+            if let Some(Json::Obj(phases)) = run.get("phases") {
+                for (phase, secs) in phases {
+                    let mut with_phase: Vec<(&str, &str)> = labels.to_vec();
+                    with_phase.push(("phase", phase.as_str()));
+                    self.counter(
+                        "phase_seconds",
+                        "Cumulative seconds spent per engine phase.",
+                        &with_phase,
+                        secs.as_f64().unwrap_or(0.0),
+                    );
+                }
+            }
+            if let Some(f) = run.get("achieved_flops").and_then(|v| v.as_f64()) {
+                self.gauge("achieved_flops", "Achieved FLOP rate over the run.", labels, f);
+            }
+            if let Some(Json::Obj(hists)) = run.get("hists") {
+                for (k, h) in hists {
+                    self.histogram_json(k, labels, h);
+                }
+            }
+        }
+        if let Some(c) = doc.get("net").and_then(|n| n.get("counters")) {
+            self.counters_obj(c, labels);
+        }
+        for (key, help) in [
+            ("queue_depth", "Live (non-terminal) jobs in the queue."),
+            ("inflight_batches", "Batches formed and not yet retired."),
+            ("cache_hit_rate", "Lifetime store-cache hit rate."),
+            ("batch_occupancy", "Filled fraction of dispatched batch rows."),
+            ("prep_resident_bytes", "Bytes of precision-prepared chains resident."),
+            ("jobs_in_flight", "Jobs routed and not yet terminal."),
+        ] {
+            if let Some(v) = doc.get(key).and_then(|v| v.as_f64()) {
+                self.gauge(key, help, labels, v);
+            }
+        }
+        if let Some(v) = doc.get("jobs_routed").and_then(|v| v.as_f64()) {
+            self.counter("jobs_routed", "Lifetime jobs routed to any backend.", labels, v);
+        }
+        if let Some(lat) = doc.get("latency") {
+            for (field, key) in [
+                ("p50_secs", "latency_p50_seconds"),
+                ("p99_secs", "latency_p99_seconds"),
+                ("max_secs", "latency_max_seconds"),
+            ] {
+                if let Some(v) = lat.get(field).and_then(|v| v.as_f64()) {
+                    self.gauge(key, "Job latency over the recent exact window.", labels, v);
+                }
+            }
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, fam) in &self.families {
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind));
+            for line in &fam.lines {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Render one metrics document with no labels — the whole `/metrics`
+/// body for a plain server.
+pub fn render_document(doc: &Json) -> String {
+    let mut e = Exposition::new();
+    e.add_metrics_json(doc, &[]);
+    e.render()
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_value(s: &str) -> Option<f64> {
+    match s {
+        "+Inf" => Some(f64::INFINITY),
+        "-Inf" => Some(f64::NEG_INFINITY),
+        "NaN" => Some(f64::NAN),
+        _ => s.parse::<f64>().ok(),
+    }
+}
+
+/// Split `name{labels} value` into parts; labels come back as
+/// `(name, value)` pairs with escapes undone.
+#[allow(clippy::type_complexity)]
+fn parse_sample(line: &str) -> Result<(String, Vec<(String, String)>, f64), String> {
+    let bad = |m: &str| Err(format!("{m}: {line}"));
+    let (name_part, rest) = match line.find('{') {
+        Some(b) => (&line[..b], &line[b..]),
+        None => match line.find(' ') {
+            Some(sp) => (&line[..sp], &line[sp..]),
+            None => return bad("sample line without value"),
+        },
+    };
+    if !valid_metric_name(name_part) {
+        return bad("invalid metric name");
+    }
+    let mut labels = Vec::new();
+    let value_part;
+    if let Some(rest2) = rest.strip_prefix('{') {
+        let close = match rest2.find('}') {
+            Some(c) => c,
+            None => return bad("unterminated label block"),
+        };
+        // Escaped quotes never occur in names we emit; a simple split
+        // on '}' is safe because label values escape backslash-quote
+        // but the block-terminating brace is never inside quotes in
+        // this validator's inputs (we also re-check pair syntax below).
+        let body = &rest2[..close];
+        value_part = rest2[close + 1..].trim();
+        for pair in body.split(',') {
+            if pair.is_empty() {
+                continue;
+            }
+            let eq = match pair.find('=') {
+                Some(e) => e,
+                None => return bad("label pair without '='"),
+            };
+            let (ln, lv) = (&pair[..eq], &pair[eq + 1..]);
+            if !valid_label_name(ln) {
+                return bad("invalid label name");
+            }
+            if lv.len() < 2 || !lv.starts_with('"') || !lv.ends_with('"') {
+                return bad("label value not quoted");
+            }
+            labels.push((ln.to_string(), lv[1..lv.len() - 1].replace("\\\"", "\"")));
+        }
+    } else {
+        value_part = rest.trim();
+    }
+    let v = match parse_value(value_part) {
+        Some(v) => v,
+        None => return bad("unparseable sample value"),
+    };
+    Ok((name_part.to_string(), labels, v))
+}
+
+/// Validate exposition text against the conventions the CI gate
+/// (`.github/scripts/check_exposition.sh`) enforces on the committed
+/// fixture: name/label charset, HELP-then-TYPE pairing declared before
+/// any sample, known TYPE kinds, counters ending `_total`, and per
+/// histogram series monotone cumulative `le` buckets terminated by
+/// `le="+Inf"` equal to `_count`.
+pub fn validate_exposition(text: &str) -> Result<(), String> {
+    let mut help: BTreeMap<String, ()> = BTreeMap::new();
+    let mut kind: BTreeMap<String, String> = BTreeMap::new();
+    // (family, non-le labelset) -> (le, cum) in emission order.
+    let mut series: BTreeMap<(String, String), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<(String, String), f64> = BTreeMap::new();
+    let mut sums: BTreeMap<(String, String), bool> = BTreeMap::new();
+
+    for (ln, line) in text.lines().enumerate() {
+        let ctx = |m: String| format!("line {}: {m}", ln + 1);
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap_or("");
+            if !valid_metric_name(name) {
+                return Err(ctx(format!("bad HELP name '{name}'")));
+            }
+            if help.insert(name.to_string(), ()).is_some() {
+                return Err(ctx(format!("duplicate HELP for '{name}'")));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap_or("");
+            let k = it.next().unwrap_or("");
+            if !valid_metric_name(name) {
+                return Err(ctx(format!("bad TYPE name '{name}'")));
+            }
+            if !matches!(k, "counter" | "gauge" | "histogram") {
+                return Err(ctx(format!("unknown TYPE kind '{k}'")));
+            }
+            if !help.contains_key(name) {
+                return Err(ctx(format!("TYPE before HELP for '{name}'")));
+            }
+            if kind.insert(name.to_string(), k.to_string()).is_some() {
+                return Err(ctx(format!("duplicate TYPE for '{name}'")));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return Err(ctx("unexpected comment (only HELP/TYPE allowed)".into()));
+        }
+        let (name, labels, value) = parse_sample(line).map_err(&ctx)?;
+        // Resolve the family: histogram series samples use suffixes.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|s| {
+                let stem = name.strip_suffix(s)?;
+                (kind.get(stem).map(String::as_str) == Some("histogram")).then(|| stem.to_string())
+            })
+            .unwrap_or_else(|| name.clone());
+        let fam_kind = match kind.get(&family) {
+            Some(k) => k.as_str(),
+            None => return Err(ctx(format!("sample for undeclared family '{family}'"))),
+        };
+        match fam_kind {
+            "counter" => {
+                if !family.ends_with("_total") {
+                    return Err(ctx(format!("counter '{family}' must end in _total")));
+                }
+                if value < 0.0 {
+                    return Err(ctx(format!("negative counter sample '{name}'")));
+                }
+            }
+            "histogram" => {
+                let non_le: Vec<String> = labels
+                    .iter()
+                    .filter(|(k, _)| k != "le")
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect();
+                let skey = (family.clone(), non_le.join(","));
+                if name.ends_with("_bucket") {
+                    let le = labels.iter().find(|(k, _)| k == "le");
+                    let le = match le {
+                        Some((_, v)) => match parse_value(v) {
+                            Some(le) => le,
+                            None => return Err(ctx("unparseable le".into())),
+                        },
+                        None => return Err(ctx("_bucket without le label".into())),
+                    };
+                    series.entry(skey).or_default().push((le, value));
+                } else if name.ends_with("_count") {
+                    counts.insert(skey, value);
+                } else if name.ends_with("_sum") {
+                    sums.insert(skey, true);
+                } else {
+                    return Err(ctx(format!("bare sample for histogram '{family}'")));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    for (skey, buckets) in &series {
+        let label = format!("{}{{{}}}", skey.0, skey.1);
+        let mut prev_le = f64::NEG_INFINITY;
+        let mut prev_cum = -1.0;
+        for &(le, cum) in buckets {
+            if le <= prev_le {
+                return Err(format!("{label}: le not strictly increasing"));
+            }
+            if cum < prev_cum {
+                return Err(format!("{label}: cumulative bucket counts decreased"));
+            }
+            prev_le = le;
+            prev_cum = cum;
+        }
+        match buckets.last() {
+            Some(&(le, cum)) if le.is_infinite() => {
+                match counts.get(skey) {
+                    Some(&c) if c == cum => {}
+                    Some(_) => return Err(format!("{label}: +Inf bucket != _count")),
+                    None => return Err(format!("{label}: histogram without _count")),
+                }
+            }
+            _ => return Err(format!("{label}: last bucket must be le=\"+Inf\"")),
+        }
+        if !sums.contains_key(skey) {
+            return Err(format!("{label}: histogram without _sum"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+
+    #[test]
+    fn cumulative_le_is_monotone_and_inf_matches_count() {
+        let mut h = HistogramStats::new();
+        for v in [1e-9, 0.5e-3, 1e-3, 2e-3, 0.75, 1e9] {
+            h.record(v);
+        }
+        let le = cumulative_le(&h);
+        assert!(!le.is_empty());
+        let mut prev_edge = f64::NEG_INFINITY;
+        let mut prev_cum = 0;
+        for &(edge, cum) in &le {
+            assert!(edge > prev_edge, "le edges must increase");
+            assert!(cum >= prev_cum, "cumulative counts must not decrease");
+            prev_edge = edge;
+            prev_cum = cum;
+        }
+        // The final occupied bucket accumulates everything == count.
+        assert_eq!(le.last().unwrap().1, h.count);
+        // Upper edge of bucket i is the floor of bucket i+1: a value
+        // recorded at exactly 2^-10 lands strictly below edge 2^-9.
+        let mut one = HistogramStats::new();
+        one.record((2.0f64).powi(-10));
+        let le = cumulative_le(&one);
+        assert_eq!(le, vec![((2.0f64).powi(-9), 1)]);
+    }
+
+    #[test]
+    fn renders_counters_gauges_phases_and_histograms() {
+        let mut m = Metrics::new();
+        m.add(keys::JOBS_COMPLETED, 5);
+        m.add(keys::SAMPLES, 500);
+        m.set_max(keys::QUEUE_PEAK, 7);
+        m.add_phase("compute", 1.25);
+        m.observe(keys::HIST_QUEUE_WAIT, 0.01);
+        m.observe(keys::HIST_QUEUE_WAIT, 0.04);
+        let doc = Json::obj(vec![("run", m.to_json())]);
+        let text = render_document(&doc);
+        assert!(text.contains("# TYPE fastmps_jobs_completed_total counter"));
+        assert!(text.contains("fastmps_jobs_completed_total 5"));
+        assert!(text.contains("# TYPE fastmps_queue_peak gauge"));
+        assert!(text.contains("fastmps_queue_peak 7"));
+        assert!(text.contains("fastmps_phase_seconds_total{phase=\"compute\"} 1.25"));
+        assert!(text.contains("# TYPE fastmps_queue_wait_seconds histogram"));
+        assert!(text.contains("fastmps_queue_wait_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("fastmps_queue_wait_seconds_count 2"));
+        validate_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn labels_ride_every_sample_and_escape() {
+        let mut e = Exposition::new();
+        e.counter("jobs_completed", "h", &[("backend", "0")], 3.0);
+        e.counter("jobs_completed", "h", &[("backend", "1")], 4.0);
+        e.gauge("weird", "h", &[("addr", "a\"b\\c")], 1.0);
+        let text = e.render();
+        assert!(text.contains("fastmps_jobs_completed_total{backend=\"0\"} 3"));
+        assert!(text.contains("fastmps_jobs_completed_total{backend=\"1\"} 4"));
+        assert!(text.contains("{addr=\"a\\\"b\\\\c\"}"));
+        // One header pair even with two labeled samples.
+        assert_eq!(text.matches("# TYPE fastmps_jobs_completed_total").count(), 1);
+    }
+
+    #[test]
+    fn scraped_backend_document_renders_with_labels() {
+        let doc = Json::parse(
+            r#"{
+              "run": {"phases": {}, "achieved_flops": 0.0,
+                      "counters": {"jobs_completed": 9},
+                      "hists": {"net_rtt_secs": {"count": 2, "sum_secs": 0.002,
+                                "buckets": [[19, 1], [21, 1]]}}},
+              "net": {"counters": {"net_bytes_in": 77}},
+              "cache_hit_rate": 0.25,
+              "queue_depth": 4
+            }"#,
+        )
+        .unwrap();
+        let mut e = Exposition::new();
+        e.add_metrics_json(&doc, &[("backend", "2")]);
+        let text = e.render();
+        assert!(text.contains("fastmps_jobs_completed_total{backend=\"2\"} 9"));
+        assert!(text.contains("fastmps_net_bytes_in_total{backend=\"2\"} 77"));
+        assert!(text.contains("fastmps_queue_depth{backend=\"2\"} 4"));
+        assert!(text.contains("fastmps_net_rtt_seconds_bucket{backend=\"2\",le=\"+Inf\"} 2"));
+        assert!(text.contains("fastmps_net_rtt_seconds_count{backend=\"2\"} 2"));
+        validate_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_broken_exposition() {
+        // Sample without TYPE.
+        assert!(validate_exposition("fastmps_x_total 1\n").is_err());
+        // TYPE without HELP.
+        assert!(validate_exposition("# TYPE fastmps_x_total counter\nfastmps_x_total 1\n").is_err());
+        // Counter not ending _total.
+        let t = "# HELP fastmps_x c\n# TYPE fastmps_x counter\nfastmps_x 1\n";
+        assert!(validate_exposition(t).is_err());
+        // Histogram with decreasing cumulative counts.
+        let t = "# HELP fastmps_w_seconds h\n# TYPE fastmps_w_seconds histogram\n\
+                 fastmps_w_seconds_bucket{le=\"0.1\"} 5\n\
+                 fastmps_w_seconds_bucket{le=\"1\"} 3\n\
+                 fastmps_w_seconds_bucket{le=\"+Inf\"} 3\n\
+                 fastmps_w_seconds_sum 1\nfastmps_w_seconds_count 3\n";
+        assert!(validate_exposition(t).is_err());
+        // +Inf mismatch with _count.
+        let t = "# HELP fastmps_w_seconds h\n# TYPE fastmps_w_seconds histogram\n\
+                 fastmps_w_seconds_bucket{le=\"+Inf\"} 3\n\
+                 fastmps_w_seconds_sum 1\nfastmps_w_seconds_count 4\n";
+        assert!(validate_exposition(t).is_err());
+        // Bad label charset.
+        let t = "# HELP fastmps_g h\n# TYPE fastmps_g gauge\nfastmps_g{0bad=\"x\"} 1\n";
+        assert!(validate_exposition(t).is_err());
+        // A well-formed document passes.
+        let t = "# HELP fastmps_g h\n# TYPE fastmps_g gauge\nfastmps_g{backend=\"0\"} 1\n";
+        validate_exposition(t).unwrap();
+    }
+
+    #[test]
+    fn committed_fixture_passes_the_rust_validator() {
+        // The same file the toolchain-free CI gate checks — keep the
+        // two validators agreeing on it.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/exposition.fixture.prom");
+        let text = std::fs::read_to_string(path).expect("read docs/exposition.fixture.prom");
+        validate_exposition(&text).unwrap();
+        assert!(text.contains("backend=\""), "fixture should exercise fleet labels");
+    }
+}

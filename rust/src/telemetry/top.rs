@@ -1,0 +1,303 @@
+//! `fastmps top` — terminal dashboard over ring history.
+//!
+//! The CLI fetches the `telemetry` op reply (ring history, plus
+//! per-backend rings when pointed at a router), parses it into a
+//! [`TopView`], and redraws [`render`]'s frame on its own interval.
+//! Rendering is a pure function of the view — no I/O, no clock — so
+//! the frame is unit-testable offline and `--once` can print a single
+//! frame for scripts.
+
+use crate::util::json::Json;
+
+use super::{rates, TsRates, TsSample};
+
+/// Sparkline glyphs, lowest to highest.
+const SPARKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Map a series onto sparkline glyphs, scaled to the series max.
+/// All-zero (or empty) series render flat.
+pub fn sparkline(values: &[f64]) -> String {
+    let max = values.iter().cloned().fold(0.0f64, f64::max);
+    values
+        .iter()
+        .map(|&v| {
+            if !(max > 0.0) || !(v > 0.0) {
+                SPARKS[0]
+            } else {
+                let idx = (v / max * (SPARKS.len() - 1) as f64).round() as usize;
+                SPARKS[idx.min(SPARKS.len() - 1)]
+            }
+        })
+        .collect()
+}
+
+/// One backend row when watching a router.
+pub struct TopBackend {
+    pub index: usize,
+    pub addr: String,
+    pub state: String,
+    pub samples: Vec<TsSample>,
+}
+
+/// Everything one frame needs, parsed from a `telemetry` reply.
+pub struct TopView {
+    /// Address the dashboard is connected to (display only).
+    pub addr: String,
+    /// Server-side sampling interval.
+    pub interval_ms: u64,
+    /// The watched process's own ring, oldest first.
+    pub samples: Vec<TsSample>,
+    /// Per-backend rings (non-empty only against a router).
+    pub backends: Vec<TopBackend>,
+}
+
+fn parse_samples(j: Option<&Json>) -> Vec<TsSample> {
+    j.and_then(|v| v.as_arr())
+        .map(|arr| arr.iter().map(TsSample::from_json).collect())
+        .unwrap_or_default()
+}
+
+impl TopView {
+    /// Parse the `telemetry` op reply.
+    pub fn parse(addr: &str, reply: &Json) -> TopView {
+        let backends = reply
+            .get("backends")
+            .and_then(|b| b.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .enumerate()
+                    .map(|(i, b)| TopBackend {
+                        index: b.get("backend").and_then(|v| v.as_usize()).unwrap_or(i),
+                        addr: b.get("addr").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+                        state: b.get("state").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+                        samples: parse_samples(b.get("samples")),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        TopView {
+            addr: addr.to_string(),
+            interval_ms: reply.get("interval_ms").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            samples: parse_samples(reply.get("samples")),
+            backends,
+        }
+    }
+}
+
+/// Width of each sparkline: the rightmost hour at 1 s samples still
+/// fits a normal terminal when prefixed with the value column.
+const SPARK_WIDTH: usize = 40;
+
+fn tail(values: Vec<f64>) -> Vec<f64> {
+    let skip = values.len().saturating_sub(SPARK_WIDTH);
+    values.into_iter().skip(skip).collect()
+}
+
+/// Per-adjacent-pair rate series over the ring (len - 1 points).
+fn rate_series(samples: &[TsSample], pick: impl Fn(&TsRates) -> f64) -> Vec<f64> {
+    samples.windows(2).map(|w| pick(&rates(&w[0], &w[1]))).collect()
+}
+
+fn gauge_series(samples: &[TsSample], pick: impl Fn(&TsSample) -> f64) -> Vec<f64> {
+    samples.iter().map(pick).collect()
+}
+
+fn fmt_bytes_rate(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2} GB/s", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2} MB/s", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1} kB/s", v / 1e3)
+    } else {
+        format!("{v:.0} B/s")
+    }
+}
+
+fn fmt_secs(v: Option<f64>) -> String {
+    match v {
+        None => "-".to_string(),
+        Some(s) if s >= 1.0 => format!("{s:.2} s"),
+        Some(s) if s >= 1e-3 => format!("{:.2} ms", s * 1e3),
+        Some(s) => format!("{:.1} µs", s * 1e6),
+    }
+}
+
+fn line(out: &mut String, label: &str, value: String, spark: &str) {
+    out.push_str(&format!("  {label:<18} {value:>14}  {spark}\n"));
+}
+
+/// Render one dashboard frame (no ANSI control codes — the CLI adds
+/// clear-screen between frames).
+pub fn render(view: &TopView) -> String {
+    let mut out = String::new();
+    let s = &view.samples;
+    out.push_str(&format!(
+        "fastmps top — {} — {} sample(s) @ {} ms\n\n",
+        view.addr,
+        s.len(),
+        view.interval_ms
+    ));
+    if s.is_empty() {
+        out.push_str("  (no telemetry samples yet)\n");
+        return out;
+    }
+    let last = s[s.len() - 1];
+    let cur_rates = if s.len() >= 2 { rates(&s[s.len() - 2], &last) } else { TsRates::default() };
+
+    let depth = tail(gauge_series(s, |x| x.queue_depth as f64));
+    line(&mut out, "queue depth", format!("{}", last.queue_depth), &sparkline(&depth));
+    let inflight = tail(gauge_series(s, |x| x.inflight_batches as f64));
+    line(&mut out, "inflight batches", format!("{}", last.inflight_batches), &sparkline(&inflight));
+
+    let jobs = tail(rate_series(s, |r| r.jobs_per_sec));
+    line(&mut out, "jobs/s", format!("{:.1}", cur_rates.jobs_per_sec), &sparkline(&jobs));
+    let steps = tail(rate_series(s, |r| r.steps_per_sec));
+    line(&mut out, "steps/s", format!("{:.0}", cur_rates.steps_per_sec), &sparkline(&steps));
+    let bin = tail(rate_series(s, |r| r.bytes_in_per_sec));
+    line(&mut out, "net in", fmt_bytes_rate(cur_rates.bytes_in_per_sec), &sparkline(&bin));
+    let bout = tail(rate_series(s, |r| r.bytes_out_per_sec));
+    line(&mut out, "net out", fmt_bytes_rate(cur_rates.bytes_out_per_sec), &sparkline(&bout));
+
+    let hit = match last.cache_hit_rate {
+        Some(r) => format!("{:.1}%", r * 100.0),
+        None => "-".to_string(),
+    };
+    let hits = tail(gauge_series(s, |x| x.cache_hit_rate.unwrap_or(0.0)));
+    line(&mut out, "cache hit", hit, &sparkline(&hits));
+
+    let qw99 = tail(gauge_series(s, |x| x.queue_wait_p99.unwrap_or(0.0)));
+    line(
+        &mut out,
+        "queue wait p50/p99",
+        format!("{} / {}", fmt_secs(last.queue_wait_p50), fmt_secs(last.queue_wait_p99)),
+        &sparkline(&qw99),
+    );
+    if last.rtt_p50.is_some() || last.rtt_p99.is_some() {
+        let rtt99 = tail(gauge_series(s, |x| x.rtt_p99.unwrap_or(0.0)));
+        line(
+            &mut out,
+            "rtt p50/p99",
+            format!("{} / {}", fmt_secs(last.rtt_p50), fmt_secs(last.rtt_p99)),
+            &sparkline(&rtt99),
+        );
+    }
+
+    if !view.backends.is_empty() {
+        out.push_str("\nbackends:\n");
+        for b in &view.backends {
+            let (depth, jps, p99) = match b.samples.last() {
+                Some(last) => {
+                    let jps = if b.samples.len() >= 2 {
+                        rates(&b.samples[b.samples.len() - 2], last).jobs_per_sec
+                    } else {
+                        0.0
+                    };
+                    (format!("{}", last.queue_depth), format!("{jps:.1}"), fmt_secs(last.queue_wait_p99))
+                }
+                None => ("-".into(), "-".into(), "-".into()),
+            };
+            let jobs = tail(rate_series(&b.samples, |r| r.jobs_per_sec));
+            out.push_str(&format!(
+                "  [{}] {:<21} {:<8} q={:<4} jobs/s={:<6} p99 wait={:<9} {}\n",
+                b.index,
+                b.addr,
+                b.state,
+                depth,
+                jps,
+                p99,
+                sparkline(&jobs),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(t: u64, jobs: u64, depth: u64) -> TsSample {
+        TsSample {
+            unix_ms: t,
+            queue_depth: depth,
+            inflight_batches: 2,
+            cache_hit_rate: Some(0.75),
+            jobs_submitted: jobs + 1,
+            jobs_completed: jobs,
+            jobs_failed: 0,
+            samples_done: jobs * 10,
+            steps: jobs * 100,
+            net_bytes_in: jobs * 1000,
+            net_bytes_out: jobs * 2000,
+            queue_wait_p50: Some(0.002),
+            queue_wait_p99: Some(0.05),
+            rtt_p50: None,
+            rtt_p99: None,
+        }
+    }
+
+    #[test]
+    fn sparkline_scales_to_max() {
+        assert_eq!(sparkline(&[]), "");
+        assert_eq!(sparkline(&[0.0, 0.0]), "▁▁");
+        let line = sparkline(&[1.0, 4.0, 8.0]);
+        assert_eq!(line.chars().count(), 3);
+        assert_eq!(line.chars().last(), Some('█'));
+        assert!(line.chars().next().unwrap() <= line.chars().last().unwrap());
+    }
+
+    #[test]
+    fn frame_renders_required_fields() {
+        let view = TopView {
+            addr: "127.0.0.1:7733".into(),
+            interval_ms: 1000,
+            samples: (0..10).map(|i| s(i * 1000, i * 3, 5 - (i % 3))).collect(),
+            backends: vec![],
+        };
+        let frame = render(&view);
+        // The acceptance trio: queue depth, jobs/s, p99 queue wait.
+        assert!(frame.contains("queue depth"));
+        assert!(frame.contains("jobs/s"));
+        assert!(frame.contains("p99"));
+        assert!(frame.contains("3.0"), "3 jobs per 1000 ms should show as 3.0 jobs/s: {frame}");
+        assert!(frame.contains("50.00 ms"), "p99 queue wait missing: {frame}");
+        assert!(frame.contains('█'), "sparklines should render: {frame}");
+        // No RTT row for a plain server (rtt is None throughout).
+        assert!(!frame.contains("rtt p50"));
+    }
+
+    #[test]
+    fn router_view_renders_backend_rows() {
+        let reply = Json::obj(vec![
+            ("type", Json::Str("telemetry".into())),
+            ("interval_ms", Json::Num(500.0)),
+            ("samples", Json::Arr(vec![s(0, 0, 1).to_json(), s(500, 5, 1).to_json()])),
+            (
+                "backends",
+                Json::Arr(vec![Json::obj(vec![
+                    ("backend", Json::Num(0.0)),
+                    ("addr", Json::Str("127.0.0.1:9001".into())),
+                    ("state", Json::Str("alive".into())),
+                    ("samples", Json::Arr(vec![s(0, 0, 2).to_json(), s(500, 2, 2).to_json()])),
+                ])]),
+            ),
+        ]);
+        let view = TopView::parse("127.0.0.1:7070", &reply);
+        assert_eq!(view.interval_ms, 500);
+        assert_eq!(view.samples.len(), 2);
+        assert_eq!(view.backends.len(), 1);
+        assert_eq!(view.backends[0].state, "alive");
+        let frame = render(&view);
+        assert!(frame.contains("backends:"));
+        assert!(frame.contains("[0] 127.0.0.1:9001"));
+        assert!(frame.contains("alive"));
+        assert!(frame.contains("q=2"));
+    }
+
+    #[test]
+    fn empty_view_renders_placeholder() {
+        let view = TopView { addr: "x".into(), interval_ms: 1000, samples: vec![], backends: vec![] };
+        assert!(render(&view).contains("no telemetry samples yet"));
+    }
+}

@@ -1,0 +1,200 @@
+//! End-to-end telemetry plane: a live Prometheus exposition scraped over
+//! real HTTP from a loopback `NetServer` and from a `Router` fleet, the
+//! `telemetry` wire op feeding ring history to `fastmps top`, and the
+//! exposition validator run against what the exporters actually serve.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastmps::cli::run_cli;
+use fastmps::config::{ComputePrecision, NetConfig, Preset, RouterConfig, ServiceConfig};
+use fastmps::io::{GammaStore, StoreCodec, StorePrecision};
+use fastmps::net::{Client, NetServer};
+use fastmps::router::Router;
+use fastmps::service::JobSpec;
+use fastmps::telemetry::prom::validate_exposition;
+use fastmps::telemetry::top::{render, TopView};
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastmps-ittel-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn make_store(root: &Path) -> (Arc<GammaStore>, PathBuf) {
+    let dir = root.join("store");
+    let mut spec = Preset::Jiuzhang2.scaled_spec(55);
+    spec.m = 6;
+    spec.chi_cap = 10;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.0;
+    let store =
+        Arc::new(GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap());
+    (store, dir)
+}
+
+fn service_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        n2_micro: 32,
+        target_batch: Some(256),
+        compute: ComputePrecision::F64,
+        linger_ms: 2,
+        ..Default::default()
+    }
+}
+
+fn loopback_net() -> NetConfig {
+    NetConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    }
+}
+
+/// A loopback net config with a fast telemetry interval and an ephemeral
+/// exposition port.
+fn telemetry_net() -> NetConfig {
+    NetConfig {
+        addr: "127.0.0.1:0".into(),
+        telemetry_interval_ms: 25,
+        metrics_listen: Some("127.0.0.1:0".into()),
+        ..Default::default()
+    }
+}
+
+/// One raw HTTP/1.0 GET; returns (status+headers, body).
+fn scrape(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf
+        .split_once("\r\n\r\n")
+        .expect("response has a header/body split");
+    (head.to_string(), body.to_string())
+}
+
+#[test]
+fn server_exposition_scrapes_live_and_validates() {
+    let root = scratch("prom");
+    let (_store, store_dir) = make_store(&root);
+    let server = NetServer::start(service_cfg(), telemetry_net()).unwrap();
+    let maddr = server.metrics_addr().expect("exporter bound");
+    let addr = server.local_addr().to_string();
+
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+    let id = client.submit(&JobSpec::new(&store_dir, 64)).unwrap();
+    client.wait(id, Duration::from_secs(60)).unwrap().unwrap();
+
+    let (head, body) = scrape(maddr, "/metrics");
+    assert!(head.starts_with("HTTP/1.0 200"), "{head}");
+    assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+    assert!(body.contains("fastmps_jobs_completed_total 1"), "{body}");
+    assert!(
+        body.contains("fastmps_queue_wait_seconds_bucket"),
+        "log2 histogram must render as cumulative le buckets:\n{body}"
+    );
+    assert!(body.contains("fastmps_queue_wait_seconds_count"));
+    assert!(body.contains("fastmps_queue_depth"));
+    validate_exposition(&body).unwrap_or_else(|e| panic!("invalid exposition: {e}\n{body}"));
+
+    let (head, _) = scrape(maddr, "/nope");
+    assert!(head.starts_with("HTTP/1.0 404"), "{head}");
+
+    // The telemetry op serves ring history; after a couple of intervals
+    // there is more than the startup sample, and the latest one reflects
+    // the completed job.
+    std::thread::sleep(Duration::from_millis(80));
+    let reply = client.telemetry().unwrap();
+    assert!(reply.get("interval_ms").unwrap().as_f64() == Some(25.0));
+    let samples = reply.get("samples").unwrap().as_arr().unwrap();
+    assert!(samples.len() >= 2, "ring should have accumulated samples");
+    let last = samples.last().unwrap();
+    assert_eq!(last.get("jobs_completed").unwrap().as_f64(), Some(1.0));
+    assert!(last.get("unix_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // A `top` frame built from the same reply shows the headline fields.
+    let frame = render(&TopView::parse(&addr, &reply));
+    assert!(frame.contains("queue depth"), "{frame}");
+    assert!(frame.contains("jobs/s"), "{frame}");
+    assert!(frame.contains("p99"), "{frame}");
+
+    drop(client);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn router_exposition_labels_backends_and_top_shows_fleet() {
+    let root = scratch("fleet");
+    let (_store, store_dir) = make_store(&root);
+    let backend = NetServer::start(service_cfg(), loopback_net()).unwrap();
+    let rcfg = RouterConfig {
+        backends: vec![backend.local_addr().to_string()],
+        probe_interval_ms: 25,
+        ..Default::default()
+    };
+    let router = Router::start(rcfg, telemetry_net()).unwrap();
+    let maddr = router.metrics_addr().expect("router exporter bound");
+    let raddr = router.local_addr().to_string();
+
+    let mut client = Client::connect(&raddr, &loopback_net()).unwrap();
+    let id = client.submit(&JobSpec::new(&store_dir, 64)).unwrap();
+    client.wait(id, Duration::from_secs(60)).unwrap().unwrap();
+
+    // Poll until the fleet poller has scraped the backend *after* the job
+    // completed, so the labeled series carry the final counters.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let body = loop {
+        let (head, body) = scrape(maddr, "/metrics");
+        assert!(head.starts_with("HTTP/1.0 200"), "{head}");
+        if body.contains("fastmps_jobs_completed_total{backend=\"0\"} 1") {
+            break body;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fleet poller never served the backend's completed-job counter:\n{body}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    validate_exposition(&body).unwrap_or_else(|e| panic!("invalid exposition: {e}\n{body}"));
+    // Router's own series, unlabeled.
+    assert!(body.contains("fastmps_router_submits_total 1"), "{body}");
+    assert!(body.contains("fastmps_router_health_degraded_total"));
+    assert!(body.contains("fastmps_router_health_down_total"));
+    // Fleet series: health gauge, info series, and the scraped backend
+    // document re-rendered under its index label.
+    assert!(body.contains("fastmps_router_backend_state{backend=\"0\"} 0"), "{body}");
+    assert!(body.contains("fastmps_router_backend_info{"));
+    assert!(body.contains("fastmps_jobs_completed_total{backend=\"0\"} 1"), "{body}");
+
+    // Router telemetry op: own ring plus one per-backend sample ring.
+    let reply = client.telemetry().unwrap();
+    assert!(!reply.get("samples").unwrap().as_arr().unwrap().is_empty());
+    let backends = reply.get("backends").unwrap().as_arr().unwrap();
+    assert_eq!(backends.len(), 1);
+    assert_eq!(backends[0].get("state").unwrap().as_str(), Some("alive"));
+    assert!(!backends[0].get("samples").unwrap().as_arr().unwrap().is_empty());
+
+    // Per-backend rows make it into the dashboard frame.
+    let frame = render(&TopView::parse(&raddr, &reply));
+    assert!(frame.contains("backends"), "{frame}");
+    assert!(frame.contains("alive"), "{frame}");
+
+    // And the CLI path renders one frame end-to-end.
+    let argv: Vec<String> = format!("top --connect {raddr} --once")
+        .split_whitespace()
+        .map(String::from)
+        .collect();
+    run_cli(&argv).unwrap();
+
+    drop(client);
+    drop(router);
+    drop(backend);
+    let _ = std::fs::remove_dir_all(&root);
+}
