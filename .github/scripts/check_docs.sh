@@ -1,0 +1,114 @@
+#!/usr/bin/env bash
+# Docs drift gate — grep/awk only, no toolchain, so it runs even where
+# cargo cannot. Two promises the documentation makes are enforced here:
+#
+#   1. Intra-repo markdown links resolve. Every `[text](path)` in the
+#      scanned files whose target is not an external URL must point at
+#      an existing file (relative to the file containing the link), and
+#      a `path#anchor` / `#anchor` target must match a heading in the
+#      target file (GitHub slug rules: lowercase, punctuation stripped,
+#      spaces become hyphens).
+#
+#   2. CLI docs and the CLI agree. Every `fastmps <subcommand>` a doc
+#      mentions must exist in the `run_cli` dispatch of
+#      rust/src/cli/commands.rs, and every dispatched subcommand must
+#      be documented in the HELP text — so a renamed or removed command
+#      cannot leave stale walkthroughs behind.
+set -u
+cd "$(dirname "$0")/../.." || exit 1
+
+DOCS=(README.md ROADMAP.md docs/*.md rust/README.md)
+CLI=rust/src/cli/commands.rs
+status=0
+
+# GitHub heading slug: lowercase; drop everything but alphanumerics,
+# spaces, hyphens, and underscores; spaces to hyphens.
+slugs_of() {
+  grep -E '^#{1,6} ' "$1" | sed -E 's/^#{1,6} +//' \
+    | tr '[:upper:]' '[:lower:]' \
+    | sed -E 's/[^a-z0-9 _-]//g; s/ /-/g'
+}
+
+check_link() { # file lineno target
+  local f=$1 ln=$2 target=$3 path anchor resolved
+  case "$target" in
+    http://* | https://* | mailto:*) return 0 ;;
+  esac
+  path=$target anchor=""
+  case "$target" in
+    *'#'*)
+      path=${target%%#*}
+      anchor=${target#*#}
+      ;;
+  esac
+  if [ -n "$path" ]; then
+    resolved="$(dirname "$f")/$path"
+    if [ ! -e "$resolved" ]; then
+      echo "$f:$ln: broken link: $target ($resolved does not exist)" >&2
+      return 1
+    fi
+  else
+    resolved=$f
+  fi
+  if [ -n "$anchor" ]; then
+    case "$resolved" in
+      *.md)
+        if ! slugs_of "$resolved" | grep -qx "$anchor"; then
+          echo "$f:$ln: broken anchor: #$anchor is not a heading in $resolved" >&2
+          return 1
+        fi
+        ;;
+    esac
+  fi
+  return 0
+}
+
+links=0
+for f in "${DOCS[@]}"; do
+  [ -f "$f" ] || continue
+  # One `lineno:(target)` pair per line; tolerates several links on one
+  # source line. Process substitution keeps `status` out of a subshell.
+  while IFS=: read -r ln target; do
+    [ -n "$target" ] || continue
+    links=$((links + 1))
+    check_link "$f" "$ln" "$target" || status=1
+  done < <(grep -noE '\]\([^)]+\)' "$f" | sed -E 's/\]\((.*)\)$/\1/')
+done
+if [ "$links" -eq 0 ]; then
+  echo "no markdown links found at all — the link extractor is broken" >&2
+  status=1
+fi
+
+# --- CLI subcommands: docs -> dispatch ------------------------------------
+
+dispatched=$(sed -n '/match args.command.as_str/,/^    }/p' "$CLI" \
+  | grep -oE '"[a-z-]+" =>' | tr -d '">= ')
+if [ -z "$dispatched" ]; then
+  echo "could not extract the run_cli dispatch from $CLI" >&2
+  exit 1
+fi
+
+mentioned=$(grep -rhoE 'fastmps +[a-z][a-z0-9-]*' "${DOCS[@]}" 2>/dev/null \
+  | awk '{print $2}' | sort -u)
+for cmd in $mentioned; do
+  case "$cmd" in help) continue ;; esac # handled before the match
+  if ! printf '%s\n' "$dispatched" | grep -qx "$cmd"; then
+    echo "docs mention 'fastmps $cmd' but $CLI does not dispatch it:" >&2
+    grep -rn "fastmps $cmd" "${DOCS[@]}" 2>/dev/null | head -3 >&2
+    status=1
+  fi
+done
+
+# --- CLI subcommands: dispatch -> HELP ------------------------------------
+
+for cmd in $dispatched; do
+  if ! grep -qE "^  $cmd( |\$)" "$CLI"; then
+    echo "subcommand '$cmd' is dispatched but missing from the HELP text in $CLI" >&2
+    status=1
+  fi
+done
+
+if [ "$status" -eq 0 ]; then
+  echo "ok   $links intra-repo links/anchors and the CLI subcommand docs agree"
+fi
+exit $status

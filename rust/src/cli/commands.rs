@@ -55,24 +55,33 @@ COMMANDS:
                          [--read-timeout-ms N] [--write-timeout-ms N]
                          [--push-dir DIR] [--chunk-kb N] [--staging-mb N]
                          [--telemetry-interval S] [--metrics-listen ADDR]
+                         [--tp-timeout-ms N]
   route       Front a fleet of TCP serve instances with store-affinity routing
               --listen ADDR --backend ADDR [--backend ADDR ...]
               [--probe-ms N] [--degraded-after N] [--down-after N]
               [--retry-budget N] [--backoff-ms N] [--backoff-cap-ms N]
               [--jitter-ms N] [--drain-cap-s N] [--seed N]
+              [--shard-budget-mb N] (auto-upgrade keyed f32 jobs to TP
+              when a complete shard group bigger than N MB is registered)
               [--max-conns N] [--frame-mb N] [--trace-buf N]
               [--read-timeout-ms N] [--write-timeout-ms N]
               [--telemetry-interval S] [--metrics-listen ADDR]
               [--max-seconds S] [--log-level L] [--json]
   push        Upload a store to a server/router (chunked, content-addressed)
-              --connect ADDR --data STORE [--chunk-kb N] [--json]
+              --connect ADDR --data STORE [--chunk-kb N] [--tp N] [--json]
               Prints the content key; submit jobs with --key afterwards —
-              no shared data volume needed.
+              no shared data volume needed. --tp N splits the store into
+              N column shards and pushes each one (through a router the
+              shards spread across the fleet and register a TP group;
+              see docs/TENSOR_PARALLEL.md).
   submit      Submit a sampling job to a running serve instance
               (--jobs DIR | --connect ADDR) (--data STORE | --key HEX)
               --samples N
               [--sample-base B] [--compute C] [--tag T] [--wait]
-              [--timeout-s S] [--poll-ms N] [--json]
+              [--timeout-s S] [--poll-ms N] [--tp N] [--json]
+              --tp N runs the job as an N-way tensor-parallel group
+              (requires --key naming the unsharded store and a router
+              that has its shard group registered; f32 compute only).
   jobs        List job statuses (job directory or TCP server)
               (--jobs DIR | --connect ADDR) [--json]
   metrics     Fetch live service + net metrics from a TCP server
@@ -414,6 +423,7 @@ fn service_config_from_args(args: &Args) -> Result<ServiceConfig> {
         disk_bw: args.f64_opt("disk-bw")?,
         artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
         trace_buf: args.usize_or("trace-buf", d.trace_buf)?,
+        tp_step_timeout_ms: args.u64_or("tp-timeout-ms", d.tp_step_timeout_ms)?,
         ..d
     })
 }
@@ -552,6 +562,7 @@ fn router_config_from_args(args: &Args) -> Result<RouterConfig> {
         drain_cap_secs: args.u64_or("drain-cap-s", d.drain_cap_secs)?,
         seed: args.u64_or("seed", d.seed)?,
         trace_buf: args.usize_or("trace-buf", d.trace_buf)?,
+        shard_budget_bytes: args.u64_or("shard-budget-mb", d.shard_budget_bytes >> 20)? << 20,
     })
 }
 
@@ -601,8 +612,15 @@ fn cmd_push(args: &Args) -> Result<()> {
     let data = PathBuf::from(args.req("data")?);
     let d = NetConfig::default();
     let chunk = args.usize_or("chunk-kb", d.push_chunk_bytes >> 10)? << 10;
+    let tp = args.usize_or("tp", 1)?;
     let as_json = args.flag("json");
     args.finish()?;
+    if tp == 0 {
+        return Err(Error::config("--tp: group size must be ≥ 1 (≥ 2 to shard)"));
+    }
+    if tp >= 2 {
+        return push_sharded(&addr, &data, chunk, tp, as_json);
+    }
     let t0 = std::time::Instant::now();
     let report = connect(&addr)?.push_store(&data, chunk)?;
     let secs = t0.elapsed().as_secs_f64();
@@ -643,6 +661,79 @@ fn cmd_push(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `push --tp N`: slice the store into `N` column shards (each a
+/// self-contained FMPS1 store, see `GammaStore::write_shard`) in a
+/// scratch directory, push every shard through the one connection, and
+/// clean up. Through a router the shards spread across the fleet by
+/// content-key affinity and their announced shard identity registers
+/// the TP group (`docs/TENSOR_PARALLEL.md` § Group lifecycle).
+fn push_sharded(addr: &str, data: &PathBuf, chunk: usize, of: usize, as_json: bool) -> Result<()> {
+    let store = GammaStore::open(data)?;
+    let base = crate::io::manifest_hash_at(data)?;
+    let scratch = std::env::temp_dir().join(format!(
+        "fastmps-push-tp-{}-{base:016x}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let t0 = std::time::Instant::now();
+    let mut reports = Vec::with_capacity(of);
+    let outcome = (|| -> Result<()> {
+        let mut client = connect(addr)?;
+        for k in 0..of {
+            let dir = scratch.join(format!("shard-{k:02}"));
+            store.write_shard(&dir, k, of)?;
+            reports.push(client.push_store(&dir, chunk)?);
+        }
+        Ok(())
+    })();
+    let _ = std::fs::remove_dir_all(&scratch);
+    outcome?;
+    let secs = t0.elapsed().as_secs_f64();
+    if as_json {
+        let shards = Json::Arr(
+            reports
+                .iter()
+                .enumerate()
+                .map(|(k, r)| {
+                    Json::obj(vec![
+                        ("index", Json::Num(k as f64)),
+                        ("key", Json::Str(format!("{:016x}", r.key))),
+                        ("dedup", Json::Bool(r.dedup)),
+                        ("chunks", Json::Num(r.chunks as f64)),
+                        ("raw_bytes", Json::Num(r.raw_bytes as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let j = Json::obj(vec![
+            ("base", Json::Str(format!("{base:016x}"))),
+            ("of", Json::Num(of as f64)),
+            ("shards", shards),
+            ("wall_secs", Json::Num(secs)),
+        ]);
+        println!("{}", j.pretty());
+    } else {
+        for (k, r) in reports.iter().enumerate() {
+            println!(
+                "shard {k}/{of}: key {:016x}, {} in {} chunks{}",
+                r.key,
+                crate::util::human_bytes(r.raw_bytes),
+                r.chunks,
+                if r.dedup { " (deduplicated)" } else { "" },
+            );
+        }
+        println!(
+            "pushed {of} shards of {} (base {base:016x}) in {}",
+            data.display(),
+            crate::util::human_secs(secs),
+        );
+        println!(
+            "submit against the group with: fastmps submit --connect {addr} --key {base:016x} --tp {of} --samples N"
+        );
+    }
+    Ok(())
+}
+
 fn job_spec_from_args(args: &Args) -> Result<crate::service::JobSpec> {
     let samples: u64 = {
         let v = args.req("samples")?;
@@ -664,6 +755,23 @@ fn job_spec_from_args(args: &Args) -> Result<crate::service::JobSpec> {
         Some(c) => Some(ComputePrecision::parse(c)?),
     };
     spec.tag = args.str_or("tag", "");
+    let tp = args.usize_or("tp", 1)?;
+    if tp >= 2 {
+        // A TP *request*: `of` and the full store's key; the router
+        // resolves the peer list from its shard map.
+        let Some(base) = spec.key else {
+            return Err(Error::config(
+                "--tp needs --key HEX naming the unsharded store (push its shards first)",
+            ));
+        };
+        spec.tp = Some(crate::service::TpGroup {
+            of: tp,
+            base,
+            peers: Vec::new(),
+        });
+    } else if tp == 0 {
+        return Err(Error::config("--tp: group size must be ≥ 2"));
+    }
     Ok(spec)
 }
 

@@ -5,6 +5,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::netmodel::{NetModel, NetPreset};
+use super::TpTransport;
 use crate::util::error::{Error, Result};
 
 /// Collective rendezvous state (one "round" at a time; SPMD ordering).
@@ -97,6 +98,7 @@ impl Fabric {
                 vtime: 0.0,
                 comm_bytes: 0,
                 collectives: 0,
+                tp_tag: 0,
             });
             let _ = rank;
         }
@@ -125,6 +127,9 @@ pub struct Endpoint {
     pub comm_bytes: u64,
     /// Number of collective operations.
     pub collectives: u64,
+    /// Sequence counter for [`TpTransport`] gathers (kept out of the
+    /// user-visible p2p tag space by setting the top bit).
+    tp_tag: u64,
 }
 
 impl Endpoint {
@@ -312,6 +317,49 @@ impl Endpoint {
                 return Ok(msg.data);
             }
             self.pending.insert((src, msg.tag), msg);
+        }
+    }
+}
+
+/// The simulated fabric speaking the TP transport contract, so perfmodel
+/// runs exercise exactly the collective sequence the socket data plane
+/// uses (see `comm::socket`). Costing still applies: bcast through the
+/// modelled tree, gathers as p2p sends into rank order.
+impl TpTransport for Endpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn num_ranks(&self) -> usize {
+        self.shared.p
+    }
+
+    fn bcast(&mut self, _op: u8, data: &mut Vec<f32>, root: usize) -> Result<u64> {
+        Endpoint::bcast(self, data, root);
+        Ok((data.len() * 4) as u64)
+    }
+
+    fn gather(&mut self, _op: u8, mine: &[f32], out: &mut Vec<f32>, root: usize) -> Result<u64> {
+        let tag = (1u64 << 63) | self.tp_tag;
+        self.tp_tag += 1;
+        if self.rank == root {
+            out.clear();
+            let mut moved = 0u64;
+            // Ascending rank order — the same deterministic assembly rule
+            // as the socket transport.
+            for src in 0..self.shared.p {
+                if src == self.rank {
+                    out.extend_from_slice(mine);
+                } else {
+                    let v = self.recv(src, tag)?;
+                    moved += (v.len() * 4) as u64;
+                    out.extend_from_slice(&v);
+                }
+            }
+            Ok(moved)
+        } else {
+            self.send(root, tag, mine.to_vec())?;
+            Ok((mine.len() * 4) as u64)
         }
     }
 }

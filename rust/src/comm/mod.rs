@@ -1,4 +1,4 @@
-//! Simulated communication fabric.
+//! Communication fabrics: the simulated cost-model net and the real one.
 //!
 //! The paper's scaling studies run on MPI over NVLink/Infiniband/Sunway
 //! networks; this testbed has neither MPI nor multiple nodes, so ranks are
@@ -10,11 +10,47 @@
 //! the virtual clocks; wall-clock numbers remain available for the
 //! CPU-scaled head-to-head tables.
 //!
+//! Since the fleet grew a real data plane (FMPN), tensor-parallel groups
+//! also run over **real sockets**: [`SocketComm`] speaks the TP op family
+//! of `net/frame` between backends. Both the simulated [`Endpoint`] and
+//! [`SocketComm`] implement [`TpTransport`], so the perfmodel's predictions
+//! and the production collectives share one interface and cannot drift
+//! apart silently. See `docs/TENSOR_PARALLEL.md` for the group contract.
+//!
 //! SPMD contract: all ranks of a fabric call the same collectives in the
-//! same order (checked with an op-tag assertion in debug builds).
+//! same order (checked with an op-tag assertion in debug builds; enforced
+//! with sequence numbers on the socket path).
 
 mod collectives;
 mod netmodel;
+mod socket;
 
 pub use collectives::{Endpoint, Fabric};
 pub use netmodel::{NetModel, NetPreset};
+pub use socket::{tp_op_name, SocketComm, TpLink, TP_DONE, TP_ENV, TP_OUTCOME, TP_PART};
+
+use crate::util::error::Result;
+
+/// The narrow collective interface the tensor-parallel sampling driver
+/// needs — implemented by both the simulated [`Endpoint`] (thread ranks,
+/// virtual-clock costing via `netmodel`) and the real-socket
+/// [`SocketComm`], so simulation and production share one contract.
+///
+/// Both collectives are **deterministic**: `gather` appends contributions
+/// in ascending rank order regardless of arrival timing, which is what
+/// makes the sharded sampling step bit-identical to the serial kernel
+/// (see `docs/TENSOR_PARALLEL.md` § Bit identity).
+pub trait TpTransport {
+    /// This rank's position in the group (`0` = leader).
+    fn rank(&self) -> usize;
+    /// Group size.
+    fn num_ranks(&self) -> usize;
+    /// Broadcast `data` from `root`; non-root buffers are replaced.
+    /// `op` tags the message on the wire (ignored by the simulator).
+    /// Returns the payload bytes this rank moved.
+    fn bcast(&mut self, op: u8, data: &mut Vec<f32>, root: usize) -> Result<u64>;
+    /// Gather every rank's `mine` to `root`, appended in ascending rank
+    /// order. On `root`, `out` is cleared first; on other ranks it is
+    /// untouched. Returns the payload bytes this rank moved.
+    fn gather(&mut self, op: u8, mine: &[f32], out: &mut Vec<f32>, root: usize) -> Result<u64>;
+}

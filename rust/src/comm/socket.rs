@@ -1,0 +1,337 @@
+//! Real-socket TP collectives: the data plane of a cross-backend TP group.
+//!
+//! A TP group is a **hub**: rank 0 (the leader, the backend the router
+//! placed the job on) holds one [`TpLink`] per follower; followers hold a
+//! single link back to the leader. All per-site collectives are rooted at
+//! rank 0 — broadcast the lifted environment out, gather the partial
+//! contractions back — so the hub shape is exactly the traffic pattern and
+//! nothing is lost over a full mesh.
+//!
+//! [`TpLink`] abstracts one ordered, reliable byte pipe carrying TP
+//! messages (`op`, `seq`, raw f32s). The production impl frames them over
+//! an FMPN socket (`net/tp`); tests use in-memory channels. Every
+//! collective bumps a per-group sequence number and the receiving side
+//! checks both `op` and `seq`, so a desynchronised group fails with a
+//! typed error instead of silently reducing the wrong site's data.
+
+use super::TpTransport;
+use crate::util::error::{Error, Result};
+
+/// TP op: environment row-block broadcast, leader → followers.
+pub const TP_ENV: u8 = 1;
+/// TP op: partial contraction (shard-local temp), follower → leader.
+pub const TP_PART: u8 = 2;
+/// TP op: measurement outcomes broadcast from rank 0.
+pub const TP_OUTCOME: u8 = 3;
+/// TP op: job end (empty payload); followers release the group.
+pub const TP_DONE: u8 = 4;
+
+/// Human name of a TP op byte (error messages, trace spans).
+pub fn tp_op_name(op: u8) -> &'static str {
+    match op {
+        TP_ENV => "tp_env",
+        TP_PART => "tp_part",
+        TP_OUTCOME => "tp_outcome",
+        TP_DONE => "tp_done",
+        _ => "tp_unknown",
+    }
+}
+
+/// One ordered, reliable pipe to a single TP peer.
+pub trait TpLink: Send {
+    /// Send one TP message. Returns payload bytes written.
+    fn send(&mut self, op: u8, seq: u64, data: &[f32]) -> Result<u64>;
+    /// Receive one TP message, which must carry exactly (`op`, `seq`) —
+    /// anything else is a desync and a typed error. Appends the payload
+    /// to `out` and returns payload bytes read.
+    fn recv_into(&mut self, op: u8, seq: u64, out: &mut Vec<f32>) -> Result<u64>;
+    /// Confirm the peer released the group after [`TP_DONE`]. The FMPN
+    /// link reads the follower's final control acknowledgement here, so a
+    /// leader can distinguish "group wound down cleanly" from "the socket
+    /// just closed"; in-memory links have nothing to confirm.
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// [`TpTransport`] over per-peer [`TpLink`]s (hub topology, root = 0).
+pub struct SocketComm {
+    rank: usize,
+    /// `links[peer]` is the pipe to `peer`; `None` at `links[rank]` and,
+    /// on followers, at every slot except the leader's.
+    links: Vec<Option<Box<dyn TpLink>>>,
+    /// Collective sequence number; both sides advance in lockstep.
+    seq: u64,
+}
+
+impl SocketComm {
+    /// Build a group member. `links.len()` is the group size; the slot for
+    /// `rank` itself must be `None`.
+    pub fn new(rank: usize, links: Vec<Option<Box<dyn TpLink>>>) -> Result<SocketComm> {
+        if rank >= links.len() {
+            return Err(Error::Fabric(format!(
+                "TP rank {rank} outside group of {}",
+                links.len()
+            )));
+        }
+        if links[rank].is_some() {
+            return Err(Error::Fabric(format!("TP rank {rank} has a link to itself")));
+        }
+        Ok(SocketComm { rank, links, seq: 0 })
+    }
+
+    fn link(&mut self, peer: usize) -> Result<&mut Box<dyn TpLink>> {
+        self.links
+            .get_mut(peer)
+            .and_then(|l| l.as_mut())
+            .ok_or_else(|| Error::Fabric(format!("no link to TP rank {peer}")))
+    }
+
+    /// Leader-side teardown: after broadcasting [`TP_DONE`], collect every
+    /// peer's release confirmation (see [`TpLink::finish`]).
+    pub fn finish(&mut self) -> Result<()> {
+        for l in self.links.iter_mut().flatten() {
+            l.finish()?;
+        }
+        Ok(())
+    }
+}
+
+impl TpTransport for SocketComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn num_ranks(&self) -> usize {
+        self.links.len()
+    }
+
+    fn bcast(&mut self, op: u8, data: &mut Vec<f32>, root: usize) -> Result<u64> {
+        self.seq += 1;
+        let seq = self.seq;
+        if self.rank == root {
+            let mut moved = 0u64;
+            for peer in 0..self.links.len() {
+                if peer == self.rank {
+                    continue;
+                }
+                moved += self.link(peer)?.send(op, seq, data)?;
+            }
+            Ok(moved)
+        } else {
+            data.clear();
+            self.link(root)?.recv_into(op, seq, data)
+        }
+    }
+
+    fn gather(&mut self, op: u8, mine: &[f32], out: &mut Vec<f32>, root: usize) -> Result<u64> {
+        self.seq += 1;
+        let seq = self.seq;
+        if self.rank == root {
+            out.clear();
+            let mut moved = 0u64;
+            // Ascending rank order: the concatenation is deterministic no
+            // matter when each peer's bytes actually arrive.
+            for src in 0..self.links.len() {
+                if src == self.rank {
+                    out.extend_from_slice(mine);
+                } else {
+                    moved += self.link(src)?.recv_into(op, seq, out)?;
+                }
+            }
+            Ok(moved)
+        } else {
+            self.link(root)?.send(op, seq, mine)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Fabric, NetPreset};
+    use std::sync::mpsc::{channel, Receiver, Sender};
+
+    /// In-memory [`TpLink`]: one channel pair, like a loopback socket.
+    struct ChanLink {
+        tx: Sender<(u8, u64, Vec<f32>)>,
+        rx: Receiver<(u8, u64, Vec<f32>)>,
+    }
+
+    impl TpLink for ChanLink {
+        fn send(&mut self, op: u8, seq: u64, data: &[f32]) -> Result<u64> {
+            self.tx
+                .send((op, seq, data.to_vec()))
+                .map_err(|_| Error::Fabric("TP peer hung up".into()))?;
+            Ok((data.len() * 4) as u64)
+        }
+
+        fn recv_into(&mut self, op: u8, seq: u64, out: &mut Vec<f32>) -> Result<u64> {
+            let (got_op, got_seq, data) = self
+                .rx
+                .recv()
+                .map_err(|_| Error::Fabric("TP peer hung up mid-collective".into()))?;
+            if (got_op, got_seq) != (op, seq) {
+                return Err(Error::Fabric(format!(
+                    "TP desync: expected {} seq {seq}, got {} seq {got_seq}",
+                    tp_op_name(op),
+                    tp_op_name(got_op)
+                )));
+            }
+            out.extend_from_slice(&data);
+            Ok((data.len() * 4) as u64)
+        }
+    }
+
+    /// Hub-wire a group of `n`: member 0 gets a link per follower,
+    /// followers get one link to member 0.
+    fn hub_group(n: usize) -> Vec<SocketComm> {
+        let mut leader_links: Vec<Option<Box<dyn TpLink>>> = vec![None];
+        let mut followers = Vec::new();
+        for rank in 1..n {
+            let (to_f, from_l) = channel();
+            let (to_l, from_f) = channel();
+            leader_links.push(Some(Box::new(ChanLink { tx: to_f, rx: from_f }) as Box<dyn TpLink>));
+            let mut links: Vec<Option<Box<dyn TpLink>>> = (0..n).map(|_| None).collect();
+            links[0] = Some(Box::new(ChanLink { tx: to_l, rx: from_l }));
+            followers.push(SocketComm::new(rank, links).unwrap());
+        }
+        let mut group = vec![SocketComm::new(0, leader_links).unwrap()];
+        group.extend(followers);
+        group
+    }
+
+    /// The scripted per-site exchange both transports must agree on:
+    /// bcast an env from rank 0, every rank contributes a shard-local
+    /// partial, gather to rank 0. Returns the gathered buffer (root only).
+    fn run_script<T: TpTransport>(t: &mut T) -> Vec<f32> {
+        let mut env = if t.rank() == 0 {
+            vec![1.0f32, -2.0, 0.5]
+        } else {
+            Vec::new()
+        };
+        t.bcast(TP_ENV, &mut env, 0).unwrap();
+        assert_eq!(env, vec![1.0, -2.0, 0.5], "rank {}", t.rank());
+        let scale = (t.rank() + 1) as f32;
+        let mine: Vec<f32> = env.iter().map(|x| x * scale).collect();
+        let mut gathered = Vec::new();
+        t.gather(TP_PART, &mine, &mut gathered, 0).unwrap();
+        gathered
+    }
+
+    #[test]
+    fn gather_appends_in_ascending_rank_order() {
+        let mut group = hub_group(3);
+        let followers = group.split_off(1);
+        let handles: Vec<_> = followers
+            .into_iter()
+            .map(|mut f| std::thread::spawn(move || run_script(&mut f)))
+            .collect();
+        let gathered = run_script(&mut group[0]);
+        for h in handles {
+            h.join().unwrap();
+        }
+        // rank 0's shard, then rank 1's, then rank 2's — always.
+        let want = vec![1.0, -2.0, 0.5, 2.0, -4.0, 1.0, 3.0, -6.0, 1.5];
+        assert_eq!(gathered, want);
+    }
+
+    #[test]
+    fn socket_and_sim_transports_agree() {
+        // Simulated fabric ranks…
+        let eps = Fabric::new(3, NetPreset::Ideal).endpoints();
+        let sim = std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|mut ep| s.spawn(move || run_script(&mut ep)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .next()
+                .unwrap()
+        });
+        // …and socket ranks produce bit-identical gathers.
+        let mut group = hub_group(3);
+        let followers = group.split_off(1);
+        let handles: Vec<_> = followers
+            .into_iter()
+            .map(|mut f| std::thread::spawn(move || run_script(&mut f)))
+            .collect();
+        let socket = run_script(&mut group[0]);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(sim, socket, "sim and socket transports drifted apart");
+    }
+
+    #[test]
+    fn member_drop_mid_reduce_is_a_typed_error() {
+        let mut group = hub_group(3);
+        let mut followers = group.split_off(1);
+        let dead = followers.pop().unwrap(); // rank 2
+        let good = followers.pop().unwrap(); // rank 1
+        let h1 = std::thread::spawn(move || {
+            let mut f = good;
+            let mut env = Vec::new();
+            f.bcast(TP_ENV, &mut env, 0).unwrap();
+            f.gather(TP_PART, &[7.0], &mut Vec::new(), 0).unwrap();
+        });
+        let h2 = std::thread::spawn(move || {
+            let mut f = dead;
+            let mut env = Vec::new();
+            f.bcast(TP_ENV, &mut env, 0).unwrap();
+            // …and dies before contributing its partial.
+            drop(f);
+        });
+        let leader = &mut group[0];
+        let mut env = vec![1.0f32];
+        leader.bcast(TP_ENV, &mut env, 0).unwrap();
+        let mut out = Vec::new();
+        let e = leader
+            .gather(TP_PART, &[0.5], &mut out, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("hung up"), "typed member-drop error: {e}");
+        h1.join().unwrap();
+        h2.join().unwrap();
+    }
+
+    #[test]
+    fn desync_and_bad_wiring_are_typed_errors() {
+        // Peer speaking the wrong op for this seq.
+        let (tx, rx) = channel();
+        let (tx2, _rx2) = channel();
+        let mut link = ChanLink { tx: tx2, rx };
+        tx.send((TP_OUTCOME, 1, vec![1.0])).unwrap();
+        let e = link
+            .recv_into(TP_ENV, 1, &mut Vec::new())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("desync"), "{e}");
+        assert!(e.contains("tp_env") && e.contains("tp_outcome"), "{e}");
+
+        // Constructor rejects malformed groups.
+        assert!(SocketComm::new(2, vec![None, None]).is_err(), "rank ≥ size");
+        let self_link: Vec<Option<Box<dyn TpLink>>> =
+            vec![Some(Box::new(ChanLink { tx, rx: channel().1 }))];
+        assert!(SocketComm::new(0, self_link).is_err(), "self link");
+
+        // A follower asked to talk to a rank it has no pipe to.
+        let mut lonely = SocketComm::new(1, vec![None, None, None]).unwrap();
+        let e = lonely
+            .gather(TP_PART, &[1.0], &mut Vec::new(), 0)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("no link"), "{e}");
+    }
+
+    #[test]
+    fn op_names_cover_the_family() {
+        assert_eq!(tp_op_name(TP_ENV), "tp_env");
+        assert_eq!(tp_op_name(TP_PART), "tp_part");
+        assert_eq!(tp_op_name(TP_OUTCOME), "tp_outcome");
+        assert_eq!(tp_op_name(TP_DONE), "tp_done");
+        assert_eq!(tp_op_name(0x7f), "tp_unknown");
+    }
+}

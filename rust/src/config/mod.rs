@@ -292,6 +292,12 @@ pub struct ServiceConfig {
     /// (`crate::trace`). 0 disables tracing; the default keeps the last
     /// few thousand events at a fixed ~64 B/event memory cost.
     pub trace_buf: usize,
+    /// Tensor-parallel step deadline: how long a TP group member waits on
+    /// a collective (env broadcast, partial gather, teardown) before
+    /// declaring the peer lost and failing the job. Generous by default —
+    /// a follower may legitimately sit idle while the leader streams and
+    /// converts a large site from disk.
+    pub tp_step_timeout_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -315,6 +321,7 @@ impl Default for ServiceConfig {
             disk_bw: None,
             artifacts_dir: PathBuf::from("artifacts"),
             trace_buf: crate::trace::DEFAULT_BUF,
+            tp_step_timeout_ms: 600_000,
         }
     }
 }
@@ -340,6 +347,9 @@ impl ServiceConfig {
                     self.n2_micro
                 )));
             }
+        }
+        if self.tp_step_timeout_ms == 0 {
+            return Err(Error::config("service: tp_step_timeout_ms must be ≥ 1"));
         }
         Ok(())
     }
@@ -368,6 +378,10 @@ impl ServiceConfig {
             ("gemm_split", Json::Str(self.gemm_split.as_str().into())),
             ("prep_cache_bytes", Json::Num(self.prep_cache_bytes as f64)),
             ("trace_buf", Json::Num(self.trace_buf as f64)),
+            (
+                "tp_step_timeout_ms",
+                Json::Num(self.tp_step_timeout_ms as f64),
+            ),
         ])
     }
 }
@@ -562,6 +576,12 @@ pub struct RouterConfig {
     /// Capacity (events) of the router's flight-recorder ring
     /// (`crate::trace`); 0 disables tracing.
     pub trace_buf: usize,
+    /// Auto tensor-parallel threshold: when a pushed store's recorded
+    /// blob size exceeds this many bytes and a complete shard group for
+    /// it is registered, plain submits against it are rewritten into TP
+    /// placements. 0 (the default) disables auto-TP — clients opt in per
+    /// job with `--tp`.
+    pub shard_budget_bytes: u64,
 }
 
 impl Default for RouterConfig {
@@ -578,6 +598,7 @@ impl Default for RouterConfig {
             drain_cap_secs: 600,
             seed: 0x5eed,
             trace_buf: crate::trace::DEFAULT_BUF,
+            shard_budget_bytes: 0,
         }
     }
 }
@@ -634,6 +655,10 @@ impl RouterConfig {
             ("jitter_ms", Json::Num(self.jitter_ms as f64)),
             ("drain_cap_secs", Json::Num(self.drain_cap_secs as f64)),
             ("trace_buf", Json::Num(self.trace_buf as f64)),
+            (
+                "shard_budget_bytes",
+                Json::Num(self.shard_budget_bytes as f64),
+            ),
         ])
     }
 }

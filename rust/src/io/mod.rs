@@ -22,6 +22,6 @@ mod store;
 pub use diskmodel::DiskModel;
 pub use loader::{PrefetchStats, Prefetcher};
 pub use store::{
-    manifest_hash_at, GammaStore, StoreCodec, StorePrecision, StoreStreamSource,
-    StoreStreamWriter, STREAM_MAGIC,
+    manifest_hash_at, shard_range, GammaStore, ShardInfo, StoreCodec, StorePrecision,
+    StoreStreamSource, StoreStreamWriter, STREAM_MAGIC,
 };

@@ -85,6 +85,39 @@ impl StoreCodec {
     }
 }
 
+/// Tensor-parallel shard identity of a store (docs/TENSOR_PARALLEL.md).
+///
+/// A shard store is a complete, self-contained FMPS1 store whose every
+/// site Γ keeps the **full** left bond but only a contiguous range of
+/// right-bond (χ_r) columns. The manifest records which slice it is and
+/// the bonds of the parent, so a TP leader can recompute every member's
+/// column ranges (via [`shard_range`]) from its own manifest alone.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardInfo {
+    /// Content key (manifest hash) of the unsharded parent store.
+    pub base: u64,
+    /// This shard's rank position, `0 ≤ index < of`.
+    pub index: usize,
+    /// Total shards the parent was split into (the TP group size).
+    pub of: usize,
+    /// (χ_l, χ_r) per site of the *parent* store.
+    pub full_bonds: Vec<(usize, usize)>,
+}
+
+/// Balanced contiguous column range `[lo, hi)` of shard `k` of `g` over a
+/// bond of width `y`: the first `y % g` shards get one extra column, so
+/// widths differ by at most one and concatenating the ranges in rank
+/// order reproduces `0..y` exactly. A narrow bond (`y < g`, e.g. the
+/// chain ends where χ_r = 1) legally yields zero-width ranges.
+pub fn shard_range(y: usize, k: usize, g: usize) -> (usize, usize) {
+    debug_assert!(g > 0 && k < g);
+    let q = y / g;
+    let r = y % g;
+    let lo = k * q + k.min(r);
+    let hi = lo + q + usize::from(k < r);
+    (lo, hi)
+}
+
 /// An opened on-disk MPS.
 #[derive(Debug, Clone)]
 pub struct GammaStore {
@@ -96,6 +129,8 @@ pub struct GammaStore {
     pub bonds: Vec<(usize, usize)>,
     /// Compressed blob size per site (bytes actually read from disk).
     pub blob_bytes: Vec<u64>,
+    /// Present when this store is one column shard of a parent store.
+    pub shard: Option<ShardInfo>,
 }
 
 impl GammaStore {
@@ -128,6 +163,7 @@ impl GammaStore {
             codec,
             bonds,
             blob_bytes,
+            shard: None,
         };
         store.write_manifest()?;
         Ok(store)
@@ -158,6 +194,7 @@ impl GammaStore {
             codec,
             bonds,
             blob_bytes,
+            shard: None,
         };
         store.write_manifest()?;
         Ok(store)
@@ -208,6 +245,26 @@ impl GammaStore {
         if bonds.len() != spec.m || blob_bytes.len() != spec.m {
             return Err(Error::format("manifest site count mismatch"));
         }
+        // Optional TP shard section; absent on every unsharded store
+        // (and on stores written by pre-TP builds, which also never
+        // *read* it — unknown manifest keys are ignored on both sides).
+        let shard = match j.get("shard") {
+            None | Some(Json::Null) => None,
+            Some(sj) => Some(shard_from_json(sj, spec.m)?),
+        };
+        if let Some(s) = &shard {
+            for (i, &(l, _)) in bonds.iter().enumerate() {
+                let (full_l, full_r) = s.full_bonds[i];
+                let (lo, hi) = shard_range(full_r, s.index, s.of);
+                if l != full_l || bonds[i].1 != hi - lo {
+                    return Err(Error::format(format!(
+                        "shard manifest: site {i} bonds {:?} disagree with \
+                         shard {}/{} of full bonds ({full_l},{full_r})",
+                        bonds[i], s.index, s.of
+                    )));
+                }
+            }
+        }
         Ok(GammaStore {
             dir: dir.to_path_buf(),
             spec,
@@ -215,11 +272,12 @@ impl GammaStore {
             codec,
             bonds,
             blob_bytes,
+            shard,
         })
     }
 
     fn write_manifest(&self) -> Result<()> {
-        let j = Json::obj(vec![
+        let mut fields = vec![
             ("magic", Json::Str("FMPS1".into())),
             ("version", Json::Num(1.0)),
             ("precision", Json::Str(self.precision.as_str().into())),
@@ -245,9 +303,66 @@ impl GammaStore {
                         .collect(),
                 ),
             ),
-        ]);
+        ];
+        // The shard section makes every shard's manifest — and therefore
+        // its content key — distinct even when two shards slice to
+        // identical bytes (uniform χ divisible by the group size).
+        if let Some(s) = &self.shard {
+            fields.push(("shard", shard_to_json(s)));
+        }
+        let j = Json::obj(fields);
         let path = self.dir.join("manifest.json");
         fs::write(&path, j.pretty()).map_err(|e| Error::io(path.display(), e))
+    }
+
+    /// Write shard `index` of `of` of this store to `dir`: a complete
+    /// FMPS1 store whose site `i` keeps the full χ_l rows of Γ_i but only
+    /// the [`shard_range`] columns of its χ_r axis (layout is row-major
+    /// (χ_l, χ_r, d) with d innermost, so a χ_r range is a contiguous
+    /// column block of the (χ_l, χ_r·d) GEMM view — the PR 5 split).
+    /// Streaming: one site is in memory at a time. Slicing decoded values
+    /// and re-encoding at the same precision round-trips bit-exactly, so
+    /// a shard's Γ is bitwise the column slice of the parent's.
+    pub fn write_shard(&self, dir: &Path, index: usize, of: usize) -> Result<GammaStore> {
+        if self.shard.is_some() {
+            return Err(Error::config("cannot shard a store that is already a shard"));
+        }
+        if of < 2 || index >= of {
+            return Err(Error::config(format!(
+                "bad shard index {index} of {of} (need of ≥ 2, index < of)"
+            )));
+        }
+        let base = self.manifest_hash()?;
+        fs::create_dir_all(dir).map_err(|e| Error::io(dir.display(), e))?;
+        let mut bonds = Vec::with_capacity(self.spec.m);
+        let mut blob_bytes = Vec::with_capacity(self.spec.m);
+        for i in 0..self.spec.m {
+            let site = self.load_site(i)?;
+            let (chi_l, chi_r) = self.bonds[i];
+            let (lo, hi) = shard_range(chi_r, index, of);
+            let sliced = site.gamma.slice_d1(lo, hi)?;
+            let blob = encode_site(&sliced, self.precision, self.codec)?;
+            let path = site_path(dir, i);
+            fs::write(&path, &blob).map_err(|e| Error::io(path.display(), e))?;
+            bonds.push((chi_l, hi - lo));
+            blob_bytes.push(blob.len() as u64);
+        }
+        let store = GammaStore {
+            dir: dir.to_path_buf(),
+            spec: self.spec.clone(),
+            precision: self.precision,
+            codec: self.codec,
+            bonds,
+            blob_bytes,
+            shard: Some(ShardInfo {
+                base,
+                index,
+                of,
+                full_bonds: self.bonds.clone(),
+            }),
+        };
+        store.write_manifest()?;
+        Ok(store)
     }
 
     pub fn num_sites(&self) -> usize {
@@ -724,6 +839,64 @@ fn decode_site(
     Tensor3::from_vec(chi_l, chi_r, d, data)
 }
 
+fn shard_to_json(s: &ShardInfo) -> Json {
+    Json::obj(vec![
+        ("base", Json::Str(format!("{:016x}", s.base))),
+        ("index", Json::Num(s.index as f64)),
+        ("of", Json::Num(s.of as f64)),
+        (
+            "full_bonds",
+            Json::Arr(
+                s.full_bonds
+                    .iter()
+                    .map(|&(l, r)| Json::Arr(vec![Json::Num(l as f64), Json::Num(r as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn shard_from_json(j: &Json, m: usize) -> Result<ShardInfo> {
+    let base = j
+        .req("base")?
+        .as_str()
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| Error::format("shard.base is not a hex key"))?;
+    let index = j
+        .req("index")?
+        .as_usize()
+        .ok_or_else(|| Error::format("shard.index"))?;
+    let of = j.req("of")?.as_usize().ok_or_else(|| Error::format("shard.of"))?;
+    if of < 2 || index >= of {
+        return Err(Error::format(format!("implausible shard {index} of {of}")));
+    }
+    let full_bonds: Vec<(usize, usize)> = j
+        .req("full_bonds")?
+        .as_arr()
+        .ok_or_else(|| Error::format("shard.full_bonds not an array"))?
+        .iter()
+        .map(|b| {
+            let pair = b
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| Error::format("shard bond not a pair"))?;
+            Ok((
+                pair[0].as_usize().ok_or_else(|| Error::format("shard bond[0]"))?,
+                pair[1].as_usize().ok_or_else(|| Error::format("shard bond[1]"))?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    if full_bonds.len() != m {
+        return Err(Error::format("shard.full_bonds site count mismatch"));
+    }
+    Ok(ShardInfo {
+        base,
+        index,
+        of,
+        full_bonds,
+    })
+}
+
 fn spec_to_json(s: &GbsSpec) -> Json {
     Json::obj(vec![
         ("name", Json::Str(s.name.clone())),
@@ -951,6 +1124,68 @@ mod tests {
         assert!(w.feed(b"x").is_err(), "data after final file");
 
         fs::remove_dir_all(&out).unwrap();
+    }
+
+    #[test]
+    fn shard_ranges_partition_the_bond() {
+        for (y, g) in [(7usize, 2usize), (8, 2), (1, 2), (5, 3), (2, 4), (12, 4)] {
+            let mut cursor = 0;
+            for k in 0..g {
+                let (lo, hi) = shard_range(y, k, g);
+                assert_eq!(lo, cursor, "contiguous (y={y} g={g} k={k})");
+                assert!(hi >= lo);
+                cursor = hi;
+            }
+            assert_eq!(cursor, y, "ranges cover 0..{y} exactly (g={g})");
+            // Balanced: widths differ by at most one, wide shards first.
+            let widths: Vec<usize> =
+                (0..g).map(|k| shard_range(y, k, g)).map(|(l, h)| h - l).collect();
+            assert!(widths.windows(2).all(|w| w[0] >= w[1] && w[0] - w[1] <= 1));
+        }
+    }
+
+    #[test]
+    fn shard_stores_slice_gamma_columns_bitwise() {
+        let dir = tmpdir("shard-base");
+        let s = spec();
+        let store = GammaStore::create(&dir, &s, StorePrecision::F32, StoreCodec::Lz).unwrap();
+        let base_key = store.manifest_hash().unwrap();
+        let g = 2;
+        let mut shard_keys = Vec::new();
+        for k in 0..g {
+            let sdir = tmpdir(&format!("shard-{k}"));
+            let shard = store.write_shard(&sdir, k, g).unwrap();
+            assert_eq!(shard.spec.seed, s.seed, "spec (and thus thresholds) copied");
+            let info = shard.shard.clone().unwrap();
+            assert_eq!((info.base, info.index, info.of), (base_key, k, g));
+            assert_eq!(info.full_bonds, store.bonds);
+            shard_keys.push(shard.manifest_hash().unwrap());
+            // Reopen parses + validates the shard section.
+            let reopened = GammaStore::open(&sdir).unwrap();
+            assert_eq!(reopened.shard, shard.shard);
+            reopened.verify_blobs().unwrap();
+            // Every site's Γ is bitwise the column slice of the parent's.
+            for i in 0..s.m {
+                let full = store.load_site(i).unwrap();
+                let (lo, hi) = shard_range(store.bonds[i].1, k, g);
+                let want = full.gamma.slice_d1(lo, hi).unwrap();
+                let got = reopened.load_site(i).unwrap();
+                assert_eq!(got.gamma.data, want.data, "site {i} shard {k}");
+                assert_eq!((got.gamma.d0, got.gamma.d1), (want.d0, want.d1));
+            }
+            fs::remove_dir_all(&sdir).unwrap();
+        }
+        // Distinct shards get distinct content keys, none equal to the base.
+        assert_ne!(shard_keys[0], shard_keys[1]);
+        assert!(!shard_keys.contains(&base_key));
+        // A shard cannot be sharded again; bad indices are rejected.
+        let sdir = tmpdir("shard-again");
+        let sh = store.write_shard(&sdir, 0, 2).unwrap();
+        assert!(sh.write_shard(&tmpdir("nope"), 0, 2).is_err());
+        assert!(store.write_shard(&tmpdir("nope"), 2, 2).is_err());
+        assert!(store.write_shard(&tmpdir("nope"), 0, 1).is_err());
+        fs::remove_dir_all(&sdir).unwrap();
+        fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -114,6 +114,24 @@ pub mod keys {
     /// Proxied pushes that failed mid-stream (backend lost); the client
     /// saw a typed `busy` and can retry against the next-ranked backend.
     pub const ROUTER_PUSH_FAILURES: &str = "router_push_failures";
+    /// Tensor-parallel submits the router resolved into a placed group.
+    pub const ROUTER_TP_SUBMITS: &str = "router_tp_submits";
+    /// TP submits refused with a typed error (incomplete shard group, a
+    /// member down or draining, or a non-f32 compute request).
+    pub const ROUTER_TP_REJECTS: &str = "router_tp_rejects";
+    /// Completed shard pushes recorded into the router's shard map.
+    pub const ROUTER_SHARD_PUSHES: &str = "router_shard_pushes";
+
+    // Tensor-parallel data plane (`net::tp`, docs/TENSOR_PARALLEL.md).
+    /// TP jobs this backend took part in (leader or follower).
+    pub const TP_JOBS: &str = "tp_jobs";
+    /// Payload bytes this backend moved in TP broadcasts (env chunks out
+    /// on the leader / in on followers, plus outcome broadcasts).
+    pub const TP_BCAST_BYTES: &str = "tp_bcast_bytes";
+    /// Payload bytes this backend moved gathering shard partials.
+    pub const TP_REDUCE_BYTES: &str = "tp_reduce_bytes";
+    /// TP collectives that failed on a lost or desynchronised member.
+    pub const TP_MEMBER_FAILURES: &str = "tp_member_failures";
 
     // Histogram names (`Metrics::observe`, [`super::HistogramStats`]).
     /// Admission → first batch assignment, per job.
@@ -125,6 +143,9 @@ pub mod keys {
     pub const HIST_NET_RTT: &str = "net_rtt_secs";
     /// Server-side per-chunk handling time during a store push.
     pub const HIST_PUSH_CHUNK: &str = "push_chunk_secs";
+    /// Leader-observed time per shard-partial gather (the TP "reduce"),
+    /// covering every follower's contribution for one chunk of one site.
+    pub const HIST_TP_REDUCE: &str = "tp_reduce_secs";
 
     // Health-state transition totals ([`crate::router::BackendHealth`]):
     // entries *into* the named state, summed over a router's backends.

@@ -144,7 +144,7 @@ impl Client {
     fn read_ctrl(&mut self) -> Result<Json> {
         match self.reader.read_frame()? {
             Frame::Ctrl(j) => Self::check(j),
-            Frame::Payload(_) | Frame::Chunk(_) => Err(Error::format(
+            Frame::Payload(_) | Frame::Chunk(_) | Frame::Tp(_) => Err(Error::format(
                 "net wire: unexpected binary frame (expected control reply)",
             )),
         }
@@ -157,7 +157,7 @@ impl Client {
         self.writer.write_ctrl(msg)?;
         match self.reader.read_frame()? {
             Frame::Ctrl(j) => Ok(j),
-            Frame::Payload(_) | Frame::Chunk(_) => Err(Error::format(
+            Frame::Payload(_) | Frame::Chunk(_) | Frame::Tp(_) => Err(Error::format(
                 "net wire: unexpected binary frame (expected control reply)",
             )),
         }
@@ -337,7 +337,7 @@ impl Client {
                     let sink = if r.get("payload").and_then(|v| v.as_bool()) == Some(true) {
                         match self.reader.read_frame()? {
                             Frame::Payload(p) => Some(frame::unpack_sink(&p)?),
-                            Frame::Ctrl(_) | Frame::Chunk(_) => {
+                            Frame::Ctrl(_) | Frame::Chunk(_) | Frame::Tp(_) => {
                                 return Err(Error::format(
                                     "net wire: expected payload frame after result",
                                 ));
@@ -417,15 +417,31 @@ impl Client {
 
         let chunk_bytes = chunk_bytes.clamp(1024, 16 << 20);
         let key = manifest_hash_at(dir)?;
+        // A Γ shard announces its identity up front so a routing tier can
+        // record the shard map while relaying (docs/TENSOR_PARALLEL.md
+        // § Group lifecycle); for whole stores the field is omitted and the
+        // wire form is byte-identical to pre-TP builds.
+        let shard = crate::io::GammaStore::open(dir)?.shard;
         let mut src = StoreStreamSource::open(dir)?;
         let total = src.total_len();
         let chunks = total.div_ceil(chunk_bytes as u64).max(1);
-        let r = self.rpc(&Json::obj(vec![
+        let mut begin = vec![
             ("op", Json::Str("push_begin".into())),
             ("key", Json::Str(format!("{key:016x}"))),
             ("total_bytes", Json::Num(total as f64)),
             ("chunks", Json::Num(chunks as f64)),
-        ]))?;
+        ];
+        if let Some(s) = &shard {
+            begin.push((
+                "shard",
+                Json::obj(vec![
+                    ("index", Json::Num(s.index as f64)),
+                    ("of", Json::Num(s.of as f64)),
+                    ("base", Json::Str(format!("{:016x}", s.base))),
+                ]),
+            ));
+        }
+        let r = self.rpc(&Json::obj(begin))?;
         Self::expect(&r, "push_ready")?;
         if r.get("dedup").and_then(|v| v.as_bool()) == Some(true) {
             return Ok(PushReport {

@@ -9,12 +9,18 @@
 //! frame := type:u8 | len:varint(LEB128) | payload[len]
 //! ```
 //!
-//! Two frame types exist in version 1:
+//! Frame types in version 1:
 //! - [`FRAME_CTRL`] — one NDJSON control message (a single JSON object,
 //!   UTF-8; see `docs/PROTOCOL.md` for the op vocabulary);
 //! - [`FRAME_PAYLOAD`] — a binary sample block: an encoded [`SampleSink`]
 //!   run through `util::compress`, so results stream back without
-//!   JSON-escaping tensors.
+//!   JSON-escaping tensors;
+//! - [`FRAME_CHUNK`] — one chunk of a store push;
+//! - [`FRAME_TP`] — one tensor-parallel data-plane message (a collective
+//!   op byte + sequence number + raw little-endian f32 payload; see
+//!   `docs/TENSOR_PARALLEL.md`). Builds that predate TP reject the type
+//!   with a typed "unknown frame type" error — never a hang — but TP
+//!   frames only ever follow a `tp_hello` the peer already accepted.
 //!
 //! Readers enforce a frame-size cap (`NetConfig::max_frame_bytes`) before
 //! allocating, and every decode validates lengths, so a corrupt or
@@ -39,6 +45,10 @@ pub const FRAME_PAYLOAD: u8 = 2;
 /// Frame type: one chunk of a store push (`push_begin` … `push_end`);
 /// see [`encode_chunk`] and `docs/PROTOCOL.md` § Chunked store push.
 pub const FRAME_CHUNK: u8 = 3;
+/// Frame type: one tensor-parallel collective message (`tp_hello` …
+/// `tp_done`); see [`encode_tp`] and `docs/PROTOCOL.md` § Tensor-parallel
+/// data plane.
+pub const FRAME_TP: u8 = 4;
 
 /// A decoded frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -49,6 +59,8 @@ pub enum Frame {
     Payload(Vec<u8>),
     /// One store-push chunk (still packed; see [`decode_chunk`]).
     Chunk(Vec<u8>),
+    /// One TP collective message (still packed; see [`decode_tp_into`]).
+    Tp(Vec<u8>),
 }
 
 fn wire_err(msg: impl std::fmt::Display) -> Error {
@@ -188,6 +200,11 @@ impl<W: Write> FrameWriter<W> {
         self.write_frame(FRAME_CHUNK, packed)
     }
 
+    /// Send one TP collective message (already packed; see [`encode_tp`]).
+    pub fn write_tp(&mut self, packed: &[u8]) -> Result<()> {
+        self.write_frame(FRAME_TP, packed)
+    }
+
     /// Return and reset the (bytes, frames) written since the last call.
     pub fn drain_counters(&mut self) -> (u64, u64) {
         let out = (self.bytes, self.frames);
@@ -269,6 +286,7 @@ impl<R: Read> FrameReader<R> {
             }
             FRAME_PAYLOAD => Ok(Frame::Payload(payload)),
             FRAME_CHUNK => Ok(Frame::Chunk(payload)),
+            FRAME_TP => Ok(Frame::Tp(payload)),
             other => Err(wire_err(format!("unknown frame type 0x{other:02x}"))),
         }
     }
@@ -394,6 +412,53 @@ pub fn encode_chunk(index: u64, running_fnv: u64, raw: &[u8]) -> Vec<u8> {
     out.extend_from_slice(&running_fnv.to_le_bytes());
     out.extend_from_slice(&compress::compress(raw));
     out
+}
+
+/// Encode one TP collective message for a [`FRAME_TP`] frame:
+///
+/// ```text
+/// tp := op:u8               # TP_ENV / TP_PART / TP_OUTCOME / TP_DONE
+///     | varint seq          # per-link collective sequence number
+///     | n × f32-le          # payload (may be empty, e.g. TP_DONE or a
+///                           #   zero-width shard's partial)
+/// ```
+///
+/// TP payloads are NOT compressed: they are dense f32 environments and
+/// partial contractions mid-hot-loop, where LZ rarely wins and the extra
+/// copy would dominate. The sequence number is checked by the receiver so
+/// a desynchronised group fails with a typed error instead of silently
+/// reducing the wrong site's data.
+pub fn encode_tp(op: u8, seq: u64, data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(11 + data.len() * 4);
+    out.push(op);
+    push_varint(&mut out, seq);
+    for &x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_tp`]: appends the f32 payload to `out` (so a TP
+/// hot loop can reuse one buffer) and returns `(op, seq)`.
+pub fn decode_tp_into(packed: &[u8], out: &mut Vec<f32>) -> Result<(u8, u64)> {
+    if packed.is_empty() {
+        return Err(wire_err("empty TP frame"));
+    }
+    let op = packed[0];
+    let mut i = 1usize;
+    let seq = take_varint(packed, &mut i)?;
+    let body = &packed[i..];
+    if body.len() % 4 != 0 {
+        return Err(wire_err(format!(
+            "TP frame body of {} bytes is not a whole number of f32s",
+            body.len()
+        )));
+    }
+    out.reserve(body.len() / 4);
+    for chunk in body.chunks_exact(4) {
+        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok((op, seq))
 }
 
 /// Inverse of [`encode_chunk`]: `(index, running_fnv, raw_bytes)`.
@@ -584,6 +649,39 @@ mod tests {
             decode_chunk(&packed[..packed.len() - 3]).is_err(),
             "truncated body"
         );
+    }
+
+    #[test]
+    fn tp_roundtrip_and_corruption() {
+        let data = [1.0f32, -0.5, 3.25e-7, f32::MIN_POSITIVE, 0.0];
+        let packed = encode_tp(2, 301, &data);
+        let mut out = vec![9.0f32]; // decode appends, preserving prior content
+        let (op, seq) = decode_tp_into(&packed, &mut out).unwrap();
+        assert_eq!((op, seq), (2, 301));
+        assert_eq!(out[0], 9.0);
+        assert_eq!(&out[1..], &data, "payload is bit-exact LE f32");
+
+        // Empty payload (TP_DONE, zero-width shard) is legal.
+        let empty = encode_tp(4, 0, &[]);
+        let mut out = Vec::new();
+        assert_eq!(decode_tp_into(&empty, &mut out).unwrap(), (4, 0));
+        assert!(out.is_empty());
+
+        // TP frames transit the frame layer like any other type.
+        let mut buf = Vec::new();
+        let mut w = FrameWriter::new(&mut buf);
+        w.write_tp(&packed).unwrap();
+        let mut r = FrameReader::new(buf.as_slice(), 1 << 20);
+        assert_eq!(r.read_frame().unwrap(), Frame::Tp(packed.clone()));
+
+        // Corruption: empty frame, ragged body, truncated seq varint.
+        let mut sink = Vec::new();
+        assert!(decode_tp_into(&[], &mut sink).is_err(), "empty TP frame");
+        let e = decode_tp_into(&packed[..packed.len() - 1], &mut sink)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("whole number of f32s"), "{e}");
+        assert!(decode_tp_into(&[2, 0x80], &mut sink).is_err(), "bad seq");
     }
 
     #[test]

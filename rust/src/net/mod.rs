@@ -17,7 +17,10 @@
 //! - [`push`] — chunked, content-addressed store upload (`fastmps push`):
 //!   a client streams a `GammaStore` to a server (or through the router
 //!   to the affinity backend) in pipelined, independently compressed
-//!   chunks, so fleets need no shared data volume.
+//!   chunks, so fleets need no shared data volume;
+//! - [`tp`] — the tensor-parallel data plane (`docs/TENSOR_PARALLEL.md`):
+//!   a group leader drives column-sharded followers through per-chunk
+//!   env broadcasts and partial gathers, bit-identical to a serial walk.
 //!
 //! Everything is `std::net` + threads — the crate stays dependency-free
 //! and offline-buildable.
@@ -29,6 +32,7 @@ pub mod client;
 pub mod frame;
 pub mod push;
 pub mod server;
+pub(crate) mod tp;
 
 pub use client::{Client, JobResult, PushReport};
 pub use server::{NetServer, NetStats};

@@ -77,11 +77,46 @@ pub fn register_existing(cache: &StoreCache, push_dir: &Path) -> usize {
     n
 }
 
+/// Shard identity announced in `push_begin` (routing metadata; the staged
+/// manifest's own shard section is the authority and must agree).
+pub(crate) struct PushShard {
+    pub index: usize,
+    pub of: usize,
+    /// Manifest hash of the full (unsharded) store.
+    pub base: u64,
+}
+
+impl PushShard {
+    /// Parse the optional `"shard"` object of a `push_begin`.
+    pub(crate) fn parse(msg: &Json) -> Result<Option<PushShard>> {
+        let Some(s) = msg.get("shard").filter(|v| !matches!(**v, Json::Null)) else {
+            return Ok(None);
+        };
+        let of = s
+            .get("of")
+            .and_then(|v| v.as_usize())
+            .filter(|v| *v >= 2)
+            .ok_or_else(|| Error::format("push_begin: shard 'of' is not an integer ≥ 2"))?;
+        let index = s
+            .get("index")
+            .and_then(|v| v.as_usize())
+            .filter(|v| *v < of)
+            .ok_or_else(|| Error::format("push_begin: shard 'index' is not in 0..of"))?;
+        let base = s
+            .get("base")
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| Error::format("push_begin: shard 'base' is not a hex store key"))?;
+        Ok(Some(PushShard { index, of, base }))
+    }
+}
+
 /// What `push_begin` announced, validated.
 struct PushRequest {
     key: u64,
     total_bytes: u64,
     chunks: u64,
+    shard: Option<PushShard>,
 }
 
 impl PushRequest {
@@ -116,6 +151,7 @@ impl PushRequest {
             key,
             total_bytes,
             chunks,
+            shard: PushShard::parse(msg)?,
         })
     }
 }
@@ -215,7 +251,30 @@ pub(crate) fn serve_push<R: std::io::Read>(
                 "pushed manifest hashes to {staged_hash:016x}, announced {key_hex}"
             )));
         }
-        GammaStore::open(&staging)?.verify_blobs()?;
+        let staged = GammaStore::open(&staging)?;
+        staged.verify_blobs()?;
+        // An announced shard identity must match the manifest's own shard
+        // section — a mismatch means the router would record a shard map
+        // entry the data on disk does not satisfy.
+        if let Some(announced) = &req.shard {
+            let matches = staged.shard.as_ref().is_some_and(|s| {
+                (s.index, s.of, s.base) == (announced.index, announced.of, announced.base)
+            });
+            if !matches {
+                return Err(Error::format(format!(
+                    "push_begin announced shard {}/{} of {:016x}, manifest says {}",
+                    announced.index,
+                    announced.of,
+                    announced.base,
+                    staged
+                        .shard
+                        .as_ref()
+                        .map(|s| format!("{}/{} of {:016x}", s.index, s.of, s.base))
+                        .unwrap_or_else(|| "no shard".into()),
+                )));
+            }
+        }
+        drop(staged);
         match std::fs::rename(&staging, &final_dir) {
             Ok(()) => {}
             Err(_) if final_dir.exists() => {
@@ -364,9 +423,9 @@ fn receive_chunks<R: std::io::Read>(
                     "net wire: unexpected control frame during push",
                 ));
             }
-            Frame::Payload(_) => {
+            Frame::Payload(_) | Frame::Tp(_) => {
                 return Err(Error::format(
-                    "net wire: unexpected payload frame during push",
+                    "net wire: unexpected payload/TP frame during push",
                 ));
             }
         }

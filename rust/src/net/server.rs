@@ -86,9 +86,14 @@ impl NetStats {
     }
 }
 
-/// What a reader hands its connection's writer thread.
-enum Out {
+/// What a reader hands its connection's writer thread. `pub(crate)` so
+/// the TP session driver (`net::tp::serve_tp`), which owns the reader the
+/// way a push does, can enqueue its frames through the same single-writer
+/// channel instead of racing the writer thread for the socket.
+pub(crate) enum Out {
     Ctrl(Json),
+    /// A packed TP data-plane frame (`frame::encode_tp`).
+    Tp(Vec<u8>),
     Payload(Vec<u8>),
 }
 
@@ -485,7 +490,7 @@ fn reader_loop(
         }
         let msg = match reader.read_frame_idle()? {
             None => continue, // idle tick: re-check the stop flag
-            Some(Frame::Payload(_) | Frame::Chunk(_)) => {
+            Some(Frame::Payload(_) | Frame::Chunk(_) | Frame::Tp(_)) => {
                 return Err(Error::format(
                     "net wire: unexpected binary frame from client",
                 ));
@@ -513,6 +518,29 @@ fn reader_loop(
                 &shared.stop,
                 &mut observe_chunk,
             )?;
+            shared.stats.add_io(Some(reader.drain_counters()), None);
+            continue;
+        }
+        if msg.get("op").and_then(|v| v.as_str()) == Some("tp_hello") {
+            // A TP group leader adopting this backend as a follower. Like
+            // a push, the session owns the reader until the group winds
+            // down (TP frames are only meaningful inside a session);
+            // builds that predate TP never reach here — their handle_op
+            // answers `tp_hello` with the typed unknown-op error, which
+            // is exactly the version-skew contract of docs/PROTOCOL.md.
+            let t_tp = Instant::now();
+            super::tp::serve_tp(&msg, reader, tx, &shared.svc, &shared.net, &shared.stop)?;
+            shared.svc.recorder().span(
+                Layer::Net,
+                "op_tp_hello",
+                0,
+                msg.get("trace")
+                    .and_then(|v| v.as_str())
+                    .and_then(crate::trace::parse_trace_id)
+                    .unwrap_or(0),
+                t_tp.elapsed().as_nanos() as u64,
+                0,
+            );
             shared.stats.add_io(Some(reader.drain_counters()), None);
             continue;
         }
@@ -564,6 +592,7 @@ fn op_span_name(op: &str) -> &'static str {
         "metrics" => "op_metrics",
         "telemetry" => "op_telemetry",
         "trace" => "op_trace",
+        "tp_hello" => "op_tp_hello",
         "shutdown" => "op_shutdown",
         _ => "op_other",
     }
@@ -739,6 +768,7 @@ fn writer_loop(stream: TcpStream, rx: Receiver<Out>, shared: Arc<Shared>) {
     for out in rx {
         let r = match out {
             Out::Ctrl(j) => w.write_ctrl(&j),
+            Out::Tp(p) => w.write_tp(&p),
             Out::Payload(p) => {
                 // Sample-block flush — the last hop of a job's lifecycle.
                 let t0 = Instant::now();

@@ -1,0 +1,943 @@
+//! Tensor-parallel data plane over FMPN (`docs/TENSOR_PARALLEL.md`).
+//!
+//! A TP group runs ONE job across `of` backends, each holding one
+//! column shard of every site's Γ (see `GammaStore::write_shard`). The
+//! leader (rank 0, the backend the router submitted to) owns the
+//! environment, the thresholds, and the measurement; followers own
+//! nothing but their Γ columns. Per micro chunk of every site:
+//!
+//! 1. leader broadcasts the lifted f32 environment ([`TP_ENV`]);
+//! 2. every rank contracts it against its own shard — disjoint output
+//!    columns, no summation anywhere;
+//! 3. the leader gathers the partial `temp` blocks in ascending rank
+//!    order ([`TP_PART`]) and assembles the full-width tensor by
+//!    placing each block at its shard's column offset;
+//! 4. the leader measures (collapse + next environment) exactly like
+//!    the serial engine and broadcasts the outcomes ([`TP_OUTCOME`]).
+//!
+//! Because each output element is produced by exactly one rank with the
+//! same k-order GEMM as the serial kernel (`linalg::gemm`), and the
+//! "reduce" is a concatenation rather than a floating-point sum, the
+//! sharded walk is **bit-identical** to a single backend holding the
+//! full store. That is the contract `tests/tp.rs` locks in.
+//!
+//! The follower side rides an ordinary FMPN connection: a `tp_hello`
+//! control op hands the reader to [`serve_tp`] for the life of the
+//! group, like a push session. Old builds answer `tp_hello` with the
+//! typed unknown-op error and never see a TP frame — the version-skew
+//! rule of `docs/PROTOCOL.md`.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::frame::{self, Frame, FrameReader, FrameWriter};
+use super::server::{reply_err, reply_ok, Out};
+use crate::comm::{tp_op_name, SocketComm, TpLink, TpTransport, TP_DONE, TP_ENV, TP_OUTCOME, TP_PART};
+use crate::config::{ComputePrecision, NetConfig, ServiceConfig};
+use crate::coordinator::{env_rows, env_store_rows};
+use crate::io::{shard_range, DiskModel, GammaStore, Prefetcher};
+use crate::linalg::{contract_env_into, matmul_flops};
+use crate::metrics::{keys, Metrics};
+use crate::mps::Site;
+use crate::sampler::env::{from_f32_into, to_f32_into};
+use crate::sampler::measurement::measure_into;
+use crate::sampler::sink::SampleSink;
+use crate::sampler::{boundary_env, PrepKey, PreparedGamma, PreparedSite, PreparedStore};
+use crate::service::{Batch, Service, StoreCache};
+use crate::tensor::{Complex, Mat, Tensor3};
+use crate::trace::{Layer, Recorder};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// f32 wire form of the complex buffers (interleaved re, im — see
+// docs/PROTOCOL.md § TP frame grammar)
+
+fn complexes_to_wire(data: &[Complex<f32>], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(data.len() * 2);
+    for z in data {
+        out.push(z.re);
+        out.push(z.im);
+    }
+}
+
+fn wire_to_mat(w: &[f32], rows: usize, cols: usize, m: &mut Mat<f32>) -> Result<()> {
+    if w.len() != rows * cols * 2 {
+        return Err(Error::Fabric(format!(
+            "TP env payload holds {} floats for a {rows}×{cols} environment",
+            w.len()
+        )));
+    }
+    m.rows = rows;
+    m.cols = cols;
+    m.data.clear();
+    m.data
+        .extend(w.chunks_exact(2).map(|p| Complex::new(p[0], p[1])));
+    Ok(())
+}
+
+/// Place the rank-ordered concatenation of shard partials into the
+/// full-width `temp` tensor. Block `k` covers columns
+/// `shard_range(chi_r_full, k, of)` of every row — disjoint ranges, so
+/// assembly is pure placement and cannot move a single bit.
+fn assemble_temp(
+    gathered: &[f32],
+    take: usize,
+    d: usize,
+    chi_r_full: usize,
+    of: usize,
+    temp: &mut Tensor3<f32>,
+) -> Result<()> {
+    temp.reset(take, chi_r_full, d);
+    let mut base = 0usize;
+    for k in 0..of {
+        let (lo, hi) = shard_range(chi_r_full, k, of);
+        let w = hi - lo;
+        let need = take * w * d * 2;
+        let block = gathered.get(base..base + need).ok_or_else(|| {
+            Error::Fabric(format!(
+                "TP gather came up short: rank {k} block needs {need} floats, {} left",
+                gathered.len() - base
+            ))
+        })?;
+        for s in 0..take {
+            for y in 0..w {
+                for p in 0..d {
+                    let src = ((s * w + y) * d + p) * 2;
+                    temp.data[(s * chi_r_full + lo + y) * d + p] =
+                        Complex::new(block[src], block[src + 1]);
+                }
+            }
+        }
+        base += need;
+    }
+    if base != gathered.len() {
+        return Err(Error::Fabric(format!(
+            "TP gather carried {} trailing floats past the {of} shard blocks",
+            gathered.len() - base
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The FMPN TpLink: leader's view of one follower
+
+fn wire_fail(peer: &str, what: &str, e: Error) -> Error {
+    if frame::is_timeout(&e) {
+        Error::Fabric(format!("TP peer {peer} timed out during {what}"))
+    } else {
+        Error::Fabric(format!("TP peer {peer} hung up during {what}: {e}"))
+    }
+}
+
+/// One leader→follower link: a dedicated FMPN connection whose reader
+/// half the follower parks inside [`serve_tp`] for the group's life.
+pub(crate) struct FmpnLink {
+    peer: String,
+    w: FrameWriter<BufWriter<TcpStream>>,
+    r: FrameReader<BufReader<TcpStream>>,
+}
+
+impl FmpnLink {
+    /// Connect, exchange preambles, send the group hello, await the
+    /// typed welcome. A refusal (unknown key, version skew, shard
+    /// mismatch) comes back as the follower's own error text.
+    pub(crate) fn dial(
+        addr: &str,
+        hello: &Json,
+        timeout_ms: u64,
+        max_frame: usize,
+    ) -> Result<FmpnLink> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Fabric(format!("TP dial {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let to = Some(Duration::from_millis(timeout_ms.max(1)));
+        stream
+            .set_read_timeout(to)
+            .map_err(|e| Error::io("set_read_timeout", e))?;
+        stream
+            .set_write_timeout(to)
+            .map_err(|e| Error::io("set_write_timeout", e))?;
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| Error::io("clone stream", e))?;
+        let mut link = FmpnLink {
+            peer: addr.to_string(),
+            w: FrameWriter::new(BufWriter::new(stream)),
+            r: FrameReader::new(BufReader::new(read_half), max_frame),
+        };
+        link.w.write_preamble()?;
+        link.r
+            .read_preamble()
+            .map_err(|e| wire_fail(addr, "preamble", e))?;
+        link.w.write_ctrl(hello)?;
+        let reply = match link.r.read_frame() {
+            Ok(Frame::Ctrl(j)) => j,
+            Ok(_) => {
+                return Err(Error::Fabric(format!(
+                    "TP follower {addr} answered the hello with a non-control frame"
+                )))
+            }
+            Err(e) => return Err(wire_fail(addr, "tp_hello", e)),
+        };
+        if reply.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            let msg = reply
+                .get("error")
+                .and_then(|v| v.as_str())
+                .unwrap_or("refused the group hello");
+            return Err(Error::Fabric(format!("TP follower {addr} refused: {msg}")));
+        }
+        if reply.get("type").and_then(|v| v.as_str()) != Some("tp_welcome") {
+            return Err(Error::Fabric(format!(
+                "TP follower {addr} sent an unexpected reply to the group hello"
+            )));
+        }
+        Ok(link)
+    }
+}
+
+impl TpLink for FmpnLink {
+    fn send(&mut self, op: u8, seq: u64, data: &[f32]) -> Result<u64> {
+        self.w
+            .write_tp(&frame::encode_tp(op, seq, data))
+            .map_err(|e| wire_fail(&self.peer, tp_op_name(op), e))?;
+        Ok((data.len() * 4) as u64)
+    }
+
+    fn recv_into(&mut self, op: u8, seq: u64, out: &mut Vec<f32>) -> Result<u64> {
+        let f = self
+            .r
+            .read_frame()
+            .map_err(|e| wire_fail(&self.peer, tp_op_name(op), e))?;
+        match f {
+            Frame::Tp(p) => {
+                let before = out.len();
+                let (got_op, got_seq) = frame::decode_tp_into(&p, out)?;
+                if (got_op, got_seq) != (op, seq) {
+                    return Err(Error::Fabric(format!(
+                        "TP desync with {}: got ({}, seq {got_seq}), want ({}, seq {seq})",
+                        self.peer,
+                        tp_op_name(got_op),
+                        tp_op_name(op)
+                    )));
+                }
+                Ok(((out.len() - before) * 4) as u64)
+            }
+            Frame::Ctrl(j) => {
+                let msg = j
+                    .get("error")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("unexpected control frame mid-collective");
+                Err(Error::Fabric(format!("TP follower {}: {msg}", self.peer)))
+            }
+            _ => Err(Error::Fabric(format!(
+                "TP follower {} sent a non-TP frame mid-collective",
+                self.peer
+            ))),
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        match self.r.read_frame() {
+            Ok(Frame::Ctrl(j))
+                if j.get("ok").and_then(|v| v.as_bool()) == Some(true)
+                    && j.get("type").and_then(|v| v.as_str()) == Some("tp_done") =>
+            {
+                Ok(())
+            }
+            Ok(_) => Err(Error::Fabric(format!(
+                "TP follower {} did not acknowledge the group teardown",
+                self.peer
+            ))),
+            Err(e) => Err(wire_fail(&self.peer, "tp_done", e)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared site walk (streaming + residency, the run_batch pattern)
+
+/// Walks a shard store's sites through the prepared-residency chain,
+/// streaming only non-resident sites — the same plan `run_batch` uses,
+/// so a TP walk inherits the residency economics of a plain one.
+struct SiteWalk {
+    store: Arc<GammaStore>,
+    prep: Arc<PreparedStore>,
+    stream_order: Vec<usize>,
+    pf: Option<Prefetcher>,
+    next_streamed: usize,
+    prep_hits: u64,
+    prep_convs: u64,
+}
+
+impl SiteWalk {
+    fn new(store: Arc<GammaStore>, disk: Arc<DiskModel>, prep: Arc<PreparedStore>) -> SiteWalk {
+        let m = store.num_sites();
+        let stream_order: Vec<usize> = (0..m).filter(|&i| !prep.is_resident(i)).collect();
+        let pf = (!stream_order.is_empty())
+            .then(|| Prefetcher::new(store.clone(), disk, stream_order.clone(), 2));
+        SiteWalk {
+            store,
+            prep,
+            stream_order,
+            pf,
+            next_streamed: 0,
+            prep_hits: 0,
+            prep_convs: 0,
+        }
+    }
+
+    fn site(&mut self, site_idx: usize, metrics: &mut Metrics) -> Result<Arc<PreparedSite>> {
+        let from_disk = self.next_streamed < self.stream_order.len()
+            && self.stream_order[self.next_streamed] == site_idx;
+        if from_disk {
+            self.next_streamed += 1;
+            let pf = self.pf.as_mut().expect("stream order non-empty");
+            let (i, site): (usize, Site) = pf
+                .next_site()
+                .ok_or_else(|| Error::other("prefetch ended early"))??;
+            debug_assert_eq!(i, site_idx);
+            metrics.add(keys::IO_OPS, 1);
+            metrics.add(keys::IO_BYTES, self.store.site_bytes(site_idx));
+            let (ps, converted) = self.prep.site(site_idx, &site);
+            if converted {
+                self.prep_convs += 1;
+            } else {
+                self.prep_hits += 1;
+            }
+            Ok(ps)
+        } else {
+            let ps = self
+                .prep
+                .resident(site_idx)
+                .ok_or_else(|| Error::other(format!("prepared site {site_idx} vanished mid-walk")))?;
+            self.prep_hits += 1;
+            Ok(ps)
+        }
+    }
+
+    fn finish(self, metrics: &mut Metrics) -> Result<()> {
+        if let Some(pf) = self.pf {
+            metrics.add_phase("io_virtual", pf.io_secs);
+            metrics.add_phase("io_stall", pf.stall_secs);
+            pf.finish()?;
+        }
+        metrics.add(keys::STEP_PREP_HITS, self.prep_hits);
+        metrics.add(keys::STEP_PREP_CONVERSIONS, self.prep_convs);
+        Ok(())
+    }
+}
+
+fn f32_gamma(p: &PreparedSite) -> Result<&Tensor3<f32>> {
+    match &p.gamma {
+        PreparedGamma::F32(g) => Ok(g),
+        PreparedGamma::F64(_) => Err(Error::other(
+            "TP walk found an f64 prepared site (TP prepares f32 only)",
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leader: the sharded batch walk
+
+/// Run a TP batch as group leader (rank 0). Dials every follower,
+/// drives the per-chunk broadcast/contract/gather/measure pipeline, and
+/// returns exactly what `run_batch` returns for the worker to complete
+/// the job with. Any member loss or desync surfaces as `Error::Fabric`
+/// and fails the whole job — TP groups have no partial success.
+pub(crate) fn run_batch_tp(
+    batch: &Batch,
+    cfg: &ServiceConfig,
+    cache: &Arc<StoreCache>,
+    disk: &Arc<DiskModel>,
+    rec: &Arc<Recorder>,
+    jobs: &[(u64, u64)],
+) -> Result<(Metrics, Vec<SampleSink>)> {
+    let tp = batch
+        .tp
+        .as_ref()
+        .ok_or_else(|| Error::other("run_batch_tp dispatched a non-TP batch"))?;
+    let store = &batch.store;
+    let spec = &store.spec;
+    let m = spec.m;
+    let d = spec.d;
+    if batch.assignments.len() != 1 {
+        return Err(Error::other(
+            "TP batches carry exactly one job (the dispatcher must not coalesce them)",
+        ));
+    }
+    let a = &batch.assignments[0];
+    let rows = a.len;
+    if rows == 0 {
+        return Err(Error::other("empty TP batch dispatched"));
+    }
+    if batch.key.compute != ComputePrecision::F32 {
+        return Err(Error::config(format!(
+            "tensor-parallel jobs run f32 compute only (requested {})",
+            batch.key.compute.as_str()
+        )));
+    }
+    if spec.displacement_sigma != 0.0 {
+        return Err(Error::config(
+            "tensor-parallel jobs do not support displaced sampling",
+        ));
+    }
+    let shard = store.shard.as_ref().ok_or_else(|| {
+        Error::config("TP job resolved a non-shard store (push the sharded store first)")
+    })?;
+    if shard.index != 0 {
+        return Err(Error::config(format!(
+            "TP leader must hold shard 0 of the group, found shard {}",
+            shard.index
+        )));
+    }
+    if shard.of != tp.of || shard.base != tp.base {
+        return Err(Error::config(format!(
+            "TP placement names a {}-way group of base {:016x} but the local shard is {} of {} (base {:016x})",
+            tp.of, tp.base, shard.index, shard.of, shard.base
+        )));
+    }
+    if tp.peers.len() + 1 != tp.of {
+        return Err(Error::config(format!(
+            "TP group of {} needs {} followers, placement carries {}",
+            tp.of,
+            tp.of - 1,
+            tp.peers.len()
+        )));
+    }
+    if shard.full_bonds.len() != m {
+        return Err(Error::format(format!(
+            "shard manifest lists {} full bonds for {m} sites",
+            shard.full_bonds.len()
+        )));
+    }
+
+    let (job, trace) = jobs.first().copied().unwrap_or((a.job, 0));
+    let chunk_max = rows.min(cfg.n2_micro.max(1));
+    // Size follower links' frame cap to the largest partial any peer can
+    // send back (+ slack for the tiny control acknowledgement).
+    let w_max = (0..m)
+        .flat_map(|s| (1..tp.of).map(move |k| shard_range(shard.full_bonds[s].1, k, tp.of)))
+        .map(|(lo, hi)| hi - lo)
+        .max()
+        .unwrap_or(0);
+    let link_cap = 4096 + chunk_max * w_max.max(1) * d * 8;
+
+    let mut links: Vec<Option<Box<dyn TpLink>>> = vec![None];
+    for (i, peer) in tp.peers.iter().enumerate() {
+        let hello = Json::obj(vec![
+            ("op", Json::Str("tp_hello".into())),
+            ("key", Json::Str(format!("{:016x}", peer.key))),
+            ("base", Json::Str(format!("{:016x}", tp.base))),
+            ("of", Json::Num(tp.of as f64)),
+            ("rank", Json::Num((i + 1) as f64)),
+            ("rows", Json::Num(rows as f64)),
+            ("n2", Json::Num(cfg.n2_micro as f64)),
+            ("sites", Json::Num(m as f64)),
+            ("compute", Json::Str("f32".into())),
+            ("job", Json::Num(job as f64)),
+            ("trace", Json::Str(format!("{trace:016x}"))),
+        ]);
+        links.push(Some(Box::new(FmpnLink::dial(
+            &peer.addr,
+            &hello,
+            cfg.tp_step_timeout_ms,
+            link_cap,
+        )?)));
+    }
+    let mut comm = SocketComm::new(0, links)?;
+
+    let mut metrics = Metrics::new();
+    let mut sinks = vec![SampleSink::new(m, d, 4)];
+    let prep = cache.prepared(
+        batch.key.store_hash,
+        m,
+        PrepKey {
+            compute: ComputePrecision::F32,
+            gamma_f16: false,
+        },
+        cfg.prep_cache_bytes,
+    );
+    let mut walk = SiteWalk::new(store.clone(), disk.clone(), prep);
+
+    let t_group = Instant::now();
+    let mut env = boundary_env(rows);
+    let mut env_in: Mat<f32> = Mat::zeros(0, 0);
+    let mut env_out: Mat<f32> = Mat::zeros(0, 0);
+    let mut temp_mine: Tensor3<f32> = Tensor3::zeros(0, 0, 0);
+    let mut temp_full: Tensor3<f32> = Tensor3::zeros(0, 0, 0);
+    let mut wire: Vec<f32> = Vec::new();
+    let mut part: Vec<f32> = Vec::new();
+    let mut gathered: Vec<f32> = Vec::new();
+    let mut out_wire: Vec<f32> = Vec::new();
+    let mut samples_buf: Vec<i32> = Vec::new();
+    let mut probs: Vec<f32> = Vec::new();
+    let mut ones: Vec<f32> = Vec::new();
+    let mut dead_total = 0u64;
+
+    for site_idx in 0..m {
+        let psite = walk.site(site_idx, &mut metrics)?;
+        let gamma = f32_gamma(&psite)?;
+        let (chi_l_full, chi_r_full) = shard.full_bonds[site_idx];
+        if gamma.d0 != chi_l_full || gamma.d2 != d {
+            return Err(Error::format(format!(
+                "shard site {site_idx} is ({},{},{}), manifest promises χ_l {chi_l_full}, d {d}",
+                gamma.d0, gamma.d1, gamma.d2
+            )));
+        }
+        // Λ for the full-width measure. Stores in this pipeline fold Λ
+        // into Γ and carry the identity (`io::store` and the GBS
+        // generator both pin `lambda = 1.0`), so the full-width vector
+        // is all ones — bitwise what the serial engine reads from its
+        // prepared site. A shard's own lambda is shard-width and unusable
+        // here.
+        ones.clear();
+        ones.resize(chi_r_full, 1.0f32);
+        let mut next = crate::tensor::SplitBuf::zeros(&[rows, chi_r_full]);
+        let mut site_samples: Vec<i32> = Vec::with_capacity(rows);
+        let mut off = 0usize;
+        while off < rows {
+            let take = (rows - off).min(cfg.n2_micro);
+            let mut chunk = env_rows(&env, off, off + take);
+            to_f32_into(&chunk, ComputePrecision::F32, &mut env_in)?;
+
+            complexes_to_wire(&env_in.data, &mut wire);
+            let t0 = Instant::now();
+            let sent = comm.bcast(TP_ENV, &mut wire, 0)?;
+            metrics.add_phase("bcast", t0.elapsed().as_secs_f64());
+            metrics.add(keys::TP_BCAST_BYTES, sent);
+
+            let t0 = Instant::now();
+            contract_env_into(&env_in, gamma, &mut temp_mine, cfg.gemm_threads, cfg.gemm_split)?;
+            metrics.add(
+                keys::FLOPS,
+                matmul_flops(take, gamma.d0, gamma.d1 * gamma.d2),
+            );
+            complexes_to_wire(&temp_mine.data, &mut part);
+            metrics.add_phase("compute", t0.elapsed().as_secs_f64());
+
+            let t0 = Instant::now();
+            let got = comm.gather(TP_PART, &part, &mut gathered, 0)?;
+            let reduce_secs = t0.elapsed().as_secs_f64();
+            metrics.add_phase("comm", reduce_secs);
+            metrics.observe(keys::HIST_TP_REDUCE, reduce_secs);
+            metrics.add(keys::TP_REDUCE_BYTES, got);
+            assemble_temp(&gathered, take, d, chi_r_full, tp.of, &mut temp_full)?;
+
+            let t0 = Instant::now();
+            let th = spec.thresholds(site_idx, a.sample0 + off as u64, take);
+            let dead = measure_into(
+                &temp_full,
+                &ones,
+                &th,
+                cfg.scaling,
+                cfg.gemm_threads,
+                &mut env_out,
+                &mut samples_buf,
+                &mut probs,
+            )?;
+            dead_total += dead as u64;
+            metrics.add_phase("measure", t0.elapsed().as_secs_f64());
+
+            out_wire.clear();
+            out_wire.extend(samples_buf.iter().map(|&s| s as f32));
+            let t0 = Instant::now();
+            let sent = comm.bcast(TP_OUTCOME, &mut out_wire, 0)?;
+            metrics.add_phase("bcast", t0.elapsed().as_secs_f64());
+            metrics.add(keys::TP_BCAST_BYTES, sent);
+
+            from_f32_into(&env_out, &mut chunk);
+            env_store_rows(&mut next, off, &chunk);
+            site_samples.extend_from_slice(&samples_buf);
+            metrics.add(keys::MICRO_BATCHES, 1);
+            off += take;
+        }
+        sinks[0].record(site_idx, &site_samples);
+        env = next;
+    }
+
+    let mut done: Vec<f32> = Vec::new();
+    comm.bcast(TP_DONE, &mut done, 0)?;
+    comm.finish()?;
+    walk.finish(&mut metrics)?;
+    metrics.add("dead_rows", dead_total);
+    metrics.add(keys::TP_JOBS, 1);
+    metrics.add(keys::SITES, m as u64);
+    metrics.add(keys::SAMPLES, rows as u64);
+    metrics.add(keys::MACRO_BATCHES, 1);
+    rec.span(
+        Layer::Tp,
+        "tp_group",
+        job,
+        trace,
+        t_group.elapsed().as_nanos() as u64,
+        tp.of as u64,
+    );
+    Ok((metrics, sinks))
+}
+
+// ---------------------------------------------------------------------------
+// Follower: the shard-serving session
+
+/// Run the follower side of a TP group on an accepted connection. The
+/// reader is parked here until the leader tears the group down; TP
+/// frames out go through the connection's single writer thread (`tx`).
+///
+/// Refusals (unknown key, wrong shard, non-f32 compute, malformed
+/// hello) answer with a typed error and return `Ok` — the connection
+/// stays usable. `Err` is reserved for wire-level failures mid-group,
+/// which close the connection so the leader fails the job.
+pub(crate) fn serve_tp(
+    msg: &Json,
+    reader: &mut FrameReader<BufReader<TcpStream>>,
+    tx: &Sender<Out>,
+    svc: &Service,
+    net: &NetConfig,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let refuse = |text: String| -> Result<()> {
+        let _ = tx.send(Out::Ctrl(reply_err("error", text)));
+        Ok(())
+    };
+    let num = |k: &str| msg.get(k).and_then(|v| v.as_f64());
+    let hex = |k: &str| {
+        msg.get(k)
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+    };
+    let (Some(key), Some(base)) = (hex("key"), hex("base")) else {
+        return refuse("tp_hello: missing or malformed key/base".into());
+    };
+    let (Some(of), Some(rank), Some(rows), Some(n2), Some(sites)) = (
+        num("of"),
+        num("rank"),
+        num("rows"),
+        num("n2"),
+        num("sites"),
+    ) else {
+        return refuse("tp_hello: missing of/rank/rows/n2/sites".into());
+    };
+    let (of, rank, rows, n2, sites) = (
+        of as usize,
+        rank as usize,
+        rows as usize,
+        n2 as usize,
+        sites as usize,
+    );
+    if of < 2 || rank == 0 || rank >= of {
+        return refuse(format!("tp_hello: rank {rank} of {of} is not a follower"));
+    }
+    if rows == 0 || n2 == 0 {
+        return refuse("tp_hello: empty chunk schedule (rows and n2 must be > 0)".into());
+    }
+    if msg.get("compute").and_then(|v| v.as_str()) != Some("f32") {
+        return refuse("tensor-parallel groups run f32 compute only".into());
+    }
+    let store = match svc.cache().get_by_key(key) {
+        Ok((s, _)) => s,
+        Err(e) => return refuse(e.to_string()),
+    };
+    let Some(shard) = store.shard.clone() else {
+        return refuse(format!(
+            "store {key:016x} is not a shard (this backend cannot follow a TP group with it)"
+        ));
+    };
+    if shard.index != rank || shard.of != of || shard.base != base {
+        return refuse(format!(
+            "shard mismatch: leader wants rank {rank} of {of} (base {base:016x}), \
+             this backend holds shard {} of {} (base {:016x})",
+            shard.index, shard.of, shard.base
+        ));
+    }
+    if store.spec.m != sites || shard.full_bonds.len() != sites {
+        return refuse(format!(
+            "site count mismatch: group walks {sites} sites, shard store has {}",
+            store.spec.m
+        ));
+    }
+    if store.spec.displacement_sigma != 0.0 {
+        return refuse("tensor-parallel jobs do not support displaced sampling".into());
+    }
+    // Fail the env broadcast size at the hello instead of mid-stream:
+    // the leader's chunks must fit this server's frame cap.
+    let chi_l_max = shard.full_bonds.iter().map(|b| b.0).max().unwrap_or(0);
+    let env_frame = rows.min(n2) * chi_l_max * 8;
+    if env_frame > net.max_frame_bytes {
+        return refuse(format!(
+            "env chunks of {env_frame} bytes exceed this server's {} byte frame cap \
+             (raise net.max_frame_bytes or lower n2_micro on the leader)",
+            net.max_frame_bytes
+        ));
+    }
+
+    let job = num("job").map(|v| v as u64).unwrap_or(0);
+    let trace = msg
+        .get("trace")
+        .and_then(|v| v.as_str())
+        .and_then(crate::trace::parse_trace_id)
+        .unwrap_or(0);
+    tx.send(Out::Ctrl(reply_ok(
+        "tp_welcome",
+        vec![("rank", Json::Num(rank as f64))],
+    )))
+    .map_err(|_| Error::other("net: writer thread gone"))?;
+
+    let cfg = svc.config();
+    let step_timeout = Duration::from_millis(cfg.tp_step_timeout_ms.max(1));
+    let prep = svc.cache().prepared(
+        key,
+        sites,
+        PrepKey {
+            compute: ComputePrecision::F32,
+            gamma_f16: false,
+        },
+        cfg.prep_cache_bytes,
+    );
+    let mut walk = SiteWalk::new(store.clone(), svc.cache().disk.clone(), prep);
+
+    let t_group = Instant::now();
+    let mut metrics = Metrics::new();
+    let mut seq = 0u64;
+    let mut wire: Vec<f32> = Vec::new();
+    let mut part: Vec<f32> = Vec::new();
+    let mut env_in: Mat<f32> = Mat::zeros(0, 0);
+    let mut temp: Tensor3<f32> = Tensor3::zeros(0, 0, 0);
+
+    // Receive the next TP frame, which must carry exactly (op, seq) —
+    // the follower mirrors SocketComm's per-collective sequence count.
+    let recv_tp = |reader: &mut FrameReader<BufReader<TcpStream>>,
+                       op: u8,
+                       seq: u64,
+                       out: &mut Vec<f32>|
+     -> Result<u64> {
+        out.clear();
+        let deadline = Instant::now() + step_timeout;
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return Err(Error::other("server stopping mid TP group"));
+            }
+            match reader.read_frame_idle()? {
+                None => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Fabric(format!(
+                            "TP leader sent nothing for {}ms awaiting {}",
+                            step_timeout.as_millis(),
+                            tp_op_name(op)
+                        )));
+                    }
+                }
+                Some(Frame::Tp(p)) => {
+                    let (got_op, got_seq) = frame::decode_tp_into(&p, out)?;
+                    if (got_op, got_seq) != (op, seq) {
+                        return Err(Error::Fabric(format!(
+                            "TP desync with leader: got ({}, seq {got_seq}), want ({}, seq {seq})",
+                            tp_op_name(got_op),
+                            tp_op_name(op)
+                        )));
+                    }
+                    return Ok((out.len() * 4) as u64);
+                }
+                Some(Frame::Ctrl(_)) => {
+                    return Err(Error::Fabric(
+                        "control frame mid TP group (the leader lost the session plot)".into(),
+                    ));
+                }
+                Some(_) => {
+                    return Err(Error::Fabric("non-TP frame mid TP group".into()));
+                }
+            }
+        }
+    };
+
+    let outcome = (|| -> Result<()> {
+        for site_idx in 0..sites {
+            let psite = walk.site(site_idx, &mut metrics)?;
+            let gamma = f32_gamma(&psite)?;
+            let chi_l = shard.full_bonds[site_idx].0;
+            if gamma.d0 != chi_l {
+                return Err(Error::format(format!(
+                    "shard site {site_idx} has χ_l {}, manifest promises {chi_l}",
+                    gamma.d0
+                )));
+            }
+            let mut off = 0usize;
+            while off < rows {
+                let take = (rows - off).min(n2);
+                seq += 1;
+                let got = recv_tp(reader, TP_ENV, seq, &mut wire)?;
+                metrics.add(keys::TP_BCAST_BYTES, got);
+                wire_to_mat(&wire, take, chi_l, &mut env_in)?;
+                let t0 = Instant::now();
+                contract_env_into(&env_in, gamma, &mut temp, cfg.gemm_threads, cfg.gemm_split)?;
+                metrics.add_phase("compute", t0.elapsed().as_secs_f64());
+                metrics.add(
+                    keys::FLOPS,
+                    matmul_flops(take, gamma.d0, gamma.d1 * gamma.d2),
+                );
+                complexes_to_wire(&temp.data, &mut part);
+                seq += 1;
+                tx.send(Out::Tp(frame::encode_tp(TP_PART, seq, &part)))
+                    .map_err(|_| Error::other("net: writer thread gone"))?;
+                metrics.add(keys::TP_REDUCE_BYTES, (part.len() * 4) as u64);
+                // Outcome broadcast: lockstep participation only — the
+                // follower holds no environment to advance.
+                seq += 1;
+                let got = recv_tp(reader, TP_OUTCOME, seq, &mut wire)?;
+                metrics.add(keys::TP_BCAST_BYTES, got);
+                off += take;
+            }
+        }
+        seq += 1;
+        recv_tp(reader, TP_DONE, seq, &mut wire)?;
+        Ok(())
+    })();
+    if let Err(e) = outcome {
+        metrics.add(keys::TP_JOBS, 1);
+        metrics.add(keys::TP_MEMBER_FAILURES, 1);
+        svc.merge_metrics(&metrics);
+        return Err(e);
+    }
+    walk.finish(&mut metrics)?;
+    metrics.add(keys::TP_JOBS, 1);
+    svc.merge_metrics(&metrics);
+    svc.recorder().span(
+        Layer::Tp,
+        "tp_follow",
+        job,
+        trace,
+        t_group.elapsed().as_nanos() as u64,
+        rank as u64,
+    );
+    tx.send(Out::Ctrl(reply_ok("tp_done", vec![])))
+        .map_err(|_| Error::other("net: writer thread gone"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::GemmSplit;
+    use crate::rng::Xoshiro256;
+
+    fn random_complex(rng: &mut Xoshiro256, n: usize) -> Vec<Complex<f32>> {
+        (0..n)
+            .map(|_| Complex::new(rng.normal() as f32, rng.normal() as f32))
+            .collect()
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_every_bit() {
+        let mut rng = Xoshiro256::seed_from(11);
+        let data = random_complex(&mut rng, 6 * 4);
+        let m = Mat::from_vec(6, 4, data.clone()).unwrap();
+        let mut wire = Vec::new();
+        complexes_to_wire(&m.data, &mut wire);
+        assert_eq!(wire.len(), 48);
+        let mut back: Mat<f32> = Mat::zeros(0, 0);
+        wire_to_mat(&wire, 6, 4, &mut back).unwrap();
+        assert_eq!(back.data, m.data);
+        assert!(wire_to_mat(&wire, 5, 4, &mut back).is_err(), "ragged shape");
+    }
+
+    #[test]
+    fn sharded_contraction_assembles_bit_identically() {
+        // Full contraction vs per-shard contraction + assemble_temp: the
+        // disjoint-column design means not one ulp may differ.
+        let mut rng = Xoshiro256::seed_from(12);
+        let (n, chi_l, chi_r, d, of) = (5, 7, 9, 3, 3);
+        let env = Mat::from_vec(n, chi_l, random_complex(&mut rng, n * chi_l)).unwrap();
+        let full =
+            Tensor3::from_vec(chi_l, chi_r, d, random_complex(&mut rng, chi_l * chi_r * d))
+                .unwrap();
+        let mut want = Tensor3::zeros(0, 0, 0);
+        contract_env_into(&env, &full, &mut want, 1, GemmSplit::Auto).unwrap();
+
+        // Contract each column shard independently, concat rank-order.
+        let mut gathered: Vec<f32> = Vec::new();
+        for k in 0..of {
+            let (lo, hi) = shard_range(chi_r, k, of);
+            let mut shard_data = Vec::new();
+            for x in 0..chi_l {
+                for y in lo..hi {
+                    for p in 0..d {
+                        shard_data.push(full.at(x, y, p));
+                    }
+                }
+            }
+            let shard = Tensor3::from_vec(chi_l, hi - lo, d, shard_data).unwrap();
+            let mut part = Tensor3::zeros(0, 0, 0);
+            contract_env_into(&env, &shard, &mut part, 1, GemmSplit::Auto).unwrap();
+            let mut w = Vec::new();
+            complexes_to_wire(&part.data, &mut w);
+            gathered.extend_from_slice(&w);
+        }
+        let mut got = Tensor3::zeros(0, 0, 0);
+        assemble_temp(&gathered, n, d, chi_r, of, &mut got).unwrap();
+        assert_eq!(got.data, want.data, "sharded == full, bitwise");
+
+        // A short gather is a typed error, not a silent partial tensor.
+        gathered.pop();
+        assert!(assemble_temp(&gathered, n, d, chi_r, of, &mut got).is_err());
+    }
+
+    #[test]
+    fn fmpn_link_speaks_the_group_protocol() {
+        // Loopback follower: preamble exchange, hello/welcome, one
+        // bcast+gather round, teardown ack — the full link lifecycle.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let follower = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut w = FrameWriter::new(BufWriter::new(stream.try_clone().unwrap()));
+            let mut r = FrameReader::new(BufReader::new(stream), 1 << 20);
+            w.write_preamble().unwrap();
+            r.read_preamble().unwrap();
+            let hello = match r.read_frame().unwrap() {
+                Frame::Ctrl(j) => j,
+                _ => panic!("expected hello"),
+            };
+            assert_eq!(hello.get("op").and_then(|v| v.as_str()), Some("tp_hello"));
+            assert_eq!(hello.get("rank").and_then(|v| v.as_f64()), Some(1.0));
+            w.write_ctrl(&reply_ok("tp_welcome", vec![])).unwrap();
+            // One collective round: env in, doubled floats out.
+            let mut buf = Vec::new();
+            let (op, seq) = match r.read_frame().unwrap() {
+                Frame::Tp(p) => frame::decode_tp_into(&p, &mut buf).unwrap(),
+                _ => panic!("expected TP frame"),
+            };
+            assert_eq!((op, seq), (TP_ENV, 1));
+            let doubled: Vec<f32> = buf.iter().map(|v| v * 2.0).collect();
+            w.write_tp(&frame::encode_tp(TP_PART, 2, &doubled)).unwrap();
+            // Teardown: TP_DONE then the final control acknowledgement.
+            buf.clear();
+            let (op, seq) = match r.read_frame().unwrap() {
+                Frame::Tp(p) => frame::decode_tp_into(&p, &mut buf).unwrap(),
+                _ => panic!("expected TP_DONE"),
+            };
+            assert_eq!((op, seq), (TP_DONE, 3));
+            w.write_ctrl(&reply_ok("tp_done", vec![])).unwrap();
+        });
+
+        let hello = Json::obj(vec![
+            ("op", Json::Str("tp_hello".into())),
+            ("rank", Json::Num(1.0)),
+        ]);
+        let link = FmpnLink::dial(&addr, &hello, 5000, 1 << 20).unwrap();
+        let mut comm = SocketComm::new(0, vec![None, Some(Box::new(link))]).unwrap();
+        let mut env = vec![1.5f32, -2.0, 0.25];
+        comm.bcast(TP_ENV, &mut env, 0).unwrap();
+        let mut gathered = Vec::new();
+        comm.gather(TP_PART, &[9.0f32], &mut gathered, 0).unwrap();
+        assert_eq!(gathered, vec![9.0, 3.0, -4.0, 0.5], "rank order: mine, then peer");
+        let mut none = Vec::new();
+        comm.bcast(TP_DONE, &mut none, 0).unwrap();
+        comm.finish().unwrap();
+        follower.join().unwrap();
+    }
+}

@@ -34,13 +34,14 @@ use std::time::{Duration, Instant};
 
 use super::health::{failover_order, BackendHealth, HealthState};
 use super::rendezvous;
-use crate::config::{NetConfig, RouterConfig};
+use crate::config::{ComputePrecision, NetConfig, RouterConfig};
 use crate::metrics::{keys, HistogramStats, Metrics};
 use crate::trace::{self, Layer, Recorder};
 use crate::net::frame::{self, Frame, FrameReader, FrameWriter};
 use crate::net::server::{lame_duck_reject, reap_conns, reply_err, reply_ok};
+use crate::net::push::PushShard;
 use crate::net::Client;
-use crate::service::{JobId, JobSpec};
+use crate::service::{JobId, JobSpec, TpGroup, TpPeer};
 use crate::telemetry::{self, http::MetricsHttp, prom::Exposition, TsRing};
 use crate::util::backoff::Backoff;
 use crate::util::error::{Error, Result};
@@ -64,6 +65,13 @@ pub struct RouterStats {
     pub push_dedups: AtomicU64,
     /// Proxied pushes that failed mid-stream (client saw typed `busy`).
     pub push_failures: AtomicU64,
+    /// Tensor-parallel jobs placed across a shard group.
+    pub tp_submits: AtomicU64,
+    /// TP submits refused typed (unresolvable group, member down/draining).
+    pub tp_rejects: AtomicU64,
+    /// Proxied pushes that announced a shard identity and were recorded
+    /// in the router's shard map (dedup-answered pushes included).
+    pub shard_pushes: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
     pub frames_in: AtomicU64,
@@ -109,6 +117,12 @@ impl RouterStats {
         m.add(
             keys::ROUTER_PUSH_FAILURES,
             self.push_failures.load(Ordering::Relaxed),
+        );
+        m.add(keys::ROUTER_TP_SUBMITS, self.tp_submits.load(Ordering::Relaxed));
+        m.add(keys::ROUTER_TP_REJECTS, self.tp_rejects.load(Ordering::Relaxed));
+        m.add(
+            keys::ROUTER_SHARD_PUSHES,
+            self.shard_pushes.load(Ordering::Relaxed),
         );
         m.add(keys::NET_BYTES_IN, self.bytes_in.load(Ordering::Relaxed));
         m.add(keys::NET_BYTES_OUT, self.bytes_out.load(Ordering::Relaxed));
@@ -160,6 +174,42 @@ struct FleetBackend {
     doc: Mutex<Option<Json>>,
 }
 
+/// One registered shard of a sharded store: which backend holds it,
+/// under what content key, and how many blob bytes it announced.
+#[derive(Clone, Copy)]
+struct ShardMember {
+    backend: usize,
+    key: u64,
+    bytes: u64,
+}
+
+/// Everything the router knows about one `of`-way sharding of a full
+/// store (keyed by the full store's manifest hash), learned from proxied
+/// shard pushes. Rank `r`'s slot stays `None` until shard `r` is pushed.
+struct ShardSet {
+    of: usize,
+    members: Vec<Option<ShardMember>>,
+}
+
+impl ShardSet {
+    fn empty(of: usize) -> ShardSet {
+        ShardSet {
+            of,
+            members: vec![None; of],
+        }
+    }
+
+    /// Sum of announced shard bytes — the auto-TP size proxy for the
+    /// full store (shards partition its site blobs).
+    fn bytes(&self) -> u64 {
+        self.members.iter().flatten().map(|m| m.bytes).sum()
+    }
+
+    fn complete(&self) -> bool {
+        self.members.iter().all(|m| m.is_some())
+    }
+}
+
 struct Shared {
     cfg: RouterConfig,
     net: NetConfig,
@@ -176,6 +226,9 @@ struct Shared {
     /// Scraped backend telemetry, index-aligned with `backends`.
     fleet: Vec<FleetBackend>,
     table: Mutex<RouteTable>,
+    /// Shard map: full-store manifest hash → where its shards live
+    /// (`docs/TENSOR_PARALLEL.md` § Group lifecycle).
+    shards: Mutex<BTreeMap<u64, ShardSet>>,
     /// Close connections and stop the accept/probe loops.
     stop: AtomicBool,
     /// Refuse new submits (drain in progress or completed).
@@ -288,6 +341,89 @@ impl Shared {
         self.counters[b].forwards.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Learn (or refresh) where one shard of a sharded store lives. A
+    /// push announcing a *different* group width supersedes the whole
+    /// set: the old sharding is no longer the one clients will name.
+    fn record_shard(&self, s: &PushShard, backend: usize, key: u64, bytes: u64) {
+        let mut map = self.shards.lock().unwrap();
+        let set = map.entry(s.base).or_insert_with(|| ShardSet::empty(s.of));
+        if set.of != s.of {
+            *set = ShardSet::empty(s.of);
+        }
+        set.members[s.index] = Some(ShardMember { backend, key, bytes });
+        self.stats.shard_pushes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Auto-TP: a keyed f32 submit whose store has a complete registered
+    /// shard group bigger than `shard_budget_bytes` is upgraded to a TP
+    /// request as if the client had passed `--tp of`. Only jobs that
+    /// *explicitly* pin f32 compute are upgraded — silently changing a
+    /// job's effective precision to make it shardable is not the
+    /// router's call.
+    fn auto_tp(&self, spec: &JobSpec) -> Option<TpGroup> {
+        if self.cfg.shard_budget_bytes == 0 {
+            return None;
+        }
+        if spec.compute != Some(ComputePrecision::F32) {
+            return None;
+        }
+        let base = spec.key?;
+        let map = self.shards.lock().unwrap();
+        let set = map.get(&base)?;
+        (set.complete() && set.bytes() > self.cfg.shard_budget_bytes).then(|| TpGroup {
+            of: set.of,
+            base,
+            peers: Vec::new(),
+        })
+    }
+
+    /// Resolve a TP *request* (empty peer list) against the shard map
+    /// and the health gate. `Err` carries the typed refusal text: TP
+    /// groups never spill over — a missing or unroutable member fails
+    /// the submit instead of silently degrading to a partial group.
+    fn resolve_tp(&self, req: &TpGroup) -> std::result::Result<(usize, u64, Vec<TpPeer>), String> {
+        let map = self.shards.lock().unwrap();
+        let Some(set) = map.get(&req.base) else {
+            return Err(format!(
+                "no shard group registered for store {:016x} (push its shards through this router first)",
+                req.base
+            ));
+        };
+        if set.of != req.of {
+            return Err(format!(
+                "store {:016x} is sharded {}-way, not {}-way",
+                req.base, set.of, req.of
+            ));
+        }
+        let mut members = Vec::with_capacity(set.of);
+        for (rank, m) in set.members.iter().enumerate() {
+            let Some(m) = m else {
+                return Err(format!(
+                    "shard {rank}/{} of store {:016x} was never pushed",
+                    set.of, req.base
+                ));
+            };
+            let h = &self.backends[m.backend];
+            if !h.routable() {
+                return Err(format!(
+                    "TP group member {} (rank {rank}) is {}; tensor-parallel jobs fail typed instead of spilling over",
+                    h.addr,
+                    h.state().as_str()
+                ));
+            }
+            members.push((m.backend, m.key));
+        }
+        let (leader, leader_key) = members[0];
+        let peers = members[1..]
+            .iter()
+            .map(|(b, k)| TpPeer {
+                addr: self.backends[*b].addr.clone(),
+                key: *k,
+            })
+            .collect();
+        Ok((leader, leader_key, peers))
+    }
+
     /// One router-side telemetry sample: routing-table occupancy as the
     /// queue depth, the backend-leg RTT quantiles, and the listener's
     /// wire counters. Engine-side fields (steps, cache hits) stay at
@@ -381,12 +517,22 @@ impl Shared {
                 })
                 .collect(),
         );
+        let (shard_groups, shard_groups_complete) = {
+            let map = self.shards.lock().unwrap();
+            let complete = map.values().filter(|s| s.complete()).count();
+            (map.len(), complete)
+        };
         Json::obj(vec![
             ("config", self.cfg.to_json()),
             ("run", m.to_json()),
             ("backends", backends),
             ("jobs_routed", Json::Num(routed as f64)),
             ("jobs_in_flight", Json::Num(in_flight as f64)),
+            ("shard_groups", Json::Num(shard_groups as f64)),
+            (
+                "shard_groups_complete",
+                Json::Num(shard_groups_complete as f64),
+            ),
         ])
     }
 
@@ -529,6 +675,7 @@ impl Router {
                 by_global: BTreeMap::new(),
                 by_backend: BTreeMap::new(),
             }),
+            shards: Mutex::new(BTreeMap::new()),
             stop: AtomicBool::new(false),
             draining: AtomicBool::new(false),
             shutdown_requested: AtomicBool::new(false),
@@ -861,7 +1008,7 @@ fn connection(stream: TcpStream, shared: &Arc<Shared>) {
             }
             let msg = match reader.read_frame_idle()? {
                 None => continue, // idle tick: re-check the stop flag
-                Some(Frame::Payload(_) | Frame::Chunk(_)) => {
+                Some(Frame::Payload(_) | Frame::Chunk(_) | Frame::Tp(_)) => {
                     return Err(Error::format(
                         "net wire: unexpected binary frame from client",
                     ));
@@ -1398,6 +1545,16 @@ fn handle_push_proxy(
         w.write_ctrl(&reply_err("error", "router shutting down (draining)"))?;
         return Ok(());
     }
+    // Shard identity, when announced: recorded in the shard map once the
+    // push lands (the backend validates it against the staged manifest,
+    // so a garbled announce never reaches the map — the begin fails).
+    let shard = PushShard::parse(msg).ok().flatten();
+    let announced_bytes = msg
+        .get("total_bytes")
+        .and_then(|v| v.as_f64())
+        .filter(|v| *v >= 0.0)
+        .map(|v| v as u64)
+        .unwrap_or(0);
 
     // Deliver push_begin along the affinity order; failover is free here.
     let mut chosen: Option<(usize, Json)> = None;
@@ -1428,6 +1585,11 @@ fn handle_push_proxy(
         if ok {
             shared.backends[b].note_ok();
             shared.stats.push_dedups.fetch_add(1, Ordering::Relaxed);
+            if let Some(s) = &shard {
+                // Dedup still teaches placement: the shard provably
+                // lives on this backend.
+                shared.record_shard(s, b, key, announced_bytes);
+            }
         }
         return Ok(());
     }
@@ -1505,6 +1667,9 @@ fn handle_push_proxy(
                 if reply.get("ok").and_then(|v| v.as_bool()) == Some(true) {
                     shared.backends[b].note_ok();
                     shared.stats.pushes.fetch_add(1, Ordering::Relaxed);
+                    if let Some(s) = &shard {
+                        shared.record_shard(s, b, key, announced_bytes);
+                    }
                 }
                 return w.write_ctrl(&reply);
             }
@@ -1513,9 +1678,9 @@ fn handle_push_proxy(
                     "net wire: unexpected control frame during push relay",
                 ));
             }
-            Frame::Payload(_) => {
+            Frame::Payload(_) | Frame::Tp(_) => {
                 return Err(Error::format(
-                    "net wire: unexpected payload frame during push relay",
+                    "net wire: unexpected payload/TP frame during push relay",
                 ));
             }
         }
@@ -1569,8 +1734,16 @@ fn handle_submit(
     conns: &mut BackendConns,
     shared: &Arc<Shared>,
 ) -> Result<()> {
-    let spec = JobSpec::from_json(msg.req("job")?)?;
+    let mut spec = JobSpec::from_json(msg.req("job")?)?;
     let trace_id = spec.trace.unwrap_or(0);
+    // Tensor-parallel path: an explicit `tp` request, or a keyed f32 job
+    // whose store's registered shard group exceeds `shard_budget_bytes`.
+    if spec.tp.is_none() {
+        spec.tp = shared.auto_tp(&spec);
+    }
+    if spec.tp.is_some() {
+        return handle_submit_tp(spec, w, conns, shared, trace_id);
+    }
     let Some(gid) = shared.reserve() else {
         w.write_ctrl(&reply_err("error", "router shutting down (draining)"))?;
         return Ok(());
@@ -1599,6 +1772,100 @@ fn handle_submit(
         Placement::Refused(e) => {
             shared.release(gid);
             w.write_ctrl(&reply_err("error", e))
+        }
+    }
+}
+
+/// Place a tensor-parallel job (`docs/TENSOR_PARALLEL.md` § Group
+/// lifecycle). Unlike the serial path there is no spillover and no
+/// retry loop: the group is pinned to the backends holding its shards,
+/// so every failure mode is either typed backpressure (`busy`, leader
+/// at capacity — the client's normal retry re-resolves the group) or a
+/// typed refusal that names the member and the reason.
+fn handle_submit_tp(
+    mut spec: JobSpec,
+    w: &mut FrameWriter<BufWriter<TcpStream>>,
+    conns: &mut BackendConns,
+    shared: &Arc<Shared>,
+    trace_id: u64,
+) -> Result<()> {
+    let req = spec.tp.clone().expect("caller checked tp");
+    let refuse = |w: &mut FrameWriter<BufWriter<TcpStream>>, text: String| -> Result<()> {
+        shared.stats.tp_rejects.fetch_add(1, Ordering::Relaxed);
+        w.write_ctrl(&reply_err("error", text))
+    };
+    // Placement is the router's to make: a client-supplied peer list
+    // would bypass both the shard map and the health gate.
+    if !req.peers.is_empty() {
+        return refuse(
+            w,
+            "tp submit carries resolved peers; send a request (empty peer list) and let the router place the group".into(),
+        );
+    }
+    let (leader, leader_key, peers) = match shared.resolve_tp(&req) {
+        Ok(v) => v,
+        Err(text) => return refuse(w, text),
+    };
+    let Some(gid) = shared.reserve() else {
+        w.write_ctrl(&reply_err("error", "router shutting down (draining)"))?;
+        return Ok(());
+    };
+    spec.key = Some(leader_key);
+    spec.tp = Some(TpGroup {
+        of: req.of,
+        base: req.base,
+        peers,
+    });
+    shared.rec.begin(Layer::Router, "place_tp", gid, trace_id);
+    shared
+        .rec
+        .instant(Layer::Router, "attempt", gid, trace_id, leader as u64 + 1);
+    let outcome = conns.client(leader, shared).and_then(|c| c.submit(&spec));
+    shared.rec.end(Layer::Router, "place_tp", gid, trace_id);
+    match outcome {
+        Ok(bid) => {
+            shared.backends[leader].note_ok();
+            shared.counters[leader].submits.fetch_add(1, Ordering::Relaxed);
+            shared.place(gid, leader, bid);
+            shared.stats.submits.fetch_add(1, Ordering::Relaxed);
+            shared.stats.tp_submits.fetch_add(1, Ordering::Relaxed);
+            w.write_ctrl(&reply_ok(
+                "submitted",
+                vec![
+                    ("id", Json::Num(gid as f64)),
+                    ("tp", Json::Num(req.of as f64)),
+                ],
+            ))
+        }
+        Err(e) if e.is_busy() => {
+            shared.counters[leader].busy.fetch_add(1, Ordering::Relaxed);
+            shared.release(gid);
+            shared.stats.busy_rejects.fetch_add(1, Ordering::Relaxed);
+            w.write_ctrl(&reply_err(
+                "busy",
+                format!(
+                    "TP leader {} is busy; back off and retry (the group cannot spill over)",
+                    shared.backends[leader].addr
+                ),
+            ))
+        }
+        Err(e) if is_transport_error(&e) => {
+            shared.note_forward_failure(leader);
+            conns.drop_conn(leader);
+            shared.release(gid);
+            refuse(
+                w,
+                format!(
+                    "TP leader {} unreachable: {e}",
+                    shared.backends[leader].addr
+                ),
+            )
+        }
+        Err(e) => {
+            // Application-level refusal from the leader (f32-only,
+            // shard mismatch, backend draining): relayed verbatim.
+            shared.release(gid);
+            refuse(w, e.to_string())
         }
     }
 }

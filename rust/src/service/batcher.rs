@@ -15,6 +15,7 @@
 
 use std::sync::Arc;
 
+use super::job::TpGroup;
 use super::queue::Assignment;
 use crate::config::{ComputePrecision, ServiceConfig};
 use crate::coordinator::scheduler;
@@ -36,6 +37,10 @@ pub struct Batch {
     pub assignments: Vec<Assignment>,
     /// Row target the batch was sized against (for occupancy accounting).
     pub target: usize,
+    /// Tensor-parallel placement: the worker runs this batch as a group
+    /// leader over `net::tp` instead of a local walk. Always a batch of
+    /// exactly one job (the dispatcher never coalesces TP jobs).
+    pub tp: Option<TpGroup>,
 }
 
 impl Batch {
@@ -138,6 +143,7 @@ mod tests {
                 Assignment { job: 2, sample0: 0, len: 20 },
             ],
             target: 100,
+            tp: None,
         };
         assert_eq!(b.rows(), 50);
         assert!((b.occupancy() - 0.5).abs() < 1e-12);

@@ -18,6 +18,101 @@ use crate::util::json::Json;
 /// Service-assigned job identifier (monotonic per service instance).
 pub type JobId = u64;
 
+/// One member of a tensor-parallel group, as seen by the group leader.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TpPeer {
+    /// FMPN address (`host:port`) of the follower backend.
+    pub addr: String,
+    /// Content key of the Γ shard store that follower holds.
+    pub key: u64,
+}
+
+/// Tensor-parallel placement of a job (`docs/TENSOR_PARALLEL.md`).
+///
+/// Two wire shapes share this struct. A *request* (client → router) has
+/// `peers` empty: "run this against the `of`-way sharding of store
+/// `base`". The router resolves it from its shard map into a *placement*
+/// (router → leader backend) whose `peers` lists ranks 1.. in order —
+/// rank 0 is the backend receiving the spec, whose own shard key replaces
+/// [`JobSpec::key`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TpGroup {
+    /// Group size (number of shards / backends).
+    pub of: usize,
+    /// Manifest hash of the *full* (unsharded) store.
+    pub base: u64,
+    /// Followers in rank order (ranks `1..of`); empty in a request.
+    pub peers: Vec<TpPeer>,
+}
+
+impl TpGroup {
+    fn from_json(j: &Json) -> Result<TpGroup> {
+        let of = j
+            .req("of")?
+            .as_f64()
+            .filter(|v| *v >= 2.0 && v.fract() == 0.0)
+            .ok_or_else(|| Error::format("job: tp 'of' is not an integer ≥ 2"))?
+            as usize;
+        let base = j
+            .req("base")?
+            .as_str()
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| Error::format("job: tp 'base' is not a hex store key"))?;
+        let mut peers = Vec::new();
+        if let Some(list) = j.get("peers") {
+            let arr = list
+                .as_arr()
+                .ok_or_else(|| Error::format("job: tp 'peers' is not an array"))?;
+            for p in arr {
+                let addr = p
+                    .req("addr")?
+                    .as_str()
+                    .filter(|a| !a.is_empty())
+                    .ok_or_else(|| Error::format("job: tp peer 'addr' is not a string"))?
+                    .to_string();
+                let key = p
+                    .req("key")?
+                    .as_str()
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+                    .ok_or_else(|| Error::format("job: tp peer 'key' is not a hex store key"))?;
+                peers.push(TpPeer { addr, key });
+            }
+        }
+        if !peers.is_empty() && peers.len() != of - 1 {
+            return Err(Error::format(format!(
+                "job: tp group of {of} needs {} peers, got {}",
+                of - 1,
+                peers.len()
+            )));
+        }
+        Ok(TpGroup { of, base, peers })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("of", Json::Num(self.of as f64)),
+            ("base", Json::Str(format!("{:016x}", self.base))),
+        ];
+        if !self.peers.is_empty() {
+            fields.push((
+                "peers",
+                Json::Arr(
+                    self.peers
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("addr", Json::Str(p.addr.clone())),
+                                ("key", Json::Str(format!("{:016x}", p.key))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
 /// A client sampling request.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -41,6 +136,10 @@ pub struct JobSpec {
     /// tracing ignore it (unknown JSON keys are skipped) or omit it, and
     /// the job runs untraced either way. `None`/zero means untraced.
     pub trace: Option<u64>,
+    /// Tensor-parallel placement (`docs/TENSOR_PARALLEL.md`). `None` for
+    /// ordinary single-backend jobs; omitted from the wire form so
+    /// non-TP submits stay byte-identical to pre-TP builds.
+    pub tp: Option<TpGroup>,
 }
 
 impl JobSpec {
@@ -53,6 +152,7 @@ impl JobSpec {
             compute: None,
             tag: String::new(),
             trace: None,
+            tp: None,
         }
     }
 
@@ -66,6 +166,7 @@ impl JobSpec {
             compute: None,
             tag: String::new(),
             trace: None,
+            tp: None,
         }
     }
 
@@ -146,6 +247,14 @@ impl JobSpec {
             .get("trace")
             .and_then(|v| v.as_str())
             .and_then(crate::trace::parse_trace_id);
+        // Unlike trace, a malformed tp section is a hard error: silently
+        // running a TP request as a serial job would sample the wrong
+        // store (one shard) and return garbage marked "done".
+        let tp = j
+            .get("tp")
+            .filter(|v| !matches!(**v, Json::Null))
+            .map(TpGroup::from_json)
+            .transpose()?;
         Ok(JobSpec {
             data: PathBuf::from(data),
             key,
@@ -154,6 +263,7 @@ impl JobSpec {
             compute,
             tag,
             trace,
+            tp,
         })
     }
 
@@ -180,6 +290,9 @@ impl JobSpec {
         // untraced job is byte-identical to pre-tracing builds.
         if let Some(t) = self.trace.filter(|t| *t != 0) {
             fields.push(("trace", Json::Str(format!("{t:016x}"))));
+        }
+        if let Some(tp) = &self.tp {
+            fields.push(("tp", tp.to_json()));
         }
         Json::obj(fields)
     }
@@ -319,6 +432,67 @@ mod tests {
             let s = JobSpec::from_json(&Json::parse(wire).unwrap()).unwrap();
             assert_eq!(s.trace, None, "{wire}");
         }
+    }
+
+    #[test]
+    fn tp_group_roundtrips_request_and_placement() {
+        // Request shape: peers empty, omitted from the wire.
+        let mut s = JobSpec::by_key(0xbeef, 64);
+        s.tp = Some(TpGroup {
+            of: 2,
+            base: 0xbeef,
+            peers: Vec::new(),
+        });
+        let j = s.to_json();
+        assert!(j.get("tp").unwrap().get("peers").is_none());
+        let back = JobSpec::from_json(&j).unwrap();
+        assert_eq!(back.tp, s.tp);
+        // Placement shape: the router filled peers in rank order.
+        s.tp = Some(TpGroup {
+            of: 3,
+            base: 0xbeef,
+            peers: vec![
+                TpPeer {
+                    addr: "b1:9000".into(),
+                    key: 0x11,
+                },
+                TpPeer {
+                    addr: "b2:9000".into(),
+                    key: 0x22,
+                },
+            ],
+        });
+        let back = JobSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.tp, s.tp);
+        // Non-TP specs omit the field entirely (old-peer byte parity).
+        assert!(JobSpec::by_key(0xbeef, 64).to_json().get("tp").is_none());
+    }
+
+    #[test]
+    fn tp_group_rejects_malformed() {
+        for bad in [
+            // of must be ≥ 2
+            r#"{"key": "ff", "samples": 5, "tp": {"of": 1, "base": "aa"}}"#,
+            // base must be hex
+            r#"{"key": "ff", "samples": 5, "tp": {"of": 2, "base": 3}}"#,
+            // missing base
+            r#"{"key": "ff", "samples": 5, "tp": {"of": 2}}"#,
+            // peer count must be of-1 when present
+            r#"{"key": "ff", "samples": 5,
+                "tp": {"of": 3, "base": "aa", "peers": [{"addr": "x:1", "key": "bb"}]}}"#,
+            // peer addr/key malformed
+            r#"{"key": "ff", "samples": 5,
+                "tp": {"of": 2, "base": "aa", "peers": [{"addr": "", "key": "bb"}]}}"#,
+            r#"{"key": "ff", "samples": 5,
+                "tp": {"of": 2, "base": "aa", "peers": [{"addr": "x:1", "key": "zz"}]}}"#,
+            r#"{"key": "ff", "samples": 5, "tp": {"of": 2, "base": "aa", "peers": 7}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(JobSpec::from_json(&j).is_err(), "{bad}");
+        }
+        // Null tp degrades to non-TP (matches the key-field convention).
+        let j = Json::parse(r#"{"key": "ff", "samples": 5, "tp": null}"#).unwrap();
+        assert_eq!(JobSpec::from_json(&j).unwrap().tp, None);
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod worker;
 
 pub use batcher::{Batch, BatchKey};
 pub use cache::StoreCache;
-pub use job::{JobId, JobSpec, JobStatus, JobView};
+pub use job::{JobId, JobSpec, JobStatus, JobView, TpGroup, TpPeer};
 pub use queue::{AdmissionLimits, Assignment, JobQueue};
 pub use worker::Dispatch;
 
@@ -119,6 +119,30 @@ impl Service {
     }
 
     pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        // TP structural checks come before the key lookup: a TP *request*
+        // is invalid at a backend no matter what stores it holds, and the
+        // refusal should say so rather than "unknown store key".
+        if let Some(tp) = &spec.tp {
+            // A backend only ever sees the *placement* form (peers
+            // resolved); the request form must go through a router that
+            // knows where the shards live.
+            if tp.peers.is_empty() {
+                return Err(crate::util::error::Error::config(
+                    "tp placement has no peers (submit tensor-parallel jobs through a \
+                     routing tier that can resolve the shard group)",
+                ));
+            }
+            if spec.key.is_none() {
+                return Err(crate::util::error::Error::config(
+                    "tp jobs must name their shard store by content key",
+                ));
+            }
+            if spec.compute.unwrap_or(self.cfg.compute) != ComputePrecision::F32 {
+                return Err(crate::util::error::Error::config(
+                    "tensor-parallel jobs run f32 compute only",
+                ));
+            }
+        }
         // Content-keyed jobs are checked at admission, not in the
         // dispatcher: an unknown key would otherwise be accepted and fail
         // asynchronously, which a router's spillover cannot react to —
@@ -144,6 +168,18 @@ impl Service {
 
     pub fn cache(&self) -> &Arc<StoreCache> {
         &self.cache
+    }
+
+    /// The validated configuration this service was started with.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Merge a metrics delta produced outside the worker pool — the TP
+    /// follower session driver (`net::tp::serve_tp`) accounts its
+    /// data-plane traffic and compute this way.
+    pub fn merge_metrics(&self, m: &Metrics) {
+        self.metrics.lock().unwrap().merge(m);
     }
 
     /// The service-wide flight recorder (capacity 0 when tracing is off).
@@ -344,14 +380,23 @@ fn dispatcher_loop(
             }
         }
         resolved.retain(|id, _| pending.iter().any(|(p, _)| p == id));
-        let compatible_ids: Vec<JobId> = pending
-            .iter()
-            .filter(|(id, spec)| {
-                spec.compute.unwrap_or(cfg.compute) == key.compute
-                    && resolved.get(id).copied().flatten() == Some(key.store_hash)
-            })
-            .map(|(id, _)| *id)
-            .collect();
+        // A TP job forms a batch of exactly one: its rows drive a whole
+        // backend group in lockstep, and another job's rows would have to
+        // ride the same chunk schedule — forbidden by construction.
+        // Symmetrically, a non-TP anchor never absorbs TP jobs.
+        let compatible_ids: Vec<JobId> = if front_spec.tp.is_some() {
+            vec![front_id]
+        } else {
+            pending
+                .iter()
+                .filter(|(id, spec)| {
+                    spec.tp.is_none()
+                        && spec.compute.unwrap_or(cfg.compute) == key.compute
+                        && resolved.get(id).copied().flatten() == Some(key.store_hash)
+                })
+                .map(|(id, _)| *id)
+                .collect()
+        };
         let assignments =
             queue.take_for_batch(target, |id, _| compatible_ids.contains(&id));
         if assignments.is_empty() {
@@ -362,6 +407,7 @@ fn dispatcher_loop(
             store,
             assignments,
             target,
+            tp: front_spec.tp.clone(),
         };
         let form_secs = t_form.elapsed();
         {

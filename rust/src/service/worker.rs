@@ -105,6 +105,52 @@ pub(crate) fn worker_loop(
             .iter()
             .map(|a| (a.job, queue.trace_of(a.job)))
             .collect();
+        if batch.tp.is_some() {
+            // Tensor-parallel batch: this worker is the group leader and
+            // the walk runs over `net::tp` instead of a local engine. The
+            // completion/failure plumbing mirrors the plain path below.
+            let t_batch = Instant::now();
+            match crate::net::tp::run_batch_tp(&batch, &cfg, &cache, &disk, &rec, &jobs) {
+                Ok((metrics, sinks)) => {
+                    for (a, sink) in batch.assignments.iter().zip(&sinks) {
+                        queue.complete_slice(a.job, sink, a.len as u64);
+                    }
+                    let batch_ns = t_batch.elapsed().as_nanos() as u64;
+                    for &(job, trace) in &jobs {
+                        rec.span(Layer::Worker, "batch", job, trace, batch_ns, batch.rows() as u64);
+                        for (phase, secs) in &metrics.phases {
+                            if *secs <= 0.0 {
+                                continue;
+                            }
+                            rec.span(
+                                Layer::Engine,
+                                phase_span_name(phase),
+                                job,
+                                trace,
+                                (*secs * 1e9) as u64,
+                                0,
+                            );
+                        }
+                    }
+                    service_metrics.lock().unwrap().merge(&metrics);
+                }
+                Err(e) => {
+                    let msg = format!("tensor-parallel batch failed: {e}");
+                    for a in &batch.assignments {
+                        queue.fail_job(a.job, &msg);
+                    }
+                    for &(job, trace) in &jobs {
+                        rec.instant(Layer::Worker, "batch_failed", job, trace, 0);
+                    }
+                    let mut m = service_metrics.lock().unwrap();
+                    if matches!(e, Error::Fabric(_)) {
+                        m.add(keys::TP_MEMBER_FAILURES, 1);
+                    }
+                    m.add(keys::TP_JOBS, 1);
+                }
+            }
+            continue;
+        }
         let key: EngineKey = (cfg.engine, batch.key.compute, cfg.scaling);
         let engine = match engine_for(&mut engines, key, &cfg, &batch) {
             Ok(e) => e,
@@ -412,6 +458,7 @@ mod tests {
             store: store.clone(),
             assignments: vec![Assignment { job: 1, sample0: 0, len: 128 }],
             target: 128,
+            tp: None,
         };
         let mut rc = RunConfig::new(store.spec.clone());
         rc.compute = ComputePrecision::F64;
@@ -445,6 +492,7 @@ mod tests {
                 Assignment { job: 2, sample0: 96, len: 96 },
             ],
             target: 192,
+            tp: None,
         };
         let mut rc = RunConfig::new(store.spec.clone());
         rc.compute = ComputePrecision::F64;
@@ -482,6 +530,7 @@ mod tests {
                     len: 32,
                 }],
                 target: 32,
+                tp: None,
             };
             let (m, _) =
                 run_batch(&mut engine, &batch, &cfg, &DiskModel::unlimited(), None).unwrap();
@@ -505,6 +554,7 @@ mod tests {
             store: store.clone(),
             assignments: vec![Assignment { job: 1, sample0: 0, len: 64 }],
             target: 64,
+            tp: None,
         };
         let mut rc = RunConfig::new(store.spec.clone());
         rc.compute = ComputePrecision::F64;
@@ -550,6 +600,7 @@ mod tests {
             store: store.clone(),
             assignments: vec![Assignment { job: 1, sample0: 0, len: 64 }],
             target: 64,
+            tp: None,
         };
         let mut rc = RunConfig::new(store.spec.clone());
         rc.compute = ComputePrecision::F64;
@@ -582,6 +633,7 @@ mod tests {
             store: store.clone(),
             assignments: vec![Assignment { job: 1, sample0: 0, len: 1 }],
             target: 1,
+            tp: None,
         });
         d.close();
         assert!(d.pop().is_some());

@@ -47,6 +47,9 @@ pub enum Layer {
     Queue,
     Batcher,
     Worker,
+    /// Tensor-parallel collectives (group setup, env broadcast, partial
+    /// gather) — see `docs/TENSOR_PARALLEL.md`.
+    Tp,
     Engine,
     Sink,
 }
@@ -60,6 +63,7 @@ impl Layer {
             Layer::Queue => "queue",
             Layer::Batcher => "batcher",
             Layer::Worker => "worker",
+            Layer::Tp => "tp",
             Layer::Engine => "engine",
             Layer::Sink => "sink",
         }
@@ -76,7 +80,8 @@ impl Layer {
             "worker" => 6,
             "engine" => 7,
             "sink" => 8,
-            _ => 9,
+            "tp" => 9,
+            _ => 10,
         }
     }
 }

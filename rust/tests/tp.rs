@@ -1,0 +1,268 @@
+//! Fleet tensor-parallel integration: a 2-member TP group over real
+//! loopback sockets, formed by the router from pushed shards, must
+//! produce a sample sink byte-identical to the same job run serially on
+//! one backend (`docs/TENSOR_PARALLEL.md` § Bit identity). Also proves
+//! the failure contract: unregistered or incomplete groups and down
+//! members refuse typed — TP jobs never spill over and never hang.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastmps::config::{ComputePrecision, NetConfig, Preset, RouterConfig, ServiceConfig};
+use fastmps::io::{manifest_hash_at, GammaStore, StoreCodec, StorePrecision};
+use fastmps::net::frame;
+use fastmps::net::{Client, NetServer};
+use fastmps::router::{rendezvous, HealthState, Router};
+use fastmps::service::{JobSpec, TpGroup};
+use fastmps::util::json::Json;
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastmps-ittp-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn make_store(root: &Path) -> (Arc<GammaStore>, PathBuf) {
+    let dir = root.join("store");
+    let mut spec = Preset::Jiuzhang2.scaled_spec(77);
+    spec.m = 6;
+    spec.chi_cap = 10;
+    spec.decay_k = 0.0;
+    spec.displacement_sigma = 0.0;
+    let store =
+        Arc::new(GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap());
+    (store, dir)
+}
+
+fn backend_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        n2_micro: 32,
+        target_batch: Some(256),
+        compute: ComputePrecision::F32,
+        linger_ms: 2,
+        ..Default::default()
+    }
+}
+
+fn backend_net(root: &Path, i: usize) -> NetConfig {
+    NetConfig {
+        addr: "127.0.0.1:0".into(),
+        push_dir: Some(root.join(format!("pushed{i}"))),
+        ..Default::default()
+    }
+}
+
+fn loopback_net() -> NetConfig {
+    NetConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    }
+}
+
+fn router_cfg(backends: Vec<String>) -> RouterConfig {
+    RouterConfig {
+        backends,
+        probe_interval_ms: 30,
+        degraded_after: 1,
+        down_after: 2,
+        backoff_base_ms: 1,
+        backoff_cap_ms: 4,
+        jitter_ms: 0,
+        ..Default::default()
+    }
+}
+
+/// `run.counters.<key>` of a metrics JSON.
+fn counter(metrics: &Json, key: &str) -> f64 {
+    metrics
+        .get("run")
+        .and_then(|r| r.get("counters"))
+        .and_then(|c| c.get(key))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0)
+}
+
+fn tp_request(base: u64, of: usize, samples: u64) -> JobSpec {
+    let mut spec = JobSpec::by_key(base, samples);
+    spec.compute = Some(ComputePrecision::F32);
+    spec.tp = Some(TpGroup {
+        of,
+        base,
+        peers: Vec::new(),
+    });
+    spec
+}
+
+#[test]
+fn tp_group_sink_is_byte_identical_to_a_single_backend_run() {
+    let root = scratch("group");
+    let (store, store_dir) = make_store(&root);
+    let b1 = NetServer::start(backend_cfg(), backend_net(&root, 1)).unwrap();
+    let b2 = NetServer::start(backend_cfg(), backend_net(&root, 2)).unwrap();
+    let addrs = vec![b1.local_addr().to_string(), b2.local_addr().to_string()];
+    let router = Router::start(router_cfg(addrs), loopback_net()).unwrap();
+    let mut client = Client::connect(&router.local_addr().to_string(), &loopback_net()).unwrap();
+
+    // Serial baseline: the full store pushed through the router, the job
+    // run on whichever backend affinity chose.
+    let full = client.push_store(&store_dir, 4096).unwrap();
+    let base = manifest_hash_at(&store_dir).unwrap();
+    assert_eq!(full.key, base);
+    let mut serial = JobSpec::by_key(base, 96);
+    serial.compute = Some(ComputePrecision::F32);
+    let sid = client.submit(&serial).unwrap();
+    let sres = client.wait(sid, Duration::from_secs(60)).unwrap().unwrap();
+    assert_eq!(sres.result.get("status").unwrap().as_str(), Some("done"));
+    let baseline = sres.sink.clone().expect("serial run streams a sink");
+
+    // Shard the store 2-way and push both shards; the router records the
+    // group from the announced shard identities.
+    let s0 = root.join("shard0");
+    let s1 = root.join("shard1");
+    store.write_shard(&s0, 0, 2).unwrap();
+    store.write_shard(&s1, 1, 2).unwrap();
+    client.push_store(&s0, 4096).unwrap();
+    client.push_store(&s1, 4096).unwrap();
+    let m = client.metrics().unwrap();
+    assert_eq!(counter(&m, "router_shard_pushes"), 2.0);
+    assert_eq!(m.get("shard_groups").unwrap().as_f64(), Some(1.0));
+    assert_eq!(m.get("shard_groups_complete").unwrap().as_f64(), Some(1.0));
+
+    // The TP request (of + base, empty peers) resolves, runs over the
+    // socket collectives, and its sink is byte-identical to the serial
+    // run — same samples, same order, same bits.
+    let tid = client.submit(&tp_request(base, 2, 96)).unwrap();
+    let tres = client.wait(tid, Duration::from_secs(120)).unwrap().unwrap();
+    assert_eq!(
+        tres.result.get("status").unwrap().as_str(),
+        Some("done"),
+        "tp job failed: {:?}",
+        tres.result.get("error")
+    );
+    let tp_sink = tres.sink.clone().expect("tp run streams a sink");
+    assert_eq!(
+        frame::pack_sink(&baseline),
+        frame::pack_sink(&tp_sink),
+        "TP sink must be byte-identical to the serial baseline"
+    );
+
+    // Router- and backend-side evidence the group really ran sharded.
+    let m = client.metrics().unwrap();
+    assert_eq!(counter(&m, "router_tp_submits"), 1.0);
+    assert_eq!(counter(&m, "router_tp_rejects"), 0.0);
+    let m1 = b1.service().metrics_json();
+    let m2 = b2.service().metrics_json();
+    assert!(
+        counter(&m1, "tp_jobs") + counter(&m2, "tp_jobs") >= 2.0,
+        "leader and follower both count the group"
+    );
+    assert!(
+        counter(&m1, "tp_reduce_bytes") + counter(&m2, "tp_reduce_bytes") > 0.0,
+        "partial envs crossed the wire"
+    );
+    assert_eq!(counter(&m1, "tp_member_failures") + counter(&m2, "tp_member_failures"), 0.0);
+
+    drop(client);
+    drop(router);
+    drop(b1);
+    drop(b2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn tp_submit_refuses_typed_for_missing_groups_and_down_members() {
+    let root = scratch("refuse");
+    let (store, store_dir) = make_store(&root);
+    let b1 = NetServer::start(backend_cfg(), backend_net(&root, 1)).unwrap();
+    let b2 = NetServer::start(backend_cfg(), backend_net(&root, 2)).unwrap();
+    let addrs = vec![b1.local_addr().to_string(), b2.local_addr().to_string()];
+    let router = Router::start(router_cfg(addrs.clone()), loopback_net()).unwrap();
+    let mut client = Client::connect(&router.local_addr().to_string(), &loopback_net()).unwrap();
+    let base = manifest_hash_at(&store_dir).unwrap();
+
+    // No shards pushed: typed refusal, not a hang or a busy.
+    let err = client
+        .submit(&tp_request(base, 2, 64))
+        .expect_err("unregistered group must refuse");
+    assert!(!err.is_busy());
+    assert!(err.to_string().contains("no shard group"), "{err}");
+
+    // Half a group is still a typed refusal naming the missing rank.
+    let s0 = root.join("shard0");
+    store.write_shard(&s0, 0, 2).unwrap();
+    client.push_store(&s0, 4096).unwrap();
+    let err = client
+        .submit(&tp_request(base, 2, 64))
+        .expect_err("incomplete group must refuse");
+    assert!(err.to_string().contains("never pushed"), "{err}");
+
+    // A resolved peer list from a client is rejected — placement is the
+    // router's job.
+    let mut forged = tp_request(base, 2, 64);
+    if let Some(tp) = &mut forged.tp {
+        tp.peers.push(fastmps::service::TpPeer {
+            addr: addrs[0].clone(),
+            key: 1,
+        });
+    }
+    let err = client.submit(&forged).expect_err("forged peers must refuse");
+    assert!(err.to_string().contains("resolved peers"), "{err}");
+
+    // Complete the group, then kill the backend holding shard 0: once
+    // the prober marks it down the submit refuses typed instead of
+    // spilling the group onto backends without the shard.
+    let s1 = root.join("shard1");
+    store.write_shard(&s1, 1, 2).unwrap();
+    client.push_store(&s1, 4096).unwrap();
+    let k0 = manifest_hash_at(&s0).unwrap();
+    let victim = rendezvous::rank(k0, &addrs)[0];
+    let mut servers = vec![Some(b1), Some(b2)];
+    drop(servers[victim].take());
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        if router.health()[victim].1 == HealthState::Down {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "victim never marked down");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let err = client
+        .submit(&tp_request(base, 2, 64))
+        .expect_err("down member must refuse");
+    assert!(!err.is_busy());
+    assert!(
+        err.to_string().contains("spilling over"),
+        "refusal should explain the no-spillover rule: {err}"
+    );
+
+    let m = client.metrics().unwrap();
+    assert!(counter(&m, "router_tp_rejects") >= 4.0);
+    assert_eq!(counter(&m, "router_tp_submits"), 0.0);
+
+    drop(client);
+    drop(router);
+    drop(servers);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn backend_without_a_router_rejects_tp_requests_typed() {
+    let root = scratch("direct");
+    let (_, store_dir) = make_store(&root);
+    let b = NetServer::start(backend_cfg(), backend_net(&root, 1)).unwrap();
+    let mut client = Client::connect(&b.local_addr().to_string(), &loopback_net()).unwrap();
+    let base = manifest_hash_at(&store_dir).unwrap();
+    // A backend receiving a TP *request* (no peer list) cannot resolve
+    // it — that takes the routing tier's shard map.
+    let err = client
+        .submit(&tp_request(base, 2, 32))
+        .expect_err("direct TP request must refuse");
+    assert!(!err.is_busy());
+    assert!(err.to_string().contains("routing tier"), "{err}");
+    drop(client);
+    drop(b);
+    std::fs::remove_dir_all(&root).unwrap();
+}
