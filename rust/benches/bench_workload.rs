@@ -1,0 +1,115 @@
+//! Workload comparison micro-benchmark: full-chain sampling walks at
+//! d = 2 (qubit) vs the GBS physical dimension, through the same
+//! `WorkloadSpec` path the service uses — generation, per-site threshold
+//! draws, and the prepared-site step. Written to `BENCH_workload.json`.
+//!
+//! The point is to quantify what the workload abstraction buys: the
+//! qubit chain does d²/d² less contraction work per site, and nothing in
+//! the engine special-cases either workload.
+//!
+//! Run with `cargo bench --bench bench_workload` from `rust/`.
+
+use fastmps::config::{ComputePrecision, Preset, ScalingMode};
+use fastmps::mps::qubit::QubitSpec;
+use fastmps::mps::workload::WorkloadSpec;
+use fastmps::sampler::native::NativeEngine;
+use fastmps::sampler::{boundary_env, PreparedSite};
+use fastmps::util::bench;
+use fastmps::util::json::Json;
+
+const M: usize = 24;
+const CHI: usize = 64;
+const N: usize = 128;
+
+fn run_workload(spec: &WorkloadSpec, reps: usize) -> Json {
+    let mps = spec.generate().unwrap();
+    let mut eng = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 1);
+    let preps: Vec<PreparedSite> = mps
+        .sites
+        .iter()
+        .map(|s| PreparedSite::prepare(s, eng.prep_key()))
+        .collect();
+    let mut samples = Vec::new();
+    let (mean, std) = bench::time(2, reps, || {
+        // One full walk: threshold draws are part of the measurement
+        // rule, so they stay inside the timed region.
+        let mut env = boundary_env(N);
+        for (i, prep) in preps.iter().enumerate() {
+            let th = spec.thresholds(i, 0, N);
+            eng.step_prepared(&mut env, prep, &th, None, &mut samples)
+                .unwrap();
+        }
+    });
+    let steps_per_sec = if mean > 0.0 {
+        spec.m() as f64 / mean
+    } else {
+        0.0
+    };
+    let samples_per_sec = steps_per_sec * N as f64;
+    bench::row(&[
+        ("workload", spec.tag().to_string()),
+        ("d", format!("{}", spec.d())),
+        ("m", format!("{}", spec.m())),
+        ("chi", format!("{CHI}")),
+        ("n", format!("{N}")),
+        ("steps_per_sec", format!("{steps_per_sec:.1}")),
+        ("samples_per_sec", format!("{samples_per_sec:.0}")),
+        ("std_pct", format!("{:.1}", 100.0 * std / mean.max(1e-12))),
+    ]);
+    Json::obj(vec![
+        ("workload", Json::Str(spec.tag().into())),
+        ("d", Json::Num(spec.d() as f64)),
+        ("m", Json::Num(spec.m() as f64)),
+        ("chi", Json::Num(CHI as f64)),
+        ("n", Json::Num(N as f64)),
+        ("steps_per_sec", Json::Num(steps_per_sec)),
+        ("samples_per_sec", Json::Num(samples_per_sec)),
+    ])
+}
+
+fn main() {
+    bench::header(
+        "workload",
+        "full-chain walk at d=2 (qubit) vs the GBS physical dimension",
+    );
+    let mut gbs = Preset::Jiuzhang2.scaled_spec(42);
+    gbs.m = M;
+    gbs.chi_cap = CHI;
+    gbs.decay_k = 0.0;
+    gbs.displacement_sigma = 0.0;
+    let gbs_d = gbs.d;
+    let specs: [WorkloadSpec; 2] = [
+        gbs.into(),
+        QubitSpec::new("bench-qubit", M, CHI, 42).into(),
+    ];
+
+    let t0 = std::time::Instant::now();
+    let results: Vec<Json> = specs.iter().map(|s| run_workload(s, 20)).collect();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let rate = |i: usize| {
+        results[i]
+            .get("steps_per_sec")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    let (gbs_rate, qubit_rate) = (rate(0), rate(1));
+    let speedup = if gbs_rate > 0.0 { qubit_rate / gbs_rate } else { 0.0 };
+    bench::paper(&format!(
+        "workload trait: same engine, d={gbs_d}→2 shrinks per-site work; qubit/gbs step ratio {speedup:.2}"
+    ));
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("workload-dimension".into())),
+        ("measured", Json::Bool(true)),
+        ("wall_secs", Json::Num(wall)),
+        ("gbs_steps_per_sec", Json::Num(gbs_rate)),
+        ("qubit_steps_per_sec", Json::Num(qubit_rate)),
+        ("qubit_over_gbs", Json::Num(speedup)),
+        ("points", Json::Arr(results)),
+    ]);
+    std::fs::write("../BENCH_workload.json", out.pretty())
+        .or_else(|_| std::fs::write("BENCH_workload.json", out.pretty()))
+        .unwrap();
+    println!("  wrote BENCH_workload.json");
+}

@@ -14,6 +14,8 @@ use crate::router::Router;
 use crate::coordinator::{data_parallel, model_parallel, tensor_parallel};
 use crate::io::{GammaStore, StoreCodec, StorePrecision};
 use crate::mps::gbs::GbsSpec;
+use crate::mps::qubit::QubitSpec;
+use crate::mps::workload::{WorkloadKind, WorkloadSpec};
 use crate::perfmodel;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
@@ -23,10 +25,13 @@ const HELP: &str = "fastmps — multi-level parallel MPS sampling (FastMPS repro
 USAGE: fastmps <command> [--options]
 
 COMMANDS:
-  gen-data    Generate a synthetic GBS MPS store
-              --preset <jiuzhang2|jiuzhang3h|bm216h|bm288|m8176> | --m/--chi/--d/--asp
-              --out DIR [--precision f64|f32|f16] [--codec raw|lz]
-              [--seed N] [--full-scale] [--fixed-chi] [--decay K] [--sigma S]
+  gen-data    Generate a synthetic MPS store (see docs/WORKLOADS.md)
+              [--workload gbs|qubit] --out DIR
+              [--precision f64|f32|f16] [--codec raw|lz] [--seed N]
+              gbs:   --preset <jiuzhang2|jiuzhang3h|bm216h|bm288|m8176>
+                     | --m/--chi/--d/--asp
+                     [--full-scale] [--fixed-chi] [--decay K] [--sigma S]
+              qubit: --m/--chi [--bias B]  (d = 2, fixed χ plan)
   sample      Run the sampler on a store
               --data DIR --samples N [--scheme dp|mp|tp] [--engine xla|native]
               [--p1 N] [--p2 N] [--single-site] [--n1 N] [--n2 N]
@@ -79,6 +84,9 @@ COMMANDS:
               --samples N
               [--sample-base B] [--compute C] [--tag T] [--wait]
               [--timeout-s S] [--poll-ms N] [--tp N] [--json]
+              [--workload gbs|qubit] (declare the store's measurement
+              model; the server rejects the job if its manifest
+              disagrees — see docs/WORKLOADS.md)
               --tp N runs the job as an N-way tensor-parallel group
               (requires --key naming the unsharded store and a router
               that has its shard group registered; f32 compute only).
@@ -184,18 +192,31 @@ fn spec_from_args(args: &Args) -> Result<GbsSpec> {
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
-    let spec = spec_from_args(args)?;
+    let spec: WorkloadSpec = match WorkloadKind::parse(&args.str_or("workload", "gbs"))? {
+        WorkloadKind::Gbs => spec_from_args(args)?.into(),
+        WorkloadKind::Qubit => {
+            let m = args.usize_or("m", 64)?;
+            let chi = args.usize_or("chi", 64)?;
+            let seed = args.u64_or("seed", 1234)?;
+            let mut q = QubitSpec::new("custom-qubit", m, chi, seed);
+            if let Some(b) = args.f64_opt("bias")? {
+                q.bias = b;
+            }
+            q.into()
+        }
+    };
     let out = PathBuf::from(args.req("out")?);
     let precision = StorePrecision::parse(&args.str_or("precision", "f16"))?;
     let codec = StoreCodec::parse(&args.str_or("codec", "raw"))?;
     args.finish()?;
     let t0 = std::time::Instant::now();
-    let store = GammaStore::create(&out, &spec, precision, codec)?;
+    let store = GammaStore::create(&out, spec.clone(), precision, codec)?;
     println!(
-        "wrote {} sites (χ cap {}, d {}, {}) to {} in {} — {}",
-        spec.m,
-        spec.chi_cap,
-        spec.d,
+        "wrote {} {} sites (χ cap {}, d {}, {}) to {} in {} — {}",
+        spec.m(),
+        spec.tag(),
+        spec.chi_cap(),
+        spec.d(),
         precision.as_str(),
         out.display(),
         crate::util::human_secs(t0.elapsed().as_secs_f64()),
@@ -315,7 +336,7 @@ fn cmd_perf_model(args: &Args) -> Result<()> {
     let w_fast = perfmodel::Workload {
         m: spec.m,
         chi: spec.chi_cap as u64,
-        d: 4,
+        d: spec.d as u64,
         n_total: 10_000_000,
         n1: n1 as u64,
         scalar_bytes: 2,
@@ -328,7 +349,13 @@ fn cmd_perf_model(args: &Args) -> Result<()> {
     let t_mp = perfmodel::time_model_parallel(&w_base, &perfmodel::A100_FP64, &net);
     let t_dp = perfmodel::time_data_parallel(&w_fast, &perfmodel::A100_TF32, &net, gpus);
     let t_dp1 = perfmodel::time_data_parallel(&w_fast, &perfmodel::A100_TF32, &net, 1);
-    println!("preset {} (M={}, χ=10⁴, d=4, N=10⁷, A100 constants)", preset.name(), spec.m);
+    println!(
+        "preset {} (M={}, χ={}, d={}, N=10⁷, A100 constants)",
+        preset.name(),
+        spec.m,
+        spec.chi_cap,
+        spec.d
+    );
     println!(
         "  baseline [19] model-parallel, {} GPUs (FP64):  {:8.1} min",
         spec.m,
@@ -372,13 +399,20 @@ fn cmd_info(args: &Args) -> Result<()> {
     args.finish()?;
     let store = GammaStore::open(&data)?;
     let plan = store.spec.chi_plan();
+    // GBS-specific knobs only exist on GBS stores.
+    let extra = store
+        .spec
+        .as_gbs()
+        .map(|g| format!(" asp={}", g.asp))
+        .unwrap_or_default();
     println!(
-        "{}: M={} d={} χcap={} asp={} precision={} codec={} bytes={}",
-        store.spec.name,
-        store.spec.m,
-        store.spec.d,
-        store.spec.chi_cap,
-        store.spec.asp,
+        "{} [{}]: M={} d={} χcap={}{} precision={} codec={} bytes={}",
+        store.spec.name(),
+        store.spec.tag(),
+        store.spec.m(),
+        store.spec.d(),
+        store.spec.chi_cap(),
+        extra,
         store.precision.as_str(),
         store.codec.as_str(),
         crate::util::human_bytes(store.total_bytes())
@@ -391,7 +425,7 @@ fn cmd_info(args: &Args) -> Result<()> {
         store
             .bonds
             .iter()
-            .map(|&(l, r)| (l * r * store.spec.d) as u64)
+            .map(|&(l, r)| (l * r * store.spec.d()) as u64)
             .sum::<u64>()
     );
     Ok(())
@@ -755,6 +789,9 @@ fn job_spec_from_args(args: &Args) -> Result<crate::service::JobSpec> {
         Some(c) => Some(ComputePrecision::parse(c)?),
     };
     spec.tag = args.str_or("tag", "");
+    // Unknown names die here with the valid set in the message, before
+    // anything is sent (satisfying `submit --workload bogus` locally).
+    spec.workload = WorkloadKind::parse(&args.str_or("workload", "gbs"))?;
     let tp = args.usize_or("tp", 1)?;
     if tp >= 2 {
         // A TP *request*: `of` and the full store's key; the router
@@ -865,8 +902,11 @@ fn cmd_jobs(args: &Args) -> Result<()> {
         }
         for j in jobs {
             println!(
-                "job {}  {}  {}/{}",
+                "job {}  {}  {}  {}/{}",
                 j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                // Pre-workload servers don't report the column; every job
+                // they run is GBS by construction.
+                j.get("workload").and_then(|v| v.as_str()).unwrap_or("gbs"),
                 j.get("status").and_then(|v| v.as_str()).unwrap_or("?"),
                 j.get("done").and_then(|v| v.as_f64()).unwrap_or(0.0),
                 j.get("samples").and_then(|v| v.as_f64()).unwrap_or(0.0),
@@ -888,7 +928,8 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     }
     for (stem, j) in jobs {
         println!(
-            "{stem}  {}  {}/{}",
+            "{stem}  {}  {}  {}/{}",
+            j.get("workload").and_then(|v| v.as_str()).unwrap_or("gbs"),
             j.get("status").and_then(|v| v.as_str()).unwrap_or("?"),
             j.get("done").and_then(|v| v.as_f64()).unwrap_or(0.0),
             j.get("samples").and_then(|v| v.as_f64()).unwrap_or(0.0),
@@ -1094,6 +1135,44 @@ mod tests {
         )))
         .unwrap();
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn qubit_gen_info_sample_flow() {
+        let dir = std::env::temp_dir().join(format!("fastmps-cli-q-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap();
+        run_cli(&argv(&format!(
+            "gen-data --workload qubit --m 6 --chi 8 --out {d}"
+        )))
+        .unwrap();
+        run_cli(&argv(&format!("info --data {d}"))).unwrap();
+        run_cli(&argv(&format!(
+            "sample --data {d} --samples 64 --n1 32 --n2 16 --compute f64 --json"
+        )))
+        .unwrap();
+        // GBS-only generator knobs are rejected on the qubit path.
+        assert!(run_cli(&argv(&format!(
+            "gen-data --workload qubit --m 4 --chi 4 --sigma 0.5 --out {d}"
+        )))
+        .is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_workload_rejected_with_valid_names() {
+        // Dies locally in arg parsing — no server involved.
+        let e = run_cli(&argv(
+            "submit --connect 127.0.0.1:1 --key ff --samples 5 --workload ising",
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("unknown workload"), "{e}");
+        assert!(e.contains("gbs, qubit"), "{e}");
+        let e = run_cli(&argv("gen-data --workload ising --out /tmp/x"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("valid workloads"), "{e}");
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::comm::NetPreset;
 use crate::io::{StoreCodec, StorePrecision};
 use crate::linalg::GemmSplit;
 use crate::mps::gbs::GbsSpec;
+use crate::mps::workload::WorkloadSpec;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -119,7 +120,7 @@ impl EngineKind {
 /// Full run configuration for the coordinators.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
-    pub spec: GbsSpec,
+    pub spec: WorkloadSpec,
     /// Total samples N.
     pub n_samples: u64,
     /// Macro batch size N₁ (per worker per round).
@@ -163,8 +164,10 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
-    /// A small, fast default configuration around `spec`.
-    pub fn new(spec: GbsSpec) -> RunConfig {
+    /// A small, fast default configuration around `spec` (any workload —
+    /// `GbsSpec`/`QubitSpec` convert implicitly).
+    pub fn new(spec: impl Into<WorkloadSpec>) -> RunConfig {
+        let spec = spec.into();
         RunConfig {
             n_samples: 4096,
             n1_macro: 1024,
@@ -185,7 +188,7 @@ impl RunConfig {
             disk_bw: None,
             env_f16: false,
             vdevice_flops: None,
-            seed: spec.seed,
+            seed: spec.seed(),
             spec,
         }
     }
@@ -210,13 +213,13 @@ impl RunConfig {
         if self.p1 == 0 || self.p2 == 0 {
             return Err(Error::config("p1/p2 must be ≥ 1"));
         }
-        if self.spec.m == 0 || self.spec.d < 2 {
+        if self.spec.m() == 0 || self.spec.d() < 2 {
             return Err(Error::config("need M ≥ 1 sites and d ≥ 2"));
         }
-        if !self.compute.admissible_for(self.spec.m) {
+        if !self.compute.admissible_for(self.spec.m()) {
             return Err(Error::config(format!(
                 "experimental f16 compute requires M < 500 (got M = {}; §3.3.1)",
-                self.spec.m
+                self.spec.m()
             )));
         }
         Ok(())
@@ -224,10 +227,11 @@ impl RunConfig {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("dataset", Json::Str(self.spec.name.clone())),
-            ("m", Json::Num(self.spec.m as f64)),
-            ("d", Json::Num(self.spec.d as f64)),
-            ("chi_cap", Json::Num(self.spec.chi_cap as f64)),
+            ("dataset", Json::Str(self.spec.name().to_string())),
+            ("workload", Json::Str(self.spec.tag().into())),
+            ("m", Json::Num(self.spec.m() as f64)),
+            ("d", Json::Num(self.spec.d() as f64)),
+            ("chi_cap", Json::Num(self.spec.chi_cap() as f64)),
             ("n_samples", Json::Num(self.n_samples as f64)),
             ("n1_macro", Json::Num(self.n1_macro as f64)),
             ("n2_micro", Json::Num(self.n2_micro as f64)),

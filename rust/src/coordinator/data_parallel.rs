@@ -108,9 +108,8 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>, probe_sites: &[usize]) -> R
     cfg.validate()?;
     let p1 = cfg.p1;
     let plan = BatchPlan::build(cfg.n_samples, p1, cfg.n1_macro, cfg.n2_micro)?;
-    let m = store.spec.m;
+    let m = store.spec.m();
     let spec = store.spec.clone();
-    let displaced = spec.displacement_sigma != 0.0;
     let disk = match cfg.disk_bw {
         Some(bw) => DiskModel::throttled(bw, false),
         None => DiskModel::unlimited(),
@@ -133,7 +132,7 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>, probe_sites: &[usize]) -> R
                         let rank = ep.rank;
                         let mut engine = EngineBox::build(cfg)?;
                         let mut metrics = Metrics::new();
-                        let mut sink = SampleSink::new(m, spec.d, 4);
+                        let mut sink = SampleSink::new(m, spec.d(), spec.sink_max_gap());
                         let mut probes: Vec<(usize, Vec<(f64, f64)>)> = Vec::new();
 
                         // Rank 0 owns the store stream: one walk per round.
@@ -194,13 +193,11 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>, probe_sites: &[usize]) -> R
                                             b.sample0 + a as u64,
                                             z - a,
                                         );
-                                        let mus = displaced.then(|| {
-                                            spec.displacement_draws(
-                                                site_idx,
-                                                b.sample0 + a as u64,
-                                                z - a,
-                                            )
-                                        });
+                                        let mus = spec.displacements(
+                                            site_idx,
+                                            b.sample0 + a as u64,
+                                            z - a,
+                                        );
                                         let mut s = Vec::new();
                                         let t0 = std::time::Instant::now();
                                         engine.step_site(
@@ -263,7 +260,7 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>, probe_sites: &[usize]) -> R
 
     let wall = wall0.elapsed().as_secs_f64();
     let mut metrics = Metrics::new();
-    let mut sink = SampleSink::new(m, spec.d, 4);
+    let mut sink = SampleSink::new(m, spec.d(), spec.sink_max_gap());
     let mut vtime: f64 = 0.0;
     let mut dead_rows = 0u64;
     let mut env_probes = Vec::new();

@@ -52,9 +52,8 @@ fn unpack_env(buf: &[f32]) -> Result<SplitBuf> {
 /// Run the baseline: `p = M` ranks, macro-batch pipeline.
 pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>) -> Result<RunReport> {
     cfg.validate()?;
-    let m = store.spec.m;
+    let m = store.spec.m();
     let spec = store.spec.clone();
-    let displaced = spec.displacement_sigma != 0.0;
     let plan = BatchPlan::build(cfg.n_samples, 1, cfg.n1_macro, cfg.n2_micro)?;
     let batches = plan.for_worker(0);
     let disk = match cfg.disk_bw {
@@ -77,7 +76,7 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>) -> Result<RunReport> {
                     let rank = ep.rank; // rank == site index
                     let mut engine = EngineBox::build(cfg)?;
                     let mut metrics = Metrics::new();
-                    let mut sink = SampleSink::new(m, spec.d, 0);
+                    let mut sink = SampleSink::new(m, spec.d(), 0);
 
                     // Startup: every rank reads its own Γ concurrently —
                     // the Fig. 2 "disk contention may occur" moment.
@@ -101,8 +100,7 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>) -> Result<RunReport> {
                         };
 
                         let th = spec.thresholds(rank, b.sample0, b.len);
-                        let mus = displaced
-                            .then(|| spec.displacement_draws(rank, b.sample0, b.len));
+                        let mus = spec.displacements(rank, b.sample0, b.len);
                         let mut samples = Vec::new();
                         let t0 = std::time::Instant::now();
                         engine.step(&mut env, &site, &th, mus.as_deref(), &mut samples)?;
@@ -138,7 +136,7 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>) -> Result<RunReport> {
 
     let wall = wall0.elapsed().as_secs_f64();
     let mut metrics = Metrics::new();
-    let mut sink = SampleSink::new(m, spec.d, 0);
+    let mut sink = SampleSink::new(m, spec.d(), 0);
     let mut vtime: f64 = 0.0;
     let mut dead_rows = 0;
     for r in results {

@@ -356,9 +356,9 @@ impl TpWorker<'_> {
 pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>) -> Result<RunReport> {
     cfg.validate()?;
     let p2 = cfg.p2;
-    let m = store.spec.m;
+    let m = store.spec.m();
     let spec = store.spec.clone();
-    if spec.displacement_sigma != 0.0 {
+    if spec.has_displacement() {
         return Err(Error::config(
             "tensor-parallel path does not support displacement yet (use p2=1)",
         ));
@@ -388,7 +388,7 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>) -> Result<RunReport> {
                         cfg,
                         metrics: Metrics::new(),
                     };
-                    let mut sink = SampleSink::new(m, spec.d, 4);
+                    let mut sink = SampleSink::new(m, spec.d(), spec.sink_max_gap());
                     for b in &batches {
                         sink.reset_walk();
                         let mut env = TpEnv::Full(boundary_mat(b.len));
@@ -436,7 +436,7 @@ pub fn run(cfg: &RunConfig, store: &Arc<GammaStore>) -> Result<RunReport> {
 
     let wall = wall0.elapsed().as_secs_f64();
     let mut metrics = Metrics::new();
-    let mut sink = SampleSink::new(m, spec.d, 4);
+    let mut sink = SampleSink::new(m, spec.d(), spec.sink_max_gap());
     let mut vtime: f64 = 0.0;
     for r in results {
         let (wm, ws, wv) = r?;
@@ -556,13 +556,13 @@ mod tests {
     fn displacement_rejected() {
         let (store, dir) = test_store("disp", 4, 8);
         let mut cfg = tp_cfg(&store, 2, true, 16);
-        let mut spec2 = store.spec.clone();
-        spec2.displacement_sigma = 0.5;
+        let mut gbs = store.spec.as_gbs().unwrap().clone();
+        gbs.displacement_sigma = 0.5;
         let store2 = Arc::new(GammaStore {
-            spec: spec2,
+            spec: (&gbs).into(),
             ..(*store).clone()
         });
-        cfg.spec.displacement_sigma = 0.5;
+        cfg.spec = gbs.into();
         assert!(run(&cfg, &store2).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }

@@ -17,6 +17,8 @@ use std::fs;
 use std::path::{Path, PathBuf};
 
 use crate::mps::gbs::GbsSpec;
+use crate::mps::qubit::QubitSpec;
+use crate::mps::workload::{WorkloadKind, WorkloadSpec};
 use crate::mps::{Mps, Site};
 use crate::tensor::{Complex, Tensor3, C64};
 use crate::util::compress;
@@ -122,7 +124,7 @@ pub fn shard_range(y: usize, k: usize, g: usize) -> (usize, usize) {
 #[derive(Debug, Clone)]
 pub struct GammaStore {
     pub dir: PathBuf,
-    pub spec: GbsSpec,
+    pub spec: WorkloadSpec,
     pub precision: StorePrecision,
     pub codec: StoreCodec,
     /// (χ_l, χ_r) per site.
@@ -138,16 +140,18 @@ impl GammaStore {
     /// only one site is in memory at a time).
     pub fn create(
         dir: &Path,
-        spec: &GbsSpec,
+        spec: impl Into<WorkloadSpec>,
         precision: StorePrecision,
         codec: StoreCodec,
     ) -> Result<GammaStore> {
+        let spec: WorkloadSpec = spec.into();
         fs::create_dir_all(dir).map_err(|e| Error::io(dir.display(), e))?;
         let plan = spec.chi_plan();
-        let mut bonds = Vec::with_capacity(spec.m);
-        let mut blob_bytes = Vec::with_capacity(spec.m);
+        let m = spec.m();
+        let mut bonds = Vec::with_capacity(m);
+        let mut blob_bytes = Vec::with_capacity(m);
         let mut chi_l = 1usize;
-        for i in 0..spec.m {
+        for i in 0..m {
             let site = spec.generate_site(i, chi_l, &plan)?;
             let blob = encode_site(&site.gamma, precision, codec)?;
             let path = site_path(dir, i);
@@ -158,7 +162,7 @@ impl GammaStore {
         }
         let store = GammaStore {
             dir: dir.to_path_buf(),
-            spec: spec.clone(),
+            spec,
             precision,
             codec,
             bonds,
@@ -172,7 +176,7 @@ impl GammaStore {
     /// Write an already-materialized MPS (tests / conversions).
     pub fn create_from_mps(
         dir: &Path,
-        spec: &GbsSpec,
+        spec: impl Into<WorkloadSpec>,
         mps: &Mps,
         precision: StorePrecision,
         codec: StoreCodec,
@@ -189,7 +193,7 @@ impl GammaStore {
         }
         let store = GammaStore {
             dir: dir.to_path_buf(),
-            spec: spec.clone(),
+            spec: spec.into(),
             precision,
             codec,
             bonds,
@@ -242,7 +246,7 @@ impl GammaStore {
                     .ok_or_else(|| Error::format("blob size"))
             })
             .collect::<Result<_>>()?;
-        if bonds.len() != spec.m || blob_bytes.len() != spec.m {
+        if bonds.len() != spec.m() || blob_bytes.len() != spec.m() {
             return Err(Error::format("manifest site count mismatch"));
         }
         // Optional TP shard section; absent on every unsharded store
@@ -250,7 +254,7 @@ impl GammaStore {
         // *read* it — unknown manifest keys are ignored on both sides).
         let shard = match j.get("shard") {
             None | Some(Json::Null) => None,
-            Some(sj) => Some(shard_from_json(sj, spec.m)?),
+            Some(sj) => Some(shard_from_json(sj, spec.m())?),
         };
         if let Some(s) = &shard {
             for (i, &(l, _)) in bonds.iter().enumerate() {
@@ -334,9 +338,10 @@ impl GammaStore {
         }
         let base = self.manifest_hash()?;
         fs::create_dir_all(dir).map_err(|e| Error::io(dir.display(), e))?;
-        let mut bonds = Vec::with_capacity(self.spec.m);
-        let mut blob_bytes = Vec::with_capacity(self.spec.m);
-        for i in 0..self.spec.m {
+        let m = self.spec.m();
+        let mut bonds = Vec::with_capacity(m);
+        let mut blob_bytes = Vec::with_capacity(m);
+        for i in 0..m {
             let site = self.load_site(i)?;
             let (chi_l, chi_r) = self.bonds[i];
             let (lo, hi) = shard_range(chi_r, index, of);
@@ -366,7 +371,7 @@ impl GammaStore {
     }
 
     pub fn num_sites(&self) -> usize {
-        self.spec.m
+        self.spec.m()
     }
 
     /// FNV-1a hash of the manifest bytes — the identity key the service's
@@ -389,13 +394,13 @@ impl GammaStore {
     /// Load one site. The Λ vector is reconstructed as all-ones (the store
     /// keeps right-canonical states; a future version can persist Λ).
     pub fn load_site(&self, i: usize) -> Result<Site> {
-        if i >= self.spec.m {
-            return Err(Error::shape(format!("site {i} ≥ M={}", self.spec.m)));
+        if i >= self.spec.m() {
+            return Err(Error::shape(format!("site {i} ≥ M={}", self.spec.m())));
         }
         let path = site_path(&self.dir, i);
         let blob = fs::read(&path).map_err(|e| Error::io(path.display(), e))?;
         let (chi_l, chi_r) = self.bonds[i];
-        let gamma = decode_site(&blob, chi_l, chi_r, self.spec.d, self.precision, self.codec)?;
+        let gamma = decode_site(&blob, chi_l, chi_r, self.spec.d(), self.precision, self.codec)?;
         Ok(Site {
             lambda: vec![1.0; chi_r],
             gamma,
@@ -410,7 +415,7 @@ impl GammaStore {
     /// (Does not decode blob contents — `load_site` still validates
     /// shapes and codec framing on first use.)
     pub fn verify_blobs(&self) -> Result<()> {
-        for i in 0..self.spec.m {
+        for i in 0..self.spec.m() {
             let path = site_path(&self.dir, i);
             let meta = fs::metadata(&path).map_err(|e| Error::io(path.display(), e))?;
             if meta.len() != self.blob_bytes[i] {
@@ -426,12 +431,12 @@ impl GammaStore {
 
     /// Load the full chain (small scales only).
     pub fn load_all(&self) -> Result<Mps> {
-        let sites = (0..self.spec.m)
+        let sites = (0..self.spec.m())
             .map(|i| self.load_site(i))
             .collect::<Result<Vec<_>>>()?;
         let mps = Mps {
             sites,
-            d: self.spec.d,
+            d: self.spec.d(),
         };
         mps.check()?;
         Ok(mps)
@@ -897,7 +902,26 @@ fn shard_from_json(j: &Json, m: usize) -> Result<ShardInfo> {
     })
 }
 
-fn spec_to_json(s: &GbsSpec) -> Json {
+/// Spec echo in the manifest. The `workload` tag is the dispatch field:
+/// **omitted** for GBS (so GBS manifests stay byte-identical to pre-workload
+/// builds and keep their content keys), written explicitly for every other
+/// workload — which makes a non-GBS manifest's bytes, and therefore its
+/// FNV content key, impossible to collide with any GBS store's.
+pub(crate) fn spec_to_json(s: &WorkloadSpec) -> Json {
+    match s {
+        WorkloadSpec::Gbs(g) => gbs_spec_to_json(g),
+        WorkloadSpec::Qubit(q) => Json::obj(vec![
+            ("workload", Json::Str(WorkloadKind::Qubit.as_str().into())),
+            ("name", Json::Str(q.name.clone())),
+            ("m", Json::Num(q.m as f64)),
+            ("chi_cap", Json::Num(q.chi_cap as f64)),
+            ("bias", Json::Num(q.bias)),
+            ("seed", Json::Num(q.seed as f64)),
+        ]),
+    }
+}
+
+fn gbs_spec_to_json(s: &GbsSpec) -> Json {
     Json::obj(vec![
         ("name", Json::Str(s.name.clone())),
         ("m", Json::Num(s.m as f64)),
@@ -916,7 +940,38 @@ fn spec_to_json(s: &GbsSpec) -> Json {
     ])
 }
 
-fn spec_from_json(j: &Json) -> Result<GbsSpec> {
+pub(crate) fn spec_from_json(j: &Json) -> Result<WorkloadSpec> {
+    // Absent tag ⇒ GBS: every pre-workload manifest parses unchanged.
+    let kind = match j.get("workload") {
+        None | Some(Json::Null) => WorkloadKind::Gbs,
+        Some(v) => WorkloadKind::parse(
+            v.as_str()
+                .ok_or_else(|| Error::format("spec.workload not a string"))?,
+        )?,
+    };
+    match kind {
+        WorkloadKind::Gbs => Ok(WorkloadSpec::Gbs(gbs_spec_from_json(j)?)),
+        WorkloadKind::Qubit => Ok(WorkloadSpec::Qubit(QubitSpec {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::format("spec.name"))?
+                .to_string(),
+            m: j.req("m")?.as_usize().ok_or_else(|| Error::format("spec.m"))?,
+            chi_cap: j
+                .req("chi_cap")?
+                .as_usize()
+                .ok_or_else(|| Error::format("spec.chi_cap"))?,
+            bias: j.get("bias").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            seed: j
+                .req("seed")?
+                .as_f64()
+                .ok_or_else(|| Error::format("spec.seed"))? as u64,
+        })),
+    }
+}
+
+fn gbs_spec_from_json(j: &Json) -> Result<GbsSpec> {
     Ok(GbsSpec {
         name: j
             .req("name")?
@@ -1018,10 +1073,45 @@ mod tests {
         assert_eq!(opened.precision, StorePrecision::F32);
         assert_eq!(opened.codec, StoreCodec::Lz);
         assert_eq!(opened.bonds, created.bonds);
-        assert_eq!(opened.spec.m, s.m);
-        assert_eq!(opened.spec.seed, s.seed);
+        assert_eq!(opened.spec.m(), s.m);
+        assert_eq!(opened.spec.seed(), s.seed);
+        assert_eq!(opened.spec.tag(), "gbs");
         let site = opened.load_site(2).unwrap();
         assert_eq!(site.chi_l(), created.bonds[2].0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn qubit_store_roundtrips_with_manifest_tag() {
+        let dir = tmpdir("qubit");
+        let q = QubitSpec::new("qstore", 5, 6, 42);
+        GammaStore::create(&dir, &q, StorePrecision::F64, StoreCodec::Raw).unwrap();
+        let opened = GammaStore::open(&dir).unwrap();
+        assert_eq!(opened.spec.tag(), "qubit");
+        assert_eq!(
+            (opened.spec.m(), opened.spec.d(), opened.spec.seed()),
+            (5, 2, 42)
+        );
+        let text = fs::read_to_string(dir.join("manifest.json")).unwrap();
+        assert!(text.contains("\"workload\""), "manifest carries the tag");
+        let mem = crate::mps::workload::WorkloadSpec::from(&q).generate().unwrap();
+        let loaded = opened.load_all().unwrap();
+        assert_eq!(loaded.d, 2);
+        for (a, b) in mem.sites.iter().zip(&loaded.sites) {
+            assert_eq!(a.gamma.data, b.gamma.data);
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gbs_manifest_stays_untagged() {
+        // GBS manifests must not grow a workload field: their bytes — and
+        // therefore their content keys — stay identical to pre-workload
+        // builds, so push dedup and router affinity survive the upgrade.
+        let dir = tmpdir("untagged");
+        GammaStore::create(&dir, &spec(), StorePrecision::F32, StoreCodec::Raw).unwrap();
+        let text = fs::read_to_string(dir.join("manifest.json")).unwrap();
+        assert!(!text.contains("workload"));
         fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -1155,7 +1245,7 @@ mod tests {
         for k in 0..g {
             let sdir = tmpdir(&format!("shard-{k}"));
             let shard = store.write_shard(&sdir, k, g).unwrap();
-            assert_eq!(shard.spec.seed, s.seed, "spec (and thus thresholds) copied");
+            assert_eq!(shard.spec.seed(), s.seed, "spec (and thus thresholds) copied");
             let info = shard.shard.clone().unwrap();
             assert_eq!((info.base, info.index, info.of), (base_key, k, g));
             assert_eq!(info.full_bonds, store.bonds);

@@ -21,6 +21,8 @@ pub mod canonical;
 pub mod entanglement;
 pub mod exact;
 pub mod gbs;
+pub mod qubit;
+pub mod workload;
 
 use crate::tensor::Tensor3;
 

@@ -1,0 +1,253 @@
+//! Qubit-chain (d = 2) workload — the second [`crate::mps::workload::Workload`]
+//! implementation, standing in for qubit-circuit MPS sampling and MPS
+//! generative models (PAPERS.md: arxiv 2506.08395, 2406.17441).
+//!
+//! Structurally this is the simplest instantiation of Alg. 1: fixed χ plan,
+//! right-canonical random chain, no displacement, no magnitude decay. Its
+//! job in this codebase is architectural — it must ride the prepared-site
+//! cache, service batching, router affinity, and TP collectives with zero
+//! workload-specific branches downstream of the spec.
+//!
+//! Seed streams are salted so a qubit dataset never reuses a GBS dataset's
+//! random draws even at an identical numeric seed; the store-manifest
+//! `workload` tag (not the salt) is what keeps content keys distinct.
+
+use crate::mps::canonical::random_right_canonical;
+use crate::mps::entanglement::ChiPlan;
+use crate::mps::workload::{Workload, WorkloadKind};
+use crate::mps::Site;
+use crate::rng::{purpose, Xoshiro256};
+use crate::util::error::Result;
+
+/// Physical dimension of every qubit site tensor.
+pub const QUBIT_D: usize = 2;
+
+/// Distinguishes qubit RNG streams from GBS streams at equal seeds.
+const SEED_SALT: u64 = 0x7175_6269_7464_3221; // "qubitd2!"
+
+/// Specification of a synthetic qubit-chain dataset.
+#[derive(Debug, Clone)]
+pub struct QubitSpec {
+    /// Dataset name (preset id or "custom").
+    pub name: String,
+    /// Number of qubits (sites).
+    pub m: usize,
+    /// Bond dimension cap χ (fixed plan — no ASP ramp at d = 2).
+    pub chi_cap: usize,
+    /// Amplitude bias of the |1⟩ branch (`1.0` = unbiased). Values < 1
+    /// suppress excited outcomes like GBS `branch_skew`; this breaks exact
+    /// right-canonicality, so keep `1.0` for oracle/validation runs.
+    pub bias: f64,
+    /// Dataset seed.
+    pub seed: u64,
+}
+
+impl QubitSpec {
+    /// An unbiased chain — the validation-friendly default.
+    pub fn new(name: &str, m: usize, chi_cap: usize, seed: u64) -> QubitSpec {
+        QubitSpec {
+            name: name.into(),
+            m,
+            chi_cap,
+            bias: 1.0,
+            seed,
+        }
+    }
+}
+
+impl Workload for QubitSpec {
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::Qubit
+    }
+
+    fn dataset_name(&self) -> &str {
+        &self.name
+    }
+
+    fn num_sites(&self) -> usize {
+        self.m
+    }
+
+    fn phys_d(&self) -> usize {
+        QUBIT_D
+    }
+
+    fn chi_cap(&self) -> usize {
+        self.chi_cap
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn chi_plan(&self) -> ChiPlan {
+        ChiPlan::fixed(self.m, QUBIT_D, self.chi_cap)
+    }
+
+    /// Deterministic in `(seed, i)` — same independence property as GBS
+    /// site generation (streaming stores, model-parallel ranks).
+    fn generate_site(&self, i: usize, chi_l: usize, plan: &ChiPlan) -> Result<Site> {
+        let chi_r = if i + 1 == self.m { 1 } else { plan.chi[i] };
+        let mut rng = Xoshiro256::stream(self.seed ^ SEED_SALT, purpose::DATAGEN, i as u64);
+        let mut gamma = random_right_canonical(&mut rng, chi_l, chi_r, QUBIT_D)?;
+        if self.bias != 1.0 {
+            for a in 0..gamma.d0 {
+                for b in 0..gamma.d1 {
+                    let z = gamma.at(a, b, 1);
+                    *gamma.at_mut(a, b, 1) = z.scale(self.bias);
+                }
+            }
+        }
+        Ok(Site {
+            lambda: vec![1.0; chi_r],
+            gamma,
+        })
+    }
+
+    /// Partition-invariant (same contract as GBS: `[s0, s0+n)` draws do not
+    /// depend on how samples are batched).
+    fn thresholds(&self, site: usize, sample0: u64, n: usize) -> Vec<f32> {
+        (0..n as u64)
+            .map(|s| {
+                let mut rng = Xoshiro256::stream(
+                    self.seed ^ SEED_SALT ^ (site as u64).rotate_left(33),
+                    purpose::THRESHOLD,
+                    sample0 + s,
+                );
+                rng.unit_f32()
+            })
+            .collect()
+    }
+
+    /// Qubit measurement has no displacement concept.
+    fn displacements(&self, _site: usize, _sample0: u64, _n: usize) -> Option<Vec<(f64, f64)>> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mps::canonical::right_canonical_residual;
+    use crate::mps::gbs::GbsSpec;
+
+    fn small_spec() -> QubitSpec {
+        QubitSpec::new("qtest", 10, 8, 7)
+    }
+
+    #[test]
+    fn generates_valid_canonical_chain() {
+        let mps = small_spec().generate().unwrap();
+        assert_eq!(mps.num_sites(), 10);
+        assert_eq!(mps.d, 2);
+        mps.check().unwrap();
+        for (i, s) in mps.sites.iter().enumerate() {
+            let r = right_canonical_residual(&s.gamma);
+            assert!(r < 1e-10, "site {i}: residual {r}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_site_independent() {
+        let spec = small_spec();
+        let a = spec.generate().unwrap();
+        let b = spec.generate().unwrap();
+        let plan = spec.chi_plan();
+        let mut chi_l = 1;
+        for (i, (x, y)) in a.sites.iter().zip(&b.sites).enumerate() {
+            assert_eq!(x.gamma.data, y.gamma.data);
+            let s = spec.generate_site(i, chi_l, &plan).unwrap();
+            assert_eq!(s.gamma.data, x.gamma.data, "site {i}");
+            chi_l = s.chi_r();
+        }
+    }
+
+    #[test]
+    fn thresholds_partition_invariant() {
+        let spec = small_spec();
+        let all = spec.thresholds(4, 0, 12);
+        let tail = spec.thresholds(4, 7, 5);
+        assert_eq!(&all[7..], &tail[..]);
+    }
+
+    #[test]
+    fn streams_distinct_from_gbs_at_equal_seed() {
+        let q = small_spec();
+        let g = GbsSpec {
+            name: "g".into(),
+            m: q.m,
+            d: 2,
+            chi_cap: q.chi_cap,
+            asp: 4.0,
+            decay_k: 0.0,
+            displacement_sigma: 0.0,
+            branch_skew: 0.0,
+            seed: q.seed,
+            dynamic_chi: false,
+            step_ratio_override: None,
+        };
+        assert_ne!(Workload::thresholds(&q, 0, 0, 16), g.thresholds(0, 0, 16));
+        let plan = Workload::chi_plan(&q);
+        let qs = Workload::generate_site(&q, 0, 1, &plan).unwrap();
+        let gs = g.generate_site(0, 1, &g.chi_plan()).unwrap();
+        assert_ne!(qs.gamma.data, gs.gamma.data);
+    }
+
+    #[test]
+    fn bias_suppresses_excited_branch() {
+        let mut spec = small_spec();
+        spec.bias = 0.1;
+        let mps = spec.generate().unwrap();
+        for site in &mps.sites {
+            let g = &site.gamma;
+            let mut norms = [0.0f64; 2];
+            for a in 0..g.d0 {
+                for b in 0..g.d1 {
+                    for s in 0..2 {
+                        norms[s] += g.at(a, b, s).norm_sq();
+                    }
+                }
+            }
+            assert!(norms[1] < norms[0] * 0.05);
+        }
+    }
+
+    #[test]
+    fn no_displacement_hook() {
+        let spec = small_spec();
+        assert!(!spec.has_displacement());
+        assert!(spec.displacements(0, 0, 8).is_none());
+    }
+
+    #[test]
+    fn sampled_distribution_matches_exact_enumeration_oracle() {
+        // Born-rule check at d = 2: walk a tiny chain with the production
+        // engine and compare the sampled per-site outcome distribution
+        // against the transfer-matrix oracle in `mps::exact`.
+        use crate::config::{ComputePrecision, ScalingMode};
+        use crate::mps::exact::exact_site_distributions;
+        use crate::sampler::native::NativeEngine;
+        use crate::sampler::{boundary_env, StepEngine};
+
+        let spec = QubitSpec::new("oracle", 6, 4, 23);
+        let mps = spec.generate().unwrap();
+        let exact = exact_site_distributions(&mps).unwrap();
+        let n = 4096;
+        let mut eng = NativeEngine::new(ComputePrecision::F64, ScalingMode::PerSample, 1);
+        let mut env = boundary_env(n);
+        for (i, site) in mps.sites.iter().enumerate() {
+            let th = Workload::thresholds(&spec, i, 0, n);
+            let mut s = Vec::new();
+            eng.step(&mut env, site, &th, None, &mut s).unwrap();
+            assert!(s.iter().all(|&b| b == 0 || b == 1), "site {i}: non-binary outcome");
+            let p1 = s.iter().filter(|&&b| b == 1).count() as f64 / n as f64;
+            // Binomial error at N=4096 is ≤ 0.5/√4096 ≈ 0.008; allow 5σ.
+            assert!(
+                (p1 - exact[i][1]).abs() < 0.04,
+                "site {i}: sampled P(1) = {p1} vs exact {}",
+                exact[i][1]
+            );
+            assert!((exact[i][0] + exact[i][1] - 1.0).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,372 @@
+//! The workload abstraction: everything the stack needs to know about a
+//! measurement model, factored out of the GBS-specific generator.
+//!
+//! The paper frames MPS sequential sampling (Alg. 1) as a *fundamental
+//! operation* — GBS is one instantiation. A [`Workload`] supplies the
+//! pieces that differ between instantiations and nothing else:
+//!
+//! - the physical dimension `d` and site count `m` (tensor shapes);
+//! - the χ plan (how bond dimension grows along the chain);
+//! - deterministic site generation (so streaming stores and model-parallel
+//!   ranks can materialize sites independently);
+//! - the per-site measurement rule: partition-invariant threshold streams
+//!   (Alg. 1's `rand(N₂)`) and an optional displacement hook (§3.4.1 —
+//!   GBS-specific; workloads without the concept return `None`);
+//! - the sink shape (max outcome gap [`crate::sampler::sink::SampleSink`]
+//!   tracks);
+//! - a stable *tag* written into the store manifest and carried in job
+//!   specs, so content keys cannot collide across workloads and mixed
+//!   tensor-parallel groups are refused typed.
+//!
+//! The hot path (engines, prepared sites, sinks, batching, routing, TP
+//! collectives) is already parameter-driven and needs **no** per-workload
+//! branches; layers hold a [`WorkloadSpec`] and call its accessors.
+
+use crate::mps::entanglement::ChiPlan;
+use crate::mps::gbs::GbsSpec;
+use crate::mps::qubit::QubitSpec;
+use crate::mps::{Mps, Site};
+use crate::util::error::{Error, Result};
+
+/// Identity of a measurement model. The `as_str` form is the store-manifest
+/// tag and the wire name (`JobSpec.workload`, TP hello `workload` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    /// Gaussian Boson Sampling (the paper's workload; d = 3–4 Fock cutoff).
+    Gbs,
+    /// Qubit-chain sampling (d = 2): circuit / generative MPS workloads.
+    Qubit,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 2] = [WorkloadKind::Gbs, WorkloadKind::Qubit];
+
+    /// Stable lowercase tag — manifest field, wire field, CLI name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WorkloadKind::Gbs => "gbs",
+            WorkloadKind::Qubit => "qubit",
+        }
+    }
+
+    /// Comma-separated list of valid tags (for error messages).
+    pub fn valid_names() -> String {
+        Self::ALL
+            .iter()
+            .map(|k| k.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// Parse a tag; unknown names get a typed error listing the valid set
+    /// (surfaced verbatim by `fastmps submit --workload`).
+    pub fn parse(s: &str) -> Result<WorkloadKind> {
+        for k in Self::ALL {
+            if s == k.as_str() {
+                return Ok(k);
+            }
+        }
+        Err(Error::config(format!(
+            "unknown workload {s:?} (valid workloads: {})",
+            Self::valid_names()
+        )))
+    }
+}
+
+impl std::fmt::Display for WorkloadKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The measurement-model contract. Implementations must keep every method
+/// deterministic in the spec alone — in particular `generate_site` must be
+/// a pure function of `(spec, i)` and the threshold/displacement streams
+/// must be partition-invariant (`[s0, s0+n)` draws independent of batching).
+pub trait Workload {
+    /// Which model this is (drives the manifest/wire tag).
+    fn kind(&self) -> WorkloadKind;
+    /// Dataset name (preset id or "custom").
+    fn dataset_name(&self) -> &str;
+    /// Number of sites (modes / qubits).
+    fn num_sites(&self) -> usize;
+    /// Physical dimension of every site tensor.
+    fn phys_d(&self) -> usize;
+    /// Bond-dimension cap χ.
+    fn chi_cap(&self) -> usize;
+    /// Dataset seed.
+    fn seed(&self) -> u64;
+    /// The χ plan this spec induces.
+    fn chi_plan(&self) -> ChiPlan;
+    /// Generate site `i` alone (deterministic in `(seed, i)`).
+    fn generate_site(&self, i: usize, chi_l: usize, plan: &ChiPlan) -> Result<Site>;
+    /// Measurement thresholds for samples `[sample0, sample0+n)` at `site`.
+    fn thresholds(&self, site: usize, sample0: u64, n: usize) -> Vec<f32>;
+    /// Displacement hook: `Some(draws)` if this workload displaces the
+    /// measurement basis (GBS §3.4.1), `None` if the concept doesn't exist
+    /// or is disabled. Callers pass the result straight to the engine.
+    fn displacements(&self, site: usize, sample0: u64, n: usize) -> Option<Vec<(f64, f64)>>;
+    /// Whether any site will ever return `Some` from [`Self::displacements`]
+    /// (lets TP refuse displaced jobs without probing sites).
+    fn has_displacement(&self) -> bool {
+        false
+    }
+    /// Max outcome gap the [`crate::sampler::sink::SampleSink`] tracks.
+    fn sink_max_gap(&self) -> usize {
+        4
+    }
+    /// Generate the full in-memory MPS (small/medium scales; `gen-data`
+    /// streams sites straight to the Γ store for large M).
+    fn generate(&self) -> Result<Mps> {
+        let plan = self.chi_plan();
+        let m = self.num_sites();
+        let mut sites = Vec::with_capacity(m);
+        let mut chi_l = 1usize;
+        for i in 0..m {
+            let site = self.generate_site(i, chi_l, &plan)?;
+            chi_l = site.chi_r();
+            sites.push(site);
+        }
+        let mps = Mps {
+            sites,
+            d: self.phys_d(),
+        };
+        mps.check()?;
+        Ok(mps)
+    }
+}
+
+impl Workload for GbsSpec {
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::Gbs
+    }
+
+    fn dataset_name(&self) -> &str {
+        &self.name
+    }
+
+    fn num_sites(&self) -> usize {
+        self.m
+    }
+
+    fn phys_d(&self) -> usize {
+        self.d
+    }
+
+    fn chi_cap(&self) -> usize {
+        self.chi_cap
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn chi_plan(&self) -> ChiPlan {
+        GbsSpec::chi_plan(self)
+    }
+
+    fn generate_site(&self, i: usize, chi_l: usize, plan: &ChiPlan) -> Result<Site> {
+        GbsSpec::generate_site(self, i, chi_l, plan)
+    }
+
+    fn thresholds(&self, site: usize, sample0: u64, n: usize) -> Vec<f32> {
+        GbsSpec::thresholds(self, site, sample0, n)
+    }
+
+    fn displacements(&self, site: usize, sample0: u64, n: usize) -> Option<Vec<(f64, f64)>> {
+        (self.displacement_sigma != 0.0).then(|| self.displacement_draws(site, sample0, n))
+    }
+
+    fn has_displacement(&self) -> bool {
+        self.displacement_sigma != 0.0
+    }
+
+    fn generate(&self) -> Result<Mps> {
+        GbsSpec::generate(self)
+    }
+}
+
+/// A concrete, storable workload spec — the closed set of [`Workload`]
+/// implementations the store manifest can round-trip. Every layer that used
+/// to hold a `GbsSpec` now holds one of these and calls the accessors; no
+/// layer matches on the variants.
+#[derive(Debug, Clone)]
+pub enum WorkloadSpec {
+    Gbs(GbsSpec),
+    Qubit(QubitSpec),
+}
+
+impl WorkloadSpec {
+    /// The trait view — single dispatch point for all accessors.
+    pub fn as_workload(&self) -> &dyn Workload {
+        match self {
+            WorkloadSpec::Gbs(s) => s,
+            WorkloadSpec::Qubit(s) => s,
+        }
+    }
+
+    pub fn kind(&self) -> WorkloadKind {
+        self.as_workload().kind()
+    }
+
+    /// The manifest/wire tag ("gbs", "qubit").
+    pub fn tag(&self) -> &'static str {
+        self.kind().as_str()
+    }
+
+    pub fn name(&self) -> &str {
+        self.as_workload().dataset_name()
+    }
+
+    pub fn m(&self) -> usize {
+        self.as_workload().num_sites()
+    }
+
+    pub fn d(&self) -> usize {
+        self.as_workload().phys_d()
+    }
+
+    pub fn chi_cap(&self) -> usize {
+        self.as_workload().chi_cap()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.as_workload().seed()
+    }
+
+    pub fn chi_plan(&self) -> ChiPlan {
+        self.as_workload().chi_plan()
+    }
+
+    pub fn generate(&self) -> Result<Mps> {
+        self.as_workload().generate()
+    }
+
+    pub fn generate_site(&self, i: usize, chi_l: usize, plan: &ChiPlan) -> Result<Site> {
+        self.as_workload().generate_site(i, chi_l, plan)
+    }
+
+    pub fn thresholds(&self, site: usize, sample0: u64, n: usize) -> Vec<f32> {
+        self.as_workload().thresholds(site, sample0, n)
+    }
+
+    pub fn displacements(&self, site: usize, sample0: u64, n: usize) -> Option<Vec<(f64, f64)>> {
+        self.as_workload().displacements(site, sample0, n)
+    }
+
+    pub fn has_displacement(&self) -> bool {
+        self.as_workload().has_displacement()
+    }
+
+    pub fn sink_max_gap(&self) -> usize {
+        self.as_workload().sink_max_gap()
+    }
+
+    /// The GBS spec, if this is the GBS workload (perf presets and the
+    /// spec-echo JSON need the concrete fields).
+    pub fn as_gbs(&self) -> Option<&GbsSpec> {
+        match self {
+            WorkloadSpec::Gbs(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+impl From<GbsSpec> for WorkloadSpec {
+    fn from(s: GbsSpec) -> Self {
+        WorkloadSpec::Gbs(s)
+    }
+}
+
+impl From<&GbsSpec> for WorkloadSpec {
+    fn from(s: &GbsSpec) -> Self {
+        WorkloadSpec::Gbs(s.clone())
+    }
+}
+
+impl From<QubitSpec> for WorkloadSpec {
+    fn from(s: QubitSpec) -> Self {
+        WorkloadSpec::Qubit(s)
+    }
+}
+
+impl From<&QubitSpec> for WorkloadSpec {
+    fn from(s: &QubitSpec) -> Self {
+        WorkloadSpec::Qubit(s.clone())
+    }
+}
+
+impl From<&WorkloadSpec> for WorkloadSpec {
+    fn from(s: &WorkloadSpec) -> Self {
+        s.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_through_tag() {
+        for k in WorkloadKind::ALL {
+            assert_eq!(WorkloadKind::parse(k.as_str()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn unknown_kind_lists_valid_names() {
+        let err = WorkloadKind::parse("boson2").unwrap_err().to_string();
+        assert!(err.contains("boson2"), "{err}");
+        assert!(err.contains("gbs"), "{err}");
+        assert!(err.contains("qubit"), "{err}");
+    }
+
+    #[test]
+    fn gbs_spec_converts_and_delegates() {
+        let gbs = GbsSpec {
+            name: "t".into(),
+            m: 8,
+            d: 3,
+            chi_cap: 16,
+            asp: 4.0,
+            decay_k: 0.0,
+            displacement_sigma: 0.25,
+            branch_skew: 0.0,
+            seed: 11,
+            dynamic_chi: false,
+            step_ratio_override: None,
+        };
+        let w: WorkloadSpec = (&gbs).into();
+        assert_eq!(w.kind(), WorkloadKind::Gbs);
+        assert_eq!(w.tag(), "gbs");
+        assert_eq!((w.m(), w.d(), w.chi_cap(), w.seed()), (8, 3, 16, 11));
+        assert!(w.has_displacement());
+        // Accessor streams must equal the inherent GBS streams bit-for-bit
+        // (the PR 5 bit-identity discipline rides on this).
+        assert_eq!(w.thresholds(3, 5, 7), gbs.thresholds(3, 5, 7));
+        assert_eq!(
+            w.displacements(2, 1, 4).unwrap(),
+            gbs.displacement_draws(2, 1, 4)
+        );
+    }
+
+    #[test]
+    fn displacement_hook_is_none_when_disabled() {
+        let gbs = GbsSpec {
+            name: "t".into(),
+            m: 4,
+            d: 3,
+            chi_cap: 8,
+            asp: 4.0,
+            decay_k: 0.0,
+            displacement_sigma: 0.0,
+            branch_skew: 0.0,
+            seed: 1,
+            dynamic_chi: false,
+            step_ratio_override: None,
+        };
+        let w = WorkloadSpec::from(gbs);
+        assert!(!w.has_displacement());
+        assert!(w.displacements(0, 0, 4).is_none());
+    }
+}

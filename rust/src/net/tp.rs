@@ -365,8 +365,8 @@ pub(crate) fn run_batch_tp(
         .ok_or_else(|| Error::other("run_batch_tp dispatched a non-TP batch"))?;
     let store = &batch.store;
     let spec = &store.spec;
-    let m = spec.m;
-    let d = spec.d;
+    let m = spec.m();
+    let d = spec.d();
     if batch.assignments.len() != 1 {
         return Err(Error::other(
             "TP batches carry exactly one job (the dispatcher must not coalesce them)",
@@ -383,7 +383,7 @@ pub(crate) fn run_batch_tp(
             batch.key.compute.as_str()
         )));
     }
-    if spec.displacement_sigma != 0.0 {
+    if spec.has_displacement() {
         return Err(Error::config(
             "tensor-parallel jobs do not support displaced sampling",
         ));
@@ -441,6 +441,7 @@ pub(crate) fn run_batch_tp(
             ("n2", Json::Num(cfg.n2_micro as f64)),
             ("sites", Json::Num(m as f64)),
             ("compute", Json::Str("f32".into())),
+            ("workload", Json::Str(spec.tag().into())),
             ("job", Json::Num(job as f64)),
             ("trace", Json::Str(format!("{trace:016x}"))),
         ]);
@@ -454,7 +455,7 @@ pub(crate) fn run_batch_tp(
     let mut comm = SocketComm::new(0, links)?;
 
     let mut metrics = Metrics::new();
-    let mut sinks = vec![SampleSink::new(m, d, 4)];
+    let mut sinks = vec![SampleSink::new(m, d, spec.sink_max_gap())];
     let prep = cache.prepared(
         batch.key.store_hash,
         m,
@@ -655,13 +656,26 @@ pub(crate) fn serve_tp(
             shard.index, shard.of, shard.base
         ));
     }
-    if store.spec.m != sites || shard.full_bonds.len() != sites {
+    if store.spec.m() != sites || shard.full_bonds.len() != sites {
         return refuse(format!(
             "site count mismatch: group walks {sites} sites, shard store has {}",
-            store.spec.m
+            store.spec.m()
         ));
     }
-    if store.spec.displacement_sigma != 0.0 {
+    // Older leaders don't send a workload tag — they predate non-GBS
+    // workloads, so an absent tag means GBS by construction.
+    let leader_workload = msg
+        .get("workload")
+        .and_then(|v| v.as_str())
+        .unwrap_or("gbs");
+    if leader_workload != store.spec.tag() {
+        return refuse(format!(
+            "workload mismatch: leader runs {leader_workload:?}, \
+             this backend's shard store is {:?}",
+            store.spec.tag()
+        ));
+    }
+    if store.spec.has_displacement() {
         return refuse("tensor-parallel jobs do not support displaced sampling".into());
     }
     // Fail the env broadcast size at the hello instead of mid-stream:

@@ -313,4 +313,61 @@ mod tests {
         let eff = t1 / (8.0 * t8);
         assert!(eff > 0.9, "8-way DP efficiency {eff}");
     }
+
+    #[test]
+    fn spec_driven_workload_matches_hardwired_gbs_predictions() {
+        // `perf-model` used to bake d=4; it now reads d off the preset's
+        // GbsSpec. The paper presets all pin d=4, so the spec-driven
+        // workload must reproduce the hard-wired predictions bit-for-bit.
+        let spec = crate::config::Preset::BorealisM288.full_spec(1);
+        let from_spec = Workload {
+            m: spec.m,
+            chi: spec.chi_cap as u64,
+            d: spec.d as u64,
+            n_total: 10_000_000,
+            n1: 100_000,
+            scalar_bytes: 2,
+        };
+        let hardwired = paper_workload();
+        assert_eq!(from_spec.d, hardwired.d);
+        let net = NetPreset::InfinibandHdr.model();
+        assert_eq!(
+            time_data_parallel(&from_spec, &A100_TF32, &net, 8),
+            time_data_parallel(&hardwired, &A100_TF32, &net, 8),
+        );
+        assert_eq!(
+            time_model_parallel(&from_spec, &A100_FP64, &net),
+            time_model_parallel(&hardwired, &A100_FP64, &net),
+        );
+        assert_eq!(
+            memory_demand(from_spec.n1, from_spec.chi, from_spec.d, 8),
+            memory_demand(hardwired.n1, hardwired.chi, hardwired.d, 8),
+        );
+    }
+
+    #[test]
+    fn cost_formulas_scale_with_physical_dimension() {
+        // A d=2 qubit workload does strictly less work per site than the
+        // d=4 GBS one: fewer FLOPs, smaller Γ tensors, less memory.
+        let gbs = paper_workload();
+        let qubit = Workload { d: 2, ..gbs };
+        assert!(
+            site_flops(qubit.n1, qubit.chi, qubit.chi, qubit.d)
+                < site_flops(gbs.n1, gbs.chi, gbs.chi, gbs.d)
+        );
+        assert!(
+            gamma_bytes(qubit.n1, qubit.chi, qubit.d, 2)
+                < gamma_bytes(gbs.n1, gbs.chi, gbs.d, 2)
+        );
+        let net = NetPreset::InfinibandHdr.model();
+        assert!(
+            time_data_parallel(&qubit, &A100_TF32, &net, 8)
+                < time_data_parallel(&gbs, &A100_TF32, &net, 8)
+        );
+        // Exactly proportional where the formula is linear in d (Eq. 3).
+        assert_eq!(
+            memory_demand(gbs.n1, gbs.chi, 2, 8) * 2,
+            memory_demand(gbs.n1, gbs.chi, 4, 8),
+        );
+    }
 }

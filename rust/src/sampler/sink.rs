@@ -394,4 +394,54 @@ mod tests {
             Ok(())
         });
     }
+
+    #[test]
+    fn property_merge_laws_hold_at_qubit_dimension() {
+        // Qubit workloads run the same sink at d=2: a two-bin histogram per
+        // site, outcomes in {0, 1}. The merge laws must hold there exactly —
+        // the data-parallel reduction is workload-agnostic by design.
+        use crate::util::prop::{quickcheck, Gen};
+
+        fn random_qubit_sink(g: &mut Gen, m: usize, gap: usize) -> SampleSink {
+            let mut s = SampleSink::new(m, 2, gap);
+            for _ in 0..g.usize_in(1, 4) {
+                s.reset_walk();
+                let n = g.usize_in(1, 6);
+                for site in 0..m {
+                    let bits: Vec<i32> = (0..n).map(|_| g.usize_in(0, 2) as i32).collect();
+                    s.record(site, &bits);
+                }
+            }
+            s
+        }
+
+        quickcheck("qubit sink merge laws", |g| {
+            let m = g.usize_in(2, 6);
+            let gap = g.usize_in(0, 3);
+            let a = random_qubit_sink(g, m, gap);
+            let b = random_qubit_sink(g, m, gap);
+
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            if (ab.hist, ab.pair_sums, ab.counts) != (ba.hist, ba.pair_sums, ba.counts) {
+                return Err(format!("qubit merge commutativity broke at m={m} gap={gap}"));
+            }
+
+            // The alphabet stays binary through merges and every recorded
+            // outcome landed in one of the two bins.
+            let mut total = a.clone();
+            total.merge(&b);
+            for (site, h) in total.hist.iter().enumerate() {
+                if h.len() != 2 {
+                    return Err(format!("site {site} histogram is not binary"));
+                }
+                if h[0] + h[1] != total.counts[site] {
+                    return Err(format!("site {site} lost outcomes in merge"));
+                }
+            }
+            Ok(())
+        });
+    }
 }

@@ -63,8 +63,8 @@ pub fn target_rows(cfg: &ServiceConfig, store: &GammaStore) -> usize {
     let scalar = store.precision.bytes_per_scalar();
     let n1 = scheduler::suggest_n1(
         &perfmodel::XEON_CORE,
-        store.spec.chi_cap,
-        store.spec.d,
+        store.spec.chi_cap(),
+        store.spec.d(),
         scalar,
         cfg.mem_budget,
     );

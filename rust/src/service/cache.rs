@@ -395,13 +395,13 @@ mod tests {
         std::fs::remove_dir_all(&dir).unwrap();
         let spec = GbsSpec {
             seed: 99,
-            ..old.spec.clone()
+            ..old.spec.as_gbs().unwrap().clone()
         };
         GammaStore::create(&dir, &spec, StorePrecision::F32, StoreCodec::Raw).unwrap();
         let (new, hit) = c.get(&dir).unwrap();
         assert!(!hit);
         assert!(!Arc::ptr_eq(&old, &new));
-        assert_eq!(new.spec.seed, 99);
+        assert_eq!(new.spec.seed(), 99);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -438,12 +438,12 @@ mod tests {
         c.get(&d2).unwrap();
         let (reopened, hit) = c.get_by_key(hash).unwrap();
         assert!(!hit, "entry was evicted; registry re-open");
-        assert_eq!(reopened.spec.seed, 1);
+        assert_eq!(reopened.spec.seed(), 1);
 
         // resolve() routes key specs through get_by_key.
         let spec = JobSpec::by_key(hash, 10);
         let (via_spec, _) = c.resolve(&spec).unwrap();
-        assert_eq!(via_spec.spec.seed, 1);
+        assert_eq!(via_spec.spec.seed(), 1);
 
         for d in [d1, d2] {
             std::fs::remove_dir_all(&d).unwrap();

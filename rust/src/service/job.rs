@@ -12,6 +12,7 @@
 use std::path::PathBuf;
 
 use crate::config::ComputePrecision;
+use crate::mps::workload::WorkloadKind;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -140,6 +141,12 @@ pub struct JobSpec {
     /// ordinary single-backend jobs; omitted from the wire form so
     /// non-TP submits stay byte-identical to pre-TP builds.
     pub tp: Option<TpGroup>,
+    /// Measurement model the job declares (`docs/WORKLOADS.md`). The
+    /// resolved store's manifest is authoritative — the service rejects
+    /// the job if the two disagree. GBS is the default and is omitted
+    /// from the wire form, so GBS submits stay byte-identical to
+    /// pre-workload builds (same skew contract as `trace`).
+    pub workload: WorkloadKind,
 }
 
 impl JobSpec {
@@ -153,6 +160,7 @@ impl JobSpec {
             tag: String::new(),
             trace: None,
             tp: None,
+            workload: WorkloadKind::Gbs,
         }
     }
 
@@ -167,6 +175,7 @@ impl JobSpec {
             tag: String::new(),
             trace: None,
             tp: None,
+            workload: WorkloadKind::Gbs,
         }
     }
 
@@ -255,6 +264,19 @@ impl JobSpec {
             .filter(|v| !matches!(**v, Json::Null))
             .map(TpGroup::from_json)
             .transpose()?;
+        // Absent/null means GBS (pre-workload peers). An unknown name is
+        // a hard error — running a qubit job as GBS would silently sample
+        // the wrong distribution, the same hazard class as `tp` above.
+        let workload = j
+            .get("workload")
+            .filter(|v| !matches!(**v, Json::Null))
+            .map(|v| {
+                v.as_str()
+                    .ok_or_else(|| Error::format("job: 'workload' not a string"))
+                    .and_then(WorkloadKind::parse)
+            })
+            .transpose()?
+            .unwrap_or(WorkloadKind::Gbs);
         Ok(JobSpec {
             data: PathBuf::from(data),
             key,
@@ -264,6 +286,7 @@ impl JobSpec {
             tag,
             trace,
             tp,
+            workload,
         })
     }
 
@@ -293,6 +316,11 @@ impl JobSpec {
         }
         if let Some(tp) = &self.tp {
             fields.push(("tp", tp.to_json()));
+        }
+        // Omitted (not null) for GBS, so the wire form of a GBS job is
+        // byte-identical to pre-workload builds.
+        if self.workload != WorkloadKind::Gbs {
+            fields.push(("workload", Json::Str(self.workload.as_str().into())));
         }
         Json::obj(fields)
     }
@@ -338,6 +366,8 @@ pub struct JobView {
     pub latency_secs: Option<f64>,
     /// The job's trace id, when it was submitted traced.
     pub trace: Option<u64>,
+    /// Measurement model the job declared at submit ("gbs", "qubit").
+    pub workload: WorkloadKind,
 }
 
 /// Deterministic listing order: submit time, then id. Stable for
@@ -378,6 +408,7 @@ impl JobView {
                     .map(|t| Json::Str(format!("{t:016x}")))
                     .unwrap_or(Json::Null),
             ),
+            ("workload", Json::Str(self.workload.as_str().into())),
         ])
     }
 }
@@ -432,6 +463,35 @@ mod tests {
             let s = JobSpec::from_json(&Json::parse(wire).unwrap()).unwrap();
             assert_eq!(s.trace, None, "{wire}");
         }
+    }
+
+    #[test]
+    fn workload_field_roundtrips_and_defaults_to_gbs() {
+        // Qubit jobs carry the tag and round-trip it.
+        let mut s = JobSpec::by_key(0xbeef, 16);
+        s.workload = WorkloadKind::Qubit;
+        let j = s.to_json();
+        assert_eq!(j.get("workload").unwrap().as_str(), Some("qubit"));
+        let back = JobSpec::from_json(&j).unwrap();
+        assert_eq!(back.workload, WorkloadKind::Qubit);
+        // GBS jobs omit the field entirely (old-peer byte parity).
+        assert!(JobSpec::by_key(0xbeef, 16).to_json().get("workload").is_none());
+        // Absent and null both parse as GBS.
+        for wire in [
+            r#"{"key": "ff", "samples": 5}"#,
+            r#"{"key": "ff", "samples": 5, "workload": null}"#,
+        ] {
+            let s = JobSpec::from_json(&Json::parse(wire).unwrap()).unwrap();
+            assert_eq!(s.workload, WorkloadKind::Gbs, "{wire}");
+        }
+        // An unknown name is a typed refusal that lists the valid set.
+        let j = Json::parse(r#"{"key": "ff", "samples": 5, "workload": "ising"}"#).unwrap();
+        let e = JobSpec::from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("unknown workload"), "{e}");
+        assert!(e.contains("gbs, qubit"), "{e}");
+        // Non-string workload is malformed, not silently GBS.
+        let j = Json::parse(r#"{"key": "ff", "samples": 5, "workload": 2}"#).unwrap();
+        assert!(JobSpec::from_json(&j).is_err());
     }
 
     #[test]
@@ -553,6 +613,7 @@ mod tests {
             submitted_unix: t,
             latency_secs: None,
             trace: None,
+            workload: WorkloadKind::Gbs,
         };
         let mut vs = vec![view(3, 20.0), view(2, 10.0), view(1, 10.0), view(4, 5.0)];
         sort_views(&mut vs);

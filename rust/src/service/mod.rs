@@ -361,6 +361,22 @@ fn dispatcher_loop(
             },
         };
         resolved.insert(front_id, Some(store_hash));
+        // The store manifest is authoritative for the measurement model;
+        // a job declaring a different workload than the store it resolved
+        // to would sample the wrong distribution, so it fails here with a
+        // typed error instead of returning mislabeled results.
+        if front_spec.workload.as_str() != store.spec.tag() {
+            queue.fail_job(
+                front_id,
+                &format!(
+                    "workload mismatch: job declares {:?} but store {:?} is {:?}",
+                    front_spec.workload.as_str(),
+                    store.spec.name(),
+                    store.spec.tag()
+                ),
+            );
+            continue;
+        }
         let key = BatchKey {
             store_hash,
             compute: front_spec.compute.unwrap_or(cfg.compute),
@@ -392,6 +408,7 @@ fn dispatcher_loop(
                 .filter(|(id, spec)| {
                     spec.tp.is_none()
                         && spec.compute.unwrap_or(cfg.compute) == key.compute
+                        && spec.workload == front_spec.workload
                         && resolved.get(id).copied().flatten() == Some(key.store_hash)
                 })
                 .map(|(id, _)| *id)
@@ -636,6 +653,51 @@ mod tests {
         );
         drop(svc);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn workload_tag_is_validated_against_the_store_manifest() {
+        use crate::mps::qubit::QubitSpec;
+        use crate::mps::workload::WorkloadKind;
+        let (_, dir) = make_store("wl-gbs");
+        let qdir = std::env::temp_dir().join(format!(
+            "fastmps-svc-wl-qubit-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&qdir);
+        GammaStore::create(
+            &qdir,
+            QubitSpec::new("svc-q", 5, 6, 11),
+            StorePrecision::F32,
+            StoreCodec::Raw,
+        )
+        .unwrap();
+        let svc = Service::start(small_cfg()).unwrap();
+
+        // Declaring qubit against a GBS store is a typed failure, not a
+        // mislabeled result.
+        let mut bad = JobSpec::new(&dir, 16);
+        bad.workload = WorkloadKind::Qubit;
+        let id = svc.submit(bad).unwrap();
+        assert_eq!(
+            svc.wait(id, Duration::from_secs(60)),
+            Some(JobStatus::Failed)
+        );
+        let v = svc.queue().status(id).unwrap();
+        assert!(v.error.unwrap().contains("workload mismatch"));
+        assert_eq!(v.workload, WorkloadKind::Qubit, "view carries the tag");
+
+        // A correctly-declared qubit job rides the same batching path.
+        let mut good = JobSpec::new(&qdir, 48);
+        good.workload = WorkloadKind::Qubit;
+        let id = svc.submit(good).unwrap();
+        assert_eq!(svc.wait(id, Duration::from_secs(60)), Some(JobStatus::Done));
+        let sink = svc.queue().job_sink(id).unwrap();
+        assert_eq!(sink.total_samples(), 48);
+        assert_eq!(sink.hist[0].len(), 2, "d = 2 outcome alphabet");
+        drop(svc);
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&qdir).unwrap();
     }
 
     #[test]

@@ -375,6 +375,7 @@ impl JobQueue {
             submitted_unix: j.submitted_unix,
             latency_secs: j.latency_secs,
             trace: j.spec.trace,
+            workload: j.spec.workload,
         }
     }
 
@@ -402,6 +403,7 @@ impl JobQueue {
         let mut fields = vec![
             ("id", Json::Num(id as f64)),
             ("tag", Json::Str(j.spec.tag.clone())),
+            ("workload", Json::Str(j.spec.workload.as_str().into())),
             ("status", Json::Str(j.status.as_str().into())),
             ("samples", Json::Num(j.spec.n_samples as f64)),
             ("done", Json::Num(j.done as f64)),

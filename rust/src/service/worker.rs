@@ -274,7 +274,7 @@ pub(crate) fn run_batch(
 ) -> Result<(Metrics, Vec<SampleSink>)> {
     let store = &batch.store;
     let spec = &store.spec;
-    let m = spec.m;
+    let m = spec.m();
     let rows = batch.rows();
     if rows == 0 {
         return Err(Error::other("empty batch dispatched"));
@@ -289,9 +289,8 @@ pub(crate) fn run_batch(
     let mut sinks: Vec<SampleSink> = batch
         .assignments
         .iter()
-        .map(|_| SampleSink::new(m, spec.d, 4))
+        .map(|_| SampleSink::new(m, spec.d(), spec.sink_max_gap()))
         .collect();
-    let displaced = spec.displacement_sigma != 0.0;
     let mut env = boundary_env(rows);
     // Batch-local residency accounting (the chain's own counters are
     // shared across workers, so deltas there would double-count).
@@ -363,8 +362,7 @@ pub(crate) fn run_batch(
                 let lo = row0 + off;
                 let mut chunk = env_rows(&env, lo, lo + take);
                 let th = spec.thresholds(site_idx, a.sample0 + off as u64, take);
-                let mus = displaced
-                    .then(|| spec.displacement_draws(site_idx, a.sample0 + off as u64, take));
+                let mus = spec.displacements(site_idx, a.sample0 + off as u64, take);
                 let t0 = Instant::now();
                 engine.step_site(
                     &mut chunk,

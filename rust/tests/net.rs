@@ -489,6 +489,104 @@ fn trace_field_skew_old_server_ignores_it() {
 }
 
 #[test]
+fn workload_field_skew_old_client_runs_as_gbs() {
+    use fastmps::net::frame::{Frame, FrameReader, FrameWriter};
+    use fastmps::util::json::Json;
+    use std::io::{BufReader, BufWriter};
+    use std::net::TcpStream;
+
+    // An "old client" — a hand-rolled submit whose job-spec JSON predates
+    // the optional "workload" field. Every store was GBS back then, so
+    // the server must default the declaration to gbs and run the job
+    // unchanged against a GBS store.
+    let root = scratch("skew-workload");
+    let (_, store_dir) = make_store(&root);
+    let server = NetServer::start(service_cfg(), loopback_net()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut w = FrameWriter::new(BufWriter::new(stream.try_clone().unwrap()));
+    let mut r = FrameReader::new(BufReader::new(stream), 1 << 20);
+    w.write_preamble().unwrap();
+    r.read_preamble().unwrap();
+    let msg = Json::obj(vec![
+        ("op", Json::Str("submit".into())),
+        (
+            "job",
+            Json::obj(vec![
+                ("data", Json::Str(store_dir.display().to_string())),
+                ("samples", Json::Num(32.0)),
+            ]),
+        ),
+    ]);
+    w.write_ctrl(&msg).unwrap();
+    let id = match r.read_frame().unwrap() {
+        Frame::Ctrl(j) => {
+            assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+            j.get("id").unwrap().as_f64().unwrap() as u64
+        }
+        other => panic!("expected submitted ctrl, got {other:?}"),
+    };
+
+    // The job runs to completion as GBS and says so in the view.
+    let mut client = Client::connect(&addr, &loopback_net()).unwrap();
+    let res = client.wait(id, Duration::from_secs(60)).unwrap().unwrap();
+    assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+    assert_eq!(res.result.get("workload").unwrap().as_str(), Some("gbs"));
+    let view = client.status(id).unwrap();
+    assert_eq!(view.get("workload").unwrap().as_str(), Some("gbs"));
+
+    drop(client);
+    drop(server);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn explicit_gbs_workload_is_byte_identical_on_the_wire() {
+    use fastmps::mps::workload::WorkloadKind;
+    use fastmps::util::json::Json;
+
+    // A new client declaring gbs explicitly must emit exactly the bytes a
+    // pre-workload client would have: the default tag is omitted, not
+    // serialized as "workload": "gbs" — so dedup, affinity, and old
+    // servers all see the same submit.
+    let mut tagged = JobSpec::new("/data/store", 64);
+    tagged.workload = WorkloadKind::Gbs;
+    let untagged = JobSpec::new("/data/store", 64);
+    let tagged_wire = tagged.to_json().dump();
+    let untagged_wire = untagged.to_json().dump();
+    assert_eq!(tagged_wire, untagged_wire, "explicit gbs must not change the wire form");
+    assert!(
+        !tagged_wire.contains("workload"),
+        "gbs submits carry no workload key: {tagged_wire}"
+    );
+
+    // And the round trip through the pre-workload wire form is lossless:
+    // parsing a spec with no workload key yields gbs, which re-serializes
+    // to the identical bytes.
+    let parsed = JobSpec::from_json(&tagged.to_json()).unwrap();
+    assert_eq!(parsed.workload, WorkloadKind::Gbs);
+    assert_eq!(parsed.to_json().dump(), untagged_wire);
+
+    // A qubit declaration, by contrast, is on the wire and survives the
+    // round trip.
+    let mut qubit = JobSpec::new("/data/store", 64);
+    qubit.workload = WorkloadKind::Qubit;
+    let qubit_wire = qubit.to_json();
+    assert_eq!(
+        qubit_wire.get("workload").and_then(Json::as_str),
+        Some("qubit")
+    );
+    assert_eq!(
+        JobSpec::from_json(&qubit_wire).unwrap().workload,
+        WorkloadKind::Qubit
+    );
+}
+
+#[test]
 fn trace_op_replays_job_timeline_end_to_end() {
     use std::collections::BTreeSet;
 

@@ -374,6 +374,92 @@ fn router_drain_finishes_in_flight_jobs_and_refuses_new_ones() {
 }
 
 #[test]
+fn qubit_store_pushed_and_sampled_through_router_matches_oracle() {
+    use fastmps::mps::exact::exact_site_distributions;
+    use fastmps::mps::qubit::QubitSpec;
+    use fastmps::mps::workload::{Workload, WorkloadKind};
+
+    // The workload-abstraction acceptance path: push a d=2 store through
+    // the router, submit with an explicit qubit declaration, and check
+    // the streamed sink against the exact-enumeration oracle. Nothing in
+    // the router or service knows the workload beyond its tag.
+    let root = scratch("qubit-e2e");
+    let qspec = QubitSpec::new("routed-qubit", 6, 6, 23);
+    let store_dir = root.join("qubit-store");
+    // F64 storage: the pushed bytes reproduce `generate()` exactly, so
+    // the transfer-matrix oracle over the generated chain is the truth.
+    GammaStore::create(&store_dir, qspec.clone(), StorePrecision::F64, StoreCodec::Raw).unwrap();
+
+    let backend_net = |tag: &str| NetConfig {
+        push_dir: Some(root.join(format!("pushed-{tag}"))),
+        ..loopback_net()
+    };
+    let b1 = NetServer::start(backend_cfg(), backend_net("b1")).unwrap();
+    let b2 = NetServer::start(backend_cfg(), backend_net("b2")).unwrap();
+    let addrs = vec![b1.local_addr().to_string(), b2.local_addr().to_string()];
+    let router = Router::start(router_cfg(addrs), loopback_net()).unwrap();
+    let mut client = Client::connect(&router.local_addr().to_string(), &loopback_net()).unwrap();
+
+    let report = client.push_store(&store_dir, 2048).unwrap();
+    assert!(!report.dedup);
+
+    // Submit by content key with the qubit declaration; enough samples
+    // for tight binomial error bars.
+    let n = 4096usize;
+    let mut spec = JobSpec::by_key(report.key, n);
+    spec.workload = WorkloadKind::Qubit;
+    spec.compute = Some(ComputePrecision::F64);
+    let id = client.submit(&spec).unwrap();
+    let res = client.wait(id, Duration::from_secs(120)).unwrap().unwrap();
+    assert_eq!(res.result.get("status").unwrap().as_str(), Some("done"));
+    assert_eq!(res.result.get("workload").unwrap().as_str(), Some("qubit"));
+    let sink = res.sink.expect("payload streamed back through the router");
+
+    // Exact enumeration over the same chain the backend sampled.
+    let mps = qspec.generate().unwrap();
+    let exact = exact_site_distributions(&mps).unwrap();
+    assert_eq!(sink.hist.len(), qspec.m);
+    for (site, h) in sink.hist.iter().enumerate() {
+        assert_eq!(h.len(), 2, "site {site}: binary outcome alphabet");
+        assert_eq!(h[0] + h[1], n as u64);
+        let p1 = h[1] as f64 / n as f64;
+        // Binomial error at N=4096 is ≤ 0.5/√4096 ≈ 0.008; allow 5σ.
+        assert!(
+            (p1 - exact[site][1]).abs() < 0.04,
+            "site {site}: sampled P(1) = {p1} vs exact {}",
+            exact[site][1]
+        );
+    }
+
+    // A wrong declaration against the same store is a typed failure, not
+    // a silent GBS run: the dispatcher checks the manifest tag.
+    let mut wrong = JobSpec::by_key(report.key, 8);
+    wrong.workload = WorkloadKind::Gbs;
+    wrong.sample_base = n as u64;
+    let wid = client.submit(&wrong).unwrap();
+    let wres = client.wait(wid, Duration::from_secs(60)).unwrap().unwrap();
+    assert_eq!(wres.result.get("status").unwrap().as_str(), Some("failed"));
+    let err = wres.result.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("workload mismatch"), "typed refusal, got: {err}");
+
+    // The listing carries the workload column through the router.
+    let listed = client.list().unwrap();
+    let tags: Vec<&str> = listed
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.get("workload").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(tags, vec!["qubit", "gbs"]);
+
+    drop(client);
+    drop(router);
+    drop(b1);
+    drop(b2);
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
 fn dead_backend_goes_down_and_traffic_routes_around_it() {
     let root = scratch("down");
     let (_, store_dir) = make_store(&root);
