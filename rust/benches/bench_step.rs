@@ -2,14 +2,17 @@
 //! allocs/step of `NativeEngine::step_prepared` at several N×χ×d points,
 //! written to `BENCH_step.json`.
 //!
-//! Exercises the three tentpole optimizations directly: the prepared-site
-//! path (no Γ clone/convert per step), the reusable step workspace
-//! (allocs/step must read 0.000 after warm-up), and the row-vs-bond GEMM
-//! split (the small-N × large-χ points are where the bond split wins).
+//! Exercises the tentpole optimizations directly: the prepared-site path
+//! (no Γ clone/convert per step), the reusable step workspace
+//! (allocs/step must read 0.000 after warm-up), the row-vs-bond GEMM
+//! split (the small-N × large-χ points are where the bond split wins),
+//! and the planar (split re/im) kernel layout vs the interleaved one —
+//! each point runs both layouts and the summary reports the planar
+//! speedup ratio (`planar_over_interleaved`).
 //!
 //! Run with `cargo bench --bench bench_step` from `rust/`.
 
-use fastmps::config::{ComputePrecision, ScalingMode};
+use fastmps::config::{ComputePrecision, Layout, ScalingMode};
 use fastmps::linalg::{matmul_flops, GemmSplit};
 use fastmps::metrics::keys;
 use fastmps::mps::Site;
@@ -47,12 +50,14 @@ struct Point {
     d: usize,
     threads: usize,
     split: GemmSplit,
+    layout: Layout,
 }
 
 fn run_point(p: &Point, reps: usize) -> Json {
     let site = square_site(p.chi, p.d, 42);
     let mut eng = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, p.threads);
     eng.split = p.split;
+    eng.layout = p.layout;
     let prep = PreparedSite::prepare(&site, eng.prep_key());
     let mut env = filled_env(p.n, p.chi, 7);
     let th: Vec<f32> = (0..p.n).map(|i| ((i % 97) as f32 + 0.5) / 97.0).collect();
@@ -93,6 +98,7 @@ fn run_point(p: &Point, reps: usize) -> Json {
         ("d", format!("{}", p.d)),
         ("threads", format!("{}", p.threads)),
         ("split", p.split.as_str().into()),
+        ("layout", p.layout.as_str().into()),
         ("steps_per_sec", format!("{steps_per_sec:.1}")),
         ("gflop_per_sec", format!("{gflops:.2}")),
         ("allocs_per_step", format!("{steady_allocs:.3}")),
@@ -104,6 +110,7 @@ fn run_point(p: &Point, reps: usize) -> Json {
         ("d", Json::Num(p.d as f64)),
         ("threads", Json::Num(p.threads as f64)),
         ("split", Json::Str(p.split.as_str().into())),
+        ("layout", Json::Str(p.layout.as_str().into())),
         ("steps_per_sec", Json::Num(steps_per_sec)),
         ("gflop_per_sec", Json::Num(gflops)),
         ("allocs_per_step", Json::Num(steady_allocs)),
@@ -112,16 +119,31 @@ fn run_point(p: &Point, reps: usize) -> Json {
 
 fn main() {
     bench::header("step", "allocation-free prepared-site step hot path");
-    let points = [
+    let shapes = [
         // Large N: the classic data-parallel regime (row split).
-        Point { n: 256, chi: 96, d: 3, threads: 1, split: GemmSplit::Auto },
-        Point { n: 256, chi: 96, d: 3, threads: 4, split: GemmSplit::Auto },
+        (256, 96, 3, 1, GemmSplit::Auto),
+        (256, 96, 3, 4, GemmSplit::Auto),
         // Small N × wide bond: where the bond (column) split earns its keep.
-        Point { n: 8, chi: 256, d: 4, threads: 4, split: GemmSplit::Rows },
-        Point { n: 8, chi: 256, d: 4, threads: 4, split: GemmSplit::Cols },
+        (8, 256, 4, 4, GemmSplit::Rows),
+        (8, 256, 4, 4, GemmSplit::Cols),
         // Single-sample latency point.
-        Point { n: 1, chi: 256, d: 4, threads: 4, split: GemmSplit::Auto },
+        (1, 256, 4, 4, GemmSplit::Auto),
     ];
+    // Every shape runs under BOTH layouts so the planar-vs-interleaved
+    // ratio compares like against like (same shape, threads, split).
+    let points: Vec<Point> = shapes
+        .iter()
+        .flat_map(|&(n, chi, d, threads, split)| {
+            [Layout::Interleaved, Layout::Planar].map(|layout| Point {
+                n,
+                chi,
+                d,
+                threads,
+                split,
+                layout,
+            })
+        })
+        .collect();
     let t0 = std::time::Instant::now();
     let results: Vec<Json> = points.iter().map(|p| run_point(p, 30)).collect();
     let wall = t0.elapsed().as_secs_f64();
@@ -134,6 +156,22 @@ fn main() {
         .iter()
         .filter_map(|j| j.get("allocs_per_step").and_then(|v| v.as_f64()))
         .fold(0.0f64, f64::max);
+    let layout_gflops = |layout: &str| -> f64 {
+        results
+            .iter()
+            .filter(|j| {
+                j.get("layout").and_then(|v| v.as_str()) == Some(layout)
+            })
+            .filter_map(|j| j.get("gflop_per_sec").and_then(|v| v.as_f64()))
+            .fold(0.0f64, f64::max)
+    };
+    let planar_gflops = layout_gflops("planar");
+    let interleaved_gflops = layout_gflops("interleaved");
+    let planar_over_interleaved = if interleaved_gflops > 0.0 {
+        planar_gflops / interleaved_gflops
+    } else {
+        0.0
+    };
     bench::paper(
         "§3: per-site step cost bounds sampling; resident tensors + bond-axis parallelism",
     );
@@ -144,6 +182,8 @@ fn main() {
         ("wall_secs", Json::Num(wall)),
         ("steps_per_sec", Json::Num(best)),
         ("allocs_per_step_worst", Json::Num(worst_allocs)),
+        ("planar_gflops", Json::Num(planar_gflops)),
+        ("planar_over_interleaved", Json::Num(planar_over_interleaved)),
         ("points", Json::Arr(results)),
     ]);
     std::fs::write("../BENCH_step.json", out.pretty())

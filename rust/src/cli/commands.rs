@@ -37,6 +37,7 @@ COMMANDS:
               [--p1 N] [--p2 N] [--single-site] [--n1 N] [--n2 N]
               [--compute f64|f32|tf32] [--scaling per-sample|global|none]
               [--threads N] [--gemm-split auto|rows|cols]
+              [--layout auto|interleaved|planar]
               [--net nvlink3|pcie4|ib|tianhe3|sunway|ideal] [--disk-bw BPS]
               [--artifacts DIR] [--json]
   validate    Sample + compare against exact marginals (Fig. 9)
@@ -53,6 +54,7 @@ COMMANDS:
               [--cache N] [--linger-ms N] [--poll-ms N] [--n2 N]
               [--target-batch N] [--compute C] [--scaling S] [--engine E]
               [--threads N] [--gemm-split auto|rows|cols] [--prep-mb N]
+              [--layout auto|interleaved|planar]
               [--disk-bw BPS] [--artifacts DIR] [--trace-buf N]
               [--max-seconds S] [--log-level L] [--json]
               file only: [--drain]
@@ -241,6 +243,7 @@ fn config_from_args(args: &Args, store: &GammaStore) -> Result<RunConfig> {
     cfg.p2 = args.usize_or("p2", 1)?;
     cfg.gemm_threads = args.usize_or("threads", 1)?;
     cfg.gemm_split = crate::linalg::GemmSplit::parse(&args.str_or("gemm-split", "auto"))?;
+    cfg.layout = crate::config::Layout::parse(&args.str_or("layout", "auto"))?;
     cfg.compute = ComputePrecision::parse(&args.str_or("compute", "f32"))?;
     cfg.scaling = ScalingMode::parse(&args.str_or("scaling", "per-sample"))?;
     cfg.engine = EngineKind::parse(&args.str_or("engine", "native"))?;
@@ -453,6 +456,7 @@ fn service_config_from_args(args: &Args) -> Result<ServiceConfig> {
         engine: EngineKind::parse(&args.str_or("engine", "native"))?,
         gemm_threads: args.usize_or("threads", d.gemm_threads)?,
         gemm_split: crate::linalg::GemmSplit::parse(&args.str_or("gemm-split", "auto"))?,
+        layout: crate::config::Layout::parse(&args.str_or("layout", "auto"))?,
         prep_cache_bytes: args.u64_or("prep-mb", d.prep_cache_bytes >> 20)? << 20,
         disk_bw: args.f64_opt("disk-bw")?,
         artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
@@ -1121,6 +1125,22 @@ mod tests {
             )))
             .is_err(),
             "bad --gemm-split must be rejected"
+        );
+        run_cli(&argv(&format!(
+            "sample --data {d} --samples 32 --n1 32 --n2 16 --threads 2 \
+             --layout planar --compute f32"
+        )))
+        .unwrap();
+        run_cli(&argv(&format!(
+            "sample --data {d} --samples 32 --n1 32 --n2 16 --layout interleaved"
+        )))
+        .unwrap();
+        assert!(
+            run_cli(&argv(&format!(
+                "sample --data {d} --samples 32 --layout diagonal"
+            )))
+            .is_err(),
+            "bad --layout must be rejected"
         );
         run_cli(&argv(&format!(
             "sample --data {d} --samples 32 --n1 32 --n2 32 --scheme mp --compute f64"

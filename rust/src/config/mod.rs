@@ -91,6 +91,55 @@ impl ScalingMode {
     }
 }
 
+/// Memory layout of the native engine's step kernels.
+///
+/// `Interleaved` keeps complex values as `(re, im)` pairs (the classic
+/// `Complex<T>` array); `Planar` splits each operand into separate
+/// real/imaginary planes so the axpy inner loop vectorizes as plain
+/// fused-free mul/add/sub lanes (and, under `--features simd`, an
+/// explicit AVX2/NEON microkernel). Both paths accumulate every output
+/// element in the same ascending-k order, so results are bit-identical —
+/// the layout choice is purely a throughput knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Layout {
+    /// Planar for the f32-family compute precisions (f32/tf32/f16, where
+    /// the SIMD win is largest), interleaved for f64.
+    #[default]
+    Auto,
+    /// Force `Complex<T>` pair layout everywhere.
+    Interleaved,
+    /// Force split real/imaginary planes for the step hot path.
+    Planar,
+}
+
+impl Layout {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Layout::Auto => "auto",
+            Layout::Interleaved => "interleaved",
+            Layout::Planar => "planar",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "interleaved" => Ok(Self::Interleaved),
+            "planar" => Ok(Self::Planar),
+            _ => Err(Error::config(format!("unknown layout '{s}'"))),
+        }
+    }
+
+    /// Whether the planar path is used for `precision` under this policy.
+    pub fn planar_for(self, precision: ComputePrecision) -> bool {
+        match self {
+            Layout::Planar => true,
+            Layout::Interleaved => false,
+            Layout::Auto => precision != ComputePrecision::F64,
+        }
+    }
+}
+
 /// Which engine executes the per-site step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
@@ -137,6 +186,8 @@ pub struct RunConfig {
     /// bond dimension — the paper's tensor-parallel axis; auto picks by
     /// shape).
     pub gemm_split: GemmSplit,
+    /// Step-kernel memory layout for the native engine (see [`Layout`]).
+    pub layout: Layout,
     pub compute: ComputePrecision,
     pub store_precision: StorePrecision,
     pub store_codec: StoreCodec,
@@ -176,6 +227,7 @@ impl RunConfig {
             p2: 1,
             gemm_threads: 1,
             gemm_split: GemmSplit::Auto,
+            layout: Layout::Auto,
             compute: ComputePrecision::F32,
             store_precision: StorePrecision::F16,
             store_codec: StoreCodec::Raw,
@@ -239,6 +291,7 @@ impl RunConfig {
             ("p2", Json::Num(self.p2 as f64)),
             ("compute", Json::Str(self.compute.as_str().into())),
             ("gemm_split", Json::Str(self.gemm_split.as_str().into())),
+            ("layout", Json::Str(self.layout.as_str().into())),
             (
                 "store_precision",
                 Json::Str(self.store_precision.as_str().into()),
@@ -284,6 +337,8 @@ pub struct ServiceConfig {
     pub gemm_threads: usize,
     /// GEMM split axis for the resident engines (see [`RunConfig`]).
     pub gemm_split: GemmSplit,
+    /// Step-kernel memory layout for the resident engines (see [`Layout`]).
+    pub layout: Layout,
     /// Byte budget for resident prepared-Γ chains per `(store, precision)`
     /// entry in the `StoreCache` — warm batches walk converted tensors
     /// with zero per-step conversion (and zero Γ I/O once fully resident).
@@ -321,6 +376,7 @@ impl Default for ServiceConfig {
             scaling: ScalingMode::PerSample,
             gemm_threads: 1,
             gemm_split: GemmSplit::Auto,
+            layout: Layout::Auto,
             prep_cache_bytes: 256 << 20,
             disk_bw: None,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -380,6 +436,7 @@ impl ServiceConfig {
             ("compute", Json::Str(self.compute.as_str().into())),
             ("scaling", Json::Str(self.scaling.as_str().into())),
             ("gemm_split", Json::Str(self.gemm_split.as_str().into())),
+            ("layout", Json::Str(self.layout.as_str().into())),
             ("prep_cache_bytes", Json::Num(self.prep_cache_bytes as f64)),
             ("trace_buf", Json::Num(self.trace_buf as f64)),
             (

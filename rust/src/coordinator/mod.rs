@@ -39,6 +39,7 @@ impl EngineBox {
             EngineKind::Native => {
                 let mut e = NativeEngine::new(cfg.compute, cfg.scaling, cfg.gemm_threads);
                 e.split = cfg.gemm_split;
+                e.layout = cfg.layout;
                 Ok(EngineBox::Native(e))
             }
             EngineKind::Xla => {

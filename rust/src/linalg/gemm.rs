@@ -17,10 +17,26 @@
 //! the single-threaded kernel because every C element is accumulated by
 //! exactly one thread in the same k order. FLOP counts follow the paper's
 //! convention: one complex MAC = 8 real FLOPs.
+//!
+//! Two kernel families share that discipline:
+//!
+//! - **interleaved** (`Complex<T>` AoS) — the original path, always
+//!   available;
+//! - **planar** (split re/im planes, [`PlanarScalar`]) — the SIMD hot
+//!   path: the innermost loops are straight-line real FMA chains the
+//!   compiler autovectorizes, or the explicit AVX2/NEON microkernels
+//!   behind the `simd` feature. Bit-identical to interleaved because each
+//!   lane evaluates the exact `Complex::mul_add` association.
+//!
+//! Threading goes through [`Exec`]: per-call scoped spawns or the
+//! resident [`pool::WorkerPool`](super::pool::WorkerPool); the partition
+//! arithmetic lives in one place (`dispatch_regions`) so the variants
+//! cannot drift.
 
 use crate::util::num::Float;
 
-use crate::tensor::{Complex, Mat, MatRef, Tensor3};
+use super::pool::Exec;
+use crate::tensor::{Complex, Mat, MatRef, PlanarMat, PlanarMatRef, PlanarTensor3, Tensor3};
 use crate::util::error::{Error, Result};
 
 /// Real FLOPs of an (m,k)×(k,n) complex GEMM (8 per complex MAC).
@@ -122,84 +138,145 @@ pub fn gemm_acc_split<T: Float + std::ops::AddAssign + Send + Sync>(
     threads: usize,
     split: GemmSplit,
 ) -> Result<()> {
-    if a.cols != b.rows || c.rows != a.rows || c.cols != b.cols {
-        return Err(Error::shape(format!(
-            "gemm_acc: ({},{})×({},{})→({},{})",
-            a.rows, a.cols, b.rows, b.cols, c.rows, c.cols
-        )));
-    }
-    // C is written through a raw base pointer below; a hand-built Mat
-    // whose buffer disagrees with its dims must fail here, not corrupt
-    // the heap.
-    if c.data.len() != c.rows * c.cols {
-        return Err(Error::shape(format!(
-            "gemm_acc: C buffer holds {} elements for a {}×{} shape",
-            c.data.len(),
-            c.rows,
-            c.cols
-        )));
-    }
+    gemm_acc_split_on(a, b, c, Exec::Scoped(threads), split)
+}
+
+/// [`gemm_acc_split`] on an explicit executor — the pooled form is what
+/// the resident engines use so threaded steps stop paying per-call spawn
+/// bookkeeping.
+pub fn gemm_acc_split_on<T: Float + std::ops::AddAssign + Send + Sync>(
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    c: &mut Mat<T>,
+    exec: Exec<'_>,
+    split: GemmSplit,
+) -> Result<()> {
+    check_gemm_shapes(a.rows, a.cols, b.rows, b.cols, c.rows, c.cols, c.data.len())?;
     let m = a.rows;
     let n = b.cols;
     if m == 0 || n == 0 {
         return Ok(());
     }
-    let threads = threads.max(1);
     let c_ptr = SendPtr(c.data.as_mut_ptr());
-    if threads == 1 {
-        // Inline fast path: no scope, no spawn — the allocation-free
-        // steady state the step workspace depends on.
-        // Safety: `c` is exclusively borrowed and no other region is live.
-        unsafe { kernel_blocked(a, b, c_ptr, 0, m, 0, n) };
+    // Safety: `c` is exclusively borrowed; dispatch_regions hands each
+    // part a disjoint region of it and joins before returning.
+    dispatch_regions(exec, split, m, n, |r0, r1, j0, j1| unsafe {
+        kernel_blocked(a, b, c_ptr, r0, r1 - r0, j0, j1)
+    });
+    Ok(())
+}
+
+/// C ← A·B (β=0 overwrite): the same kernels and k order as the
+/// accumulate form, but C's prior contents are ignored — callers drop
+/// their zero-fill pass. Bit-identical to zero-fill + [`gemm_acc_split_on`]
+/// including rows whose every `av == 0` skip fires (such rows are filled
+/// with the same `+0.0` the zero-fill would have left).
+pub fn gemm_ovw_split_on<T: Float + std::ops::AddAssign + Send + Sync>(
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    c: &mut Mat<T>,
+    exec: Exec<'_>,
+    split: GemmSplit,
+) -> Result<()> {
+    check_gemm_shapes(a.rows, a.cols, b.rows, b.cols, c.rows, c.cols, c.data.len())?;
+    let m = a.rows;
+    let n = b.cols;
+    if m == 0 || n == 0 {
         return Ok(());
     }
-    match choose_split(split, m, n, threads) {
-        GemmSplit::Rows | GemmSplit::Auto => {
-            let threads = threads.min(m);
-            let rows_per = m.div_ceil(threads);
-            std::thread::scope(|scope| {
-                for t in 0..threads {
-                    let r0 = t * rows_per;
-                    let r1 = ((t + 1) * rows_per).min(m);
-                    if r0 >= r1 {
-                        break;
-                    }
-                    let c_ptr = c_ptr;
-                    scope.spawn(move || {
-                        // Safety: row panels [r0, r1) are disjoint across
-                        // threads; the buffer outlives the scope.
-                        unsafe { kernel_blocked(a, b, c_ptr, r0, r1 - r0, 0, n) };
-                    });
-                }
-            });
-        }
-        GemmSplit::Cols => {
-            let threads = threads.min(n.div_ceil(COL_MIN)).max(1).min(n);
-            let cols_per = n.div_ceil(threads);
-            std::thread::scope(|scope| {
-                for t in 0..threads {
-                    let j0 = t * cols_per;
-                    let j1 = ((t + 1) * cols_per).min(n);
-                    if j0 >= j1 {
-                        break;
-                    }
-                    let c_ptr = c_ptr;
-                    scope.spawn(move || {
-                        // Safety: column stripes [j0, j1) are disjoint
-                        // across threads; the buffer outlives the scope.
-                        unsafe { kernel_blocked(a, b, c_ptr, 0, m, j0, j1) };
-                    });
-                }
-            });
-        }
+    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    // Safety: as in gemm_acc_split_on — disjoint regions, joined dispatch.
+    dispatch_regions(exec, split, m, n, |r0, r1, j0, j1| unsafe {
+        kernel_overwrite(a, b, c_ptr, r0, r1 - r0, j0, j1)
+    });
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_gemm_shapes(
+    a_rows: usize,
+    a_cols: usize,
+    b_rows: usize,
+    b_cols: usize,
+    c_rows: usize,
+    c_cols: usize,
+    c_len: usize,
+) -> Result<()> {
+    if a_cols != b_rows || c_rows != a_rows || c_cols != b_cols {
+        return Err(Error::shape(format!(
+            "gemm_acc: ({a_rows},{a_cols})×({b_rows},{b_cols})→({c_rows},{c_cols})"
+        )));
+    }
+    // C is written through a raw base pointer; a hand-built Mat whose
+    // buffer disagrees with its dims must fail here, not corrupt the heap.
+    if c_len != c_rows * c_cols {
+        return Err(Error::shape(format!(
+            "gemm_acc: C buffer holds {c_len} elements for a {c_rows}×{c_cols} shape"
+        )));
     }
     Ok(())
 }
 
+/// Partition the (m × n) output per `split` and run `body(r0, r1, j0, j1)`
+/// exactly once per disjoint region on `exec`. The single source of
+/// partition arithmetic for every kernel variant (interleaved/planar,
+/// accumulate/overwrite), so their region boundaries — and hence which
+/// part computes which element — cannot drift apart. Bit-identity never
+/// depends on the partitioning anyway: each output element is fully
+/// accumulated by exactly one part in the same k order.
+fn dispatch_regions<F: Fn(usize, usize, usize, usize) + Sync>(
+    exec: Exec<'_>,
+    split: GemmSplit,
+    m: usize,
+    n: usize,
+    body: F,
+) {
+    let width = exec.width();
+    if width == 1 {
+        // Inline fast path: no scope, no dispatch — the allocation-free
+        // steady state the step workspace depends on.
+        body(0, m, 0, n);
+        return;
+    }
+    match choose_split(split, m, n, width) {
+        GemmSplit::Rows | GemmSplit::Auto => {
+            let parts = width.min(m);
+            let rows_per = m.div_ceil(parts);
+            exec.run_parts(parts, |t| {
+                let r0 = t * rows_per;
+                let r1 = ((t + 1) * rows_per).min(m);
+                if r0 < r1 {
+                    body(r0, r1, 0, n);
+                }
+            });
+        }
+        GemmSplit::Cols => {
+            let parts = width.min(n.div_ceil(COL_MIN)).max(1).min(n);
+            let cols_per = n.div_ceil(parts);
+            exec.run_parts(parts, |t| {
+                let j0 = t * cols_per;
+                let j1 = ((t + 1) * cols_per).min(n);
+                if j0 < j1 {
+                    body(0, m, j0, j1);
+                }
+            });
+        }
+    }
+}
+
 /// Shared raw pointer for the splits' disjoint C-region writes.
 #[derive(Clone, Copy)]
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: shared across parts only while each writes a disjoint region.
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Split-plane raw C pointer for the planar kernels.
+#[derive(Clone, Copy)]
+struct PlanarPtr<T> {
+    re: SendPtr<T>,
+    im: SendPtr<T>,
+}
 
 /// Inner axpy: `crow += av * brow`, unrolled by 4.
 #[inline]
@@ -219,6 +296,31 @@ fn axpy_row<T: Float + std::ops::AddAssign>(
     }
     while j < w {
         crow[j] = crow[j].mul_add(av, brow[j]);
+        j += 1;
+    }
+}
+
+/// First-term overwrite: `crow = 0 + av * brow`. Evaluates the SAME
+/// `zero.mul_add(av, b)` expression the accumulate form computes on a
+/// zero-filled C — a bare product would differ in the sign of zero
+/// (`0.0 + (-0.0)` is `+0.0`).
+#[inline]
+fn axpy_row_set<T: Float + std::ops::AddAssign>(
+    crow: &mut [Complex<T>],
+    av: Complex<T>,
+    brow: &[Complex<T>],
+) {
+    let w = crow.len();
+    let mut j = 0;
+    while j + 4 <= w {
+        crow[j] = Complex::zero().mul_add(av, brow[j]);
+        crow[j + 1] = Complex::zero().mul_add(av, brow[j + 1]);
+        crow[j + 2] = Complex::zero().mul_add(av, brow[j + 2]);
+        crow[j + 3] = Complex::zero().mul_add(av, brow[j + 3]);
+        j += 4;
+    }
+    while j < w {
+        crow[j] = Complex::zero().mul_add(av, brow[j]);
         j += 1;
     }
 }
@@ -269,11 +371,476 @@ unsafe fn kernel_blocked<T: Float + std::ops::AddAssign>(
     }
 }
 
-/// y ← A·x (complex matrix–vector).
+/// β=0 overwrite kernel. The first non-skipped k term of each row uses
+/// [`axpy_row_set`]; later terms accumulate with [`axpy_row`]; rows whose
+/// every `av` hit the zero skip are filled with `+0.0`. Per output
+/// element, k still ascends monotonically, so the result is bitwise equal
+/// to zero-filling C and running [`kernel_blocked`] (the MC row blocking
+/// is dropped here — it never affected per-element accumulation order).
+///
+/// # Safety
+/// Same exclusive-region contract as [`kernel_blocked`].
+unsafe fn kernel_overwrite<T: Float + std::ops::AddAssign>(
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    c_ptr: SendPtr<Complex<T>>,
+    row0: usize,
+    my_rows: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let n = b.cols;
+    for i in 0..my_rows {
+        let arow = a.row(row0 + i);
+        // Safety (per the contract above): this row segment lies inside
+        // the caller's exclusive region.
+        let crow = unsafe {
+            std::slice::from_raw_parts_mut(c_ptr.0.add((row0 + i) * n + j0), j1 - j0)
+        };
+        let mut init = false;
+        for (kk, av) in arow.iter().enumerate() {
+            if av.re == T::zero() && av.im == T::zero() {
+                continue;
+            }
+            let brow = &b.row(kk)[j0..j1];
+            if init {
+                axpy_row(crow, *av, brow);
+            } else {
+                axpy_row_set(crow, *av, brow);
+                init = true;
+            }
+        }
+        if !init {
+            crow.fill(Complex::zero());
+        }
+    }
+}
+
+/// Scalar backing the planar (split re/im) kernels. The required methods
+/// are the split-plane axpy the SIMD microkernels specialize; the scalar
+/// bodies below evaluate, per lane, the exact association of
+/// [`Complex::mul_add`]:
+///
+/// ```text
+/// re' = (re + ar·b_re) - ai·b_im
+/// im' = (im + ar·b_im) + ai·b_re
+/// ```
+///
+/// which is what makes the planar path bit-identical to the interleaved
+/// kernels. The `simd` feature swaps in explicit AVX2 (x86_64, runtime
+/// detected) / NEON (aarch64) implementations that perform the same
+/// mul/add/sub sequence lane-wise — never a fused `vfmadd`, whose single
+/// rounding would break the identity; off-feature and on other targets
+/// the scalar fallback runs.
+pub trait PlanarScalar: Float {
+    /// `crow += av * brow` over split planes (all slices equal length).
+    fn planar_axpy(
+        cre: &mut [Self],
+        cim: &mut [Self],
+        ar: Self,
+        ai: Self,
+        bre: &[Self],
+        bim: &[Self],
+    );
+    /// First-term overwrite: the same expression starting from zero (see
+    /// [`axpy_row_set`] for the sign-of-zero rationale).
+    fn planar_axpy_set(
+        cre: &mut [Self],
+        cim: &mut [Self],
+        ar: Self,
+        ai: Self,
+        bre: &[Self],
+        bim: &[Self],
+    );
+}
+
+#[inline]
+fn planar_axpy_scalar<T: Float>(
+    cre: &mut [T],
+    cim: &mut [T],
+    ar: T,
+    ai: T,
+    bre: &[T],
+    bim: &[T],
+) {
+    for ((cr, ci), (&br, &bi)) in cre
+        .iter_mut()
+        .zip(cim.iter_mut())
+        .zip(bre.iter().zip(bim))
+    {
+        *cr = (*cr + ar * br) - ai * bi;
+        *ci = (*ci + ar * bi) + ai * br;
+    }
+}
+
+#[inline]
+fn planar_axpy_set_scalar<T: Float>(
+    cre: &mut [T],
+    cim: &mut [T],
+    ar: T,
+    ai: T,
+    bre: &[T],
+    bim: &[T],
+) {
+    for ((cr, ci), (&br, &bi)) in cre
+        .iter_mut()
+        .zip(cim.iter_mut())
+        .zip(bre.iter().zip(bim))
+    {
+        *cr = (T::zero() + ar * br) - ai * bi;
+        *ci = (T::zero() + ar * bi) + ai * br;
+    }
+}
+
+/// Explicit AVX2 microkernels (runtime-detected behind the `simd`
+/// feature). Separate mul/add/sub in the exact scalar association — no
+/// `vfmadd`, whose fused rounding would break bit-identity.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd_arch {
+    use core::arch::x86_64::*;
+
+    macro_rules! avx2_axpy {
+        ($name:ident, $t:ty, $lanes:expr, $set1:ident, $load:ident, $store:ident,
+         $mul:ident, $add:ident, $sub:ident, $zero:ident) => {
+            #[allow(clippy::too_many_arguments)]
+            #[target_feature(enable = "avx2")]
+            pub unsafe fn $name(
+                set: bool,
+                cre: *mut $t,
+                cim: *mut $t,
+                ar: $t,
+                ai: $t,
+                bre: *const $t,
+                bim: *const $t,
+                w: usize,
+            ) {
+                let var = $set1(ar);
+                let vai = $set1(ai);
+                let mut j = 0;
+                while j + $lanes <= w {
+                    let br = $load(bre.add(j));
+                    let bi = $load(bim.add(j));
+                    let (cr, ci) = if set {
+                        ($zero(), $zero())
+                    } else {
+                        ($load(cre.add(j)), $load(cim.add(j)))
+                    };
+                    let nr = $sub($add(cr, $mul(var, br)), $mul(vai, bi));
+                    let ni = $add($add(ci, $mul(var, bi)), $mul(vai, br));
+                    $store(cre.add(j), nr);
+                    $store(cim.add(j), ni);
+                    j += $lanes;
+                }
+                while j < w {
+                    let br = *bre.add(j);
+                    let bi = *bim.add(j);
+                    let (cr, ci) = if set {
+                        (0.0, 0.0)
+                    } else {
+                        (*cre.add(j), *cim.add(j))
+                    };
+                    *cre.add(j) = (cr + ar * br) - ai * bi;
+                    *cim.add(j) = (ci + ar * bi) + ai * br;
+                    j += 1;
+                }
+            }
+        };
+    }
+
+    avx2_axpy!(
+        axpy_f32, f32, 8, _mm256_set1_ps, _mm256_loadu_ps, _mm256_storeu_ps, _mm256_mul_ps,
+        _mm256_add_ps, _mm256_sub_ps, _mm256_setzero_ps
+    );
+    avx2_axpy!(
+        axpy_f64, f64, 4, _mm256_set1_pd, _mm256_loadu_pd, _mm256_storeu_pd, _mm256_mul_pd,
+        _mm256_add_pd, _mm256_sub_pd, _mm256_setzero_pd
+    );
+}
+
+/// NEON microkernels (aarch64 baseline — no runtime detection needed).
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod simd_arch {
+    use core::arch::aarch64::*;
+
+    macro_rules! neon_axpy {
+        ($name:ident, $t:ty, $lanes:expr, $dup:ident, $load:ident, $store:ident,
+         $mul:ident, $add:ident, $sub:ident) => {
+            #[allow(clippy::too_many_arguments)]
+            pub unsafe fn $name(
+                set: bool,
+                cre: *mut $t,
+                cim: *mut $t,
+                ar: $t,
+                ai: $t,
+                bre: *const $t,
+                bim: *const $t,
+                w: usize,
+            ) {
+                let var = $dup(ar);
+                let vai = $dup(ai);
+                let zero = $dup(0.0);
+                let mut j = 0;
+                while j + $lanes <= w {
+                    let br = $load(bre.add(j));
+                    let bi = $load(bim.add(j));
+                    let (cr, ci) = if set {
+                        (zero, zero)
+                    } else {
+                        ($load(cre.add(j)), $load(cim.add(j)))
+                    };
+                    let nr = $sub($add(cr, $mul(var, br)), $mul(vai, bi));
+                    let ni = $add($add(ci, $mul(var, bi)), $mul(vai, br));
+                    $store(cre.add(j), nr);
+                    $store(cim.add(j), ni);
+                    j += $lanes;
+                }
+                while j < w {
+                    let br = *bre.add(j);
+                    let bi = *bim.add(j);
+                    let (cr, ci) = if set {
+                        (0.0, 0.0)
+                    } else {
+                        (*cre.add(j), *cim.add(j))
+                    };
+                    *cre.add(j) = (cr + ar * br) - ai * bi;
+                    *cim.add(j) = (ci + ar * bi) + ai * br;
+                    j += 1;
+                }
+            }
+        };
+    }
+
+    neon_axpy!(
+        axpy_f32, f32, 4, vdupq_n_f32, vld1q_f32, vst1q_f32, vmulq_f32, vaddq_f32, vsubq_f32
+    );
+    neon_axpy!(
+        axpy_f64, f64, 2, vdupq_n_f64, vld1q_f64, vst1q_f64, vmulq_f64, vaddq_f64, vsubq_f64
+    );
+}
+
+macro_rules! impl_planar_scalar {
+    ($t:ty, $kernel:ident) => {
+        impl PlanarScalar for $t {
+            #[inline]
+            #[allow(unreachable_code)]
+            fn planar_axpy(
+                cre: &mut [Self],
+                cim: &mut [Self],
+                ar: Self,
+                ai: Self,
+                bre: &[Self],
+                bim: &[Self],
+            ) {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                if is_x86_feature_detected!("avx2") {
+                    // Safety: equal-length slices (kernel invariant);
+                    // AVX2 presence just checked.
+                    unsafe {
+                        simd_arch::$kernel(
+                            false,
+                            cre.as_mut_ptr(),
+                            cim.as_mut_ptr(),
+                            ar,
+                            ai,
+                            bre.as_ptr(),
+                            bim.as_ptr(),
+                            cre.len(),
+                        )
+                    };
+                    return;
+                }
+                #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+                {
+                    // Safety: equal-length slices; NEON is aarch64 baseline.
+                    unsafe {
+                        simd_arch::$kernel(
+                            false,
+                            cre.as_mut_ptr(),
+                            cim.as_mut_ptr(),
+                            ar,
+                            ai,
+                            bre.as_ptr(),
+                            bim.as_ptr(),
+                            cre.len(),
+                        )
+                    };
+                    return;
+                }
+                planar_axpy_scalar(cre, cim, ar, ai, bre, bim)
+            }
+
+            #[inline]
+            #[allow(unreachable_code)]
+            fn planar_axpy_set(
+                cre: &mut [Self],
+                cim: &mut [Self],
+                ar: Self,
+                ai: Self,
+                bre: &[Self],
+                bim: &[Self],
+            ) {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                if is_x86_feature_detected!("avx2") {
+                    // Safety: as in planar_axpy.
+                    unsafe {
+                        simd_arch::$kernel(
+                            true,
+                            cre.as_mut_ptr(),
+                            cim.as_mut_ptr(),
+                            ar,
+                            ai,
+                            bre.as_ptr(),
+                            bim.as_ptr(),
+                            cre.len(),
+                        )
+                    };
+                    return;
+                }
+                #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+                {
+                    // Safety: as in planar_axpy.
+                    unsafe {
+                        simd_arch::$kernel(
+                            true,
+                            cre.as_mut_ptr(),
+                            cim.as_mut_ptr(),
+                            ar,
+                            ai,
+                            bre.as_ptr(),
+                            bim.as_ptr(),
+                            cre.len(),
+                        )
+                    };
+                    return;
+                }
+                planar_axpy_set_scalar(cre, cim, ar, ai, bre, bim)
+            }
+        }
+    };
+}
+
+impl_planar_scalar!(f32, axpy_f32);
+impl_planar_scalar!(f64, axpy_f64);
+
+/// Planar analogue of [`kernel_overwrite`]: identical row traversal,
+/// identical `av == 0` skip, identical per-element k order — the planes
+/// just carry re/im separately so the axpy is a straight real chain.
+///
+/// # Safety
+/// Same exclusive-region contract as [`kernel_blocked`], applied to both
+/// planes of C.
+unsafe fn kernel_overwrite_planar<T: PlanarScalar>(
+    a: PlanarMatRef<'_, T>,
+    b: PlanarMatRef<'_, T>,
+    c: PlanarPtr<T>,
+    row0: usize,
+    my_rows: usize,
+    j0: usize,
+    j1: usize,
+) {
+    let n = b.cols;
+    for i in 0..my_rows {
+        let r = row0 + i;
+        let are = a.row_re(r);
+        let aim = a.row_im(r);
+        // Safety (per the contract above): these row segments lie inside
+        // the caller's exclusive region of each plane.
+        let cre = unsafe { std::slice::from_raw_parts_mut(c.re.0.add(r * n + j0), j1 - j0) };
+        let cim = unsafe { std::slice::from_raw_parts_mut(c.im.0.add(r * n + j0), j1 - j0) };
+        let mut init = false;
+        for (kk, (&ar, &ai)) in are.iter().zip(aim).enumerate() {
+            if ar == T::zero() && ai == T::zero() {
+                continue;
+            }
+            let bre = &b.row_re(kk)[j0..j1];
+            let bim = &b.row_im(kk)[j0..j1];
+            if init {
+                T::planar_axpy(cre, cim, ar, ai, bre, bim);
+            } else {
+                T::planar_axpy_set(cre, cim, ar, ai, bre, bim);
+                init = true;
+            }
+        }
+        if !init {
+            cre.fill(T::zero());
+            cim.fill(T::zero());
+        }
+    }
+}
+
+/// Planar analogue of [`contract_env_into_on`]: β=0 overwrite into a
+/// reshaped (not zero-filled) planar temp. Bit-identical, element for
+/// element, to the interleaved contraction on the same values.
+pub fn planar_contract_env_into_on<T: PlanarScalar>(
+    env: &PlanarMat<T>,
+    gamma: &PlanarTensor3<T>,
+    temp: &mut PlanarTensor3<T>,
+    exec: Exec<'_>,
+    split: GemmSplit,
+) -> Result<()> {
+    if env.cols != gamma.d0 {
+        return Err(Error::shape(format!(
+            "contract_env(planar): env (N,{}) vs Γ ({},{},{})",
+            env.cols, gamma.d0, gamma.d1, gamma.d2
+        )));
+    }
+    let m = env.rows;
+    let n = gamma.d1 * gamma.d2;
+    if env.re.len() != m * env.cols || env.im.len() != m * env.cols {
+        return Err(Error::shape(format!(
+            "contract_env(planar): env planes hold {}/{} elements for a {}×{} shape",
+            env.re.len(),
+            env.im.len(),
+            m,
+            env.cols
+        )));
+    }
+    if gamma.re.len() != gamma.d0 * n || gamma.im.len() != gamma.d0 * n {
+        return Err(Error::shape(format!(
+            "contract_env(planar): Γ planes hold {}/{} elements for ({},{},{})",
+            gamma.re.len(),
+            gamma.im.len(),
+            gamma.d0,
+            gamma.d1,
+            gamma.d2
+        )));
+    }
+    temp.reshape(m, gamma.d1, gamma.d2);
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
+    let a = env.view();
+    let b = gamma.as_mat_ref();
+    let c = PlanarPtr {
+        re: SendPtr(temp.re.as_mut_ptr()),
+        im: SendPtr(temp.im.as_mut_ptr()),
+    };
+    // Safety: `temp` is exclusively borrowed; dispatch_regions hands each
+    // part a disjoint region of both planes and joins before returning.
+    dispatch_regions(exec, split, m, n, |r0, r1, j0, j1| unsafe {
+        kernel_overwrite_planar(a, b, c, r0, r1 - r0, j0, j1)
+    });
+    Ok(())
+}
+
+/// y ← A·x (complex matrix–vector). Allocates the output; hot paths use
+/// [`gemv_into`].
 pub fn gemv<T: Float + std::ops::AddAssign>(
     a: &Mat<T>,
     x: &[Complex<T>],
 ) -> Result<Vec<Complex<T>>> {
+    let mut y = Vec::new();
+    gemv_into(a, x, &mut y)?;
+    Ok(y)
+}
+
+/// [`gemv`] into a caller-owned buffer (cleared and resized in place —
+/// allocation-free once its capacity suffices).
+pub fn gemv_into<T: Float + std::ops::AddAssign>(
+    a: &Mat<T>,
+    x: &[Complex<T>],
+    y: &mut Vec<Complex<T>>,
+) -> Result<()> {
     if a.cols != x.len() {
         return Err(Error::shape(format!(
             "gemv: ({},{})×({})",
@@ -282,7 +849,8 @@ pub fn gemv<T: Float + std::ops::AddAssign>(
             x.len()
         )));
     }
-    let mut y = vec![Complex::zero(); a.rows];
+    y.clear();
+    y.resize(a.rows, Complex::zero());
     for (r, yv) in y.iter_mut().enumerate() {
         let row = a.row(r);
         let mut acc = Complex::zero();
@@ -291,7 +859,7 @@ pub fn gemv<T: Float + std::ops::AddAssign>(
         }
         *yv = acc;
     }
-    Ok(y)
+    Ok(())
 }
 
 /// The paper's per-site bond contraction:
@@ -319,19 +887,33 @@ pub fn contract_env_into<T: Float + std::ops::AddAssign + Send + Sync>(
     threads: usize,
     split: GemmSplit,
 ) -> Result<()> {
+    contract_env_into_on(env, gamma, temp, Exec::Scoped(threads), split)
+}
+
+/// [`contract_env_into`] on an explicit executor. Uses the β=0 overwrite
+/// kernel, so the old zero-fill pass over `temp` is gone — the output is
+/// reshaped without zeroing and every element is written exactly once
+/// (bit-identically to the zero-fill + accumulate form).
+pub fn contract_env_into_on<T: Float + std::ops::AddAssign + Send + Sync>(
+    env: &Mat<T>,
+    gamma: &Tensor3<T>,
+    temp: &mut Tensor3<T>,
+    exec: Exec<'_>,
+    split: GemmSplit,
+) -> Result<()> {
     if env.cols != gamma.d0 {
         return Err(Error::shape(format!(
             "contract_env: env (N,{}) vs Γ ({},{},{})",
             env.cols, gamma.d0, gamma.d1, gamma.d2
         )));
     }
-    temp.reset(env.rows, gamma.d1, gamma.d2);
+    temp.reshape(env.rows, gamma.d1, gamma.d2);
     let mut c = Mat {
         rows: env.rows,
         cols: gamma.d1 * gamma.d2,
         data: std::mem::take(&mut temp.data),
     };
-    let r = gemm_acc_split(env.view(), gamma.as_mat_ref(), &mut c, threads, split);
+    let r = gemm_ovw_split_on(env.view(), gamma.as_mat_ref(), &mut c, exec, split);
     temp.data = c.data;
     r
 }
@@ -508,6 +1090,202 @@ mod tests {
     #[test]
     fn flops_convention() {
         assert_eq!(matmul_flops(2, 3, 4), 8 * 24);
+    }
+
+    /// Sparsify: zero individual entries and whole rows of A so the
+    /// overwrite kernel's `init` bookkeeping (and the all-zero-row fill)
+    /// is actually exercised, negative zeros included.
+    fn sparsify(a: &mut Mat<f64>, rng: &mut Xoshiro256) {
+        for z in &mut a.data {
+            match rng.u64() % 5 {
+                0 => *z = C64::zero(),
+                1 => *z = C64::new(-0.0, -0.0),
+                _ => {}
+            }
+        }
+        if a.rows > 1 && rng.u64() % 2 == 0 {
+            let dead = (rng.u64() as usize) % a.rows;
+            for j in 0..a.cols {
+                a[(dead, j)] = C64::zero();
+            }
+        }
+    }
+
+    #[test]
+    fn overwrite_bit_identical_to_zero_fill_accumulate() {
+        crate::util::prop::quickcheck("ovw == zerofill+acc", |g| {
+            let m = g.len(1, 10);
+            let k = g.len(1, 20);
+            let n = g.len(1, 40);
+            let threads = g.len(1, 5);
+            let mut rng = Xoshiro256::seed_from(g.u64());
+            let mut a = random_mat(&mut rng, m, k);
+            sparsify(&mut a, &mut rng);
+            let b = random_mat(&mut rng, k, n);
+            for split in [GemmSplit::Auto, GemmSplit::Rows, GemmSplit::Cols] {
+                let mut acc = Mat::zeros(m, n);
+                gemm_acc_split(a.view(), b.view(), &mut acc, threads, split).unwrap();
+                // Poison the overwrite target so stale contents leaking
+                // through would be caught.
+                let mut ovw = Mat::zeros(m, n);
+                for z in &mut ovw.data {
+                    *z = C64::new(f64::NAN, -7.5);
+                }
+                gemm_ovw_split_on(a.view(), b.view(), &mut ovw, Exec::Scoped(threads), split)
+                    .unwrap();
+                if !bits_equal(&ovw.data, &acc.data) {
+                    return Err(format!("{split:?}×{threads} overwrite diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Bitwise comparison that treats NaN payloads and zero signs as
+    /// significant — `==` would paper over `-0.0`.
+    fn bits_equal(a: &[C64], b: &[C64]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.re.to_bits() == y.re.to_bits() && x.im.to_bits() == y.im.to_bits()
+            })
+    }
+
+    #[test]
+    fn planar_contraction_bit_identical_to_interleaved() {
+        crate::util::prop::quickcheck("planar == interleaved", |g| {
+            let n = g.len(1, 10);
+            let chi_l = g.len(1, 12);
+            let chi_r = g.len(1, 8);
+            let d = g.len(1, 4);
+            let mut rng = Xoshiro256::seed_from(g.u64());
+            let mut env = random_mat(&mut rng, n, chi_l);
+            sparsify(&mut env, &mut rng);
+            let gam = Tensor3::from_vec(
+                chi_l,
+                chi_r,
+                d,
+                (0..chi_l * chi_r * d)
+                    .map(|_| C64::new(rng.normal(), rng.normal()))
+                    .collect(),
+            )
+            .unwrap();
+            let mut want: Tensor3<f64> = Tensor3::zeros(0, 0, 0);
+            contract_env_into(&env, &gam, &mut want, 1, GemmSplit::Rows).unwrap();
+
+            // f64 planar, serial and threaded.
+            let penv = PlanarMat::from_interleaved(&env);
+            let pgam = PlanarTensor3::from_interleaved(&gam);
+            let mut ptemp: PlanarTensor3<f64> = PlanarTensor3::zeros(0, 0, 0);
+            for (exec, split) in [
+                (Exec::Scoped(1), GemmSplit::Rows),
+                (Exec::Scoped(3), GemmSplit::Rows),
+                (Exec::Scoped(3), GemmSplit::Cols),
+                (Exec::Scoped(3), GemmSplit::Auto),
+            ] {
+                planar_contract_env_into_on(&penv, &pgam, &mut ptemp, exec, split).unwrap();
+                if !bits_equal(&ptemp.to_interleaved().data, &want.data) {
+                    return Err(format!("f64 planar {split:?} diverged"));
+                }
+            }
+
+            // f32: interleaved serial vs planar (the precision the auto
+            // layout rule actually routes planar).
+            let env32 = Mat::from_vec(
+                n,
+                chi_l,
+                env.data.iter().map(|z| z.to_c32()).collect(),
+            )
+            .unwrap();
+            let gam32 = Tensor3::from_vec(
+                chi_l,
+                chi_r,
+                d,
+                gam.data.iter().map(|z| z.to_c32()).collect(),
+            )
+            .unwrap();
+            let mut want32: Tensor3<f32> = Tensor3::zeros(0, 0, 0);
+            contract_env_into(&env32, &gam32, &mut want32, 1, GemmSplit::Rows).unwrap();
+            let penv32 = PlanarMat::from_interleaved(&env32);
+            let pgam32 = PlanarTensor3::from_interleaved(&gam32);
+            let mut ptemp32: PlanarTensor3<f32> = PlanarTensor3::zeros(0, 0, 0);
+            planar_contract_env_into_on(
+                &penv32,
+                &pgam32,
+                &mut ptemp32,
+                Exec::Scoped(2),
+                GemmSplit::Auto,
+            )
+            .unwrap();
+            let got32 = ptemp32.to_interleaved();
+            for (x, y) in got32.data.iter().zip(&want32.data) {
+                if x.re.to_bits() != y.re.to_bits() || x.im.to_bits() != y.im.to_bits() {
+                    return Err("f32 planar diverged".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pooled_dispatch_bit_identical_to_scoped_and_serial() {
+        use super::super::pool::WorkerPool;
+        let pool = WorkerPool::new(3);
+        crate::util::prop::quickcheck("pooled == scoped == serial", |g| {
+            let m = g.len(1, 12);
+            let k = g.len(1, 16);
+            let n = g.len(1, 40);
+            let mut rng = Xoshiro256::seed_from(g.u64());
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let mut serial = Mat::zeros(m, n);
+            gemm_acc_split_on(a.view(), b.view(), &mut serial, Exec::Scoped(1), GemmSplit::Rows)
+                .unwrap();
+            for split in [GemmSplit::Auto, GemmSplit::Rows, GemmSplit::Cols] {
+                let mut scoped = Mat::zeros(m, n);
+                gemm_acc_split_on(a.view(), b.view(), &mut scoped, Exec::Scoped(3), split)
+                    .unwrap();
+                let mut pooled = Mat::zeros(m, n);
+                gemm_acc_split_on(a.view(), b.view(), &mut pooled, Exec::Pooled(&pool), split)
+                    .unwrap();
+                if !bits_equal(&scoped.data, &serial.data) {
+                    return Err(format!("scoped {split:?} diverged"));
+                }
+                if !bits_equal(&pooled.data, &serial.data) {
+                    return Err(format!("pooled {split:?} diverged"));
+                }
+                let mut pooled_ovw = Mat::zeros(m, n);
+                gemm_ovw_split_on(
+                    a.view(),
+                    b.view(),
+                    &mut pooled_ovw,
+                    Exec::Pooled(&pool),
+                    split,
+                )
+                .unwrap();
+                if !bits_equal(&pooled_ovw.data, &serial.data) {
+                    return Err(format!("pooled overwrite {split:?} diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemv_into_matches_gemv_and_reuses_buffer() {
+        let mut rng = Xoshiro256::seed_from(12);
+        let a = random_mat(&mut rng, 6, 10);
+        let x: Vec<C64> = (0..10)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let want = gemv(&a, &x).unwrap();
+        let mut y = Vec::with_capacity(6);
+        let ptr = y.as_ptr();
+        gemv_into(&a, &x, &mut y).unwrap();
+        assert!(bits_equal(&y, &want));
+        gemv_into(&a, &x, &mut y).unwrap();
+        assert_eq!(y.as_ptr(), ptr, "no reallocation across calls");
+        let short = vec![C64::zero(); 3];
+        assert!(gemv_into(&a, &short, &mut y).is_err());
     }
 
     #[test]

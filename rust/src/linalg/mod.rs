@@ -19,6 +19,7 @@ mod displacement;
 mod expm;
 mod gemm;
 mod lu;
+pub mod pool;
 
 pub use displacement::{
     displacement_exact, displacement_fast, displacement_fast_batch,
@@ -26,7 +27,10 @@ pub use displacement::{
 };
 pub use expm::expm;
 pub use gemm::{
-    choose_split, contract_env, contract_env_into, gemm, gemm_acc, gemm_acc_split, gemv,
-    matmul_flops, GemmSplit,
+    choose_split, contract_env, contract_env_into, contract_env_into_on, gemm, gemm_acc,
+    gemm_acc_split, gemm_acc_split_on, gemm_ovw_split_on, gemv, gemv_into, matmul_flops,
+    planar_contract_env_into_on, GemmSplit, PlanarScalar,
 };
 pub use lu::{lu_decompose, lu_solve_in_place, Lu};
+pub(crate) use gemm::SendPtr;
+pub use pool::{Exec, WorkerPool};

@@ -1,0 +1,329 @@
+//! Resident worker pool for the step hot path.
+//!
+//! `std::thread::scope` spawns and joins OS threads on every call, which
+//! the threaded GEMM/measurement kernels used to pay per step. The
+//! [`WorkerPool`] parks `width - 1` worker threads once at engine (or TP
+//! session) construction and hands them work through an epoch counter
+//! under a mutex/condvar pair — no per-dispatch heap allocation, which
+//! keeps pooled steps inside the counting-allocator zero-alloc gate.
+//!
+//! Dispatch contract: [`WorkerPool::run`] invokes `f(part, width)` for
+//! every `part in 0..width`, exactly once each. Part 0 runs on the
+//! calling thread (which then blocks until the remaining parts finish),
+//! so borrowing caller-stack data inside `f` is sound: `run` returns only
+//! after every worker has finished with it. Which thread executes which
+//! part never affects results — callers partition output into disjoint
+//! regions and each element is computed by exactly one part, which is
+//! what preserves the bit-identity discipline of the kernels.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// How a threaded kernel call is executed. The partition arithmetic is
+/// identical either way (see `dispatch_regions` in `gemm`), so switching
+/// between variants never changes results — only who runs the parts.
+#[derive(Clone, Copy)]
+pub enum Exec<'p> {
+    /// Per-call `std::thread::scope` spawns (the pre-pool behaviour);
+    /// width ≤ 1 executes inline with no scope at all.
+    Scoped(usize),
+    /// Dispatch through a resident [`WorkerPool`] — no spawn, no
+    /// steady-state allocation.
+    Pooled(&'p WorkerPool),
+}
+
+impl Exec<'_> {
+    /// Maximum useful partition count for this executor.
+    pub fn width(self) -> usize {
+        match self {
+            Exec::Scoped(t) => t.max(1),
+            Exec::Pooled(p) => p.width(),
+        }
+    }
+
+    /// Run `f(part)` exactly once for every `part in 0..parts`, returning
+    /// after all complete. `parts` beyond [`Exec::width`] are still
+    /// honoured (pooled dispatch folds the excess onto part 0's thread
+    /// order — callers never ask for more parts than `width`, but the
+    /// contract stays total either way).
+    pub fn run_parts<F: Fn(usize) + Sync>(self, parts: usize, f: F) {
+        let parts = parts.max(1);
+        if parts == 1 {
+            f(0);
+            return;
+        }
+        match self {
+            Exec::Scoped(_) => {
+                std::thread::scope(|scope| {
+                    let fr = &f;
+                    for t in 1..parts {
+                        scope.spawn(move || fr(t));
+                    }
+                    fr(0);
+                });
+            }
+            Exec::Pooled(pool) => {
+                let width = pool.width();
+                pool.run(&|part, _| {
+                    // Parts are striped across the pool so a pool narrower
+                    // than `parts` still covers every part exactly once.
+                    let mut p = part;
+                    while p < parts {
+                        f(p);
+                        p += width;
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// Type-erased task: a monomorphized trampoline plus a pointer to the
+/// caller's closure on its stack. No `Box`, so dispatch never allocates.
+#[derive(Clone, Copy)]
+struct Task {
+    call: unsafe fn(*const (), usize, usize),
+    ctx: *const (),
+}
+
+// SAFETY: the ctx pointer is only dereferenced while `run` is blocked on
+// the completion condvar, so the closure it points at outlives every use;
+// the closure itself is required to be Sync.
+unsafe impl Send for Task {}
+
+struct State {
+    epoch: u64,
+    task: Option<Task>,
+    remaining: usize,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    work: Condvar,
+    done: Condvar,
+    wakeups: AtomicU64,
+    park_ns: AtomicU64,
+}
+
+/// Parked resident worker threads; see the module docs for the dispatch
+/// contract.
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    handles: Vec<JoinHandle<()>>,
+    width: usize,
+    /// Serializes dispatches: `run` takes `&self`, so without this two
+    /// threads could interleave epoch bumps and return while the other's
+    /// closure is still executing.
+    gate: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// A pool that partitions work `width` ways: the caller plus
+    /// `width - 1` parked workers. `width <= 1` spawns no threads and
+    /// `run` executes inline.
+    pub fn new(width: usize) -> Self {
+        let width = width.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                epoch: 0,
+                task: None,
+                remaining: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            wakeups: AtomicU64::new(0),
+            park_ns: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(width - 1);
+        for part in 1..width {
+            let inner = Arc::clone(&inner);
+            handles.push(std::thread::spawn(move || worker_loop(&inner, part, width)));
+        }
+        WorkerPool {
+            inner,
+            handles,
+            width,
+            gate: Mutex::new(()),
+        }
+    }
+
+    /// Number of parts `run` dispatches (caller included).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Run `f(part, width)` for every part in `0..width`; returns after
+    /// all parts complete. Zero heap allocations.
+    pub fn run<F: Fn(usize, usize) + Sync>(&self, f: &F) {
+        if self.handles.is_empty() {
+            f(0, self.width);
+            return;
+        }
+        let _gate = self.gate.lock().unwrap();
+        unsafe fn trampoline<F: Fn(usize, usize) + Sync>(ctx: *const (), part: usize, n: usize) {
+            (*(ctx as *const F))(part, n);
+        }
+        let task = Task {
+            call: trampoline::<F>,
+            ctx: f as *const F as *const (),
+        };
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.task = Some(task);
+            st.epoch += 1;
+            st.remaining = self.handles.len();
+            self.inner.work.notify_all();
+        }
+        // The caller is part 0 — it works instead of idling on the join.
+        f(0, self.width);
+        let mut st = self.inner.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.inner.done.wait(st).unwrap();
+        }
+        st.task = None;
+    }
+
+    /// Drain the (wakeups, park nanoseconds) counters, resetting them to
+    /// zero — fed into `pool_wakeups` / `pool_park_ns` metrics.
+    pub fn take_counters(&self) -> (u64, u64) {
+        (
+            self.inner.wakeups.swap(0, Ordering::Relaxed),
+            self.inner.park_ns.swap(0, Ordering::Relaxed),
+        )
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner, part: usize, width: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = inner.state.lock().unwrap();
+            let parked = Instant::now();
+            while st.epoch == seen && !st.shutdown {
+                st = inner.work.wait(st).unwrap();
+            }
+            inner
+                .park_ns
+                .fetch_add(parked.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            if st.shutdown {
+                return;
+            }
+            seen = st.epoch;
+            inner.wakeups.fetch_add(1, Ordering::Relaxed);
+            st.task.expect("epoch advanced without a task")
+        };
+        // SAFETY: `run` blocks until `remaining` hits zero, so the closure
+        // behind ctx is live for the whole call.
+        unsafe { (task.call)(task.ctx, part, width) };
+        let mut st = inner.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            inner.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_part_runs_exactly_once_per_dispatch() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.width(), 4);
+        let mut hits = vec![0usize; 4];
+        for round in 1..=5 {
+            let counters: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(&|part, n| {
+                assert_eq!(n, 4);
+                counters[part].fetch_add(1, Ordering::SeqCst);
+            });
+            for (h, c) in hits.iter_mut().zip(&counters) {
+                *h += c.load(Ordering::SeqCst);
+            }
+            assert!(hits.iter().all(|&h| h == round));
+        }
+        let (wakeups, _park) = pool.take_counters();
+        // 3 workers × 5 dispatches.
+        assert_eq!(wakeups, 15);
+        // Counters drain on read.
+        assert_eq!(pool.take_counters().0, 0);
+    }
+
+    #[test]
+    fn width_one_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let ran = AtomicUsize::new(0);
+        pool.run(&|part, n| {
+            assert_eq!((part, n), (0, 1));
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.take_counters(), (0, 0));
+    }
+
+    #[test]
+    fn caller_stack_borrows_are_visible_to_workers() {
+        let pool = WorkerPool::new(3);
+        let data = vec![0u64; 300];
+        let out: Vec<AtomicU64> = data.iter().map(|_| AtomicU64::new(0)).collect();
+        pool.run(&|part, n| {
+            let per = data.len().div_ceil(n);
+            let lo = part * per;
+            let hi = ((part + 1) * per).min(data.len());
+            for i in lo..hi {
+                out[i].store(i as u64 + 1, Ordering::Relaxed);
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.load(Ordering::Relaxed), i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn steady_state_dispatch_is_allocation_free() {
+        let pool = WorkerPool::new(3);
+        let sink = AtomicU64::new(0);
+        // Warm up: first dispatches may fault in condvar/futex state.
+        for _ in 0..4 {
+            pool.run(&|p, _| {
+                sink.fetch_add(p as u64, Ordering::Relaxed);
+            });
+        }
+        // Other tests run concurrently under the same global counting
+        // allocator, so retry for a clean window instead of asserting a
+        // single quiet one.
+        let mut clean = false;
+        for _ in 0..128 {
+            let before = crate::util::alloc::allocation_count();
+            for _ in 0..8 {
+                pool.run(&|p, _| {
+                    sink.fetch_add(p as u64, Ordering::Relaxed);
+                });
+            }
+            if crate::util::alloc::allocation_count() == before {
+                clean = true;
+                break;
+            }
+        }
+        assert!(clean, "pooled dispatch allocated in every sampled window");
+    }
+}

@@ -49,6 +49,12 @@ pub mod keys {
     pub const STEP_PREP_CONVERSIONS: &str = "step_prep_conversions";
     /// Steps served from an already-prepared Γ (no conversion, no clone).
     pub const STEP_PREP_HITS: &str = "step_prep_hits";
+    /// Steps executed through the planar (split re/im) kernel path.
+    pub const STEP_LAYOUT_PLANAR: &str = "step_layout_planar";
+    /// Resident worker-pool wakeups (one per worker per dispatch).
+    pub const POOL_WAKEUPS: &str = "pool_wakeups";
+    /// Nanoseconds pool workers spent parked between dispatches.
+    pub const POOL_PARK_NS: &str = "pool_park_ns";
 
     // Service-layer counters (`service::*`).
     pub const JOBS_SUBMITTED: &str = "jobs_submitted";

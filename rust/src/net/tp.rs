@@ -40,11 +40,11 @@ use crate::comm::{tp_op_name, SocketComm, TpLink, TpTransport, TP_DONE, TP_ENV, 
 use crate::config::{ComputePrecision, NetConfig, ServiceConfig};
 use crate::coordinator::{env_rows, env_store_rows};
 use crate::io::{shard_range, DiskModel, GammaStore, Prefetcher};
-use crate::linalg::{contract_env_into, matmul_flops};
+use crate::linalg::{contract_env_into, contract_env_into_on, matmul_flops, Exec, WorkerPool};
 use crate::metrics::{keys, Metrics};
 use crate::mps::Site;
 use crate::sampler::env::{from_f32_into, to_f32_into};
-use crate::sampler::measurement::measure_into;
+use crate::sampler::measurement::measure_into_on;
 use crate::sampler::sink::SampleSink;
 use crate::sampler::{boundary_env, PrepKey, PreparedGamma, PreparedSite, PreparedStore};
 use crate::service::{Batch, Service, StoreCache};
@@ -337,8 +337,11 @@ impl SiteWalk {
 fn f32_gamma(p: &PreparedSite) -> Result<&Tensor3<f32>> {
     match &p.gamma {
         PreparedGamma::F32(g) => Ok(g),
-        PreparedGamma::F64(_) => Err(Error::other(
-            "TP walk found an f64 prepared site (TP prepares f32 only)",
+        // TP shards cross the wire interleaved and the assemble/gather
+        // staging walks interleaved temp buffers, so the TP walk pins
+        // `planar: false` in its PrepKey; anything else is a bug.
+        _ => Err(Error::other(
+            "TP walk found a non-interleaved-f32 prepared site (TP prepares interleaved f32 only)",
         )),
     }
 }
@@ -462,10 +465,18 @@ pub(crate) fn run_batch_tp(
         PrepKey {
             compute: ComputePrecision::F32,
             gamma_f16: false,
+            // Interleaved on purpose: TP tensors go over the wire.
+            planar: false,
         },
         cfg.prep_cache_bytes,
     );
     let mut walk = SiteWalk::new(store.clone(), disk.clone(), prep);
+
+    // Session-resident pool: one set of parked workers serves every
+    // chunk's contract/measure across the whole walk — no per-step
+    // thread spawns (width 1 executes inline).
+    let pool = WorkerPool::new(cfg.gemm_threads);
+    let exec = Exec::Pooled(&pool);
 
     let t_group = Instant::now();
     let mut env = boundary_env(rows);
@@ -515,7 +526,7 @@ pub(crate) fn run_batch_tp(
             metrics.add(keys::TP_BCAST_BYTES, sent);
 
             let t0 = Instant::now();
-            contract_env_into(&env_in, gamma, &mut temp_mine, cfg.gemm_threads, cfg.gemm_split)?;
+            contract_env_into_on(&env_in, gamma, &mut temp_mine, exec, cfg.gemm_split)?;
             metrics.add(
                 keys::FLOPS,
                 matmul_flops(take, gamma.d0, gamma.d1 * gamma.d2),
@@ -533,12 +544,12 @@ pub(crate) fn run_batch_tp(
 
             let t0 = Instant::now();
             let th = spec.thresholds(site_idx, a.sample0 + off as u64, take);
-            let dead = measure_into(
+            let dead = measure_into_on(
                 &temp_full,
                 &ones,
                 &th,
                 cfg.scaling,
-                cfg.gemm_threads,
+                exec,
                 &mut env_out,
                 &mut samples_buf,
                 &mut probs,
@@ -567,6 +578,9 @@ pub(crate) fn run_batch_tp(
     comm.bcast(TP_DONE, &mut done, 0)?;
     comm.finish()?;
     walk.finish(&mut metrics)?;
+    let (wakeups, park_ns) = pool.take_counters();
+    metrics.add(keys::POOL_WAKEUPS, wakeups);
+    metrics.add(keys::POOL_PARK_NS, park_ns);
     metrics.add("dead_rows", dead_total);
     metrics.add(keys::TP_JOBS, 1);
     metrics.add(keys::SITES, m as u64);
@@ -710,10 +724,17 @@ pub(crate) fn serve_tp(
         PrepKey {
             compute: ComputePrecision::F32,
             gamma_f16: false,
+            // Interleaved on purpose: TP tensors go over the wire.
+            planar: false,
         },
         cfg.prep_cache_bytes,
     );
     let mut walk = SiteWalk::new(store.clone(), svc.cache().disk.clone(), prep);
+
+    // Session-resident pool, like the leader's: parked workers live for
+    // the whole TP session instead of spawning per chunk.
+    let pool = WorkerPool::new(cfg.gemm_threads);
+    let exec = Exec::Pooled(&pool);
 
     let t_group = Instant::now();
     let mut metrics = Metrics::new();
@@ -788,7 +809,7 @@ pub(crate) fn serve_tp(
                 metrics.add(keys::TP_BCAST_BYTES, got);
                 wire_to_mat(&wire, take, chi_l, &mut env_in)?;
                 let t0 = Instant::now();
-                contract_env_into(&env_in, gamma, &mut temp, cfg.gemm_threads, cfg.gemm_split)?;
+                contract_env_into_on(&env_in, gamma, &mut temp, exec, cfg.gemm_split)?;
                 metrics.add_phase("compute", t0.elapsed().as_secs_f64());
                 metrics.add(
                     keys::FLOPS,
@@ -818,6 +839,9 @@ pub(crate) fn serve_tp(
         return Err(e);
     }
     walk.finish(&mut metrics)?;
+    let (wakeups, park_ns) = pool.take_counters();
+    metrics.add(keys::POOL_WAKEUPS, wakeups);
+    metrics.add(keys::POOL_PARK_NS, park_ns);
     metrics.add(keys::TP_JOBS, 1);
     svc.merge_metrics(&metrics);
     svc.recorder().span(

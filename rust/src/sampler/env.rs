@@ -2,7 +2,7 @@
 //! ([`SplitBuf`], f32 planes) and the native engines' `Mat<T>`.
 
 use crate::config::ComputePrecision;
-use crate::tensor::{Complex, Mat, SplitBuf};
+use crate::tensor::{Complex, Mat, PlanarMat, SplitBuf};
 use crate::util::error::{Error, Result};
 use crate::util::f16;
 
@@ -88,6 +88,73 @@ pub fn from_f32_into(m: &Mat<f32>, env: &mut SplitBuf) {
     env.re.extend(m.data.iter().map(|z| z.re));
     env.im.clear();
     env.im.extend(m.data.iter().map(|z| z.im));
+}
+
+/// [`to_f64_into`] for the planar layout. The boundary buffer already
+/// stores split f32 planes, so the lift is a straight per-plane widening
+/// copy — no interleave pass at all. Values are bit-identical to the
+/// interleaved adapter's (same widening, per element).
+pub fn to_planar_f64_into(env: &SplitBuf, out: &mut PlanarMat<f64>) -> Result<()> {
+    let (r, c) = rank2(env)?;
+    out.rows = r;
+    out.cols = c;
+    out.re.clear();
+    out.re.extend(env.re.iter().map(|&v| v as f64));
+    out.im.clear();
+    out.im.extend(env.im.iter().map(|&v| v as f64));
+    Ok(())
+}
+
+/// [`to_f32_into`] for the planar layout (same per-element rounding
+/// semantics, applied per plane).
+pub fn to_planar_f32_into(
+    env: &SplitBuf,
+    precision: ComputePrecision,
+    out: &mut PlanarMat<f32>,
+) -> Result<()> {
+    let (r, c) = rank2(env)?;
+    out.rows = r;
+    out.cols = c;
+    out.re.clear();
+    out.re.extend_from_slice(&env.re);
+    out.im.clear();
+    out.im.extend_from_slice(&env.im);
+    match precision {
+        ComputePrecision::Tf32 => {
+            for v in out.re.iter_mut().chain(out.im.iter_mut()) {
+                *v = f16::round_tf32(*v);
+            }
+        }
+        ComputePrecision::F16 => {
+            for v in out.re.iter_mut().chain(out.im.iter_mut()) {
+                *v = f16::round_f16(*v);
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// [`from_f64_into`] for the planar layout (per-plane narrowing copy).
+pub fn from_planar_f64_into(m: &PlanarMat<f64>, env: &mut SplitBuf) {
+    env.shape.clear();
+    env.shape.push(m.rows);
+    env.shape.push(m.cols);
+    env.re.clear();
+    env.re.extend(m.re.iter().map(|&v| v as f32));
+    env.im.clear();
+    env.im.extend(m.im.iter().map(|&v| v as f32));
+}
+
+/// [`from_f32_into`] for the planar layout (straight per-plane copy).
+pub fn from_planar_f32_into(m: &PlanarMat<f32>, env: &mut SplitBuf) {
+    env.shape.clear();
+    env.shape.push(m.rows);
+    env.shape.push(m.cols);
+    env.re.clear();
+    env.re.extend_from_slice(&m.re);
+    env.im.clear();
+    env.im.extend_from_slice(&m.im);
 }
 
 /// Lift to f32 with optional TF32/FP16 input rounding (what tensor cores
@@ -177,6 +244,51 @@ mod tests {
         let mut bad = sb.clone();
         bad.shape = vec![6];
         assert!(to_f64_into(&bad, &mut m64).is_err());
+    }
+
+    #[test]
+    fn planar_adapters_match_interleaved_adapters() {
+        let mut sb = SplitBuf::zeros(&[3, 4]);
+        for (i, v) in sb.re.iter_mut().enumerate() {
+            *v = 1.0 + 1.0 / 4096.0 + i as f32 * 0.37;
+        }
+        for (i, v) in sb.im.iter_mut().enumerate() {
+            *v = -0.5 - i as f32 * 1e-5;
+        }
+
+        let mut m64 = Mat::zeros(0, 0);
+        to_f64_into(&sb, &mut m64).unwrap();
+        let mut p64 = PlanarMat::default();
+        to_planar_f64_into(&sb, &mut p64).unwrap();
+        assert_eq!(p64.to_interleaved(), m64);
+        let mut back_i = SplitBuf::zeros(&[1, 1]);
+        from_f64_into(&m64, &mut back_i);
+        let mut back_p = SplitBuf::zeros(&[1, 1]);
+        from_planar_f64_into(&p64, &mut back_p);
+        assert_eq!(back_p, back_i);
+
+        for prec in [
+            ComputePrecision::F32,
+            ComputePrecision::Tf32,
+            ComputePrecision::F16,
+        ] {
+            let mut m32 = Mat::zeros(0, 0);
+            to_f32_into(&sb, prec, &mut m32).unwrap();
+            let mut p32 = PlanarMat::default();
+            to_planar_f32_into(&sb, prec, &mut p32).unwrap();
+            assert_eq!(p32.to_interleaved(), m32, "{prec:?}");
+            let mut bi = SplitBuf::zeros(&[1, 1]);
+            from_f32_into(&m32, &mut bi);
+            let mut bp = SplitBuf::zeros(&[1, 1]);
+            from_planar_f32_into(&p32, &mut bp);
+            assert_eq!(bp, bi, "{prec:?}");
+        }
+
+        let mut bad = sb.clone();
+        bad.shape = vec![12];
+        assert!(to_planar_f64_into(&bad, &mut p64).is_err());
+        let mut scratch = PlanarMat::default();
+        assert!(to_planar_f32_into(&bad, ComputePrecision::F32, &mut scratch).is_err());
     }
 
     #[test]

@@ -13,10 +13,13 @@
 //! workspace, bit-identically to the serial scan — the single-threaded hot
 //! loop was rivalling the GEMM at large χ.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::util::num::Float;
 
 use crate::config::ScalingMode;
-use crate::tensor::{Complex, Mat, Tensor3};
+use crate::linalg::{Exec, SendPtr};
+use crate::tensor::{Complex, Mat, PlanarMat, PlanarTensor3, Tensor3};
 use crate::util::error::{Error, Result};
 
 /// Measurement output.
@@ -83,7 +86,28 @@ fn measure_row<T: Float + std::ops::AddAssign>(
         }
     }
     let tot: T = probs.iter().fold(T::zero(), |a, &b| a + b);
-    let (outcome, dead) = if tot > T::zero() {
+    let (outcome, dead) = threshold_scan(probs, tot, threshold, d);
+
+    // Collapse: env[s, :] = temp[s, :, outcome].
+    let o = outcome as usize;
+    for yy in 0..y {
+        erow[yy] = panel[yy * d + o];
+    }
+    (outcome, dead)
+}
+
+/// The hoisted-division early-break threshold scan — factored out so the
+/// interleaved and planar row kernels share it verbatim and their outcome
+/// indices cannot drift (see [`measure_row`] for why the early break is
+/// index-equivalent to the full scan).
+#[inline]
+fn threshold_scan<T: Float + std::ops::AddAssign>(
+    probs: &[T],
+    tot: T,
+    threshold: f32,
+    d: usize,
+) -> (i32, bool) {
+    if tot > T::zero() {
         let u = T::from(threshold).unwrap();
         let inv_tot = T::one() / tot;
         let mut cum = T::zero();
@@ -99,12 +123,42 @@ fn measure_row<T: Float + std::ops::AddAssign>(
         (k.min(d as i32 - 1), false)
     } else {
         (0, true)
-    };
+    }
+}
 
-    // Collapse: env[s, :] = temp[s, :, outcome].
+/// Planar replica of [`measure_row`]: identical probability accumulation
+/// order (`norm_sq` expanded to `re·re + im·im`, the exact
+/// [`Complex::norm_sq`] expression), the shared [`threshold_scan`], and a
+/// per-plane collapse — bit-identical outcomes and environment values.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn measure_row_planar<T: Float + std::ops::AddAssign>(
+    panel_re: &[T],
+    panel_im: &[T],
+    lambda: &[T],
+    threshold: f32,
+    d: usize,
+    probs: &mut [T],
+    erow_re: &mut [T],
+    erow_im: &mut [T],
+) -> (i32, bool) {
+    for p in probs.iter_mut() {
+        *p = T::zero();
+    }
+    for (yy, &lam) in lambda.iter().enumerate() {
+        let rre = &panel_re[yy * d..(yy + 1) * d];
+        let rim = &panel_im[yy * d..(yy + 1) * d];
+        for ((p, &re), &im) in probs.iter_mut().zip(rre).zip(rim) {
+            *p += (re * re + im * im) * lam;
+        }
+    }
+    let tot: T = probs.iter().fold(T::zero(), |a, &b| a + b);
+    let (outcome, dead) = threshold_scan(probs, tot, threshold, d);
+
     let o = outcome as usize;
-    for yy in 0..y {
-        erow[yy] = panel[yy * d + o];
+    for (yy, (er, ei)) in erow_re.iter_mut().zip(erow_im.iter_mut()).enumerate() {
+        *er = panel_re[yy * d + o];
+        *ei = panel_im[yy * d + o];
     }
     (outcome, dead)
 }
@@ -126,31 +180,48 @@ pub fn measure_into<T: Float + std::ops::AddAssign + Send + Sync>(
     samples: &mut Vec<i32>,
     probs: &mut Vec<T>,
 ) -> Result<usize> {
+    measure_into_on(
+        temp,
+        lambda,
+        thresholds,
+        mode,
+        Exec::Scoped(threads),
+        env,
+        samples,
+        probs,
+    )
+}
+
+/// [`measure_into`] on an explicit executor. The pooled form dispatches
+/// row ranges to the resident [`WorkerPool`](crate::linalg::WorkerPool)
+/// with per-part `probs` stripes carved out of the caller's buffer —
+/// zero allocations at steady state, unlike the scoped form whose spawn
+/// bookkeeping (and per-thread scratch) allocates every call.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_into_on<T: Float + std::ops::AddAssign + Send + Sync>(
+    temp: &Tensor3<T>,
+    lambda: &[T],
+    thresholds: &[f32],
+    mode: ScalingMode,
+    exec: Exec<'_>,
+    env: &mut Mat<T>,
+    samples: &mut Vec<i32>,
+    probs: &mut Vec<T>,
+) -> Result<usize> {
     let (n, y, d) = (temp.d0, temp.d1, temp.d2);
-    if lambda.len() != y {
-        return Err(Error::shape(format!(
-            "measure: Λ has {} entries for χ_r={y}",
-            lambda.len()
-        )));
-    }
-    if thresholds.len() != n {
-        return Err(Error::shape(format!(
-            "measure: {} thresholds for N={n}",
-            thresholds.len()
-        )));
-    }
+    check_measure_shapes(lambda.len(), thresholds.len(), n, y)?;
 
     // No zero-fill: the collapse below writes every (row, column) of the
     // environment, including dead rows (outcome-0 column).
     env.reshape(n, y);
     samples.clear();
     samples.resize(n, 0);
-    probs.clear();
-    probs.resize(d, T::zero());
 
-    let threads = threads.max(1).min(n.max(1));
+    let parts = exec.width().min(n.max(1));
     let mut dead_rows = 0usize;
-    if threads == 1 || y == 0 {
+    if parts == 1 || y == 0 {
+        probs.clear();
+        probs.resize(d, T::zero());
         for s in 0..n {
             let (outcome, dead) = measure_row(
                 temp.panel(s),
@@ -164,42 +235,141 @@ pub fn measure_into<T: Float + std::ops::AddAssign + Send + Sync>(
             dead_rows += dead as usize;
         }
     } else {
-        let rows_per = n.div_ceil(threads);
-        let env_chunks = env.data.chunks_mut(rows_per * y);
-        let sample_chunks = samples.chunks_mut(rows_per);
-        let th_chunks = thresholds.chunks(rows_per);
-        dead_rows = std::thread::scope(|scope| {
-            let handles: Vec<_> = env_chunks
-                .zip(sample_chunks)
-                .zip(th_chunks)
-                .enumerate()
-                .map(|(t, ((e_chunk, s_chunk), th_chunk))| {
-                    let row0 = t * rows_per;
-                    scope.spawn(move || {
-                        let mut probs = vec![T::zero(); d];
-                        let mut dead = 0usize;
-                        for (i, (sv, &u)) in s_chunk.iter_mut().zip(th_chunk).enumerate() {
-                            let (outcome, is_dead) = measure_row(
-                                temp.panel(row0 + i),
-                                lambda,
-                                u,
-                                d,
-                                &mut probs,
-                                &mut e_chunk[i * y..(i + 1) * y],
-                            );
-                            *sv = outcome;
-                            dead += is_dead as usize;
-                        }
-                        dead
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        // One probs stripe per part, all carved out of the caller's
+        // buffer — the pooled path allocates nothing at steady state.
+        probs.clear();
+        probs.resize(parts * d, T::zero());
+        let rows_per = n.div_ceil(parts);
+        let env_ptr = SendPtr(env.data.as_mut_ptr());
+        let samples_ptr = SendPtr(samples.as_mut_ptr());
+        let probs_ptr = SendPtr(probs.as_mut_ptr());
+        let dead = AtomicUsize::new(0);
+        exec.run_parts(parts, |part| {
+            let r0 = part * rows_per;
+            let r1 = ((part + 1) * rows_per).min(n);
+            if r0 >= r1 {
+                return;
+            }
+            // Safety: parts own disjoint row ranges of env/samples and
+            // disjoint d-length stripes of probs; run_parts joins before
+            // returning, so the borrows behind the raw pointers are live.
+            let probs_part =
+                unsafe { std::slice::from_raw_parts_mut(probs_ptr.0.add(part * d), d) };
+            let mut local_dead = 0usize;
+            for s in r0..r1 {
+                let erow = unsafe { std::slice::from_raw_parts_mut(env_ptr.0.add(s * y), y) };
+                let (outcome, is_dead) =
+                    measure_row(temp.panel(s), lambda, thresholds[s], d, probs_part, erow);
+                unsafe { *samples_ptr.0.add(s) = outcome };
+                local_dead += is_dead as usize;
+            }
+            dead.fetch_add(local_dead, Ordering::Relaxed);
         });
+        dead_rows = dead.load(Ordering::Relaxed);
     }
 
     apply_scaling(env, mode);
     Ok(dead_rows)
+}
+
+/// Planar analogue of [`measure_into_on`]: same row kernel discipline
+/// ([`measure_row_planar`] + the shared [`threshold_scan`]), same
+/// partitioning, planar scaling — bit-identical outcomes, samples, and
+/// environment planes.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_planar_into_on<T: Float + std::ops::AddAssign + Send + Sync>(
+    temp: &PlanarTensor3<T>,
+    lambda: &[T],
+    thresholds: &[f32],
+    mode: ScalingMode,
+    exec: Exec<'_>,
+    env: &mut PlanarMat<T>,
+    samples: &mut Vec<i32>,
+    probs: &mut Vec<T>,
+) -> Result<usize> {
+    let (n, y, d) = (temp.d0, temp.d1, temp.d2);
+    check_measure_shapes(lambda.len(), thresholds.len(), n, y)?;
+
+    env.reshape(n, y);
+    samples.clear();
+    samples.resize(n, 0);
+
+    let panel = y * d;
+    let parts = exec.width().min(n.max(1));
+    let mut dead_rows = 0usize;
+    if parts == 1 || y == 0 {
+        probs.clear();
+        probs.resize(d, T::zero());
+        for s in 0..n {
+            let (outcome, dead) = measure_row_planar(
+                &temp.re[s * panel..(s + 1) * panel],
+                &temp.im[s * panel..(s + 1) * panel],
+                lambda,
+                thresholds[s],
+                d,
+                probs,
+                &mut env.re[s * y..(s + 1) * y],
+                &mut env.im[s * y..(s + 1) * y],
+            );
+            samples[s] = outcome;
+            dead_rows += dead as usize;
+        }
+    } else {
+        probs.clear();
+        probs.resize(parts * d, T::zero());
+        let rows_per = n.div_ceil(parts);
+        let env_re = SendPtr(env.re.as_mut_ptr());
+        let env_im = SendPtr(env.im.as_mut_ptr());
+        let samples_ptr = SendPtr(samples.as_mut_ptr());
+        let probs_ptr = SendPtr(probs.as_mut_ptr());
+        let dead = AtomicUsize::new(0);
+        exec.run_parts(parts, |part| {
+            let r0 = part * rows_per;
+            let r1 = ((part + 1) * rows_per).min(n);
+            if r0 >= r1 {
+                return;
+            }
+            // Safety: as in measure_into_on, applied to both planes.
+            let probs_part =
+                unsafe { std::slice::from_raw_parts_mut(probs_ptr.0.add(part * d), d) };
+            let mut local_dead = 0usize;
+            for s in r0..r1 {
+                let erow_re =
+                    unsafe { std::slice::from_raw_parts_mut(env_re.0.add(s * y), y) };
+                let erow_im =
+                    unsafe { std::slice::from_raw_parts_mut(env_im.0.add(s * y), y) };
+                let (outcome, is_dead) = measure_row_planar(
+                    &temp.re[s * panel..(s + 1) * panel],
+                    &temp.im[s * panel..(s + 1) * panel],
+                    lambda,
+                    thresholds[s],
+                    d,
+                    probs_part,
+                    erow_re,
+                    erow_im,
+                );
+                unsafe { *samples_ptr.0.add(s) = outcome };
+                local_dead += is_dead as usize;
+            }
+            dead.fetch_add(local_dead, Ordering::Relaxed);
+        });
+        dead_rows = dead.load(Ordering::Relaxed);
+    }
+
+    apply_scaling_planar(env, mode);
+    Ok(dead_rows)
+}
+
+fn check_measure_shapes(lambda_len: usize, th_len: usize, n: usize, y: usize) -> Result<()> {
+    if lambda_len != y {
+        return Err(Error::shape(format!(
+            "measure: Λ has {lambda_len} entries for χ_r={y}"
+        )));
+    }
+    if th_len != n {
+        return Err(Error::shape(format!("measure: {th_len} thresholds for N={n}")));
+    }
+    Ok(())
 }
 
 /// Apply the configured rescaling to a collapsed environment.
@@ -234,6 +404,62 @@ pub fn apply_scaling<T: Float + std::ops::AddAssign>(env: &mut Mat<T>, mode: Sca
                 }
             }
             let _ = cols;
+        }
+    }
+}
+
+/// Planar replica of [`apply_scaling`]: the max scans expand `norm_sq`
+/// to `re·re + im·im` in the same element order and the rescale is the
+/// same per-component multiply, so the planes end bit-identical to the
+/// interleaved environment's components.
+pub fn apply_scaling_planar<T: Float + std::ops::AddAssign>(
+    env: &mut PlanarMat<T>,
+    mode: ScalingMode,
+) {
+    match mode {
+        ScalingMode::None => {}
+        ScalingMode::Global => {
+            // Mat::max_abs replica: max norm_sq over the batch, sqrt once.
+            let mut m2 = T::zero();
+            for (&re, &im) in env.re.iter().zip(&env.im) {
+                let a = re * re + im * im;
+                if a > m2 {
+                    m2 = a;
+                }
+            }
+            let m = m2.sqrt();
+            if m > T::zero() {
+                let inv = T::one() / m;
+                for v in env.re.iter_mut() {
+                    *v = *v * inv;
+                }
+                for v in env.im.iter_mut() {
+                    *v = *v * inv;
+                }
+            }
+        }
+        ScalingMode::PerSample => {
+            let cols = env.cols;
+            for r in 0..env.rows {
+                let rre = &mut env.re[r * cols..(r + 1) * cols];
+                let rim = &mut env.im[r * cols..(r + 1) * cols];
+                let mut m2 = T::zero();
+                for (&re, &im) in rre.iter().zip(rim.iter()) {
+                    let a = re * re + im * im;
+                    if a > m2 {
+                        m2 = a;
+                    }
+                }
+                if m2 > T::zero() {
+                    let inv = T::one() / m2.sqrt();
+                    for v in rre.iter_mut() {
+                        *v = *v * inv;
+                    }
+                    for v in rim.iter_mut() {
+                        *v = *v * inv;
+                    }
+                }
+            }
         }
     }
 }
@@ -501,6 +727,84 @@ mod tests {
             }
             if dead != serial.dead_rows {
                 return Err(format!("dead {} vs {}", dead, serial.dead_rows));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn planar_measure_bit_identical_to_interleaved() {
+        use crate::tensor::{PlanarMat, PlanarTensor3};
+        crate::util::prop::quickcheck("planar measure == interleaved", |g| {
+            let (t, lambda, thresholds) = random_temp(g);
+            let mode = *g.choose(&[
+                ScalingMode::None,
+                ScalingMode::Global,
+                ScalingMode::PerSample,
+            ]);
+            let serial = measure(&t, &lambda, &thresholds, mode).unwrap();
+            let pt = PlanarTensor3::from_interleaved(&t);
+            for width in [1, 3] {
+                let mut env: PlanarMat<f64> = PlanarMat::zeros(0, 0);
+                let mut samples = Vec::new();
+                let mut probs = Vec::new();
+                let dead = measure_planar_into_on(
+                    &pt,
+                    &lambda,
+                    &thresholds,
+                    mode,
+                    Exec::Scoped(width),
+                    &mut env,
+                    &mut samples,
+                    &mut probs,
+                )
+                .map_err(|e| e.to_string())?;
+                if samples != serial.samples || dead != serial.dead_rows {
+                    return Err(format!("planar outcomes diverged at width {width}"));
+                }
+                // Per-component bitwise equality, -0.0 included.
+                for (i, z) in serial.env.data.iter().enumerate() {
+                    if env.re[i].to_bits() != z.re.to_bits()
+                        || env.im[i].to_bits() != z.im.to_bits()
+                    {
+                        return Err(format!("planar env diverged at {i} (width {width})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pooled_measure_bit_identical_to_serial() {
+        let pool = crate::linalg::WorkerPool::new(3);
+        crate::util::prop::quickcheck("pooled measure == serial", |g| {
+            let (t, lambda, thresholds) = random_temp(g);
+            let mode = *g.choose(&[
+                ScalingMode::None,
+                ScalingMode::Global,
+                ScalingMode::PerSample,
+            ]);
+            let serial = measure(&t, &lambda, &thresholds, mode).unwrap();
+            let mut env = Mat::zeros(1, 1);
+            let mut samples = Vec::new();
+            let mut probs = Vec::new();
+            let dead = measure_into_on(
+                &t,
+                &lambda,
+                &thresholds,
+                mode,
+                Exec::Pooled(&pool),
+                &mut env,
+                &mut samples,
+                &mut probs,
+            )
+            .map_err(|e| e.to_string())?;
+            if samples != serial.samples
+                || env.data != serial.env.data
+                || dead != serial.dead_rows
+            {
+                return Err("pooled measure diverged".into());
             }
             Ok(())
         });

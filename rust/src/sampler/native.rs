@@ -22,15 +22,16 @@
 
 use crate::util::num::Float;
 
-use crate::config::{ComputePrecision, ScalingMode};
+use crate::config::{ComputePrecision, Layout, ScalingMode};
 use crate::linalg::{
-    contract_env_into, displacement_fast_batch_into, matmul_flops, DisplacementWs, GemmSplit,
+    contract_env_into_on, displacement_fast_batch_into, matmul_flops,
+    planar_contract_env_into_on, DisplacementWs, Exec, GemmSplit, PlanarScalar, WorkerPool,
 };
 use crate::metrics::{keys, Metrics};
 use crate::mps::Site;
 use crate::sampler::prepared::{PrepKey, PreparedGamma, PreparedSite};
 use crate::sampler::{env as envmod, measurement, StepEngine};
-use crate::tensor::{Complex, Mat, SplitBuf, Tensor3};
+use crate::tensor::{Complex, Mat, PlanarMat, PlanarTensor3, SplitBuf, Tensor3};
 use crate::util::error::{Error, Result};
 
 /// Per-precision scratch arena of the step loop. Buffers are reshaped in
@@ -56,6 +57,15 @@ pub struct StepWorkspace<T> {
     drow: Vec<Complex<T>>,
     /// Scratch of the batched displacement builder.
     disp: DisplacementWs<T>,
+    /// Planar-layout arenas (split re/im planes). The planar step never
+    /// repacks mid-step: the environment is lifted straight into planes,
+    /// contracted, displaced, measured and written back plane-wise.
+    penv_in: PlanarMat<T>,
+    ptemp: PlanarTensor3<T>,
+    penv_out: PlanarMat<T>,
+    /// Planar displacement row lanes (d each).
+    pdrow_re: Vec<T>,
+    pdrow_im: Vec<T>,
 }
 
 impl<T: Float + std::ops::AddAssign> Default for StepWorkspace<T> {
@@ -70,6 +80,11 @@ impl<T: Float + std::ops::AddAssign> Default for StepWorkspace<T> {
             dmat_t: Vec::new(),
             drow: Vec::new(),
             disp: DisplacementWs::default(),
+            penv_in: PlanarMat::default(),
+            ptemp: PlanarTensor3::default(),
+            penv_out: PlanarMat::default(),
+            pdrow_re: Vec::new(),
+            pdrow_im: Vec::new(),
         }
     }
 }
@@ -87,6 +102,11 @@ impl<T: Float + std::ops::AddAssign> StepWorkspace<T> {
             + self.dmat_t.capacity()
             + self.drow.capacity()
             + self.disp.capacity_units()
+            + self.penv_in.capacity_units()
+            + self.ptemp.capacity_units()
+            + self.penv_out.capacity_units()
+            + self.pdrow_re.capacity()
+            + self.pdrow_im.capacity()
     }
 }
 
@@ -101,11 +121,17 @@ pub struct NativeEngine {
     /// Round Γ through f16 before compute (models fp16-stored tensors that
     /// were only converted, §3.3.2).
     pub gamma_f16: bool,
+    /// Step-kernel memory layout policy (`Auto` → planar for the
+    /// f32-family precisions). Changing this changes [`Self::prep_key`].
+    pub layout: Layout,
     pub metrics: Metrics,
     /// Dead (underflowed) sample rows seen so far — Fig. 6's failure signal.
     pub dead_rows: u64,
     ws64: StepWorkspace<f64>,
     ws32: StepWorkspace<f32>,
+    /// Resident worker pool for `threads > 1` — built once, reused every
+    /// step, so the threaded hot path never spawns.
+    pool: Option<WorkerPool>,
 }
 
 impl NativeEngine {
@@ -116,10 +142,12 @@ impl NativeEngine {
             threads: threads.max(1),
             split: GemmSplit::Auto,
             gamma_f16: false,
+            layout: Layout::Auto,
             metrics: Metrics::new(),
             dead_rows: 0,
             ws64: StepWorkspace::default(),
             ws32: StepWorkspace::default(),
+            pool: None,
         }
     }
 
@@ -129,6 +157,23 @@ impl NativeEngine {
         PrepKey {
             compute: self.precision,
             gamma_f16: self.gamma_f16,
+            planar: self.layout.planar_for(self.precision),
+        }
+    }
+
+    /// (Re)build the resident pool to match `threads`. `threads == 1`
+    /// drops it — the serial path needs no workers.
+    fn ensure_pool(&mut self) {
+        if self.threads > 1 {
+            let stale = match &self.pool {
+                Some(p) => p.width() != self.threads,
+                None => true,
+            };
+            if stale {
+                self.pool = Some(WorkerPool::new(self.threads));
+            }
+        } else {
+            self.pool = None;
         }
     }
 
@@ -163,6 +208,11 @@ impl NativeEngine {
         // buffers (env planes, samples) legitimately grow when a walk's χ
         // widens, and the counting-allocator test asserts the full
         // contract under a steady shape.
+        self.ensure_pool();
+        let exec = match &self.pool {
+            Some(p) => Exec::Pooled(p),
+            None => Exec::Scoped(self.threads),
+        };
         match &site.gamma {
             PreparedGamma::F64(gamma) => {
                 let ws = &mut self.ws64;
@@ -172,7 +222,7 @@ impl NativeEngine {
                     ws,
                     &mut self.metrics,
                     self.scaling,
-                    self.threads,
+                    exec,
                     self.split,
                     gamma,
                     &site.lambda64,
@@ -183,7 +233,7 @@ impl NativeEngine {
                 self.dead_rows += dead as u64;
                 envmod::from_f64_into(&self.ws64.env_out, env);
                 let cap1 = self.ws64.capacity_units();
-                self.note_step(cap0, cap1, thresholds.len());
+                self.note_step(cap0, cap1, thresholds.len(), false);
             }
             PreparedGamma::F32(gamma) => {
                 let ws = &mut self.ws32;
@@ -193,7 +243,7 @@ impl NativeEngine {
                     ws,
                     &mut self.metrics,
                     self.scaling,
-                    self.threads,
+                    exec,
                     self.split,
                     gamma,
                     &site.lambda32,
@@ -211,16 +261,71 @@ impl NativeEngine {
                 }
                 envmod::from_f32_into(&self.ws32.env_out, env);
                 let cap1 = self.ws32.capacity_units();
-                self.note_step(cap0, cap1, thresholds.len());
+                self.note_step(cap0, cap1, thresholds.len(), false);
+            }
+            PreparedGamma::P64(gamma) => {
+                let ws = &mut self.ws64;
+                let cap0 = ws.capacity_units();
+                envmod::to_planar_f64_into(env, &mut ws.penv_in)?;
+                let dead = step_in_workspace_planar(
+                    ws,
+                    &mut self.metrics,
+                    self.scaling,
+                    exec,
+                    self.split,
+                    gamma,
+                    &site.lambda64,
+                    thresholds,
+                    displacements,
+                    samples,
+                )?;
+                self.dead_rows += dead as u64;
+                envmod::from_planar_f64_into(&self.ws64.penv_out, env);
+                let cap1 = self.ws64.capacity_units();
+                self.note_step(cap0, cap1, thresholds.len(), true);
+            }
+            PreparedGamma::P32(gamma) => {
+                let ws = &mut self.ws32;
+                let cap0 = ws.capacity_units();
+                envmod::to_planar_f32_into(env, self.precision, &mut ws.penv_in)?;
+                let dead = step_in_workspace_planar(
+                    ws,
+                    &mut self.metrics,
+                    self.scaling,
+                    exec,
+                    self.split,
+                    gamma,
+                    &site.lambda32,
+                    thresholds,
+                    displacements,
+                    samples,
+                )?;
+                self.dead_rows += dead as u64;
+                if self.precision == ComputePrecision::F16 {
+                    // ComplexHalf result storage: round the collapsed env.
+                    let out = &mut self.ws32.penv_out;
+                    for v in out.re.iter_mut().chain(out.im.iter_mut()) {
+                        *v = crate::util::f16::round_f16(*v);
+                    }
+                }
+                envmod::from_planar_f32_into(&self.ws32.penv_out, env);
+                let cap1 = self.ws32.capacity_units();
+                self.note_step(cap0, cap1, thresholds.len(), true);
             }
         }
         Ok(())
     }
 
-    fn note_step(&mut self, cap_before: usize, cap_after: usize, n: usize) {
+    fn note_step(&mut self, cap_before: usize, cap_after: usize, n: usize, planar: bool) {
         self.metrics.add(keys::SAMPLES, n as u64);
         self.metrics.add(keys::STEPS, 1);
         self.metrics.add(keys::STEP_WS_GROWS, (cap_after > cap_before) as u64);
+        self.metrics.add(keys::STEP_LAYOUT_PLANAR, planar as u64);
+        if let Some(pool) = &self.pool {
+            let (wakeups, park_ns) = pool.take_counters();
+            self.metrics.add(keys::POOL_WAKEUPS, wakeups);
+            self.metrics.add(keys::POOL_PARK_NS, park_ns);
+        }
     }
 }
 
@@ -234,7 +339,7 @@ fn step_in_workspace<T>(
     ws: &mut StepWorkspace<T>,
     metrics: &mut Metrics,
     scaling: ScalingMode,
-    threads: usize,
+    exec: Exec<'_>,
     split: GemmSplit,
     gamma: &Tensor3<T>,
     lambda: &[T],
@@ -257,10 +362,19 @@ where
         disp,
     } = ws;
     let n = env_in.rows;
+    let pooled = matches!(exec, Exec::Pooled(_));
 
-    metrics.time("compute", || {
-        contract_env_into(env_in, gamma, temp, threads, split)
-    })?;
+    // Timed manually so the pooled dispatch can be attributed to its own
+    // phase (`kernel_pooled`, surfaced as a trace span by the service
+    // worker) on top of the usual `compute` total.
+    let t0 = std::time::Instant::now();
+    let contracted = contract_env_into_on(env_in, gamma, temp, exec, split);
+    let dt = t0.elapsed().as_secs_f64();
+    metrics.add_phase("compute", dt);
+    if pooled {
+        metrics.add_phase("kernel_pooled", dt);
+    }
+    contracted?;
     metrics.add(keys::FLOPS, matmul_flops(n, gamma.d0, gamma.d1 * gamma.d2));
 
     if let Some(raw_mus) = displacements {
@@ -286,8 +400,85 @@ where
     }
 
     let dead = metrics.time("measure", || {
-        measurement::measure_into(
-            temp, lambda, thresholds, scaling, threads, env_out, samples, probs,
+        measurement::measure_into_on(
+            temp, lambda, thresholds, scaling, exec, env_out, samples, probs,
+        )
+    })?;
+    metrics.add(keys::FLOPS, 8 * (n * gamma.d1 * gamma.d2) as u64);
+    Ok(dead)
+}
+
+/// [`step_in_workspace`] over the planar arenas and a planar Γ. Same
+/// pipeline, same accumulation orders — outcomes and environment bits are
+/// identical to the interleaved path (asserted in the tests below).
+#[allow(clippy::too_many_arguments)]
+fn step_in_workspace_planar<T>(
+    ws: &mut StepWorkspace<T>,
+    metrics: &mut Metrics,
+    scaling: ScalingMode,
+    exec: Exec<'_>,
+    split: GemmSplit,
+    gamma: &PlanarTensor3<T>,
+    lambda: &[T],
+    thresholds: &[f32],
+    displacements: Option<&[(f64, f64)]>,
+    samples: &mut Vec<i32>,
+) -> Result<usize>
+where
+    T: PlanarScalar + std::ops::AddAssign + Send + Sync,
+{
+    let StepWorkspace {
+        probs,
+        mus,
+        dmats,
+        dmat_t,
+        disp,
+        penv_in,
+        ptemp,
+        penv_out,
+        pdrow_re,
+        pdrow_im,
+        ..
+    } = ws;
+    let n = penv_in.rows;
+    let pooled = matches!(exec, Exec::Pooled(_));
+
+    let t0 = std::time::Instant::now();
+    let contracted = planar_contract_env_into_on(penv_in, gamma, ptemp, exec, split);
+    let dt = t0.elapsed().as_secs_f64();
+    metrics.add_phase("compute", dt);
+    if pooled {
+        metrics.add_phase("kernel_pooled", dt);
+    }
+    contracted?;
+    metrics.add(keys::FLOPS, matmul_flops(n, gamma.d0, gamma.d1 * gamma.d2));
+
+    if let Some(raw_mus) = displacements {
+        if raw_mus.len() != n {
+            return Err(Error::shape(format!(
+                "displacements: {} for N={n}",
+                raw_mus.len()
+            )));
+        }
+        metrics.time("displace", || -> Result<()> {
+            mus.clear();
+            mus.extend(
+                raw_mus
+                    .iter()
+                    .map(|&(re, im)| Complex::new(T::from(re).unwrap(), T::from(im).unwrap())),
+            );
+            // The batched D builder stays interleaved (it is far off the
+            // critical path); only the temp-tensor update is plane-wise.
+            displacement_fast_batch_into(mus, gamma.d2, dmats, disp)?;
+            apply_displacement_planar(ptemp, dmats, dmat_t, pdrow_re, pdrow_im);
+            Ok(())
+        })?;
+        metrics.add(keys::FLOPS, 8 * (n * gamma.d1 * gamma.d2 * gamma.d2) as u64);
+    }
+
+    let dead = metrics.time("measure", || {
+        measurement::measure_planar_into_on(
+            ptemp, lambda, thresholds, scaling, exec, penv_out, samples, probs,
         )
     })?;
     metrics.add(keys::FLOPS, 8 * (n * gamma.d1 * gamma.d2) as u64);
@@ -329,6 +520,52 @@ fn apply_displacement<T: Float + std::ops::AddAssign>(
                     acc = acc.mul_add(*r, *m);
                 }
                 temp.data[base + k] = acc;
+            }
+        }
+    }
+}
+
+/// [`apply_displacement`] over split planes: the same repacked `dmat_t`
+/// (interleaved — it is d·d and reloaded per sample either way) with the
+/// row lane split into `drow_re`/`drow_im`. The accumulation replicates
+/// `Complex::mul_add`'s exact expression per component, so the planar
+/// update is bit-identical to the interleaved one.
+fn apply_displacement_planar<T: Float + std::ops::AddAssign>(
+    temp: &mut PlanarTensor3<T>,
+    dmats: &[Complex<T>],
+    dmat_t: &mut Vec<Complex<T>>,
+    drow_re: &mut Vec<T>,
+    drow_im: &mut Vec<T>,
+) {
+    let (n, y, d) = (temp.d0, temp.d1, temp.d2);
+    dmat_t.clear();
+    dmat_t.resize(d * d, Complex::zero());
+    drow_re.clear();
+    drow_re.resize(d, T::zero());
+    drow_im.clear();
+    drow_im.resize(d, T::zero());
+    for s in 0..n {
+        for j in 0..d {
+            for k in 0..d {
+                dmat_t[k * d + j] = dmats[(j * d + k) * n + s];
+            }
+        }
+        for yy in 0..y {
+            let base = (s * y + yy) * d;
+            drow_re.copy_from_slice(&temp.re[base..base + d]);
+            drow_im.copy_from_slice(&temp.im[base..base + d]);
+            for k in 0..d {
+                let mut acc_re = T::zero();
+                let mut acc_im = T::zero();
+                let dk = &dmat_t[k * d..(k + 1) * d];
+                for ((&rr, &ri), m) in drow_re.iter().zip(drow_im.iter()).zip(dk) {
+                    // acc = acc.mul_add(r, m) component-wise, same
+                    // association: (acc + r.re·m) then the r.im term.
+                    acc_re = (acc_re + rr * m.re) - ri * m.im;
+                    acc_im = (acc_im + rr * m.im) + ri * m.re;
+                }
+                temp.re[base + k] = acc_re;
+                temp.im[base + k] = acc_im;
             }
         }
     }
@@ -599,6 +836,7 @@ mod tests {
             PrepKey {
                 compute: ComputePrecision::F64,
                 gamma_f16: false,
+                planar: false,
             },
         );
         let mut eng = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 1);
@@ -635,6 +873,111 @@ mod tests {
                 assert_eq!(env1, env_t, "env bits t={threads} {split:?}");
             }
         }
+    }
+
+    #[test]
+    fn planar_and_pooled_steps_match_interleaved_serial_bit_identically() {
+        // The tentpole contract: for every compute precision, the planar
+        // layout (serial or pooled, any split) samples the same outcomes
+        // and produces the same environment bits as the serial
+        // interleaved engine.
+        for (compute, gamma_f16) in [
+            (ComputePrecision::F64, false),
+            (ComputePrecision::F64, true),
+            (ComputePrecision::F32, false),
+            (ComputePrecision::Tf32, false),
+            (ComputePrecision::F16, true),
+        ] {
+            let site = square_site(18, 3, 41);
+            let th: Vec<f32> = (0..24).map(|i| (i as f32 + 0.4) / 24.0).collect();
+            let mus: Vec<(f64, f64)> = (0..24).map(|i| (0.015 * i as f64, -0.01)).collect();
+            let run = |layout: Layout, threads: usize, split: GemmSplit| {
+                let mut eng = NativeEngine::new(compute, ScalingMode::PerSample, threads);
+                eng.gamma_f16 = gamma_f16;
+                eng.layout = layout;
+                eng.split = split;
+                let prep = PreparedSite::prepare(&site, eng.prep_key());
+                let mut env = filled_env(24, 18, 7);
+                let mut s = Vec::new();
+                eng.step_prepared(&mut env, &prep, &th, Some(&mus), &mut s)
+                    .unwrap();
+                (env, s, eng)
+            };
+            let (env0, s0, eng0) = run(Layout::Interleaved, 1, GemmSplit::Auto);
+            assert_eq!(eng0.metrics.get(keys::STEP_LAYOUT_PLANAR), 0);
+            for threads in [1, 3] {
+                for split in [GemmSplit::Auto, GemmSplit::Rows, GemmSplit::Cols] {
+                    let (env_p, s_p, eng_p) = run(Layout::Planar, threads, split);
+                    assert_eq!(s0, s_p, "{compute:?} outcomes t={threads} {split:?}");
+                    assert_eq!(env0, env_p, "{compute:?} env bits t={threads} {split:?}");
+                    assert_eq!(eng_p.metrics.get(keys::STEP_LAYOUT_PLANAR), 1);
+                    if threads > 1 {
+                        assert!(
+                            eng_p.metrics.get(keys::POOL_WAKEUPS) > 0,
+                            "pooled step must account worker wakeups"
+                        );
+                        assert!(eng_p.metrics.phase("kernel_pooled") >= 0.0);
+                    }
+                    // Interleaved pooled path agrees too.
+                    let (env_i, s_i, _) = run(Layout::Interleaved, threads, split);
+                    assert_eq!(s0, s_i, "{compute:?} interleaved t={threads} {split:?}");
+                    assert_eq!(env0, env_i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_layout_goes_planar_for_f32_family_only() {
+        for (compute, planar) in [
+            (ComputePrecision::F64, false),
+            (ComputePrecision::F32, true),
+            (ComputePrecision::Tf32, true),
+            (ComputePrecision::F16, true),
+        ] {
+            let eng = NativeEngine::new(compute, ScalingMode::PerSample, 1);
+            assert_eq!(eng.layout, Layout::Auto);
+            assert_eq!(eng.prep_key().planar, planar, "{compute:?}");
+        }
+    }
+
+    #[test]
+    fn steady_state_planar_pooled_step_is_allocation_free() {
+        // The pooled planar hot path must hold the same zero-alloc
+        // contract as the serial interleaved one: resident workers, no
+        // scope spawns, arenas only reshaped. Same retry discipline as
+        // `steady_state_step_is_allocation_free` (global counting
+        // allocator, concurrent test threads).
+        let site = square_site(12, 3, 33);
+        let mut eng = NativeEngine::new(ComputePrecision::F32, ScalingMode::PerSample, 3);
+        eng.layout = Layout::Planar;
+        let prep = PreparedSite::prepare(&site, eng.prep_key());
+        let th: Vec<f32> = (0..24).map(|i| (i as f32 + 0.5) / 24.0).collect();
+        let mus: Vec<(f64, f64)> = (0..24).map(|i| (0.01 * i as f64, 0.005)).collect();
+        let mut env = filled_env(24, 12, 8);
+        let mut samples = Vec::new();
+        for _ in 0..3 {
+            eng.step_prepared(&mut env, &prep, &th, Some(&mus), &mut samples)
+                .unwrap();
+        }
+        let grows_after_warmup = eng.metrics.get(keys::STEP_WS_GROWS);
+        let mut clean = false;
+        for _ in 0..128 {
+            let before = crate::util::alloc::allocation_count();
+            eng.step_prepared(&mut env, &prep, &th, Some(&mus), &mut samples)
+                .unwrap();
+            if crate::util::alloc::allocation_count() == before {
+                clean = true;
+                break;
+            }
+        }
+        assert!(clean, "no allocation-free pooled planar step observed");
+        assert_eq!(
+            eng.metrics.get(keys::STEP_WS_GROWS),
+            grows_after_warmup,
+            "workspace grew after warm-up"
+        );
+        assert!(eng.metrics.get(keys::POOL_WAKEUPS) > 0);
     }
 
     #[test]

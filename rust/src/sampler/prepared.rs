@@ -18,7 +18,7 @@ use std::sync::{Arc, OnceLock};
 
 use crate::config::ComputePrecision;
 use crate::mps::Site;
-use crate::tensor::Tensor3;
+use crate::tensor::{PlanarTensor3, Tensor3};
 use crate::util::f16;
 
 /// Identity of a precision pipeline: two sites prepared under equal keys
@@ -28,6 +28,10 @@ pub struct PrepKey {
     pub compute: ComputePrecision,
     /// Round Γ through binary16 before compute (§3.3.2 storage modelling).
     pub gamma_f16: bool,
+    /// Store Γ as split real/imaginary planes for the planar step kernel.
+    /// Values are the interleaved pipeline's, split after rounding — the
+    /// layout never perturbs a bit, only where each component lives.
+    pub planar: bool,
 }
 
 /// The converted Γ, in the representation the engine contracts with.
@@ -38,6 +42,10 @@ pub enum PreparedGamma {
     /// `F32` / `Tf32` / `F16` — f32 storage with the input rounding of the
     /// precision already applied.
     F32(Tensor3<f32>),
+    /// `F64` under the planar layout: the `F64` arm's planes, split.
+    P64(PlanarTensor3<f64>),
+    /// `F32`-family under the planar layout: the `F32` arm's planes, split.
+    P32(PlanarTensor3<f32>),
 }
 
 /// A site after one-time precision conversion. Steady-state steps borrow
@@ -73,9 +81,16 @@ impl PreparedSite {
                         *z = round64(*z);
                     }
                 }
+                // The planar arm splits AFTER the full rounding pipeline,
+                // so both layouts hold bit-identical values.
+                let gamma = if key.planar {
+                    PreparedGamma::P64(PlanarTensor3::from_interleaved(&g))
+                } else {
+                    PreparedGamma::F64(g)
+                };
                 PreparedSite {
                     key,
-                    gamma: PreparedGamma::F64(g),
+                    gamma,
                     lambda64: site.lambda.clone(),
                     lambda32: Vec::new(),
                 }
@@ -101,9 +116,14 @@ impl PreparedSite {
                     }
                     _ => {}
                 }
+                let gamma = if key.planar {
+                    PreparedGamma::P32(PlanarTensor3::from_interleaved(&g32))
+                } else {
+                    PreparedGamma::F32(g32)
+                };
                 PreparedSite {
                     key,
-                    gamma: PreparedGamma::F32(g32),
+                    gamma,
                     lambda64: Vec::new(),
                     lambda32: site.lambda.iter().map(|&l| l as f32).collect(),
                 }
@@ -115,6 +135,8 @@ impl PreparedSite {
         match &self.gamma {
             PreparedGamma::F64(g) => g.d0,
             PreparedGamma::F32(g) => g.d0,
+            PreparedGamma::P64(g) => g.d0,
+            PreparedGamma::P32(g) => g.d0,
         }
     }
 
@@ -122,6 +144,8 @@ impl PreparedSite {
         match &self.gamma {
             PreparedGamma::F64(g) => g.d1,
             PreparedGamma::F32(g) => g.d1,
+            PreparedGamma::P64(g) => g.d1,
+            PreparedGamma::P32(g) => g.d1,
         }
     }
 
@@ -129,6 +153,8 @@ impl PreparedSite {
         match &self.gamma {
             PreparedGamma::F64(g) => g.d2,
             PreparedGamma::F32(g) => g.d2,
+            PreparedGamma::P64(g) => g.d2,
+            PreparedGamma::P32(g) => g.d2,
         }
     }
 
@@ -137,6 +163,8 @@ impl PreparedSite {
         let g = match &self.gamma {
             PreparedGamma::F64(g) => g.len() * 16,
             PreparedGamma::F32(g) => g.len() * 8,
+            PreparedGamma::P64(g) => g.len() * 16,
+            PreparedGamma::P32(g) => g.len() * 8,
         };
         (g + self.lambda64.len() * 8 + self.lambda32.len() * 4) as u64
     }
@@ -263,6 +291,7 @@ mod tests {
             PrepKey {
                 compute: ComputePrecision::F64,
                 gamma_f16: false,
+                planar: false,
             },
         );
         match &p.gamma {
@@ -285,7 +314,14 @@ mod tests {
             ComputePrecision::F16,
         ] {
             for gamma_f16 in [false, true] {
-                let p = PreparedSite::prepare(site, PrepKey { compute, gamma_f16 });
+                let p = PreparedSite::prepare(
+                    site,
+                    PrepKey {
+                        compute,
+                        gamma_f16,
+                        planar: false,
+                    },
+                );
                 let mut gamma = site.gamma.clone();
                 if gamma_f16 {
                     for z in &mut gamma.data {
@@ -325,11 +361,57 @@ mod tests {
     }
 
     #[test]
+    fn planar_preparation_is_a_split_of_the_interleaved_pipeline() {
+        let mps = spec().generate().unwrap();
+        let site = &mps.sites[2];
+        for compute in [
+            ComputePrecision::F64,
+            ComputePrecision::F32,
+            ComputePrecision::Tf32,
+            ComputePrecision::F16,
+        ] {
+            for gamma_f16 in [false, true] {
+                let inter = PreparedSite::prepare(
+                    site,
+                    PrepKey {
+                        compute,
+                        gamma_f16,
+                        planar: false,
+                    },
+                );
+                let plan = PreparedSite::prepare(
+                    site,
+                    PrepKey {
+                        compute,
+                        gamma_f16,
+                        planar: true,
+                    },
+                );
+                match (&inter.gamma, &plan.gamma) {
+                    (PreparedGamma::F64(g), PreparedGamma::P64(p)) => {
+                        assert_eq!(p.to_interleaved().data, g.data);
+                    }
+                    (PreparedGamma::F32(g), PreparedGamma::P32(p)) => {
+                        assert_eq!(p.to_interleaved().data, g.data);
+                    }
+                    _ => panic!("layout arms mismatched for {compute:?}"),
+                }
+                assert_eq!(inter.bytes(), plan.bytes());
+                assert_eq!(
+                    (inter.chi_l(), inter.chi_r(), inter.phys_d()),
+                    (plan.chi_l(), plan.chi_r(), plan.phys_d())
+                );
+            }
+        }
+    }
+
+    #[test]
     fn prepared_store_caches_and_respects_budget() {
         let mps = spec().generate().unwrap();
         let key = PrepKey {
             compute: ComputePrecision::F32,
             gamma_f16: false,
+            planar: false,
         };
         // Generous budget: everything resident, second pass all hits.
         let ps = PreparedStore::new(mps.sites.len(), key, u64::MAX);

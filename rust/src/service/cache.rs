@@ -85,9 +85,9 @@ impl StoreCache {
             registry: Mutex::new(BTreeMap::new()),
             prepared: Mutex::new(PrepInner::default()),
             // The full PrepKey space per store: four compute precisions ×
-            // the Γ-f16 toggle — so no mix of concurrent variants of one
-            // store can thrash a live chain.
-            prep_capacity: capacity.max(1) * 8,
+            // the Γ-f16 toggle × the layout toggle — so no mix of
+            // concurrent variants of one store can thrash a live chain.
+            prep_capacity: capacity.max(1) * 16,
             disk,
         }
     }
@@ -457,23 +457,27 @@ mod tests {
         let c = StoreCache::new(1, DiskModel::unlimited());
         let (store, _) = c.get(&dir).unwrap();
         let hash = store.manifest_hash().unwrap();
-        let key_for = |compute, gamma_f16| PrepKey { compute, gamma_f16 };
-        let k32 = key_for(ComputePrecision::F32, false);
+        let key_for = |compute, gamma_f16, planar| PrepKey {
+            compute,
+            gamma_f16,
+            planar,
+        };
+        let k32 = key_for(ComputePrecision::F32, false, false);
         let a = c.prepared(hash, store.num_sites(), k32, u64::MAX);
         let b = c.prepared(hash, store.num_sites(), k32, u64::MAX);
         assert!(Arc::ptr_eq(&a, &b), "same (hash, key) shares a chain");
-        let k64 = key_for(ComputePrecision::F64, false);
+        let k64 = key_for(ComputePrecision::F64, false, false);
         let d = c.prepared(hash, store.num_sites(), k64, u64::MAX);
         assert!(!Arc::ptr_eq(&a, &d), "different precision gets its own chain");
         assert_eq!(c.prepared_bytes(), 0, "chains fill lazily");
         let site = store.load_site(0).unwrap();
         let _ = a.site(0, &site);
         assert!(c.prepared_bytes() > 0);
-        // The prep LRU holds 8× the store capacity — the full PrepKey
-        // space (4 precisions × the Γ-f16 toggle) — so EVERY variant of
-        // one store coexists without thrash; only a competing store's
-        // chain evicts the least-recently-used one.
-        let k32t = key_for(ComputePrecision::F32, true);
+        // The prep LRU holds 16× the store capacity — the full PrepKey
+        // space (4 precisions × the Γ-f16 toggle × the layout toggle) —
+        // so EVERY variant of one store coexists without thrash; only a
+        // competing store's chain evicts the least-recently-used one.
+        let k32t = key_for(ComputePrecision::F32, true, false);
         let oldest = c.prepared(hash, store.num_sites(), k32t, u64::MAX);
         for compute in [
             ComputePrecision::F32,
@@ -482,13 +486,20 @@ mod tests {
             ComputePrecision::F16,
         ] {
             for gamma_f16 in [false, true] {
-                if key_for(compute, gamma_f16) != k32t {
-                    c.prepared(hash, store.num_sites(), key_for(compute, gamma_f16), u64::MAX);
+                for planar in [false, true] {
+                    if key_for(compute, gamma_f16, planar) != k32t {
+                        c.prepared(
+                            hash,
+                            store.num_sites(),
+                            key_for(compute, gamma_f16, planar),
+                            u64::MAX,
+                        );
+                    }
                 }
             }
         }
         let a_again = c.prepared(hash, store.num_sites(), k32, u64::MAX);
-        assert!(Arc::ptr_eq(&a, &a_again), "all 8 variants coexist");
+        assert!(Arc::ptr_eq(&a, &a_again), "all 16 variants coexist");
         let dir2 = make_store("prep2", 2);
         let hash2 = crate::io::manifest_hash_at(&dir2).unwrap();
         c.prepared(hash2, 8, k32, u64::MAX);

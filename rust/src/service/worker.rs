@@ -226,6 +226,7 @@ pub(crate) fn worker_loop(
 fn phase_span_name(phase: &str) -> &'static str {
     match phase {
         "compute" => "compute",
+        "kernel_pooled" => "kernel_pooled",
         "io_virtual" => "io_virtual",
         "io_stall" => "io_stall",
         "comm" => "comm",
@@ -252,6 +253,7 @@ fn engine_for<'a>(
     rc.scaling = key.2;
     rc.gemm_threads = cfg.gemm_threads;
     rc.gemm_split = cfg.gemm_split;
+    rc.layout = cfg.layout;
     rc.artifacts_dir = cfg.artifacts_dir.clone();
     let e = EngineBox::build(&rc)?;
     engines.push((key, e));

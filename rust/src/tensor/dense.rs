@@ -275,6 +275,21 @@ impl<T: Float + std::ops::AddAssign> Tensor3<T> {
         self.data.resize(n, Complex::zero());
     }
 
+    /// Reshape in place WITHOUT zeroing: retained entry values are stale
+    /// and the caller must overwrite every one (the β=0 overwrite GEMM
+    /// does exactly that — see [`Mat::reshape`]).
+    pub fn reshape(&mut self, d0: usize, d1: usize, d2: usize) {
+        self.d0 = d0;
+        self.d1 = d1;
+        self.d2 = d2;
+        let n = d0 * d1 * d2;
+        if self.data.len() < n {
+            self.data.resize(n, Complex::zero());
+        } else {
+            self.data.truncate(n);
+        }
+    }
+
     /// Slice `rows ∈ [lo, hi)` of the first axis (a χ_l shard for tensor
     /// parallelism). Copies.
     pub fn slice_d0(&self, lo: usize, hi: usize) -> Result<Tensor3<T>> {

@@ -6,14 +6,17 @@
 //! - MPS site tensor `Γ`: `(χ_l, χ_r, d)` — bond-in × bond-out × physical;
 //! - unmeasured temporary: `(N, χ_r, d)`.
 //!
-//! Native compute stores interleaved `Complex<T>`; the XLA boundary uses
-//! split re/im `f32` planes ([`SplitBuf`]) because the `xla` crate has no
-//! complex `Literal` constructors.
+//! Native compute stores interleaved `Complex<T>` by default; the planar
+//! (split re/im) layout in [`planar`] is the SIMD hot-path alternative,
+//! and the XLA boundary uses split re/im `f32` planes ([`SplitBuf`])
+//! because the `xla` crate has no complex `Literal` constructors.
 
 mod complex;
 mod dense;
+mod planar;
 mod split;
 
 pub use complex::{Complex, C32, C64};
 pub use dense::{Mat, MatRef, Tensor3};
+pub use planar::{PlanarMat, PlanarMatRef, PlanarTensor3};
 pub use split::SplitBuf;

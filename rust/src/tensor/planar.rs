@@ -1,0 +1,326 @@
+//! Split-real (planar / SoA) complex tensors for the SIMD hot path.
+//!
+//! The native kernels historically walk interleaved `Complex<T>` pairs
+//! (AoS), which defeats autovectorization: every lane-wide load pulls
+//! alternating re/im values that must be shuffled before the FMA. The
+//! planar layout stores the real and imaginary parts in two separate
+//! contiguous planes with identical row-major indexing, so the innermost
+//! kernel loops become straight-line f32/f64 chains the compiler (or the
+//! explicit `core::arch` microkernel behind the `simd` feature) vectorizes
+//! directly.
+//!
+//! Element `(i, j)` of a [`PlanarMat`] lives at `re[i * cols + j]` /
+//! `im[i * cols + j]` — the same linear index as the interleaved
+//! [`Mat`](super::Mat), just split across two planes. Conversions are
+//! therefore pure plane splits/merges in index order, which is what keeps
+//! the planar kernels bit-identical to the interleaved ones (see
+//! `docs/PERF.md`).
+
+use super::complex::Complex;
+use super::dense::{Mat, Tensor3};
+use crate::util::num::Float;
+
+/// Dense `(rows, cols)` matrix with split re/im planes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanarMat<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub re: Vec<T>,
+    pub im: Vec<T>,
+}
+
+impl<T: Float> PlanarMat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        PlanarMat {
+            rows,
+            cols,
+            re: vec![T::zero(); rows * cols],
+            im: vec![T::zero(); rows * cols],
+        }
+    }
+
+    /// Resize to `(rows, cols)` WITHOUT zeroing retained elements — for
+    /// buffers whose every element is overwritten before being read
+    /// (e.g. the β=0 overwrite GEMM output). New elements are zero.
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        let n = rows * cols;
+        self.re.truncate(n);
+        self.re.resize(n, T::zero());
+        self.im.truncate(n);
+        self.im.resize(n, T::zero());
+    }
+
+    /// Resize to `(rows, cols)` and zero-fill every element.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.reshape(rows, cols);
+        self.re.fill(T::zero());
+        self.im.fill(T::zero());
+    }
+
+    pub fn view(&self) -> PlanarMatRef<'_, T> {
+        PlanarMatRef {
+            rows: self.rows,
+            cols: self.cols,
+            re: &self.re,
+            im: &self.im,
+        }
+    }
+
+    pub fn row_re(&self, r: usize) -> &[T] {
+        &self.re[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_im(&self, r: usize) -> &[T] {
+        &self.im[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Element `(i, j)` reassembled as a complex value (test/debug aid;
+    /// the kernels never touch this).
+    pub fn at(&self, i: usize, j: usize) -> Complex<T> {
+        let idx = i * self.cols + j;
+        Complex::new(self.re[idx], self.im[idx])
+    }
+
+    /// Split an interleaved matrix into planes, element by element in
+    /// linear index order.
+    pub fn from_interleaved(m: &Mat<T>) -> Self {
+        let mut out = PlanarMat {
+            rows: m.rows,
+            cols: m.cols,
+            re: Vec::with_capacity(m.data.len()),
+            im: Vec::with_capacity(m.data.len()),
+        };
+        for z in &m.data {
+            out.re.push(z.re);
+            out.im.push(z.im);
+        }
+        out
+    }
+
+    /// Merge the planes back into an interleaved matrix.
+    pub fn to_interleaved(&self) -> Mat<T> {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for (dst, (&re, &im)) in m.data.iter_mut().zip(self.re.iter().zip(&self.im)) {
+            *dst = Complex::new(re, im);
+        }
+        m
+    }
+
+    /// Sum of plane capacities — the workspace high-water accounting unit
+    /// used by `StepWorkspace::capacity_units`.
+    pub fn capacity_units(&self) -> usize {
+        self.re.capacity() + self.im.capacity()
+    }
+}
+
+/// Borrowed planar matrix view (the planar analogue of
+/// [`MatRef`](super::MatRef)).
+#[derive(Debug, Clone, Copy)]
+pub struct PlanarMatRef<'a, T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub re: &'a [T],
+    pub im: &'a [T],
+}
+
+impl<'a, T: Float> PlanarMatRef<'a, T> {
+    pub fn new(rows: usize, cols: usize, re: &'a [T], im: &'a [T]) -> Option<Self> {
+        if re.len() != rows * cols || im.len() != rows * cols {
+            return None;
+        }
+        Some(PlanarMatRef { rows, cols, re, im })
+    }
+
+    pub fn row_re(&self, r: usize) -> &'a [T] {
+        &self.re[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_im(&self, r: usize) -> &'a [T] {
+        &self.im[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Rank-3 tensor `(d0, d1, d2)` with split re/im planes; row-major with
+/// `d2` fastest, matching [`Tensor3`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanarTensor3<T> {
+    pub d0: usize,
+    pub d1: usize,
+    pub d2: usize,
+    pub re: Vec<T>,
+    pub im: Vec<T>,
+}
+
+impl<T: Float> PlanarTensor3<T> {
+    pub fn zeros(d0: usize, d1: usize, d2: usize) -> Self {
+        PlanarTensor3 {
+            d0,
+            d1,
+            d2,
+            re: vec![T::zero(); d0 * d1 * d2],
+            im: vec![T::zero(); d0 * d1 * d2],
+        }
+    }
+
+    /// Resize WITHOUT zeroing retained elements (see
+    /// [`PlanarMat::reshape`]); new elements are zero.
+    pub fn reshape(&mut self, d0: usize, d1: usize, d2: usize) {
+        self.d0 = d0;
+        self.d1 = d1;
+        self.d2 = d2;
+        let n = d0 * d1 * d2;
+        self.re.truncate(n);
+        self.re.resize(n, T::zero());
+        self.im.truncate(n);
+        self.im.resize(n, T::zero());
+    }
+
+    /// Resize and zero-fill.
+    pub fn reset(&mut self, d0: usize, d1: usize, d2: usize) {
+        self.reshape(d0, d1, d2);
+        self.re.fill(T::zero());
+        self.im.fill(T::zero());
+    }
+
+    /// Zero-copy `(d0, d1*d2)` matrix view — how the step contraction
+    /// sees Γ, exactly like [`Tensor3::as_mat_ref`].
+    pub fn as_mat_ref(&self) -> PlanarMatRef<'_, T> {
+        PlanarMatRef {
+            rows: self.d0,
+            cols: self.d1 * self.d2,
+            re: &self.re,
+            im: &self.im,
+        }
+    }
+
+    pub fn at(&self, i: usize, j: usize, k: usize) -> Complex<T> {
+        let idx = (i * self.d1 + j) * self.d2 + k;
+        Complex::new(self.re[idx], self.im[idx])
+    }
+
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    /// Split an interleaved tensor into planes in linear index order.
+    pub fn from_interleaved(t: &Tensor3<T>) -> Self {
+        let mut out = PlanarTensor3 {
+            d0: t.d0,
+            d1: t.d1,
+            d2: t.d2,
+            re: Vec::with_capacity(t.data.len()),
+            im: Vec::with_capacity(t.data.len()),
+        };
+        for z in &t.data {
+            out.re.push(z.re);
+            out.im.push(z.im);
+        }
+        out
+    }
+
+    /// Merge the planes back into an interleaved tensor.
+    pub fn to_interleaved(&self) -> Tensor3<T> {
+        let mut t = Tensor3::zeros(self.d0, self.d1, self.d2);
+        for (dst, (&re, &im)) in t.data.iter_mut().zip(self.re.iter().zip(&self.im)) {
+            *dst = Complex::new(re, im);
+        }
+        t
+    }
+
+    pub fn capacity_units(&self) -> usize {
+        self.re.capacity() + self.im.capacity()
+    }
+}
+
+impl<T: Float> Default for PlanarMat<T> {
+    fn default() -> Self {
+        PlanarMat {
+            rows: 0,
+            cols: 0,
+            re: Vec::new(),
+            im: Vec::new(),
+        }
+    }
+}
+
+impl<T: Float> Default for PlanarTensor3<T> {
+    fn default() -> Self {
+        PlanarTensor3 {
+            d0: 0,
+            d1: 0,
+            d2: 0,
+            re: Vec::new(),
+            im: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::tensor::C64;
+
+    #[test]
+    fn interleaved_roundtrip_is_the_identity() {
+        let mut rng = Xoshiro256::seed_from(11);
+        let mut m = Mat::zeros(5, 7);
+        for z in &mut m.data {
+            *z = C64::new(rng.normal(), rng.normal());
+        }
+        let p = PlanarMat::from_interleaved(&m);
+        assert_eq!(p.to_interleaved(), m);
+        for i in 0..5 {
+            for j in 0..7 {
+                assert_eq!(p.at(i, j), m[(i, j)]);
+            }
+        }
+
+        let mut t = Tensor3::zeros(3, 4, 2);
+        for z in &mut t.data {
+            *z = C64::new(rng.normal(), rng.normal());
+        }
+        let pt = PlanarTensor3::from_interleaved(&t);
+        assert_eq!(pt.to_interleaved().data, t.data);
+        assert_eq!(pt.at(2, 3, 1), *t.at(2, 3, 1));
+    }
+
+    #[test]
+    fn reshape_keeps_capacity_and_reset_zeroes() {
+        let mut p: PlanarMat<f32> = PlanarMat::zeros(8, 8);
+        p.re[0] = 3.0;
+        p.im[0] = -1.0;
+        let cap = p.re.capacity();
+        p.reshape(4, 4);
+        assert_eq!((p.rows, p.cols), (4, 4));
+        assert_eq!(p.re.capacity(), cap, "reshape must not shrink capacity");
+        assert_eq!(p.re[0], 3.0, "reshape must not zero retained elements");
+        p.reset(4, 4);
+        assert!(p.re.iter().chain(&p.im).all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mat_ref_view_matches_tensor_indexing() {
+        let mut rng = Xoshiro256::seed_from(5);
+        let mut t = Tensor3::zeros(4, 3, 2);
+        for z in &mut t.data {
+            *z = C64::new(rng.normal(), rng.normal());
+        }
+        let p = PlanarTensor3::from_interleaved(&t);
+        let v = p.as_mat_ref();
+        assert_eq!((v.rows, v.cols), (4, 6));
+        let im = t.as_mat_ref();
+        for r in 0..4 {
+            for c in 0..6 {
+                assert_eq!(v.row_re(r)[c], im.row(r)[c].re);
+                assert_eq!(v.row_im(r)[c], im.row(r)[c].im);
+            }
+        }
+    }
+}
